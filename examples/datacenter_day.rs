@@ -1,0 +1,103 @@
+//! End-to-end driver: a full simulated datacenter day at paper scale.
+//!
+//! This is the repo's flagship validation run: the rust coordinator
+//! simulates 24 h (1440 one-minute slots) of Poisson task arrivals on a
+//! 2048-pair CPU-GPU cluster, and EVERY Algorithm-1/Algorithm-5 DVFS
+//! decision goes through the AOT-compiled XLA artifacts via PJRT — python
+//! is nowhere on the path.  It reports the paper's headline metric (total
+//! energy reduction vs the non-DVFS baseline, expected ≈30-35%) plus
+//! scheduler throughput/latency, and appends a row to EXPERIMENTS.md's
+//! data if --csv is given.
+//!
+//! Run: `cargo run --release --example datacenter_day [-- <seed>]`
+
+use dvfs_sched::config::SimConfig;
+use dvfs_sched::runtime::Solver;
+use dvfs_sched::sim::online::{run_online_workload, OnlinePolicyKind};
+use dvfs_sched::tasks::generate_online;
+use dvfs_sched::util::Rng;
+use std::time::Instant;
+
+fn main() {
+    let seed: u64 = std::env::args()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(2021);
+
+    let mut cfg = SimConfig::default(); // paper Sec. 5.1 defaults
+    cfg.theta = 0.9;
+    cfg.cluster.pairs_per_server = 4;
+
+    let solver = match Solver::pjrt(&cfg.artifacts_dir) {
+        Ok(s) => {
+            println!("solver backend: pjrt (AOT artifacts)");
+            s
+        }
+        Err(e) => {
+            println!("solver backend: native (PJRT unavailable: {e:#})");
+            Solver::native()
+        }
+    };
+
+    let mut rng = Rng::new(seed);
+    let t0 = Instant::now();
+    let workload = generate_online(&cfg.gen, &mut rng);
+    println!(
+        "workload: {} tasks ({} offline + {} online over {} slots), Σu = {:.0}, generated in {:?}",
+        workload.total_tasks(),
+        workload.offline.len(),
+        workload.online.len(),
+        cfg.gen.horizon,
+        workload.offline.u_sum + workload.online.u_sum,
+        t0.elapsed(),
+    );
+
+    // baseline: same workload, no DVFS
+    let t0 = Instant::now();
+    let base = run_online_workload(OnlinePolicyKind::Edl, &workload, false, &cfg, &solver);
+    let base_wall = t0.elapsed();
+
+    // DVFS with θ-readjustment
+    let t0 = Instant::now();
+    let dvfs = run_online_workload(OnlinePolicyKind::Edl, &workload, true, &cfg, &solver);
+    let dvfs_wall = t0.elapsed();
+
+    println!("\n{:<22}{:>14}{:>14}", "", "baseline", "EDL-DVFS θ=0.9");
+    let row = |name: &str, a: f64, b: f64| {
+        println!("{name:<22}{a:>14.3e}{b:>14.3e}");
+    };
+    row("E_run", base.e_run, dvfs.e_run);
+    row("E_idle", base.e_idle, dvfs.e_idle);
+    row("E_overhead", base.e_overhead, dvfs.e_overhead);
+    row("E_total", base.e_total(), dvfs.e_total());
+    println!(
+        "{:<22}{:>14}{:>14}",
+        "servers used", base.servers_used, dvfs.servers_used
+    );
+    println!(
+        "{:<22}{:>14}{:>14}",
+        "deadline violations", base.violations, dvfs.violations
+    );
+    println!("{:<22}{:>14}{:>14}", "θ-readjustments", "-", dvfs.readjusted.to_string());
+
+    let reduction = 1.0 - dvfs.e_total() / base.e_total();
+    println!(
+        "\nheadline: total energy reduction = {:.1}%  (paper Fig. 13: 30-33%)",
+        100.0 * reduction
+    );
+    let per_task = dvfs_wall.as_secs_f64() / workload.total_tasks() as f64;
+    println!(
+        "scheduler performance: day simulated in {:?} (baseline {:?}); {:.1} µs/task decision, {:.0} tasks/s",
+        dvfs_wall,
+        base_wall,
+        per_task * 1e6,
+        1.0 / per_task
+    );
+
+    assert_eq!(dvfs.violations, 0, "EDL must meet all deadlines");
+    assert!(
+        reduction > 0.25,
+        "energy reduction {reduction} below expected band"
+    );
+    println!("\ndatacenter_day OK");
+}

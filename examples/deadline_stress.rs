@@ -1,0 +1,93 @@
+//! Deadline-stress scenario: how does the stack behave as deadlines
+//! tighten toward infeasibility?
+//!
+//! Sweeps the utilization distribution upward (mean u → 1 means deadlines
+//! equal to the default execution time, leaving zero slack for DVFS) and
+//! reports the deadline-prior fraction, the residual energy saving, and —
+//! on the narrow measured interval — how much of the wide-interval saving
+//! survives.  Exercises the deadline-prior path of Algorithm 1 and the
+//! exact-time solver hard.
+//!
+//! Run: `cargo run --release --example deadline_stress`
+
+use dvfs_sched::config::SimConfig;
+use dvfs_sched::dvfs::ScalingInterval;
+use dvfs_sched::runtime::Solver;
+use dvfs_sched::sched::{count_deadline_prior, prepare, report, schedule_offline, OfflinePolicy};
+use dvfs_sched::tasks::{Task, LIBRARY};
+use dvfs_sched::util::table::{f2, pct, Table};
+use dvfs_sched::util::Rng;
+
+fn make_tasks(n: usize, u_lo: f64, u_hi: f64, rng: &mut Rng) -> Vec<Task> {
+    (0..n)
+        .map(|i| {
+            let app = rng.index(LIBRARY.len());
+            let model = LIBRARY[app].model.scaled(rng.int_range(10, 50) as f64);
+            let u = rng.uniform(u_lo, u_hi);
+            Task {
+                id: i,
+                app,
+                model,
+                arrival: 0.0,
+                deadline: model.t_star() / u,
+                u,
+            }
+        })
+        .collect()
+}
+
+fn main() {
+    let cfg = SimConfig::default();
+    let solver = match Solver::pjrt(&cfg.artifacts_dir) {
+        Ok(s) => s,
+        Err(_) => Solver::native(),
+    };
+    let mut rng = Rng::new(11);
+    let n = 512;
+
+    let mut t = Table::new(
+        "deadline stress: tighter windows → more deadline-prior tasks, less saving",
+        &[
+            "u range", "interval", "deadline-prior", "saving", "violations",
+        ],
+    );
+    for (u_lo, u_hi) in [(0.1, 0.5), (0.4, 0.8), (0.7, 0.95), (0.9, 0.999)] {
+        for (ivname, iv) in [
+            ("wide", ScalingInterval::wide()),
+            ("narrow", ScalingInterval::narrow()),
+        ] {
+            let tasks = make_tasks(n, u_lo, u_hi, &mut rng.fork((u_lo * 1000.0) as u64));
+            let baseline: f64 = tasks.iter().map(|x| x.model.e_star()).sum();
+            let prepared = prepare(&tasks, &solver, &iv, true);
+            let n1 = count_deadline_prior(&prepared);
+            let s = schedule_offline(OfflinePolicy::Edl, &prepared, 0.9, &solver, &iv);
+            let r = report(&s, &cfg.cluster);
+            t.row(vec![
+                format!("[{u_lo:.2}, {u_hi:.3})"),
+                ivname.into(),
+                format!("{n1}/{n} ({})", dvfs_sched::util::table::pct(n1 as f64 / n as f64)),
+                pct(1.0 - r.e_total / baseline),
+                r.violations.to_string(),
+            ]);
+            assert_eq!(r.violations, 0, "EDL must hold deadlines under stress");
+        }
+    }
+    print!("{}", t.render());
+
+    // the cliff: u > 1 would be infeasible by construction; show t_min margin
+    let mut margin = Table::new(
+        "feasibility margin: worst-case t_min / window per app (wide)",
+        &["app", "t_min/t*", "max feasible u"],
+    );
+    let iv = ScalingInterval::wide();
+    for a in LIBRARY.iter().take(5) {
+        let tmin = a.model.t_min(&iv);
+        margin.row(vec![
+            a.name.into(),
+            f2(tmin / a.model.t_star()),
+            f2(a.model.t_star() / tmin),
+        ]);
+    }
+    print!("{}", margin.render());
+    println!("deadline_stress OK (backend: {})", solver.backend_name());
+}

@@ -1,0 +1,78 @@
+//! Quickstart: the library in ~60 lines.
+//!
+//! 1. Pick a benchmark application from the measured library.
+//! 2. Solve its optimal DVFS setting (with and without a deadline).
+//! 3. Schedule a small batch on a cluster with the EDL algorithm.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use dvfs_sched::config::SimConfig;
+use dvfs_sched::dvfs::ScalingInterval;
+use dvfs_sched::runtime::Solver;
+use dvfs_sched::sched::{prepare, report, schedule_offline, OfflinePolicy};
+use dvfs_sched::tasks::{Task, LIBRARY};
+
+fn main() {
+    let cfg = SimConfig::default();
+    // PJRT backend if artifacts are built, native otherwise.
+    let solver = match Solver::pjrt(&cfg.artifacts_dir) {
+        Ok(s) => s,
+        Err(_) => Solver::native(),
+    };
+    let iv = ScalingInterval::wide();
+
+    // 1-2: single-task optimization -------------------------------------
+    let app = &LIBRARY[0]; // matrixMul
+    let model = app.model.scaled(20.0);
+    let free = solver.solve_opt(&model, f64::INFINITY, &iv);
+    println!(
+        "{}: default E = {:.0}, optimal E = {:.0} ({:.1}% saved) at (V={:.2}, fc={:.2}, fm={:.2})",
+        app.name,
+        model.e_star(),
+        free.e,
+        100.0 * (1.0 - free.e / model.e_star()),
+        free.v,
+        free.fc,
+        free.fm,
+    );
+    let deadline = model.t_star() * 1.05; // tight: 5% slack over default
+    let capped = solver.solve_window(&model, deadline, &iv);
+    println!(
+        "with deadline {:.1}: t = {:.1}, E = {:.0} ({:.1}% saved)",
+        deadline,
+        capped.t,
+        capped.e,
+        100.0 * (1.0 - capped.e / model.e_star()),
+    );
+
+    // 3: schedule a batch with EDL θ-readjustment ------------------------
+    let tasks: Vec<Task> = (0..32)
+        .map(|i| {
+            let m = LIBRARY[i % LIBRARY.len()].model.scaled(10.0 + i as f64);
+            let u = 0.3 + 0.02 * (i % 30) as f64;
+            Task {
+                id: i,
+                app: i % LIBRARY.len(),
+                model: m,
+                arrival: 0.0,
+                deadline: m.t_star() / u,
+                u,
+            }
+        })
+        .collect();
+    let prepared = prepare(&tasks, &solver, &iv, true);
+    let sched = schedule_offline(OfflinePolicy::Edl, &prepared, 0.9, &solver, &iv);
+    let rep = report(&sched, &cfg.cluster);
+    let baseline: f64 = tasks.iter().map(|t| t.model.e_star()).sum();
+    println!(
+        "\nEDL θ=0.9 on {} tasks: {} pairs, E_total = {:.0} vs baseline {:.0} ({:.1}% saved), {} deadline violations",
+        tasks.len(),
+        rep.pairs_used,
+        rep.e_total,
+        baseline,
+        100.0 * (1.0 - rep.e_total / baseline),
+        rep.violations,
+    );
+    assert_eq!(rep.violations, 0);
+    println!("backend: {}", solver.backend_name());
+}

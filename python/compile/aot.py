@@ -1,0 +1,71 @@
+"""AOT pipeline: lower the L2 solver graphs to HLO *text* artifacts.
+
+HLO text (NOT ``lowered.compile()`` / serialized protos) is the interchange
+format: jax >= 0.5 emits HloModuleProto with 64-bit instruction ids which
+xla_extension 0.5.1 (the version the published ``xla`` crate binds) rejects;
+the text parser reassigns ids and round-trips cleanly.  See
+/opt/xla-example/README.md.
+
+Usage:  cd python && python -m compile.aot --out-dir ../artifacts
+"""
+
+import argparse
+import json
+import os
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from compile import layout as L
+from compile import model
+
+
+def to_hlo_text(fn, *arg_specs) -> str:
+    lowered = jax.jit(fn).lower(*arg_specs)
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+ARTIFACTS = {
+    "dvfs_opt": model.solve_opt,
+    "dvfs_readjust": model.solve_readjust,
+    "dvfs_fused": model.solve_fused,
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--only", choices=sorted(ARTIFACTS), default=None)
+    args = ap.parse_args()
+
+    os.makedirs(args.out_dir, exist_ok=True)
+    specs = model.specs()
+    names = [args.only] if args.only else sorted(ARTIFACTS)
+    for name in names:
+        text = to_hlo_text(ARTIFACTS[name], *specs)
+        path = os.path.join(args.out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        print(f"wrote {len(text):>9} chars  {path}")
+
+    meta = {
+        "batch_n": L.BATCH_N,
+        "grid_g": L.GRID_G,
+        "nparam": L.NPARAM,
+        "nbound": L.NBOUND,
+        "nout": L.NOUT,
+        "tlim_inf": L.TLIM_INF,
+        "artifacts": {n: f"{n}.hlo.txt" for n in names},
+    }
+    meta_path = os.path.join(args.out_dir, "meta.json")
+    with open(meta_path, "w") as f:
+        json.dump(meta, f, indent=2, sort_keys=True)
+    print(f"wrote meta        {meta_path}")
+
+
+if __name__ == "__main__":
+    main()

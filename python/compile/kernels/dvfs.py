@@ -1,0 +1,211 @@
+"""L1 Pallas kernels: the DVFS energy-minimization hot spot.
+
+Two kernels, both evaluating the paper's analytical model (Eqs. 1-2) over a
+search grid and reducing each task row to its argmin-energy setting:
+
+* ``opt``      — free optimum on the ``f_c = g1(V)`` boundary (Theorem 1)
+                 with the closed-form optimal memory frequency, subject to a
+                 hard execution-time cap ``t <= tlim``.  Grid: V.
+* ``readjust`` — the theta-readjustment / deadline-prior solve: find the
+                 minimum-energy setting whose execution time does not exceed
+                 an exact target ``t_target`` (the paper pins ``t = d - a``;
+                 finishing earlier is also deadline-safe, so we accept
+                 ``t <= t_target`` and let argmin pick).  Grid: f_m, with
+                 f_c recovered from the time equation and V = g1^{-1}(f_c).
+
+Both are written as a single fused ``(BLOCK_N x GRID_G)`` surface evaluation
+plus a row argmin — no gathers, no scans — so the whole solve lowers to one
+vectorizable HLO region.  ``interpret=True`` everywhere: the CPU PJRT client
+cannot run Mosaic custom-calls (see DESIGN.md / aot_recipe).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from compile import layout as L
+
+_TINY = 1e-12
+_BIG = L.E_INFEAS
+_RELTOL = 1e-5
+
+
+def g1(v):
+    """Max stable core frequency for core voltage ``v`` (paper Sec. 5.1.1)."""
+    return jnp.sqrt(jnp.maximum(v - 0.5, 0.0) / 2.0) + 0.5
+
+
+def g1_inv(fc):
+    """Minimum core voltage that supports core frequency ``fc``."""
+    return 2.0 * jnp.square(jnp.maximum(fc - 0.5, 0.0)) + 0.5
+
+
+def _unpack(params_blk):
+    """Split a (B, NPARAM) block into (B, 1) columns for broadcasting."""
+    cols = {}
+    for name, idx in (
+        ("p0", L.P_P0),
+        ("gamma", L.P_GAMMA),
+        ("c", L.P_C),
+        ("d", L.P_D),
+        ("delta", L.P_DELTA),
+        ("t0", L.P_T0),
+        ("tlim", L.P_TLIM),
+    ):
+        cols[name] = params_blk[:, idx : idx + 1]
+    return cols
+
+
+def _row_argmin_select(e_masked, picks):
+    """Row argmin over the grid axis; returns (min_e, picked columns, idx).
+
+    ``picks`` is a list of (B, G) arrays to select at the argmin position.
+    One-hot selection keeps everything as fusible elementwise + reduce ops.
+    """
+    b, g = e_masked.shape
+    iota = jax.lax.broadcasted_iota(jnp.float32, (b, g), 1)
+    emin = jnp.min(e_masked, axis=1, keepdims=True)
+    at_min = e_masked <= emin  # ties resolved to the lowest grid index below
+    idx = jnp.min(jnp.where(at_min, iota, float(g)), axis=1, keepdims=True)
+    onehot = iota == idx
+    selected = [jnp.sum(jnp.where(onehot, x, 0.0), axis=1) for x in picks]
+    return emin[:, 0], selected
+
+
+def _assemble_out(o_ref, v, fc, fm, t, p, e, feas):
+    b = v.shape[0]
+    out = jnp.zeros((b, L.NOUT), dtype=jnp.float32)
+    out = out.at[:, L.O_V].set(v)
+    out = out.at[:, L.O_FC].set(fc)
+    out = out.at[:, L.O_FM].set(fm)
+    out = out.at[:, L.O_T].set(t)
+    out = out.at[:, L.O_P].set(p)
+    out = out.at[:, L.O_E].set(e)
+    out = out.at[:, L.O_FEAS].set(feas.astype(jnp.float32))
+    o_ref[...] = out
+
+
+def _opt_kernel(params_ref, bounds_ref, o_ref, *, grid_g):
+    """Free optimum on the g1 boundary with a hard time cap (per block)."""
+    p = _unpack(params_ref[...])
+    b = bounds_ref[...]
+    v_min, v_max = b[L.B_VMIN], b[L.B_VMAX]
+    fc_min = b[L.B_FCMIN]
+    fm_min, fm_max = b[L.B_FMMIN], b[L.B_FMMAX]
+
+    # V grid on the g1 boundary (Theorem 1: the optimum satisfies fc = g1(V),
+    # clamped from below by the interval's fc floor).
+    gi = jax.lax.broadcasted_iota(jnp.float32, (1, grid_g), 1)
+    v = v_min + gi * (v_max - v_min) / float(grid_g - 1)  # (1, G)
+    fc = jnp.maximum(g1(v), fc_min)
+    v2fc = jnp.square(v) * fc
+
+    # Closed-form optimal memory frequency given (V, fc)  (Sec. 4.1).
+    t_core = p["t0"] + p["d"] * p["delta"] / fc  # (B, G)
+    num = (p["p0"] + p["c"] * v2fc) * p["d"] * (1.0 - p["delta"])
+    den = p["gamma"] * t_core
+    fm_star = jnp.sqrt(num / jnp.maximum(den, _TINY))
+
+    # Deadline cap: smallest f_m that still meets tlim at this V.
+    budget = p["tlim"] - t_core  # time left for the memory-bound part
+    fm_req = jnp.where(
+        budget > 0.0,
+        p["d"] * (1.0 - p["delta"]) / jnp.maximum(budget, _TINY),
+        _BIG,
+    )
+    fm_lo = jnp.maximum(fm_req, fm_min)
+    feas = fm_lo <= fm_max * (1.0 + _RELTOL)
+    fm = jnp.clip(fm_star, fm_lo, fm_max)
+    fm = jnp.minimum(fm, fm_max)  # guard fm_lo > fm_max (masked by feas)
+
+    t = p["d"] * (p["delta"] / fc + (1.0 - p["delta"]) / fm) + p["t0"]
+    pw = p["p0"] + p["gamma"] * fm + p["c"] * v2fc
+    e = pw * t
+    e_masked = jnp.where(feas, e, _BIG)
+
+    bsz = e.shape[0]
+    v_b = jnp.broadcast_to(v, (bsz, grid_g))
+    fc_b = jnp.broadcast_to(fc, (bsz, grid_g))
+    _, (vs, fcs, fms, ts, ps, es) = _row_argmin_select(
+        e_masked, [v_b, fc_b, fm, t, pw, e]
+    )
+    any_feas = jnp.any(feas, axis=1)
+    _assemble_out(o_ref, vs, fcs, fms, ts, ps, es, any_feas)
+
+
+def _readjust_kernel(params_ref, bounds_ref, o_ref, *, grid_g):
+    """Exact-target-time solve over an f_m grid (per block).
+
+    For each candidate f_m, the time equation gives the required f_c; the
+    minimal supporting voltage is g1^{-1}(f_c).  Candidates whose clamped
+    setting would run *longer* than the target are invalid (they would miss
+    the deadline); running shorter is allowed.
+    """
+    p = _unpack(params_ref[...])
+    b = bounds_ref[...]
+    v_min, v_max = b[L.B_VMIN], b[L.B_VMAX]
+    fc_min = b[L.B_FCMIN]
+    fm_min, fm_max = b[L.B_FMMIN], b[L.B_FMMAX]
+    fc_cap = g1(v_max)
+
+    gi = jax.lax.broadcasted_iota(jnp.float32, (1, grid_g), 1)
+    fm = fm_min + gi * (fm_max - fm_min) / float(grid_g - 1)  # (1, G)
+    t_tgt = p["tlim"]
+
+    # Required core frequency from  D(delta/fc + (1-delta)/fm) + t0 = t_tgt.
+    q = (t_tgt - p["t0"]) / jnp.maximum(p["d"], _TINY) - (1.0 - p["delta"]) / fm
+    delta_zero = p["delta"] < 1e-6
+    fc_raw = jnp.where(
+        delta_zero,
+        fc_min,
+        p["delta"] / jnp.where(q > 0.0, jnp.maximum(q, _TINY), _TINY),
+    )
+    fc_raw = jnp.where((q <= 0.0) & ~delta_zero, _BIG, fc_raw)
+    fc = jnp.clip(fc_raw, fc_min, fc_cap)
+    v = jnp.clip(g1_inv(fc), v_min, v_max)
+    fc_ok = g1(v) * (1.0 + _RELTOL) >= fc
+
+    t = p["d"] * (p["delta"] / fc + (1.0 - p["delta"]) / jnp.maximum(fm, _TINY)) + p["t0"]
+    meets = t <= t_tgt * (1.0 + _RELTOL) + 1e-6
+    valid = fc_ok & meets
+
+    v2fc = jnp.square(v) * fc
+    pw = p["p0"] + p["gamma"] * fm + p["c"] * v2fc
+    e = pw * t
+    e_masked = jnp.where(valid, e, _BIG)
+
+    bsz = e.shape[0]
+    fm_b = jnp.broadcast_to(fm, (bsz, grid_g))
+    _, (vs, fcs, fms, ts, ps, es) = _row_argmin_select(
+        e_masked, [v, fc, fm_b, t, pw, e]
+    )
+    any_valid = jnp.any(valid, axis=1)
+    _assemble_out(o_ref, vs, fcs, fms, ts, ps, es, any_valid)
+
+
+def _pallas_solve(kernel, params, bounds, *, block_n=L.BLOCK_N, grid_g=L.GRID_G):
+    n = params.shape[0]
+    assert n % block_n == 0, f"batch {n} not a multiple of block {block_n}"
+    return pl.pallas_call(
+        functools.partial(kernel, grid_g=grid_g),
+        grid=(n // block_n,),
+        in_specs=[
+            pl.BlockSpec((block_n, L.NPARAM), lambda i: (i, 0)),
+            pl.BlockSpec((L.NBOUND,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((block_n, L.NOUT), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, L.NOUT), jnp.float32),
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )(params, bounds)
+
+
+def opt(params, bounds, **kw):
+    """Batched free-optimum solve. params f32[N,NPARAM], bounds f32[NBOUND]."""
+    return _pallas_solve(_opt_kernel, params, bounds, **kw)
+
+
+def readjust(params, bounds, **kw):
+    """Batched exact-target-time solve (theta-readjustment / deadline-prior)."""
+    return _pallas_solve(_readjust_kernel, params, bounds, **kw)

@@ -1,0 +1,145 @@
+"""Pure-jnp oracle for the L1 DVFS kernels.
+
+Deliberately written as straight-line jnp over the full batch (no pallas, no
+blocking) so a bug in the kernel's block plumbing or argmin selection cannot
+hide.  ``opt_ref``/``readjust_ref`` mirror the kernel contract exactly;
+``opt_dense`` searches a much denser 2-D (V x f_m) grid *without* the
+closed-form f_m shortcut, validating the Theorem-1 reduction itself.
+"""
+
+import jax.numpy as jnp
+
+from compile import layout as L
+
+_TINY = 1e-12
+_BIG = L.E_INFEAS
+_RELTOL = 1e-5
+
+
+def g1(v):
+    return jnp.sqrt(jnp.maximum(v - 0.5, 0.0) / 2.0) + 0.5
+
+
+def g1_inv(fc):
+    return 2.0 * jnp.square(jnp.maximum(fc - 0.5, 0.0)) + 0.5
+
+
+def exec_time(d, delta, t0, fc, fm):
+    """Eq. 2:  t = D(delta/fc + (1-delta)/fm) + t0."""
+    return d * (delta / fc + (1.0 - delta) / fm) + t0
+
+
+def power(p0, gamma, c, v, fc, fm):
+    """Eq. 1:  P = P0 + gamma*fm + c*V^2*fc."""
+    return p0 + gamma * fm + c * jnp.square(v) * fc
+
+
+def _cols(params):
+    return (
+        params[:, L.P_P0, None],
+        params[:, L.P_GAMMA, None],
+        params[:, L.P_C, None],
+        params[:, L.P_D, None],
+        params[:, L.P_DELTA, None],
+        params[:, L.P_T0, None],
+        params[:, L.P_TLIM, None],
+    )
+
+
+def _select(e_masked, cands, any_ok):
+    idx = jnp.argmin(e_masked, axis=1)
+    rows = jnp.arange(e_masked.shape[0])
+    out = jnp.zeros((e_masked.shape[0], L.NOUT), dtype=jnp.float32)
+    for col, arr in cands.items():
+        out = out.at[:, col].set(arr[rows, idx])
+    out = out.at[:, L.O_FEAS].set(any_ok.astype(jnp.float32))
+    return out
+
+
+def opt_ref(params, bounds, grid_g=L.GRID_G):
+    """Reference free-optimum solve on the g1 boundary with a time cap."""
+    p0, gamma, c, d, delta, t0, tlim = _cols(params)
+    v_min, v_max = bounds[L.B_VMIN], bounds[L.B_VMAX]
+    fc_min = bounds[L.B_FCMIN]
+    fm_min, fm_max = bounds[L.B_FMMIN], bounds[L.B_FMMAX]
+
+    n = params.shape[0]
+    v = jnp.broadcast_to(jnp.linspace(v_min, v_max, grid_g)[None, :], (n, grid_g))
+    fc = jnp.maximum(g1(v), fc_min)
+
+    t_core = t0 + d * delta / fc
+    fm_star = jnp.sqrt(
+        (p0 + c * jnp.square(v) * fc) * d * (1.0 - delta)
+        / jnp.maximum(gamma * t_core, _TINY)
+    )
+    budget = tlim - t_core
+    fm_req = jnp.where(
+        budget > 0.0, d * (1.0 - delta) / jnp.maximum(budget, _TINY), _BIG
+    )
+    fm_lo = jnp.maximum(fm_req, fm_min)
+    feas = fm_lo <= fm_max * (1.0 + _RELTOL)
+    fm = jnp.minimum(jnp.clip(fm_star, fm_lo, fm_max), fm_max)
+
+    t = exec_time(d, delta, t0, fc, fm)
+    pw = power(p0, gamma, c, v, fc, fm)
+    e = pw * t
+    e_masked = jnp.where(feas, e, _BIG)
+
+    cands = {L.O_V: v, L.O_FC: fc, L.O_FM: fm, L.O_T: t, L.O_P: pw, L.O_E: e}
+    return _select(e_masked, cands, jnp.any(feas, axis=1))
+
+
+def readjust_ref(params, bounds, grid_g=L.GRID_G):
+    """Reference exact-target-time solve over the f_m grid."""
+    p0, gamma, c, d, delta, t0, t_tgt = _cols(params)
+    v_min, v_max = bounds[L.B_VMIN], bounds[L.B_VMAX]
+    fc_min = bounds[L.B_FCMIN]
+    fm_min, fm_max = bounds[L.B_FMMIN], bounds[L.B_FMMAX]
+    fc_cap = g1(v_max)
+
+    n = params.shape[0]
+    fm = jnp.broadcast_to(
+        jnp.linspace(fm_min, fm_max, grid_g)[None, :], (n, grid_g)
+    )
+    q = (t_tgt - t0) / jnp.maximum(d, _TINY) - (1.0 - delta) / fm
+    dz = delta < 1e-6
+    fc_raw = jnp.where(
+        dz, fc_min, delta / jnp.where(q > 0.0, jnp.maximum(q, _TINY), _TINY)
+    )
+    fc_raw = jnp.where((q <= 0.0) & ~dz, _BIG, fc_raw)
+    fc = jnp.clip(fc_raw, fc_min, fc_cap)
+    v = jnp.clip(g1_inv(fc), v_min, v_max)
+    fc_ok = g1(v) * (1.0 + _RELTOL) >= fc
+
+    t = exec_time(d, delta, t0, fc, jnp.maximum(fm, _TINY))
+    valid = fc_ok & (t <= t_tgt * (1.0 + _RELTOL) + 1e-6)
+    pw = power(p0, gamma, c, v, fc, fm)
+    e = pw * t
+    e_masked = jnp.where(valid, e, _BIG)
+
+    cands = {L.O_V: v, L.O_FC: fc, L.O_FM: fm, L.O_T: t, L.O_P: pw, L.O_E: e}
+    return _select(e_masked, cands, jnp.any(valid, axis=1))
+
+
+def opt_dense(params, bounds, grid_v=192, grid_fm=192):
+    """Dense 2-D (V x f_m) search with NO closed-form f_m shortcut (only the
+    Theorem-1 boundary fc = g1(V)).  Its minimum energy must match opt_ref's
+    within grid tolerance — this validates the analytical reduction.
+    """
+    p0, gamma, c, d, delta, t0, tlim = (x[:, :, None] for x in _cols(params))
+    v_min, v_max = bounds[L.B_VMIN], bounds[L.B_VMAX]
+    fc_min = bounds[L.B_FCMIN]
+    fm_min, fm_max = bounds[L.B_FMMIN], bounds[L.B_FMMAX]
+
+    v = jnp.linspace(v_min, v_max, grid_v)[None, :, None]
+    fc = jnp.maximum(g1(v), fc_min)
+    fm = jnp.linspace(fm_min, fm_max, grid_fm)[None, None, :]
+
+    t = d * (delta / fc + (1.0 - delta) / fm) + t0
+    pw = p0 + gamma * fm + c * jnp.square(v) * fc
+    e = pw * t
+    feas = t <= tlim * (1.0 + _RELTOL)
+    e_masked = jnp.where(feas, e, _BIG)
+    emin = jnp.min(e_masked.reshape(e.shape[0], -1), axis=1)
+    any_feas = jnp.any(feas.reshape(e.shape[0], -1), axis=1)
+    return emin, any_feas

@@ -1,0 +1,53 @@
+"""Shared tensor layout between the L2 jax model and the L3 rust runtime.
+
+The rust coordinator builds `f32[N, NPARAM]` task batches and an
+`f32[NBOUND]` scaling-interval vector, executes the AOT artifact, and reads
+back `f32[N, NOUT]`.  Keep this file in sync with
+`rust/src/runtime/layout.rs` (there is a pytest + a cargo test asserting the
+constants on both sides).
+"""
+
+# Batch geometry (baked into the AOT artifact shapes).
+BATCH_N = 256  # tasks per solver call; rust pads partial batches
+GRID_G = 64    # search-grid resolution (V grid for `opt`, f_m grid for `readjust`)
+# Pallas block over the task dimension.  Measured on the CPU PJRT path,
+# BLOCK_N 64 vs 256 is within noise (the XLA CPU runtime cost is dominated
+# by elementwise kernels, not the grid loop — see EXPERIMENTS.md §Perf), so
+# we keep 4 grid steps: on a real TPU the (64 x 64) f32 surface with ~10
+# live temporaries is ~160 KB of VMEM per step, leaving headroom for
+# double-buffering the HBM->VMEM parameter stream.
+BLOCK_N = 64
+
+# params[:, k] column indices -----------------------------------------------
+P_P0 = 0      # static + CPU power component P^{G0}            (Eq. 1)
+P_GAMMA = 1   # memory-frequency power sensitivity gamma       (Eq. 1)
+P_C = 2       # core voltage/frequency power sensitivity c^G   (Eq. 1)
+P_D = 3       # frequency-sensitive time component D           (Eq. 2)
+P_DELTA = 4   # core-frequency share delta in [0, 1]           (Eq. 2)
+P_T0 = 5      # frequency-insensitive time component t^0       (Eq. 2)
+P_TLIM = 6    # `opt`: hard time cap (d - a); `readjust`: exact target time
+P_RSVD = 7
+NPARAM = 8
+
+# bounds[k] indices — the DVFS scaling interval ------------------------------
+B_VMIN = 0
+B_VMAX = 1
+B_FCMIN = 2   # f^{Gc} lower bound (upper bound is g1(V))
+B_FMMIN = 3
+B_FMMAX = 4
+NBOUND = 8    # trailing slots reserved
+
+# out[:, k] column indices ----------------------------------------------------
+O_V = 0       # chosen core voltage V^{Gc}
+O_FC = 1      # chosen core frequency f^{Gc}
+O_FM = 2      # chosen memory frequency f^{Gm}
+O_T = 3       # execution time at the chosen setting
+O_P = 4       # runtime power at the chosen setting
+O_E = 5       # energy  = P * t
+O_FEAS = 6    # 1.0 if a feasible setting exists, else 0.0
+O_RSVD = 7
+NOUT = 8
+
+# Sentinels shared with rust.
+TLIM_INF = 1e30   # "no deadline cap" value for P_TLIM
+E_INFEAS = 1e30   # masked energy for infeasible grid points

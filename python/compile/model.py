@@ -1,0 +1,57 @@
+"""L2: the batched DVFS-solver compute graphs, built on the L1 kernels.
+
+These are the functions that get AOT-lowered to HLO text (see ``aot.py``)
+and executed from the rust coordinator on every scheduling decision batch.
+Python never runs on the request path — this module exists only at
+``make artifacts`` / pytest time.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from compile import layout as L
+from compile.kernels import dvfs
+
+
+def solve_opt(params, bounds):
+    """Free-optimum DVFS solve (Algorithm 1's per-task configuration step).
+
+    params: f32[N, NPARAM] task batch (see layout.py); rows with
+            P_TLIM = TLIM_INF are unconstrained.
+    bounds: f32[NBOUND] scaling interval.
+    returns f32[N, NOUT].
+    """
+    return dvfs.opt(params, bounds)
+
+
+def solve_readjust(params, bounds):
+    """Exact-target-time solve (deadline-prior path + theta-readjustment)."""
+    return dvfs.readjust(params, bounds)
+
+
+def solve_fused(params, bounds):
+    """One artifact serving Algorithm 1 end-to-end: run the free optimum,
+    then — for rows whose optimum misses the time cap (deadline-prior
+    tasks) — substitute the exact-time solve at ``t_target = tlim``.
+
+    This keeps the whole per-batch decision in a single PJRT execute call
+    (one host round-trip per arrival batch instead of two).
+    """
+    opt = dvfs.opt(params, bounds)
+    adj = dvfs.readjust(params, bounds)
+    # A task is deadline-prior when the *unconstrained* optimum would exceed
+    # the cap; the capped `opt` solve already pins those to the boundary, but
+    # the readjust parametrization hits the boundary with less grid error.
+    # Prefer readjust whenever it is valid and strictly better.
+    better = (adj[:, L.O_FEAS] > 0.5) & (
+        (opt[:, L.O_FEAS] < 0.5) | (adj[:, L.O_E] < opt[:, L.O_E])
+    )
+    return jnp.where(better[:, None], adj, opt)
+
+
+def specs():
+    """Example-argument shapes for AOT lowering."""
+    return (
+        jax.ShapeDtypeStruct((L.BATCH_N, L.NPARAM), jnp.float32),
+        jax.ShapeDtypeStruct((L.NBOUND,), jnp.float32),
+    )

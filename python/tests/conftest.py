@@ -1,0 +1,79 @@
+"""Shared fixtures: task-parameter generators calibrated to the paper's
+published fitted ranges (Sec. 5.1.3) and the two scaling intervals
+(Sec. 5.1.1)."""
+
+import numpy as np
+import pytest
+
+from compile import layout as L
+
+# Paper Sec. 5.1.3 fitted-parameter ranges for the 20-application library.
+PSTAR_RANGE = (175.0, 206.0)
+GAMMA_FRAC = (0.1, 0.2)     # gamma / P*
+P0_FRAC = (0.20, 0.41)      # P0 / P*
+DELTA_RANGE = (0.07, 0.91)
+D_RANGE = (1.66, 7.61)
+T0_RANGE = (0.1, 0.95)
+
+
+def wide_bounds() -> np.ndarray:
+    """Simulated 'Wide' scaling interval (Sec. 5.1.1)."""
+    b = np.zeros(L.NBOUND, np.float32)
+    b[L.B_VMIN], b[L.B_VMAX] = 0.5, 1.2
+    b[L.B_FCMIN] = 0.5
+    b[L.B_FMMIN], b[L.B_FMMAX] = 0.5, 1.2
+    return b
+
+
+def narrow_bounds() -> np.ndarray:
+    """Measured 'Narrow' GTX-1080Ti scaling interval (Sec. 5.1.1)."""
+    b = np.zeros(L.NBOUND, np.float32)
+    b[L.B_VMIN], b[L.B_VMAX] = 0.8, 1.24
+    b[L.B_FCMIN] = 0.89
+    b[L.B_FMMIN], b[L.B_FMMAX] = 0.8, 1.1
+    return b
+
+
+def make_params(
+    n: int,
+    seed: int = 0,
+    tlim: float | np.ndarray = L.TLIM_INF,
+    scale: tuple[int, int] | None = None,
+) -> np.ndarray:
+    """Random task batch within the paper's fitted ranges.
+
+    ``scale`` optionally multiplies {D, t0} by an integer in [lo, hi] — the
+    paper's task-length scaling step (Sec. 5.1.3).
+    """
+    rng = np.random.default_rng(seed)
+    p = np.zeros((n, L.NPARAM), np.float32)
+    pstar = rng.uniform(*PSTAR_RANGE, n)
+    p[:, L.P_GAMMA] = rng.uniform(*GAMMA_FRAC, n) * pstar
+    p[:, L.P_P0] = rng.uniform(*P0_FRAC, n) * pstar
+    p[:, L.P_C] = pstar - p[:, L.P_P0] - p[:, L.P_GAMMA]
+    p[:, L.P_D] = rng.uniform(*D_RANGE, n)
+    p[:, L.P_DELTA] = rng.uniform(*DELTA_RANGE, n)
+    p[:, L.P_T0] = rng.uniform(*T0_RANGE, n)
+    if scale is not None:
+        k = rng.integers(scale[0], scale[1] + 1, n).astype(np.float32)
+        p[:, L.P_D] *= k
+        p[:, L.P_T0] *= k
+    p[:, L.P_TLIM] = tlim
+    return p
+
+
+def default_energy(p: np.ndarray) -> np.ndarray:
+    """Energy at the default setting (V, fc, fm) = (1, 1, 1): P* x t*."""
+    pstar = p[:, L.P_P0] + p[:, L.P_GAMMA] + p[:, L.P_C]
+    tstar = p[:, L.P_D] + p[:, L.P_T0]
+    return pstar * tstar
+
+
+@pytest.fixture
+def wide():
+    return wide_bounds()
+
+
+@pytest.fixture
+def narrow():
+    return narrow_bounds()

@@ -1,0 +1,93 @@
+"""AOT pipeline checks: lowering to HLO text succeeds, shapes are as the
+rust runtime expects, and the text parses back into an XlaComputation."""
+
+import json
+import os
+import re
+import subprocess
+import sys
+import tempfile
+
+import pytest
+
+from compile import aot, layout as L, model
+
+
+@pytest.fixture(scope="module")
+def hlo_texts():
+    specs = model.specs()
+    return {name: aot.to_hlo_text(fn, *specs) for name, fn in aot.ARTIFACTS.items()}
+
+
+def test_artifact_set_complete():
+    assert set(aot.ARTIFACTS) == {"dvfs_opt", "dvfs_readjust", "dvfs_fused"}
+
+
+def test_hlo_text_entry_shapes(hlo_texts):
+    """ENTRY signature must be (f32[N,8], f32[8]) -> (f32[N,8]) for every
+    artifact — this is the contract rust/src/runtime relies on."""
+    for name, text in hlo_texts.items():
+        lines = text.splitlines()
+        start = next(i for i, l in enumerate(lines) if l.startswith("ENTRY"))
+        entry = "\n".join(lines[start:])
+        assert re.search(
+            rf"f32\[{L.BATCH_N},{L.NPARAM}\]\{{1,0\}} parameter\(0\)", entry
+        ), (name, entry[:400])
+        assert re.search(
+            rf"f32\[{L.NBOUND}\]\{{0\}} parameter\(1\)", entry
+        ), (name, entry[:400])
+        root = next(l for l in lines[start:] if "ROOT" in l)
+        assert f"f32[{L.BATCH_N},{L.NOUT}]" in root, (name, root)
+
+
+def test_hlo_no_custom_calls(hlo_texts):
+    """interpret=True pallas must lower to plain HLO — a Mosaic custom-call
+    would be unloadable by the CPU PJRT client."""
+    for name, text in hlo_texts.items():
+        assert "custom-call" not in text, name
+
+
+def test_hlo_ids_fit_in_text_roundtrip(hlo_texts):
+    """The interchange is HLO text specifically because 64-bit proto ids
+    break xla_extension 0.5.1; ensure we really emit text, not protos."""
+    for name, text in hlo_texts.items():
+        assert text.lstrip().startswith("HloModule"), name
+
+
+def test_aot_main_writes_artifacts(tmp_path):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.dirname(os.path.dirname(__file__))
+    out = subprocess.run(
+        [sys.executable, "-m", "compile.aot", "--out-dir", str(tmp_path),
+         "--only", "dvfs_opt"],
+        cwd=os.path.dirname(os.path.dirname(__file__)),
+        env=env, capture_output=True, text=True, timeout=600,
+    )
+    assert out.returncode == 0, out.stderr
+    assert (tmp_path / "dvfs_opt.hlo.txt").exists()
+    meta = json.loads((tmp_path / "meta.json").read_text())
+    assert meta["batch_n"] == L.BATCH_N
+    assert meta["nout"] == L.NOUT
+    assert meta["tlim_inf"] == L.TLIM_INF
+
+
+def test_layout_matches_rust():
+    """The rust side hard-codes the same layout constants; parse them out of
+    rust/src/runtime/layout.rs and compare."""
+    here = os.path.dirname(os.path.dirname(os.path.dirname(__file__)))
+    path = os.path.join(here, "rust", "src", "runtime", "layout.rs")
+    if not os.path.exists(path):
+        pytest.skip("rust side not built yet")
+    src = open(path).read()
+
+    def rust_const(name):
+        m = re.search(rf"pub const {name}: \w+ = ([0-9_.e+]+)", src)
+        assert m, f"{name} missing from layout.rs"
+        return float(m.group(1).replace("_", ""))
+
+    assert rust_const("BATCH_N") == L.BATCH_N
+    assert rust_const("GRID_G") == L.GRID_G
+    assert rust_const("NPARAM") == L.NPARAM
+    assert rust_const("NBOUND") == L.NBOUND
+    assert rust_const("NOUT") == L.NOUT
+    assert rust_const("TLIM_INF") == L.TLIM_INF

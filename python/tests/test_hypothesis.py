@@ -1,0 +1,108 @@
+"""Hypothesis sweeps over the kernel's parameter space and shapes.
+
+The strategies deliberately wander OUTSIDE the paper's fitted ranges
+(degenerate deltas, gamma=0, huge D, tiny t0, inverted-ish caps) to make
+sure the kernels never emit NaN/negative energies or out-of-interval
+settings."""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile import layout as L
+from compile.kernels import dvfs, ref
+from tests.conftest import narrow_bounds, wide_bounds
+
+finite = dict(allow_nan=False, allow_infinity=False)
+
+task_strategy = st.fixed_dictionaries(
+    {
+        "p0": st.floats(1.0, 500.0, **finite),
+        "gamma": st.floats(0.0, 100.0, **finite),
+        "c": st.floats(1.0, 300.0, **finite),
+        "d": st.floats(0.05, 500.0, **finite),
+        "delta": st.floats(0.0, 1.0, **finite),
+        "t0": st.floats(0.0, 50.0, **finite),
+        "tfrac": st.floats(0.3, 3.0, **finite),  # cap as fraction of t*
+        "capped": st.booleans(),
+    }
+)
+
+
+def _params_from(dicts):
+    p = np.zeros((L.BATCH_N, L.NPARAM), np.float32)
+    for i, d in enumerate(dicts):
+        p[i, L.P_P0] = d["p0"]
+        p[i, L.P_GAMMA] = d["gamma"]
+        p[i, L.P_C] = d["c"]
+        p[i, L.P_D] = d["d"]
+        p[i, L.P_DELTA] = d["delta"]
+        p[i, L.P_T0] = d["t0"]
+        tstar = d["d"] + d["t0"]
+        p[i, L.P_TLIM] = tstar * d["tfrac"] if d["capped"] else L.TLIM_INF
+    # unused tail rows: copy row 0 so the whole batch is well-formed
+    for i in range(len(dicts), L.BATCH_N):
+        p[i] = p[0]
+    return p
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.lists(task_strategy, min_size=1, max_size=16), st.booleans())
+def test_opt_sane_and_matches_ref(dicts, use_wide):
+    bounds = wide_bounds() if use_wide else narrow_bounds()
+    params = _params_from(dicts)
+    out = np.asarray(dvfs.opt(jnp.asarray(params), jnp.asarray(bounds)))
+    out_r = np.asarray(ref.opt_ref(jnp.asarray(params), jnp.asarray(bounds)))
+    np.testing.assert_allclose(out, out_r, rtol=2e-5, atol=2e-5)
+
+    assert np.isfinite(out).all()
+    n = len(dicts)
+    feas = out[:n, L.O_FEAS] > 0.5
+    # settings inside the interval
+    assert (out[:n, L.O_V][feas] >= bounds[L.B_VMIN] - 1e-5).all()
+    assert (out[:n, L.O_V][feas] <= bounds[L.B_VMAX] + 1e-5).all()
+    assert (out[:n, L.O_FM][feas] >= bounds[L.B_FMMIN] - 1e-5).all()
+    assert (out[:n, L.O_FM][feas] <= bounds[L.B_FMMAX] + 1e-5).all()
+    # energies positive where parameters are positive
+    assert (out[:n, L.O_E][feas] > 0).all()
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.lists(task_strategy, min_size=1, max_size=16))
+def test_readjust_sane_and_matches_ref(dicts):
+    bounds = wide_bounds()
+    params = _params_from(dicts)
+    tstar = params[:, L.P_D] + params[:, L.P_T0]
+    params[:, L.P_TLIM] = np.where(
+        params[:, L.P_TLIM] >= L.TLIM_INF / 2, tstar, params[:, L.P_TLIM]
+    )
+    out = np.asarray(dvfs.readjust(jnp.asarray(params), jnp.asarray(bounds)))
+    out_r = np.asarray(ref.readjust_ref(jnp.asarray(params), jnp.asarray(bounds)))
+    np.testing.assert_allclose(out, out_r, rtol=2e-5, atol=2e-5)
+    assert np.isfinite(out).all()
+    n = len(dicts)
+    feas = out[:n, L.O_FEAS] > 0.5
+    # never exceeds the target time
+    assert (
+        out[:n, L.O_T][feas]
+        <= params[:n, L.P_TLIM][feas] * (1 + 1e-4) + 1e-5
+    ).all()
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    st.sampled_from([64, 128, 256, 512]),
+    st.sampled_from([32, 64]),
+    st.integers(0, 2**31 - 1),
+)
+def test_shape_sweep(n, block, seed):
+    """Kernel must work for any N multiple of the block size."""
+    from tests.conftest import make_params
+
+    params = make_params(n, seed=seed)
+    bounds = wide_bounds()
+    out = np.asarray(
+        dvfs.opt(jnp.asarray(params), jnp.asarray(bounds), block_n=block)
+    )
+    out_r = np.asarray(ref.opt_ref(jnp.asarray(params), jnp.asarray(bounds)))
+    np.testing.assert_allclose(out, out_r, rtol=1e-5, atol=1e-5)

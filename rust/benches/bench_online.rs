@@ -1,0 +1,64 @@
+//! Bench: the online evaluation (Figs. 10-11) — regenerates the figure
+//! data in quick mode and times the full paper-scale 1440-slot day per
+//! policy and server width (the end-to-end L3 hot path).
+
+use dvfs_sched::config::SimConfig;
+use dvfs_sched::experiments::{self, ExpCtx};
+use dvfs_sched::runtime::Solver;
+use dvfs_sched::sim::online::{run_online_workload, OnlinePolicyKind};
+use dvfs_sched::tasks::generate_online;
+use dvfs_sched::util::bench::{bb, section, Bencher};
+use dvfs_sched::util::Rng;
+
+fn main() {
+    let b = Bencher::default();
+
+    section("regenerate Figs 10-11 (quick ctx)");
+    for id in ["fig10", "fig11"] {
+        let e = experiments::find(id).unwrap();
+        let mut cfg = SimConfig::default();
+        cfg.reps = 2;
+        cfg.gen.base_pairs = 64;
+        cfg.gen.horizon = 360;
+        cfg.cluster.total_pairs = 256;
+        let ctx = ExpCtx::new(cfg).quick();
+        b.run(&format!("experiment/{id}"), || bb((e.run)(&ctx)).len());
+    }
+
+    section("paper-scale 1440-slot day (≈4000 tasks)");
+    let solver = Solver::native();
+    let base_cfg = SimConfig::default();
+    let mut rng = Rng::new(5);
+    let workload = generate_online(&base_cfg.gen, &mut rng);
+    println!("workload: {} tasks", workload.total_tasks());
+    for l in [1usize, 16] {
+        for kind in OnlinePolicyKind::ALL {
+            for dvfs in [false, true] {
+                let mut cfg = SimConfig::default();
+                cfg.cluster.pairs_per_server = l;
+                cfg.theta = 0.9;
+                let r = b.run(
+                    &format!("online/{}/l={l}/dvfs={dvfs}", kind.name()),
+                    || bb(run_online_workload(kind, &workload, dvfs, &cfg, &solver)),
+                );
+                println!(
+                    "  -> {:.0} scheduled tasks/s",
+                    workload.total_tasks() as f64 * r.per_sec()
+                );
+            }
+        }
+    }
+
+    section("decomposition at l=16 (paper Fig 10 shape)");
+    let mut cfg = SimConfig::default();
+    cfg.cluster.pairs_per_server = 16;
+    cfg.theta = 0.9;
+    let base = run_online_workload(OnlinePolicyKind::Edl, &workload, false, &cfg, &solver);
+    let dvfs = run_online_workload(OnlinePolicyKind::Edl, &workload, true, &cfg, &solver);
+    println!(
+        "EDL l=16: base(run/idle/ovh) = {:.3e}/{:.3e}/{:.3e}   DVFS θ=0.9 = {:.3e}/{:.3e}/{:.3e}  reduction={:.1}%",
+        base.e_run, base.e_idle, base.e_overhead,
+        dvfs.e_run, dvfs.e_idle, dvfs.e_overhead,
+        100.0 * (1.0 - dvfs.e_total() / base.e_total()),
+    );
+}

@@ -1,0 +1,38 @@
+//! Bench: Table 3 + Fig. 3 + Fig. 4 regeneration (single-task experiments)
+//! and the per-call latency of the single-task solve on both backends.
+
+use dvfs_sched::config::SimConfig;
+use dvfs_sched::experiments::{self, ExpCtx};
+use dvfs_sched::runtime::Solver;
+use dvfs_sched::tasks::LIBRARY;
+use dvfs_sched::util::bench::{bb, section, Bencher};
+
+fn main() {
+    let b = Bencher::default();
+
+    section("regenerate Table 3 / Fig 3 / Fig 4 (quick ctx)");
+    for id in ["table3", "fig3", "fig4"] {
+        let e = experiments::find(id).unwrap();
+        let ctx = ExpCtx::new(SimConfig::default()).quick();
+        b.run(&format!("experiment/{id}"), || bb((e.run)(&ctx)).len());
+    }
+
+    section("single-task solve latency");
+    let iv = dvfs_sched::dvfs::ScalingInterval::wide();
+    let m = LIBRARY[0].model.scaled(20.0);
+    let native = Solver::native();
+    b.run("solve_opt/native/1", || {
+        bb(native.solve_opt(&m, f64::INFINITY, &iv))
+    });
+    b.run("solve_exact/native/1", || {
+        bb(native.solve_exact(&m, m.t_star(), &iv))
+    });
+    match Solver::pjrt("artifacts") {
+        Ok(pjrt) => {
+            b.run("solve_opt/pjrt/1 (padded batch)", || {
+                bb(pjrt.solve_opt(&m, f64::INFINITY, &iv))
+            });
+        }
+        Err(e) => println!("pjrt unavailable: {e:#}"),
+    }
+}

@@ -1,0 +1,88 @@
+//! Bench: DVFS-solver throughput — the L3 hot path's compute kernel.
+//!
+//! Reports solves/s for the native analytical solver (per grid size) and
+//! the PJRT artifact backend (per batch size), plus the Algorithm-1
+//! two-pass prepare over a realistic arrival batch.
+
+use dvfs_sched::dvfs::ScalingInterval;
+use dvfs_sched::runtime::{SolveReq, Solver};
+use dvfs_sched::sched::prepare;
+use dvfs_sched::tasks::{Task, LIBRARY};
+use dvfs_sched::util::bench::{bb, section, Bencher};
+use dvfs_sched::util::Rng;
+
+fn reqs(n: usize, seed: u64) -> Vec<SolveReq> {
+    let mut rng = Rng::new(seed);
+    (0..n)
+        .map(|_| SolveReq {
+            model: LIBRARY[rng.index(LIBRARY.len())]
+                .model
+                .scaled(rng.int_range(10, 50) as f64),
+            tlim: f64::INFINITY,
+        })
+        .collect()
+}
+
+fn tasks(n: usize, seed: u64) -> Vec<Task> {
+    let mut rng = Rng::new(seed);
+    (0..n)
+        .map(|i| {
+            let model = LIBRARY[rng.index(LIBRARY.len())]
+                .model
+                .scaled(rng.int_range(10, 50) as f64);
+            let u = rng.open01().max(0.05);
+            Task {
+                id: i,
+                app: 0,
+                model,
+                arrival: 0.0,
+                deadline: model.t_star() / u,
+                u,
+            }
+        })
+        .collect()
+}
+
+fn main() {
+    let iv = ScalingInterval::wide();
+    let b = Bencher::default();
+
+    section("native solver throughput (batch=1024)");
+    let batch = reqs(1024, 1);
+    for grid in [16usize, 32, 64, 128] {
+        let solver = Solver::Native { grid };
+        let r = b.run(&format!("native/grid={grid}/batch=1024"), || {
+            bb(solver.solve_opt_batch(&batch, &iv)).len()
+        });
+        println!(
+            "  -> {:.2e} solves/s",
+            1024.0 * r.per_sec()
+        );
+    }
+
+    section("pjrt artifact throughput");
+    match Solver::pjrt("artifacts") {
+        Ok(pjrt) => {
+            for n in [64usize, 256, 1024, 4096] {
+                let batch = reqs(n, 2);
+                let r = b.run(&format!("pjrt/batch={n}"), || {
+                    bb(pjrt.solve_opt_batch(&batch, &iv)).len()
+                });
+                println!("  -> {:.2e} solves/s", n as f64 * r.per_sec());
+            }
+        }
+        Err(e) => println!("pjrt unavailable: {e:#}"),
+    }
+
+    section("Algorithm-1 prepare (two-pass) over an arrival batch");
+    let ts = tasks(256, 3);
+    let native = Solver::native();
+    b.run("prepare/native/256", || {
+        bb(prepare(&ts, &native, &iv, true)).len()
+    });
+    if let Ok(pjrt) = Solver::pjrt("artifacts") {
+        b.run("prepare/pjrt/256", || {
+            bb(prepare(&ts, &pjrt, &iv, true)).len()
+        });
+    }
+}

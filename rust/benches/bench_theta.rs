@@ -1,0 +1,64 @@
+//! Bench: the θ-readjustment studies (Fig. 9 offline, Figs. 12-13 online)
+//! — regenerates the sweeps in quick mode and prints a full-scale θ sweep
+//! at l=16 (where readjustment matters most).
+
+use dvfs_sched::config::SimConfig;
+use dvfs_sched::experiments::{self, ExpCtx};
+use dvfs_sched::runtime::Solver;
+use dvfs_sched::sim::online::{run_online_workload, OnlinePolicyKind};
+use dvfs_sched::tasks::generate_online;
+use dvfs_sched::util::bench::{bb, section, Bencher};
+use dvfs_sched::util::Rng;
+
+fn main() {
+    let b = Bencher::default();
+
+    section("regenerate Fig 9 / Fig 12 / Fig 13 (quick ctx)");
+    for id in ["fig9", "fig12", "fig13"] {
+        let e = experiments::find(id).unwrap();
+        let mut cfg = SimConfig::default();
+        cfg.reps = 2;
+        cfg.gen.base_pairs = 64;
+        cfg.gen.horizon = 360;
+        cfg.cluster.total_pairs = 256;
+        let ctx = ExpCtx::new(cfg).quick();
+        b.run(&format!("experiment/{id}"), || bb((e.run)(&ctx)).len());
+    }
+
+    section("paper-scale θ sweep at l=16 (online EDL)");
+    let solver = Solver::native();
+    let base_cfg = SimConfig::default();
+    let mut rng = Rng::new(9);
+    let workload = generate_online(&base_cfg.gen, &mut rng);
+    let mut cfg = SimConfig::default();
+    cfg.cluster.pairs_per_server = 16;
+    let baseline = run_online_workload(OnlinePolicyKind::Edl, &workload, false, &cfg, &solver);
+    println!(
+        "baseline (non-DVFS): total={:.4e} idle={:.3e}",
+        baseline.e_total(),
+        baseline.e_idle
+    );
+    for theta in [0.8, 0.85, 0.9, 0.95, 1.0] {
+        let mut cfg = SimConfig::default();
+        cfg.cluster.pairs_per_server = 16;
+        cfg.theta = theta;
+        let r = b.run(&format!("online/EDL-D/l=16/theta={theta}"), || {
+            bb(run_online_workload(
+                OnlinePolicyKind::Edl,
+                &workload,
+                true,
+                &cfg,
+                &solver,
+            ))
+        });
+        let o = run_online_workload(OnlinePolicyKind::Edl, &workload, true, &cfg, &solver);
+        println!(
+            "  -> θ={theta}: total={:.4e} idle={:.3e} readj={} reduction={:.1}%  ({:.1} days/s)",
+            o.e_total(),
+            o.e_idle,
+            o.readjusted,
+            100.0 * (1.0 - o.e_total() / baseline.e_total()),
+            r.per_sec(),
+        );
+    }
+}

@@ -1,0 +1,215 @@
+//! Minimal CLI argument parsing (clap is not in the offline crate set).
+//!
+//! Grammar: `repro <command> [positional...] [--flag [value]]...`
+//! Flags with no following value (or followed by another flag) are
+//! booleans.  Unknown flags are an error — fail loud.
+
+use std::collections::BTreeMap;
+
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    pub command: String,
+    pub positional: Vec<String>,
+    flags: BTreeMap<String, String>,
+    consumed: std::cell::RefCell<Vec<String>>,
+}
+
+impl Args {
+    pub fn parse(argv: &[String]) -> Result<Args, String> {
+        let mut args = Args::default();
+        let mut it = argv.iter().peekable();
+        if let Some(cmd) = it.next() {
+            args.command = cmd.clone();
+        }
+        while let Some(a) = it.next() {
+            if let Some(name) = a.strip_prefix("--") {
+                if name.is_empty() {
+                    return Err("bare '--' not supported".into());
+                }
+                if let Some((k, v)) = name.split_once('=') {
+                    args.flags.insert(k.to_string(), v.to_string());
+                    continue;
+                }
+                // value = next token unless it is another flag
+                match it.peek() {
+                    Some(next) if !next.starts_with("--") => {
+                        args.flags.insert(name.to_string(), it.next().unwrap().clone());
+                    }
+                    _ => {
+                        args.flags.insert(name.to_string(), "true".to_string());
+                    }
+                }
+            } else {
+                args.positional.push(a.clone());
+            }
+        }
+        Ok(args)
+    }
+
+    fn mark(&self, name: &str) {
+        self.consumed.borrow_mut().push(name.to_string());
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.mark(name);
+        self.flags.get(name).map(|v| v == "true").unwrap_or(false)
+    }
+
+    pub fn opt_str(&self, name: &str) -> Option<String> {
+        self.mark(name);
+        self.flags.get(name).cloned()
+    }
+
+    pub fn opt_f64(&self, name: &str) -> Result<Option<f64>, String> {
+        self.mark(name);
+        match self.flags.get(name) {
+            None => Ok(None),
+            Some(v) => v
+                .parse()
+                .map(Some)
+                .map_err(|_| format!("--{name} expects a number, got '{v}'")),
+        }
+    }
+
+    pub fn opt_usize(&self, name: &str) -> Result<Option<usize>, String> {
+        self.mark(name);
+        match self.flags.get(name) {
+            None => Ok(None),
+            Some(v) => v
+                .parse()
+                .map(Some)
+                .map_err(|_| format!("--{name} expects an integer, got '{v}'")),
+        }
+    }
+
+    pub fn opt_u64(&self, name: &str) -> Result<Option<u64>, String> {
+        self.mark(name);
+        match self.flags.get(name) {
+            None => Ok(None),
+            Some(v) => v
+                .parse()
+                .map(Some)
+                .map_err(|_| format!("--{name} expects an integer, got '{v}'")),
+        }
+    }
+
+    /// Call after consuming all known flags: errors on leftovers (typos).
+    pub fn finish(&self) -> Result<(), String> {
+        let consumed = self.consumed.borrow();
+        let unknown: Vec<&String> = self
+            .flags
+            .keys()
+            .filter(|k| !consumed.contains(k))
+            .collect();
+        if unknown.is_empty() {
+            Ok(())
+        } else {
+            Err(format!(
+                "unknown flag(s): {}",
+                unknown
+                    .iter()
+                    .map(|k| format!("--{k}"))
+                    .collect::<Vec<_>>()
+                    .join(", ")
+            ))
+        }
+    }
+}
+
+/// Apply the common overrides (--reps/--seed/--theta/--l/--interval/
+/// --backend/--config/...) to a SimConfig.
+pub fn apply_overrides(
+    args: &Args,
+    cfg: &mut crate::config::SimConfig,
+) -> Result<(), String> {
+    if let Some(path) = args.opt_str("config") {
+        *cfg = crate::config::SimConfig::from_file(&path)?;
+    }
+    if let Some(r) = args.opt_usize("reps")? {
+        cfg.reps = r;
+    }
+    if let Some(s) = args.opt_u64("seed")? {
+        cfg.seed = s;
+    }
+    if let Some(t) = args.opt_f64("theta")? {
+        cfg.theta = t;
+    }
+    if let Some(l) = args.opt_usize("l")? {
+        cfg.cluster.pairs_per_server = l;
+    }
+    if let Some(u) = args.opt_f64("u-off")? {
+        cfg.gen.u_off = u;
+    }
+    if let Some(u) = args.opt_f64("u-on")? {
+        cfg.gen.u_on = u;
+    }
+    if let Some(h) = args.opt_u64("horizon")? {
+        cfg.gen.horizon = h;
+    }
+    if let Some(iv) = args.opt_str("interval") {
+        cfg.interval = match iv.as_str() {
+            "wide" => crate::dvfs::ScalingInterval::wide(),
+            "narrow" => crate::dvfs::ScalingInterval::narrow(),
+            other => return Err(format!("unknown interval '{other}'")),
+        };
+    }
+    if let Some(b) = args.opt_str("backend") {
+        cfg.backend = crate::config::Backend::parse(&b)?;
+    }
+    if let Some(dir) = args.opt_str("artifacts-dir") {
+        cfg.artifacts_dir = dir;
+    }
+    cfg.validate()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &str) -> Vec<String> {
+        s.split_whitespace().map(String::from).collect()
+    }
+
+    #[test]
+    fn parses_flags_and_positionals() {
+        let a = Args::parse(&argv("experiment fig5 --reps 10 --quick --csv out")).unwrap();
+        assert_eq!(a.command, "experiment");
+        assert_eq!(a.positional, vec!["fig5"]);
+        assert_eq!(a.opt_usize("reps").unwrap(), Some(10));
+        assert!(a.flag("quick"));
+        assert_eq!(a.opt_str("csv"), Some("out".into()));
+        a.finish().unwrap();
+    }
+
+    #[test]
+    fn equals_syntax() {
+        let a = Args::parse(&argv("online --theta=0.9")).unwrap();
+        assert_eq!(a.opt_f64("theta").unwrap(), Some(0.9));
+        a.finish().unwrap();
+    }
+
+    #[test]
+    fn unknown_flags_error() {
+        let a = Args::parse(&argv("online --thtea 0.9")).unwrap();
+        let _ = a.opt_f64("theta");
+        assert!(a.finish().is_err());
+    }
+
+    #[test]
+    fn bad_number_errors() {
+        let a = Args::parse(&argv("x --reps abc")).unwrap();
+        assert!(a.opt_usize("reps").is_err());
+    }
+
+    #[test]
+    fn overrides_apply() {
+        let a = Args::parse(&argv("x --theta 0.85 --l 8 --seed 99 --interval narrow")).unwrap();
+        let mut cfg = crate::config::SimConfig::default();
+        apply_overrides(&a, &mut cfg).unwrap();
+        assert_eq!(cfg.theta, 0.85);
+        assert_eq!(cfg.cluster.pairs_per_server, 8);
+        assert_eq!(cfg.seed, 99);
+        assert_eq!(cfg.interval, crate::dvfs::ScalingInterval::narrow());
+        a.finish().unwrap();
+    }
+}

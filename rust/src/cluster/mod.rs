@@ -1,0 +1,8 @@
+//! Cluster substrate: CPU-GPU pair state machine, servers, dynamic
+//! resource sleep (DRS), and exact energy ledgers (paper Sec. 3.1.2).
+
+pub mod pair;
+pub mod state;
+
+pub use pair::{Pair, PairPower};
+pub use state::Cluster;

@@ -1,0 +1,154 @@
+//! One CPU-GPU pair: busy / idle / off state with an idle-energy ledger.
+//!
+//! State rules (Sec. 3.1.2): a busy pair draws dynamic + static power (the
+//! task's modeled power); an idle pair draws `P_idle`; an off pair draws
+//! nothing.  A pair can only be off if its whole server is off.
+
+/// Power state of a CPU-GPU pair.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PairPower {
+    Off,
+    Idle,
+    Busy,
+}
+
+#[derive(Clone, Debug)]
+pub struct Pair {
+    /// Owning server index.
+    pub server: usize,
+    /// Index within the server.
+    pub slot: usize,
+    pub power: PairPower,
+    /// Completion time of the last queued task (μ of the tail).
+    pub busy_until: f64,
+    /// Start of the current idle stretch (valid while `power == Idle`).
+    pub idle_since: f64,
+    /// Accumulated idle time (for the E_idle ledger).
+    pub idle_time: f64,
+    /// Number of tasks executed.
+    pub tasks_run: usize,
+}
+
+impl Pair {
+    pub fn new(server: usize, slot: usize) -> Pair {
+        Pair {
+            server,
+            slot,
+            power: PairPower::Off,
+            busy_until: 0.0,
+            idle_since: 0.0,
+            idle_time: 0.0,
+            tasks_run: 0,
+        }
+    }
+
+    /// Turn the pair on (into Idle) at `now`.  Caller accounts Δ.
+    pub fn turn_on(&mut self, now: f64) {
+        debug_assert_eq!(self.power, PairPower::Off);
+        self.power = PairPower::Idle;
+        self.idle_since = now;
+        self.busy_until = now;
+    }
+
+    /// Close the current idle stretch at `now` (before going Busy or Off).
+    fn settle_idle(&mut self, now: f64) {
+        if self.power == PairPower::Idle {
+            let span = now - self.idle_since;
+            debug_assert!(span >= -1e-9, "idle stretch negative: {span}");
+            self.idle_time += span.max(0.0);
+        }
+    }
+
+    /// Queue a task starting at `start` (>= busy_until) running `dur`.
+    /// Returns the completion time μ.
+    pub fn assign(&mut self, start: f64, dur: f64) -> f64 {
+        debug_assert!(self.power != PairPower::Off, "assign to off pair");
+        debug_assert!(
+            start >= self.busy_until - 1e-9,
+            "start {start} before pair free {:.}",
+            self.busy_until
+        );
+        self.settle_idle(start);
+        self.power = PairPower::Busy;
+        self.busy_until = start + dur;
+        self.tasks_run += 1;
+        self.busy_until
+    }
+
+    /// The pair's last task finished at `busy_until`; mark it idle from
+    /// then (called by the engine when processing departures).
+    pub fn depart(&mut self) {
+        debug_assert_eq!(self.power, PairPower::Busy);
+        self.power = PairPower::Idle;
+        self.idle_since = self.busy_until;
+    }
+
+    /// Turn the pair off at `now`, closing the idle ledger.
+    pub fn turn_off(&mut self, now: f64) {
+        // correctness-critical (not debug-only): a busy pair must never be
+        // powered off — it would silently drop a running task
+        assert_ne!(self.power, PairPower::Busy, "turning off a busy pair");
+        self.settle_idle(now);
+        self.power = PairPower::Off;
+    }
+
+    /// How long the pair has been continuously idle at `now`.
+    pub fn idle_span(&self, now: f64) -> f64 {
+        match self.power {
+            PairPower::Idle => (now - self.idle_since).max(0.0),
+            _ => 0.0,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lifecycle_accumulates_idle_time() {
+        let mut p = Pair::new(0, 0);
+        p.turn_on(10.0);
+        assert_eq!(p.power, PairPower::Idle);
+        // idle 10→15, then busy 15→20
+        let mu = p.assign(15.0, 5.0);
+        assert_eq!(mu, 20.0);
+        assert!((p.idle_time - 5.0).abs() < 1e-12);
+        p.depart();
+        assert_eq!(p.power, PairPower::Idle);
+        // idle 20→22, then off
+        p.turn_off(22.0);
+        assert!((p.idle_time - 7.0).abs() < 1e-12);
+        assert_eq!(p.power, PairPower::Off);
+    }
+
+    #[test]
+    fn back_to_back_assign_no_idle() {
+        let mut p = Pair::new(0, 1);
+        p.turn_on(0.0);
+        p.assign(0.0, 3.0);
+        // next task queued at the exact completion time
+        p.assign(3.0, 2.0);
+        assert_eq!(p.busy_until, 5.0);
+        assert_eq!(p.idle_time, 0.0);
+        assert_eq!(p.tasks_run, 2);
+    }
+
+    #[test]
+    fn idle_span_reports_current_stretch() {
+        let mut p = Pair::new(0, 0);
+        p.turn_on(5.0);
+        assert!((p.idle_span(9.0) - 4.0).abs() < 1e-12);
+        p.assign(9.0, 1.0);
+        assert_eq!(p.idle_span(9.5), 0.0);
+    }
+
+    #[test]
+    #[should_panic]
+    fn cannot_turn_off_busy_pair() {
+        let mut p = Pair::new(0, 0);
+        p.turn_on(0.0);
+        p.assign(0.0, 10.0);
+        p.turn_off(5.0);
+    }
+}

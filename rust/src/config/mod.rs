@@ -1,0 +1,306 @@
+//! Typed configuration system: paper defaults, TOML-subset file loading,
+//! and validation.
+//!
+//! Every knob of the simulation is reachable from a config file or CLI
+//! override; the defaults are exactly Sec. 5.1's setup so `repro` with no
+//! arguments reproduces the paper's environment.
+
+pub mod toml;
+
+use crate::dvfs::ScalingInterval;
+use toml::Doc;
+
+/// Cluster shape + static-energy parameters (Sec. 5.1.2).
+#[derive(Clone, Debug, PartialEq)]
+pub struct ClusterConfig {
+    /// Total CPU-GPU pairs available (the paper caps at 2048).
+    pub total_pairs: usize,
+    /// Pairs per server `l` (paper sweeps 1/2/4/8/16).
+    pub pairs_per_server: usize,
+    /// Idle power of one CPU-GPU pair, Watts (24 W CPU + 13 W GPU).
+    pub p_idle: f64,
+    /// Turn-on/off energy overhead per pair (Δ).
+    pub delta_overhead: f64,
+    /// DRS threshold ρ (slots a server must stay idle before turn-off).
+    pub rho: u64,
+}
+
+impl Default for ClusterConfig {
+    fn default() -> Self {
+        let p_idle = 37.0;
+        let delta_overhead = 90.0;
+        ClusterConfig {
+            total_pairs: 2048,
+            pairs_per_server: 1,
+            p_idle,
+            delta_overhead,
+            // paper: rho = floor(Δ / P_idle) = 2
+            rho: (delta_overhead / p_idle).floor() as u64,
+        }
+    }
+}
+
+impl ClusterConfig {
+    pub fn with_l(mut self, l: usize) -> Self {
+        self.pairs_per_server = l;
+        self
+    }
+
+    pub fn num_servers(&self) -> usize {
+        self.total_pairs / self.pairs_per_server
+    }
+
+    pub fn validate(&self) -> Result<(), String> {
+        if self.pairs_per_server == 0 {
+            return Err("pairs_per_server must be >= 1".into());
+        }
+        if self.total_pairs == 0 || self.total_pairs % self.pairs_per_server != 0 {
+            return Err(format!(
+                "total_pairs ({}) must be a positive multiple of pairs_per_server ({})",
+                self.total_pairs, self.pairs_per_server
+            ));
+        }
+        if self.p_idle < 0.0 || self.delta_overhead < 0.0 {
+            return Err("p_idle and delta_overhead must be non-negative".into());
+        }
+        Ok(())
+    }
+}
+
+/// Task-set generator parameters (Sec. 5.1.3).
+#[derive(Clone, Debug, PartialEq)]
+pub struct GenConfig {
+    /// Offline (T=0) task-set utilization, normalized on `base_pairs`.
+    pub u_off: f64,
+    /// Online task-set utilization (arrivals over the horizon).
+    pub u_on: f64,
+    /// Utilization baseline: U_J = 1 means Σu_i = base_pairs (paper: 1024).
+    pub base_pairs: usize,
+    /// Online horizon in time slots (paper: one day of minutes, 1440).
+    pub horizon: u64,
+    /// Task-length scale factor range (inclusive; paper: [10, 50]).
+    pub scale_lo: i64,
+    pub scale_hi: i64,
+}
+
+impl Default for GenConfig {
+    fn default() -> Self {
+        GenConfig {
+            u_off: 0.4,
+            u_on: 1.6,
+            base_pairs: 1024,
+            horizon: 1440,
+            scale_lo: 10,
+            scale_hi: 50,
+        }
+    }
+}
+
+impl GenConfig {
+    pub fn validate(&self) -> Result<(), String> {
+        if self.u_off < 0.0 || self.u_on < 0.0 {
+            return Err("utilizations must be non-negative".into());
+        }
+        if self.scale_lo < 1 || self.scale_lo > self.scale_hi {
+            return Err("require 1 <= scale_lo <= scale_hi".into());
+        }
+        if self.horizon == 0 || self.base_pairs == 0 {
+            return Err("horizon and base_pairs must be positive".into());
+        }
+        Ok(())
+    }
+}
+
+/// Which DVFS solver implementation backs Algorithm 1 / Algorithm 5.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Backend {
+    /// Native rust analytical solver (parallel-safe; used for Monte-Carlo
+    /// fan-out and property tests).
+    Native,
+    /// AOT-compiled XLA artifacts executed via PJRT (`artifacts/*.hlo.txt`)
+    /// — the production hot path.
+    Pjrt,
+}
+
+impl Backend {
+    pub fn parse(s: &str) -> Result<Backend, String> {
+        match s {
+            "native" => Ok(Backend::Native),
+            "pjrt" => Ok(Backend::Pjrt),
+            other => Err(format!("unknown backend '{other}' (native|pjrt)")),
+        }
+    }
+}
+
+/// Full simulation configuration.
+#[derive(Clone, Debug)]
+pub struct SimConfig {
+    pub cluster: ClusterConfig,
+    pub gen: GenConfig,
+    pub interval: ScalingInterval,
+    /// Task deferral threshold θ ∈ (0, 1]; 1 disables readjustment.
+    pub theta: f64,
+    /// Monte-Carlo repetitions.
+    pub reps: usize,
+    pub seed: u64,
+    pub backend: Backend,
+    /// Directory holding the AOT artifacts.
+    pub artifacts_dir: String,
+}
+
+impl Default for SimConfig {
+    fn default() -> Self {
+        SimConfig {
+            cluster: ClusterConfig::default(),
+            gen: GenConfig::default(),
+            interval: ScalingInterval::wide(),
+            theta: 1.0,
+            reps: 20,
+            seed: 2021,
+            backend: Backend::Native,
+            artifacts_dir: "artifacts".to_string(),
+        }
+    }
+}
+
+const KNOWN_KEYS: &[&str] = &[
+    "theta",
+    "reps",
+    "seed",
+    "backend",
+    "artifacts_dir",
+    "interval",
+    "cluster.total_pairs",
+    "cluster.pairs_per_server",
+    "cluster.p_idle",
+    "cluster.delta_overhead",
+    "cluster.rho",
+    "gen.u_off",
+    "gen.u_on",
+    "gen.base_pairs",
+    "gen.horizon",
+    "gen.scale_lo",
+    "gen.scale_hi",
+];
+
+impl SimConfig {
+    pub fn validate(&self) -> Result<(), String> {
+        self.cluster.validate()?;
+        self.gen.validate()?;
+        if !(0.0 < self.theta && self.theta <= 1.0) {
+            return Err(format!("theta must be in (0, 1], got {}", self.theta));
+        }
+        if self.reps == 0 {
+            return Err("reps must be >= 1".into());
+        }
+        self.interval.validate()?;
+        Ok(())
+    }
+
+    /// Load from a TOML-subset document, starting from defaults.
+    pub fn from_doc(doc: &Doc) -> Result<SimConfig, String> {
+        let unknown = doc.unknown_keys(KNOWN_KEYS);
+        if !unknown.is_empty() {
+            return Err(format!("unknown config keys: {}", unknown.join(", ")));
+        }
+        let d = SimConfig::default();
+        let cluster = ClusterConfig {
+            total_pairs: doc.usize_or("cluster.total_pairs", d.cluster.total_pairs)?,
+            pairs_per_server: doc
+                .usize_or("cluster.pairs_per_server", d.cluster.pairs_per_server)?,
+            p_idle: doc.f64_or("cluster.p_idle", d.cluster.p_idle)?,
+            delta_overhead: doc.f64_or("cluster.delta_overhead", d.cluster.delta_overhead)?,
+            rho: doc.u64_or("cluster.rho", d.cluster.rho)?,
+        };
+        let gen = GenConfig {
+            u_off: doc.f64_or("gen.u_off", d.gen.u_off)?,
+            u_on: doc.f64_or("gen.u_on", d.gen.u_on)?,
+            base_pairs: doc.usize_or("gen.base_pairs", d.gen.base_pairs)?,
+            horizon: doc.u64_or("gen.horizon", d.gen.horizon)?,
+            scale_lo: doc.f64_or("gen.scale_lo", d.gen.scale_lo as f64)? as i64,
+            scale_hi: doc.f64_or("gen.scale_hi", d.gen.scale_hi as f64)? as i64,
+        };
+        let interval = match doc.str_or("interval", "wide")? {
+            "wide" => ScalingInterval::wide(),
+            "narrow" => ScalingInterval::narrow(),
+            other => return Err(format!("unknown interval '{other}' (wide|narrow)")),
+        };
+        let cfg = SimConfig {
+            cluster,
+            gen,
+            interval,
+            theta: doc.f64_or("theta", d.theta)?,
+            reps: doc.usize_or("reps", d.reps)?,
+            seed: doc.u64_or("seed", d.seed)?,
+            backend: Backend::parse(doc.str_or("backend", "native")?)?,
+            artifacts_dir: doc.str_or("artifacts_dir", &d.artifacts_dir)?.to_string(),
+        };
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    pub fn from_file(path: &str) -> Result<SimConfig, String> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| format!("cannot read config '{path}': {e}"))?;
+        Self::from_doc(&Doc::parse(&text)?)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_are_paper_values() {
+        let c = SimConfig::default();
+        assert_eq!(c.cluster.total_pairs, 2048);
+        assert_eq!(c.cluster.p_idle, 37.0);
+        assert_eq!(c.cluster.delta_overhead, 90.0);
+        assert_eq!(c.cluster.rho, 2); // floor(90/37)
+        assert_eq!(c.gen.u_off, 0.4);
+        assert_eq!(c.gen.u_on, 1.6);
+        assert_eq!(c.gen.horizon, 1440);
+        assert_eq!(c.gen.base_pairs, 1024);
+        assert!(c.validate().is_ok());
+    }
+
+    #[test]
+    fn from_doc_overrides() {
+        let doc = Doc::parse(
+            "theta = 0.9\n[cluster]\npairs_per_server = 16\n[gen]\nu_on = 0.8\n",
+        )
+        .unwrap();
+        let c = SimConfig::from_doc(&doc).unwrap();
+        assert_eq!(c.theta, 0.9);
+        assert_eq!(c.cluster.pairs_per_server, 16);
+        assert_eq!(c.gen.u_on, 0.8);
+        assert_eq!(c.gen.u_off, 0.4); // untouched default
+    }
+
+    #[test]
+    fn unknown_keys_rejected() {
+        let doc = Doc::parse("thtea = 0.9").unwrap();
+        let err = SimConfig::from_doc(&doc).unwrap_err();
+        assert!(err.contains("thtea"), "{err}");
+    }
+
+    #[test]
+    fn validation_rejects_bad_shapes() {
+        let mut c = SimConfig::default();
+        c.cluster.pairs_per_server = 3; // 2048 % 3 != 0
+        assert!(c.validate().is_err());
+        let mut c = SimConfig::default();
+        c.theta = 0.0;
+        assert!(c.validate().is_err());
+        let mut c = SimConfig::default();
+        c.gen.scale_lo = 60;
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn backend_parse() {
+        assert_eq!(Backend::parse("native").unwrap(), Backend::Native);
+        assert_eq!(Backend::parse("pjrt").unwrap(), Backend::Pjrt);
+        assert!(Backend::parse("gpu").is_err());
+    }
+}

@@ -1,0 +1,270 @@
+//! TOML-subset parser for the launcher's config files (no serde/toml crate
+//! in the offline set).
+//!
+//! Supported: `[section]` headers, `key = value` with value kinds
+//! integer/float/bool/string/array-of-numbers, `#` comments, blank lines.
+//! This covers everything `configs/*.toml` uses; anything else is an error
+//! (fail-loud beats silently ignoring a typo'd key).
+
+use std::collections::BTreeMap;
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum Value {
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Str(String),
+    Arr(Vec<f64>),
+}
+
+impl Value {
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Value::Int(i) => Some(*i as f64),
+            Value::Float(f) => Some(*f),
+            _ => None,
+        }
+    }
+    pub fn as_i64(&self) -> Option<i64> {
+        match self {
+            Value::Int(i) => Some(*i),
+            _ => None,
+        }
+    }
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+    pub fn as_arr(&self) -> Option<&[f64]> {
+        match self {
+            Value::Arr(v) => Some(v),
+            _ => None,
+        }
+    }
+}
+
+/// `section.key` → value map.
+#[derive(Clone, Debug, Default)]
+pub struct Doc {
+    pub entries: BTreeMap<String, Value>,
+}
+
+impl Doc {
+    pub fn parse(text: &str) -> Result<Doc, String> {
+        let mut doc = Doc::default();
+        let mut section = String::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = strip_comment(raw).trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(rest) = line.strip_prefix('[') {
+                let name = rest
+                    .strip_suffix(']')
+                    .ok_or_else(|| format!("line {}: unterminated section", lineno + 1))?;
+                section = name.trim().to_string();
+                if section.is_empty() {
+                    return Err(format!("line {}: empty section name", lineno + 1));
+                }
+                continue;
+            }
+            let eq = line
+                .find('=')
+                .ok_or_else(|| format!("line {}: expected 'key = value'", lineno + 1))?;
+            let key = line[..eq].trim();
+            if key.is_empty() {
+                return Err(format!("line {}: empty key", lineno + 1));
+            }
+            let val = parse_value(line[eq + 1..].trim())
+                .map_err(|e| format!("line {}: {e}", lineno + 1))?;
+            let full = if section.is_empty() {
+                key.to_string()
+            } else {
+                format!("{section}.{key}")
+            };
+            if doc.entries.insert(full.clone(), val).is_some() {
+                return Err(format!("line {}: duplicate key '{full}'", lineno + 1));
+            }
+        }
+        Ok(doc)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&Value> {
+        self.entries.get(key)
+    }
+
+    pub fn f64_or(&self, key: &str, default: f64) -> Result<f64, String> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .as_f64()
+                .ok_or_else(|| format!("key '{key}' is not a number")),
+        }
+    }
+
+    pub fn usize_or(&self, key: &str, default: usize) -> Result<usize, String> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .as_i64()
+                .filter(|&i| i >= 0)
+                .map(|i| i as usize)
+                .ok_or_else(|| format!("key '{key}' is not a non-negative integer")),
+        }
+    }
+
+    pub fn u64_or(&self, key: &str, default: u64) -> Result<u64, String> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .as_i64()
+                .filter(|&i| i >= 0)
+                .map(|i| i as u64)
+                .ok_or_else(|| format!("key '{key}' is not a non-negative integer")),
+        }
+    }
+
+    pub fn str_or<'a>(&'a self, key: &str, default: &'a str) -> Result<&'a str, String> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .as_str()
+                .ok_or_else(|| format!("key '{key}' is not a string")),
+        }
+    }
+
+    /// Keys not consumed by the typed config loader — surfaced as errors so
+    /// config typos never pass silently.
+    pub fn unknown_keys(&self, known: &[&str]) -> Vec<String> {
+        self.entries
+            .keys()
+            .filter(|k| !known.contains(&k.as_str()))
+            .cloned()
+            .collect()
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    // '#' starts a comment unless inside a string
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str) -> Result<Value, String> {
+    if s.is_empty() {
+        return Err("empty value".into());
+    }
+    if s == "true" {
+        return Ok(Value::Bool(true));
+    }
+    if s == "false" {
+        return Ok(Value::Bool(false));
+    }
+    if let Some(inner) = s.strip_prefix('"') {
+        let inner = inner
+            .strip_suffix('"')
+            .ok_or("unterminated string")?;
+        return Ok(Value::Str(inner.to_string()));
+    }
+    if let Some(inner) = s.strip_prefix('[') {
+        let inner = inner.strip_suffix(']').ok_or("unterminated array")?;
+        let mut v = Vec::new();
+        for part in inner.split(',') {
+            let part = part.trim();
+            if part.is_empty() {
+                continue;
+            }
+            v.push(
+                part.parse::<f64>()
+                    .map_err(|_| format!("bad array element '{part}'"))?,
+            );
+        }
+        return Ok(Value::Arr(v));
+    }
+    if !s.contains('.') && !s.contains('e') && !s.contains('E') {
+        if let Ok(i) = s.replace('_', "").parse::<i64>() {
+            return Ok(Value::Int(i));
+        }
+    }
+    s.replace('_', "")
+        .parse::<f64>()
+        .map(Value::Float)
+        .map_err(|_| format!("bad value '{s}'"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_sections_and_types() {
+        let doc = Doc::parse(
+            r#"
+# top comment
+reps = 100
+[cluster]
+total_pairs = 2048
+p_idle = 37.0        # watts
+drs = true
+name = "paper"
+thetas = [0.8, 0.85, 0.9]
+"#,
+        )
+        .unwrap();
+        assert_eq!(doc.get("reps"), Some(&Value::Int(100)));
+        assert_eq!(doc.get("cluster.total_pairs"), Some(&Value::Int(2048)));
+        assert_eq!(doc.get("cluster.p_idle"), Some(&Value::Float(37.0)));
+        assert_eq!(doc.get("cluster.drs"), Some(&Value::Bool(true)));
+        assert_eq!(doc.get("cluster.name"), Some(&Value::Str("paper".into())));
+        assert_eq!(
+            doc.get("cluster.thetas").unwrap().as_arr().unwrap(),
+            &[0.8, 0.85, 0.9]
+        );
+    }
+
+    #[test]
+    fn rejects_duplicates_and_garbage() {
+        assert!(Doc::parse("a = 1\na = 2").is_err());
+        assert!(Doc::parse("nonsense").is_err());
+        assert!(Doc::parse("[open").is_err());
+        assert!(Doc::parse("k = [1, 2").is_err());
+        assert!(Doc::parse("k = \"oops").is_err());
+    }
+
+    #[test]
+    fn typed_getters_with_defaults() {
+        let doc = Doc::parse("x = 3\ny = 2.5").unwrap();
+        assert_eq!(doc.f64_or("x", 0.0).unwrap(), 3.0);
+        assert_eq!(doc.f64_or("missing", 9.0).unwrap(), 9.0);
+        assert_eq!(doc.usize_or("x", 0).unwrap(), 3);
+        assert!(doc.usize_or("y", 0).is_err());
+    }
+
+    #[test]
+    fn unknown_key_detection() {
+        let doc = Doc::parse("a = 1\nb = 2").unwrap();
+        let unknown = doc.unknown_keys(&["a"]);
+        assert_eq!(unknown, vec!["b".to_string()]);
+    }
+
+    #[test]
+    fn comment_inside_string_kept() {
+        let doc = Doc::parse("s = \"a#b\"").unwrap();
+        assert_eq!(doc.get("s").unwrap().as_str(), Some("a#b"));
+    }
+}

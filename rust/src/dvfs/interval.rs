@@ -1,0 +1,120 @@
+//! DVFS scaling intervals (paper Sec. 5.1.1).
+//!
+//! All voltages/frequencies are normalized to the factory default, i.e.
+//! `(V, f_c, f_m) = (1, 1, 1)` is the default setting (1.05 V / 1800 MHz /
+//! 5000 MHz on the measured GTX 1080Ti).
+
+use super::model::g1;
+
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ScalingInterval {
+    pub v_min: f64,
+    pub v_max: f64,
+    /// Core-frequency floor; the ceiling is `g1(V)`.
+    pub fc_min: f64,
+    pub fm_min: f64,
+    pub fm_max: f64,
+}
+
+impl ScalingInterval {
+    /// The simulated "Wide" interval used for the paper's headline results:
+    /// `f_m ∈ [0.5, 1.2]`, `V ∈ [0.5, 1.2]`, `f_c ∈ [0.5, g1(V)]`.
+    pub fn wide() -> Self {
+        ScalingInterval {
+            v_min: 0.5,
+            v_max: 1.2,
+            fc_min: 0.5,
+            fm_min: 0.5,
+            fm_max: 1.2,
+        }
+    }
+
+    /// The measured GTX-1080Ti interval: `V ∈ [0.8, 1.24]`,
+    /// `f_c ∈ [0.89, g1(V)]`, `f_m ∈ [0.8, 1.1]`.
+    pub fn narrow() -> Self {
+        ScalingInterval {
+            v_min: 0.8,
+            v_max: 1.24,
+            fc_min: 0.89,
+            fm_min: 0.8,
+            fm_max: 1.1,
+        }
+    }
+
+    /// Maximum reachable core frequency (`g1(V_max)` ≈ 1.09 for Wide).
+    pub fn fc_max(&self) -> f64 {
+        g1(self.v_max)
+    }
+
+    pub fn validate(&self) -> Result<(), String> {
+        if !(self.v_min > 0.0 && self.v_min <= self.v_max) {
+            return Err("require 0 < v_min <= v_max".into());
+        }
+        if !(self.fm_min > 0.0 && self.fm_min <= self.fm_max) {
+            return Err("require 0 < fm_min <= fm_max".into());
+        }
+        if self.fc_min <= 0.0 {
+            return Err("require fc_min > 0".into());
+        }
+        Ok(())
+    }
+
+    /// Does a setting lie inside the interval (with tolerance)?
+    pub fn contains(&self, v: f64, fc: f64, fm: f64) -> bool {
+        const EPS: f64 = 1e-6;
+        v >= self.v_min - EPS
+            && v <= self.v_max + EPS
+            && fm >= self.fm_min - EPS
+            && fm <= self.fm_max + EPS
+            && fc >= self.fc_min - EPS
+            && fc <= g1(v).max(self.fc_min) + EPS
+    }
+
+    /// Pack into the runtime's `bounds` vector layout (f32).
+    pub fn to_bounds(&self) -> [f32; crate::runtime::layout::NBOUND] {
+        let mut b = [0.0f32; crate::runtime::layout::NBOUND];
+        b[crate::runtime::layout::B_VMIN] = self.v_min as f32;
+        b[crate::runtime::layout::B_VMAX] = self.v_max as f32;
+        b[crate::runtime::layout::B_FCMIN] = self.fc_min as f32;
+        b[crate::runtime::layout::B_FMMIN] = self.fm_min as f32;
+        b[crate::runtime::layout::B_FMMAX] = self.fm_max as f32;
+        b
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_intervals() {
+        let w = ScalingInterval::wide();
+        assert!(w.validate().is_ok());
+        assert!((w.fc_max() - 1.0916).abs() < 1e-3); // sqrt(0.35)+0.5
+        let n = ScalingInterval::narrow();
+        assert!(n.validate().is_ok());
+        assert!(n.fc_max() > n.fc_min);
+    }
+
+    #[test]
+    fn default_setting_inside_both() {
+        assert!(ScalingInterval::wide().contains(1.0, 1.0, 1.0));
+        assert!(ScalingInterval::narrow().contains(1.0, 1.0, 1.0));
+    }
+
+    #[test]
+    fn contains_respects_g1_ceiling() {
+        let w = ScalingInterval::wide();
+        // at V=0.6, g1 = sqrt(0.05)+0.5 ≈ 0.7236 — fc=1.0 unstable
+        assert!(!w.contains(0.6, 1.0, 1.0));
+        assert!(w.contains(0.6, 0.72, 1.0));
+    }
+
+    #[test]
+    fn bounds_packing() {
+        use crate::runtime::layout as l;
+        let b = ScalingInterval::wide().to_bounds();
+        assert_eq!(b[l::B_VMIN], 0.5);
+        assert_eq!(b[l::B_FMMAX], 1.2);
+    }
+}

@@ -1,0 +1,17 @@
+//! The paper's analytical GPU DVFS model and single-task optimizer
+//! (Sections 3.1 and 4.1), implemented natively.
+//!
+//! The same mathematics is implemented as Pallas kernels in
+//! `python/compile/kernels/dvfs.py` and AOT-compiled into the PJRT
+//! artifacts the [`crate::runtime`] executes; integration tests assert the
+//! two implementations agree to float32 tolerance on randomized batches.
+
+pub mod interval;
+pub mod model;
+pub mod solver;
+
+pub use interval::ScalingInterval;
+pub use model::{g1, g1_inv, TaskModel};
+pub use solver::{
+    solve_exact, solve_for_window, solve_opt, solve_opt_on_grid, Setting, VGrid, GRID_DEFAULT,
+};

@@ -1,0 +1,184 @@
+//! The GPU DVFS power/performance model (paper Eqs. 1-3).
+//!
+//! * Power   (Eq. 1): `P(V, fc, fm) = P0 + γ·fm + c·V²·fc`
+//! * Time    (Eq. 2): `t(fc, fm)    = D·(δ/fc + (1−δ)/fm) + t0`
+//! * Energy  (Eq. 3): `E = P · t`
+//! * `g1(V) = sqrt((V − 0.5)/2) + 0.5` — the measured max-stable core
+//!   frequency for a core voltage (sublinear, Pascal).
+
+use super::interval::ScalingInterval;
+
+/// Measured max stable core frequency for core voltage `v` (Sec. 5.1.1).
+#[inline]
+pub fn g1(v: f64) -> f64 {
+    ((v - 0.5).max(0.0) / 2.0).sqrt() + 0.5
+}
+
+/// Minimum core voltage supporting core frequency `fc` (inverse of `g1`).
+#[inline]
+pub fn g1_inv(fc: f64) -> f64 {
+    2.0 * (fc - 0.5).max(0.0).powi(2) + 0.5
+}
+
+/// Per-task fitted model parameters (the six scalars fitted from measured
+/// power/time samples, Sec. 5.1.3).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct TaskModel {
+    /// Scaling-insensitive power (includes the paired CPU's average power).
+    pub p0: f64,
+    /// Memory-frequency power sensitivity γ.
+    pub gamma: f64,
+    /// Core voltage/frequency power sensitivity c.
+    pub c: f64,
+    /// Frequency-sensitive execution-time component D.
+    pub d: f64,
+    /// Core-frequency share δ ∈ [0, 1] (1−δ is the memory share).
+    pub delta: f64,
+    /// Frequency-insensitive execution-time component t0.
+    pub t0: f64,
+}
+
+impl TaskModel {
+    /// Runtime power at a setting (Eq. 1).
+    #[inline]
+    pub fn power(&self, v: f64, fc: f64, fm: f64) -> f64 {
+        self.p0 + self.gamma * fm + self.c * v * v * fc
+    }
+
+    /// Execution time at a setting (Eq. 2).
+    #[inline]
+    pub fn exec_time(&self, fc: f64, fm: f64) -> f64 {
+        self.d * (self.delta / fc + (1.0 - self.delta) / fm) + self.t0
+    }
+
+    /// Energy at a setting (Eq. 3).
+    #[inline]
+    pub fn energy(&self, v: f64, fc: f64, fm: f64) -> f64 {
+        self.power(v, fc, fm) * self.exec_time(fc, fm)
+    }
+
+    /// Default runtime power P* — the setting (1, 1, 1).
+    #[inline]
+    pub fn p_star(&self) -> f64 {
+        self.p0 + self.gamma + self.c
+    }
+
+    /// Default execution time t* — the setting (1, 1, 1).
+    #[inline]
+    pub fn t_star(&self) -> f64 {
+        self.d + self.t0
+    }
+
+    /// Default energy E* = P*·t*.
+    #[inline]
+    pub fn e_star(&self) -> f64 {
+        self.p_star() * self.t_star()
+    }
+
+    /// Minimum achievable execution time in an interval (everything at max).
+    pub fn t_min(&self, iv: &ScalingInterval) -> f64 {
+        self.exec_time(iv.fc_max().max(iv.fc_min), iv.fm_max)
+    }
+
+    /// Maximum achievable execution time in an interval (everything at min).
+    pub fn t_max(&self, iv: &ScalingInterval) -> f64 {
+        self.exec_time(iv.fc_min, iv.fm_min)
+    }
+
+    /// Scale task length by an integer factor (the generator multiplies
+    /// {t0, t*} — i.e. both time components — by k, Sec. 5.1.3).
+    pub fn scaled(&self, k: f64) -> TaskModel {
+        TaskModel {
+            d: self.d * k,
+            t0: self.t0 * k,
+            ..*self
+        }
+    }
+
+    pub fn validate(&self) -> Result<(), String> {
+        if self.p0 < 0.0 || self.gamma < 0.0 || self.c < 0.0 {
+            return Err("power coefficients must be non-negative".into());
+        }
+        if self.d < 0.0 || self.t0 < 0.0 {
+            return Err("time components must be non-negative".into());
+        }
+        if !(0.0..=1.0).contains(&self.delta) {
+            return Err(format!("delta must be in [0,1], got {}", self.delta));
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn demo() -> TaskModel {
+        // The Fig. 3 demo task: P = 100 + 50 f_m + 150 V² f_c,
+        // t = 25(0.5/fc + 0.5/fm) + 5.
+        TaskModel {
+            p0: 100.0,
+            gamma: 50.0,
+            c: 150.0,
+            d: 25.0,
+            delta: 0.5,
+            t0: 5.0,
+        }
+    }
+
+    #[test]
+    fn g1_matches_paper_fit() {
+        assert!((g1(0.5) - 0.5).abs() < 1e-12);
+        assert!((g1(1.0) - 1.0).abs() < 1e-12); // sqrt(0.25)+0.5
+        assert!((g1(1.2) - (0.35f64.sqrt() + 0.5)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn g1_inverse_roundtrip() {
+        for v in [0.5, 0.6, 0.8, 1.0, 1.2] {
+            assert!((g1_inv(g1(v)) - v).abs() < 1e-12);
+        }
+        // below the 0.5 knee the inverse clamps
+        assert_eq!(g1_inv(0.4), 0.5);
+    }
+
+    #[test]
+    fn default_setting_values() {
+        let m = demo();
+        assert_eq!(m.p_star(), 300.0);
+        assert_eq!(m.t_star(), 30.0);
+        assert_eq!(m.e_star(), 9000.0);
+        assert!((m.power(1.0, 1.0, 1.0) - 300.0).abs() < 1e-12);
+        assert!((m.exec_time(1.0, 1.0) - 30.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn time_monotone_in_frequencies() {
+        let m = demo();
+        assert!(m.exec_time(0.5, 1.0) > m.exec_time(1.0, 1.0));
+        assert!(m.exec_time(1.0, 0.5) > m.exec_time(1.0, 1.0));
+    }
+
+    #[test]
+    fn t_min_le_t_star_le_t_max() {
+        let m = demo();
+        let w = ScalingInterval::wide();
+        assert!(m.t_min(&w) <= m.t_star());
+        assert!(m.t_star() <= m.t_max(&w));
+    }
+
+    #[test]
+    fn scaling_multiplies_time_not_power() {
+        let m = demo().scaled(10.0);
+        assert_eq!(m.t_star(), 300.0);
+        assert_eq!(m.p_star(), 300.0);
+        assert_eq!(m.delta, 0.5);
+    }
+
+    #[test]
+    fn validate_catches_bad_delta() {
+        let mut m = demo();
+        m.delta = 1.5;
+        assert!(m.validate().is_err());
+    }
+}

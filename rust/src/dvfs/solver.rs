@@ -1,0 +1,371 @@
+//! Native single-task DVFS optimizer (paper Sec. 4.1).
+//!
+//! Mirrors the Pallas kernels in `python/compile/kernels/dvfs.py` op-for-op
+//! (same grids, same clamping, same feasibility rules) so the PJRT and
+//! native backends are interchangeable; integration tests assert agreement
+//! to float32 tolerance.
+//!
+//! * [`solve_opt`] — Theorem 1: walk the `f_c = g1(V)` boundary on a V
+//!   grid, closed-form optimal `f_m` per point, subject to `t ≤ tlim`.
+//! * [`solve_exact`] — deadline-prior / θ-readjustment: sweep an `f_m`
+//!   grid, recover `f_c` from the time equation at `t = t_target`, pick
+//!   the minimum-energy candidate that does not exceed the target.
+
+use super::interval::ScalingInterval;
+use super::model::{g1, g1_inv, TaskModel};
+
+/// Grid resolution matching the AOT artifacts (`layout::GRID_G`).
+pub const GRID_DEFAULT: usize = 64;
+
+const TINY: f64 = 1e-12;
+const BIG: f64 = 1e30;
+const RELTOL: f64 = 1e-5;
+
+/// A resolved voltage/frequency configuration for one task.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Setting {
+    pub v: f64,
+    pub fc: f64,
+    pub fm: f64,
+    /// Execution time at this setting.
+    pub t: f64,
+    /// Runtime power at this setting.
+    pub p: f64,
+    /// Energy = p * t.
+    pub e: f64,
+    pub feasible: bool,
+}
+
+impl Setting {
+    pub fn infeasible() -> Setting {
+        Setting {
+            v: 0.0,
+            fc: 0.0,
+            fm: 0.0,
+            t: 0.0,
+            p: 0.0,
+            e: BIG,
+            feasible: false,
+        }
+    }
+
+    /// The factory default (no DVFS) setting for a model.
+    pub fn default_for(m: &TaskModel) -> Setting {
+        Setting {
+            v: 1.0,
+            fc: 1.0,
+            fm: 1.0,
+            t: m.t_star(),
+            p: m.p_star(),
+            e: m.e_star(),
+            feasible: true,
+        }
+    }
+}
+
+/// Precomputed V-grid on the `f_c = g1(V)` boundary: the task-independent
+/// part of [`solve_opt`].  Batch solves build it once and amortize the
+/// per-point `g1` square roots across the whole batch.
+#[derive(Clone, Debug)]
+pub struct VGrid {
+    /// (v, fc, v²·fc) per grid point.
+    pts: Vec<(f64, f64, f64)>,
+}
+
+impl VGrid {
+    pub fn new(iv: &ScalingInterval, grid: usize) -> VGrid {
+        let step = (iv.v_max - iv.v_min) / (grid - 1) as f64;
+        let pts = (0..grid)
+            .map(|gi| {
+                let v = iv.v_min + gi as f64 * step;
+                let fc = g1(v).max(iv.fc_min);
+                (v, fc, v * v * fc)
+            })
+            .collect();
+        VGrid { pts }
+    }
+}
+
+/// Free-optimum solve with a hard execution-time cap (`tlim`; pass
+/// `f64::INFINITY` for unconstrained).  Algorithm 1's per-task step.
+pub fn solve_opt(m: &TaskModel, tlim: f64, iv: &ScalingInterval, grid: usize) -> Setting {
+    solve_opt_on_grid(m, tlim, iv, &VGrid::new(iv, grid))
+}
+
+/// [`solve_opt`] against a prebuilt [`VGrid`] (the batch hot path).
+pub fn solve_opt_on_grid(m: &TaskModel, tlim: f64, iv: &ScalingInterval, vg: &VGrid) -> Setting {
+    let tlim = tlim.min(BIG);
+    let mut best = Setting::infeasible();
+    for &(v, fc, v2fc) in &vg.pts {
+
+        let t_core = m.t0 + m.d * m.delta / fc;
+        let num = (m.p0 + m.c * v2fc) * m.d * (1.0 - m.delta);
+        let den = m.gamma * t_core;
+        let fm_star = (num / den.max(TINY)).sqrt();
+
+        let budget = tlim - t_core;
+        let fm_req = if budget > 0.0 {
+            m.d * (1.0 - m.delta) / budget.max(TINY)
+        } else {
+            BIG
+        };
+        let fm_lo = fm_req.max(iv.fm_min);
+        let feas = fm_lo <= iv.fm_max * (1.0 + RELTOL);
+        if !feas {
+            continue;
+        }
+        // fm_lo can exceed fm_max by RELTOL (feasible-within-tolerance);
+        // max-then-min avoids clamp's min<=max panic
+        let fm = fm_star.max(fm_lo).min(iv.fm_max);
+
+        let t = m.exec_time(fc, fm);
+        let p = m.power(v, fc, fm);
+        let e = p * t;
+        if e < best.e {
+            best = Setting {
+                v,
+                fc,
+                fm,
+                t,
+                p,
+                e,
+                feasible: true,
+            };
+        }
+    }
+    best
+}
+
+/// Exact-target-time solve: minimum-energy setting with `t ≤ t_target`,
+/// parametrized along the time-equation curve (deadline-prior tasks and
+/// the θ-readjustment of Algorithm 2 line 18 / Algorithm 5 line 13).
+pub fn solve_exact(m: &TaskModel, t_target: f64, iv: &ScalingInterval, grid: usize) -> Setting {
+    let fc_cap = g1(iv.v_max);
+    let mut best = Setting::infeasible();
+    let step = (iv.fm_max - iv.fm_min) / (grid - 1) as f64;
+    for gi in 0..grid {
+        let fm = iv.fm_min + gi as f64 * step;
+        let q = (t_target - m.t0) / m.d.max(TINY) - (1.0 - m.delta) / fm;
+        let delta_zero = m.delta < 1e-6;
+        let fc_raw = if delta_zero {
+            iv.fc_min
+        } else if q > 0.0 {
+            m.delta / q.max(TINY)
+        } else {
+            BIG
+        };
+        let fc = fc_raw.clamp(iv.fc_min, fc_cap);
+        let v = g1_inv(fc).clamp(iv.v_min, iv.v_max);
+        let fc_ok = g1(v) * (1.0 + RELTOL) >= fc;
+
+        let t = m.exec_time(fc, fm.max(TINY));
+        let meets = t <= t_target * (1.0 + RELTOL) + 1e-6;
+        if !(fc_ok && meets) {
+            continue;
+        }
+        let p = m.power(v, fc, fm);
+        let e = p * t;
+        if e < best.e {
+            best = Setting {
+                v,
+                fc,
+                fm,
+                t,
+                p,
+                e,
+                feasible: true,
+            };
+        }
+    }
+    best
+}
+
+/// Algorithm-1 composite: the setting a scheduler should use given the
+/// task's allowed window, preferring the free optimum and falling back to
+/// the exact-time parametrization when the window binds (deadline-prior).
+pub fn solve_for_window(
+    m: &TaskModel,
+    window: f64,
+    iv: &ScalingInterval,
+    grid: usize,
+) -> Setting {
+    let opt = solve_opt(m, window, iv, grid);
+    let adj = solve_exact(m, window, iv, grid);
+    if adj.feasible && (!opt.feasible || adj.e < opt.e) {
+        adj
+    } else {
+        opt
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn demo() -> TaskModel {
+        TaskModel {
+            p0: 100.0,
+            gamma: 50.0,
+            c: 150.0,
+            d: 25.0,
+            delta: 0.5,
+            t0: 5.0,
+        }
+    }
+
+    fn lib_task() -> TaskModel {
+        // representative of the measured library ranges
+        TaskModel {
+            p0: 57.0,
+            gamma: 28.5,
+            c: 104.5,
+            d: 5.0,
+            delta: 0.5,
+            t0: 0.5,
+        }
+    }
+
+    #[test]
+    fn unconstrained_beats_default() {
+        for m in [demo(), lib_task()] {
+            let s = solve_opt(&m, f64::INFINITY, &ScalingInterval::wide(), GRID_DEFAULT);
+            assert!(s.feasible);
+            assert!(s.e < m.e_star(), "{} !< {}", s.e, m.e_star());
+        }
+    }
+
+    #[test]
+    fn optimum_on_g1_boundary() {
+        let iv = ScalingInterval::wide();
+        let s = solve_opt(&demo(), f64::INFINITY, &iv, GRID_DEFAULT);
+        assert!((s.fc - g1(s.v).max(iv.fc_min)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn cap_respected_and_monotone() {
+        let m = lib_task();
+        let iv = ScalingInterval::wide();
+        let free = solve_opt(&m, f64::INFINITY, &iv, GRID_DEFAULT);
+        let mut prev_e = free.e;
+        for frac in [1.0, 0.95, 0.9, 0.85] {
+            let cap = free.t * frac;
+            let s = solve_opt(&m, cap, &iv, GRID_DEFAULT);
+            assert!(s.feasible);
+            assert!(s.t <= cap * (1.0 + 1e-4));
+            assert!(s.e >= prev_e * (1.0 - 1e-9), "tightening lowered energy");
+            prev_e = s.e;
+        }
+    }
+
+    #[test]
+    fn impossible_cap_infeasible() {
+        let m = lib_task();
+        let iv = ScalingInterval::wide();
+        let s = solve_opt(&m, m.t0 * 0.5, &iv, GRID_DEFAULT);
+        assert!(!s.feasible);
+        let s = solve_exact(&m, m.t0 * 0.5, &iv, GRID_DEFAULT);
+        assert!(!s.feasible);
+    }
+
+    #[test]
+    fn exact_uses_full_window_when_binding() {
+        let m = lib_task();
+        let iv = ScalingInterval::wide();
+        let free = solve_opt(&m, f64::INFINITY, &iv, GRID_DEFAULT);
+        let target = free.t * 0.85;
+        let s = solve_exact(&m, target, &iv, GRID_DEFAULT);
+        assert!(s.feasible);
+        assert!(s.t <= target * (1.0 + 1e-4));
+        assert!(s.t >= target * 0.90, "window underused: {} < {}", s.t, target);
+    }
+
+    #[test]
+    fn exact_delta_zero_task() {
+        // time ignores fc entirely
+        let m = TaskModel {
+            delta: 0.0,
+            ..lib_task()
+        };
+        let iv = ScalingInterval::wide();
+        let tstar = m.t_star();
+        let s = solve_exact(&m, tstar, &iv, GRID_DEFAULT);
+        assert!(s.feasible);
+        assert!((s.fc - iv.fc_min).abs() < 1e-9);
+        assert!(s.t <= tstar * (1.0 + 1e-4));
+    }
+
+    #[test]
+    fn exact_delta_one_task() {
+        // time ignores fm entirely
+        let m = TaskModel {
+            delta: 1.0,
+            ..lib_task()
+        };
+        let iv = ScalingInterval::wide();
+        let s = solve_exact(&m, m.t_star(), &iv, GRID_DEFAULT);
+        assert!(s.feasible);
+        // power is minimized by the lowest fm on the grid
+        assert!((s.fm - iv.fm_min).abs() < 1e-9);
+    }
+
+    #[test]
+    fn window_solver_prefers_better_branch() {
+        let m = lib_task();
+        let iv = ScalingInterval::wide();
+        let free = solve_opt(&m, f64::INFINITY, &iv, GRID_DEFAULT);
+        // loose window: should return (near) the free optimum
+        let s = solve_for_window(&m, free.t * 2.0, &iv, GRID_DEFAULT);
+        assert!(s.e <= free.e * (1.0 + 1e-6));
+        // binding window: better than the capped grid solve alone
+        let tight = free.t * 0.9;
+        let s = solve_for_window(&m, tight, &iv, GRID_DEFAULT);
+        let capped = solve_opt(&m, tight, &iv, GRID_DEFAULT);
+        assert!(s.e <= capped.e * (1.0 + 1e-9));
+    }
+
+    #[test]
+    fn narrow_interval_saves_less() {
+        let m = lib_task();
+        let wide = solve_opt(&m, f64::INFINITY, &ScalingInterval::wide(), GRID_DEFAULT);
+        let narrow = solve_opt(&m, f64::INFINITY, &ScalingInterval::narrow(), GRID_DEFAULT);
+        assert!(wide.e < narrow.e);
+        assert!(narrow.e <= m.e_star() * (1.0 + 1e-9));
+    }
+
+    #[test]
+    fn memory_frequency_clamp_cases() {
+        let iv = ScalingInterval::wide();
+        // gamma = 0 → fm pegs at max
+        let m = TaskModel {
+            gamma: 0.0,
+            ..lib_task()
+        };
+        let s = solve_opt(&m, f64::INFINITY, &iv, GRID_DEFAULT);
+        assert!((s.fm - iv.fm_max).abs() < 1e-9);
+        // delta = 1 → fm pegs at min
+        let m = TaskModel {
+            delta: 1.0,
+            ..lib_task()
+        };
+        let s = solve_opt(&m, f64::INFINITY, &iv, GRID_DEFAULT);
+        assert!((s.fm - iv.fm_min).abs() < 1e-9);
+    }
+
+    #[test]
+    fn settings_stay_inside_interval() {
+        let iv = ScalingInterval::wide();
+        for i in 0..50 {
+            let m = TaskModel {
+                p0: 40.0 + i as f64,
+                gamma: 20.0 + (i % 7) as f64,
+                c: 90.0 + (i % 13) as f64,
+                d: 2.0 + (i % 5) as f64,
+                delta: (i as f64 / 50.0).clamp(0.0, 1.0),
+                t0: 0.3,
+            };
+            let s = solve_opt(&m, f64::INFINITY, &iv, GRID_DEFAULT);
+            assert!(s.feasible);
+            assert!(iv.contains(s.v, s.fc, s.fm), "{s:?}");
+        }
+    }
+}

@@ -1,0 +1,105 @@
+//! Shared experiment context and sweep helpers.
+
+use crate::config::SimConfig;
+use crate::runtime::Solver;
+use crate::util::table::Table;
+
+/// Execution context handed to every experiment.
+pub struct ExpCtx {
+    pub cfg: SimConfig,
+    pub solver: Solver,
+    /// Quick mode: fewer repetitions / coarser sweeps (tests, smoke runs).
+    pub quick: bool,
+    /// If set, every produced table is also written as CSV here.
+    pub out_dir: Option<String>,
+}
+
+impl ExpCtx {
+    pub fn new(cfg: SimConfig) -> ExpCtx {
+        let solver = Solver::from_config(&cfg);
+        ExpCtx {
+            cfg,
+            solver,
+            quick: false,
+            out_dir: None,
+        }
+    }
+
+    pub fn quick(mut self) -> ExpCtx {
+        self.quick = true;
+        self
+    }
+
+    /// Repetitions for Monte-Carlo cells.
+    pub fn reps(&self) -> usize {
+        if self.quick {
+            self.cfg.reps.min(3)
+        } else {
+            self.cfg.reps
+        }
+    }
+
+    /// The task-set utilization sweep (paper x-axis: 0.2 .. 1.6).
+    pub fn u_sweep(&self) -> Vec<f64> {
+        if self.quick {
+            vec![0.2, 0.8, 1.6]
+        } else {
+            vec![0.2, 0.4, 0.6, 0.8, 1.0, 1.2, 1.4, 1.6]
+        }
+    }
+
+    /// Pairs-per-server sweep (paper: 2/4/8/16 for the l>1 figures).
+    pub fn l_sweep(&self) -> Vec<usize> {
+        if self.quick {
+            vec![2, 16]
+        } else {
+            vec![2, 4, 8, 16]
+        }
+    }
+
+    /// θ sweep (paper Sec. 5.3.3 / 5.4.3).
+    pub fn theta_sweep(&self) -> Vec<f64> {
+        vec![0.8, 0.85, 0.9, 0.95, 1.0]
+    }
+
+    /// Config clone with a different l / θ (reps adjusted for quick mode).
+    pub fn cfg_with(&self, l: usize, theta: f64) -> SimConfig {
+        let mut c = self.cfg.clone();
+        c.cluster.pairs_per_server = l;
+        c.theta = theta;
+        c.reps = self.reps();
+        c
+    }
+
+    /// Write a table as CSV into `out_dir` (if configured).
+    pub fn emit(&self, id: &str, table: &Table) {
+        if let Some(dir) = &self.out_dir {
+            let _ = std::fs::create_dir_all(dir);
+            let path = format!("{dir}/{id}.csv");
+            if let Err(e) = std::fs::write(&path, table.to_csv()) {
+                eprintln!("warning: cannot write {path}: {e}");
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quick_mode_shrinks_sweeps() {
+        let ctx = ExpCtx::new(SimConfig::default()).quick();
+        assert!(ctx.reps() <= 3);
+        assert_eq!(ctx.u_sweep().len(), 3);
+        assert!(ctx.l_sweep().len() <= 2);
+    }
+
+    #[test]
+    fn cfg_with_overrides() {
+        let ctx = ExpCtx::new(SimConfig::default());
+        let c = ctx.cfg_with(8, 0.85);
+        assert_eq!(c.cluster.pairs_per_server, 8);
+        assert_eq!(c.theta, 0.85);
+    }
+}

@@ -1,0 +1,179 @@
+//! Extension experiments (beyond the paper — its Sec. 6 future-work
+//! directions): heterogeneous fleets and multi-GPU gang scheduling.
+
+use super::common::ExpCtx;
+use crate::ext::gang::{schedule_gang, GangTask};
+use crate::ext::hetero::{prepare_hetero, reference_fleet, schedule_hetero, GpuType};
+use crate::tasks::generate_offline;
+use crate::util::table::{f2, pct, Table};
+use crate::util::Rng;
+
+/// Heterogeneous fleet vs each homogeneous fleet at the same capacity.
+pub fn run_hetero(ctx: &ExpCtx) -> Vec<Table> {
+    let mut t = Table::new(
+        "EXT — heterogeneous fleet vs homogeneous (offline EDL θ=0.9)",
+        &["fleet", "E_run", "E_idle", "E_total", "vs hetero", "viol", "big/small tasks"],
+    );
+    let mut rng = Rng::new(ctx.cfg.seed);
+    let mut ts = generate_offline(
+        if ctx.quick { 0.3 } else { 0.8 },
+        &ctx.cfg.gen,
+        &mut rng,
+    );
+    // bimodal deadlines: ~30% tight tasks (window = 0.8 t*, feasible only
+    // on the fast type) + ~70% loose tasks (the efficient type's sweet
+    // spot) — the mix where heterogeneity pays
+    for (i, task) in ts.tasks.iter_mut().enumerate() {
+        if i % 10 < 3 {
+            task.deadline = task.arrival + task.model.t_star() * 0.8;
+            task.u = 1.0;
+        } else if task.u > 0.5 {
+            task.u = 0.5;
+            task.deadline = task.arrival + task.model.t_star() / 0.5;
+        }
+    }
+
+    let total = ctx.cfg.cluster.total_pairs;
+    let hetero = reference_fleet(total);
+    let fleets: Vec<(&str, Vec<GpuType>)> = vec![
+        ("hetero 50/50", hetero.clone()),
+        (
+            "bigGPU only",
+            vec![GpuType {
+                pairs: total,
+                ..hetero[0]
+            }],
+        ),
+        (
+            "smallGPU only",
+            vec![GpuType {
+                pairs: total,
+                ..hetero[1]
+            }],
+        ),
+    ];
+
+    let mut hetero_total = 0.0;
+    for (i, (name, fleet)) in fleets.iter().enumerate() {
+        let typed = prepare_hetero(&ts.tasks, fleet);
+        let rep = schedule_hetero(
+            &typed,
+            fleet,
+            ctx.cfg.cluster.pairs_per_server.max(2),
+            ctx.cfg.cluster.p_idle,
+            0.9,
+        );
+        if i == 0 {
+            hetero_total = rep.e_total;
+        }
+        let mix = if rep.tasks_per_type.len() == 2 {
+            format!("{}/{}", rep.tasks_per_type[0], rep.tasks_per_type[1])
+        } else {
+            format!("{}/-", rep.tasks_per_type[0])
+        };
+        t.row(vec![
+            name.to_string(),
+            f2(rep.e_run),
+            f2(rep.e_idle),
+            f2(rep.e_total),
+            pct(rep.e_total / hetero_total - 1.0),
+            rep.violations.to_string(),
+            mix,
+        ]);
+    }
+    ctx.emit("ext_hetero", &t);
+    vec![t]
+}
+
+/// Gang-width sweep: energy and server usage as tasks widen to g GPUs.
+pub fn run_gang(ctx: &ExpCtx) -> Vec<Table> {
+    let mut t = Table::new(
+        "EXT — multi-GPU gang scheduling (offline EDL-gang θ=0.9, l=8)",
+        &["g", "tasks", "E_run", "E_idle", "E_total", "servers", "viol"],
+    );
+    let l = 8;
+    let n = if ctx.quick { 64 } else { 400 };
+    let solver = &ctx.solver;
+    for g in [1usize, 2, 4, 8] {
+        let mut rng = Rng::new(ctx.cfg.seed + g as u64);
+        let gangs: Vec<GangTask> = (0..n)
+            .map(|i| {
+                let model = crate::tasks::LIBRARY[rng.index(crate::tasks::LIBRARY.len())]
+                    .model
+                    .scaled(rng.int_range(10, 50) as f64);
+                let u = rng.uniform(0.1, 0.8);
+                GangTask {
+                    task: crate::tasks::Task {
+                        id: i,
+                        app: 0,
+                        model,
+                        arrival: 0.0,
+                        deadline: model.t_star() / u,
+                        u,
+                    },
+                    g,
+                }
+            })
+            .collect();
+        let s = schedule_gang(&gangs, l, 0.9, solver, &ctx.cfg.interval);
+        let e_idle = s.e_idle(ctx.cfg.cluster.p_idle);
+        t.row(vec![
+            g.to_string(),
+            n.to_string(),
+            f2(s.e_run),
+            f2(e_idle),
+            f2(s.e_run + e_idle),
+            s.servers_used().to_string(),
+            s.violations.to_string(),
+        ]);
+    }
+    ctx.emit("ext_gang", &t);
+    vec![t]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::SimConfig;
+
+    fn quick_ctx() -> ExpCtx {
+        let mut cfg = SimConfig::default();
+        cfg.gen.base_pairs = 32;
+        cfg.cluster.total_pairs = 256;
+        ExpCtx::new(cfg).quick()
+    }
+
+    #[test]
+    fn hetero_experiment_runs() {
+        let tables = run_hetero(&quick_ctx());
+        assert_eq!(tables[0].num_rows(), 3);
+        let rows: Vec<Vec<String>> = tables[0]
+            .to_csv()
+            .lines()
+            .skip(1)
+            .map(|l| l.split(',').map(String::from).collect())
+            .collect();
+        // hetero and big-only meet every deadline; small-only cannot serve
+        // the tight 30% (that's the point of the mixed fleet)
+        assert_eq!(rows[0][5], "0", "hetero violated");
+        assert_eq!(rows[1][5], "0", "big-only violated");
+        assert_ne!(rows[2][5], "0", "small-only should be infeasible for tight tasks");
+        // hetero strictly cheaper than the big-only fleet
+        let e_hetero: f64 = rows[0][3].parse().unwrap();
+        let e_big: f64 = rows[1][3].parse().unwrap();
+        assert!(e_hetero < e_big, "{e_hetero} !< {e_big}");
+    }
+
+    #[test]
+    fn gang_energy_scales_superlinearly_with_width() {
+        let tables = run_gang(&quick_ctx());
+        let runs: Vec<f64> = tables[0]
+            .to_csv()
+            .lines()
+            .skip(1)
+            .map(|l| l.split(',').nth(2).unwrap().parse().unwrap())
+            .collect();
+        // E_run ∝ g for the same task count
+        assert!(runs[3] > runs[0] * 6.0, "{runs:?}");
+    }
+}

@@ -1,0 +1,182 @@
+//! Figs. 10-13 — the online evaluation (Sec. 5.4): energy decomposition,
+//! idle/overhead comparison, θ-readjustment sweep, and total energy
+//! reduction vs the non-DVFS baseline.
+//!
+//! Workload: U_OFF = 0.4 at T=0 plus U_ON = 1.6 Poisson arrivals over a
+//! 1440-slot day (Sec. 5.1.3), Monte-Carlo averaged.
+
+use super::common::ExpCtx;
+use crate::sim::online::{run_online_reps, OnlinePolicyKind};
+use crate::sim::report::OnlineAgg;
+use crate::util::table::{f2, pct, Table};
+
+fn l_points(ctx: &ExpCtx) -> Vec<usize> {
+    if ctx.quick {
+        vec![1, 16]
+    } else {
+        vec![1, 2, 4, 8, 16]
+    }
+}
+
+fn cell(ctx: &ExpCtx, kind: OnlinePolicyKind, l: usize, theta: f64, dvfs: bool) -> OnlineAgg {
+    run_online_reps(kind, dvfs, &ctx.cfg_with(l, theta), &ctx.solver)
+}
+
+fn decomp_row(label: String, l: usize, a: &OnlineAgg) -> Vec<String> {
+    vec![
+        label,
+        l.to_string(),
+        f2(a.e_run.mean()),
+        f2(a.e_idle.mean()),
+        f2(a.e_overhead.mean()),
+        f2(a.e_total.mean()),
+        f2(a.servers_used.mean()),
+        a.violations.to_string(),
+    ]
+}
+
+pub fn run_fig10(ctx: &ExpCtx) -> Vec<Table> {
+    let mut t = Table::new(
+        "Fig 10 — online total-energy decomposition (EDL/BIN × DVFS × l)",
+        &["config", "l", "E_run", "E_idle", "E_overhead", "E_total", "servers", "violations"],
+    );
+    for &l in &l_points(ctx) {
+        let edl = cell(ctx, OnlinePolicyKind::Edl, l, 1.0, false);
+        let bin = cell(ctx, OnlinePolicyKind::Bin, l, 1.0, false);
+        let edl_d = cell(ctx, OnlinePolicyKind::Edl, l, 1.0, true);
+        let edl_d09 = cell(ctx, OnlinePolicyKind::Edl, l, 0.9, true);
+        let bin_d = cell(ctx, OnlinePolicyKind::Bin, l, 1.0, true);
+        t.row(decomp_row("EDL".into(), l, &edl));
+        t.row(decomp_row("BIN".into(), l, &bin));
+        t.row(decomp_row("EDL-D".into(), l, &edl_d));
+        t.row(decomp_row("EDL-D θ=0.9".into(), l, &edl_d09));
+        t.row(decomp_row("BIN-D".into(), l, &bin_d));
+    }
+    ctx.emit("fig10", &t);
+    vec![t]
+}
+
+pub fn run_fig11(ctx: &ExpCtx) -> Vec<Table> {
+    let mut t = Table::new(
+        "Fig 11 — online idle energy & turn-on overhead (non-DVFS vs DVFS)",
+        &["config", "l", "E_idle", "E_overhead", "turn_ons"],
+    );
+    for &l in &l_points(ctx) {
+        for (label, kind, theta, dvfs) in [
+            ("EDL", OnlinePolicyKind::Edl, 1.0, false),
+            ("EDL-D", OnlinePolicyKind::Edl, 1.0, true),
+            ("EDL-D θ=0.9", OnlinePolicyKind::Edl, 0.9, true),
+            ("BIN", OnlinePolicyKind::Bin, 1.0, false),
+            ("BIN-D", OnlinePolicyKind::Bin, 1.0, true),
+        ] {
+            let a = cell(ctx, kind, l, theta, dvfs);
+            t.row(vec![
+                label.into(),
+                l.to_string(),
+                f2(a.e_idle.mean()),
+                f2(a.e_overhead.mean()),
+                f2(a.turn_ons.mean()),
+            ]);
+        }
+    }
+    ctx.emit("fig11", &t);
+    vec![t]
+}
+
+pub fn run_fig12(ctx: &ExpCtx) -> Vec<Table> {
+    let mut t = Table::new(
+        "Fig 12 — online EDL energy vs θ (run/idle/overhead/total)",
+        &["l", "theta", "E_run", "E_idle", "E_overhead", "E_total", "readjusted"],
+    );
+    for &l in &l_points(ctx) {
+        for &theta in &ctx.theta_sweep() {
+            let a = cell(ctx, OnlinePolicyKind::Edl, l, theta, true);
+            t.row(vec![
+                l.to_string(),
+                f2(theta),
+                f2(a.e_run.mean()),
+                f2(a.e_idle.mean()),
+                f2(a.e_overhead.mean()),
+                f2(a.e_total.mean()),
+                (a.readjusted as f64 / a.reps.max(1) as f64).round().to_string(),
+            ]);
+        }
+    }
+    ctx.emit("fig12", &t);
+    vec![t]
+}
+
+pub fn run_fig13(ctx: &ExpCtx) -> Vec<Table> {
+    let mut t = Table::new(
+        "Fig 13 — online energy reduction vs non-DVFS EDL baseline (paper: 30-33%)",
+        &["l", "theta", "reduction"],
+    );
+    for &l in &l_points(ctx) {
+        let base = cell(ctx, OnlinePolicyKind::Edl, l, 1.0, false);
+        for &theta in &ctx.theta_sweep() {
+            let a = cell(ctx, OnlinePolicyKind::Edl, l, theta, true);
+            t.row(vec![
+                l.to_string(),
+                f2(theta),
+                pct(a.reduction_vs(&base)),
+            ]);
+        }
+    }
+    ctx.emit("fig13", &t);
+    vec![t]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::SimConfig;
+
+    fn quick_ctx() -> ExpCtx {
+        let mut cfg = SimConfig::default();
+        cfg.gen.base_pairs = 32;
+        cfg.gen.horizon = 240;
+        cfg.cluster.total_pairs = 128;
+        cfg.reps = 2;
+        ExpCtx::new(cfg).quick()
+    }
+
+    #[test]
+    fn fig10_run_energy_constant_within_dvfs_class() {
+        let ctx = quick_ctx();
+        let t = &run_fig10(&ctx)[0];
+        // E_run must not depend on l or policy (same workloads per seed)
+        let mut base_runs = Vec::new();
+        let mut dvfs_runs = Vec::new();
+        for line in t.to_csv().lines().skip(1) {
+            let c: Vec<&str> = line.split(',').collect();
+            let e_run: f64 = c[2].parse().unwrap();
+            if c[0].ends_with("-D") || c[0].contains("θ") {
+                dvfs_runs.push(e_run);
+            } else {
+                base_runs.push(e_run);
+            }
+        }
+        for xs in [&base_runs, &dvfs_runs] {
+            let mean = xs.iter().sum::<f64>() / xs.len() as f64;
+            for x in xs {
+                assert!((x - mean).abs() / mean < 0.05, "{xs:?}");
+            }
+        }
+        // and DVFS cuts runtime energy by ~1/3
+        let saving = 1.0
+            - dvfs_runs.iter().sum::<f64>() / dvfs_runs.len() as f64
+                / (base_runs.iter().sum::<f64>() / base_runs.len() as f64);
+        assert!((0.25..0.45).contains(&saving), "run saving {saving}");
+    }
+
+    #[test]
+    fn fig13_reductions_in_band() {
+        let ctx = quick_ctx();
+        let t = &run_fig13(&ctx)[0];
+        for line in t.to_csv().lines().skip(1) {
+            let c: Vec<&str> = line.split(',').collect();
+            let red: f64 = c[2].trim_end_matches('%').parse().unwrap();
+            assert!((20.0..45.0).contains(&red), "reduction {red}% out of band");
+        }
+    }
+}

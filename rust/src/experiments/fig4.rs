@@ -1,0 +1,109 @@
+//! Fig. 4 — per-application optimal DVFS settings and energy savings for
+//! the 20-benchmark library, under the measured Narrow interval and the
+//! simulated Wide interval.  Paper headline: Wide mean saving 36.4%
+//! (Sec. 5.2); Narrow on real hardware measured 4.3%.
+
+use super::common::ExpCtx;
+use crate::dvfs::ScalingInterval;
+use crate::runtime::SolveReq;
+use crate::tasks::LIBRARY;
+use crate::util::table::{f3, pct, Table};
+
+pub fn run(ctx: &ExpCtx) -> Vec<Table> {
+    let mut per_app = Table::new(
+        "Fig 4 — optimal setting + energy saving per application",
+        &[
+            "app", "interval", "V", "fc", "fm", "t_hat/t*", "P_hat/P*", "saving",
+        ],
+    );
+    let mut summary = Table::new(
+        "Fig 4 / Sec 5.2 — mean single-task savings (paper: Wide 36.4%)",
+        &["interval", "mean_saving", "min", "max"],
+    );
+
+    for (label, iv) in [
+        ("wide", ScalingInterval::wide()),
+        ("narrow", ScalingInterval::narrow()),
+    ] {
+        let reqs: Vec<SolveReq> = LIBRARY
+            .iter()
+            .map(|a| SolveReq {
+                model: a.model,
+                tlim: f64::INFINITY,
+            })
+            .collect();
+        let settings = ctx.solver.solve_opt_batch(&reqs, &iv);
+        let mut savings = Vec::new();
+        for (app, s) in LIBRARY.iter().zip(&settings) {
+            assert!(s.feasible, "{} infeasible", app.name);
+            let saving = 1.0 - s.e / app.model.e_star();
+            savings.push(saving);
+            per_app.row(vec![
+                app.name.to_string(),
+                label.to_string(),
+                f3(s.v),
+                f3(s.fc),
+                f3(s.fm),
+                f3(s.t / app.model.t_star()),
+                f3(s.p / app.model.p_star()),
+                pct(saving),
+            ]);
+        }
+        let mean = savings.iter().sum::<f64>() / savings.len() as f64;
+        let min = savings.iter().cloned().fold(f64::INFINITY, f64::min);
+        let max = savings.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+        summary.row(vec![label.to_string(), pct(mean), pct(min), pct(max)]);
+    }
+
+    ctx.emit("fig4_per_app", &per_app);
+    ctx.emit("fig4_summary", &summary);
+    vec![summary, per_app]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::SimConfig;
+
+    #[test]
+    fn wide_mean_saving_is_papers_upper_bound() {
+        let ctx = ExpCtx::new(SimConfig::default()).quick();
+        let tables = run(&ctx);
+        // summary row 0 = wide; parse back the mean percentage
+        let csv = tables[0].to_csv();
+        let wide_line = csv.lines().nth(1).unwrap();
+        let mean: f64 = wide_line
+            .split(',')
+            .nth(1)
+            .unwrap()
+            .trim_end_matches('%')
+            .parse()
+            .unwrap();
+        assert!((mean - 36.4).abs() < 1.0, "wide mean {mean}%");
+    }
+
+    #[test]
+    fn per_app_rows_cover_both_intervals() {
+        let ctx = ExpCtx::new(SimConfig::default()).quick();
+        let tables = run(&ctx);
+        assert_eq!(tables[1].num_rows(), 2 * LIBRARY.len());
+    }
+
+    #[test]
+    fn optimal_core_voltage_is_low() {
+        // Paper Sec 5.2: "the optimal core voltage/frequency is relatively
+        // low, close to the allowed lowest setting" for the wide interval.
+        let ctx = ExpCtx::new(SimConfig::default()).quick();
+        let iv = ScalingInterval::wide();
+        let reqs: Vec<SolveReq> = LIBRARY
+            .iter()
+            .map(|a| SolveReq {
+                model: a.model,
+                tlim: f64::INFINITY,
+            })
+            .collect();
+        let settings = ctx.solver.solve_opt_batch(&reqs, &iv);
+        let mean_v = settings.iter().map(|s| s.v).sum::<f64>() / settings.len() as f64;
+        assert!(mean_v < 0.75, "mean optimal V {mean_v} not low");
+    }
+}

@@ -1,0 +1,193 @@
+//! Figs. 5-8 — the offline scheduling evaluation (Sec. 5.3):
+//!
+//! * Fig 5a: absolute energy vs U_J at l=1, non-DVFS (all policies overlap)
+//!   and with DVFS.
+//! * Fig 5b: DVFS energy saving vs U_J at l=1 (paper: ~33.5% mean).
+//! * Fig 6:  non-DVFS energy normalized to baseline for l ∈ {2,4,8,16}.
+//! * Fig 7:  occupied servers at l=1 (policy ordering LPT-FF > EDL >
+//!   EDF-WF ≈ EDF-BF).
+//! * Fig 8:  DVFS savings vs baseline for l > 1.
+
+use super::common::ExpCtx;
+use crate::sched::OfflinePolicy;
+use crate::sim::offline::run_offline_reps;
+use crate::util::table::{f2, pct, Table};
+
+pub fn run_fig5(ctx: &ExpCtx) -> Vec<Table> {
+    let mut t5a = Table::new(
+        "Fig 5a — offline energy vs U_J (l=1)",
+        &["policy", "U_J", "E_nonDVFS", "E_DVFS", "baseline"],
+    );
+    let mut t5b = Table::new(
+        "Fig 5b — offline DVFS energy saving vs U_J (l=1; paper ≈33.5%)",
+        &["policy", "U_J", "saving"],
+    );
+    let cfg = ctx.cfg_with(1, 1.0);
+    for policy in OfflinePolicy::ALL {
+        for &u in &ctx.u_sweep() {
+            let base = run_offline_reps(policy, u, false, &cfg, &ctx.solver);
+            let dvfs = run_offline_reps(policy, u, true, &cfg, &ctx.solver);
+            assert_eq!(base.violations, 0, "{}", policy.name());
+            assert_eq!(dvfs.violations, 0, "{}", policy.name());
+            t5a.row(vec![
+                policy.name().into(),
+                f2(u),
+                f2(base.e_total.mean()),
+                f2(dvfs.e_total.mean()),
+                f2(base.baseline_e.mean()),
+            ]);
+            t5b.row(vec![policy.name().into(), f2(u), pct(dvfs.saving.mean())]);
+        }
+    }
+    ctx.emit("fig5a", &t5a);
+    ctx.emit("fig5b", &t5b);
+    vec![t5a, t5b]
+}
+
+pub fn run_fig6(ctx: &ExpCtx) -> Vec<Table> {
+    let mut t = Table::new(
+        "Fig 6 — offline non-DVFS energy normalized to baseline (l>1)",
+        &["policy", "l", "U_J", "normalized_E"],
+    );
+    for &l in &ctx.l_sweep() {
+        let cfg = ctx.cfg_with(l, 1.0);
+        for policy in OfflinePolicy::ALL {
+            for &u in &ctx.u_sweep() {
+                let agg = run_offline_reps(policy, u, false, &cfg, &ctx.solver);
+                t.row(vec![
+                    policy.name().into(),
+                    l.to_string(),
+                    f2(u),
+                    format!("{:.4}", agg.normalized()),
+                ]);
+            }
+        }
+    }
+    ctx.emit("fig6", &t);
+    vec![t]
+}
+
+pub fn run_fig7(ctx: &ExpCtx) -> Vec<Table> {
+    let mut t = Table::new(
+        "Fig 7 — occupied servers (l=1), non-DVFS vs DVFS",
+        &["policy", "U_J", "servers_nonDVFS", "servers_DVFS"],
+    );
+    let cfg = ctx.cfg_with(1, 1.0);
+    for policy in OfflinePolicy::ALL {
+        for &u in &ctx.u_sweep() {
+            let base = run_offline_reps(policy, u, false, &cfg, &ctx.solver);
+            let dvfs = run_offline_reps(policy, u, true, &cfg, &ctx.solver);
+            t.row(vec![
+                policy.name().into(),
+                f2(u),
+                f2(base.servers_used.mean()),
+                f2(dvfs.servers_used.mean()),
+            ]);
+        }
+    }
+    ctx.emit("fig7", &t);
+    vec![t]
+}
+
+pub fn run_fig8(ctx: &ExpCtx) -> Vec<Table> {
+    let mut t = Table::new(
+        "Fig 8 — offline DVFS energy savings vs baseline (l>1)",
+        &["policy", "l", "U_J", "saving"],
+    );
+    for &l in &ctx.l_sweep() {
+        let cfg = ctx.cfg_with(l, 1.0);
+        for policy in OfflinePolicy::ALL {
+            for &u in &ctx.u_sweep() {
+                let agg = run_offline_reps(policy, u, true, &cfg, &ctx.solver);
+                t.row(vec![
+                    policy.name().into(),
+                    l.to_string(),
+                    f2(u),
+                    pct(agg.saving.mean()),
+                ]);
+            }
+        }
+    }
+    ctx.emit("fig8", &t);
+    vec![t]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::SimConfig;
+
+    fn quick_ctx() -> ExpCtx {
+        let mut cfg = SimConfig::default();
+        cfg.gen.base_pairs = 48;
+        cfg.cluster.total_pairs = 192;
+        cfg.reps = 2;
+        ExpCtx::new(cfg).quick()
+    }
+
+    #[test]
+    fn fig5_savings_in_paper_band() {
+        let ctx = quick_ctx();
+        let tables = run_fig5(&ctx);
+        // every saving cell should be ~33% (paper: "slightly varies
+        // around 33%"); allow a generous band for the small quick config
+        for line in tables[1].to_csv().lines().skip(1) {
+            let saving: f64 = line
+                .split(',')
+                .nth(2)
+                .unwrap()
+                .trim_end_matches('%')
+                .parse()
+                .unwrap();
+            assert!((25.0..45.0).contains(&saving), "saving {saving}% out of band");
+        }
+    }
+
+    #[test]
+    fn fig6_normalized_ge_one_and_decreasing_in_u() {
+        let ctx = quick_ctx();
+        let t = &run_fig6(&ctx)[0];
+        let mut rows: Vec<(String, usize, f64, f64)> = Vec::new();
+        for line in t.to_csv().lines().skip(1) {
+            let c: Vec<&str> = line.split(',').collect();
+            rows.push((
+                c[0].into(),
+                c[1].parse().unwrap(),
+                c[2].parse().unwrap(),
+                c[3].parse().unwrap(),
+            ));
+        }
+        for r in &rows {
+            assert!(r.3 >= 0.999, "normalized energy < 1: {r:?}");
+        }
+        // idle share shrinks as U_J grows (for each policy/l series)
+        for policy in ["EDL", "LPT-FF"] {
+            for l in [2usize, 16] {
+                let series: Vec<f64> = rows
+                    .iter()
+                    .filter(|r| r.0 == policy && r.1 == l)
+                    .map(|r| r.3)
+                    .collect();
+                assert!(
+                    series.first().unwrap() >= series.last().unwrap(),
+                    "{policy} l={l}: {series:?}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn fig7_lpt_uses_most_servers() {
+        let ctx = quick_ctx();
+        let t = &run_fig7(&ctx)[0];
+        let mut by_policy: std::collections::BTreeMap<String, f64> = Default::default();
+        for line in t.to_csv().lines().skip(1) {
+            let c: Vec<&str> = line.split(',').collect();
+            *by_policy.entry(c[0].into()).or_default() += c[3].parse::<f64>().unwrap();
+        }
+        assert!(
+            by_policy["LPT-FF"] >= by_policy["EDL"] - 1e-9,
+            "{by_policy:?}"
+        );
+    }
+}

@@ -1,0 +1,108 @@
+//! Fig. 9 — effectiveness of the offline EDL θ-readjustment (Sec. 5.3.3):
+//! energy savings of EDL-DVFS for θ ∈ {0.8, 0.85, 0.9, 0.95, 1} against
+//! the LPT-FF-DVFS reference (the best energy conserver offline), for
+//! l ∈ {2, 4, 8, 16}.  Paper: θ < 1 closes the gap at large l.
+
+use super::common::ExpCtx;
+use crate::sched::OfflinePolicy;
+use crate::sim::offline::run_offline_reps;
+use crate::util::table::{f2, pct, Table};
+
+pub fn run(ctx: &ExpCtx) -> Vec<Table> {
+    let mut t = Table::new(
+        "Fig 9 — offline EDL θ-readjustment savings vs LPT-FF-DVFS",
+        &["l", "U_J", "theta", "saving_EDL", "saving_LPT", "gap"],
+    );
+    let u_points: Vec<f64> = if ctx.quick {
+        vec![1.2]
+    } else {
+        vec![0.8, 1.2, 1.6]
+    };
+    for &l in &ctx.l_sweep() {
+        for &u in &u_points {
+            let lpt = run_offline_reps(
+                OfflinePolicy::LptFf,
+                u,
+                true,
+                &ctx.cfg_with(l, 1.0),
+                &ctx.solver,
+            );
+            for &theta in &ctx.theta_sweep() {
+                let edl = run_offline_reps(
+                    OfflinePolicy::Edl,
+                    u,
+                    true,
+                    &ctx.cfg_with(l, theta),
+                    &ctx.solver,
+                );
+                assert_eq!(edl.violations, 0);
+                t.row(vec![
+                    l.to_string(),
+                    f2(u),
+                    f2(theta),
+                    pct(edl.saving.mean()),
+                    pct(lpt.saving.mean()),
+                    pct(lpt.saving.mean() - edl.saving.mean()),
+                ]);
+            }
+        }
+    }
+    ctx.emit("fig9", &t);
+    vec![t]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::SimConfig;
+
+    #[test]
+    fn theta_readjustment_helps_at_large_l() {
+        let mut cfg = SimConfig::default();
+        cfg.gen.base_pairs = 48;
+        cfg.cluster.total_pairs = 192;
+        cfg.reps = 3;
+        let ctx = ExpCtx::new(cfg).quick();
+        // compare θ=0.8 vs θ=1 at l=16 directly
+        let strict = run_offline_reps(
+            OfflinePolicy::Edl,
+            1.2,
+            true,
+            &ctx.cfg_with(16, 1.0),
+            &ctx.solver,
+        );
+        let relaxed = run_offline_reps(
+            OfflinePolicy::Edl,
+            1.2,
+            true,
+            &ctx.cfg_with(16, 0.8),
+            &ctx.solver,
+        );
+        // θ<1 must not lose energy overall (it trades run for idle)
+        assert!(
+            relaxed.e_total.mean() <= strict.e_total.mean() * 1.02,
+            "θ=0.8 total {} vs θ=1 {}",
+            relaxed.e_total.mean(),
+            strict.e_total.mean()
+        );
+        // and it reduces idle energy
+        assert!(
+            relaxed.e_idle.mean() <= strict.e_idle.mean() + 1e-9,
+            "idle {} vs {}",
+            relaxed.e_idle.mean(),
+            strict.e_idle.mean()
+        );
+    }
+
+    #[test]
+    fn fig9_table_shape() {
+        let mut cfg = SimConfig::default();
+        cfg.gen.base_pairs = 32;
+        cfg.cluster.total_pairs = 128;
+        cfg.reps = 2;
+        let ctx = ExpCtx::new(cfg).quick();
+        let t = &run(&ctx)[0];
+        // quick: 2 l-values × 1 U × 5 thetas
+        assert_eq!(t.num_rows(), 2 * 5);
+    }
+}

@@ -1,0 +1,102 @@
+//! Experiment harness: one module per paper table/figure (see DESIGN.md §4
+//! for the experiment index).  Each experiment regenerates the rows/series
+//! its figure plots and returns them as [`Table`]s; the CLI prints them
+//! and optionally dumps CSV for plotting.
+
+pub mod common;
+pub mod ext_exp;
+pub mod fig10_13;
+pub mod fig3;
+pub mod fig4;
+pub mod fig5_8;
+pub mod fig9;
+pub mod table3;
+
+pub use common::ExpCtx;
+
+use crate::util::table::Table;
+
+/// A runnable experiment.
+pub struct Experiment {
+    pub id: &'static str,
+    pub paper_ref: &'static str,
+    pub run: fn(&ExpCtx) -> Vec<Table>,
+}
+
+/// Registry of every reproducible table/figure.
+pub const REGISTRY: &[Experiment] = &[
+    Experiment {
+        id: "table3",
+        paper_ref: "Table 3 — example task property table (Sec. 4.2)",
+        run: table3::run,
+    },
+    Experiment {
+        id: "fig3",
+        paper_ref: "Fig. 3 — energy contours; optimum on the g1 boundary",
+        run: fig3::run,
+    },
+    Experiment {
+        id: "fig4",
+        paper_ref: "Fig. 4 — per-app optimal settings + savings (Narrow/Wide)",
+        run: fig4::run,
+    },
+    Experiment {
+        id: "fig5",
+        paper_ref: "Fig. 5 — offline energy & savings vs U_J (l=1)",
+        run: fig5_8::run_fig5,
+    },
+    Experiment {
+        id: "fig6",
+        paper_ref: "Fig. 6 — offline non-DVFS normalized energy (l>1)",
+        run: fig5_8::run_fig6,
+    },
+    Experiment {
+        id: "fig7",
+        paper_ref: "Fig. 7 — occupied servers (l=1), non-DVFS vs DVFS",
+        run: fig5_8::run_fig7,
+    },
+    Experiment {
+        id: "fig8",
+        paper_ref: "Fig. 8 — offline DVFS energy savings (l>1)",
+        run: fig5_8::run_fig8,
+    },
+    Experiment {
+        id: "fig9",
+        paper_ref: "Fig. 9 — offline EDL θ-readjustment effectiveness",
+        run: fig9::run,
+    },
+    Experiment {
+        id: "fig10",
+        paper_ref: "Fig. 10 — online total-energy decomposition",
+        run: fig10_13::run_fig10,
+    },
+    Experiment {
+        id: "fig11",
+        paper_ref: "Fig. 11 — online idle & turn-on overhead comparison",
+        run: fig10_13::run_fig11,
+    },
+    Experiment {
+        id: "fig12",
+        paper_ref: "Fig. 12 — online energy vs θ readjustment",
+        run: fig10_13::run_fig12,
+    },
+    Experiment {
+        id: "fig13",
+        paper_ref: "Fig. 13 — online energy reduction vs baseline",
+        run: fig10_13::run_fig13,
+    },
+    Experiment {
+        id: "ext-hetero",
+        paper_ref: "EXT — heterogeneous GPU fleet (Sec. 6 future work)",
+        run: ext_exp::run_hetero,
+    },
+    Experiment {
+        id: "ext-gang",
+        paper_ref: "EXT — multi-GPU gang tasks (Sec. 6 future work)",
+        run: ext_exp::run_gang,
+    },
+];
+
+pub fn find(id: &str) -> Option<&'static Experiment> {
+    REGISTRY.iter().find(|e| e.id == id)
+}

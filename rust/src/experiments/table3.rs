@@ -1,0 +1,149 @@
+//! Table 3 — the worked example of Sec. 4.2: five tasks sharing
+//! `P = 100 + 50 f_m + 150 V² f_c` and `t = 25(δ/f_c + (1−δ)/f_m) + 5`,
+//! differing in δ and deadline.  We regenerate the optimal `(P̂, t̂)`
+//! column with Algorithm 1 and also replay the example's EDL θ = 0.9
+//! packing (the S11(J2,J4) / S12(J1,J3,J5) mapping discussion).
+
+use super::common::ExpCtx;
+use crate::dvfs::TaskModel;
+use crate::sched::{prepare, schedule_offline, OfflinePolicy};
+use crate::tasks::Task;
+use crate::util::table::{f2, Table};
+
+/// (δ, deadline) rows of Table 3.
+const ROWS: [(f64, f64); 5] = [
+    (0.0, 50.0),
+    (1.0, 36.0),
+    (0.5, 60.0),
+    (0.8, 100.0),
+    (0.2, 300.0),
+];
+
+pub fn tasks() -> Vec<Task> {
+    ROWS.iter()
+        .enumerate()
+        .map(|(i, &(delta, d))| {
+            let model = TaskModel {
+                p0: 100.0,
+                gamma: 50.0,
+                c: 150.0,
+                d: 25.0,
+                delta,
+                t0: 5.0,
+            };
+            Task {
+                id: i + 1,
+                app: 0,
+                model,
+                arrival: 0.0,
+                deadline: d,
+                u: (model.t_star() / d).min(1.0),
+            }
+        })
+        .collect()
+}
+
+pub fn run(ctx: &ExpCtx) -> Vec<Table> {
+    let tasks = tasks();
+    let prepared = prepare(&tasks, &ctx.solver, &ctx.cfg.interval, true);
+
+    let mut t = Table::new(
+        "Table 3 — task property table with Algorithm-1 optimal settings",
+        &["Task", "P0", "P*", "t0", "t*", "delta", "d", "P_hat", "t_hat", "class"],
+    );
+    for p in &prepared {
+        t.row(vec![
+            format!("J{}", p.task.id),
+            f2(p.task.model.p0),
+            f2(p.task.p_star()),
+            f2(p.task.model.t0),
+            f2(p.task.t_star()),
+            f2(p.task.model.delta),
+            f2(p.task.deadline),
+            f2(p.setting.p),
+            f2(p.setting.t),
+            format!("{:?}", p.class),
+        ]);
+    }
+    ctx.emit("table3", &t);
+
+    // Replay the Sec. 4.2 packing example: EDL with θ=0.9 vs θ=1.
+    let mut packing = Table::new(
+        "Sec 4.2 example — EDL packing at theta=0.9 vs theta=1.0",
+        &["theta", "pairs", "E_run", "readjusted", "violations"],
+    );
+    for theta in [0.9, 1.0] {
+        let s = schedule_offline(
+            OfflinePolicy::Edl,
+            &prepared,
+            theta,
+            &ctx.solver,
+            &ctx.cfg.interval,
+        );
+        packing.row(vec![
+            f2(theta),
+            s.pairs_used().to_string(),
+            f2(s.e_run),
+            s.readjusted.to_string(),
+            s.violations.to_string(),
+        ]);
+    }
+    ctx.emit("table3_packing", &packing);
+    vec![t, packing]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::SimConfig;
+
+    #[test]
+    fn table3_reproduces_structure() {
+        let ctx = ExpCtx::new(SimConfig::default()).quick();
+        let tables = run(&ctx);
+        assert_eq!(tables.len(), 2);
+        assert_eq!(tables[0].num_rows(), 5);
+        let tasks = tasks();
+        // J2 (δ=1, d=36 < t̂) is the deadline-prior one in the paper
+        let prepared = prepare(&tasks, &ctx.solver, &ctx.cfg.interval, true);
+        assert_eq!(
+            prepared[1].class,
+            crate::sched::Priority::DeadlinePrior,
+            "J2 must be deadline-prior"
+        );
+        // its setting pins t̂' to the 36-unit window (paper: t̂ = 36)
+        assert!((prepared[1].setting.t - 36.0).abs() < 0.5);
+        // all other tasks are energy-prior
+        for (i, p) in prepared.iter().enumerate() {
+            if i != 1 {
+                assert_eq!(p.class, crate::sched::Priority::EnergyPrior, "J{}", i + 1);
+            }
+        }
+    }
+
+    #[test]
+    fn theta_09_uses_fewer_pairs_than_theta_1() {
+        // the paper's example: θ=0.9 → 2 pairs {J2,J4},{J1,J3,J5};
+        // θ=1 → 3 pairs
+        let ctx = ExpCtx::new(SimConfig::default()).quick();
+        let tasks = tasks();
+        let prepared = prepare(&tasks, &ctx.solver, &ctx.cfg.interval, true);
+        let relaxed = schedule_offline(
+            OfflinePolicy::Edl,
+            &prepared,
+            0.9,
+            &ctx.solver,
+            &ctx.cfg.interval,
+        );
+        let strict = schedule_offline(
+            OfflinePolicy::Edl,
+            &prepared,
+            1.0,
+            &ctx.solver,
+            &ctx.cfg.interval,
+        );
+        assert!(relaxed.pairs_used() <= strict.pairs_used());
+        assert_eq!(relaxed.violations, 0);
+        assert_eq!(strict.violations, 0);
+    }
+}

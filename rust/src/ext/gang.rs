@@ -1,0 +1,293 @@
+//! Multi-GPU (gang) task extension: a task occupies `g` CPU-GPU pairs on
+//! ONE server simultaneously — the "single task can occupy multiple GPUs"
+//! case the paper's conclusion flags as typical of distributed deep
+//! learning.
+//!
+//! Model: a gang task runs data-parallel across its `g` pairs, all at the
+//! same DVFS setting, for the same duration; runtime energy is
+//! `g · P̂ · t̂` (per-pair power model applies to each replica).  Deadlines
+//! and the θ-readjustment carry over unchanged; the packing problem gains
+//! the co-location constraint (all `g` pairs on one server, same start).
+
+use crate::dvfs::ScalingInterval;
+use crate::runtime::Solver;
+use crate::sched::prepare::{prepare, Prepared};
+use crate::tasks::Task;
+
+/// A task plus its gang width.
+#[derive(Clone, Copy, Debug)]
+pub struct GangTask {
+    pub task: Task,
+    /// Pairs required simultaneously (1 = the paper's base case).
+    pub g: usize,
+}
+
+/// One placed gang: `g` pairs of one server, common start/duration.
+#[derive(Clone, Debug)]
+pub struct GangPlacement {
+    pub task_id: usize,
+    pub server: usize,
+    /// The server-local pair slots this gang occupies (len == g).
+    pub pairs: Vec<usize>,
+    pub g: usize,
+    pub start: f64,
+    pub dur: f64,
+    pub power_per_pair: f64,
+    pub deadline: f64,
+}
+
+impl GangPlacement {
+    pub fn energy(&self) -> f64 {
+        self.g as f64 * self.power_per_pair * self.dur
+    }
+    pub fn end(&self) -> f64 {
+        self.start + self.dur
+    }
+}
+
+/// Offline gang schedule over servers of `l` pairs.
+#[derive(Clone, Debug, Default)]
+pub struct GangSchedule {
+    pub placements: Vec<GangPlacement>,
+    /// Per-server, per-pair finish time.
+    pub server_pair_finish: Vec<Vec<f64>>,
+    pub e_run: f64,
+    pub violations: u64,
+}
+
+impl GangSchedule {
+    pub fn servers_used(&self) -> usize {
+        self.server_pair_finish.len()
+    }
+
+    /// E_idle under the offline model: pairs idle until their server's
+    /// last pair finishes (servers shut down when fully drained).
+    pub fn e_idle(&self, p_idle: f64) -> f64 {
+        self.server_pair_finish
+            .iter()
+            .map(|pairs| {
+                let f = pairs.iter().cloned().fold(0.0f64, f64::max);
+                pairs.iter().map(|&t| (f - t) * p_idle).sum::<f64>()
+            })
+            .sum()
+    }
+}
+
+/// EDL-gang (offline): EDF order; place each gang on the server whose
+/// `g` least-loaded pairs admit the earliest common start that meets the
+/// deadline; θ-readjust into the residual window if needed; else open a
+/// new server.
+pub fn schedule_gang(
+    gangs: &[GangTask],
+    l: usize,
+    theta: f64,
+    solver: &Solver,
+    iv: &ScalingInterval,
+) -> GangSchedule {
+    assert!(l >= 1);
+    for gt in gangs {
+        assert!(
+            gt.g >= 1 && gt.g <= l,
+            "gang width {} must fit a server of {l} pairs",
+            gt.g
+        );
+    }
+
+    // Algorithm 1 per task (the DVFS solve is width-independent).
+    let tasks: Vec<Task> = gangs.iter().map(|g| g.task).collect();
+    let prepared: Vec<Prepared> = prepare(&tasks, solver, iv, true);
+
+    // EDF order over the gangs
+    let mut order: Vec<usize> = (0..gangs.len()).collect();
+    order.sort_by(|&a, &b| {
+        gangs[a]
+            .task
+            .deadline
+            .partial_cmp(&gangs[b].task.deadline)
+            .unwrap()
+    });
+
+    let mut sched = GangSchedule::default();
+    for idx in order {
+        let gt = &gangs[idx];
+        let pr = &prepared[idx];
+        let g = gt.g;
+        let d = gt.task.deadline;
+        let t_hat = pr.setting.t;
+
+        // best server: minimal common start = g-th smallest pair finish
+        let mut best: Option<(usize, f64)> = None;
+        for (s, pairs) in sched.server_pair_finish.iter().enumerate() {
+            let mut fin = pairs.clone();
+            fin.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            let start = fin[g - 1]; // g pairs free once the g-th frees
+            if best.map_or(true, |(_, b)| start < b) {
+                best = Some((s, start));
+            }
+        }
+
+        let (server, start, setting) = match best {
+            Some((s, start)) if d - start >= t_hat - 1e-9 => (s, start, pr.setting),
+            Some((s, start))
+                if d - start >= pr.t_theta(theta) - 1e-9 && theta < 1.0 =>
+            {
+                // θ-readjustment: squeeze the gang into the residual window
+                let adj = solver.solve_exact(&pr.task.model, d - start, iv);
+                if adj.feasible {
+                    (s, start, adj)
+                } else {
+                    sched.server_pair_finish.push(vec![0.0; l]);
+                    (sched.server_pair_finish.len() - 1, 0.0, pr.setting)
+                }
+            }
+            _ => {
+                sched.server_pair_finish.push(vec![0.0; l]);
+                (sched.server_pair_finish.len() - 1, 0.0, pr.setting)
+            }
+        };
+
+        // occupy the g least-loaded pairs of the chosen server
+        let pairs = &mut sched.server_pair_finish[server];
+        let mut order_p: Vec<usize> = (0..l).collect();
+        order_p.sort_by(|&a, &b| pairs[a].partial_cmp(&pairs[b]).unwrap());
+        let taken: Vec<usize> = order_p.into_iter().take(g).collect();
+        let end = start + setting.t;
+        for &p in &taken {
+            debug_assert!(pairs[p] <= start + 1e-9);
+            pairs[p] = end;
+        }
+        if end > d * (1.0 + 1e-4) + 1e-6 {
+            sched.violations += 1;
+        }
+        sched.e_run += g as f64 * setting.p * setting.t;
+        sched.placements.push(GangPlacement {
+            task_id: gt.task.id,
+            server,
+            pairs: taken,
+            g,
+            start,
+            dur: setting.t,
+            power_per_pair: setting.p,
+            deadline: d,
+        });
+    }
+    sched
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tasks::LIBRARY;
+    use crate::util::Rng;
+
+    fn gang_tasks(n: usize, l: usize, seed: u64) -> Vec<GangTask> {
+        let mut rng = Rng::new(seed);
+        (0..n)
+            .map(|i| {
+                let model = LIBRARY[rng.index(LIBRARY.len())]
+                    .model
+                    .scaled(rng.int_range(10, 50) as f64);
+                let u = rng.uniform(0.1, 0.8);
+                GangTask {
+                    task: Task {
+                        id: i,
+                        app: 0,
+                        model,
+                        arrival: 0.0,
+                        deadline: model.t_star() / u,
+                        u,
+                    },
+                    g: 1 << rng.index(usize::BITS as usize - l.leading_zeros() as usize),
+                }
+            })
+            .collect()
+    }
+
+    #[test]
+    fn gangs_meet_deadlines_and_colocate() {
+        let solver = Solver::native();
+        let iv = ScalingInterval::wide();
+        let gangs = gang_tasks(80, 8, 1);
+        let s = schedule_gang(&gangs, 8, 0.9, &solver, &iv);
+        assert_eq!(s.violations, 0);
+        assert_eq!(s.placements.len(), gangs.len());
+        for p in &s.placements {
+            assert!(p.g <= 8);
+            assert!(p.end() <= p.deadline * (1.0 + 1e-4) + 1e-6);
+        }
+    }
+
+    #[test]
+    fn energy_scales_with_gang_width() {
+        let solver = Solver::native();
+        let iv = ScalingInterval::wide();
+        let base = gang_tasks(1, 8, 2)[0];
+        let narrow = GangTask { g: 1, ..base };
+        let wide = GangTask { g: 8, ..base };
+        let s1 = schedule_gang(&[narrow], 8, 1.0, &solver, &iv);
+        let s8 = schedule_gang(&[wide], 8, 1.0, &solver, &iv);
+        assert!((s8.e_run / s1.e_run - 8.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn width_one_matches_pair_scheduling_energy() {
+        // g=1 gangs on l=1 servers reduce to the paper's base model
+        let solver = Solver::native();
+        let iv = ScalingInterval::wide();
+        let gangs: Vec<GangTask> = gang_tasks(40, 1, 3)
+            .into_iter()
+            .map(|g| GangTask { g: 1, ..g })
+            .collect();
+        let tasks: Vec<Task> = gangs.iter().map(|g| g.task).collect();
+        let prepared = prepare(&tasks, &solver, &iv, true);
+        let flat = crate::sched::schedule_offline(
+            crate::sched::OfflinePolicy::Edl,
+            &prepared,
+            1.0,
+            &solver,
+            &iv,
+        );
+        let gang = schedule_gang(&gangs, 1, 1.0, &solver, &iv);
+        let rel = (flat.e_run - gang.e_run).abs() / flat.e_run;
+        assert!(rel < 1e-9, "E_run differs: {rel}");
+    }
+
+    #[test]
+    fn pairs_never_double_booked() {
+        let solver = Solver::native();
+        let iv = ScalingInterval::wide();
+        let gangs = gang_tasks(60, 4, 4);
+        let s = schedule_gang(&gangs, 4, 0.9, &solver, &iv);
+        // rebuild per-(server, pair) busy intervals and check no overlaps
+        use std::collections::BTreeMap;
+        let mut intervals: BTreeMap<(usize, usize), Vec<(f64, f64)>> = BTreeMap::new();
+        for p in &s.placements {
+            assert_eq!(p.pairs.len(), p.g);
+            for &slot in &p.pairs {
+                intervals
+                    .entry((p.server, slot))
+                    .or_default()
+                    .push((p.start, p.end()));
+            }
+        }
+        for ((srv, slot), mut iv) in intervals {
+            iv.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+            for w in iv.windows(2) {
+                assert!(
+                    w[1].0 >= w[0].1 - 1e-9,
+                    "overlap on server {srv} pair {slot}: {w:?}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "must fit a server")]
+    fn oversized_gang_rejected() {
+        let solver = Solver::native();
+        let iv = ScalingInterval::wide();
+        let mut gangs = gang_tasks(1, 4, 5);
+        gangs[0].g = 9;
+        schedule_gang(&gangs, 4, 1.0, &solver, &iv);
+    }
+}

@@ -1,0 +1,309 @@
+//! Heterogeneous-cluster extension: several GPU types, each with its own
+//! scaling interval and power/speed scaling of the fitted task models.
+//!
+//! The paper assumes one GPU type (Sec. 3.1.2) and names heterogeneity as
+//! future work.  Here Algorithm 1 is lifted to a *type selection*: for
+//! each task, solve the DVFS optimum on every type and keep the
+//! feasible-minimum-energy (type, setting); the EDL packing then runs per
+//! type pool.
+
+use crate::dvfs::{solve_for_window, solve_opt, ScalingInterval, Setting, TaskModel, GRID_DEFAULT};
+use crate::sched::offline::{group_servers, Schedule};
+use crate::sched::prepare::{Prepared, Priority};
+use crate::tasks::Task;
+
+/// A GPU type in a heterogeneous cluster.
+#[derive(Clone, Copy, Debug)]
+pub struct GpuType {
+    pub name: &'static str,
+    pub interval: ScalingInterval,
+    /// Dynamic-power multiplier vs the measured reference GPU.
+    pub power_scale: f64,
+    /// Throughput multiplier (>1 = faster: time components shrink).
+    pub speed_scale: f64,
+    /// Pairs of this type available.
+    pub pairs: usize,
+}
+
+impl GpuType {
+    /// Project a reference-GPU task model onto this type.
+    pub fn project(&self, m: &TaskModel) -> TaskModel {
+        TaskModel {
+            p0: m.p0 * self.power_scale,
+            gamma: m.gamma * self.power_scale,
+            c: m.c * self.power_scale,
+            d: m.d / self.speed_scale,
+            t0: m.t0 / self.speed_scale,
+            delta: m.delta,
+        }
+    }
+}
+
+/// A reference two-type fleet: half "big" training GPUs (2× faster but
+/// energy-hungrier: E-ratio = 1.8/2.0 = 0.90 of reference) and half
+/// "small" efficiency GPUs (slower but cheaper per op: 0.55/0.8 ≈ 0.69)
+/// — the classic speed-vs-efficiency mix where heterogeneity pays: loose
+/// tasks ride the efficient pool, tight deadlines need the fast one.
+pub fn reference_fleet(total_pairs: usize) -> Vec<GpuType> {
+    vec![
+        GpuType {
+            name: "bigGPU",
+            interval: ScalingInterval::wide(),
+            power_scale: 1.8,
+            speed_scale: 2.0,
+            pairs: total_pairs / 2,
+        },
+        GpuType {
+            name: "smallGPU",
+            interval: ScalingInterval::wide(),
+            power_scale: 0.55,
+            speed_scale: 0.8,
+            pairs: total_pairs - total_pairs / 2,
+        },
+    ]
+}
+
+/// Algorithm-1 lifted to heterogeneous types: per task, the best feasible
+/// (type, setting).
+#[derive(Clone, Copy, Debug)]
+pub struct TypedPrepared {
+    pub prepared: Prepared,
+    pub gpu_type: usize,
+}
+
+/// Solve every task against every type; keep the min-energy feasible pick.
+pub fn prepare_hetero(tasks: &[Task], fleet: &[GpuType]) -> Vec<TypedPrepared> {
+    tasks
+        .iter()
+        .map(|task| {
+            let mut best: Option<(usize, TaskModel, Setting, Setting)> = None;
+            for (ti, ty) in fleet.iter().enumerate() {
+                let m = ty.project(&task.model);
+                let free = solve_opt(&m, f64::INFINITY, &ty.interval, GRID_DEFAULT);
+                let setting = if free.feasible && free.t <= task.window() {
+                    free
+                } else {
+                    solve_for_window(&m, task.window(), &ty.interval, GRID_DEFAULT)
+                };
+                if !setting.feasible {
+                    continue;
+                }
+                if best.as_ref().map_or(true, |(_, _, s, _)| setting.e < s.e) {
+                    best = Some((ti, m, setting, free));
+                }
+            }
+            // No type meets the deadline → fall back to the fastest
+            // projection at its minimum time; the scheduler will surface
+            // the (unavoidable) violation rather than panicking.
+            let (ti, m, setting, free) = best.unwrap_or_else(|| {
+                let (ti, _) = fleet
+                    .iter()
+                    .enumerate()
+                    .max_by(|a, b| a.1.speed_scale.partial_cmp(&b.1.speed_scale).unwrap())
+                    .expect("empty fleet");
+                let m = fleet[ti].project(&task.model);
+                let fastest = crate::dvfs::solve_exact(
+                    &m,
+                    m.t_min(&fleet[ti].interval) * (1.0 + 1e-6),
+                    &fleet[ti].interval,
+                    GRID_DEFAULT,
+                );
+                let s = if fastest.feasible {
+                    fastest
+                } else {
+                    Setting::default_for(&m)
+                };
+                (ti, m, s, s)
+            });
+            let class = if free.feasible && free.t <= task.window() {
+                Priority::EnergyPrior
+            } else {
+                Priority::DeadlinePrior
+            };
+            let projected = Task {
+                model: m,
+                ..*task
+            };
+            TypedPrepared {
+                prepared: Prepared {
+                    task: projected,
+                    setting,
+                    free: if free.feasible { free } else { setting },
+                    t_min: m.t_min(&fleet[ti].interval),
+                    class,
+                },
+                gpu_type: ti,
+            }
+        })
+        .collect()
+}
+
+/// Heterogeneous offline report.
+#[derive(Clone, Debug, Default)]
+pub struct HeteroReport {
+    pub e_run: f64,
+    pub e_idle: f64,
+    pub e_total: f64,
+    pub violations: u64,
+    /// Pairs used per type.
+    pub pairs_used: Vec<usize>,
+    /// Tasks per type.
+    pub tasks_per_type: Vec<usize>,
+}
+
+/// EDL per type pool (deadline-prior pinning + EDF + SPT within each
+/// pool), then Algorithm-3 grouping per pool.
+pub fn schedule_hetero(
+    typed: &[TypedPrepared],
+    fleet: &[GpuType],
+    pairs_per_server: usize,
+    p_idle: f64,
+    theta: f64,
+) -> HeteroReport {
+    let solver = crate::runtime::Solver::native();
+    let mut report = HeteroReport {
+        pairs_used: vec![0; fleet.len()],
+        tasks_per_type: vec![0; fleet.len()],
+        ..Default::default()
+    };
+    for (ti, ty) in fleet.iter().enumerate() {
+        let pool: Vec<Prepared> = typed
+            .iter()
+            .filter(|t| t.gpu_type == ti)
+            .map(|t| t.prepared)
+            .collect();
+        report.tasks_per_type[ti] = pool.len();
+        if pool.is_empty() {
+            continue;
+        }
+        let sched: Schedule = crate::sched::schedule_offline(
+            crate::sched::OfflinePolicy::Edl,
+            &pool,
+            theta,
+            &solver,
+            &ty.interval,
+        );
+        let cfg = crate::config::ClusterConfig {
+            total_pairs: ty.pairs.max(pairs_per_server),
+            pairs_per_server,
+            p_idle,
+            ..crate::config::ClusterConfig::default()
+        };
+        let (e_idle, _) = group_servers(&sched, &cfg);
+        report.e_run += sched.e_run;
+        report.e_idle += e_idle;
+        report.violations += sched.violations;
+        report.pairs_used[ti] = sched.pairs_used();
+    }
+    report.e_total = report.e_run + report.e_idle;
+    report
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tasks::LIBRARY;
+    use crate::util::Rng;
+
+    fn tasks(n: usize, seed: u64) -> Vec<Task> {
+        let mut rng = Rng::new(seed);
+        (0..n)
+            .map(|i| {
+                let model = LIBRARY[rng.index(LIBRARY.len())]
+                    .model
+                    .scaled(rng.int_range(10, 50) as f64);
+                let u = rng.open01().max(0.05);
+                Task {
+                    id: i,
+                    app: 0,
+                    model,
+                    arrival: 0.0,
+                    deadline: model.t_star() / u,
+                    u,
+                }
+            })
+            .collect()
+    }
+
+    #[test]
+    fn projection_scales_power_and_time() {
+        let ty = GpuType {
+            name: "x",
+            interval: ScalingInterval::wide(),
+            power_scale: 2.0,
+            speed_scale: 4.0,
+            pairs: 8,
+        };
+        let m = LIBRARY[0].model;
+        let p = ty.project(&m);
+        assert!((p.p_star() - 2.0 * m.p_star()).abs() < 1e-9);
+        assert!((p.t_star() - m.t_star() / 4.0).abs() < 1e-9);
+        assert_eq!(p.delta, m.delta);
+    }
+
+    #[test]
+    fn type_selection_prefers_lower_energy() {
+        let fleet = reference_fleet(128);
+        let ts = tasks(64, 1);
+        let typed = prepare_hetero(&ts, &fleet);
+        // smallGPU E-ratio = 0.55/0.8 ≈ 0.69 < bigGPU 1.8/2.0 = 0.90, so
+        // loose-deadline tasks pick the efficient small type; only tight
+        // ones (u near 1) need the big type
+        let mut by_type = [0usize; 2];
+        for t in &typed {
+            by_type[t.gpu_type] += 1;
+            assert!(t.prepared.setting.feasible);
+        }
+        assert!(by_type[1] > by_type[0], "{by_type:?}");
+    }
+
+    #[test]
+    fn tight_deadlines_force_fast_type() {
+        let fleet = reference_fleet(128);
+        let mut ts = tasks(32, 2);
+        // deadlines below the slow type's t_min → only the fast type fits
+        for t in &mut ts {
+            let slow = fleet[1].project(&t.model);
+            let fast = fleet[0].project(&t.model);
+            let d = (slow.t_min(&fleet[1].interval) * 0.9)
+                .max(fast.t_min(&fleet[0].interval) * 1.05);
+            t.deadline = d;
+            t.u = (t.model.t_star() / d).min(1.0);
+        }
+        let typed = prepare_hetero(&ts, &fleet);
+        for t in &typed {
+            assert_eq!(t.gpu_type, 0, "tight task must use the fast type");
+            assert!(t.prepared.setting.t <= t.prepared.task.window() * (1.0 + 1e-4));
+        }
+    }
+
+    #[test]
+    fn hetero_beats_homogeneous_slow_fleet() {
+        let mut ts = tasks(200, 3);
+        // cap utilization so the slow-only fleet stays deadline-feasible
+        for t in &mut ts {
+            if t.u > 0.6 {
+                t.u = 0.6;
+                t.deadline = t.model.t_star() / 0.6;
+            }
+        }
+        let fleet = reference_fleet(2048);
+        let typed = prepare_hetero(&ts, &fleet);
+        let rep = schedule_hetero(&typed, &fleet, 4, 37.0, 0.9);
+        assert_eq!(rep.violations, 0);
+
+        // homogeneous small-GPU-only fleet for the same tasks
+        let only_small = vec![GpuType {
+            pairs: 2048,
+            ..fleet[1]
+        }];
+        let typed_small = prepare_hetero(&ts, &only_small);
+        let rep_small = schedule_hetero(&typed_small, &only_small, 4, 37.0, 0.9);
+        assert!(
+            rep.e_total <= rep_small.e_total * (1.0 + 1e-9),
+            "hetero {} > small-only {}",
+            rep.e_total,
+            rep_small.e_total
+        );
+    }
+}

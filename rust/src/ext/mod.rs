@@ -1,0 +1,15 @@
+//! Extensions beyond the paper's evaluation — the directions its
+//! conclusion (Sec. 6) names as future work, built on the same substrates:
+//!
+//! * [`hetero`] — heterogeneous clusters: multiple GPU types with their
+//!   own scaling intervals and power/speed characteristics; Algorithm 1
+//!   extended to pick the (type, setting) pair per task.
+//! * [`gang`] — multi-GPU tasks ("a single task can occupy multiple
+//!   GPUs, ... typical of modern distributed deep learning"): gang
+//!   scheduling of g co-located pairs per task.
+//! * [`trace`] — simulation event traces and workload serialization
+//!   (JSON), for replay, debugging, and external visualization.
+
+pub mod gang;
+pub mod hetero;
+pub mod trace;

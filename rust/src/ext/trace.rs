@@ -1,0 +1,265 @@
+//! Workload serialization and schedule traces (JSON).
+//!
+//! * Workloads (offline batches or full online arrival streams) round-trip
+//!   through JSON, so a generated task set can be archived, inspected, or
+//!   replayed bit-identically across machines and backends.
+//! * Offline schedules export as placement traces (task → pair, start,
+//!   duration, DVFS setting) for external visualization (Gantt tooling).
+
+use crate::dvfs::TaskModel;
+use crate::sched::offline::Schedule;
+use crate::tasks::{OnlineWorkload, Task, TaskSet};
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+
+fn obj(entries: Vec<(&str, Json)>) -> Json {
+    Json::Obj(
+        entries
+            .into_iter()
+            .map(|(k, v)| (k.to_string(), v))
+            .collect::<BTreeMap<_, _>>(),
+    )
+}
+
+fn num(x: f64) -> Json {
+    Json::Num(x)
+}
+
+fn task_to_json(t: &Task) -> Json {
+    obj(vec![
+        ("id", num(t.id as f64)),
+        ("app", num(t.app as f64)),
+        ("arrival", num(t.arrival)),
+        ("deadline", num(t.deadline)),
+        ("u", num(t.u)),
+        (
+            "model",
+            obj(vec![
+                ("p0", num(t.model.p0)),
+                ("gamma", num(t.model.gamma)),
+                ("c", num(t.model.c)),
+                ("d", num(t.model.d)),
+                ("delta", num(t.model.delta)),
+                ("t0", num(t.model.t0)),
+            ]),
+        ),
+    ])
+}
+
+fn f(j: &Json, key: &str) -> Result<f64, String> {
+    j.get(key)
+        .and_then(Json::as_f64)
+        .ok_or_else(|| format!("missing/invalid '{key}'"))
+}
+
+fn task_from_json(j: &Json) -> Result<Task, String> {
+    let m = j.get("model").ok_or("missing 'model'")?;
+    let task = Task {
+        id: f(j, "id")? as usize,
+        app: f(j, "app")? as usize,
+        arrival: f(j, "arrival")?,
+        deadline: f(j, "deadline")?,
+        u: f(j, "u")?,
+        model: TaskModel {
+            p0: f(m, "p0")?,
+            gamma: f(m, "gamma")?,
+            c: f(m, "c")?,
+            d: f(m, "d")?,
+            delta: f(m, "delta")?,
+            t0: f(m, "t0")?,
+        },
+    };
+    task.validate()?;
+    Ok(task)
+}
+
+fn taskset_to_json(ts: &TaskSet) -> Json {
+    Json::Arr(ts.tasks.iter().map(task_to_json).collect())
+}
+
+fn taskset_from_json(j: &Json) -> Result<TaskSet, String> {
+    let arr = j.as_arr().ok_or("task set must be an array")?;
+    let tasks: Vec<Task> = arr.iter().map(task_from_json).collect::<Result<_, _>>()?;
+    let u_sum = tasks.iter().map(|t| t.u).sum();
+    Ok(TaskSet { tasks, u_sum })
+}
+
+/// Serialize a full online workload (offline batch + arrival stream +
+/// slot index) to JSON.
+pub fn workload_to_json(w: &OnlineWorkload) -> Json {
+    obj(vec![
+        ("version", num(1.0)),
+        ("offline", taskset_to_json(&w.offline)),
+        ("online", taskset_to_json(&w.online)),
+        (
+            "slots",
+            Json::Arr(
+                w.slots
+                    .iter()
+                    .flat_map(|r| [num(r.start as f64), num(r.end as f64)])
+                    .collect(),
+            ),
+        ),
+    ])
+}
+
+/// Parse a workload back; validates tasks and the slot index.
+pub fn workload_from_json(j: &Json) -> Result<OnlineWorkload, String> {
+    if f(j, "version")? as i64 != 1 {
+        return Err("unsupported workload version".into());
+    }
+    let offline = taskset_from_json(j.get("offline").ok_or("missing 'offline'")?)?;
+    let online = taskset_from_json(j.get("online").ok_or("missing 'online'")?)?;
+    let flat = j
+        .get("slots")
+        .and_then(Json::as_arr)
+        .ok_or("missing 'slots'")?;
+    if flat.len() % 2 != 0 {
+        return Err("slots must be (start, end) pairs".into());
+    }
+    let mut slots = Vec::with_capacity(flat.len() / 2);
+    for pair in flat.chunks(2) {
+        let start = pair[0].as_f64().ok_or("bad slot start")? as usize;
+        let end = pair[1].as_f64().ok_or("bad slot end")? as usize;
+        if start > end || end > online.tasks.len() {
+            return Err(format!("slot range {start}..{end} out of bounds"));
+        }
+        slots.push(start..end);
+    }
+    Ok(OnlineWorkload {
+        offline,
+        online,
+        slots,
+    })
+}
+
+/// Export an offline schedule as a placement trace (for Gantt rendering).
+pub fn schedule_to_json(s: &Schedule) -> Json {
+    let placements: Vec<Json> = s
+        .loads
+        .iter()
+        .enumerate()
+        .flat_map(|(pair, load)| {
+            load.placements.iter().map(move |p| {
+                obj(vec![
+                    ("task", num(p.task_id as f64)),
+                    ("pair", num(pair as f64)),
+                    ("start", num(p.start)),
+                    ("dur", num(p.dur)),
+                    ("power", num(p.power)),
+                    ("deadline", num(p.deadline)),
+                ])
+            })
+        })
+        .collect();
+    obj(vec![
+        ("version", num(1.0)),
+        ("pairs_used", num(s.pairs_used() as f64)),
+        ("e_run", num(s.e_run)),
+        ("violations", num(s.violations as f64)),
+        ("placements", Json::Arr(placements)),
+    ])
+}
+
+/// Write a workload to a file.
+pub fn save_workload(w: &OnlineWorkload, path: &str) -> Result<(), String> {
+    std::fs::write(path, workload_to_json(w).render())
+        .map_err(|e| format!("writing {path}: {e}"))
+}
+
+/// Load a workload from a file.
+pub fn load_workload(path: &str) -> Result<OnlineWorkload, String> {
+    let text = std::fs::read_to_string(path).map_err(|e| format!("reading {path}: {e}"))?;
+    workload_from_json(&Json::parse(&text)?)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{GenConfig, SimConfig};
+    use crate::runtime::Solver;
+    use crate::sim::online::{run_online_workload, OnlinePolicyKind};
+    use crate::tasks::generate_online;
+    use crate::util::Rng;
+
+    fn small_workload(seed: u64) -> OnlineWorkload {
+        let cfg = GenConfig {
+            base_pairs: 16,
+            horizon: 60,
+            ..GenConfig::default()
+        };
+        generate_online(&cfg, &mut Rng::new(seed))
+    }
+
+    #[test]
+    fn workload_roundtrip_identical() {
+        let w = small_workload(1);
+        let j = workload_to_json(&w);
+        let w2 = workload_from_json(&Json::parse(&j.render()).unwrap()).unwrap();
+        assert_eq!(w.total_tasks(), w2.total_tasks());
+        assert_eq!(w.slots, w2.slots);
+        for (a, b) in w.online.tasks.iter().zip(&w2.online.tasks) {
+            assert_eq!(a.id, b.id);
+            assert_eq!(a.arrival, b.arrival);
+            assert_eq!(a.deadline, b.deadline);
+            assert_eq!(a.model, b.model);
+        }
+    }
+
+    #[test]
+    fn replay_preserves_simulation_results() {
+        let w = small_workload(2);
+        let j = workload_to_json(&w).render();
+        let w2 = workload_from_json(&Json::parse(&j).unwrap()).unwrap();
+        let mut cfg = SimConfig::default();
+        cfg.gen.horizon = 60;
+        cfg.cluster.total_pairs = 64;
+        cfg.theta = 0.9;
+        let solver = Solver::native();
+        let a = run_online_workload(OnlinePolicyKind::Edl, &w, true, &cfg, &solver);
+        let b = run_online_workload(OnlinePolicyKind::Edl, &w2, true, &cfg, &solver);
+        assert_eq!(a.e_total(), b.e_total());
+        assert_eq!(a.violations, b.violations);
+        assert_eq!(a.servers_used, b.servers_used);
+    }
+
+    #[test]
+    fn file_roundtrip() {
+        let w = small_workload(3);
+        let path = std::env::temp_dir().join(format!("wl_{}.json", std::process::id()));
+        save_workload(&w, path.to_str().unwrap()).unwrap();
+        let w2 = load_workload(path.to_str().unwrap()).unwrap();
+        assert_eq!(w.total_tasks(), w2.total_tasks());
+        let _ = std::fs::remove_file(path);
+    }
+
+    #[test]
+    fn corrupted_workload_rejected() {
+        assert!(workload_from_json(&Json::parse("{}").unwrap()).is_err());
+        let w = small_workload(4);
+        let mut txt = workload_to_json(&w).render();
+        // break a slot range
+        txt = txt.replace("\"version\": 1", "\"version\": 2");
+        assert!(workload_from_json(&Json::parse(&txt).unwrap()).is_err());
+    }
+
+    #[test]
+    fn schedule_trace_exports_all_placements() {
+        let solver = Solver::native();
+        let iv = crate::dvfs::ScalingInterval::wide();
+        let w = small_workload(5);
+        let prepared = crate::sched::prepare(&w.offline.tasks, &solver, &iv, true);
+        let s = crate::sched::schedule_offline(
+            crate::sched::OfflinePolicy::Edl,
+            &prepared,
+            0.9,
+            &solver,
+            &iv,
+        );
+        let j = schedule_to_json(&s);
+        let n = j.get("placements").unwrap().as_arr().unwrap().len();
+        assert_eq!(n, w.offline.len());
+        // parseable round trip
+        assert!(Json::parse(&j.render()).is_ok());
+    }
+}

@@ -1,0 +1,35 @@
+//! `gpu-dvfs-sched` — reproduction of *"Energy-aware Task Scheduling with
+//! Deadline Constraint in DVFS-enabled Heterogeneous Clusters"* (TPDS 2021).
+//!
+//! Three-layer architecture (see `DESIGN.md`):
+//!
+//! * **L3 (this crate)** — the paper's system: DVFS-aware schedulers
+//!   ([`sched`]), the CPU-GPU cluster substrate ([`cluster`]), discrete-time
+//!   offline/online simulation engines ([`sim`]), the task-set generator
+//!   calibrated to the paper's measured parameter ranges ([`tasks`]), and
+//!   the experiment harness reproducing every figure/table ([`experiments`]).
+//! * **L2/L1 (python, build-time only)** — the batched DVFS optimizer as a
+//!   JAX graph over Pallas kernels, AOT-lowered to HLO text in
+//!   `artifacts/`.  The [`runtime`] module loads and executes those
+//!   artifacts via the PJRT CPU client, so the per-batch voltage/frequency
+//!   solve (Algorithm 1 / Algorithm 5 line 2) runs compiled XLA code with
+//!   no python anywhere near the request path.
+//!
+//! The [`dvfs`] module implements the same analytical model natively in
+//! rust; the runtime cross-validates the two on every load.
+
+pub mod cli;
+pub mod cluster;
+pub mod config;
+pub mod dvfs;
+pub mod experiments;
+pub mod ext;
+pub mod runtime;
+pub mod sched;
+pub mod sim;
+pub mod tasks;
+pub mod util;
+
+pub use config::SimConfig;
+pub use dvfs::{ScalingInterval, Setting, TaskModel};
+pub use tasks::{Task, TaskSet};

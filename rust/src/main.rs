@@ -1,0 +1,342 @@
+//! `repro` — the launcher for the DVFS-scheduling reproduction.
+//!
+//! Commands:
+//!   list                         list reproducible tables/figures
+//!   experiment <id|all> [...]    regenerate a paper table/figure
+//!   solve [...]                  single-task DVFS optimization
+//!   offline [...]                one offline scheduling run
+//!   online [...]                 one online (1440-slot) simulation
+//!
+//! Common flags: --config FILE --reps N --seed S --theta X --l N
+//!               --interval wide|narrow --backend native|pjrt
+//!               --csv DIR --quick
+//!
+//! Defaults reproduce the paper's setup (Sec. 5.1); the PJRT backend
+//! (`--backend pjrt`) runs every Algorithm-1 batch through the
+//! AOT-compiled XLA artifacts in `artifacts/`.
+
+use dvfs_sched::cli::{apply_overrides, Args};
+use dvfs_sched::config::SimConfig;
+use dvfs_sched::experiments::{self, ExpCtx};
+use dvfs_sched::runtime::Solver;
+use dvfs_sched::sched::OfflinePolicy;
+use dvfs_sched::sim::offline::run_offline_reps;
+use dvfs_sched::sim::online::{run_online_reps, OnlinePolicyKind};
+use dvfs_sched::tasks::LIBRARY;
+use dvfs_sched::util::table::{f2, f3, pct, Table};
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    if argv.is_empty() {
+        print_help();
+        return;
+    }
+    let args = match Args::parse(&argv) {
+        Ok(a) => a,
+        Err(e) => die(&e),
+    };
+    let result = match args.command.as_str() {
+        "list" => cmd_list(&args),
+        "experiment" => cmd_experiment(&args),
+        "solve" => cmd_solve(&args),
+        "offline" => cmd_offline(&args),
+        "online" => cmd_online(&args),
+        "workload" => cmd_workload(&args),
+        "help" | "--help" | "-h" => {
+            print_help();
+            Ok(())
+        }
+        other => Err(format!("unknown command '{other}' (try 'help')")),
+    };
+    if let Err(e) = result {
+        die(&e);
+    }
+}
+
+fn die(msg: &str) -> ! {
+    eprintln!("error: {msg}");
+    std::process::exit(2);
+}
+
+fn print_help() {
+    println!(
+        "repro — Energy-aware Task Scheduling with Deadline Constraint in \
+         DVFS-enabled Heterogeneous Clusters (TPDS'21 reproduction)\n\n\
+         usage: repro <command> [flags]\n\n\
+         commands:\n  \
+         list                        list reproducible tables/figures\n  \
+         experiment <id|all>         regenerate a paper table/figure\n  \
+         solve --app NAME            single-task DVFS optimization\n  \
+         offline --u X [--policy P]  one offline scheduling cell\n  \
+         online  [--policy edl|bin]  one online simulation cell\n  \
+         workload export|replay      save / replay a workload as JSON\n\n\
+         common flags: --config FILE --reps N --seed S --theta X --l N\n               \
+         --interval wide|narrow --backend native|pjrt --csv DIR --quick"
+    );
+}
+
+fn build_ctx(args: &Args) -> Result<ExpCtx, String> {
+    let mut cfg = SimConfig::default();
+    apply_overrides(args, &mut cfg)?;
+    let mut ctx = ExpCtx::new(cfg);
+    if args.flag("quick") {
+        ctx = ctx.quick();
+    }
+    ctx.out_dir = args.opt_str("csv");
+    Ok(ctx)
+}
+
+fn cmd_list(args: &Args) -> Result<(), String> {
+    args.finish()?;
+    let mut t = Table::new("reproducible experiments", &["id", "paper artifact"]);
+    for e in experiments::REGISTRY {
+        t.row(vec![e.id.into(), e.paper_ref.into()]);
+    }
+    print!("{}", t.render());
+    Ok(())
+}
+
+fn cmd_experiment(args: &Args) -> Result<(), String> {
+    let id = args
+        .positional
+        .first()
+        .ok_or("usage: repro experiment <id|all>")?
+        .clone();
+    let ctx = build_ctx(args)?;
+    args.finish()?;
+    let to_run: Vec<&experiments::Experiment> = if id == "all" {
+        experiments::REGISTRY.iter().collect()
+    } else {
+        vec![experiments::find(&id)
+            .ok_or_else(|| format!("unknown experiment '{id}' (see 'repro list')"))?]
+    };
+    println!(
+        "backend: {}   reps: {}   seed: {}",
+        ctx.solver.backend_name(),
+        ctx.reps(),
+        ctx.cfg.seed
+    );
+    for e in to_run {
+        println!("\n==== {} — {} ====", e.id, e.paper_ref);
+        let started = std::time::Instant::now();
+        for table in (e.run)(&ctx) {
+            print!("{}", table.render());
+        }
+        println!("[{} done in {:?}]", e.id, started.elapsed());
+    }
+    Ok(())
+}
+
+fn cmd_solve(args: &Args) -> Result<(), String> {
+    let mut cfg = SimConfig::default();
+    apply_overrides(args, &mut cfg)?;
+    let app_name = args.opt_str("app").unwrap_or_else(|| "matrixMul".into());
+    let scale = args.opt_f64("scale")?.unwrap_or(1.0);
+    let deadline = args.opt_f64("deadline")?;
+    args.finish()?;
+
+    let app = LIBRARY
+        .iter()
+        .find(|a| a.name == app_name)
+        .ok_or_else(|| {
+            format!(
+                "unknown app '{app_name}'; available: {}",
+                LIBRARY.iter().map(|a| a.name).collect::<Vec<_>>().join(", ")
+            )
+        })?;
+    let model = app.model.scaled(scale);
+    let solver = Solver::from_config(&cfg);
+    let free = solver.solve_opt(&model, f64::INFINITY, &cfg.interval);
+    let mut t = Table::new(
+        format!("solve {app_name} (scale {scale}, interval {:?})", cfg.interval),
+        &["case", "V", "fc", "fm", "t", "P", "E", "saving"],
+    );
+    t.row(vec![
+        "default".into(),
+        f3(1.0),
+        f3(1.0),
+        f3(1.0),
+        f2(model.t_star()),
+        f2(model.p_star()),
+        f2(model.e_star()),
+        pct(0.0),
+    ]);
+    t.row(vec![
+        "optimal".into(),
+        f3(free.v),
+        f3(free.fc),
+        f3(free.fm),
+        f2(free.t),
+        f2(free.p),
+        f2(free.e),
+        pct(1.0 - free.e / model.e_star()),
+    ]);
+    if let Some(d) = deadline {
+        let capped = solver.solve_window(&model, d, &cfg.interval);
+        if capped.feasible {
+            t.row(vec![
+                format!("deadline {d}"),
+                f3(capped.v),
+                f3(capped.fc),
+                f3(capped.fm),
+                f2(capped.t),
+                f2(capped.p),
+                f2(capped.e),
+                pct(1.0 - capped.e / model.e_star()),
+            ]);
+        } else {
+            println!("deadline {d} is infeasible (t_min = {:.2})", model.t_min(&cfg.interval));
+        }
+    }
+    print!("{}", t.render());
+    println!("backend: {}", solver.backend_name());
+    Ok(())
+}
+
+fn parse_offline_policy(s: &str) -> Result<OfflinePolicy, String> {
+    match s.to_ascii_lowercase().as_str() {
+        "edl" => Ok(OfflinePolicy::Edl),
+        "edf-bf" => Ok(OfflinePolicy::EdfBf),
+        "edf-wf" => Ok(OfflinePolicy::EdfWf),
+        "lpt-ff" => Ok(OfflinePolicy::LptFf),
+        other => Err(format!("unknown policy '{other}' (edl|edf-bf|edf-wf|lpt-ff)")),
+    }
+}
+
+fn cmd_offline(args: &Args) -> Result<(), String> {
+    let mut cfg = SimConfig::default();
+    apply_overrides(args, &mut cfg)?;
+    let u = args.opt_f64("u")?.unwrap_or(1.0);
+    let policy = parse_offline_policy(&args.opt_str("policy").unwrap_or("edl".into()))?;
+    let dvfs = !args.flag("no-dvfs");
+    args.finish()?;
+
+    let solver = Solver::from_config(&cfg);
+    let agg = run_offline_reps(policy, u, dvfs, &cfg, &solver);
+    let mut t = Table::new(
+        format!(
+            "offline {} U_J={u} l={} dvfs={dvfs} ({} reps, backend {})",
+            policy.name(),
+            cfg.cluster.pairs_per_server,
+            cfg.reps,
+            solver.backend_name()
+        ),
+        &["metric", "mean", "ci95"],
+    );
+    let rows: [(&str, &dvfs_sched::util::Summary); 6] = [
+        ("E_run", &agg.e_run),
+        ("E_idle", &agg.e_idle),
+        ("E_total", &agg.e_total),
+        ("baseline E", &agg.baseline_e),
+        ("pairs used", &agg.pairs_used),
+        ("servers used", &agg.servers_used),
+    ];
+    for (name, s) in rows {
+        t.row(vec![name.into(), f2(s.mean()), f2(s.ci95())]);
+    }
+    t.row(vec!["saving".into(), pct(agg.saving.mean()), pct(agg.saving.ci95())]);
+    t.row(vec!["violations".into(), agg.violations.to_string(), "-".into()]);
+    print!("{}", t.render());
+    Ok(())
+}
+
+/// `workload export --out FILE` / `workload replay --in FILE [--policy ..]`
+fn cmd_workload(args: &Args) -> Result<(), String> {
+    let mut cfg = SimConfig::default();
+    apply_overrides(args, &mut cfg)?;
+    let sub = args
+        .positional
+        .first()
+        .ok_or("usage: repro workload <export|replay> ...")?
+        .clone();
+    match sub.as_str() {
+        "export" => {
+            let out = args.opt_str("out").unwrap_or("workload.json".into());
+            args.finish()?;
+            let mut rng = dvfs_sched::util::Rng::new(cfg.seed);
+            let w = dvfs_sched::tasks::generate_online(&cfg.gen, &mut rng);
+            dvfs_sched::ext::trace::save_workload(&w, &out)?;
+            println!(
+                "wrote {} tasks ({} offline + {} online) to {out}",
+                w.total_tasks(),
+                w.offline.len(),
+                w.online.len()
+            );
+            Ok(())
+        }
+        "replay" => {
+            let input = args.opt_str("in").ok_or("--in FILE required")?;
+            let dvfs = !args.flag("no-dvfs");
+            args.finish()?;
+            let w = dvfs_sched::ext::trace::load_workload(&input)?;
+            let solver = Solver::from_config(&cfg);
+            let o = dvfs_sched::sim::online::run_online_workload(
+                OnlinePolicyKind::Edl,
+                &w,
+                dvfs,
+                &cfg,
+                &solver,
+            );
+            println!(
+                "replayed {} tasks: E_total={:.4e} (run {:.4e} / idle {:.4e} / overhead {:.4e}), \
+                 {} servers, {} violations",
+                o.n_tasks,
+                o.e_total(),
+                o.e_run,
+                o.e_idle,
+                o.e_overhead,
+                o.servers_used,
+                o.violations
+            );
+            Ok(())
+        }
+        other => Err(format!("unknown workload subcommand '{other}'")),
+    }
+}
+
+fn cmd_online(args: &Args) -> Result<(), String> {
+    let mut cfg = SimConfig::default();
+    apply_overrides(args, &mut cfg)?;
+    let kind = match args
+        .opt_str("policy")
+        .unwrap_or("edl".into())
+        .to_ascii_lowercase()
+        .as_str()
+    {
+        "edl" => OnlinePolicyKind::Edl,
+        "bin" => OnlinePolicyKind::Bin,
+        other => return Err(format!("unknown policy '{other}' (edl|bin)")),
+    };
+    let dvfs = !args.flag("no-dvfs");
+    args.finish()?;
+
+    let solver = Solver::from_config(&cfg);
+    let agg = run_online_reps(kind, dvfs, &cfg, &solver);
+    let mut t = Table::new(
+        format!(
+            "online {} l={} θ={} dvfs={dvfs} ({} reps, backend {})",
+            kind.name(),
+            cfg.cluster.pairs_per_server,
+            cfg.theta,
+            cfg.reps,
+            solver.backend_name()
+        ),
+        &["metric", "mean", "ci95"],
+    );
+    let rows: [(&str, &dvfs_sched::util::Summary); 7] = [
+        ("E_run", &agg.e_run),
+        ("E_idle", &agg.e_idle),
+        ("E_overhead", &agg.e_overhead),
+        ("E_total", &agg.e_total),
+        ("baseline E", &agg.baseline_e),
+        ("servers used", &agg.servers_used),
+        ("turn-ons ω", &agg.turn_ons),
+    ];
+    for (name, s) in rows {
+        t.row(vec![name.into(), f2(s.mean()), f2(s.ci95())]);
+    }
+    t.row(vec!["violations".into(), agg.violations.to_string(), "-".into()]);
+    t.row(vec!["readjusted".into(), agg.readjusted.to_string(), "-".into()]);
+    print!("{}", t.render());
+    Ok(())
+}

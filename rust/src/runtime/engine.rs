@@ -1,0 +1,188 @@
+//! PJRT execution engine: loads the AOT HLO-text artifacts produced by
+//! `python/compile/aot.py` and runs the batched DVFS solves on the XLA CPU
+//! client.  This is the production hot path — python is never involved.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use super::layout as l;
+use crate::dvfs::{ScalingInterval, Setting, TaskModel};
+use crate::util::json::Json;
+
+/// A single solve request: task model + time limit/target.
+#[derive(Clone, Copy, Debug)]
+pub struct SolveReq {
+    pub model: TaskModel,
+    /// `opt`: hard cap (f64::INFINITY = none). `readjust`: exact target.
+    pub tlim: f64,
+}
+
+/// Which compiled graph to run.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Graph {
+    /// Free optimum with time cap.
+    Opt,
+    /// Exact-target-time solve.
+    Readjust,
+    /// Fused Algorithm-1 (best of both per row).
+    Fused,
+}
+
+pub struct DvfsEngine {
+    #[allow(dead_code)]
+    client: xla::PjRtClient,
+    opt: xla::PjRtLoadedExecutable,
+    readjust: xla::PjRtLoadedExecutable,
+    fused: xla::PjRtLoadedExecutable,
+    /// Cumulative PJRT executions (for perf accounting).
+    pub executions: std::cell::Cell<u64>,
+}
+
+impl DvfsEngine {
+    /// Load + compile all artifacts from `dir`, validating `meta.json`
+    /// against the compiled-in layout.
+    pub fn load(dir: &str) -> Result<DvfsEngine> {
+        let dir = Path::new(dir);
+        let meta_path = dir.join("meta.json");
+        let meta_text = std::fs::read_to_string(&meta_path)
+            .with_context(|| format!("reading {meta_path:?} — run `make artifacts` first"))?;
+        let meta = Json::parse(&meta_text)
+            .map_err(|e| anyhow::anyhow!("parsing {meta_path:?}: {e}"))?;
+        let get = |k: &str| -> Result<f64> {
+            meta.get(k)
+                .and_then(Json::as_f64)
+                .with_context(|| format!("meta.json missing '{k}'"))
+        };
+        if get("batch_n")? as usize != l::BATCH_N
+            || get("nparam")? as usize != l::NPARAM
+            || get("nbound")? as usize != l::NBOUND
+            || get("nout")? as usize != l::NOUT
+        {
+            bail!(
+                "artifact layout mismatch: rebuild artifacts (meta {meta_path:?} \
+                 disagrees with rust/src/runtime/layout.rs)"
+            );
+        }
+
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        let compile = |name: &str| -> Result<xla::PjRtLoadedExecutable> {
+            let path: PathBuf = dir.join(format!("{name}.hlo.txt"));
+            let proto = xla::HloModuleProto::from_text_file(&path)
+                .with_context(|| format!("loading HLO text {path:?}"))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            client
+                .compile(&comp)
+                .with_context(|| format!("compiling {name}"))
+        };
+        Ok(DvfsEngine {
+            opt: compile("dvfs_opt")?,
+            readjust: compile("dvfs_readjust")?,
+            fused: compile("dvfs_fused")?,
+            client,
+            executions: std::cell::Cell::new(0),
+        })
+    }
+
+    fn exe(&self, graph: Graph) -> &xla::PjRtLoadedExecutable {
+        match graph {
+            Graph::Opt => &self.opt,
+            Graph::Readjust => &self.readjust,
+            Graph::Fused => &self.fused,
+        }
+    }
+
+    /// Solve a batch of up to any size (internally chunked/padded to
+    /// `BATCH_N`).  Returns one [`Setting`] per request, in order.
+    pub fn solve_batch(
+        &self,
+        graph: Graph,
+        reqs: &[SolveReq],
+        iv: &ScalingInterval,
+    ) -> Result<Vec<Setting>> {
+        let bounds = iv.to_bounds();
+        let mut out = Vec::with_capacity(reqs.len());
+        for chunk in reqs.chunks(l::BATCH_N) {
+            let rows = self.run_chunk(graph, chunk, &bounds)?;
+            out.extend(rows);
+        }
+        Ok(out)
+    }
+
+    fn run_chunk(
+        &self,
+        graph: Graph,
+        chunk: &[SolveReq],
+        bounds: &[f32; l::NBOUND],
+    ) -> Result<Vec<Setting>> {
+        debug_assert!(chunk.len() <= l::BATCH_N);
+        let mut params = vec![0.0f32; l::BATCH_N * l::NPARAM];
+        for (i, r) in chunk.iter().enumerate() {
+            let row = &mut params[i * l::NPARAM..(i + 1) * l::NPARAM];
+            row[l::P_P0] = r.model.p0 as f32;
+            row[l::P_GAMMA] = r.model.gamma as f32;
+            row[l::P_C] = r.model.c as f32;
+            row[l::P_D] = r.model.d as f32;
+            row[l::P_DELTA] = r.model.delta as f32;
+            row[l::P_T0] = r.model.t0 as f32;
+            row[l::P_TLIM] = if r.tlim.is_finite() {
+                r.tlim as f32
+            } else {
+                l::TLIM_INF
+            };
+        }
+        // pad rows: replicate a benign well-formed row so kernel math stays
+        // finite (outputs of pad rows are discarded)
+        for i in chunk.len()..l::BATCH_N {
+            let row = &mut params[i * l::NPARAM..(i + 1) * l::NPARAM];
+            row[l::P_P0] = 1.0;
+            row[l::P_GAMMA] = 1.0;
+            row[l::P_C] = 1.0;
+            row[l::P_D] = 1.0;
+            row[l::P_DELTA] = 0.5;
+            row[l::P_T0] = 1.0;
+            row[l::P_TLIM] = l::TLIM_INF;
+        }
+
+        let p_lit = xla::Literal::vec1(&params)
+            .reshape(&[l::BATCH_N as i64, l::NPARAM as i64])
+            .context("reshaping params literal")?;
+        let b_lit = xla::Literal::vec1(&bounds[..]);
+
+        let result = self
+            .exe(graph)
+            .execute::<xla::Literal>(&[p_lit, b_lit])
+            .context("PJRT execute")?;
+        self.executions.set(self.executions.get() + 1);
+        let lit = result[0][0]
+            .to_literal_sync()
+            .context("fetching result literal")?;
+        // aot.py lowers with return_tuple=True → unwrap the 1-tuple
+        let lit = lit.to_tuple1().context("unwrapping result tuple")?;
+        let data: Vec<f32> = lit.to_vec().context("reading result data")?;
+        if data.len() != l::BATCH_N * l::NOUT {
+            bail!(
+                "result shape mismatch: got {} floats, want {}",
+                data.len(),
+                l::BATCH_N * l::NOUT
+            );
+        }
+
+        Ok(chunk
+            .iter()
+            .enumerate()
+            .map(|(i, _)| {
+                let row = &data[i * l::NOUT..(i + 1) * l::NOUT];
+                Setting {
+                    v: row[l::O_V] as f64,
+                    fc: row[l::O_FC] as f64,
+                    fm: row[l::O_FM] as f64,
+                    t: row[l::O_T] as f64,
+                    p: row[l::O_P] as f64,
+                    e: row[l::O_E] as f64,
+                    feasible: row[l::O_FEAS] > 0.5,
+                }
+            })
+            .collect())
+    }
+}

@@ -1,0 +1,85 @@
+//! Tensor layout shared with the L2 jax model — MUST mirror
+//! `python/compile/layout.py` (a pytest and a cargo test assert both sides).
+
+/// Tasks per solver call; partial batches are padded.
+pub const BATCH_N: usize = 256;
+/// Search-grid resolution inside the kernels.
+pub const GRID_G: usize = 64;
+
+/// params[:, k] column indices.
+pub const P_P0: usize = 0;
+pub const P_GAMMA: usize = 1;
+pub const P_C: usize = 2;
+pub const P_D: usize = 3;
+pub const P_DELTA: usize = 4;
+pub const P_T0: usize = 5;
+pub const P_TLIM: usize = 6;
+pub const NPARAM: usize = 8;
+
+/// bounds[k] indices.
+pub const B_VMIN: usize = 0;
+pub const B_VMAX: usize = 1;
+pub const B_FCMIN: usize = 2;
+pub const B_FMMIN: usize = 3;
+pub const B_FMMAX: usize = 4;
+pub const NBOUND: usize = 8;
+
+/// out[:, k] column indices.
+pub const O_V: usize = 0;
+pub const O_FC: usize = 1;
+pub const O_FM: usize = 2;
+pub const O_T: usize = 3;
+pub const O_P: usize = 4;
+pub const O_E: usize = 5;
+pub const O_FEAS: usize = 6;
+pub const NOUT: usize = 8;
+
+/// "No deadline cap" sentinel for `P_TLIM`.
+pub const TLIM_INF: f32 = 1e30;
+
+#[cfg(test)]
+mod tests {
+    /// Parse python/compile/layout.py and compare every constant.
+    #[test]
+    fn matches_python_layout() {
+        let src = std::fs::read_to_string(concat!(
+            env!("CARGO_MANIFEST_DIR"),
+            "/python/compile/layout.py"
+        ))
+        .expect("python layout file");
+        let py = |name: &str| -> f64 {
+            src.lines()
+                .find_map(|l| {
+                    let l = l.trim();
+                    l.strip_prefix(&format!("{name} = "))
+                        .map(|v| v.split('#').next().unwrap().trim().parse::<f64>().unwrap())
+                })
+                .unwrap_or_else(|| panic!("{name} missing in layout.py"))
+        };
+        assert_eq!(py("BATCH_N") as usize, super::BATCH_N);
+        assert_eq!(py("GRID_G") as usize, super::GRID_G);
+        assert_eq!(py("NPARAM") as usize, super::NPARAM);
+        assert_eq!(py("NBOUND") as usize, super::NBOUND);
+        assert_eq!(py("NOUT") as usize, super::NOUT);
+        assert_eq!(py("P_P0") as usize, super::P_P0);
+        assert_eq!(py("P_GAMMA") as usize, super::P_GAMMA);
+        assert_eq!(py("P_C") as usize, super::P_C);
+        assert_eq!(py("P_D") as usize, super::P_D);
+        assert_eq!(py("P_DELTA") as usize, super::P_DELTA);
+        assert_eq!(py("P_T0") as usize, super::P_T0);
+        assert_eq!(py("P_TLIM") as usize, super::P_TLIM);
+        assert_eq!(py("B_VMIN") as usize, super::B_VMIN);
+        assert_eq!(py("B_VMAX") as usize, super::B_VMAX);
+        assert_eq!(py("B_FCMIN") as usize, super::B_FCMIN);
+        assert_eq!(py("B_FMMIN") as usize, super::B_FMMIN);
+        assert_eq!(py("B_FMMAX") as usize, super::B_FMMAX);
+        assert_eq!(py("O_V") as usize, super::O_V);
+        assert_eq!(py("O_FC") as usize, super::O_FC);
+        assert_eq!(py("O_FM") as usize, super::O_FM);
+        assert_eq!(py("O_T") as usize, super::O_T);
+        assert_eq!(py("O_P") as usize, super::O_P);
+        assert_eq!(py("O_E") as usize, super::O_E);
+        assert_eq!(py("O_FEAS") as usize, super::O_FEAS);
+        assert_eq!(py("TLIM_INF") as f32, super::TLIM_INF);
+    }
+}

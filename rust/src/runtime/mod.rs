@@ -1,0 +1,143 @@
+//! Runtime layer: the DVFS solver abstraction the schedulers call, backed
+//! either by the AOT-compiled PJRT artifacts (production) or the native
+//! analytical solver (parallel Monte-Carlo / property tests).
+//!
+//! The PJRT client types are not `Send`, so [`Solver::Pjrt`] lives on the
+//! driving thread; experiment fan-out across threads uses
+//! [`Solver::native`] per worker, which the cross-validation tests pin to
+//! the PJRT numerics.
+
+pub mod engine;
+pub mod layout;
+
+use crate::config::Backend;
+use crate::dvfs::{self, ScalingInterval, Setting, TaskModel};
+pub use engine::{DvfsEngine, Graph, SolveReq};
+
+/// The solver the schedulers program against.
+pub enum Solver {
+    Native { grid: usize },
+    Pjrt(DvfsEngine),
+}
+
+impl Solver {
+    pub fn native() -> Solver {
+        Solver::Native {
+            grid: dvfs::GRID_DEFAULT,
+        }
+    }
+
+    /// Load the PJRT engine from an artifacts directory.
+    pub fn pjrt(artifacts_dir: &str) -> anyhow::Result<Solver> {
+        Ok(Solver::Pjrt(DvfsEngine::load(artifacts_dir)?))
+    }
+
+    /// Build from config, falling back to native (with a warning on
+    /// stderr) if artifacts are missing.
+    pub fn from_config(cfg: &crate::config::SimConfig) -> Solver {
+        match cfg.backend {
+            Backend::Native => Solver::native(),
+            Backend::Pjrt => match Solver::pjrt(&cfg.artifacts_dir) {
+                Ok(s) => s,
+                Err(e) => {
+                    eprintln!(
+                        "warning: PJRT backend unavailable ({e:#}); falling back to native"
+                    );
+                    Solver::native()
+                }
+            },
+        }
+    }
+
+    pub fn backend_name(&self) -> &'static str {
+        match self {
+            Solver::Native { .. } => "native",
+            Solver::Pjrt(_) => "pjrt",
+        }
+    }
+
+    /// Batched free-optimum solve with per-task time caps (Algorithm 1).
+    pub fn solve_opt_batch(&self, reqs: &[SolveReq], iv: &ScalingInterval) -> Vec<Setting> {
+        match self {
+            Solver::Native { grid } => {
+                // amortize the task-independent V-grid across the batch
+                let vg = dvfs::VGrid::new(iv, *grid);
+                reqs.iter()
+                    .map(|r| dvfs::solve_opt_on_grid(&r.model, r.tlim, iv, &vg))
+                    .collect()
+            }
+            Solver::Pjrt(e) => e
+                .solve_batch(Graph::Opt, reqs, iv)
+                .expect("PJRT opt solve failed"),
+        }
+    }
+
+    /// Batched exact-target-time solve (θ-readjustment).
+    pub fn solve_exact_batch(&self, reqs: &[SolveReq], iv: &ScalingInterval) -> Vec<Setting> {
+        match self {
+            Solver::Native { grid } => reqs
+                .iter()
+                .map(|r| dvfs::solve_exact(&r.model, r.tlim, iv, *grid))
+                .collect(),
+            Solver::Pjrt(e) => e
+                .solve_batch(Graph::Readjust, reqs, iv)
+                .expect("PJRT readjust solve failed"),
+        }
+    }
+
+    /// Batched Algorithm-1 composite (best of opt/exact per row).
+    pub fn solve_window_batch(&self, reqs: &[SolveReq], iv: &ScalingInterval) -> Vec<Setting> {
+        match self {
+            Solver::Native { grid } => reqs
+                .iter()
+                .map(|r| dvfs::solve_for_window(&r.model, r.tlim, iv, *grid))
+                .collect(),
+            Solver::Pjrt(e) => e
+                .solve_batch(Graph::Fused, reqs, iv)
+                .expect("PJRT fused solve failed"),
+        }
+    }
+
+    /// Single-task convenience wrappers.
+    pub fn solve_opt(&self, m: &TaskModel, tlim: f64, iv: &ScalingInterval) -> Setting {
+        self.solve_opt_batch(&[SolveReq { model: *m, tlim }], iv)[0]
+    }
+
+    pub fn solve_exact(&self, m: &TaskModel, target: f64, iv: &ScalingInterval) -> Setting {
+        self.solve_exact_batch(&[SolveReq { model: *m, tlim: target }], iv)[0]
+    }
+
+    pub fn solve_window(&self, m: &TaskModel, window: f64, iv: &ScalingInterval) -> Setting {
+        self.solve_window_batch(&[SolveReq { model: *m, tlim: window }], iv)[0]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn native_solver_batches() {
+        let s = Solver::native();
+        let m = TaskModel {
+            p0: 57.0,
+            gamma: 28.5,
+            c: 104.5,
+            d: 5.0,
+            delta: 0.5,
+            t0: 0.5,
+        };
+        let reqs: Vec<SolveReq> = (0..10)
+            .map(|i| SolveReq {
+                model: TaskModel {
+                    delta: i as f64 / 10.0,
+                    ..m
+                },
+                tlim: f64::INFINITY,
+            })
+            .collect();
+        let out = s.solve_opt_batch(&reqs, &ScalingInterval::wide());
+        assert_eq!(out.len(), 10);
+        assert!(out.iter().all(|o| o.feasible));
+    }
+}

@@ -1,0 +1,16 @@
+//! Scheduling algorithms — the paper's core contribution.
+//!
+//! * [`prepare`] — Algorithm 1: per-task DVFS configuration + priority
+//!   classification, batched through the solver backend.
+//! * [`offline`] — Algorithm 2 (EDL θ-readjustment), Algorithm 3 (server
+//!   grouping), and the EDF-BF / EDF-WF / LPT-FF comparison heuristics.
+//! * [`online`] — Algorithms 4-5 (online EDL + DRS) and Algorithm 6
+//!   (bin-packing first-fit).
+
+pub mod offline;
+pub mod online;
+pub mod prepare;
+
+pub use offline::{group_servers, report, schedule_offline, OfflinePolicy, OfflineReport};
+pub use online::{BinPacking, EdlOnline, OnlinePolicy, SchedCtx};
+pub use prepare::{count_deadline_prior, prepare, Prepared, Priority};

@@ -1,0 +1,439 @@
+//! Offline schedulers (paper Sec. 4.2.1 + Sec. 5.3): the EDL
+//! θ-readjustment algorithm (Algorithm 2), the comparison heuristics
+//! EDF-BF / EDF-WF / LPT-FF, and the server-grouping step (Algorithm 3).
+//!
+//! All tasks arrive at T = 0.  A schedule is a set of pair loads: each
+//! CPU-GPU pair runs its queue back-to-back from time 0, so a pair's
+//! timeline is fully described by its placements.
+
+use super::prepare::{Prepared, Priority};
+use crate::config::ClusterConfig;
+use crate::dvfs::ScalingInterval;
+use crate::runtime::Solver;
+
+/// One task placed on a pair.
+#[derive(Clone, Copy, Debug)]
+pub struct Placement {
+    pub task_id: usize,
+    pub start: f64,
+    pub dur: f64,
+    pub power: f64,
+    pub deadline: f64,
+}
+
+impl Placement {
+    pub fn end(&self) -> f64 {
+        self.start + self.dur
+    }
+    pub fn energy(&self) -> f64 {
+        self.power * self.dur
+    }
+    pub fn misses_deadline(&self) -> bool {
+        // tolerance covers f32 rounding from the PJRT artifact path
+        self.end() > self.deadline * (1.0 + 1e-4) + 1e-6
+    }
+}
+
+/// A pair's queue (`τ_kj` = `finish`).
+#[derive(Clone, Debug, Default)]
+pub struct PairLoad {
+    pub placements: Vec<Placement>,
+    pub finish: f64,
+    /// Σ task utilization on this pair (used by the BF/WF heuristics).
+    pub u_sum: f64,
+}
+
+impl PairLoad {
+    fn push(&mut self, p: Placement, u: f64) {
+        debug_assert!(p.start >= self.finish - 1e-9);
+        self.finish = p.end();
+        self.u_sum += u;
+        self.placements.push(p);
+    }
+}
+
+/// A complete offline schedule.
+#[derive(Clone, Debug, Default)]
+pub struct Schedule {
+    pub loads: Vec<PairLoad>,
+    pub e_run: f64,
+    pub violations: u64,
+    /// Tasks that received a θ-readjusted (non-optimal) setting.
+    pub readjusted: u64,
+}
+
+impl Schedule {
+    pub fn pairs_used(&self) -> usize {
+        self.loads.len()
+    }
+
+    fn place(&mut self, pair: usize, pr: &Prepared, setting: crate::dvfs::Setting) {
+        let start = self.loads[pair].finish;
+        let p = Placement {
+            task_id: pr.task.id,
+            start,
+            dur: setting.t,
+            power: setting.p,
+            deadline: pr.task.deadline,
+        };
+        if p.misses_deadline() {
+            self.violations += 1;
+        }
+        self.e_run += p.energy();
+        self.loads[pair].push(p, pr.task.u);
+    }
+
+    fn new_pair(&mut self) -> usize {
+        self.loads.push(PairLoad::default());
+        self.loads.len() - 1
+    }
+}
+
+/// Offline scheduling policy.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum OfflinePolicy {
+    /// The paper's EDL θ-readjustment (Algorithm 2).  θ = 1 disables
+    /// readjustment.
+    Edl,
+    /// Earliest-deadline-first order, best-fit by pair utilization.
+    EdfBf,
+    /// Earliest-deadline-first order, worst-fit by pair utilization.
+    EdfWf,
+    /// Longest-processing-time order, first-fit by pair index.
+    LptFf,
+}
+
+impl OfflinePolicy {
+    pub const ALL: [OfflinePolicy; 4] = [
+        OfflinePolicy::Edl,
+        OfflinePolicy::EdfBf,
+        OfflinePolicy::EdfWf,
+        OfflinePolicy::LptFf,
+    ];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            OfflinePolicy::Edl => "EDL",
+            OfflinePolicy::EdfBf => "EDF-BF",
+            OfflinePolicy::EdfWf => "EDF-WF",
+            OfflinePolicy::LptFf => "LPT-FF",
+        }
+    }
+}
+
+/// Run an offline policy over a prepared task set.
+///
+/// Workflow shared by all four algorithms (the paper modifies the
+/// comparison heuristics the same way, Sec. 5.3): deadline-prior tasks are
+/// pinned to dedicated pairs first, then the energy-prior tasks are placed
+/// in policy order.  Only EDL applies θ-readjustment.
+pub fn schedule_offline(
+    policy: OfflinePolicy,
+    prepared: &[Prepared],
+    theta: f64,
+    solver: &Solver,
+    iv: &ScalingInterval,
+) -> Schedule {
+    let mut sched = Schedule::default();
+
+    // Phase 1: deadline-prior tasks, one pair each, starting at 0.
+    for pr in prepared.iter().filter(|p| p.class == Priority::DeadlinePrior) {
+        let pair = sched.new_pair();
+        sched.place(pair, pr, pr.setting);
+    }
+
+    // Phase 2: energy-prior tasks in policy order.
+    let mut rest: Vec<&Prepared> = prepared
+        .iter()
+        .filter(|p| p.class == Priority::EnergyPrior)
+        .collect();
+    match policy {
+        OfflinePolicy::LptFf => {
+            // longest computed task length first
+            rest.sort_by(|a, b| b.setting.t.partial_cmp(&a.setting.t).unwrap());
+        }
+        _ => {
+            // EDF: deadline-increasing
+            rest.sort_by(|a, b| a.task.deadline.partial_cmp(&b.task.deadline).unwrap());
+        }
+    }
+
+    for pr in rest {
+        let t_hat = pr.setting.t;
+        let d = pr.task.deadline;
+        let chosen: Option<usize> = match policy {
+            OfflinePolicy::Edl => {
+                // SPT pair = minimum finish time (Algorithm 2 line 11)
+                sched
+                    .loads
+                    .iter()
+                    .enumerate()
+                    .min_by(|a, b| a.1.finish.partial_cmp(&b.1.finish).unwrap())
+                    .map(|(i, _)| i)
+                    .filter(|&i| {
+                        let slack = d - sched.loads[i].finish;
+                        slack >= t_hat - 1e-9 || slack >= pr.t_theta(theta) - 1e-9
+                    })
+            }
+            OfflinePolicy::EdfBf => sched
+                .loads
+                .iter()
+                .enumerate()
+                .filter(|(_, l)| d - l.finish >= t_hat - 1e-9)
+                .max_by(|a, b| a.1.u_sum.partial_cmp(&b.1.u_sum).unwrap())
+                .map(|(i, _)| i),
+            OfflinePolicy::EdfWf => sched
+                .loads
+                .iter()
+                .enumerate()
+                .filter(|(_, l)| d - l.finish >= t_hat - 1e-9)
+                .min_by(|a, b| a.1.u_sum.partial_cmp(&b.1.u_sum).unwrap())
+                .map(|(i, _)| i),
+            OfflinePolicy::LptFf => sched
+                .loads
+                .iter()
+                .enumerate()
+                .find(|(_, l)| d - l.finish >= t_hat - 1e-9)
+                .map(|(i, _)| i),
+        };
+
+        match chosen {
+            Some(pair) => {
+                let slack = d - sched.loads[pair].finish;
+                if slack >= t_hat - 1e-9 {
+                    sched.place(pair, pr, pr.setting);
+                } else {
+                    // EDL θ-readjustment (Algorithm 2 lines 16-19): shrink
+                    // the task into the remaining window before its
+                    // deadline by re-solving at the exact target time.
+                    debug_assert_eq!(policy, OfflinePolicy::Edl);
+                    let adj = solver.solve_exact(&pr.task.model, slack, iv);
+                    if adj.feasible {
+                        sched.readjusted += 1;
+                        sched.place(pair, pr, adj);
+                    } else {
+                        let pair = sched.new_pair();
+                        sched.place(pair, pr, pr.setting);
+                    }
+                }
+            }
+            None => {
+                let pair = sched.new_pair();
+                sched.place(pair, pr, pr.setting);
+            }
+        }
+    }
+    sched
+}
+
+/// Algorithm 3 — group the `m_1` occupied pairs into servers of `l` pairs,
+/// sorted by finish time (μ-descending), which minimizes Σ_j Σ_k (F_j −
+/// τ_kj): each server's idle gap is bounded by its own spread.
+/// Returns (E_idle, servers_used).
+pub fn group_servers(sched: &Schedule, cluster: &ClusterConfig) -> (f64, usize) {
+    let l = cluster.pairs_per_server;
+    let mut finishes: Vec<f64> = sched.loads.iter().map(|p| p.finish).collect();
+    finishes.sort_by(|a, b| b.partial_cmp(a).unwrap());
+    let mut e_idle = 0.0;
+    let mut servers = 0;
+    for group in finishes.chunks(l) {
+        servers += 1;
+        let f_j = group[0]; // μ-descending → first is the max
+        for &tau in group {
+            e_idle += (f_j - tau) * cluster.p_idle;
+        }
+    }
+    (e_idle, servers)
+}
+
+/// Full offline report for one run.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct OfflineReport {
+    pub e_run: f64,
+    pub e_idle: f64,
+    pub e_total: f64,
+    pub pairs_used: usize,
+    pub servers_used: usize,
+    pub violations: u64,
+    pub readjusted: u64,
+}
+
+pub fn report(sched: &Schedule, cluster: &ClusterConfig) -> OfflineReport {
+    let (e_idle, servers_used) = group_servers(sched, cluster);
+    OfflineReport {
+        e_run: sched.e_run,
+        e_idle,
+        e_total: sched.e_run + e_idle,
+        pairs_used: sched.pairs_used(),
+        servers_used,
+        violations: sched.violations,
+        readjusted: sched.readjusted,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sched::prepare::prepare;
+    use crate::tasks::{generate_offline, Task};
+    use crate::util::Rng;
+
+    fn prepared_set(u: f64, seed: u64, dvfs: bool) -> Vec<Prepared> {
+        let mut rng = Rng::new(seed);
+        let cfg = crate::config::GenConfig {
+            base_pairs: 64, // small for test speed
+            ..Default::default()
+        };
+        let ts = generate_offline(u, &cfg, &mut rng);
+        prepare(&ts.tasks, &Solver::native(), &ScalingInterval::wide(), dvfs)
+    }
+
+    #[test]
+    fn all_policies_meet_deadlines() {
+        let prepared = prepared_set(0.8, 1, true);
+        let solver = Solver::native();
+        let iv = ScalingInterval::wide();
+        for policy in OfflinePolicy::ALL {
+            let s = schedule_offline(policy, &prepared, 0.9, &solver, &iv);
+            assert_eq!(s.violations, 0, "{} violates deadlines", policy.name());
+            let placed: usize = s.loads.iter().map(|l| l.placements.len()).sum();
+            assert_eq!(placed, prepared.len(), "{} lost tasks", policy.name());
+        }
+    }
+
+    #[test]
+    fn pair_timelines_sequential() {
+        let prepared = prepared_set(0.8, 2, true);
+        let solver = Solver::native();
+        let iv = ScalingInterval::wide();
+        let s = schedule_offline(OfflinePolicy::Edl, &prepared, 0.9, &solver, &iv);
+        for load in &s.loads {
+            let mut t = 0.0;
+            for p in &load.placements {
+                assert!(p.start >= t - 1e-9, "overlap");
+                t = p.end();
+            }
+            assert!((load.finish - t).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn e_run_matches_placements() {
+        let prepared = prepared_set(0.4, 3, true);
+        let solver = Solver::native();
+        let iv = ScalingInterval::wide();
+        let s = schedule_offline(OfflinePolicy::EdfBf, &prepared, 1.0, &solver, &iv);
+        let sum: f64 = s
+            .loads
+            .iter()
+            .flat_map(|l| &l.placements)
+            .map(|p| p.energy())
+            .sum();
+        assert!((s.e_run - sum).abs() < 1e-6);
+    }
+
+    #[test]
+    fn dvfs_saves_energy_vs_baseline() {
+        let with = prepared_set(0.8, 4, true);
+        let without = prepared_set(0.8, 4, false);
+        let solver = Solver::native();
+        let iv = ScalingInterval::wide();
+        let a = schedule_offline(OfflinePolicy::Edl, &with, 1.0, &solver, &iv);
+        let b = schedule_offline(OfflinePolicy::Edl, &without, 1.0, &solver, &iv);
+        let saving = 1.0 - a.e_run / b.e_run;
+        assert!(saving > 0.25, "saving {saving}");
+    }
+
+    #[test]
+    fn theta_reduces_pairs_or_keeps() {
+        // multi-pair servers: θ<1 should never use MORE pairs
+        let prepared = prepared_set(1.2, 5, true);
+        let solver = Solver::native();
+        let iv = ScalingInterval::wide();
+        let strict = schedule_offline(OfflinePolicy::Edl, &prepared, 1.0, &solver, &iv);
+        let relaxed = schedule_offline(OfflinePolicy::Edl, &prepared, 0.8, &solver, &iv);
+        assert!(relaxed.pairs_used() <= strict.pairs_used());
+        assert_eq!(relaxed.violations, 0);
+        assert!(relaxed.readjusted > 0, "θ=0.8 should trigger readjustments");
+    }
+
+    #[test]
+    fn grouping_idle_energy_zero_when_l1() {
+        let prepared = prepared_set(0.5, 6, true);
+        let solver = Solver::native();
+        let iv = ScalingInterval::wide();
+        let s = schedule_offline(OfflinePolicy::Edl, &prepared, 1.0, &solver, &iv);
+        let cfg = crate::config::ClusterConfig::default().with_l(1);
+        let (e_idle, servers) = group_servers(&s, &cfg);
+        assert_eq!(e_idle, 0.0);
+        assert_eq!(servers, s.pairs_used());
+    }
+
+    #[test]
+    fn grouping_sorted_beats_random() {
+        // Algorithm 3's μ-descending grouping should beat a deliberately
+        // bad (interleaved) grouping on idle energy.
+        let prepared = prepared_set(1.0, 7, true);
+        let solver = Solver::native();
+        let iv = ScalingInterval::wide();
+        let s = schedule_offline(OfflinePolicy::Edl, &prepared, 1.0, &solver, &iv);
+        let cfg = crate::config::ClusterConfig::default().with_l(4);
+        let (e_sorted, _) = group_servers(&s, &cfg);
+        // adversarial grouping: alternate longest/shortest
+        let mut fin: Vec<f64> = s.loads.iter().map(|p| p.finish).collect();
+        fin.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let mut inter = Vec::new();
+        let (mut lo, mut hi) = (0usize, fin.len());
+        while lo < hi {
+            inter.push(fin[lo]);
+            lo += 1;
+            if lo < hi {
+                hi -= 1;
+                inter.push(fin[hi]);
+            }
+        }
+        let mut e_bad = 0.0;
+        for group in inter.chunks(4) {
+            let f_j = group.iter().cloned().fold(0.0f64, f64::max);
+            for &tau in group {
+                e_bad += (f_j - tau) * cfg.p_idle;
+            }
+        }
+        assert!(e_sorted <= e_bad + 1e-9, "{e_sorted} > {e_bad}");
+    }
+
+    #[test]
+    fn lpt_uses_more_pairs_than_edl() {
+        // the paper's Fig. 7 ordering: LPT-FF occupies the most servers
+        let prepared = prepared_set(1.2, 8, true);
+        let solver = Solver::native();
+        let iv = ScalingInterval::wide();
+        let edl = schedule_offline(OfflinePolicy::Edl, &prepared, 1.0, &solver, &iv);
+        let lpt = schedule_offline(OfflinePolicy::LptFf, &prepared, 1.0, &solver, &iv);
+        assert!(
+            lpt.pairs_used() >= edl.pairs_used(),
+            "LPT {} < EDL {}",
+            lpt.pairs_used(),
+            edl.pairs_used()
+        );
+    }
+
+    #[test]
+    fn single_task_schedule() {
+        let model = crate::tasks::LIBRARY[0].model.scaled(10.0);
+        let t = Task {
+            id: 0,
+            app: 0,
+            model,
+            arrival: 0.0,
+            deadline: model.t_star() * 2.0,
+            u: 0.5,
+        };
+        let solver = Solver::native();
+        let iv = ScalingInterval::wide();
+        let prepared = prepare(&[t], &solver, &iv, true);
+        let s = schedule_offline(OfflinePolicy::Edl, &prepared, 1.0, &solver, &iv);
+        assert_eq!(s.pairs_used(), 1);
+        assert_eq!(s.violations, 0);
+    }
+}

@@ -1,0 +1,212 @@
+//! Algorithm 1 — per-task voltage/frequency configuration.
+//!
+//! For each task, compute the unconstrained optimum `t̂`; if `t̂` exceeds
+//! the allowed window `d − a`, the task is *deadline-prior* and gets the
+//! exact-window setting; otherwise it is *energy-prior* and keeps the free
+//! optimum.  Batched through the [`Solver`] so the PJRT backend amortizes
+//! one artifact execution over the whole arrival batch.
+
+use crate::dvfs::{ScalingInterval, Setting};
+use crate::runtime::{SolveReq, Solver};
+use crate::tasks::Task;
+
+/// Task priority class (paper Definition 1).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Priority {
+    /// `d − a < t̂` — must run faster than its energy optimum.
+    DeadlinePrior,
+    /// The free optimum fits the window.
+    EnergyPrior,
+}
+
+/// A task plus its Algorithm-1 configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct Prepared {
+    pub task: Task,
+    /// The chosen setting (free optimum, or exact-window for
+    /// deadline-prior tasks).
+    pub setting: Setting,
+    /// The unconstrained optimum (used by the θ-readjustment bounds).
+    pub free: Setting,
+    /// Minimum achievable execution time in the interval.
+    pub t_min: f64,
+    pub class: Priority,
+}
+
+impl Prepared {
+    /// θ-readjustment lower bound on execution time (Alg 2 line 16):
+    /// `t_θ = max(θ·t̂, t_min)`.
+    pub fn t_theta(&self, theta: f64) -> f64 {
+        (theta * self.setting.t).max(self.t_min)
+    }
+}
+
+/// Run Algorithm 1 on a batch.  With `dvfs = false`, every task keeps the
+/// factory-default setting (the paper's non-DVFS baseline).
+pub fn prepare(
+    tasks: &[Task],
+    solver: &Solver,
+    iv: &ScalingInterval,
+    dvfs: bool,
+) -> Vec<Prepared> {
+    if !dvfs {
+        return tasks
+            .iter()
+            .map(|t| {
+                let s = Setting::default_for(&t.model);
+                Prepared {
+                    task: *t,
+                    setting: s,
+                    free: s,
+                    t_min: t.model.t_min(iv),
+                    class: Priority::EnergyPrior,
+                }
+            })
+            .collect();
+    }
+
+    // pass 1: unconstrained optima for the whole batch
+    let free_reqs: Vec<SolveReq> = tasks
+        .iter()
+        .map(|t| SolveReq {
+            model: t.model,
+            tlim: f64::INFINITY,
+        })
+        .collect();
+    let free = solver.solve_opt_batch(&free_reqs, iv);
+
+    // pass 2: deadline-prior tasks re-solved at their exact window
+    let mut prior_idx = Vec::new();
+    let mut prior_reqs = Vec::new();
+    for (i, (t, f)) in tasks.iter().zip(&free).enumerate() {
+        if f.t > t.window() {
+            prior_idx.push(i);
+            prior_reqs.push(SolveReq {
+                model: t.model,
+                tlim: t.window(),
+            });
+        }
+    }
+    let prior_settings = if prior_reqs.is_empty() {
+        Vec::new()
+    } else {
+        solver.solve_window_batch(&prior_reqs, iv)
+    };
+
+    let mut out: Vec<Prepared> = tasks
+        .iter()
+        .zip(&free)
+        .map(|(t, f)| Prepared {
+            task: *t,
+            setting: *f,
+            free: *f,
+            t_min: t.model.t_min(iv),
+            class: Priority::EnergyPrior,
+        })
+        .collect();
+    for (k, &i) in prior_idx.iter().enumerate() {
+        let s = prior_settings[k];
+        out[i].class = Priority::DeadlinePrior;
+        // If even the window solve is infeasible the task cannot meet its
+        // deadline at any setting — fall back to the minimum-time setting
+        // (flagged by the simulator as a violation if it still misses).
+        out[i].setting = if s.feasible {
+            s
+        } else {
+            let fastest = solver.solve_exact(&tasks[i].model, out[i].t_min * (1.0 + 1e-6), iv);
+            if fastest.feasible {
+                fastest
+            } else {
+                Setting::default_for(&tasks[i].model)
+            }
+        };
+    }
+    out
+}
+
+/// Number of deadline-prior tasks (`n_1` in Algorithm 1).
+pub fn count_deadline_prior(prepared: &[Prepared]) -> usize {
+    prepared
+        .iter()
+        .filter(|p| p.class == Priority::DeadlinePrior)
+        .count()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tasks::LIBRARY;
+
+    fn mk_task(id: usize, u: f64, k: f64) -> Task {
+        let model = LIBRARY[id % LIBRARY.len()].model.scaled(k);
+        Task {
+            id,
+            app: id % LIBRARY.len(),
+            model,
+            arrival: 0.0,
+            deadline: model.t_star() / u,
+            u,
+        }
+    }
+
+    #[test]
+    fn loose_deadline_energy_prior() {
+        let solver = Solver::native();
+        let iv = ScalingInterval::wide();
+        let tasks = vec![mk_task(0, 0.3, 10.0)]; // window = 3.3 t*
+        let p = prepare(&tasks, &solver, &iv, true);
+        assert_eq!(p[0].class, Priority::EnergyPrior);
+        assert!(p[0].setting.e < tasks[0].model.e_star());
+        assert_eq!(p[0].setting.e, p[0].free.e);
+    }
+
+    #[test]
+    fn tight_deadline_deadline_prior() {
+        let solver = Solver::native();
+        let iv = ScalingInterval::wide();
+        // u = 0.999 → window ≈ t*; free optimum t̂ > t* for library tasks
+        let tasks = vec![mk_task(1, 0.999, 10.0)];
+        let p = prepare(&tasks, &solver, &iv, true);
+        assert_eq!(p[0].class, Priority::DeadlinePrior);
+        assert!(p[0].setting.t <= tasks[0].window() * (1.0 + 1e-4));
+        // deadline-prior sacrifices energy vs the free optimum
+        assert!(p[0].setting.e >= p[0].free.e);
+    }
+
+    #[test]
+    fn non_dvfs_keeps_default() {
+        let solver = Solver::native();
+        let iv = ScalingInterval::wide();
+        let tasks = vec![mk_task(2, 0.5, 20.0)];
+        let p = prepare(&tasks, &solver, &iv, false);
+        assert_eq!(p[0].setting.t, tasks[0].model.t_star());
+        assert_eq!(p[0].setting.p, tasks[0].model.p_star());
+    }
+
+    #[test]
+    fn t_theta_bounds() {
+        let solver = Solver::native();
+        let iv = ScalingInterval::wide();
+        let tasks = vec![mk_task(3, 0.3, 10.0)];
+        let p = prepare(&tasks, &solver, &iv, true)[0];
+        assert!((p.t_theta(1.0) - p.setting.t).abs() < 1e-12);
+        assert!(p.t_theta(0.8) >= p.t_min);
+        assert!(p.t_theta(0.8) <= p.setting.t);
+    }
+
+    #[test]
+    fn batch_mixes_classes() {
+        let solver = Solver::native();
+        let iv = ScalingInterval::wide();
+        let tasks: Vec<Task> = (0..40)
+            .map(|i| mk_task(i, if i % 2 == 0 { 0.3 } else { 0.999 }, 10.0))
+            .collect();
+        let p = prepare(&tasks, &solver, &iv, true);
+        let n1 = count_deadline_prior(&p);
+        assert!(n1 >= 15 && n1 <= 25, "n1={n1}");
+        for x in &p {
+            assert!(x.setting.feasible);
+            assert!(x.setting.t <= x.task.window() * (1.0 + 1e-4));
+        }
+    }
+}

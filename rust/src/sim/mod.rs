@@ -1,0 +1,10 @@
+//! Simulation engines: the offline one-shot evaluator and the online
+//! discrete-time (slot) engine, plus Monte-Carlo repetition drivers.
+
+pub mod offline;
+pub mod online;
+pub mod report;
+
+pub use offline::{run_offline, run_offline_reps, OfflineOutcome};
+pub use online::{run_online, run_online_reps, OnlineOutcome, OnlinePolicyKind};
+pub use report::{EnergyAgg, OnlineAgg};

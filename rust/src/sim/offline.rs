@@ -1,0 +1,186 @@
+//! Offline simulation driver (paper Sec. 5.3): generate a task set at a
+//! given utilization, run Algorithm 1 + an offline policy + Algorithm 3,
+//! and report the energy decomposition.  Monte-Carlo repetitions fan out
+//! across threads with the native solver (PJRT is not `Send`; the
+//! cross-validation tests pin the two backends together).
+
+use crate::config::SimConfig;
+use crate::runtime::Solver;
+use crate::sched::{prepare, report, schedule_offline, OfflinePolicy, OfflineReport};
+use crate::tasks::generate_offline;
+use crate::util::{Rng, Summary};
+
+/// One offline run's outcome.
+#[derive(Clone, Copy, Debug)]
+pub struct OfflineOutcome {
+    pub report: OfflineReport,
+    /// Non-DVFS l=1 reference energy of the same task set (Sec. 5.3).
+    pub baseline_e: f64,
+    pub n_tasks: usize,
+    pub n_deadline_prior: usize,
+}
+
+impl OfflineOutcome {
+    /// Energy saving vs the non-DVFS l=1 baseline.
+    pub fn saving(&self) -> f64 {
+        1.0 - self.report.e_total / self.baseline_e
+    }
+}
+
+/// Run one offline simulation at utilization `u` with the given policy.
+pub fn run_offline(
+    policy: OfflinePolicy,
+    u: f64,
+    dvfs: bool,
+    cfg: &SimConfig,
+    solver: &Solver,
+    rng: &mut Rng,
+) -> OfflineOutcome {
+    let ts = generate_offline(u, &cfg.gen, rng);
+    let prepared = prepare(&ts.tasks, solver, &cfg.interval, dvfs);
+    let n1 = crate::sched::count_deadline_prior(&prepared);
+    let sched = schedule_offline(policy, &prepared, cfg.theta, solver, &cfg.interval);
+    OfflineOutcome {
+        report: report(&sched, &cfg.cluster),
+        baseline_e: ts.baseline_energy(),
+        n_tasks: ts.len(),
+        n_deadline_prior: n1,
+    }
+}
+
+/// Aggregated Monte-Carlo metrics for one (policy, U_J, dvfs) cell.
+#[derive(Clone, Debug, Default)]
+pub struct OfflineAggregate {
+    pub e_run: Summary,
+    pub e_idle: Summary,
+    pub e_total: Summary,
+    pub baseline_e: Summary,
+    pub saving: Summary,
+    pub pairs_used: Summary,
+    pub servers_used: Summary,
+    pub violations: u64,
+    pub readjusted: u64,
+}
+
+impl OfflineAggregate {
+    fn add(&mut self, o: &OfflineOutcome) {
+        self.e_run.add(o.report.e_run);
+        self.e_idle.add(o.report.e_idle);
+        self.e_total.add(o.report.e_total);
+        self.baseline_e.add(o.baseline_e);
+        self.saving.add(o.saving());
+        self.pairs_used.add(o.report.pairs_used as f64);
+        self.servers_used.add(o.report.servers_used as f64);
+        self.violations += o.report.violations;
+        self.readjusted += o.report.readjusted;
+    }
+
+    /// Normalized energy: mean E_total / mean baseline.
+    pub fn normalized(&self) -> f64 {
+        self.e_total.mean() / self.baseline_e.mean()
+    }
+}
+
+/// Monte-Carlo repetitions.  With the native backend the reps run on a
+/// thread pool; with PJRT they run sequentially on the calling thread
+/// (the engine is not `Send`).
+pub fn run_offline_reps(
+    policy: OfflinePolicy,
+    u: f64,
+    dvfs: bool,
+    cfg: &SimConfig,
+    solver: &Solver,
+) -> OfflineAggregate {
+    let mut agg = OfflineAggregate::default();
+    match solver {
+        Solver::Pjrt(_) => {
+            let mut base = Rng::new(cfg.seed);
+            for r in 0..cfg.reps {
+                let mut rng = base.fork(r as u64);
+                agg.add(&run_offline(policy, u, dvfs, cfg, solver, &mut rng));
+            }
+        }
+        Solver::Native { .. } => {
+            let n_threads = std::thread::available_parallelism()
+                .map(|n| n.get())
+                .unwrap_or(4)
+                .min(cfg.reps)
+                .max(1);
+            let outcomes = std::sync::Mutex::new(Vec::with_capacity(cfg.reps));
+            let next = std::sync::atomic::AtomicUsize::new(0);
+            std::thread::scope(|s| {
+                for _ in 0..n_threads {
+                    s.spawn(|| {
+                        let solver = Solver::native();
+                        loop {
+                            let r = next.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                            if r >= cfg.reps {
+                                break;
+                            }
+                            let mut rng = Rng::new(cfg.seed).fork(r as u64);
+                            let o = run_offline(policy, u, dvfs, cfg, &solver, &mut rng);
+                            outcomes.lock().unwrap().push(o);
+                        }
+                    });
+                }
+            });
+            for o in outcomes.into_inner().unwrap() {
+                agg.add(&o);
+            }
+        }
+    }
+    agg
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small_cfg() -> SimConfig {
+        let mut cfg = SimConfig::default();
+        cfg.gen.base_pairs = 64;
+        cfg.cluster.total_pairs = 256;
+        cfg.reps = 4;
+        cfg
+    }
+
+    #[test]
+    fn offline_run_no_violations() {
+        let cfg = small_cfg();
+        let solver = Solver::native();
+        let mut rng = Rng::new(1);
+        let o = run_offline(OfflinePolicy::Edl, 0.8, true, &cfg, &solver, &mut rng);
+        assert_eq!(o.report.violations, 0);
+        assert!(o.saving() > 0.2, "saving {}", o.saving());
+    }
+
+    #[test]
+    fn baseline_energy_independent_of_policy() {
+        // Fig 5a: the four non-DVFS l=1 lines overlap exactly
+        let cfg = small_cfg();
+        let solver = Solver::native();
+        let totals: Vec<f64> = OfflinePolicy::ALL
+            .iter()
+            .map(|&p| {
+                let mut rng = Rng::new(7); // same task set
+                let o = run_offline(p, 0.6, false, &cfg, &solver, &mut rng);
+                assert_eq!(o.report.e_run, o.baseline_e);
+                o.report.e_run
+            })
+            .collect();
+        for w in totals.windows(2) {
+            assert!((w[0] - w[1]).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn reps_aggregate_deterministic() {
+        let cfg = small_cfg();
+        let solver = Solver::native();
+        let a = run_offline_reps(OfflinePolicy::Edl, 0.4, true, &cfg, &solver);
+        let b = run_offline_reps(OfflinePolicy::Edl, 0.4, true, &cfg, &solver);
+        assert_eq!(a.e_total.n(), 4);
+        assert!((a.e_total.mean() - b.e_total.mean()).abs() < 1e-9);
+        assert!((a.saving.mean() - b.saving.mean()).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,309 @@
+//! Online discrete-time simulation engine (paper Sec. 4.2.2 / Sec. 5.4).
+//!
+//! Time advances in unit slots (minutes).  Each slot (Algorithm 4):
+//!   1. process tasks leaving in this slot (pairs go idle from their μ),
+//!   2. DRS sweep: turn off servers idle for ≥ ρ,
+//!   3. assign the slot's arrivals via the policy (EDL or bin-packing).
+//! After the horizon the engine drains until the cluster is fully off,
+//! then reports the energy decomposition E_run + E_idle + E_overhead.
+
+use crate::cluster::Cluster;
+use crate::config::SimConfig;
+use crate::runtime::Solver;
+use crate::sched::online::{BinPacking, EdlOnline, OnlinePolicy, SchedCtx};
+use crate::tasks::{generate_online, OnlineWorkload};
+use crate::util::Rng;
+
+/// Which online policy to run.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum OnlinePolicyKind {
+    Edl,
+    Bin,
+}
+
+impl OnlinePolicyKind {
+    pub const ALL: [OnlinePolicyKind; 2] = [OnlinePolicyKind::Edl, OnlinePolicyKind::Bin];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            OnlinePolicyKind::Edl => "EDL",
+            OnlinePolicyKind::Bin => "BIN",
+        }
+    }
+
+    fn build(&self, total_pairs: usize) -> Box<dyn OnlinePolicy> {
+        match self {
+            OnlinePolicyKind::Edl => Box::new(EdlOnline::new()),
+            OnlinePolicyKind::Bin => Box::new(BinPacking::new(total_pairs)),
+        }
+    }
+}
+
+/// Outcome of one online simulation.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct OnlineOutcome {
+    pub e_run: f64,
+    pub e_idle: f64,
+    pub e_overhead: f64,
+    pub baseline_e: f64,
+    pub n_tasks: usize,
+    pub servers_used: usize,
+    pub pairs_used: usize,
+    pub violations: u64,
+    pub readjusted: u64,
+    pub forced: u64,
+    /// Pair turn-on events ω.
+    pub turn_ons: u64,
+    /// Slots simulated (horizon + drain).
+    pub slots: u64,
+}
+
+impl OnlineOutcome {
+    pub fn e_total(&self) -> f64 {
+        self.e_run + self.e_idle + self.e_overhead
+    }
+
+    /// Energy reduction vs the non-DVFS baseline total of the same
+    /// workload (Fig. 13's metric is vs the baseline EDL total; callers
+    /// compare two outcomes — this helper is vs E*).
+    pub fn saving_vs(&self, baseline_total: f64) -> f64 {
+        1.0 - self.e_total() / baseline_total
+    }
+}
+
+/// Run one online simulation over a pre-generated workload.
+pub fn run_online_workload(
+    kind: OnlinePolicyKind,
+    workload: &OnlineWorkload,
+    dvfs: bool,
+    cfg: &SimConfig,
+    solver: &Solver,
+) -> OnlineOutcome {
+    let mut cluster = Cluster::new(cfg.cluster.clone());
+    let mut policy = kind.build(cfg.cluster.total_pairs);
+    let ctx = SchedCtx {
+        solver,
+        iv: cfg.interval,
+        dvfs,
+        theta: cfg.theta,
+    };
+
+    // T = 0: the initial offline batch (Algorithm 4 line 1)
+    policy.assign(0.0, &workload.offline.tasks, &mut cluster, &ctx);
+
+    let horizon = cfg.gen.horizon;
+    let mut t = 1u64;
+    let drain_guard = horizon * 64 + 100_000;
+    loop {
+        let now = t as f64;
+        cluster.process_departures(now);
+        cluster.drs_sweep(now);
+        if t <= horizon {
+            let arrivals = workload.arrivals_at(t);
+            if !arrivals.is_empty() {
+                policy.assign(now, arrivals, &mut cluster, &ctx);
+            }
+        } else {
+            // drain: done when every server is off
+            if cluster.server_on.iter().all(|&on| !on) {
+                break;
+            }
+        }
+        t += 1;
+        assert!(t < drain_guard, "online simulation failed to drain");
+    }
+
+    let stats = policy.stats();
+    OnlineOutcome {
+        e_run: cluster.e_run,
+        e_idle: cluster.e_idle(),
+        e_overhead: cluster.e_overhead(),
+        baseline_e: workload.baseline_energy(),
+        n_tasks: workload.total_tasks(),
+        servers_used: cluster.servers_used(),
+        pairs_used: cluster.pairs_used(),
+        violations: cluster.violations,
+        readjusted: stats.readjusted,
+        forced: stats.forced,
+        turn_ons: cluster.turn_ons,
+        slots: t,
+    }
+}
+
+/// Generate a workload from `rng` and run one simulation.
+pub fn run_online(
+    kind: OnlinePolicyKind,
+    dvfs: bool,
+    cfg: &SimConfig,
+    solver: &Solver,
+    rng: &mut Rng,
+) -> OnlineOutcome {
+    let workload = generate_online(&cfg.gen, rng);
+    run_online_workload(kind, &workload, dvfs, cfg, solver)
+}
+
+/// Monte-Carlo repetitions (threaded for the native backend, like the
+/// offline driver).
+pub fn run_online_reps(
+    kind: OnlinePolicyKind,
+    dvfs: bool,
+    cfg: &SimConfig,
+    solver: &Solver,
+) -> super::report::OnlineAgg {
+    let mut agg = super::report::OnlineAgg::default();
+    match solver {
+        Solver::Pjrt(_) => {
+            let mut base = Rng::new(cfg.seed);
+            for r in 0..cfg.reps {
+                let mut rng = base.fork(r as u64);
+                agg.add(&run_online(kind, dvfs, cfg, solver, &mut rng));
+            }
+        }
+        Solver::Native { .. } => {
+            let n_threads = std::thread::available_parallelism()
+                .map(|n| n.get())
+                .unwrap_or(4)
+                .min(cfg.reps)
+                .max(1);
+            let outcomes = std::sync::Mutex::new(Vec::with_capacity(cfg.reps));
+            let next = std::sync::atomic::AtomicUsize::new(0);
+            std::thread::scope(|s| {
+                for _ in 0..n_threads {
+                    s.spawn(|| {
+                        let solver = Solver::native();
+                        loop {
+                            let r = next.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                            if r >= cfg.reps {
+                                break;
+                            }
+                            let mut rng = Rng::new(cfg.seed).fork(r as u64);
+                            let o = run_online(kind, dvfs, cfg, &solver, &mut rng);
+                            outcomes.lock().unwrap().push(o);
+                        }
+                    });
+                }
+            });
+            for o in outcomes.into_inner().unwrap() {
+                agg.add(&o);
+            }
+        }
+    }
+    agg
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Scaled-down config so each test runs in well under a second.
+    fn small_cfg() -> SimConfig {
+        let mut cfg = SimConfig::default();
+        cfg.gen.base_pairs = 32;
+        cfg.gen.horizon = 240;
+        cfg.cluster.total_pairs = 128;
+        cfg.reps = 3;
+        cfg
+    }
+
+    #[test]
+    fn edl_online_completes_without_violations() {
+        let cfg = small_cfg();
+        let solver = Solver::native();
+        let mut rng = Rng::new(1);
+        let o = run_online(OnlinePolicyKind::Edl, true, &cfg, &solver, &mut rng);
+        assert_eq!(o.violations, 0, "EDL must never violate deadlines");
+        assert_eq!(o.forced, 0);
+        assert!(o.n_tasks > 100);
+        assert!(o.e_run > 0.0 && o.e_idle >= 0.0 && o.e_overhead > 0.0);
+    }
+
+    #[test]
+    fn energy_identity_holds() {
+        let cfg = small_cfg();
+        let solver = Solver::native();
+        let mut rng = Rng::new(2);
+        let o = run_online(OnlinePolicyKind::Edl, true, &cfg, &solver, &mut rng);
+        assert!((o.e_total() - (o.e_run + o.e_idle + o.e_overhead)).abs() < 1e-9);
+        assert!(
+            (o.e_overhead - o.turn_ons as f64 * cfg.cluster.delta_overhead).abs() < 1e-9
+        );
+    }
+
+    #[test]
+    fn dvfs_saves_runtime_energy_online() {
+        let cfg = small_cfg();
+        let solver = Solver::native();
+        // same workload for both runs
+        let mut rng = Rng::new(3);
+        let w = generate_online(&cfg.gen, &mut rng);
+        let base = run_online_workload(OnlinePolicyKind::Edl, &w, false, &cfg, &solver);
+        let dvfs = run_online_workload(OnlinePolicyKind::Edl, &w, true, &cfg, &solver);
+        assert!((base.e_run - base.baseline_e).abs() / base.baseline_e < 1e-9);
+        let run_saving = 1.0 - dvfs.e_run / base.e_run;
+        assert!(
+            run_saving > 0.28 && run_saving < 0.42,
+            "runtime saving {run_saving}"
+        );
+    }
+
+    #[test]
+    fn bin_packing_runs_and_completes() {
+        let cfg = small_cfg();
+        let solver = Solver::native();
+        let mut rng = Rng::new(4);
+        let o = run_online(OnlinePolicyKind::Bin, true, &cfg, &solver, &mut rng);
+        assert!(o.n_tasks > 100);
+        // with the time-fit admission check, misses should not occur
+        assert_eq!(o.violations, 0, "{} violations / {}", o.violations, o.n_tasks);
+    }
+
+    #[test]
+    fn run_energy_equal_across_l_for_same_workload() {
+        // Fig 10: E_run is constant in l (and policy-independent for the
+        // same task set under DVFS-prepare).
+        let solver = Solver::native();
+        let base_cfg = small_cfg();
+        let mut rng = Rng::new(5);
+        let w = generate_online(&base_cfg.gen, &mut rng);
+        let mut runs = Vec::new();
+        for l in [1usize, 4, 16] {
+            let mut cfg = small_cfg();
+            cfg.cluster.pairs_per_server = l;
+            cfg.cluster.total_pairs = 128;
+            let o = run_online_workload(OnlinePolicyKind::Edl, &w, true, &cfg, &solver);
+            runs.push(o.e_run);
+        }
+        for pair in runs.windows(2) {
+            let rel = (pair[0] - pair[1]).abs() / pair[0];
+            assert!(rel < 0.02, "E_run varies with l: {runs:?}");
+        }
+    }
+
+    #[test]
+    fn larger_l_more_idle_energy() {
+        let solver = Solver::native();
+        let base_cfg = small_cfg();
+        let mut rng = Rng::new(6);
+        let w = generate_online(&base_cfg.gen, &mut rng);
+        let mut idles = Vec::new();
+        for l in [1usize, 16] {
+            let mut cfg = small_cfg();
+            cfg.cluster.pairs_per_server = l;
+            let o = run_online_workload(OnlinePolicyKind::Edl, &w, true, &cfg, &solver);
+            idles.push(o.e_idle);
+        }
+        assert!(
+            idles[1] > idles[0],
+            "idle energy should grow with l: {idles:?}"
+        );
+    }
+
+    #[test]
+    fn reps_deterministic() {
+        let cfg = small_cfg();
+        let solver = Solver::native();
+        let a = run_online_reps(OnlinePolicyKind::Edl, true, &cfg, &solver);
+        let b = run_online_reps(OnlinePolicyKind::Edl, true, &cfg, &solver);
+        assert!((a.e_total.mean() - b.e_total.mean()).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,95 @@
+//! Aggregation of Monte-Carlo outcomes into the statistics the paper's
+//! figures plot.
+
+use super::online::OnlineOutcome;
+use crate::util::Summary;
+
+/// Generic energy aggregate (used by experiments for ad-hoc cells).
+#[derive(Clone, Debug, Default)]
+pub struct EnergyAgg {
+    pub run: Summary,
+    pub idle: Summary,
+    pub overhead: Summary,
+    pub total: Summary,
+}
+
+impl EnergyAgg {
+    pub fn add(&mut self, run: f64, idle: f64, overhead: f64) {
+        self.run.add(run);
+        self.idle.add(idle);
+        self.overhead.add(overhead);
+        self.total.add(run + idle + overhead);
+    }
+}
+
+/// Aggregate over online simulation repetitions.
+#[derive(Clone, Debug, Default)]
+pub struct OnlineAgg {
+    pub e_run: Summary,
+    pub e_idle: Summary,
+    pub e_overhead: Summary,
+    pub e_total: Summary,
+    pub baseline_e: Summary,
+    pub servers_used: Summary,
+    pub pairs_used: Summary,
+    pub turn_ons: Summary,
+    pub violations: u64,
+    pub readjusted: u64,
+    pub forced: u64,
+    pub reps: usize,
+}
+
+impl OnlineAgg {
+    pub fn add(&mut self, o: &OnlineOutcome) {
+        self.e_run.add(o.e_run);
+        self.e_idle.add(o.e_idle);
+        self.e_overhead.add(o.e_overhead);
+        self.e_total.add(o.e_total());
+        self.baseline_e.add(o.baseline_e);
+        self.servers_used.add(o.servers_used as f64);
+        self.pairs_used.add(o.pairs_used as f64);
+        self.turn_ons.add(o.turn_ons as f64);
+        self.violations += o.violations;
+        self.readjusted += o.readjusted;
+        self.forced += o.forced;
+        self.reps += 1;
+    }
+
+    /// Mean energy reduction vs another aggregate's mean total (the
+    /// figures' "energy reduction compared to the baseline" metric).
+    pub fn reduction_vs(&self, baseline: &OnlineAgg) -> f64 {
+        1.0 - self.e_total.mean() / baseline.e_total.mean()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn agg_accumulates() {
+        let mut agg = OnlineAgg::default();
+        let mut o = OnlineOutcome::default();
+        o.e_run = 10.0;
+        o.e_idle = 2.0;
+        o.e_overhead = 1.0;
+        o.violations = 3;
+        agg.add(&o);
+        agg.add(&o);
+        assert_eq!(agg.reps, 2);
+        assert_eq!(agg.violations, 6);
+        assert!((agg.e_total.mean() - 13.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn reduction_math() {
+        let mut a = OnlineAgg::default();
+        let mut b = OnlineAgg::default();
+        let mut o = OnlineOutcome::default();
+        o.e_run = 70.0;
+        a.add(&o);
+        o.e_run = 100.0;
+        b.add(&o);
+        assert!((a.reduction_vs(&b) - 0.3).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,246 @@
+//! Task-set generators (paper Sec. 5.1.3).
+//!
+//! Offline: draw applications uniformly from the library, scale task length
+//! by an integer in [10, 50], draw utilization u ~ U(0,1) (mean 0.5), set
+//! the deadline to `a + t*/u`, and adjust the final task so the set's total
+//! utilization hits the target exactly.
+//!
+//! Online: an offline batch (U_OFF) at T = 0 plus an online stream (U_ON)
+//! whose per-slot arrival counts are Poisson over the horizon, refined so
+//! the counts sum to the stream length.
+
+use super::library::LIBRARY;
+use super::task::{Task, TaskSet};
+use crate::config::GenConfig;
+use crate::util::rng::Rng;
+
+const U_MIN: f64 = 0.02; // floor keeps deadlines finite / windows sane
+
+/// Generate one task; `u` fixed by the caller when adjusting the tail.
+fn gen_task(id: usize, arrival: f64, u: f64, cfg: &GenConfig, rng: &mut Rng) -> Task {
+    let app = rng.index(LIBRARY.len());
+    let k = rng.int_range(cfg.scale_lo, cfg.scale_hi) as f64;
+    let model = LIBRARY[app].model.scaled(k);
+    let t_star = model.t_star();
+    Task {
+        id,
+        app,
+        model,
+        arrival,
+        deadline: arrival + t_star / u,
+        u,
+    }
+}
+
+/// Offline task set with total utilization `u_target` (normalized on
+/// `cfg.base_pairs`, i.e. Σu_i = u_target * base_pairs).  All arrivals 0.
+pub fn generate_offline(u_target: f64, cfg: &GenConfig, rng: &mut Rng) -> TaskSet {
+    generate_stream(u_target, 0, cfg, rng, |_rng| 0.0)
+}
+
+fn generate_stream(
+    u_target: f64,
+    id_base: usize,
+    cfg: &GenConfig,
+    rng: &mut Rng,
+    mut arrival_of: impl FnMut(&mut Rng) -> f64,
+) -> TaskSet {
+    let budget = u_target * cfg.base_pairs as f64;
+    let mut ts = TaskSet::default();
+    if budget <= 0.0 {
+        return ts;
+    }
+    let mut acc = 0.0;
+    let mut id = id_base;
+    loop {
+        let remaining = budget - acc;
+        let mut u = rng.open01().max(U_MIN);
+        let last = remaining <= u || remaining < U_MIN;
+        if last {
+            // paper: modify the last task so Σu hits the target exactly
+            u = remaining.max(U_MIN).min(1.0);
+        }
+        let a = arrival_of(rng);
+        ts.tasks.push(gen_task(id, a, u, cfg, rng));
+        acc += u;
+        id += 1;
+        if last {
+            break;
+        }
+    }
+    ts.u_sum = acc;
+    ts
+}
+
+/// An online workload: the T=0 batch plus arrivals bucketed per slot.
+#[derive(Clone, Debug)]
+pub struct OnlineWorkload {
+    /// Offline batch (arrival 0).
+    pub offline: TaskSet,
+    /// Online stream, sorted by arrival slot.
+    pub online: TaskSet,
+    /// `arrivals[t]` = index range of `online.tasks` arriving at slot t+1.
+    pub slots: Vec<std::ops::Range<usize>>,
+}
+
+impl OnlineWorkload {
+    pub fn total_tasks(&self) -> usize {
+        self.offline.len() + self.online.len()
+    }
+
+    pub fn baseline_energy(&self) -> f64 {
+        self.offline.baseline_energy() + self.online.baseline_energy()
+    }
+
+    /// Tasks arriving at slot `t` (1-based, as in the paper).
+    pub fn arrivals_at(&self, t: u64) -> &[Task] {
+        let idx = (t - 1) as usize;
+        if idx >= self.slots.len() {
+            return &[];
+        }
+        &self.online.tasks[self.slots[idx].clone()]
+    }
+}
+
+/// Generate the full online workload (Sec. 5.1.3): U_OFF at T=0 and U_ON
+/// spread over slots `1..=horizon` with Poisson arrival counts refined to
+/// match the stream length exactly.
+pub fn generate_online(cfg: &GenConfig, rng: &mut Rng) -> OnlineWorkload {
+    let offline = generate_offline(cfg.u_off, cfg, rng);
+    // generate the stream first (count unknown a priori)
+    let mut online = generate_stream(cfg.u_on, offline.len(), cfg, rng, |_r| 0.0);
+    let n_on = online.len();
+    let horizon = cfg.horizon as usize;
+
+    // Poisson per-slot counts, refined until Σ n(T) = N_ON (paper text).
+    let lambda = n_on as f64 / horizon as f64;
+    let mut counts: Vec<u64> = (0..horizon).map(|_| rng.poisson(lambda)).collect();
+    let mut total: i64 = counts.iter().map(|&c| c as i64).sum();
+    while total != n_on as i64 {
+        let slot = rng.index(horizon);
+        if total < n_on as i64 {
+            counts[slot] += 1;
+            total += 1;
+        } else if counts[slot] > 0 {
+            counts[slot] -= 1;
+            total -= 1;
+        }
+    }
+
+    // bucket tasks into slots in generation order; a_i = slot
+    let mut slots = Vec::with_capacity(horizon);
+    let mut cursor = 0usize;
+    for (i, &c) in counts.iter().enumerate() {
+        let start = cursor;
+        let end = (cursor + c as usize).min(n_on);
+        let slot_time = (i + 1) as f64;
+        for t in &mut online.tasks[start..end] {
+            t.arrival = slot_time;
+            t.deadline = slot_time + t.t_star() / t.u;
+        }
+        slots.push(start..end);
+        cursor = end;
+    }
+
+    OnlineWorkload {
+        offline,
+        online,
+        slots,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> GenConfig {
+        GenConfig::default()
+    }
+
+    #[test]
+    fn offline_hits_target_utilization() {
+        let mut rng = Rng::new(1);
+        for u_target in [0.2, 0.4, 1.0, 1.6] {
+            let ts = generate_offline(u_target, &cfg(), &mut rng);
+            let want = u_target * 1024.0;
+            assert!(
+                (ts.u_sum - want).abs() < 1.0 + 1e-9,
+                "u_sum={} want={}",
+                ts.u_sum,
+                want
+            );
+            let direct: f64 = ts.tasks.iter().map(|t| t.u).sum();
+            assert!((direct - ts.u_sum).abs() < 1e-6);
+            ts.validate().unwrap();
+        }
+    }
+
+    #[test]
+    fn offline_task_count_scales_with_utilization() {
+        let mut rng = Rng::new(2);
+        let small = generate_offline(0.2, &cfg(), &mut rng).len();
+        let large = generate_offline(1.6, &cfg(), &mut rng).len();
+        // E[u] = 0.5 → N ≈ U*1024/0.5
+        assert!(large > small * 5);
+        assert!((large as f64 - 1.6 * 1024.0 / 0.5).abs() < 400.0);
+    }
+
+    #[test]
+    fn deadlines_consistent_with_utilization() {
+        let mut rng = Rng::new(3);
+        let ts = generate_offline(0.4, &cfg(), &mut rng);
+        for t in &ts.tasks {
+            assert!((t.window() - t.t_star() / t.u).abs() < 1e-9);
+            assert!(t.window() >= t.t_star() - 1e-9, "deadline tighter than t*");
+        }
+    }
+
+    #[test]
+    fn task_lengths_within_scaled_ranges() {
+        let mut rng = Rng::new(4);
+        let ts = generate_offline(0.4, &cfg(), &mut rng);
+        for t in &ts.tasks {
+            // t* = k (D + t0), k ∈ [10, 50], D+t0 ∈ [1.76, 8.56]
+            assert!(t.t_star() >= 10.0 * 1.76 - 1e-6);
+            assert!(t.t_star() <= 50.0 * 8.56 + 1e-6);
+        }
+    }
+
+    #[test]
+    fn online_slots_sum_to_stream() {
+        let mut rng = Rng::new(5);
+        let w = generate_online(&cfg(), &mut rng);
+        let total: usize = w.slots.iter().map(|r| r.len()).sum();
+        assert_eq!(total, w.online.len());
+        assert_eq!(w.slots.len(), 1440);
+        // every task's arrival matches its slot
+        for (i, r) in w.slots.iter().enumerate() {
+            for t in &w.online.tasks[r.clone()] {
+                assert_eq!(t.arrival, (i + 1) as f64);
+            }
+        }
+    }
+
+    #[test]
+    fn online_utilizations() {
+        let mut rng = Rng::new(6);
+        let w = generate_online(&cfg(), &mut rng);
+        assert!((w.offline.u_sum - 0.4 * 1024.0).abs() < 1.1);
+        assert!((w.online.u_sum - 1.6 * 1024.0).abs() < 1.1);
+        // Poisson λ ≈ N/1440 — arrival counts should be spread out
+        let nonzero = w.slots.iter().filter(|r| !r.is_empty()).count();
+        assert!(nonzero > 1000, "arrivals too bursty: {nonzero} non-empty slots");
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let a = generate_online(&cfg(), &mut Rng::new(9));
+        let b = generate_online(&cfg(), &mut Rng::new(9));
+        assert_eq!(a.total_tasks(), b.total_tasks());
+        for (x, y) in a.online.tasks.iter().zip(&b.online.tasks) {
+            assert_eq!(x.arrival, y.arrival);
+            assert_eq!(x.u, y.u);
+            assert_eq!(x.app, y.app);
+        }
+    }
+}

@@ -1,0 +1,10 @@
+//! Task model, the measured-application library, and the task-set
+//! generators (paper Sec. 5.1.3).
+
+pub mod generator;
+pub mod library;
+pub mod task;
+
+pub use generator::{generate_offline, generate_online, OnlineWorkload};
+pub use library::{App, LIBRARY};
+pub use task::{Task, TaskSet};

@@ -1,0 +1,131 @@
+//! Task and task-set types.
+
+use crate::dvfs::TaskModel;
+
+/// One schedulable job `J_i = {a_i, d_i, P_i, T_i}` (Sec. 3.2.1).
+#[derive(Clone, Copy, Debug)]
+pub struct Task {
+    pub id: usize,
+    /// Index into [`crate::tasks::LIBRARY`] (which application this is).
+    pub app: usize,
+    /// Fitted model, already scaled by the task-length factor.
+    pub model: TaskModel,
+    /// Arrival time `a_i` (slot units; 0 for offline tasks).
+    pub arrival: f64,
+    /// Absolute deadline `d_i = a_i + t*/u`.
+    pub deadline: f64,
+    /// Task utilization `u = t*/(d - a)` ∈ (0, 1].
+    pub u: f64,
+}
+
+impl Task {
+    /// Default (no-DVFS) execution time t*.
+    pub fn t_star(&self) -> f64 {
+        self.model.t_star()
+    }
+
+    /// Default (no-DVFS) runtime power P*.
+    pub fn p_star(&self) -> f64 {
+        self.model.p_star()
+    }
+
+    /// Allowed execution window `d_i - a_i`.
+    pub fn window(&self) -> f64 {
+        self.deadline - self.arrival
+    }
+
+    pub fn validate(&self) -> Result<(), String> {
+        self.model.validate()?;
+        if self.deadline < self.arrival {
+            return Err(format!("task {}: deadline before arrival", self.id));
+        }
+        if !(0.0 < self.u && self.u <= 1.0) {
+            return Err(format!("task {}: utilization {} not in (0,1]", self.id, self.u));
+        }
+        Ok(())
+    }
+}
+
+/// A generated task set with its bookkeeping.
+#[derive(Clone, Debug, Default)]
+pub struct TaskSet {
+    pub tasks: Vec<Task>,
+    /// Σ u_i (absolute, not normalized).
+    pub u_sum: f64,
+}
+
+impl TaskSet {
+    pub fn len(&self) -> usize {
+        self.tasks.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.tasks.is_empty()
+    }
+
+    /// Baseline energy: every task at the default setting (the paper's
+    /// non-DVFS l=1 reference where E_idle = 0).
+    pub fn baseline_energy(&self) -> f64 {
+        self.tasks.iter().map(|t| t.model.e_star()).sum()
+    }
+
+    /// Total default execution time.
+    pub fn total_t_star(&self) -> f64 {
+        self.tasks.iter().map(|t| t.t_star()).sum()
+    }
+
+    pub fn validate(&self) -> Result<(), String> {
+        for t in &self.tasks {
+            t.validate()?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mk(u: f64) -> Task {
+        let model = TaskModel {
+            p0: 57.0,
+            gamma: 28.5,
+            c: 104.5,
+            d: 5.0,
+            delta: 0.5,
+            t0: 0.5,
+        };
+        Task {
+            id: 0,
+            app: 0,
+            model,
+            arrival: 10.0,
+            deadline: 10.0 + model.t_star() / u,
+            u,
+        }
+    }
+
+    #[test]
+    fn window_matches_utilization() {
+        let t = mk(0.5);
+        assert!((t.window() - t.t_star() / 0.5).abs() < 1e-12);
+        assert!(t.validate().is_ok());
+    }
+
+    #[test]
+    fn validation_rejects_bad_u() {
+        let mut t = mk(0.5);
+        t.u = 1.5;
+        assert!(t.validate().is_err());
+    }
+
+    #[test]
+    fn baseline_energy_sums() {
+        let ts = TaskSet {
+            tasks: vec![mk(0.5), mk(0.25)],
+            u_sum: 0.75,
+        };
+        let expect = 2.0 * (57.0 + 28.5 + 104.5) * 5.5;
+        assert!((ts.baseline_energy() - expect).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,140 @@
+//! In-repo micro/macro benchmark harness (criterion is not in the offline
+//! crate set).  `cargo bench` runs `harness = false` binaries built on this:
+//! warmup + timed iterations, reporting mean/p50/p95 wall time and derived
+//! throughput.  Output is stable plain text so bench logs diff cleanly.
+
+use std::hint::black_box;
+use std::time::{Duration, Instant};
+
+pub use std::hint::black_box as bb;
+
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub mean: Duration,
+    pub p50: Duration,
+    pub p95: Duration,
+    pub min: Duration,
+}
+
+impl BenchResult {
+    pub fn per_sec(&self) -> f64 {
+        1.0 / self.mean.as_secs_f64()
+    }
+}
+
+pub struct Bencher {
+    warmup: usize,
+    min_iters: usize,
+    max_iters: usize,
+    target: Duration,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Bencher {
+            warmup: 3,
+            min_iters: 10,
+            max_iters: 1000,
+            target: Duration::from_secs(2),
+        }
+    }
+}
+
+impl Bencher {
+    pub fn quick() -> Self {
+        Bencher {
+            warmup: 1,
+            min_iters: 3,
+            max_iters: 50,
+            target: Duration::from_millis(500),
+        }
+    }
+
+    /// Time `f` adaptively: warmup, then iterate until `target` elapsed or
+    /// `max_iters` reached (whichever first, but at least `min_iters`).
+    pub fn run<T>(&self, name: &str, mut f: impl FnMut() -> T) -> BenchResult {
+        for _ in 0..self.warmup {
+            black_box(f());
+        }
+        let mut samples = Vec::new();
+        let started = Instant::now();
+        while samples.len() < self.min_iters
+            || (started.elapsed() < self.target && samples.len() < self.max_iters)
+        {
+            let t0 = Instant::now();
+            black_box(f());
+            samples.push(t0.elapsed());
+        }
+        samples.sort();
+        let n = samples.len();
+        let mean = samples.iter().sum::<Duration>() / n as u32;
+        let res = BenchResult {
+            name: name.to_string(),
+            iters: n,
+            mean,
+            p50: samples[n / 2],
+            p95: samples[(n * 95 / 100).min(n - 1)],
+            min: samples[0],
+        };
+        println!("{}", format_result(&res));
+        res
+    }
+}
+
+pub fn format_result(r: &BenchResult) -> String {
+    format!(
+        "bench {:<44} {:>10} mean {:>12} p50 {:>12} p95 {:>12} min ({} iters)",
+        r.name,
+        fmt_dur(r.mean),
+        fmt_dur(r.p50),
+        fmt_dur(r.p95),
+        fmt_dur(r.min),
+        r.iters
+    )
+}
+
+pub fn fmt_dur(d: Duration) -> String {
+    let ns = d.as_nanos();
+    if ns < 1_000 {
+        format!("{ns}ns")
+    } else if ns < 1_000_000 {
+        format!("{:.2}µs", ns as f64 / 1e3)
+    } else if ns < 1_000_000_000 {
+        format!("{:.2}ms", ns as f64 / 1e6)
+    } else {
+        format!("{:.3}s", ns as f64 / 1e9)
+    }
+}
+
+/// Section header for bench binaries (keeps `cargo bench` output scannable).
+pub fn section(title: &str) {
+    println!("\n=== {title} ===");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_runs_and_reports() {
+        let b = Bencher {
+            warmup: 1,
+            min_iters: 5,
+            max_iters: 10,
+            target: Duration::from_millis(10),
+        };
+        let r = b.run("noop", || 1 + 1);
+        assert!(r.iters >= 5);
+        assert!(r.min <= r.p50 && r.p50 <= r.p95);
+    }
+
+    #[test]
+    fn fmt_dur_scales() {
+        assert_eq!(fmt_dur(Duration::from_nanos(500)), "500ns");
+        assert!(fmt_dur(Duration::from_micros(5)).ends_with("µs"));
+        assert!(fmt_dur(Duration::from_millis(5)).ends_with("ms"));
+        assert!(fmt_dur(Duration::from_secs(2)).ends_with('s'));
+    }
+}

@@ -1,0 +1,16 @@
+//! Self-contained utility substrate.
+//!
+//! The offline build environment ships only the `xla` crate closure, so the
+//! pieces a project would normally pull from crates.io — PRNG, statistics,
+//! table/CSV/JSON output, a property-testing harness and a bench timer —
+//! are implemented here.
+
+pub mod bench;
+pub mod json;
+pub mod proptest;
+pub mod rng;
+pub mod stats;
+pub mod table;
+
+pub use rng::Rng;
+pub use stats::Summary;

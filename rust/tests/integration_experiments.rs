@@ -1,0 +1,63 @@
+//! Experiment-harness integration: every registered experiment runs in
+//! quick mode, produces non-empty tables, and writes CSV when asked.
+
+use dvfs_sched::config::SimConfig;
+use dvfs_sched::experiments::{self, ExpCtx};
+
+fn quick_ctx() -> ExpCtx {
+    let mut cfg = SimConfig::default();
+    cfg.reps = 2;
+    cfg.gen.base_pairs = 32;
+    cfg.gen.horizon = 180;
+    cfg.cluster.total_pairs = 128;
+    ExpCtx::new(cfg).quick()
+}
+
+#[test]
+fn registry_covers_every_paper_artifact() {
+    let ids: Vec<&str> = experiments::REGISTRY.iter().map(|e| e.id).collect();
+    for want in [
+        "table3", "fig3", "fig4", "fig5", "fig6", "fig7", "fig8", "fig9", "fig10",
+        "fig11", "fig12", "fig13",
+    ] {
+        assert!(ids.contains(&want), "missing experiment {want}");
+    }
+    // + the two extension experiments (Sec. 6 future work)
+    assert!(ids.contains(&"ext-hetero") && ids.contains(&"ext-gang"));
+    assert_eq!(ids.len(), 14);
+}
+
+#[test]
+fn every_experiment_runs_quick() {
+    let ctx = quick_ctx();
+    for e in experiments::REGISTRY {
+        let tables = (e.run)(&ctx);
+        assert!(!tables.is_empty(), "{} produced no tables", e.id);
+        for t in &tables {
+            assert!(t.num_rows() > 0, "{} produced an empty table", e.id);
+            // render + csv must not panic and must be non-trivial
+            assert!(t.render().lines().count() >= 4);
+            assert!(t.to_csv().lines().count() >= 2);
+        }
+    }
+}
+
+#[test]
+fn csv_emission_writes_files() {
+    let dir = std::env::temp_dir().join(format!("dvfs_exp_{}", std::process::id()));
+    let mut ctx = quick_ctx();
+    ctx.out_dir = Some(dir.to_string_lossy().to_string());
+    let e = experiments::find("fig4").unwrap();
+    (e.run)(&ctx);
+    let per_app = dir.join("fig4_per_app.csv");
+    assert!(per_app.exists(), "{per_app:?} missing");
+    let content = std::fs::read_to_string(&per_app).unwrap();
+    assert!(content.lines().count() > 20);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn find_rejects_unknown() {
+    assert!(experiments::find("fig99").is_none());
+    assert!(experiments::find("fig5").is_some());
+}

@@ -1,0 +1,139 @@
+//! Offline end-to-end integration: generator → Algorithm 1 → policies →
+//! Algorithm 3 → energy reports, at reduced-but-realistic scale, on both
+//! solver backends.
+
+use dvfs_sched::config::SimConfig;
+use dvfs_sched::runtime::Solver;
+use dvfs_sched::sched::{prepare, report, schedule_offline, OfflinePolicy};
+use dvfs_sched::sim::offline::{run_offline, run_offline_reps};
+use dvfs_sched::tasks::generate_offline;
+use dvfs_sched::util::Rng;
+
+fn cfg() -> SimConfig {
+    let mut c = SimConfig::default();
+    c.gen.base_pairs = 128;
+    c.cluster.total_pairs = 512;
+    c.reps = 4;
+    c
+}
+
+#[test]
+fn full_offline_pipeline_all_policies() {
+    let cfg = cfg();
+    let solver = Solver::native();
+    for policy in OfflinePolicy::ALL {
+        for dvfs in [false, true] {
+            let mut rng = Rng::new(100);
+            let o = run_offline(policy, 1.0, dvfs, &cfg, &solver, &mut rng);
+            assert_eq!(o.report.violations, 0, "{} dvfs={dvfs}", policy.name());
+            assert!(o.report.e_total > 0.0);
+            assert!(o.report.pairs_used <= cfg.cluster.total_pairs);
+            if dvfs {
+                assert!(o.saving() > 0.2, "{}: {}", policy.name(), o.saving());
+            }
+        }
+    }
+}
+
+#[test]
+fn edl_saving_close_to_paper_at_l1() {
+    // Paper Fig 5b: DVFS savings ~33.5% (l=1) across U_J.
+    let cfg = cfg();
+    let solver = Solver::native();
+    for u in [0.4, 1.0, 1.6] {
+        let agg = run_offline_reps(OfflinePolicy::Edl, u, true, &cfg, &solver);
+        let s = agg.saving.mean();
+        assert!((0.30..0.40).contains(&s), "U={u}: saving {s}");
+    }
+}
+
+#[test]
+fn deadline_prior_fraction_small_but_nonzero() {
+    let cfg = cfg();
+    let solver = Solver::native();
+    let mut rng = Rng::new(3);
+    let o = run_offline(OfflinePolicy::Edl, 1.0, true, &cfg, &solver, &mut rng);
+    let frac = o.n_deadline_prior as f64 / o.n_tasks as f64;
+    assert!(
+        (0.01..0.5).contains(&frac),
+        "deadline-prior fraction {frac} implausible"
+    );
+}
+
+#[test]
+fn pjrt_backend_full_offline_run() {
+    let dir = format!("{}/artifacts", env!("CARGO_MANIFEST_DIR"));
+    let pjrt = match Solver::pjrt(&dir) {
+        Ok(s) => s,
+        Err(e) => panic!("artifacts must be built for integration tests: {e:#}"),
+    };
+    let native = Solver::native();
+    let cfg = cfg();
+    let mut rng = Rng::new(11);
+    let ts = generate_offline(0.8, &cfg.gen, &mut rng);
+
+    let prep_p = prepare(&ts.tasks, &pjrt, &cfg.interval, true);
+    let prep_n = prepare(&ts.tasks, &native, &cfg.interval, true);
+    // class agreement (modulo boundary ties) and energy agreement
+    let mut disagreements = 0;
+    for (a, b) in prep_p.iter().zip(&prep_n) {
+        if a.class != b.class {
+            disagreements += 1;
+        }
+        let rel = (a.setting.e - b.setting.e).abs() / b.setting.e;
+        assert!(rel < 5e-3, "energy drift {rel}");
+    }
+    assert!(
+        disagreements * 100 <= prep_p.len(),
+        "{disagreements} class disagreements / {}",
+        prep_p.len()
+    );
+
+    let s_p = schedule_offline(OfflinePolicy::Edl, &prep_p, 0.9, &pjrt, &cfg.interval);
+    let s_n = schedule_offline(OfflinePolicy::Edl, &prep_n, 0.9, &native, &cfg.interval);
+    assert_eq!(s_p.violations, 0);
+    let r_p = report(&s_p, &cfg.cluster);
+    let r_n = report(&s_n, &cfg.cluster);
+    let rel = (r_p.e_total - r_n.e_total).abs() / r_n.e_total;
+    assert!(rel < 0.01, "backend total-energy drift {rel}");
+}
+
+#[test]
+fn infeasible_overload_detected() {
+    // With more utilization than pairs can absorb, EDL must still respect
+    // deadlines by opening pairs — the cap makes placements forced and
+    // violations visible rather than silent.
+    let mut cfg = cfg();
+    cfg.cluster.total_pairs = 8;
+    cfg.cluster.pairs_per_server = 1;
+    cfg.gen.base_pairs = 128;
+    let solver = Solver::native();
+    let mut rng = Rng::new(13);
+    let ts = generate_offline(1.0, &cfg.gen, &mut rng);
+    let prepared = prepare(&ts.tasks, &solver, &cfg.interval, true);
+    let s = schedule_offline(OfflinePolicy::Edl, &prepared, 1.0, &solver, &cfg.interval);
+    // offline scheduler model opens as many pairs as needed — the report
+    // exposes the overflow to the caller
+    let r = report(&s, &cfg.cluster);
+    assert!(
+        r.pairs_used > cfg.cluster.total_pairs,
+        "overload should need more pairs than the cluster has"
+    );
+}
+
+#[test]
+fn narrow_interval_saves_less_than_wide() {
+    let mut cfg_n = cfg();
+    cfg_n.interval = dvfs_sched::dvfs::ScalingInterval::narrow();
+    let cfg_w = cfg();
+    let solver = Solver::native();
+    let wide = run_offline_reps(OfflinePolicy::Edl, 1.0, true, &cfg_w, &solver);
+    let narrow = run_offline_reps(OfflinePolicy::Edl, 1.0, true, &cfg_n, &solver);
+    assert!(
+        wide.saving.mean() > narrow.saving.mean(),
+        "wide {} <= narrow {}",
+        wide.saving.mean(),
+        narrow.saving.mean()
+    );
+    assert!(narrow.saving.mean() > 0.0);
+}

@@ -1,0 +1,140 @@
+//! Online end-to-end integration: workload generator → Algorithm 4/5 slot
+//! loop (or Algorithm 6) → DRS → energy decomposition, including a
+//! PJRT-backed run (the production path).
+
+use dvfs_sched::config::SimConfig;
+use dvfs_sched::runtime::Solver;
+use dvfs_sched::sim::online::{run_online, run_online_workload, OnlinePolicyKind};
+use dvfs_sched::tasks::generate_online;
+use dvfs_sched::util::Rng;
+
+fn cfg() -> SimConfig {
+    let mut c = SimConfig::default();
+    c.gen.base_pairs = 64;
+    c.gen.horizon = 480;
+    c.cluster.total_pairs = 256;
+    c.reps = 3;
+    c
+}
+
+#[test]
+fn online_edl_paper_shape() {
+    let cfg = cfg();
+    let solver = Solver::native();
+    let mut rng = Rng::new(1);
+    let w = generate_online(&cfg.gen, &mut rng);
+
+    let mut cfg9 = cfg.clone();
+    cfg9.theta = 0.9;
+    let base = run_online_workload(OnlinePolicyKind::Edl, &w, false, &cfg, &solver);
+    let dvfs1 = run_online_workload(OnlinePolicyKind::Edl, &w, true, &cfg, &solver);
+    let dvfs9 = run_online_workload(OnlinePolicyKind::Edl, &w, true, &cfg9, &solver);
+
+    // no violations anywhere
+    for o in [&base, &dvfs1, &dvfs9] {
+        assert_eq!(o.violations, 0);
+        assert_eq!(o.forced, 0);
+    }
+    // baseline run energy equals the task-set default energy
+    assert!((base.e_run - base.baseline_e).abs() / base.baseline_e < 1e-9);
+    // DVFS cuts ~1/3 of runtime energy (paper: 34.7%)
+    let cut = 1.0 - dvfs1.e_run / base.e_run;
+    assert!((0.28..0.42).contains(&cut), "run cut {cut}");
+    // θ=0.9 readjusts some tasks and never violates
+    assert!(dvfs9.readjusted > 0);
+    // total reduction in the paper band
+    let red = 1.0 - dvfs9.e_total() / base.e_total();
+    assert!((0.25..0.42).contains(&red), "reduction {red}");
+}
+
+#[test]
+fn online_bin_comparable_energy() {
+    let cfg = cfg();
+    let solver = Solver::native();
+    let mut rng = Rng::new(2);
+    let w = generate_online(&cfg.gen, &mut rng);
+    let edl = run_online_workload(OnlinePolicyKind::Edl, &w, true, &cfg, &solver);
+    let bin = run_online_workload(OnlinePolicyKind::Bin, &w, true, &cfg, &solver);
+    assert_eq!(bin.violations, 0);
+    // same prepared settings → same run energy; totals within a few %
+    let rel = (edl.e_run - bin.e_run).abs() / edl.e_run;
+    assert!(rel < 0.01, "run-energy differs {rel}");
+    let tot = (edl.e_total() - bin.e_total()).abs() / edl.e_total();
+    assert!(tot < 0.10, "totals diverge {tot}");
+}
+
+#[test]
+fn drs_turns_cluster_off_and_idle_bounded() {
+    let cfg = cfg();
+    let solver = Solver::native();
+    let mut rng = Rng::new(3);
+    let o = run_online(OnlinePolicyKind::Edl, true, &cfg, &solver, &mut rng);
+    // the drain loop only exits once every server is off, so completing
+    // proves DRS shut everything down
+    assert!(o.slots >= cfg.gen.horizon);
+    // idle energy bounded: every pair idles at least rho before turn-off,
+    // but idle should stay well below run energy at l=1
+    assert!(o.e_idle < 0.2 * o.e_run, "idle {} vs run {}", o.e_idle, o.e_run);
+}
+
+#[test]
+fn overhead_accounting_consistent() {
+    let cfg = cfg();
+    let solver = Solver::native();
+    let mut rng = Rng::new(4);
+    let o = run_online(OnlinePolicyKind::Edl, true, &cfg, &solver, &mut rng);
+    assert!(
+        (o.e_overhead - o.turn_ons as f64 * cfg.cluster.delta_overhead).abs() < 1e-9
+    );
+    // servers must have been re-awakened at least once across a day with
+    // Poisson gaps (pure lower bound: ≥ servers_used × l pairs)
+    assert!(o.turn_ons as usize >= o.servers_used * cfg.cluster.pairs_per_server);
+}
+
+#[test]
+fn pjrt_backend_full_online_run() {
+    let dir = format!("{}/artifacts", env!("CARGO_MANIFEST_DIR"));
+    let pjrt = match Solver::pjrt(&dir) {
+        Ok(s) => s,
+        Err(e) => panic!("artifacts must be built for integration tests: {e:#}"),
+    };
+    let native = Solver::native();
+    let mut cfg = cfg();
+    cfg.gen.horizon = 240;
+    cfg.theta = 0.9;
+    let mut rng = Rng::new(5);
+    let w = generate_online(&cfg.gen, &mut rng);
+    let p = run_online_workload(OnlinePolicyKind::Edl, &w, true, &cfg, &pjrt);
+    let n = run_online_workload(OnlinePolicyKind::Edl, &w, true, &cfg, &native);
+    assert_eq!(p.violations, 0);
+    let rel = (p.e_total() - n.e_total()).abs() / n.e_total();
+    assert!(rel < 0.01, "backend drift on full online run: {rel}");
+}
+
+#[test]
+fn larger_l_monotone_idle_energy() {
+    // Fig 10's driver: idle energy grows with server width
+    let solver = Solver::native();
+    let base = cfg();
+    let mut rng = Rng::new(6);
+    let w = generate_online(&base.gen, &mut rng);
+    let mut idles = Vec::new();
+    for l in [1usize, 4, 16] {
+        let mut c = cfg();
+        c.cluster.pairs_per_server = l;
+        let o = run_online_workload(OnlinePolicyKind::Edl, &w, true, &c, &solver);
+        idles.push((l, o.e_idle));
+    }
+    assert!(idles[0].1 <= idles[1].1 && idles[1].1 <= idles[2].1, "{idles:?}");
+}
+
+#[test]
+fn zero_online_utilization_still_works() {
+    let mut c = cfg();
+    c.gen.u_on = 0.0;
+    let solver = Solver::native();
+    let mut rng = Rng::new(7);
+    let o = run_online(OnlinePolicyKind::Edl, true, &c, &solver, &mut rng);
+    assert!(o.n_tasks > 0); // offline batch remains
+    assert_eq!(o.violations, 0);
+}

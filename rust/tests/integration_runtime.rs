@@ -1,0 +1,164 @@
+//! PJRT runtime integration: load the AOT artifacts, execute them, and
+//! cross-validate against the native analytical solver.
+//!
+//! Requires `make artifacts` to have produced `artifacts/*.hlo.txt`.
+
+use dvfs_sched::dvfs::{ScalingInterval, TaskModel};
+use dvfs_sched::runtime::{Graph, SolveReq, Solver};
+use dvfs_sched::tasks::LIBRARY;
+use dvfs_sched::util::Rng;
+
+fn artifacts_dir() -> String {
+    format!("{}/artifacts", env!("CARGO_MANIFEST_DIR"))
+}
+
+fn random_reqs(n: usize, seed: u64, cap_frac: Option<(f64, f64)>) -> Vec<SolveReq> {
+    let mut rng = Rng::new(seed);
+    (0..n)
+        .map(|_| {
+            let base = LIBRARY[rng.index(LIBRARY.len())].model;
+            let k = rng.int_range(1, 50) as f64;
+            let model = base.scaled(k);
+            let tlim = match cap_frac {
+                None => f64::INFINITY,
+                Some((lo, hi)) => model.t_star() * rng.uniform(lo, hi),
+            };
+            SolveReq { model, tlim }
+        })
+        .collect()
+}
+
+fn assert_close(a: f64, b: f64, rtol: f64, what: &str) {
+    let denom = a.abs().max(b.abs()).max(1e-9);
+    assert!(
+        (a - b).abs() / denom < rtol,
+        "{what}: {a} vs {b} (rtol {rtol})"
+    );
+}
+
+#[test]
+fn pjrt_engine_loads() {
+    let solver = Solver::pjrt(&artifacts_dir()).expect("engine load");
+    assert_eq!(solver.backend_name(), "pjrt");
+}
+
+#[test]
+fn pjrt_matches_native_unconstrained() {
+    let pjrt = Solver::pjrt(&artifacts_dir()).unwrap();
+    let native = Solver::native();
+    let iv = ScalingInterval::wide();
+    let reqs = random_reqs(300, 11, None); // spans >1 chunk (BATCH_N=256)
+    let a = pjrt.solve_opt_batch(&reqs, &iv);
+    let b = native.solve_opt_batch(&reqs, &iv);
+    for (i, (x, y)) in a.iter().zip(&b).enumerate() {
+        assert_eq!(x.feasible, y.feasible, "req {i}");
+        // f32 kernel vs f64 native: settings can differ by a grid cell on
+        // flat energy surfaces — compare achieved ENERGY tightly and the
+        // setting loosely.
+        assert_close(x.e, y.e, 2e-3, &format!("req {i} energy"));
+        assert_close(x.t, y.t, 0.15, &format!("req {i} time"));
+    }
+}
+
+#[test]
+fn pjrt_matches_native_capped() {
+    let pjrt = Solver::pjrt(&artifacts_dir()).unwrap();
+    let native = Solver::native();
+    let iv = ScalingInterval::wide();
+    let reqs = random_reqs(256, 13, Some((0.8, 1.4)));
+    let a = pjrt.solve_opt_batch(&reqs, &iv);
+    let b = native.solve_opt_batch(&reqs, &iv);
+    for (i, (x, y)) in a.iter().zip(&b).enumerate() {
+        assert_eq!(x.feasible, y.feasible, "req {i}");
+        if x.feasible {
+            assert_close(x.e, y.e, 2e-3, &format!("req {i} energy"));
+            assert!(x.t <= reqs[i].tlim * (1.0 + 1e-3), "req {i} cap violated");
+        }
+    }
+}
+
+#[test]
+fn pjrt_matches_native_exact() {
+    let pjrt = Solver::pjrt(&artifacts_dir()).unwrap();
+    let native = Solver::native();
+    let iv = ScalingInterval::wide();
+    let reqs = random_reqs(256, 17, Some((0.7, 1.2)));
+    let a = pjrt.solve_exact_batch(&reqs, &iv);
+    let b = native.solve_exact_batch(&reqs, &iv);
+    for (i, (x, y)) in a.iter().zip(&b).enumerate() {
+        assert_eq!(x.feasible, y.feasible, "req {i}");
+        if x.feasible {
+            assert_close(x.e, y.e, 2e-3, &format!("req {i} energy"));
+            assert!(x.t <= reqs[i].tlim * (1.0 + 1e-3), "req {i} target exceeded");
+        }
+    }
+}
+
+#[test]
+fn pjrt_fused_matches_native_window() {
+    let pjrt = Solver::pjrt(&artifacts_dir()).unwrap();
+    let native = Solver::native();
+    let iv = ScalingInterval::wide();
+    let reqs = random_reqs(256, 19, Some((0.75, 1.5)));
+    let a = pjrt.solve_window_batch(&reqs, &iv);
+    let b = native.solve_window_batch(&reqs, &iv);
+    for (i, (x, y)) in a.iter().zip(&b).enumerate() {
+        assert_eq!(x.feasible, y.feasible, "req {i}");
+        if x.feasible {
+            assert_close(x.e, y.e, 2e-3, &format!("req {i} energy"));
+        }
+    }
+}
+
+#[test]
+fn pjrt_narrow_interval() {
+    let pjrt = Solver::pjrt(&artifacts_dir()).unwrap();
+    let native = Solver::native();
+    let iv = ScalingInterval::narrow();
+    let reqs = random_reqs(128, 23, None);
+    let a = pjrt.solve_opt_batch(&reqs, &iv);
+    let b = native.solve_opt_batch(&reqs, &iv);
+    for (i, (x, y)) in a.iter().zip(&b).enumerate() {
+        assert_close(x.e, y.e, 2e-3, &format!("req {i} energy (narrow)"));
+        assert!(
+            iv.contains(x.v, x.fc, x.fm),
+            "req {i} setting outside interval: {x:?}"
+        );
+    }
+}
+
+#[test]
+fn pjrt_partial_and_multi_chunk_batches() {
+    let pjrt = Solver::pjrt(&artifacts_dir()).unwrap();
+    let iv = ScalingInterval::wide();
+    for n in [1usize, 7, 255, 256, 257, 600] {
+        let reqs = random_reqs(n, 29 + n as u64, None);
+        let out = pjrt.solve_opt_batch(&reqs, &iv);
+        assert_eq!(out.len(), n);
+        assert!(out.iter().all(|s| s.feasible), "n={n}");
+    }
+}
+
+#[test]
+fn pjrt_infeasible_rows_flagged() {
+    let pjrt = Solver::pjrt(&artifacts_dir()).unwrap();
+    let iv = ScalingInterval::wide();
+    let m = TaskModel {
+        p0: 57.0,
+        gamma: 28.5,
+        c: 104.5,
+        d: 5.0,
+        delta: 0.5,
+        t0: 0.5,
+    };
+    // impossible: cap below the t0 floor
+    let reqs = vec![SolveReq { model: m, tlim: 0.2 }];
+    for graph in [Graph::Opt, Graph::Readjust, Graph::Fused] {
+        let out = match graph {
+            Graph::Opt => pjrt.solve_opt_batch(&reqs, &iv),
+            Graph::Readjust => pjrt.solve_exact_batch(&reqs, &iv),
+            Graph::Fused => pjrt.solve_window_batch(&reqs, &iv),
+        };
+        assert!(!out[0].feasible, "{graph:?} should be infeasible");
+    }
+}

@@ -1,0 +1,292 @@
+//! Property-based tests on the coordinator's invariants (in-repo harness,
+//! `util::proptest`).  Seeds are reproducible via `CASE_SEED=<n>`.
+
+use dvfs_sched::config::{ClusterConfig, SimConfig};
+use dvfs_sched::dvfs::{g1, solve_exact, solve_opt, ScalingInterval, GRID_DEFAULT};
+use dvfs_sched::runtime::Solver;
+use dvfs_sched::sched::online::{EdlOnline, OnlinePolicy, SchedCtx};
+use dvfs_sched::sched::{prepare, schedule_offline, OfflinePolicy};
+use dvfs_sched::sim::online::{run_online_workload, OnlinePolicyKind};
+use dvfs_sched::tasks::{generate_online, Task, LIBRARY};
+use dvfs_sched::util::proptest::{check, check_shrink, shrink_vec_removals, Config};
+use dvfs_sched::util::Rng;
+
+fn rand_task(id: usize, rng: &mut Rng) -> Task {
+    let app = rng.index(LIBRARY.len());
+    let model = LIBRARY[app].model.scaled(rng.int_range(1, 50) as f64);
+    let u = rng.open01().max(0.02);
+    let arrival = if rng.f64() < 0.5 {
+        0.0
+    } else {
+        rng.uniform(0.0, 100.0).floor()
+    };
+    Task {
+        id,
+        app,
+        model,
+        arrival,
+        deadline: arrival + model.t_star() / u,
+        u,
+    }
+}
+
+fn rand_taskset(rng: &mut Rng) -> Vec<Task> {
+    let n = rng.index(60) + 1;
+    let mut tasks: Vec<Task> = (0..n).map(|i| rand_task(i, rng)).collect();
+    for t in &mut tasks {
+        t.arrival = 0.0;
+        t.deadline = t.model.t_star() / t.u;
+    }
+    tasks
+}
+
+#[test]
+fn prop_prepared_settings_valid() {
+    let solver = Solver::native();
+    let iv = ScalingInterval::wide();
+    check(
+        "prepared settings valid",
+        Config::default(),
+        rand_taskset,
+        |tasks| {
+            let prepared = prepare(tasks, &solver, &iv, true);
+            for p in &prepared {
+                if !p.setting.feasible {
+                    return Err(format!("infeasible setting for u={}", p.task.u));
+                }
+                if !iv.contains(p.setting.v, p.setting.fc, p.setting.fm) {
+                    return Err(format!("setting outside interval: {:?}", p.setting));
+                }
+                if p.setting.t > p.task.window() * (1.0 + 1e-4) {
+                    return Err(format!(
+                        "setting time {} exceeds window {}",
+                        p.setting.t,
+                        p.task.window()
+                    ));
+                }
+                // energy-prior tasks keep the unconstrained optimum, which
+                // never exceeds default energy
+                if p.task.window() >= p.task.t_star() && p.free.e > p.task.model.e_star() * (1.0 + 1e-9)
+                {
+                    return Err("free optimum worse than default".into());
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_offline_edl_schedule_invariants() {
+    let solver = Solver::native();
+    let iv = ScalingInterval::wide();
+    let prop = |tasks: &Vec<Task>| -> Result<(), String> {
+        let prepared = prepare(tasks, &solver, &iv, true);
+        let s = schedule_offline(OfflinePolicy::Edl, &prepared, 0.85, &solver, &iv);
+        if s.violations != 0 {
+            return Err(format!("{} deadline violations", s.violations));
+        }
+        let placed: usize = s.loads.iter().map(|l| l.placements.len()).sum();
+        if placed != tasks.len() {
+            return Err(format!("{placed} placed != {} tasks", tasks.len()));
+        }
+        // sequential, non-overlapping timelines; e_run consistency
+        let mut e_sum = 0.0;
+        for load in &s.loads {
+            let mut t = 0.0;
+            for p in &load.placements {
+                if p.start < t - 1e-9 {
+                    return Err("overlapping placements".into());
+                }
+                t = p.end();
+                e_sum += p.energy();
+            }
+            if (load.finish - t).abs() > 1e-6 {
+                return Err("finish != last end".into());
+            }
+        }
+        if (e_sum - s.e_run).abs() > 1e-6 * e_sum.max(1.0) {
+            return Err("e_run mismatch".into());
+        }
+        Ok(())
+    };
+    check_shrink(
+        "offline EDL invariants",
+        Config::default(),
+        &mut rand_taskset,
+        &prop,
+        |ts| shrink_vec_removals(ts),
+    );
+}
+
+#[test]
+fn prop_theta_never_increases_pairs() {
+    let solver = Solver::native();
+    let iv = ScalingInterval::wide();
+    check(
+        "theta<=1 never increases pairs",
+        Config {
+            iters: 32,
+            ..Default::default()
+        },
+        rand_taskset,
+        |tasks| {
+            let prepared = prepare(tasks, &solver, &iv, true);
+            let strict = schedule_offline(OfflinePolicy::Edl, &prepared, 1.0, &solver, &iv);
+            let relaxed = schedule_offline(OfflinePolicy::Edl, &prepared, 0.8, &solver, &iv);
+            if relaxed.pairs_used() > strict.pairs_used() {
+                return Err(format!(
+                    "θ=0.8 used {} pairs > θ=1 {}",
+                    relaxed.pairs_used(),
+                    strict.pairs_used()
+                ));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_solver_beats_random_feasible_settings() {
+    let iv = ScalingInterval::wide();
+    check(
+        "opt <= random settings",
+        Config::default(),
+        |rng| {
+            let m = LIBRARY[rng.index(LIBRARY.len())]
+                .model
+                .scaled(rng.int_range(1, 50) as f64);
+            let probes: Vec<(f64, f64)> = (0..64)
+                .map(|_| {
+                    let v = rng.uniform(iv.v_min, iv.v_max);
+                    let fm = rng.uniform(iv.fm_min, iv.fm_max);
+                    (v, fm)
+                })
+                .collect();
+            (m, probes)
+        },
+        |(m, probes)| {
+            let opt = solve_opt(m, f64::INFINITY, &iv, GRID_DEFAULT);
+            for &(v, fm) in probes {
+                let fc = g1(v).max(iv.fc_min);
+                let e = m.energy(v, fc, fm);
+                // grid resolution allowance
+                if opt.e > e * (1.0 + 2e-3) {
+                    return Err(format!("random ({v:.3},{fm:.3}) beats solver: {e} < {}", opt.e));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_exact_solve_never_exceeds_target() {
+    let iv = ScalingInterval::wide();
+    check(
+        "exact-time never exceeds target",
+        Config::default(),
+        |rng| {
+            let m = LIBRARY[rng.index(LIBRARY.len())]
+                .model
+                .scaled(rng.int_range(1, 50) as f64);
+            let target = m.t_star() * rng.uniform(0.5, 2.0);
+            (m, target)
+        },
+        |(m, target)| {
+            let s = solve_exact(m, *target, &iv, GRID_DEFAULT);
+            if s.feasible {
+                if s.t > target * (1.0 + 1e-4) {
+                    return Err(format!("t {} > target {target}", s.t));
+                }
+                let free = solve_opt(m, f64::INFINITY, &iv, GRID_DEFAULT);
+                if s.e < free.e * (1.0 - 2e-3) {
+                    return Err("constrained beat unconstrained".into());
+                }
+            } else if *target > m.t_star() {
+                return Err(format!("target {target} > t* must be feasible"));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_online_energy_identity_and_determinism() {
+    let solver = Solver::native();
+    check(
+        "online identity + determinism",
+        Config {
+            iters: 12,
+            ..Default::default()
+        },
+        |rng| rng.next_u64(),
+        |&seed| {
+            let mut cfg = SimConfig::default();
+            cfg.gen.base_pairs = 16;
+            cfg.gen.horizon = 120;
+            cfg.cluster.total_pairs = 64;
+            cfg.theta = 0.9;
+            let mut r1 = Rng::new(seed);
+            let w = generate_online(&cfg.gen, &mut r1);
+            let a = run_online_workload(OnlinePolicyKind::Edl, &w, true, &cfg, &solver);
+            let b = run_online_workload(OnlinePolicyKind::Edl, &w, true, &cfg, &solver);
+            if (a.e_total() - b.e_total()).abs() > 1e-9 {
+                return Err("non-deterministic".into());
+            }
+            if a.violations != 0 {
+                return Err(format!("{} violations", a.violations));
+            }
+            let identity = a.e_run + a.e_idle + a.e_overhead;
+            if (identity - a.e_total()).abs() > 1e-9 {
+                return Err("energy identity broken".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_online_batch_assignment_respects_deadlines() {
+    let solver = Solver::native();
+    let iv = ScalingInterval::wide();
+    check(
+        "single-batch online EDL meets deadlines",
+        Config {
+            iters: 48,
+            ..Default::default()
+        },
+        |rng| {
+            let n = rng.index(24) + 1;
+            (0..n).map(|i| rand_task(i, rng)).collect::<Vec<Task>>()
+        },
+        |tasks| {
+            // all tasks in one arrival batch at the earliest arrival time
+            let t0 = tasks.iter().map(|t| t.arrival).fold(f64::INFINITY, f64::min);
+            let batch: Vec<Task> = tasks
+                .iter()
+                .map(|t| Task {
+                    arrival: t0,
+                    deadline: t0 + t.window(),
+                    ..*t
+                })
+                .collect();
+            let mut cluster = dvfs_sched::cluster::Cluster::new(ClusterConfig {
+                total_pairs: 256,
+                ..ClusterConfig::default()
+            });
+            let mut edl = EdlOnline::new();
+            let ctx = SchedCtx {
+                solver: &solver,
+                iv,
+                dvfs: true,
+                theta: 0.9,
+            };
+            edl.assign(t0, &batch, &mut cluster, &ctx);
+            if cluster.violations != 0 {
+                return Err(format!("{} violations", cluster.violations));
+            }
+            Ok(())
+        },
+    );
+}

@@ -1,0 +1,218 @@
+//! Robustness and failure-injection tests: config loading, artifact
+//! corruption, backend fallback, CLI end-to-end, and degenerate workloads.
+
+use dvfs_sched::config::{Backend, SimConfig};
+use dvfs_sched::runtime::Solver;
+use dvfs_sched::sim::online::{run_online, OnlinePolicyKind};
+use dvfs_sched::util::Rng;
+use std::process::Command;
+
+fn manifest(path: &str) -> String {
+    format!("{}/{}", env!("CARGO_MANIFEST_DIR"), path)
+}
+
+// ---------------------------------------------------------------------------
+// config files
+// ---------------------------------------------------------------------------
+
+#[test]
+fn shipped_configs_load_and_validate() {
+    for name in ["paper", "quick", "pjrt"] {
+        let cfg = SimConfig::from_file(&manifest(&format!("configs/{name}.toml")))
+            .unwrap_or_else(|e| panic!("configs/{name}.toml: {e}"));
+        cfg.validate().unwrap();
+    }
+}
+
+#[test]
+fn paper_config_equals_defaults() {
+    let mut cfg = SimConfig::from_file(&manifest("configs/paper.toml")).unwrap();
+    let defaults = SimConfig::default();
+    // reps differs intentionally; normalize before comparing the rest
+    cfg.reps = defaults.reps;
+    assert_eq!(cfg.cluster, defaults.cluster);
+    assert_eq!(cfg.gen, defaults.gen);
+    assert_eq!(cfg.interval, defaults.interval);
+    assert_eq!(cfg.theta, defaults.theta);
+}
+
+#[test]
+fn config_typo_is_fatal() {
+    let dir = std::env::temp_dir().join(format!("dvfs_cfg_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("typo.toml");
+    std::fs::write(&path, "theta = 0.9\n[cluster]\npair_per_server = 4\n").unwrap();
+    let err = SimConfig::from_file(path.to_str().unwrap()).unwrap_err();
+    assert!(err.contains("pair_per_server"), "{err}");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+// ---------------------------------------------------------------------------
+// artifact failure injection
+// ---------------------------------------------------------------------------
+
+#[test]
+fn missing_artifacts_dir_errors_and_fallback_works() {
+    assert!(Solver::pjrt("/nonexistent/artifacts").is_err());
+    let mut cfg = SimConfig::default();
+    cfg.backend = Backend::Pjrt;
+    cfg.artifacts_dir = "/nonexistent/artifacts".into();
+    // from_config falls back to native with a warning instead of dying
+    let solver = Solver::from_config(&cfg);
+    assert_eq!(solver.backend_name(), "native");
+}
+
+#[test]
+fn corrupted_hlo_rejected() {
+    let dir = std::env::temp_dir().join(format!("dvfs_bad_art_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    // valid meta, garbage HLO
+    std::fs::copy(manifest("artifacts/meta.json"), dir.join("meta.json")).unwrap();
+    for name in ["dvfs_opt", "dvfs_readjust", "dvfs_fused"] {
+        std::fs::write(dir.join(format!("{name}.hlo.txt")), "HloModule broken\n!!!").unwrap();
+    }
+    assert!(Solver::pjrt(dir.to_str().unwrap()).is_err());
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn meta_layout_mismatch_rejected() {
+    let dir = std::env::temp_dir().join(format!("dvfs_bad_meta_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let meta = std::fs::read_to_string(manifest("artifacts/meta.json")).unwrap();
+    std::fs::write(dir.join("meta.json"), meta.replace("256", "128")).unwrap();
+    for name in ["dvfs_opt", "dvfs_readjust", "dvfs_fused"] {
+        std::fs::copy(
+            manifest(&format!("artifacts/{name}.hlo.txt")),
+            dir.join(format!("{name}.hlo.txt")),
+        )
+        .unwrap();
+    }
+    match Solver::pjrt(dir.to_str().unwrap()) {
+        Ok(_) => panic!("layout mismatch must be rejected"),
+        Err(err) => assert!(format!("{err:#}").contains("layout mismatch"), "{err:#}"),
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+// ---------------------------------------------------------------------------
+// degenerate workloads
+// ---------------------------------------------------------------------------
+
+#[test]
+fn empty_workload_runs() {
+    let mut cfg = SimConfig::default();
+    cfg.gen.u_off = 0.0;
+    cfg.gen.u_on = 0.0;
+    cfg.gen.horizon = 10;
+    let solver = Solver::native();
+    let mut rng = Rng::new(1);
+    let o = run_online(OnlinePolicyKind::Edl, true, &cfg, &solver, &mut rng);
+    assert_eq!(o.n_tasks, 0);
+    assert_eq!(o.e_run, 0.0);
+    assert_eq!(o.e_total(), 0.0);
+}
+
+#[test]
+fn single_slot_horizon() {
+    let mut cfg = SimConfig::default();
+    cfg.gen.base_pairs = 8;
+    cfg.gen.horizon = 1;
+    cfg.cluster.total_pairs = 64;
+    let solver = Solver::native();
+    let mut rng = Rng::new(2);
+    let o = run_online(OnlinePolicyKind::Edl, true, &cfg, &solver, &mut rng);
+    assert!(o.n_tasks > 0);
+    assert_eq!(o.violations, 0);
+}
+
+#[test]
+fn rho_zero_immediate_turnoff() {
+    let mut cfg = SimConfig::default();
+    cfg.gen.base_pairs = 8;
+    cfg.gen.horizon = 60;
+    cfg.cluster.total_pairs = 64;
+    cfg.cluster.rho = 0;
+    let solver = Solver::native();
+    let mut rng = Rng::new(3);
+    let o = run_online(OnlinePolicyKind::Edl, true, &cfg, &solver, &mut rng);
+    assert_eq!(o.violations, 0);
+    // rho=0 minimizes idle but maximizes turn-ons
+    let mut cfg2 = cfg.clone();
+    cfg2.cluster.rho = 30;
+    let mut rng = Rng::new(3);
+    let o2 = run_online(OnlinePolicyKind::Edl, true, &cfg2, &solver, &mut rng);
+    assert!(o.e_idle <= o2.e_idle + 1e-9);
+    assert!(o.turn_ons >= o2.turn_ons);
+}
+
+// ---------------------------------------------------------------------------
+// CLI end-to-end (drives the release binary if present, else debug)
+// ---------------------------------------------------------------------------
+
+fn repro_bin() -> Option<std::path::PathBuf> {
+    for profile in ["release", "debug"] {
+        let p = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+            .join("target")
+            .join(profile)
+            .join("repro");
+        if p.exists() {
+            return Some(p);
+        }
+    }
+    None
+}
+
+#[test]
+fn cli_list_and_solve() {
+    let Some(bin) = repro_bin() else {
+        eprintln!("repro binary not built; skipping CLI test");
+        return;
+    };
+    let out = Command::new(&bin).arg("list").output().unwrap();
+    assert!(out.status.success());
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(stdout.contains("fig13"));
+
+    let out = Command::new(&bin)
+        .args(["solve", "--app", "srad", "--scale", "5", "--deadline", "40"])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    assert!(String::from_utf8_lossy(&out.stdout).contains("optimal"));
+}
+
+#[test]
+fn cli_rejects_unknown_flag_and_experiment() {
+    let Some(bin) = repro_bin() else { return };
+    let out = Command::new(&bin)
+        .args(["online", "--thtea", "0.9"])
+        .output()
+        .unwrap();
+    assert!(!out.status.success());
+    assert!(String::from_utf8_lossy(&out.stderr).contains("thtea"));
+
+    let out = Command::new(&bin)
+        .args(["experiment", "fig99"])
+        .output()
+        .unwrap();
+    assert!(!out.status.success());
+}
+
+#[test]
+fn cli_quick_experiment_with_config() {
+    let Some(bin) = repro_bin() else { return };
+    let out = Command::new(&bin)
+        .current_dir(env!("CARGO_MANIFEST_DIR"))
+        .args([
+            "experiment",
+            "table3",
+            "--quick",
+            "--config",
+            "configs/quick.toml",
+        ])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    assert!(String::from_utf8_lossy(&out.stdout).contains("Table 3"));
+}
