@@ -1,0 +1,136 @@
+//! Streaming service walkthrough: drive a JSON-lines scheduling session
+//! end-to-end — admission control bounces an infeasible deadline, EDL
+//! places the feasible tasks, and the drain snapshot closes the energy
+//! books with the E_run / E_idle / E_overhead decomposition.
+//!
+//! The same session file works from the shell:
+//!
+//! ```text
+//! cargo run --release --example streaming_service   # writes session.jsonl
+//! cargo run --release -- replay session.jsonl
+//! ```
+//!
+//! Run: `cargo run --release --example streaming_service`
+
+use dvfs_sched::config::SimConfig;
+use dvfs_sched::ext::trace::task_to_json;
+use dvfs_sched::runtime::Solver;
+use dvfs_sched::service::protocol::{obj, s};
+use dvfs_sched::service::Service;
+use dvfs_sched::sim::online::OnlinePolicyKind;
+use dvfs_sched::tasks::{Task, LIBRARY};
+use dvfs_sched::util::json::Json;
+
+fn submit_line(t: &Task) -> String {
+    obj(vec![("op", s("submit")), ("task", task_to_json(t))]).render_compact()
+}
+
+fn main() {
+    let mut cfg = SimConfig::default();
+    cfg.cluster.total_pairs = 64;
+    cfg.cluster.pairs_per_server = 2;
+    cfg.theta = 0.9;
+    let solver = Solver::native();
+
+    // --- compose a session: 8 feasible tasks + 1 impossible deadline ----
+    let mut session = String::from("# demo session: streaming ingestion + admission\n");
+    for i in 0..8usize {
+        let app = i % LIBRARY.len();
+        let model = LIBRARY[app].model.scaled(10.0 + 4.0 * i as f64);
+        let u = 0.35 + 0.05 * (i % 6) as f64;
+        let arrival = 2.5 * i as f64; // fractional times: continuous clock
+        let task = Task {
+            id: i,
+            app,
+            model,
+            arrival,
+            deadline: arrival + model.t_star() / u,
+            u,
+        };
+        session.push_str(&submit_line(&task));
+        session.push('\n');
+    }
+    let model = LIBRARY[3].model.scaled(30.0);
+    let hopeless = Task {
+        id: 99,
+        app: 3,
+        model,
+        arrival: 10.0,
+        // half the analytical minimum execution time: no DVFS setting
+        // can make this, so admission must reject it
+        deadline: 10.0 + model.t_min(&cfg.interval) * 0.5,
+        u: 0.99,
+    };
+    session.push_str(&submit_line(&hopeless));
+    session.push_str("\n{\"op\":\"query\",\"id\":99}\n{\"op\":\"snapshot\"}\n{\"op\":\"shutdown\"}\n");
+
+    // keep a copy on disk so `repro replay session.jsonl` shows the same run
+    if std::fs::write("session.jsonl", &session).is_ok() {
+        println!("(session written to session.jsonl — try `repro replay session.jsonl`)\n");
+    }
+
+    // --- serve it ------------------------------------------------------
+    let mut svc = Service::new(&cfg, OnlinePolicyKind::Edl, true, &solver);
+    let mut out = Vec::new();
+    svc.serve(session.as_bytes(), &mut out).expect("session runs");
+
+    let mut rejected = 0u64;
+    let mut placed = 0u64;
+    for line in String::from_utf8(out).expect("utf8").lines() {
+        let j = Json::parse(line).expect("valid response");
+        match j.get("op").and_then(Json::as_str) {
+            Some("submit") => {
+                let id = j.get("id").and_then(Json::as_f64).unwrap_or(-1.0);
+                if j.get("admitted") == Some(&Json::Bool(true)) {
+                    placed += 1;
+                    println!(
+                        "task {id:>3}: admitted -> pair {} finish {:.1} (deadline met: {})",
+                        j.get("pair").and_then(Json::as_f64).unwrap_or(-1.0),
+                        j.get("finish").and_then(Json::as_f64).unwrap_or(-1.0),
+                        j.get("deadline_met") == Some(&Json::Bool(true)),
+                    );
+                } else {
+                    rejected += 1;
+                    println!(
+                        "task {id:>3}: REJECTED ({}) — t_min {:.1} > available {:.1}",
+                        j.get("reason").and_then(Json::as_str).unwrap_or("?"),
+                        j.get("t_min").and_then(Json::as_f64).unwrap_or(-1.0),
+                        j.get("available").and_then(Json::as_f64).unwrap_or(-1.0),
+                    );
+                }
+            }
+            Some("query") => println!(
+                "query 99 -> status {}",
+                j.get("status").and_then(Json::as_str).unwrap_or("?")
+            ),
+            Some("snapshot") => println!(
+                "snapshot @t={:.1}: {} servers on, {} pairs busy, E so far {:.3e}",
+                j.get("now").and_then(Json::as_f64).unwrap_or(0.0),
+                j.get("servers_on").and_then(Json::as_f64).unwrap_or(0.0),
+                j.get("pairs_busy").and_then(Json::as_f64).unwrap_or(0.0),
+                j.get("e_total").and_then(Json::as_f64).unwrap_or(0.0),
+            ),
+            Some("shutdown") => {
+                let g = |k: &str| j.get(k).and_then(Json::as_f64).unwrap_or(0.0);
+                println!(
+                    "\ndrained @t={:.1}: E_total {:.3e} = run {:.3e} + idle {:.3e} + overhead {:.3e}",
+                    g("now"),
+                    g("e_total"),
+                    g("e_run"),
+                    g("e_idle"),
+                    g("e_overhead"),
+                );
+                println!(
+                    "admitted {} / rejected {} / violations {}",
+                    g("admitted"),
+                    g("rejected_infeasible") + g("rejected_invalid"),
+                    g("violations"),
+                );
+                assert_eq!(g("violations"), 0.0);
+            }
+            _ => println!("{line}"),
+        }
+    }
+    assert_eq!(placed, 8);
+    assert_eq!(rejected, 1);
+}

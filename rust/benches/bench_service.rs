@@ -1,0 +1,127 @@
+//! Bench: the event-driven scheduling service — steady-state submit
+//! throughput (tasks/sec) and the event-vs-slot engine speedup on a
+//! sparse 24h trace (the workload shape where O(horizon) slot stepping
+//! wastes the most time; acceptance target: ≥ 3×).
+
+use dvfs_sched::config::SimConfig;
+use dvfs_sched::runtime::Solver;
+use dvfs_sched::service::Service;
+use dvfs_sched::sim::online::{
+    run_online_workload, run_online_workload_slots, OnlinePolicyKind,
+};
+use dvfs_sched::tasks::{generate_online, Task, LIBRARY};
+use dvfs_sched::util::bench::{bb, fmt_dur, section, Bencher};
+use dvfs_sched::util::Rng;
+use std::time::Instant;
+
+fn main() {
+    let b = Bencher::default();
+    let solver = Solver::native();
+
+    section("event vs slot engine — sparse 24h trace");
+    // a trickle of arrivals across a full day: the slot loop still steps
+    // all 1440 minutes (plus drain), the event engine only touches the
+    // few dozen real events
+    let mut cfg = SimConfig::default();
+    cfg.gen.base_pairs = 64;
+    cfg.gen.u_off = 0.1;
+    cfg.gen.u_on = 0.2;
+    cfg.gen.horizon = 1440;
+    cfg.cluster.total_pairs = 256;
+    cfg.theta = 0.9;
+    let w = generate_online(&cfg.gen, &mut Rng::new(42));
+    println!(
+        "trace: {} tasks across {} slots ({} non-empty arrival slots)",
+        w.total_tasks(),
+        cfg.gen.horizon,
+        w.slots.iter().filter(|r| !r.is_empty()).count()
+    );
+    let ev = b.run("online/event-engine/sparse-24h", || {
+        bb(run_online_workload(
+            OnlinePolicyKind::Edl,
+            &w,
+            true,
+            &cfg,
+            &solver,
+        ))
+    });
+    let sl = b.run("online/slot-engine/sparse-24h", || {
+        bb(run_online_workload_slots(
+            OnlinePolicyKind::Edl,
+            &w,
+            true,
+            &cfg,
+            &solver,
+        ))
+    });
+    let speedup = sl.mean.as_secs_f64() / ev.mean.as_secs_f64();
+    println!("  -> event-engine speedup on the sparse trace: {speedup:.1}x (target >= 3x)");
+
+    section("event vs slot engine — paper-scale dense day");
+    // dense traffic for context: the engines converge as every slot has
+    // arrivals (events ~ slots), so the speedup here is honest overhead
+    let dense_cfg = SimConfig::default();
+    let dw = generate_online(&dense_cfg.gen, &mut Rng::new(43));
+    println!("trace: {} tasks", dw.total_tasks());
+    let dev = b.run("online/event-engine/dense-24h", || {
+        bb(run_online_workload(
+            OnlinePolicyKind::Edl,
+            &dw,
+            true,
+            &dense_cfg,
+            &solver,
+        ))
+    });
+    let dsl = b.run("online/slot-engine/dense-24h", || {
+        bb(run_online_workload_slots(
+            OnlinePolicyKind::Edl,
+            &dw,
+            true,
+            &dense_cfg,
+            &solver,
+        ))
+    });
+    println!(
+        "  -> dense-day ratio: {:.2}x",
+        dsl.mean.as_secs_f64() / dev.mean.as_secs_f64()
+    );
+
+    section("service submit throughput (steady state)");
+    // a long steady stream through the full daemon path: admission →
+    // event core → placement, one task per submit (the service's live
+    // traffic shape, not the simulator's batched one)
+    let mut svc_cfg = SimConfig::default();
+    svc_cfg.cluster.pairs_per_server = 4;
+    svc_cfg.theta = 0.9;
+    for &n in &[2_000usize, 20_000] {
+        let mut svc = Service::new(&svc_cfg, OnlinePolicyKind::Edl, true, &solver);
+        let mut rng = Rng::new(7);
+        let t0 = Instant::now();
+        for i in 0..n {
+            let app = rng.index(LIBRARY.len());
+            let model = LIBRARY[app].model.scaled(rng.int_range(10, 50) as f64);
+            let u = rng.open01().max(0.02);
+            let arrival = i as f64 * 0.5; // 2 submits per slot
+            let task = Task {
+                id: i,
+                app,
+                model,
+                arrival,
+                deadline: arrival + model.t_star() / u,
+                u,
+            };
+            bb(svc.submit(task));
+        }
+        let dt = t0.elapsed();
+        let drained = svc.shutdown();
+        println!(
+            "submit x {n:>6}: {:>10} total, {:>8.0} tasks/sec  (violations {})",
+            fmt_dur(dt),
+            n as f64 / dt.as_secs_f64(),
+            drained
+                .get("violations")
+                .and_then(dvfs_sched::util::json::Json::as_f64)
+                .unwrap_or(-1.0),
+        );
+    }
+}

@@ -116,6 +116,15 @@ impl Args {
     }
 }
 
+/// Parse an online policy name (`online`, `serve`, and `replay` share it).
+pub fn parse_online_policy(s: &str) -> Result<crate::sim::online::OnlinePolicyKind, String> {
+    match s.to_ascii_lowercase().as_str() {
+        "edl" => Ok(crate::sim::online::OnlinePolicyKind::Edl),
+        "bin" => Ok(crate::sim::online::OnlinePolicyKind::Bin),
+        other => Err(format!("unknown policy '{other}' (edl|bin)")),
+    }
+}
+
 /// Apply the common overrides (--reps/--seed/--theta/--l/--interval/
 /// --backend/--config/...) to a SimConfig.
 pub fn apply_overrides(
@@ -199,6 +208,14 @@ mod tests {
     fn bad_number_errors() {
         let a = Args::parse(&argv("x --reps abc")).unwrap();
         assert!(a.opt_usize("reps").is_err());
+    }
+
+    #[test]
+    fn online_policy_names() {
+        use crate::sim::online::OnlinePolicyKind;
+        assert_eq!(parse_online_policy("edl").unwrap(), OnlinePolicyKind::Edl);
+        assert_eq!(parse_online_policy("BIN").unwrap(), OnlinePolicyKind::Bin);
+        assert!(parse_online_policy("fifo").is_err());
     }
 
     #[test]

@@ -4,23 +4,9 @@
 
 use super::pair::{Pair, PairPower};
 use crate::config::ClusterConfig;
+use crate::util::OrdF64;
 use std::cmp::Reverse;
 use std::collections::BinaryHeap;
-
-/// Total-ordered f64 for the departure event heap.
-#[derive(Clone, Copy, Debug, PartialEq)]
-struct OrdF64(f64);
-impl Eq for OrdF64 {}
-impl PartialOrd for OrdF64 {
-    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
-        Some(self.cmp(other))
-    }
-}
-impl Ord for OrdF64 {
-    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
-        self.0.total_cmp(&other.0)
-    }
-}
 
 #[derive(Clone, Debug)]
 pub struct Cluster {
@@ -44,6 +30,11 @@ pub struct Cluster {
     /// longest-idle pair instead was measured to triple E_idle at l=16 by
     /// resurrecting servers on the verge of turn-off).
     idle_pairs: std::collections::BTreeSet<usize>,
+    /// The most recent [`Cluster::assign`] as (pair, start, μ).  The
+    /// streaming service submits one-task batches and reads this back to
+    /// report the placement a policy chose without widening the
+    /// [`crate::sched::online::OnlinePolicy`] trait.
+    pub last_assign: Option<(usize, f64, f64)>,
 }
 
 impl Cluster {
@@ -65,6 +56,7 @@ impl Cluster {
             violations: 0,
             departures: BinaryHeap::new(),
             idle_pairs: std::collections::BTreeSet::new(),
+            last_assign: None,
         }
     }
 
@@ -112,6 +104,7 @@ impl Cluster {
         let mu = self.pairs[i].assign(start, dur);
         self.idle_pairs.remove(&i);
         self.departures.push(Reverse((OrdF64(mu), i)));
+        self.last_assign = Some((i, start, mu));
         self.e_run += p * dur;
         // tolerance covers the f32 artifact path (PJRT settings carry
         // ~1e-5 relative rounding, far below any modeling error)
@@ -174,6 +167,21 @@ impl Cluster {
         self.idle_pairs.iter().next().copied()
     }
 
+    /// Earliest pending departure time, discarding stale heap entries
+    /// (pairs whose queue was extended past the recorded μ).  The
+    /// event-driven engine merges this with its own event queue so
+    /// departures are first-class events instead of per-slot sweeps.
+    pub fn peek_departure(&mut self) -> Option<f64> {
+        while let Some(&Reverse((OrdF64(mu), i))) = self.departures.peek() {
+            let p = &self.pairs[i];
+            if p.power == PairPower::Busy && p.busy_until == mu {
+                return Some(mu);
+            }
+            self.departures.pop();
+        }
+        None
+    }
+
     /// Finalize at end-of-run: everything still on idles for ρ more slots
     /// (the DRS delay) and is then switched off.
     pub fn finalize(&mut self) {
@@ -199,6 +207,18 @@ impl Cluster {
     /// E_idle = P_idle · Σ idle time.
     pub fn e_idle(&self) -> f64 {
         self.cfg.p_idle * self.pairs.iter().map(|p| p.idle_time).sum::<f64>()
+    }
+
+    /// E_idle including the still-open idle stretches as of `now` — the
+    /// live-snapshot variant of [`Cluster::e_idle`] (which only counts
+    /// stretches settled by an assign or turn-off).
+    pub fn e_idle_at(&self, now: f64) -> f64 {
+        self.cfg.p_idle
+            * self
+                .pairs
+                .iter()
+                .map(|p| p.idle_time + p.idle_span(now))
+                .sum::<f64>()
     }
 
     /// E_overhead = ω · Δ.

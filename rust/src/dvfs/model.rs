@@ -96,6 +96,10 @@ impl TaskModel {
     }
 
     pub fn validate(&self) -> Result<(), String> {
+        let all = [self.p0, self.gamma, self.c, self.d, self.delta, self.t0];
+        if all.iter().any(|x| !x.is_finite()) {
+            return Err("model parameters must be finite".into());
+        }
         if self.p0 < 0.0 || self.gamma < 0.0 || self.c < 0.0 {
             return Err("power coefficients must be non-negative".into());
         }

@@ -9,23 +9,11 @@
 use crate::dvfs::TaskModel;
 use crate::sched::offline::Schedule;
 use crate::tasks::{OnlineWorkload, Task, TaskSet};
-use crate::util::json::Json;
-use std::collections::BTreeMap;
+use crate::util::json::{num, obj, Json};
 
-fn obj(entries: Vec<(&str, Json)>) -> Json {
-    Json::Obj(
-        entries
-            .into_iter()
-            .map(|(k, v)| (k.to_string(), v))
-            .collect::<BTreeMap<_, _>>(),
-    )
-}
-
-fn num(x: f64) -> Json {
-    Json::Num(x)
-}
-
-fn task_to_json(t: &Task) -> Json {
+/// Encode one task (shared schema of workload files and the streaming
+/// service's `submit` requests).
+pub fn task_to_json(t: &Task) -> Json {
     obj(vec![
         ("id", num(t.id as f64)),
         ("app", num(t.app as f64)),
@@ -52,9 +40,13 @@ fn f(j: &Json, key: &str) -> Result<f64, String> {
         .ok_or_else(|| format!("missing/invalid '{key}'"))
 }
 
-fn task_from_json(j: &Json) -> Result<Task, String> {
+/// Decode one task.  Structural only — callers that require semantic
+/// validity run [`Task::validate`] themselves (workload files reject
+/// invalid tasks outright; the service routes them through admission
+/// control so the client gets a typed rejection instead of a dead line).
+pub fn task_from_json(j: &Json) -> Result<Task, String> {
     let m = j.get("model").ok_or("missing 'model'")?;
-    let task = Task {
+    Ok(Task {
         id: f(j, "id")? as usize,
         app: f(j, "app")? as usize,
         arrival: f(j, "arrival")?,
@@ -68,9 +60,7 @@ fn task_from_json(j: &Json) -> Result<Task, String> {
             delta: f(m, "delta")?,
             t0: f(m, "t0")?,
         },
-    };
-    task.validate()?;
-    Ok(task)
+    })
 }
 
 fn taskset_to_json(ts: &TaskSet) -> Json {
@@ -79,7 +69,14 @@ fn taskset_to_json(ts: &TaskSet) -> Json {
 
 fn taskset_from_json(j: &Json) -> Result<TaskSet, String> {
     let arr = j.as_arr().ok_or("task set must be an array")?;
-    let tasks: Vec<Task> = arr.iter().map(task_from_json).collect::<Result<_, _>>()?;
+    let tasks: Vec<Task> = arr
+        .iter()
+        .map(|tj| {
+            let t = task_from_json(tj)?;
+            t.validate()?;
+            Ok(t)
+        })
+        .collect::<Result<_, String>>()?;
     let u_sum = tasks.iter().map(|t| t.u).sum();
     Ok(TaskSet { tasks, u_sum })
 }

@@ -4,10 +4,13 @@
 //! Three-layer architecture (see `DESIGN.md`):
 //!
 //! * **L3 (this crate)** — the paper's system: DVFS-aware schedulers
-//!   ([`sched`]), the CPU-GPU cluster substrate ([`cluster`]), discrete-time
-//!   offline/online simulation engines ([`sim`]), the task-set generator
-//!   calibrated to the paper's measured parameter ranges ([`tasks`]), and
-//!   the experiment harness reproducing every figure/table ([`experiments`]).
+//!   ([`sched`]), the CPU-GPU cluster substrate ([`cluster`]), the
+//!   continuous-time event-driven scheduling service ([`service`]) with
+//!   streaming ingestion and admission control, offline/online simulation
+//!   engines ([`sim`]) running on the same event core, the task-set
+//!   generator calibrated to the paper's measured parameter ranges
+//!   ([`tasks`]), and the experiment harness reproducing every
+//!   figure/table ([`experiments`]).
 //! * **L2/L1 (python, build-time only)** — the batched DVFS optimizer as a
 //!   JAX graph over Pallas kernels, AOT-lowered to HLO text in
 //!   `artifacts/`.  The [`runtime`] module loads and executes those
@@ -26,6 +29,7 @@ pub mod experiments;
 pub mod ext;
 pub mod runtime;
 pub mod sched;
+pub mod service;
 pub mod sim;
 pub mod tasks;
 pub mod util;

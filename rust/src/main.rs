@@ -5,7 +5,9 @@
 //!   experiment <id|all> [...]    regenerate a paper table/figure
 //!   solve [...]                  single-task DVFS optimization
 //!   offline [...]                one offline scheduling run
-//!   online [...]                 one online (1440-slot) simulation
+//!   online [...]                 one online (event-driven) simulation
+//!   serve [...]                  JSON-lines scheduling daemon on stdin
+//!   replay <file> [...]          stream a JSONL session from a file
 //!
 //! Common flags: --config FILE --reps N --seed S --theta X --l N
 //!               --interval wide|narrow --backend native|pjrt
@@ -15,7 +17,7 @@
 //! (`--backend pjrt`) runs every Algorithm-1 batch through the
 //! AOT-compiled XLA artifacts in `artifacts/`.
 
-use dvfs_sched::cli::{apply_overrides, Args};
+use dvfs_sched::cli::{apply_overrides, parse_online_policy, Args};
 use dvfs_sched::config::SimConfig;
 use dvfs_sched::experiments::{self, ExpCtx};
 use dvfs_sched::runtime::Solver;
@@ -41,6 +43,8 @@ fn main() {
         "solve" => cmd_solve(&args),
         "offline" => cmd_offline(&args),
         "online" => cmd_online(&args),
+        "serve" => cmd_serve(&args),
+        "replay" => cmd_replay(&args),
         "workload" => cmd_workload(&args),
         "help" | "--help" | "-h" => {
             print_help();
@@ -69,6 +73,8 @@ fn print_help() {
          solve --app NAME            single-task DVFS optimization\n  \
          offline --u X [--policy P]  one offline scheduling cell\n  \
          online  [--policy edl|bin]  one online simulation cell\n  \
+         serve   [--policy edl|bin]  JSON-lines scheduling daemon on stdin\n  \
+         replay FILE [--policy ...]  stream a JSONL session from a file\n  \
          workload export|replay      save / replay a workload as JSON\n\n\
          common flags: --config FILE --reps N --seed S --theta X --l N\n               \
          --interval wide|narrow --backend native|pjrt --csv DIR --quick"
@@ -294,19 +300,63 @@ fn cmd_workload(args: &Args) -> Result<(), String> {
     }
 }
 
+/// `repro serve`: long-running JSON-lines scheduling daemon on stdin.
+fn cmd_serve(args: &Args) -> Result<(), String> {
+    let mut cfg = SimConfig::default();
+    apply_overrides(args, &mut cfg)?;
+    let kind = parse_online_policy(&args.opt_str("policy").unwrap_or("edl".into()))?;
+    let dvfs = !args.flag("no-dvfs");
+    args.finish()?;
+
+    let solver = Solver::from_config(&cfg);
+    let mut svc = dvfs_sched::service::Service::new(&cfg, kind, dvfs, &solver);
+    eprintln!(
+        "serve: {} policy, {} pairs (l={}), backend {} — JSONL requests on stdin \
+         (submit/query/snapshot/shutdown)",
+        kind.name(),
+        cfg.cluster.total_pairs,
+        cfg.cluster.pairs_per_server,
+        solver.backend_name()
+    );
+    let stdin = std::io::stdin();
+    let stdout = std::io::stdout();
+    let shutdown = svc.serve(stdin.lock(), stdout.lock())?;
+    if !shutdown {
+        // EOF without an explicit shutdown: drain so energy books close
+        println!("{}", svc.shutdown().render_compact());
+    }
+    Ok(())
+}
+
+/// `repro replay <file>`: stream a recorded JSONL session end-to-end.
+fn cmd_replay(args: &Args) -> Result<(), String> {
+    let mut cfg = SimConfig::default();
+    apply_overrides(args, &mut cfg)?;
+    let path = args
+        .positional
+        .first()
+        .ok_or("usage: repro replay <session.jsonl> [--policy edl|bin]")?
+        .clone();
+    let kind = parse_online_policy(&args.opt_str("policy").unwrap_or("edl".into()))?;
+    let dvfs = !args.flag("no-dvfs");
+    args.finish()?;
+
+    let file = std::fs::File::open(&path).map_err(|e| format!("opening {path}: {e}"))?;
+    let reader = std::io::BufReader::new(file);
+    let solver = Solver::from_config(&cfg);
+    let mut svc = dvfs_sched::service::Service::new(&cfg, kind, dvfs, &solver);
+    let stdout = std::io::stdout();
+    let shutdown = svc.serve(reader, stdout.lock())?;
+    if !shutdown {
+        println!("{}", svc.shutdown().render_compact());
+    }
+    Ok(())
+}
+
 fn cmd_online(args: &Args) -> Result<(), String> {
     let mut cfg = SimConfig::default();
     apply_overrides(args, &mut cfg)?;
-    let kind = match args
-        .opt_str("policy")
-        .unwrap_or("edl".into())
-        .to_ascii_lowercase()
-        .as_str()
-    {
-        "edl" => OnlinePolicyKind::Edl,
-        "bin" => OnlinePolicyKind::Bin,
-        other => return Err(format!("unknown policy '{other}' (edl|bin)")),
-    };
+    let kind = parse_online_policy(&args.opt_str("policy").unwrap_or("edl".into()))?;
     let dvfs = !args.flag("no-dvfs");
     args.finish()?;
 

@@ -1,33 +1,16 @@
 //! PJRT execution engine: loads the AOT HLO-text artifacts produced by
 //! `python/compile/aot.py` and runs the batched DVFS solves on the XLA CPU
 //! client.  This is the production hot path — python is never involved.
+//!
+//! Compiled only with the `pjrt` cargo feature (needs the vendored `xla`
+//! crate); see [`crate::runtime`] for the fallback story.
 
 use std::path::{Path, PathBuf};
 
-use anyhow::{bail, Context, Result};
-
 use super::layout as l;
-use crate::dvfs::{ScalingInterval, Setting, TaskModel};
+use super::{Graph, SolveReq};
+use crate::dvfs::{ScalingInterval, Setting};
 use crate::util::json::Json;
-
-/// A single solve request: task model + time limit/target.
-#[derive(Clone, Copy, Debug)]
-pub struct SolveReq {
-    pub model: TaskModel,
-    /// `opt`: hard cap (f64::INFINITY = none). `readjust`: exact target.
-    pub tlim: f64,
-}
-
-/// Which compiled graph to run.
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
-pub enum Graph {
-    /// Free optimum with time cap.
-    Opt,
-    /// Exact-target-time solve.
-    Readjust,
-    /// Fused Algorithm-1 (best of both per row).
-    Fused,
-}
 
 pub struct DvfsEngine {
     #[allow(dead_code)]
@@ -42,38 +25,40 @@ pub struct DvfsEngine {
 impl DvfsEngine {
     /// Load + compile all artifacts from `dir`, validating `meta.json`
     /// against the compiled-in layout.
-    pub fn load(dir: &str) -> Result<DvfsEngine> {
+    pub fn load(dir: &str) -> Result<DvfsEngine, String> {
         let dir = Path::new(dir);
         let meta_path = dir.join("meta.json");
-        let meta_text = std::fs::read_to_string(&meta_path)
-            .with_context(|| format!("reading {meta_path:?} — run `make artifacts` first"))?;
-        let meta = Json::parse(&meta_text)
-            .map_err(|e| anyhow::anyhow!("parsing {meta_path:?}: {e}"))?;
-        let get = |k: &str| -> Result<f64> {
+        let meta_text = std::fs::read_to_string(&meta_path).map_err(|e| {
+            format!("reading {meta_path:?} — run `make artifacts` first: {e}")
+        })?;
+        let meta =
+            Json::parse(&meta_text).map_err(|e| format!("parsing {meta_path:?}: {e}"))?;
+        let get = |k: &str| -> Result<f64, String> {
             meta.get(k)
                 .and_then(Json::as_f64)
-                .with_context(|| format!("meta.json missing '{k}'"))
+                .ok_or_else(|| format!("meta.json missing '{k}'"))
         };
         if get("batch_n")? as usize != l::BATCH_N
             || get("nparam")? as usize != l::NPARAM
             || get("nbound")? as usize != l::NBOUND
             || get("nout")? as usize != l::NOUT
         {
-            bail!(
+            return Err(format!(
                 "artifact layout mismatch: rebuild artifacts (meta {meta_path:?} \
                  disagrees with rust/src/runtime/layout.rs)"
-            );
+            ));
         }
 
-        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
-        let compile = |name: &str| -> Result<xla::PjRtLoadedExecutable> {
+        let client =
+            xla::PjRtClient::cpu().map_err(|e| format!("creating PJRT CPU client: {e}"))?;
+        let compile = |name: &str| -> Result<xla::PjRtLoadedExecutable, String> {
             let path: PathBuf = dir.join(format!("{name}.hlo.txt"));
             let proto = xla::HloModuleProto::from_text_file(&path)
-                .with_context(|| format!("loading HLO text {path:?}"))?;
+                .map_err(|e| format!("loading HLO text {path:?}: {e}"))?;
             let comp = xla::XlaComputation::from_proto(&proto);
             client
                 .compile(&comp)
-                .with_context(|| format!("compiling {name}"))
+                .map_err(|e| format!("compiling {name}: {e}"))
         };
         Ok(DvfsEngine {
             opt: compile("dvfs_opt")?,
@@ -99,7 +84,7 @@ impl DvfsEngine {
         graph: Graph,
         reqs: &[SolveReq],
         iv: &ScalingInterval,
-    ) -> Result<Vec<Setting>> {
+    ) -> Result<Vec<Setting>, String> {
         let bounds = iv.to_bounds();
         let mut out = Vec::with_capacity(reqs.len());
         for chunk in reqs.chunks(l::BATCH_N) {
@@ -114,7 +99,7 @@ impl DvfsEngine {
         graph: Graph,
         chunk: &[SolveReq],
         bounds: &[f32; l::NBOUND],
-    ) -> Result<Vec<Setting>> {
+    ) -> Result<Vec<Setting>, String> {
         debug_assert!(chunk.len() <= l::BATCH_N);
         let mut params = vec![0.0f32; l::BATCH_N * l::NPARAM];
         for (i, r) in chunk.iter().enumerate() {
@@ -146,26 +131,28 @@ impl DvfsEngine {
 
         let p_lit = xla::Literal::vec1(&params)
             .reshape(&[l::BATCH_N as i64, l::NPARAM as i64])
-            .context("reshaping params literal")?;
+            .map_err(|e| format!("reshaping params literal: {e}"))?;
         let b_lit = xla::Literal::vec1(&bounds[..]);
 
         let result = self
             .exe(graph)
             .execute::<xla::Literal>(&[p_lit, b_lit])
-            .context("PJRT execute")?;
+            .map_err(|e| format!("PJRT execute: {e}"))?;
         self.executions.set(self.executions.get() + 1);
         let lit = result[0][0]
             .to_literal_sync()
-            .context("fetching result literal")?;
+            .map_err(|e| format!("fetching result literal: {e}"))?;
         // aot.py lowers with return_tuple=True → unwrap the 1-tuple
-        let lit = lit.to_tuple1().context("unwrapping result tuple")?;
-        let data: Vec<f32> = lit.to_vec().context("reading result data")?;
+        let lit = lit
+            .to_tuple1()
+            .map_err(|e| format!("unwrapping result tuple: {e}"))?;
+        let data: Vec<f32> = lit.to_vec().map_err(|e| format!("reading result data: {e}"))?;
         if data.len() != l::BATCH_N * l::NOUT {
-            bail!(
+            return Err(format!(
                 "result shape mismatch: got {} floats, want {}",
                 data.len(),
                 l::BATCH_N * l::NOUT
-            );
+            ));
         }
 
         Ok(chunk

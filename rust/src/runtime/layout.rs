@@ -42,9 +42,11 @@ mod tests {
     /// Parse python/compile/layout.py and compare every constant.
     #[test]
     fn matches_python_layout() {
+        // the python tree lives at the repo root, one level above the
+        // crate manifest
         let src = std::fs::read_to_string(concat!(
             env!("CARGO_MANIFEST_DIR"),
-            "/python/compile/layout.py"
+            "/../python/compile/layout.py"
         ))
         .expect("python layout file");
         let py = |name: &str| -> f64 {

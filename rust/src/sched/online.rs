@@ -7,6 +7,7 @@ use crate::cluster::{Cluster, PairPower};
 use crate::dvfs::ScalingInterval;
 use crate::runtime::Solver;
 use crate::tasks::Task;
+use crate::util::OrdF64;
 use std::cmp::Reverse;
 use std::collections::BinaryHeap;
 
@@ -213,21 +214,6 @@ pub struct BinPacking {
     /// (completion time, pair, û) min-heap for utilization decay.
     departures: BinaryHeap<Reverse<(OrdF64, usize, OrdF64)>>,
     first_batch: bool,
-}
-
-/// Total-ordered f64 wrapper for the departure heap.
-#[derive(Clone, Copy, Debug, PartialEq)]
-struct OrdF64(f64);
-impl Eq for OrdF64 {}
-impl PartialOrd for OrdF64 {
-    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
-        Some(self.cmp(other))
-    }
-}
-impl Ord for OrdF64 {
-    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
-        self.0.total_cmp(&other.0)
-    }
 }
 
 impl BinPacking {

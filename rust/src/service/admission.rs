@@ -1,0 +1,143 @@
+//! Admission control for the streaming scheduler.
+//!
+//! A submitted task is rejected up front when no DVFS setting can meet its
+//! deadline: the analytical minimum execution time `t_min` (every knob at
+//! the interval maximum, [`crate::dvfs::TaskModel::t_min`] — the same
+//! bound Algorithm 1's infeasible fallback uses) must fit between the
+//! task's effective start and its deadline.  This is a *necessary*
+//! condition checked in O(1); queueing delay on a saturated cluster can
+//! still force a violation, which the metrics report separately.
+
+use crate::dvfs::ScalingInterval;
+use crate::tasks::Task;
+
+/// Admission verdict for one submitted task.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Verdict {
+    Admit,
+    /// Even the fastest setting cannot meet the deadline from `now`.
+    RejectInfeasible {
+        t_min: f64,
+        available: f64,
+    },
+    /// The task failed structural validation (bad model / u / deadline).
+    RejectInvalid(String),
+}
+
+impl Verdict {
+    pub fn admitted(&self) -> bool {
+        matches!(self, Verdict::Admit)
+    }
+
+    /// Short machine-readable reason tag for the wire protocol.
+    pub fn reason(&self) -> &'static str {
+        match self {
+            Verdict::Admit => "admitted",
+            Verdict::RejectInfeasible { .. } => "infeasible-deadline",
+            Verdict::RejectInvalid(_) => "invalid-task",
+        }
+    }
+}
+
+/// Stateful admission gate: evaluates tasks and keeps running counters
+/// for the metrics snapshot.
+#[derive(Clone, Debug, Default)]
+pub struct AdmissionController {
+    pub admitted: u64,
+    pub rejected_infeasible: u64,
+    pub rejected_invalid: u64,
+}
+
+impl AdmissionController {
+    pub fn new() -> AdmissionController {
+        AdmissionController::default()
+    }
+
+    pub fn rejected(&self) -> u64 {
+        self.rejected_infeasible + self.rejected_invalid
+    }
+
+    /// Evaluate `task` submitted at service time `now` (the task cannot
+    /// start before `max(now, arrival)`).
+    pub fn evaluate(&mut self, task: &Task, now: f64, iv: &ScalingInterval) -> Verdict {
+        if let Err(e) = task.validate() {
+            self.rejected_invalid += 1;
+            return Verdict::RejectInvalid(e);
+        }
+        let start = now.max(task.arrival);
+        let available = task.deadline - start;
+        let t_min = task.model.t_min(iv);
+        // mirror the simulator's violation tolerance so a task the
+        // scheduler could place exactly on the bound is not bounced;
+        // negated form so a NaN window rejects instead of admitting
+        if !(available >= t_min * (1.0 - 1e-4) - 1e-6) {
+            self.rejected_infeasible += 1;
+            return Verdict::RejectInfeasible { t_min, available };
+        }
+        self.admitted += 1;
+        Verdict::Admit
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tasks::LIBRARY;
+
+    fn mk_task(u: f64) -> Task {
+        let model = LIBRARY[0].model.scaled(10.0);
+        Task {
+            id: 0,
+            app: 0,
+            model,
+            arrival: 0.0,
+            deadline: model.t_star() / u,
+            u,
+        }
+    }
+
+    #[test]
+    fn loose_deadline_admitted() {
+        let mut a = AdmissionController::new();
+        let v = a.evaluate(&mk_task(0.5), 0.0, &ScalingInterval::wide());
+        assert!(v.admitted());
+        assert_eq!(a.admitted, 1);
+    }
+
+    #[test]
+    fn impossible_deadline_rejected() {
+        let mut a = AdmissionController::new();
+        let iv = ScalingInterval::wide();
+        let mut t = mk_task(0.5);
+        // deadline below the analytical floor
+        t.deadline = t.model.t_min(&iv) * 0.5;
+        let v = a.evaluate(&t, 0.0, &iv);
+        assert_eq!(v.reason(), "infeasible-deadline");
+        assert_eq!(a.rejected_infeasible, 1);
+    }
+
+    #[test]
+    fn late_submission_rejected_by_shrunk_window() {
+        // feasible at arrival, infeasible once `now` has passed most of
+        // the window — admission must use the *effective* start
+        let mut a = AdmissionController::new();
+        let iv = ScalingInterval::wide();
+        let t = mk_task(0.9);
+        assert!(a.evaluate(&t, 0.0, &iv).admitted());
+        let late = t.deadline - t.model.t_min(&iv) * 0.5;
+        assert_eq!(
+            a.evaluate(&t, late, &iv).reason(),
+            "infeasible-deadline"
+        );
+    }
+
+    #[test]
+    fn invalid_task_rejected() {
+        let mut a = AdmissionController::new();
+        let mut t = mk_task(0.5);
+        t.u = 2.0;
+        let v = a.evaluate(&t, 0.0, &ScalingInterval::wide());
+        assert_eq!(v.reason(), "invalid-task");
+        assert_eq!(a.rejected(), 1);
+    }
+}

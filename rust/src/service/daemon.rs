@@ -1,0 +1,450 @@
+//! The long-running scheduling daemon.
+//!
+//! Owns the cluster, one online policy (EDL or bin-packing), the
+//! event-driven core, and the admission gate; consumes JSON-lines
+//! requests from any `BufRead` (stdin for `repro serve`, a replay file
+//! for `repro replay`) and writes one JSON response per line.
+//!
+//! Time is a logical clock driven by submitted arrival times: submitting
+//! a task at arrival `T` first advances the engine through every pending
+//! departure and DRS event up to `T`, then places the task.  Submissions
+//! dated before the clock are admitted at the current time with their
+//! absolute deadline unchanged (their window shrinks — exactly what a
+//! late submission means).  `shutdown` drains gracefully: all queued work
+//! completes, DRS powers every server down, and the final snapshot
+//! reports the closed-books E_run / E_idle / E_overhead decomposition.
+
+use crate::cluster::Cluster;
+use crate::config::SimConfig;
+use crate::runtime::Solver;
+use crate::sched::online::{OnlinePolicy, SchedCtx};
+use crate::service::admission::{AdmissionController, Verdict};
+use crate::service::events::EventEngine;
+use crate::service::metrics::Snapshot;
+use crate::service::protocol::{error_response, num, obj, parse_request, s, Request};
+use crate::sim::online::OnlinePolicyKind;
+use crate::tasks::Task;
+use crate::util::json::Json;
+use std::collections::{BTreeMap, VecDeque};
+use std::io::{BufRead, Write};
+
+/// Retention cap on per-task records: beyond this, the oldest-submitted
+/// records are evicted (a `query` for them answers `unknown`).  Keeps a
+/// long-running daemon's memory bounded under sustained traffic.
+const RECORD_CAP: usize = 100_000;
+
+/// Final state of one submitted task.
+#[derive(Clone, Copy, Debug)]
+pub struct TaskRecord {
+    pub admitted: bool,
+    pub pair: Option<usize>,
+    pub start: f64,
+    pub finish: f64,
+    pub deadline: f64,
+}
+
+impl TaskRecord {
+    fn deadline_met(&self) -> bool {
+        self.finish <= self.deadline * (1.0 + 1e-4) + 1e-6
+    }
+}
+
+/// One scheduling service instance.
+pub struct Service<'a> {
+    cluster: Cluster,
+    policy: Box<dyn OnlinePolicy>,
+    engine: EventEngine,
+    admission: AdmissionController,
+    solver: &'a Solver,
+    cfg: SimConfig,
+    dvfs: bool,
+    records: BTreeMap<usize, TaskRecord>,
+    /// Insertion order of `records` keys, for bounded eviction.
+    record_order: VecDeque<usize>,
+    /// Logical clock: max arrival seen (the engine clock can trail it
+    /// when nothing was pending to process).
+    now: f64,
+    drained: bool,
+}
+
+impl<'a> Service<'a> {
+    pub fn new(cfg: &SimConfig, kind: OnlinePolicyKind, dvfs: bool, solver: &'a Solver) -> Self {
+        Service {
+            cluster: Cluster::new(cfg.cluster.clone()),
+            policy: kind.build(cfg.cluster.total_pairs),
+            engine: EventEngine::new(),
+            admission: AdmissionController::new(),
+            solver,
+            cfg: cfg.clone(),
+            dvfs,
+            records: BTreeMap::new(),
+            record_order: VecDeque::new(),
+            now: 0.0,
+            drained: false,
+        }
+    }
+
+    /// Remember a task's outcome, evicting the oldest records past
+    /// [`RECORD_CAP`] (re-submitting an id updates it in place).
+    fn remember(&mut self, id: usize, rec: TaskRecord) {
+        if self.records.insert(id, rec).is_none() {
+            self.record_order.push_back(id);
+        }
+        while self.records.len() > RECORD_CAP {
+            match self.record_order.pop_front() {
+                Some(old) => {
+                    self.records.remove(&old);
+                }
+                None => break,
+            }
+        }
+    }
+
+    fn ctx(&self) -> SchedCtx<'a> {
+        SchedCtx {
+            solver: self.solver,
+            iv: self.cfg.interval,
+            dvfs: self.dvfs,
+            theta: self.cfg.theta,
+        }
+    }
+
+    /// The service clock (logical submit time vs engine event time).
+    pub fn now(&self) -> f64 {
+        self.now.max(self.engine.now)
+    }
+
+    pub fn drained(&self) -> bool {
+        self.drained
+    }
+
+    pub fn record(&self, id: usize) -> Option<&TaskRecord> {
+        self.records.get(&id)
+    }
+
+    /// Submit one task: admission first, then — only if admitted —
+    /// clock advance and immediate placement through the event core
+    /// (departures and DRS events up to the arrival time are processed
+    /// first, so the policy sees the same cluster the slot loop would
+    /// have).  Rejected submissions never mutate the clock or the
+    /// cluster, so one garbage line (e.g. an absurd arrival timestamp)
+    /// cannot poison the long-running service.
+    pub fn submit(&mut self, mut task: Task) -> Json {
+        let arrival = task.arrival.max(self.now());
+        task.arrival = arrival;
+        let id = task.id;
+        let verdict = self.admission.evaluate(&task, arrival, &self.cfg.interval);
+        let mut fields = vec![
+            ("ok", Json::Bool(true)),
+            ("op", s("submit")),
+            ("id", num(id as f64)),
+            (
+                "now",
+                // the clock only moves on admission
+                num(if verdict.admitted() { arrival } else { self.now() }),
+            ),
+            ("admitted", Json::Bool(verdict.admitted())),
+            ("reason", s(verdict.reason())),
+        ];
+        match verdict {
+            Verdict::Admit => {
+                self.drained = false;
+                self.now = arrival;
+                let deadline = task.deadline;
+                let ctx = self.ctx();
+                self.cluster.last_assign = None;
+                self.engine.push_arrivals(arrival, vec![task]);
+                self.engine
+                    .run_until(arrival, &mut self.cluster, self.policy.as_mut(), &ctx);
+                let (pair, start, finish) = self
+                    .cluster
+                    .last_assign
+                    .expect("policy placed an admitted task");
+                let rec = TaskRecord {
+                    admitted: true,
+                    pair: Some(pair),
+                    start,
+                    finish,
+                    deadline,
+                };
+                fields.push(("pair", num(pair as f64)));
+                fields.push(("start", num(start)));
+                fields.push(("finish", num(finish)));
+                fields.push(("deadline_met", Json::Bool(rec.deadline_met())));
+                self.remember(id, rec);
+            }
+            Verdict::RejectInfeasible { t_min, available } => {
+                fields.push(("t_min", num(t_min)));
+                fields.push(("available", num(available)));
+                self.remember(
+                    id,
+                    TaskRecord {
+                        admitted: false,
+                        pair: None,
+                        start: arrival,
+                        finish: arrival,
+                        deadline: task.deadline,
+                    },
+                );
+            }
+            Verdict::RejectInvalid(ref why) => {
+                fields.push(("detail", s(why)));
+                // record it like any other rejection so a later query
+                // answers "rejected", not "unknown"
+                self.remember(
+                    id,
+                    TaskRecord {
+                        admitted: false,
+                        pair: None,
+                        start: arrival,
+                        finish: arrival,
+                        deadline: task.deadline,
+                    },
+                );
+            }
+        }
+        obj(fields)
+    }
+
+    pub fn query(&self, id: usize) -> Json {
+        let mut fields = vec![
+            ("ok", Json::Bool(true)),
+            ("op", s("query")),
+            ("id", num(id as f64)),
+        ];
+        match self.records.get(&id) {
+            None => fields.push(("status", s("unknown"))),
+            Some(r) if !r.admitted => fields.push(("status", s("rejected"))),
+            Some(r) => {
+                let status = if r.finish <= self.now() + 1e-9 {
+                    "completed"
+                } else {
+                    "running"
+                };
+                fields.push(("status", s(status)));
+                fields.push(("pair", num(r.pair.unwrap_or(0) as f64)));
+                fields.push(("start", num(r.start)));
+                fields.push(("finish", num(r.finish)));
+                fields.push(("deadline_met", Json::Bool(r.deadline_met())));
+            }
+        }
+        obj(fields)
+    }
+
+    pub fn snapshot_json(&self, op: &str) -> Json {
+        let snap = Snapshot::collect(
+            self.now(),
+            &self.cluster,
+            &self.policy.stats(),
+            &self.admission,
+        );
+        let mut fields = vec![
+            ("ok", Json::Bool(true)),
+            ("op", s(op)),
+            ("drained", Json::Bool(self.drained)),
+        ];
+        if let Json::Obj(m) = snap.to_json() {
+            let mut merged: BTreeMap<String, Json> = m;
+            for (k, v) in fields.drain(..) {
+                merged.insert(k.to_string(), v);
+            }
+            Json::Obj(merged)
+        } else {
+            unreachable!("snapshot renders an object")
+        }
+    }
+
+    /// Graceful drain: run every pending event (all queued tasks finish,
+    /// DRS reclaims every server) and report the final decomposition.
+    pub fn shutdown(&mut self) -> Json {
+        let ctx = self.ctx();
+        self.engine
+            .run_to_completion(&mut self.cluster, self.policy.as_mut(), &ctx);
+        self.now = self.now.max(self.engine.now);
+        self.drained = true;
+        self.snapshot_json("shutdown")
+    }
+
+    /// Dispatch one decoded request.  Returns (response, stop-serving).
+    pub fn handle(&mut self, req: Request) -> (Json, bool) {
+        match req {
+            Request::Submit(task) => (self.submit(task), false),
+            Request::Query { id } => (self.query(id), false),
+            Request::Snapshot => (self.snapshot_json("snapshot"), false),
+            Request::Shutdown => (self.shutdown(), true),
+        }
+    }
+
+    /// Serve a JSON-lines session until `shutdown` or EOF.  Returns
+    /// whether a shutdown was requested (callers drain on bare EOF).
+    pub fn serve<R: BufRead, W: Write>(&mut self, reader: R, mut writer: W) -> Result<bool, String> {
+        for line in reader.lines() {
+            let line = line.map_err(|e| format!("reading request line: {e}"))?;
+            let (resp, stop) = match parse_request(&line) {
+                Ok(None) => continue,
+                Ok(Some(req)) => self.handle(req),
+                Err(e) => (error_response(&e), false),
+            };
+            writeln!(writer, "{}", resp.render_compact())
+                .map_err(|e| format!("writing response: {e}"))?;
+            if stop {
+                return Ok(true);
+            }
+        }
+        Ok(false)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ext::trace::task_to_json;
+    use crate::tasks::LIBRARY;
+
+    fn small_cfg() -> SimConfig {
+        let mut cfg = SimConfig::default();
+        cfg.cluster.total_pairs = 32;
+        cfg.cluster.pairs_per_server = 2;
+        cfg.theta = 0.9;
+        cfg
+    }
+
+    fn mk_task(id: usize, arrival: f64, u: f64, k: f64) -> Task {
+        let model = LIBRARY[id % LIBRARY.len()].model.scaled(k);
+        Task {
+            id,
+            app: id % LIBRARY.len(),
+            model,
+            arrival,
+            deadline: arrival + model.t_star() / u,
+            u,
+        }
+    }
+
+    fn submit_line(t: &Task) -> String {
+        obj(vec![("op", s("submit")), ("task", task_to_json(t))]).render_compact()
+    }
+
+    #[test]
+    fn full_session_over_the_wire() {
+        let cfg = small_cfg();
+        let solver = Solver::native();
+        let mut svc = Service::new(&cfg, OnlinePolicyKind::Edl, true, &solver);
+
+        let mut session = String::new();
+        session.push_str("# replay: two good tasks, one infeasible\n\n");
+        session.push_str(&submit_line(&mk_task(0, 0.0, 0.5, 10.0)));
+        session.push('\n');
+        let mut bad = mk_task(1, 5.0, 0.5, 10.0);
+        bad.deadline = bad.arrival + bad.model.t_min(&cfg.interval) * 0.3;
+        session.push_str(&submit_line(&bad));
+        session.push('\n');
+        session.push_str(&submit_line(&mk_task(2, 9.0, 0.6, 12.0)));
+        session.push('\n');
+        session.push_str("{\"op\":\"query\",\"id\":1}\n");
+        session.push_str("{\"op\":\"snapshot\"}\n");
+        session.push_str("{\"op\":\"shutdown\"}\n");
+
+        let mut out = Vec::new();
+        let stopped = svc.serve(session.as_bytes(), &mut out).unwrap();
+        assert!(stopped);
+        let lines: Vec<Json> = String::from_utf8(out)
+            .unwrap()
+            .lines()
+            .map(|l| Json::parse(l).unwrap())
+            .collect();
+        assert_eq!(lines.len(), 6);
+        assert_eq!(lines[0].get("admitted"), Some(&Json::Bool(true)));
+        assert_eq!(lines[0].get("deadline_met"), Some(&Json::Bool(true)));
+        assert_eq!(lines[1].get("admitted"), Some(&Json::Bool(false)));
+        assert_eq!(
+            lines[1].get("reason").unwrap().as_str(),
+            Some("infeasible-deadline")
+        );
+        assert_eq!(lines[2].get("admitted"), Some(&Json::Bool(true)));
+        assert_eq!(lines[3].get("status").unwrap().as_str(), Some("rejected"));
+        assert_eq!(lines[4].get("admitted").unwrap().as_f64(), Some(2.0));
+        let fin = &lines[5];
+        assert_eq!(fin.get("drained"), Some(&Json::Bool(true)));
+        assert_eq!(fin.get("violations").unwrap().as_f64(), Some(0.0));
+        let run = fin.get("e_run").unwrap().as_f64().unwrap();
+        let idle = fin.get("e_idle").unwrap().as_f64().unwrap();
+        let ovh = fin.get("e_overhead").unwrap().as_f64().unwrap();
+        let total = fin.get("e_total").unwrap().as_f64().unwrap();
+        assert!(run > 0.0 && idle > 0.0 && ovh > 0.0);
+        assert!((total - (run + idle + ovh)).abs() < 1e-9 * total);
+    }
+
+    #[test]
+    fn out_of_order_submission_clamps_to_clock() {
+        let cfg = small_cfg();
+        let solver = Solver::native();
+        let mut svc = Service::new(&cfg, OnlinePolicyKind::Edl, true, &solver);
+        let r1 = svc.submit(mk_task(0, 100.0, 0.5, 10.0));
+        assert_eq!(r1.get("now").unwrap().as_f64(), Some(100.0));
+        // dated in the past: admitted *now*, absolute deadline kept
+        let stale = mk_task(1, 20.0, 0.3, 10.0);
+        let d = stale.deadline;
+        let r2 = svc.submit(stale);
+        assert_eq!(r2.get("now").unwrap().as_f64(), Some(100.0));
+        assert_eq!(r2.get("admitted"), Some(&Json::Bool(true)));
+        let rec = svc.record(1).unwrap();
+        assert_eq!(rec.deadline, d);
+        assert!(rec.start >= 100.0);
+    }
+
+    #[test]
+    fn bin_packing_service_places_batches() {
+        let cfg = small_cfg();
+        let solver = Solver::native();
+        let mut svc = Service::new(&cfg, OnlinePolicyKind::Bin, true, &solver);
+        for i in 0..12 {
+            let r = svc.submit(mk_task(i, i as f64, 0.4, 10.0));
+            assert_eq!(r.get("admitted"), Some(&Json::Bool(true)), "task {i}");
+        }
+        let fin = svc.shutdown();
+        assert_eq!(fin.get("violations").unwrap().as_f64(), Some(0.0));
+        assert_eq!(fin.get("admitted").unwrap().as_f64(), Some(12.0));
+    }
+
+    #[test]
+    fn rejected_garbage_does_not_poison_the_clock() {
+        let cfg = small_cfg();
+        let solver = Solver::native();
+        let mut svc = Service::new(&cfg, OnlinePolicyKind::Edl, true, &solver);
+        assert_eq!(
+            svc.submit(mk_task(0, 5.0, 0.5, 10.0)).get("admitted"),
+            Some(&Json::Bool(true))
+        );
+        // invalid task dated absurdly far in the future: rejected, and
+        // the service clock must NOT jump
+        let mut garbage = mk_task(1, 1e18, 0.5, 10.0);
+        garbage.u = 7.0;
+        let r = svc.submit(garbage);
+        assert_eq!(r.get("admitted"), Some(&Json::Bool(false)));
+        assert_eq!(r.get("reason").unwrap().as_str(), Some("invalid-task"));
+        assert!(svc.now() < 1e6, "clock poisoned: {}", svc.now());
+        // later legitimate traffic still admits at sane times
+        let ok = svc.submit(mk_task(2, 6.0, 0.5, 10.0));
+        assert_eq!(ok.get("admitted"), Some(&Json::Bool(true)));
+        assert_eq!(ok.get("now").unwrap().as_f64(), Some(6.0));
+    }
+
+    #[test]
+    fn malformed_line_reports_error_and_continues() {
+        let cfg = small_cfg();
+        let solver = Solver::native();
+        let mut svc = Service::new(&cfg, OnlinePolicyKind::Edl, true, &solver);
+        let session = "not json at all\n{\"op\":\"snapshot\"}\n";
+        let mut out = Vec::new();
+        let stopped = svc.serve(session.as_bytes(), &mut out).unwrap();
+        assert!(!stopped, "EOF without shutdown");
+        let text = String::from_utf8(out).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 2);
+        let err = Json::parse(lines[0]).unwrap();
+        assert_eq!(err.get("ok"), Some(&Json::Bool(false)));
+        let snap = Json::parse(lines[1]).unwrap();
+        assert_eq!(snap.get("ok"), Some(&Json::Bool(true)));
+    }
+}

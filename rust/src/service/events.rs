@@ -1,0 +1,358 @@
+//! Continuous-time event-driven scheduling core.
+//!
+//! Replaces the per-minute slot loop of Algorithm 4 with a binary-heap
+//! event queue, so wall-clock cost scales with the number of *events*
+//! (arrivals, departures, DRS idle-timeout checks) instead of the horizon
+//! length.  Semantics are slot-exact: DRS turn-off decisions still land on
+//! the integer slot boundaries the paper's loop would have used, so the
+//! legacy engine remains a bit-identical cross-check oracle (see the
+//! `prop_event_engine_matches_slot_engine` property test).
+//!
+//! Event sources, in priority order at equal timestamps (matching the
+//! slot loop's departures → DRS sweep → arrivals ordering):
+//!
+//! 1. **Departures** — not queued here at all: the [`Cluster`] already
+//!    keeps a lazy min-heap of (μ, pair) entries, which the engine merges
+//!    via [`Cluster::peek_departure`].  Processing a departure schedules a
+//!    DRS check for its server when the whole server has gone idle.
+//! 2. **DRS checks** — scheduled for the first slot boundary at which a
+//!    fully-idle server reaches the ρ threshold; stale checks (the server
+//!    was re-used or already turned off) validate and drop out.
+//! 3. **Arrival batches** — dispatched to the [`OnlinePolicy`].
+
+use crate::cluster::{Cluster, PairPower};
+use crate::sched::online::{OnlinePolicy, SchedCtx};
+use crate::tasks::Task;
+use crate::util::OrdF64;
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+
+/// Tie-break rank: DRS checks fire before arrivals at the same timestamp,
+/// mirroring the slot loop's sweep-before-assign ordering (a server that
+/// qualifies for turn-off is powered down even if the same slot's arrivals
+/// immediately re-open one — the paper's ω accounting depends on this).
+const RANK_DRS: u8 = 0;
+const RANK_ARRIVAL: u8 = 1;
+
+/// A queued event (departures live in the cluster's own heap).
+pub enum EventKind {
+    /// Re-validate DRS turn-off for one server.
+    DrsCheck { server: usize },
+    /// An arrival batch handed to the policy as one EDF-sorted group.
+    Arrivals(Vec<Task>),
+}
+
+struct QueuedEvent {
+    time: f64,
+    rank: u8,
+    /// FIFO tie-break so equal (time, rank) events pop in push order.
+    seq: u64,
+    kind: EventKind,
+}
+
+impl QueuedEvent {
+    fn key(&self) -> (OrdF64, u8, u64) {
+        (OrdF64(self.time), self.rank, self.seq)
+    }
+}
+
+impl PartialEq for QueuedEvent {
+    fn eq(&self, other: &Self) -> bool {
+        self.key() == other.key()
+    }
+}
+impl Eq for QueuedEvent {}
+impl PartialOrd for QueuedEvent {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for QueuedEvent {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        self.key().cmp(&other.key())
+    }
+}
+
+/// The event loop driver.  Owns the queue and the simulation clock; the
+/// cluster, policy, and scheduling context stay with the caller so the
+/// same engine core serves both the one-shot simulator and the streaming
+/// daemon.
+pub struct EventEngine {
+    queue: BinaryHeap<Reverse<QueuedEvent>>,
+    seq: u64,
+    /// Clock: the timestamp of the last processed event.
+    pub now: f64,
+    /// Total events processed (departure rounds + checks + arrivals).
+    pub events_processed: u64,
+}
+
+/// Runaway guard mirroring the slot engine's drain guard: no plausible
+/// workload produces this many events, so tripping it means a scheduling
+/// bug is re-queueing work forever.
+const EVENT_GUARD: u64 = 1 << 33;
+
+impl Default for EventEngine {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl EventEngine {
+    pub fn new() -> EventEngine {
+        EventEngine {
+            queue: BinaryHeap::new(),
+            seq: 0,
+            now: 0.0,
+            events_processed: 0,
+        }
+    }
+
+    fn push(&mut self, time: f64, rank: u8, kind: EventKind) {
+        debug_assert!(time.is_finite(), "event at non-finite time");
+        self.queue.push(Reverse(QueuedEvent {
+            time,
+            rank,
+            seq: self.seq,
+            kind,
+        }));
+        self.seq += 1;
+    }
+
+    /// Queue an arrival batch at `t` (absolute time).
+    pub fn push_arrivals(&mut self, t: f64, tasks: Vec<Task>) {
+        if !tasks.is_empty() {
+            self.push(t, RANK_ARRIVAL, EventKind::Arrivals(tasks));
+        }
+    }
+
+    /// Pending events (arrivals + checks; excludes cluster departures).
+    pub fn pending(&self) -> usize {
+        self.queue.len()
+    }
+
+    /// After `departed` pairs went idle: for each affected server whose
+    /// pairs are now ALL idle, schedule a DRS check at the first slot
+    /// boundary where the youngest idle stretch reaches ρ.  (If some pair
+    /// is still busy, its own later departure schedules the check, so
+    /// every fully-idle server always has a covering check in flight.)
+    fn schedule_drs_checks(&mut self, departed: &[usize], cluster: &Cluster) {
+        let rho = cluster.cfg.rho as f64;
+        // dedup by server: one round can retire many pairs of the same
+        // server, which only needs one check (a few entries — a Vec scan
+        // beats a set here)
+        let mut seen: Vec<usize> = Vec::new();
+        for &i in departed {
+            let s = cluster.pairs[i].server;
+            if !cluster.server_on[s] || seen.contains(&s) {
+                continue;
+            }
+            seen.push(s);
+            let mut latest = f64::NEG_INFINITY;
+            let mut all_idle = true;
+            for j in cluster.server_pairs(s) {
+                match cluster.pairs[j].power {
+                    PairPower::Idle => latest = latest.max(cluster.pairs[j].idle_since),
+                    _ => {
+                        all_idle = false;
+                        break;
+                    }
+                }
+            }
+            if all_idle {
+                // first integer slot t with t - latest >= rho - 1e-9,
+                // exactly where the slot loop's sweep would fire
+                let t = (latest + rho - 1e-9).ceil();
+                self.push(t, RANK_DRS, EventKind::DrsCheck { server: s });
+            }
+        }
+    }
+
+    /// Validate a DRS check: turn the server off iff every pair has been
+    /// idle for ≥ ρ at `now` (the slot sweep's condition verbatim).
+    /// Checks invalidated by later activity simply drop out — the
+    /// departure that caused that activity scheduled a fresh one.
+    fn drs_check(&self, server: usize, now: f64, cluster: &mut Cluster) {
+        if !cluster.server_on[server] {
+            return;
+        }
+        let rho = cluster.cfg.rho as f64;
+        let all_idle_long = cluster.server_pairs(server).all(|i| match cluster.pairs[i].power {
+            PairPower::Idle => cluster.pairs[i].idle_span(now) >= rho - 1e-9,
+            _ => false,
+        });
+        if all_idle_long {
+            cluster.turn_off_server(server, now);
+        }
+    }
+
+    /// Process every event with timestamp ≤ `until` (departures included),
+    /// in time order.  Returns when the next event lies beyond `until` or
+    /// nothing is pending.
+    pub fn run_until(
+        &mut self,
+        until: f64,
+        cluster: &mut Cluster,
+        policy: &mut dyn OnlinePolicy,
+        ctx: &SchedCtx,
+    ) {
+        // guard the per-call delta: `events_processed` is cumulative over
+        // the engine's lifetime and a healthy long-running daemon crosses
+        // any fixed total eventually
+        let mut processed_this_run = 0u64;
+        loop {
+            let t_dep = cluster.peek_departure().unwrap_or(f64::INFINITY);
+            let t_evt = self
+                .queue
+                .peek()
+                .map(|Reverse(e)| e.time)
+                .unwrap_or(f64::INFINITY);
+            let t = t_dep.min(t_evt);
+            if !t.is_finite() || t > until {
+                break;
+            }
+            self.events_processed += 1;
+            processed_this_run += 1;
+            assert!(
+                processed_this_run < EVENT_GUARD,
+                "event engine failed to drain"
+            );
+            // departures first at equal timestamps (slot-loop order),
+            // with the same +1e-9 slack `process_departures` uses so a
+            // float-accumulated μ a hair past a slot boundary departs
+            // before that slot's arrivals, exactly like the slot loop
+            if t_dep <= t_evt + 1e-9 {
+                let departed = cluster.process_departures(t_dep);
+                self.now = self.now.max(t_dep);
+                self.schedule_drs_checks(&departed, cluster);
+                continue;
+            }
+            let Reverse(ev) = self.queue.pop().expect("peeked event vanished");
+            self.now = self.now.max(ev.time);
+            match ev.kind {
+                EventKind::DrsCheck { server } => self.drs_check(server, ev.time, cluster),
+                EventKind::Arrivals(tasks) => policy.assign(ev.time, &tasks, cluster, ctx),
+            }
+        }
+    }
+
+    /// Drain: process everything pending.  Terminates because every check
+    /// pops from the queue, every departure round pops ≥ 1 heap entry,
+    /// and the last busy→idle transition of a server always schedules the
+    /// check that finally powers it down.
+    pub fn run_to_completion(
+        &mut self,
+        cluster: &mut Cluster,
+        policy: &mut dyn OnlinePolicy,
+        ctx: &SchedCtx,
+    ) {
+        self.run_until(f64::INFINITY, cluster, policy, ctx);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ClusterConfig;
+    use crate::dvfs::ScalingInterval;
+    use crate::runtime::Solver;
+    use crate::sched::online::EdlOnline;
+    use crate::tasks::LIBRARY;
+
+    fn mk_task(id: usize, arrival: f64, u: f64, k: f64) -> Task {
+        let model = LIBRARY[id % LIBRARY.len()].model.scaled(k);
+        Task {
+            id,
+            app: id % LIBRARY.len(),
+            model,
+            arrival,
+            deadline: arrival + model.t_star() / u,
+            u,
+        }
+    }
+
+    #[test]
+    fn drains_and_turns_everything_off() {
+        let solver = Solver::native();
+        let ctx = SchedCtx {
+            solver: &solver,
+            iv: ScalingInterval::wide(),
+            dvfs: true,
+            theta: 1.0,
+        };
+        let mut cluster = Cluster::new(ClusterConfig {
+            total_pairs: 32,
+            ..ClusterConfig::default()
+        });
+        let mut policy = EdlOnline::new();
+        let mut engine = EventEngine::new();
+        engine.push_arrivals(0.0, (0..6).map(|i| mk_task(i, 0.0, 0.5, 10.0)).collect());
+        engine.push_arrivals(40.0, vec![mk_task(6, 40.0, 0.5, 10.0)]);
+        engine.run_to_completion(&mut cluster, &mut policy, &ctx);
+        assert!(cluster.server_on.iter().all(|&on| !on));
+        assert_eq!(cluster.violations, 0);
+        assert_eq!(engine.pending(), 0);
+        assert!(cluster.e_run > 0.0 && cluster.e_idle() > 0.0);
+    }
+
+    #[test]
+    fn run_until_stops_at_the_boundary() {
+        let solver = Solver::native();
+        let ctx = SchedCtx {
+            solver: &solver,
+            iv: ScalingInterval::wide(),
+            dvfs: true,
+            theta: 1.0,
+        };
+        let mut cluster = Cluster::new(ClusterConfig {
+            total_pairs: 8,
+            ..ClusterConfig::default()
+        });
+        let mut policy = EdlOnline::new();
+        let mut engine = EventEngine::new();
+        // k=1 keeps t_max under 15 slots, so the first task has departed
+        // and been DRS-reclaimed well before the t=100 boundary
+        engine.push_arrivals(0.0, vec![mk_task(0, 0.0, 0.5, 1.0)]);
+        engine.push_arrivals(500.0, vec![mk_task(1, 500.0, 0.5, 1.0)]);
+        engine.run_until(100.0, &mut cluster, &mut policy, &ctx);
+        // the t=500 arrival is still pending; the first task has fully
+        // departed and its server was reclaimed by DRS
+        assert_eq!(engine.pending(), 1);
+        assert!(cluster.server_on.iter().all(|&on| !on));
+        engine.run_to_completion(&mut cluster, &mut policy, &ctx);
+        assert_eq!(cluster.pairs_used(), 1, "both tasks stack on pair 0");
+        assert_eq!(cluster.pairs[0].tasks_run, 2);
+    }
+
+    #[test]
+    fn drs_fires_on_slot_boundaries() {
+        // a task departing at a fractional time must still be reclaimed at
+        // the integer slot the per-minute sweep would have used
+        let solver = Solver::native();
+        let ctx = SchedCtx {
+            solver: &solver,
+            iv: ScalingInterval::wide(),
+            dvfs: false,
+            theta: 1.0,
+        };
+        let cfg = ClusterConfig {
+            total_pairs: 4,
+            ..ClusterConfig::default()
+        }; // rho = 2
+        let mut cluster = Cluster::new(cfg);
+        let mut policy = EdlOnline::new();
+        let mut engine = EventEngine::new();
+        let t = mk_task(0, 0.0, 0.9, 10.0);
+        engine.push_arrivals(0.0, vec![t]);
+        engine.run_to_completion(&mut cluster, &mut policy, &ctx);
+        let mu = cluster.pairs[0].busy_until;
+        assert!(mu.fract() != 0.0, "test wants a fractional departure, got {mu}");
+        // slot sweep: first integer >= mu + rho
+        let expect_off = (mu + 2.0 - 1e-9).ceil();
+        let idle = cluster.pairs[0].idle_time;
+        assert!(
+            (idle - (expect_off - mu)).abs() < 1e-9,
+            "idle {idle} vs expected {}",
+            expect_off - mu
+        );
+    }
+}

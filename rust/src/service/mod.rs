@@ -1,0 +1,27 @@
+//! Event-driven scheduling service (the "online scheduler as a service"
+//! layer the paper's Sec. 4.2.2 batch loop grows into).
+//!
+//! * [`events`] — the continuous-time event core: a binary-heap queue
+//!   over arrivals, departures, and DRS idle-timeout checks.  Replaces
+//!   per-minute slot stepping, so cost scales with event count; the
+//!   one-shot simulator ([`crate::sim::online`]) runs on the same core.
+//! * [`admission`] — O(1) admission control from the DVFS solver's
+//!   minimum-execution-time bound: infeasible-deadline work is bounced
+//!   at the door instead of poisoning the queue.
+//! * [`protocol`] — the JSON-lines wire format (`submit` / `query` /
+//!   `snapshot` / `shutdown`), schema-compatible with workload files.
+//! * [`metrics`] — live energy decomposition + admission counters.
+//! * [`daemon`] — the [`daemon::Service`] loop behind `repro serve`
+//!   (stdin) and `repro replay` (session files), with graceful drain.
+
+pub mod admission;
+pub mod daemon;
+pub mod events;
+pub mod metrics;
+pub mod protocol;
+
+pub use admission::{AdmissionController, Verdict};
+pub use daemon::{Service, TaskRecord};
+pub use events::EventEngine;
+pub use metrics::Snapshot;
+pub use protocol::{parse_request, Request};

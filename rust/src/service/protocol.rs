@@ -1,0 +1,156 @@
+//! JSON-lines wire protocol for the scheduling service.
+//!
+//! One request per line in, one response per line out.  Requests:
+//!
+//! ```text
+//! {"op":"submit","task":{"id":1,"app":0,"arrival":0,"deadline":120,"u":0.5,
+//!                        "model":{"p0":53.4,"gamma":22.12,"c":100.4,
+//!                                 "d":54.18,"delta":0.182,"t0":8.3}}}
+//! {"op":"query","id":1}
+//! {"op":"snapshot"}
+//! {"op":"shutdown"}
+//! ```
+//!
+//! The task schema is exactly the workload-file schema
+//! ([`crate::ext::trace`]), so `repro workload export` output can be
+//! sliced straight into a replay session.  Blank lines and `#` comments
+//! are skipped, which keeps replay files annotatable.
+
+use crate::ext::trace::task_from_json;
+use crate::tasks::Task;
+use crate::util::json::Json;
+pub use crate::util::json::{num, obj};
+
+/// A decoded client request.
+#[derive(Clone, Debug)]
+pub enum Request {
+    /// Submit one task for admission + placement.
+    Submit(Task),
+    /// Query the record of a previously submitted task id.
+    Query { id: usize },
+    /// Report live metrics.
+    Snapshot,
+    /// Graceful drain: finish everything queued, power down, report.
+    Shutdown,
+}
+
+/// Parse one wire line.  `Ok(None)` = blank/comment line (skip).
+pub fn parse_request(line: &str) -> Result<Option<Request>, String> {
+    let line = line.trim();
+    if line.is_empty() || line.starts_with('#') {
+        return Ok(None);
+    }
+    let j = Json::parse(line).map_err(|e| format!("bad JSON: {e}"))?;
+    let op = j
+        .get("op")
+        .and_then(Json::as_str)
+        .ok_or("missing string field 'op'")?;
+    let req = match op {
+        "submit" => {
+            let tj = j.get("task").ok_or("submit: missing 'task'")?;
+            Request::Submit(task_from_json(tj).map_err(|e| format!("submit: {e}"))?)
+        }
+        "query" => {
+            let id = j
+                .get("id")
+                .and_then(Json::as_f64)
+                .ok_or("query: missing numeric 'id'")?;
+            // a saturating `as usize` would silently resolve -1 or 7.9
+            // to some other task's record — reject instead
+            if !(id.fract() == 0.0 && (0.0..=usize::MAX as f64).contains(&id)) {
+                return Err(format!("query: 'id' must be a non-negative integer, got {id}"));
+            }
+            Request::Query { id: id as usize }
+        }
+        "snapshot" => Request::Snapshot,
+        "shutdown" => Request::Shutdown,
+        other => return Err(format!("unknown op '{other}'")),
+    };
+    Ok(Some(req))
+}
+
+/// Shorthand for a JSON string (the `obj`/`num` builders live in
+/// [`crate::util::json`] and are re-exported above).
+pub fn s(x: &str) -> Json {
+    Json::Str(x.to_string())
+}
+
+/// The error response for an unparseable/unknown request line.
+pub fn error_response(msg: &str) -> Json {
+    obj(vec![
+        ("ok", Json::Bool(false)),
+        ("error", s(msg)),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ext::trace::task_to_json;
+    use crate::tasks::LIBRARY;
+
+    fn demo_task() -> Task {
+        let model = LIBRARY[2].model.scaled(15.0);
+        Task {
+            id: 42,
+            app: 2,
+            model,
+            arrival: 3.0,
+            deadline: 3.0 + model.t_star() / 0.4,
+            u: 0.4,
+        }
+    }
+
+    #[test]
+    fn submit_roundtrip() {
+        let t = demo_task();
+        let line = obj(vec![("op", s("submit")), ("task", task_to_json(&t))]).render_compact();
+        match parse_request(&line).unwrap().unwrap() {
+            Request::Submit(got) => {
+                assert_eq!(got.id, t.id);
+                assert_eq!(got.deadline, t.deadline);
+                assert_eq!(got.model, t.model);
+            }
+            other => panic!("wrong request: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn control_ops_parse() {
+        assert!(matches!(
+            parse_request(r#"{"op":"snapshot"}"#).unwrap().unwrap(),
+            Request::Snapshot
+        ));
+        assert!(matches!(
+            parse_request(r#"{"op":"shutdown"}"#).unwrap().unwrap(),
+            Request::Shutdown
+        ));
+        assert!(matches!(
+            parse_request(r#"{"op":"query","id":7}"#).unwrap().unwrap(),
+            Request::Query { id: 7 }
+        ));
+    }
+
+    #[test]
+    fn blanks_and_comments_skip() {
+        assert!(parse_request("").unwrap().is_none());
+        assert!(parse_request("   ").unwrap().is_none());
+        assert!(parse_request("# a replay annotation").unwrap().is_none());
+    }
+
+    #[test]
+    fn malformed_lines_error() {
+        assert!(parse_request("{").is_err());
+        assert!(parse_request(r#"{"op":"warp"}"#).is_err());
+        assert!(parse_request(r#"{"op":"submit"}"#).is_err());
+        assert!(parse_request(r#"{"op":"query"}"#).is_err());
+        assert!(parse_request(r#"{"id":3}"#).is_err());
+    }
+
+    #[test]
+    fn query_rejects_non_integer_ids() {
+        assert!(parse_request(r#"{"op":"query","id":-1}"#).is_err());
+        assert!(parse_request(r#"{"op":"query","id":7.9}"#).is_err());
+        assert!(parse_request(r#"{"op":"query","id":0}"#).unwrap().is_some());
+    }
+}

@@ -1,10 +1,14 @@
 //! Simulation engines: the offline one-shot evaluator and the online
-//! discrete-time (slot) engine, plus Monte-Carlo repetition drivers.
+//! engine (event-driven by default, with the paper's discrete-time slot
+//! loop as the cross-check oracle), plus Monte-Carlo repetition drivers.
 
 pub mod offline;
 pub mod online;
 pub mod report;
 
 pub use offline::{run_offline, run_offline_reps, OfflineOutcome};
-pub use online::{run_online, run_online_reps, OnlineOutcome, OnlinePolicyKind};
+pub use online::{
+    run_online, run_online_reps, run_online_workload, run_online_workload_slots, OnlineOutcome,
+    OnlinePolicyKind,
+};
 pub use report::{EnergyAgg, OnlineAgg};

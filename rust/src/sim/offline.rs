@@ -8,7 +8,7 @@ use crate::config::SimConfig;
 use crate::runtime::Solver;
 use crate::sched::{prepare, report, schedule_offline, OfflinePolicy, OfflineReport};
 use crate::tasks::generate_offline;
-use crate::util::{Rng, Summary};
+use crate::util::{parallel_map, Rng, Summary};
 
 /// One offline run's outcome.
 #[derive(Clone, Copy, Debug)]
@@ -81,9 +81,9 @@ impl OfflineAggregate {
     }
 }
 
-/// Monte-Carlo repetitions.  With the native backend the reps run on a
-/// thread pool; with PJRT they run sequentially on the calling thread
-/// (the engine is not `Send`).
+/// Monte-Carlo repetitions.  With the native backend the reps fan out
+/// through [`parallel_map`]; with PJRT they run sequentially on the
+/// calling thread (the engine is not `Send`).
 pub fn run_offline_reps(
     policy: OfflinePolicy,
     u: f64,
@@ -101,30 +101,11 @@ pub fn run_offline_reps(
             }
         }
         Solver::Native { .. } => {
-            let n_threads = std::thread::available_parallelism()
-                .map(|n| n.get())
-                .unwrap_or(4)
-                .min(cfg.reps)
-                .max(1);
-            let outcomes = std::sync::Mutex::new(Vec::with_capacity(cfg.reps));
-            let next = std::sync::atomic::AtomicUsize::new(0);
-            std::thread::scope(|s| {
-                for _ in 0..n_threads {
-                    s.spawn(|| {
-                        let solver = Solver::native();
-                        loop {
-                            let r = next.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
-                            if r >= cfg.reps {
-                                break;
-                            }
-                            let mut rng = Rng::new(cfg.seed).fork(r as u64);
-                            let o = run_offline(policy, u, dvfs, cfg, &solver, &mut rng);
-                            outcomes.lock().unwrap().push(o);
-                        }
-                    });
-                }
-            });
-            for o in outcomes.into_inner().unwrap() {
+            for o in parallel_map(cfg.reps, |r| {
+                let solver = Solver::native();
+                let mut rng = Rng::new(cfg.seed).fork(r as u64);
+                run_offline(policy, u, dvfs, cfg, &solver, &mut rng)
+            }) {
                 agg.add(&o);
             }
         }

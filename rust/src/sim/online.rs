@@ -1,18 +1,29 @@
-//! Online discrete-time simulation engine (paper Sec. 4.2.2 / Sec. 5.4).
+//! Online simulation engine (paper Sec. 4.2.2 / Sec. 5.4).
 //!
-//! Time advances in unit slots (minutes).  Each slot (Algorithm 4):
+//! Two engines produce the same [`OnlineOutcome`]:
+//!
+//! * [`run_online_workload`] — the default **event-driven** engine: the
+//!   workload's arrival batches are seeded into the continuous-time
+//!   [`EventEngine`] and the run costs O(events · log events) instead of
+//!   O(horizon).  DRS decisions still land on the slot boundaries the
+//!   paper's loop uses, so results are identical (see the
+//!   `prop_event_engine_matches_slot_engine` property test).
+//! * [`run_online_workload_slots`] — the paper's per-minute slot loop
+//!   (Algorithm 4 verbatim), kept as the cross-check oracle.  Each slot:
 //!   1. process tasks leaving in this slot (pairs go idle from their μ),
 //!   2. DRS sweep: turn off servers idle for ≥ ρ,
 //!   3. assign the slot's arrivals via the policy (EDL or bin-packing).
-//! After the horizon the engine drains until the cluster is fully off,
-//! then reports the energy decomposition E_run + E_idle + E_overhead.
+//!   After the horizon it drains until the cluster is fully off.
+//!
+//! Both report the energy decomposition E_run + E_idle + E_overhead.
 
 use crate::cluster::Cluster;
 use crate::config::SimConfig;
 use crate::runtime::Solver;
 use crate::sched::online::{BinPacking, EdlOnline, OnlinePolicy, SchedCtx};
+use crate::service::events::EventEngine;
 use crate::tasks::{generate_online, OnlineWorkload};
-use crate::util::Rng;
+use crate::util::{parallel_map, Rng};
 
 /// Which online policy to run.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -31,7 +42,8 @@ impl OnlinePolicyKind {
         }
     }
 
-    fn build(&self, total_pairs: usize) -> Box<dyn OnlinePolicy> {
+    /// Instantiate the policy (also used by the streaming service).
+    pub fn build(&self, total_pairs: usize) -> Box<dyn OnlinePolicy> {
         match self {
             OnlinePolicyKind::Edl => Box::new(EdlOnline::new()),
             OnlinePolicyKind::Bin => Box::new(BinPacking::new(total_pairs)),
@@ -54,7 +66,9 @@ pub struct OnlineOutcome {
     pub forced: u64,
     /// Pair turn-on events ω.
     pub turn_ons: u64,
-    /// Slots simulated (horizon + drain).
+    /// Slots covered (horizon + drain).  The slot engine counts loop
+    /// iterations; the event engine reports the drained end time, floored
+    /// at horizon + 1 so both satisfy `slots > horizon`.
     pub slots: u64,
 }
 
@@ -71,8 +85,70 @@ impl OnlineOutcome {
     }
 }
 
-/// Run one online simulation over a pre-generated workload.
+fn outcome(
+    cluster: &Cluster,
+    policy: &dyn OnlinePolicy,
+    workload: &OnlineWorkload,
+    slots: u64,
+) -> OnlineOutcome {
+    let stats = policy.stats();
+    OnlineOutcome {
+        e_run: cluster.e_run,
+        e_idle: cluster.e_idle(),
+        e_overhead: cluster.e_overhead(),
+        baseline_e: workload.baseline_energy(),
+        n_tasks: workload.total_tasks(),
+        servers_used: cluster.servers_used(),
+        pairs_used: cluster.pairs_used(),
+        violations: cluster.violations,
+        readjusted: stats.readjusted,
+        forced: stats.forced,
+        turn_ons: cluster.turn_ons,
+        slots,
+    }
+}
+
+/// Run one online simulation over a pre-generated workload on the
+/// event-driven engine (the default path).
 pub fn run_online_workload(
+    kind: OnlinePolicyKind,
+    workload: &OnlineWorkload,
+    dvfs: bool,
+    cfg: &SimConfig,
+    solver: &Solver,
+) -> OnlineOutcome {
+    let mut cluster = Cluster::new(cfg.cluster.clone());
+    let mut policy = kind.build(cfg.cluster.total_pairs);
+    let ctx = SchedCtx {
+        solver,
+        iv: cfg.interval,
+        dvfs,
+        theta: cfg.theta,
+    };
+
+    let mut engine = EventEngine::new();
+    // T = 0: the initial offline batch (Algorithm 4 line 1)
+    engine.push_arrivals(0.0, workload.offline.tasks.clone());
+    // online stream: one event per non-empty slot (sparse workloads seed
+    // far fewer events than the horizon has slots)
+    for (idx, r) in workload.slots.iter().enumerate() {
+        if !r.is_empty() {
+            engine.push_arrivals((idx + 1) as f64, workload.online.tasks[r.clone()].to_vec());
+        }
+    }
+    engine.run_to_completion(&mut cluster, policy.as_mut(), &ctx);
+    debug_assert!(
+        cluster.server_on.iter().all(|&on| !on),
+        "event engine failed to drain"
+    );
+    let slots = (engine.now.ceil() as u64).max(cfg.gen.horizon) + 1;
+    outcome(&cluster, policy.as_ref(), workload, slots)
+}
+
+/// The legacy per-minute slot loop (Algorithm 4 verbatim) — the oracle
+/// the event-driven engine is property-tested against, and the baseline
+/// of `bench_service`'s event-vs-slot speedup measurement.
+pub fn run_online_workload_slots(
     kind: OnlinePolicyKind,
     workload: &OnlineWorkload,
     dvfs: bool,
@@ -113,21 +189,7 @@ pub fn run_online_workload(
         assert!(t < drain_guard, "online simulation failed to drain");
     }
 
-    let stats = policy.stats();
-    OnlineOutcome {
-        e_run: cluster.e_run,
-        e_idle: cluster.e_idle(),
-        e_overhead: cluster.e_overhead(),
-        baseline_e: workload.baseline_energy(),
-        n_tasks: workload.total_tasks(),
-        servers_used: cluster.servers_used(),
-        pairs_used: cluster.pairs_used(),
-        violations: cluster.violations,
-        readjusted: stats.readjusted,
-        forced: stats.forced,
-        turn_ons: cluster.turn_ons,
-        slots: t,
-    }
+    outcome(&cluster, policy.as_ref(), workload, t)
 }
 
 /// Generate a workload from `rng` and run one simulation.
@@ -142,8 +204,8 @@ pub fn run_online(
     run_online_workload(kind, &workload, dvfs, cfg, solver)
 }
 
-/// Monte-Carlo repetitions (threaded for the native backend, like the
-/// offline driver).
+/// Monte-Carlo repetitions ([`parallel_map`] fan-out for the native
+/// backend; PJRT is not `Send`, so it stays on the calling thread).
 pub fn run_online_reps(
     kind: OnlinePolicyKind,
     dvfs: bool,
@@ -160,30 +222,11 @@ pub fn run_online_reps(
             }
         }
         Solver::Native { .. } => {
-            let n_threads = std::thread::available_parallelism()
-                .map(|n| n.get())
-                .unwrap_or(4)
-                .min(cfg.reps)
-                .max(1);
-            let outcomes = std::sync::Mutex::new(Vec::with_capacity(cfg.reps));
-            let next = std::sync::atomic::AtomicUsize::new(0);
-            std::thread::scope(|s| {
-                for _ in 0..n_threads {
-                    s.spawn(|| {
-                        let solver = Solver::native();
-                        loop {
-                            let r = next.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
-                            if r >= cfg.reps {
-                                break;
-                            }
-                            let mut rng = Rng::new(cfg.seed).fork(r as u64);
-                            let o = run_online(kind, dvfs, cfg, &solver, &mut rng);
-                            outcomes.lock().unwrap().push(o);
-                        }
-                    });
-                }
-            });
-            for o in outcomes.into_inner().unwrap() {
+            for o in parallel_map(cfg.reps, |r| {
+                let solver = Solver::native();
+                let mut rng = Rng::new(cfg.seed).fork(r as u64);
+                run_online(kind, dvfs, cfg, &solver, &mut rng)
+            }) {
                 agg.add(&o);
             }
         }
@@ -255,6 +298,30 @@ mod tests {
         assert!(o.n_tasks > 100);
         // with the time-fit admission check, misses should not occur
         assert_eq!(o.violations, 0, "{} violations / {}", o.violations, o.n_tasks);
+    }
+
+    #[test]
+    fn event_engine_matches_slot_engine_smoke() {
+        // the broad randomized check lives in tests/proptests.rs; this is
+        // the fast in-module smoke version
+        let cfg = small_cfg();
+        let solver = Solver::native();
+        let mut rng = Rng::new(11);
+        let w = generate_online(&cfg.gen, &mut rng);
+        for kind in OnlinePolicyKind::ALL {
+            let ev = run_online_workload(kind, &w, true, &cfg, &solver);
+            let sl = run_online_workload_slots(kind, &w, true, &cfg, &solver);
+            assert!((ev.e_run - sl.e_run).abs() <= 1e-9 * sl.e_run, "{kind:?} e_run");
+            assert!(
+                (ev.e_idle - sl.e_idle).abs() <= 1e-9 * sl.e_idle.max(1.0),
+                "{kind:?} e_idle: {} vs {}",
+                ev.e_idle,
+                sl.e_idle
+            );
+            assert_eq!(ev.turn_ons, sl.turn_ons, "{kind:?} turn_ons");
+            assert_eq!(ev.violations, sl.violations, "{kind:?} violations");
+            assert_eq!(ev.readjusted, sl.readjusted, "{kind:?} readjusted");
+        }
     }
 
     #[test]

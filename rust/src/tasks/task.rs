@@ -36,6 +36,12 @@ impl Task {
 
     pub fn validate(&self) -> Result<(), String> {
         self.model.validate()?;
+        // non-finite times would poison every downstream comparison (a
+        // NaN deadline admits, an infinite arrival panics the event
+        // queue), so reject them structurally
+        if !self.arrival.is_finite() || !self.deadline.is_finite() {
+            return Err(format!("task {}: non-finite arrival/deadline", self.id));
+        }
         if self.deadline < self.arrival {
             return Err(format!("task {}: deadline before arrival", self.id));
         }

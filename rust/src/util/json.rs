@@ -65,19 +65,55 @@ impl Json {
         out
     }
 
+    /// Single-line rendering (no indentation or newlines) — the JSON-lines
+    /// wire format of the streaming service, where one value = one line.
+    pub fn render_compact(&self) -> String {
+        let mut out = String::new();
+        self.write_compact(&mut out);
+        out
+    }
+
+    fn write_compact(&self, out: &mut String) {
+        match self {
+            Json::Null => out.push_str("null"),
+            Json::Bool(b) => {
+                let _ = write!(out, "{b}");
+            }
+            Json::Num(x) => write_num(out, *x),
+            Json::Str(s) => {
+                let _ = write!(out, "\"{}\"", escape(s));
+            }
+            Json::Arr(v) => {
+                out.push('[');
+                for (i, x) in v.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    x.write_compact(out);
+                }
+                out.push(']');
+            }
+            Json::Obj(m) => {
+                out.push('{');
+                for (i, (k, v)) in m.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    let _ = write!(out, "\"{}\":", escape(k));
+                    v.write_compact(out);
+                }
+                out.push('}');
+            }
+        }
+    }
+
     fn write(&self, out: &mut String, indent: usize) {
         match self {
             Json::Null => out.push_str("null"),
             Json::Bool(b) => {
                 let _ = write!(out, "{b}");
             }
-            Json::Num(x) => {
-                if x.fract() == 0.0 && x.abs() < 1e15 {
-                    let _ = write!(out, "{}", *x as i64);
-                } else {
-                    let _ = write!(out, "{x}");
-                }
-            }
+            Json::Num(x) => write_num(out, *x),
             Json::Str(s) => {
                 let _ = write!(out, "\"{}\"", escape(s));
             }
@@ -115,6 +151,35 @@ impl Json {
             }
         }
     }
+}
+
+/// Number rendering shared by both writers.  JSON has no inf/NaN —
+/// `write!("{x}")` would emit `inf`, which no parser (including ours)
+/// accepts — so non-finite values render as `null`.
+fn write_num(out: &mut String, x: f64) {
+    if !x.is_finite() {
+        out.push_str("null");
+    } else if x.fract() == 0.0 && x.abs() < 1e15 {
+        let _ = write!(out, "{}", x as i64);
+    } else {
+        let _ = write!(out, "{x}");
+    }
+}
+
+/// Build a JSON object from (key, value) pairs (writer-side helper
+/// shared by the trace serializer and the service protocol).
+pub fn obj(entries: Vec<(&str, Json)>) -> Json {
+    Json::Obj(
+        entries
+            .into_iter()
+            .map(|(k, v)| (k.to_string(), v))
+            .collect::<BTreeMap<_, _>>(),
+    )
+}
+
+/// Shorthand for a JSON number.
+pub fn num(x: f64) -> Json {
+    Json::Num(x)
 }
 
 fn escape(s: &str) -> String {
@@ -319,6 +384,24 @@ mod tests {
         assert!(Json::parse("1 2").is_err());
         assert!(Json::parse("{").is_err());
         assert!(Json::parse("[1,]").is_err());
+    }
+
+    #[test]
+    fn non_finite_numbers_render_as_null() {
+        for bad in [f64::INFINITY, f64::NEG_INFINITY, f64::NAN] {
+            let j = Json::Arr(vec![Json::Num(bad), Json::Num(1.5)]);
+            assert_eq!(j.render_compact(), "[null,1.5]");
+            assert!(Json::parse(&j.render()).is_ok());
+        }
+    }
+
+    #[test]
+    fn compact_is_one_line_and_roundtrips() {
+        let j = Json::parse(r#"{"a": [1, 2.5, "x\ny"], "b": {"c": true, "d": null}}"#).unwrap();
+        let line = j.render_compact();
+        assert!(!line.contains('\n') || line.contains("\\n"));
+        assert!(!line.contains(": "));
+        assert_eq!(Json::parse(&line).unwrap(), j);
     }
 
     #[test]

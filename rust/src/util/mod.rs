@@ -7,10 +7,14 @@
 
 pub mod bench;
 pub mod json;
+pub mod ord;
+pub mod parallel;
 pub mod proptest;
 pub mod rng;
 pub mod stats;
 pub mod table;
 
+pub use ord::OrdF64;
+pub use parallel::parallel_map;
 pub use rng::Rng;
 pub use stats::Summary;

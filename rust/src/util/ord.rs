@@ -1,0 +1,47 @@
+//! Total-ordered `f64` wrapper for heap keys.
+//!
+//! Three subsystems (the cluster's departure heap, the EDL SPT heap, and
+//! the service's event queue) key binary heaps on simulation timestamps;
+//! they share this wrapper instead of re-deriving the `total_cmp` dance.
+
+/// Total-ordered f64 (NaN sorts last, per `f64::total_cmp`).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct OrdF64(pub f64);
+
+impl Eq for OrdF64 {}
+
+impl PartialOrd for OrdF64 {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl Ord for OrdF64 {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        self.0.total_cmp(&other.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn orders_like_f64() {
+        let mut v = vec![OrdF64(3.5), OrdF64(-1.0), OrdF64(0.0), OrdF64(2.0)];
+        v.sort();
+        assert_eq!(v, vec![OrdF64(-1.0), OrdF64(0.0), OrdF64(2.0), OrdF64(3.5)]);
+    }
+
+    #[test]
+    fn usable_as_heap_key() {
+        use std::cmp::Reverse;
+        use std::collections::BinaryHeap;
+        let mut h = BinaryHeap::new();
+        h.push(Reverse((OrdF64(2.0), 1usize)));
+        h.push(Reverse((OrdF64(1.0), 2usize)));
+        h.push(Reverse((OrdF64(1.0), 0usize)));
+        let order: Vec<usize> = std::iter::from_fn(|| h.pop().map(|Reverse((_, i))| i)).collect();
+        assert_eq!(order, vec![0, 2, 1]);
+    }
+}

@@ -1,0 +1,72 @@
+//! Scoped-thread fan-out (rayon is not in the offline crate set).
+//!
+//! [`parallel_map`] runs `f(0..n)` across a worker pool and returns the
+//! results **in index order**, so aggregation downstream is bit-for-bit
+//! deterministic regardless of which worker finished first.  The offline
+//! and online Monte-Carlo drivers and the service's replay fan-out all
+//! share this instead of hand-rolling `std::thread::scope` blocks.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// Map `f` over `0..n` on up to `available_parallelism` threads, returning
+/// results in index order.  `f` must be `Sync` (shared by reference across
+/// workers); per-item state (solvers, RNG streams) belongs inside `f`.
+pub fn parallel_map<T, F>(n: usize, f: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(usize) -> T + Sync,
+{
+    if n == 0 {
+        return Vec::new();
+    }
+    let n_threads = std::thread::available_parallelism()
+        .map(|p| p.get())
+        .unwrap_or(4)
+        .min(n)
+        .max(1);
+    if n_threads == 1 {
+        return (0..n).map(f).collect();
+    }
+    let next = AtomicUsize::new(0);
+    let done: Mutex<Vec<(usize, T)>> = Mutex::new(Vec::with_capacity(n));
+    std::thread::scope(|s| {
+        for _ in 0..n_threads {
+            s.spawn(|| loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                let y = f(i);
+                done.lock().unwrap().push((i, y));
+            });
+        }
+    });
+    let mut v = done.into_inner().unwrap();
+    v.sort_by_key(|&(i, _)| i);
+    v.into_iter().map(|(_, y)| y).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn maps_in_index_order() {
+        let out = parallel_map(100, |i| i * i);
+        assert_eq!(out, (0..100).map(|i| i * i).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn empty_and_single() {
+        assert_eq!(parallel_map(0, |i| i), Vec::<usize>::new());
+        assert_eq!(parallel_map(1, |i| i + 7), vec![7]);
+    }
+
+    #[test]
+    fn shares_captured_state_immutably() {
+        let base = vec![10u64, 20, 30];
+        let out = parallel_map(3, |i| base[i] + 1);
+        assert_eq!(out, vec![11, 21, 31]);
+    }
+}

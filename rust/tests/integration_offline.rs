@@ -60,6 +60,10 @@ fn deadline_prior_fraction_small_but_nonzero() {
     );
 }
 
+/// Quarantined behind the `pjrt` feature: needs the XLA engine and built
+/// artifacts, neither of which exists in the dependency-free default
+/// build (the stub backend always fails to load, which would panic here).
+#[cfg(feature = "pjrt")]
 #[test]
 fn pjrt_backend_full_offline_run() {
     let dir = format!("{}/artifacts", env!("CARGO_MANIFEST_DIR"));

@@ -91,6 +91,10 @@ fn overhead_accounting_consistent() {
     assert!(o.turn_ons as usize >= o.servers_used * cfg.cluster.pairs_per_server);
 }
 
+/// Quarantined behind the `pjrt` feature: needs the XLA engine and built
+/// artifacts, neither of which exists in the dependency-free default
+/// build (the stub backend always fails to load, which would panic here).
+#[cfg(feature = "pjrt")]
 #[test]
 fn pjrt_backend_full_online_run() {
     let dir = format!("{}/artifacts", env!("CARGO_MANIFEST_DIR"));

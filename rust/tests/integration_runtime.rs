@@ -1,7 +1,11 @@
 //! PJRT runtime integration: load the AOT artifacts, execute them, and
 //! cross-validate against the native analytical solver.
 //!
-//! Requires `make artifacts` to have produced `artifacts/*.hlo.txt`.
+//! Quarantined behind the `pjrt` feature: it exercises the XLA execution
+//! engine, which only exists in `--features pjrt` builds (the default
+//! build has no `xla` crate), and requires `python/compile/aot.py` to
+//! have produced `artifacts/*.hlo.txt`.
+#![cfg(feature = "pjrt")]
 
 use dvfs_sched::dvfs::{ScalingInterval, TaskModel};
 use dvfs_sched::runtime::{Graph, SolveReq, Solver};

@@ -6,7 +6,9 @@ use dvfs_sched::dvfs::{g1, solve_exact, solve_opt, ScalingInterval, GRID_DEFAULT
 use dvfs_sched::runtime::Solver;
 use dvfs_sched::sched::online::{EdlOnline, OnlinePolicy, SchedCtx};
 use dvfs_sched::sched::{prepare, schedule_offline, OfflinePolicy};
-use dvfs_sched::sim::online::{run_online_workload, OnlinePolicyKind};
+use dvfs_sched::sim::online::{
+    run_online_workload, run_online_workload_slots, OnlinePolicyKind,
+};
 use dvfs_sched::tasks::{generate_online, Task, LIBRARY};
 use dvfs_sched::util::proptest::{check, check_shrink, shrink_vec_removals, Config};
 use dvfs_sched::util::Rng;
@@ -240,6 +242,67 @@ fn prop_online_energy_identity_and_determinism() {
             let identity = a.e_run + a.e_idle + a.e_overhead;
             if (identity - a.e_total()).abs() > 1e-9 {
                 return Err("energy identity broken".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_event_engine_matches_slot_engine() {
+    // The continuous-time event engine must reproduce the legacy
+    // per-minute slot loop exactly: same energy decomposition, same
+    // violation count, same pair turn-on count — across random cluster
+    // shapes, utilizations, both policies, θ settings, and DVFS on/off.
+    let solver = Solver::native();
+    check(
+        "event engine == slot engine",
+        Config {
+            iters: 12,
+            ..Default::default()
+        },
+        |rng| rng.next_u64(),
+        |&seed| {
+            let mut r = Rng::new(seed);
+            let mut cfg = SimConfig::default();
+            cfg.gen.base_pairs = 8 + r.index(17);
+            cfg.gen.horizon = 60 + r.index(180) as u64;
+            cfg.gen.u_off = r.uniform(0.0, 0.8);
+            cfg.gen.u_on = r.uniform(0.1, 1.6);
+            cfg.cluster.total_pairs = 64;
+            cfg.cluster.pairs_per_server = [1usize, 2, 4, 8][r.index(4)];
+            cfg.theta = [1.0, 0.9, 0.8][r.index(3)];
+            let dvfs = r.f64() < 0.8;
+            let kind = if r.f64() < 0.5 {
+                OnlinePolicyKind::Edl
+            } else {
+                OnlinePolicyKind::Bin
+            };
+            let w = generate_online(&cfg.gen, &mut r);
+            let ev = run_online_workload(kind, &w, dvfs, &cfg, &solver);
+            let sl = run_online_workload_slots(kind, &w, dvfs, &cfg, &solver);
+
+            let close = |a: f64, b: f64| (a - b).abs() <= 1e-9 * a.abs().max(b.abs()).max(1.0);
+            if !close(ev.e_run, sl.e_run) {
+                return Err(format!("e_run {} vs {}", ev.e_run, sl.e_run));
+            }
+            if !close(ev.e_idle, sl.e_idle) {
+                return Err(format!("e_idle {} vs {}", ev.e_idle, sl.e_idle));
+            }
+            if !close(ev.e_overhead, sl.e_overhead) {
+                return Err(format!("e_overhead {} vs {}", ev.e_overhead, sl.e_overhead));
+            }
+            if ev.turn_ons != sl.turn_ons {
+                return Err(format!("turn_ons {} vs {}", ev.turn_ons, sl.turn_ons));
+            }
+            if ev.violations != sl.violations {
+                return Err(format!("violations {} vs {}", ev.violations, sl.violations));
+            }
+            if ev.readjusted != sl.readjusted || ev.forced != sl.forced {
+                return Err("policy stats diverge".into());
+            }
+            if ev.servers_used != sl.servers_used || ev.pairs_used != sl.pairs_used {
+                return Err("usage counters diverge".into());
             }
             Ok(())
         },

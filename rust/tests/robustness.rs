@@ -62,6 +62,9 @@ fn missing_artifacts_dir_errors_and_fallback_works() {
     assert_eq!(solver.backend_name(), "native");
 }
 
+/// Quarantined behind the `pjrt` feature: copies real artifact files to
+/// corrupt them, so it needs both the XLA engine and `artifacts/` built.
+#[cfg(feature = "pjrt")]
 #[test]
 fn corrupted_hlo_rejected() {
     let dir = std::env::temp_dir().join(format!("dvfs_bad_art_{}", std::process::id()));
@@ -75,6 +78,8 @@ fn corrupted_hlo_rejected() {
     let _ = std::fs::remove_dir_all(&dir);
 }
 
+/// Quarantined behind the `pjrt` feature (same reason as above).
+#[cfg(feature = "pjrt")]
 #[test]
 fn meta_layout_mismatch_rejected() {
     let dir = std::env::temp_dir().join(format!("dvfs_bad_meta_{}", std::process::id()));
@@ -197,6 +202,59 @@ fn cli_rejects_unknown_flag_and_experiment() {
         .output()
         .unwrap();
     assert!(!out.status.success());
+}
+
+#[test]
+fn cli_replay_streams_a_session() {
+    use dvfs_sched::ext::trace::task_to_json;
+    use dvfs_sched::tasks::LIBRARY;
+    use dvfs_sched::util::json::Json;
+
+    let Some(bin) = repro_bin() else { return };
+    let model = LIBRARY[0].model.scaled(10.0);
+    let good = dvfs_sched::tasks::Task {
+        id: 1,
+        app: 0,
+        model,
+        arrival: 0.0,
+        deadline: model.t_star() * 2.0,
+        u: 0.5,
+    };
+    let bad = dvfs_sched::tasks::Task {
+        id: 2,
+        app: 0,
+        model,
+        arrival: 3.0,
+        // below the minimum-execution-time bound: admission must reject
+        deadline: 3.0 + model.t_min(&SimConfig::default().interval) * 0.5,
+        u: 0.9,
+    };
+    let mut session = String::from("# smoke replay\n");
+    for t in [&good, &bad] {
+        use dvfs_sched::service::protocol::{obj, s};
+        session.push_str(&obj(vec![("op", s("submit")), ("task", task_to_json(t))]).render_compact());
+        session.push('\n');
+    }
+    session.push_str("{\"op\":\"shutdown\"}\n");
+    let path = std::env::temp_dir().join(format!("dvfs_replay_{}.jsonl", std::process::id()));
+    std::fs::write(&path, session).unwrap();
+
+    let out = Command::new(&bin)
+        .args(["replay", path.to_str().unwrap()])
+        .output()
+        .unwrap();
+    let _ = std::fs::remove_file(&path);
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    let lines: Vec<Json> = stdout.lines().map(|l| Json::parse(l).unwrap()).collect();
+    assert_eq!(lines.len(), 3);
+    assert_eq!(lines[0].get("admitted"), Some(&Json::Bool(true)));
+    assert_eq!(lines[1].get("admitted"), Some(&Json::Bool(false)));
+    let fin = &lines[2];
+    assert_eq!(fin.get("drained"), Some(&Json::Bool(true)));
+    for k in ["e_run", "e_idle", "e_overhead", "e_total"] {
+        assert!(fin.get(k).and_then(Json::as_f64).is_some(), "missing {k}");
+    }
 }
 
 #[test]
