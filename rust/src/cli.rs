@@ -7,14 +7,18 @@
 use std::collections::BTreeMap;
 
 #[derive(Clone, Debug, Default)]
+/// Parsed command line: command, positionals, and `--flag [value]` pairs.
 pub struct Args {
+    /// The subcommand (first argv token).
     pub command: String,
+    /// Positional arguments, in order.
     pub positional: Vec<String>,
     flags: BTreeMap<String, String>,
     consumed: std::cell::RefCell<Vec<String>>,
 }
 
 impl Args {
+    /// Parse an argv slice (without the program name).
     pub fn parse(argv: &[String]) -> Result<Args, String> {
         let mut args = Args::default();
         let mut it = argv.iter().peekable();
@@ -50,16 +54,19 @@ impl Args {
         self.consumed.borrow_mut().push(name.to_string());
     }
 
+    /// Boolean flag: present with no value (or `=true`).
     pub fn flag(&self, name: &str) -> bool {
         self.mark(name);
         self.flags.get(name).map(|v| v == "true").unwrap_or(false)
     }
 
+    /// String-valued flag, if present.
     pub fn opt_str(&self, name: &str) -> Option<String> {
         self.mark(name);
         self.flags.get(name).cloned()
     }
 
+    /// Float-valued flag; errors on a non-numeric value.
     pub fn opt_f64(&self, name: &str) -> Result<Option<f64>, String> {
         self.mark(name);
         match self.flags.get(name) {
@@ -71,6 +78,7 @@ impl Args {
         }
     }
 
+    /// Unsigned-integer flag; errors on a non-integer value.
     pub fn opt_usize(&self, name: &str) -> Result<Option<usize>, String> {
         self.mark(name);
         match self.flags.get(name) {
@@ -82,6 +90,7 @@ impl Args {
         }
     }
 
+    /// `u64` flag; errors on a non-integer value.
     pub fn opt_u64(&self, name: &str) -> Result<Option<u64>, String> {
         self.mark(name);
         match self.flags.get(name) {
@@ -123,6 +132,45 @@ pub fn parse_online_policy(s: &str) -> Result<crate::sim::online::OnlinePolicyKi
         "bin" => Ok(crate::sim::online::OnlinePolicyKind::Bin),
         other => Err(format!("unknown policy '{other}' (edl|bin)")),
     }
+}
+
+/// Sharding options for `serve` / `replay`, decoded from `--shards N
+/// --route P --batch-window W --no-steal`.
+#[derive(Clone, Copy, Debug)]
+pub struct ShardOpts {
+    /// Worker-thread / cluster-partition count.
+    pub shards: usize,
+    /// Chunk routing policy (default least-loaded).
+    pub route: crate::service::RoutePolicy,
+    /// Admission-slot width for batched admission (default 1 slot; 0
+    /// disables coalescing).
+    pub window: f64,
+    /// Whether idle workers steal queued chunks (default on).
+    pub steal: bool,
+}
+
+/// Decode the sharding flags shared by `serve` and `replay`.  Returns
+/// `Ok(None)` when none of them is present — callers then run the
+/// unsharded single-threaded daemon, which keeps the legacy per-submit
+/// semantics (no response deferral).
+pub fn parse_shard_opts(args: &Args) -> Result<Option<ShardOpts>, String> {
+    let shards = args.opt_usize("shards")?;
+    let route = args.opt_str("route");
+    let window = args.opt_f64("batch-window")?;
+    let no_steal = args.flag("no-steal");
+    if shards.is_none() && route.is_none() && window.is_none() && !no_steal {
+        return Ok(None);
+    }
+    let route = match route {
+        Some(name) => crate::service::RoutePolicy::parse(&name)?,
+        None => crate::service::RoutePolicy::LeastLoaded,
+    };
+    Ok(Some(ShardOpts {
+        shards: shards.unwrap_or(1),
+        route,
+        window: window.unwrap_or(1.0),
+        steal: !no_steal,
+    }))
 }
 
 /// Apply the common overrides (--reps/--seed/--theta/--l/--interval/
@@ -216,6 +264,34 @@ mod tests {
         assert_eq!(parse_online_policy("edl").unwrap(), OnlinePolicyKind::Edl);
         assert_eq!(parse_online_policy("BIN").unwrap(), OnlinePolicyKind::Bin);
         assert!(parse_online_policy("fifo").is_err());
+    }
+
+    #[test]
+    fn shard_opts_absent_by_default() {
+        let a = Args::parse(&argv("serve --policy edl")).unwrap();
+        assert!(parse_shard_opts(&a).unwrap().is_none());
+        let _ = a.opt_str("policy");
+        a.finish().unwrap();
+    }
+
+    #[test]
+    fn shard_opts_parse() {
+        let a = Args::parse(&argv(
+            "serve --shards 4 --route energy --batch-window 2.5 --no-steal",
+        ))
+        .unwrap();
+        let o = parse_shard_opts(&a).unwrap().unwrap();
+        assert_eq!(o.shards, 4);
+        assert_eq!(o.route, crate::service::RoutePolicy::EnergyGreedy);
+        assert_eq!(o.window, 2.5);
+        assert!(!o.steal);
+        a.finish().unwrap();
+        // any one sharding flag opts into the sharded path
+        let b = Args::parse(&argv("serve --batch-window 1")).unwrap();
+        let o = parse_shard_opts(&b).unwrap().unwrap();
+        assert_eq!(o.shards, 1);
+        assert!(o.steal);
+        assert_eq!(o.route, crate::service::RoutePolicy::LeastLoaded);
     }
 
     #[test]

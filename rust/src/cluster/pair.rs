@@ -7,17 +7,22 @@
 /// Power state of a CPU-GPU pair.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum PairPower {
+    /// Powered down with its server; draws nothing.
     Off,
+    /// On but unoccupied; draws `P_idle`.
     Idle,
+    /// Executing a task; draws the task's modeled power.
     Busy,
 }
 
 #[derive(Clone, Debug)]
+/// One CPU-GPU pair's live state and idle-energy ledger.
 pub struct Pair {
     /// Owning server index.
     pub server: usize,
     /// Index within the server.
     pub slot: usize,
+    /// Current power state.
     pub power: PairPower,
     /// Completion time of the last queued task (μ of the tail).
     pub busy_until: f64,
@@ -30,6 +35,7 @@ pub struct Pair {
 }
 
 impl Pair {
+    /// A powered-off pair belonging to `server`.
     pub fn new(server: usize, slot: usize) -> Pair {
         Pair {
             server,

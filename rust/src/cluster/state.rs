@@ -1,6 +1,12 @@
 //! Cluster state: servers of `l` pairs each, turn-on/off with the Δ
 //! overhead, DRS (dynamic resource sleep) with the ρ threshold, and the
 //! cluster-wide energy ledgers E_idle / E_overhead (Eq. 7).
+//!
+//! For the sharded scheduling service the cluster can also be viewed as a
+//! set of disjoint *partitions*: [`partition_cluster`] slices the server
+//! list into per-shard [`ShardView`]s (each backing an independent
+//! [`Cluster`]), and the shard-local energy ledgers are merged back into
+//! one global picture by [`crate::service::metrics::Snapshot::merge`].
 
 use super::pair::{Pair, PairPower};
 use crate::config::ClusterConfig;
@@ -8,9 +14,90 @@ use crate::util::OrdF64;
 use std::cmp::Reverse;
 use std::collections::BinaryHeap;
 
+/// One shard's slice of a cluster: a contiguous run of whole servers.
+///
+/// Produced by [`partition_cluster`].  The shard instantiates its own
+/// [`Cluster`] from `cfg` (shard-local pair indices run `0..cfg.total_pairs`)
+/// and uses the offsets to translate shard-local server/pair indices back
+/// into the global numbering the protocol reports.
+///
+/// # Examples
+///
+/// ```
+/// use dvfs_sched::cluster::partition_cluster;
+/// use dvfs_sched::config::ClusterConfig;
+///
+/// let cfg = ClusterConfig { total_pairs: 32, pairs_per_server: 4, ..ClusterConfig::default() };
+/// let views = partition_cluster(&cfg, 3).unwrap();
+/// // 8 servers split 3 ways: 3 + 3 + 2, whole servers only
+/// assert_eq!(views.len(), 3);
+/// assert_eq!(views[0].cfg.num_servers(), 3);
+/// assert_eq!(views[2].cfg.num_servers(), 2);
+/// assert_eq!(views[2].pair_offset, 24);
+/// let total: usize = views.iter().map(|v| v.cfg.total_pairs).sum();
+/// assert_eq!(total, 32);
+/// ```
 #[derive(Clone, Debug)]
-pub struct Cluster {
+pub struct ShardView {
+    /// Shard index (0-based, dense).
+    pub index: usize,
+    /// First global server index owned by this shard.
+    pub server_offset: usize,
+    /// First global pair index owned by this shard
+    /// (`server_offset * pairs_per_server`).
+    pub pair_offset: usize,
+    /// The sub-cluster's configuration (same `l`, `P_idle`, Δ, ρ as the
+    /// parent; `total_pairs` is this shard's slice).
     pub cfg: ClusterConfig,
+}
+
+/// Partition a cluster config into `n_shards` disjoint [`ShardView`]s.
+///
+/// Servers are never split across shards (DRS turn-off is a whole-server
+/// decision), so `n_shards` must not exceed the server count.  The first
+/// `num_servers % n_shards` shards take one extra server each.
+pub fn partition_cluster(
+    cfg: &ClusterConfig,
+    n_shards: usize,
+) -> Result<Vec<ShardView>, String> {
+    cfg.validate()?;
+    let n_servers = cfg.num_servers();
+    if n_shards == 0 {
+        return Err("shard count must be >= 1".into());
+    }
+    if n_shards > n_servers {
+        return Err(format!(
+            "cannot split {n_servers} servers into {n_shards} shards \
+             (a shard owns at least one whole server)"
+        ));
+    }
+    let base = n_servers / n_shards;
+    let extra = n_servers % n_shards;
+    let mut views = Vec::with_capacity(n_shards);
+    let mut server_offset = 0;
+    for index in 0..n_shards {
+        let servers = base + usize::from(index < extra);
+        let sub = ClusterConfig {
+            total_pairs: servers * cfg.pairs_per_server,
+            ..cfg.clone()
+        };
+        views.push(ShardView {
+            index,
+            server_offset,
+            pair_offset: server_offset * cfg.pairs_per_server,
+            cfg: sub,
+        });
+        server_offset += servers;
+    }
+    Ok(views)
+}
+
+#[derive(Clone, Debug)]
+/// The live cluster: pair/server state machines plus energy ledgers.
+pub struct Cluster {
+    /// Shape and static-energy parameters.
+    pub cfg: ClusterConfig,
+    /// All pairs, grouped contiguously by server.
     pub pairs: Vec<Pair>,
     /// Per-server on/off state.
     pub server_on: Vec<bool>,
@@ -35,9 +122,18 @@ pub struct Cluster {
     /// report the placement a policy chose without widening the
     /// [`crate::sched::online::OnlinePolicy`] trait.
     pub last_assign: Option<(usize, f64, f64)>,
+    /// Every [`Cluster::assign`] since the last clear, as (pair, start, μ)
+    /// in call order.  Policies place a batch strictly in their EDF order,
+    /// so a shard clears this before dispatching a batch and zips it back
+    /// with the EDF-sorted tasks to recover per-task placements without
+    /// widening the policy trait.  Callers that batch (the shard worker,
+    /// the daemon) clear it per batch; the one-shot simulators leave it to
+    /// grow for the run (bounded by the task count) and ignore it.
+    pub assign_log: Vec<(usize, f64, f64)>,
 }
 
 impl Cluster {
+    /// A fully powered-off cluster of `cfg`'s shape.
     pub fn new(cfg: ClusterConfig) -> Cluster {
         let l = cfg.pairs_per_server;
         let n_servers = cfg.num_servers();
@@ -57,9 +153,11 @@ impl Cluster {
             departures: BinaryHeap::new(),
             idle_pairs: std::collections::BTreeSet::new(),
             last_assign: None,
+            assign_log: Vec::new(),
         }
     }
 
+    /// Pairs per server.
     pub fn l(&self) -> usize {
         self.cfg.pairs_per_server
     }
@@ -105,10 +203,9 @@ impl Cluster {
         self.idle_pairs.remove(&i);
         self.departures.push(Reverse((OrdF64(mu), i)));
         self.last_assign = Some((i, start, mu));
+        self.assign_log.push((i, start, mu));
         self.e_run += p * dur;
-        // tolerance covers the f32 artifact path (PJRT settings carry
-        // ~1e-5 relative rounding, far below any modeling error)
-        if mu > deadline * (1.0 + 1e-4) + 1e-6 {
+        if !crate::util::meets_deadline(mu, deadline) {
             self.violations += 1;
         }
         mu
@@ -221,6 +318,19 @@ impl Cluster {
                 .sum::<f64>()
     }
 
+    /// Per-server live idle energy at `now`: element `s` is `P_idle` times
+    /// the idle time accumulated by server `s`'s pairs, including their
+    /// still-open idle stretches (the per-node decomposition of
+    /// [`Cluster::e_idle_at`]; the `snapshot` protocol response reports
+    /// this as `e_idle_nodes`).
+    pub fn e_idle_by_server(&self, now: f64) -> Vec<f64> {
+        let mut out = vec![0.0; self.server_on.len()];
+        for p in &self.pairs {
+            out[p.server] += self.cfg.p_idle * (p.idle_time + p.idle_span(now));
+        }
+        out
+    }
+
     /// E_overhead = ω · Δ.
     pub fn e_overhead(&self) -> f64 {
         self.turn_ons as f64 * self.cfg.delta_overhead
@@ -310,5 +420,69 @@ mod tests {
         assert_eq!(c.server_pairs(0), 0..8);
         assert_eq!(c.server_pairs(3), 24..32);
         assert_eq!(c.server_on.len(), 256);
+    }
+
+    #[test]
+    fn partition_splits_whole_servers() {
+        let mut base = cfg(4);
+        base.total_pairs = 40; // 10 servers of 4 pairs
+        let views = partition_cluster(&base, 4).unwrap();
+        // 10 servers into 4 shards: 3, 3, 2, 2
+        assert_eq!(
+            views.iter().map(|v| v.cfg.num_servers()).collect::<Vec<_>>(),
+            vec![3, 3, 2, 2]
+        );
+        assert_eq!(
+            views.iter().map(|v| v.server_offset).collect::<Vec<_>>(),
+            vec![0, 3, 6, 8]
+        );
+        assert_eq!(
+            views.iter().map(|v| v.pair_offset).collect::<Vec<_>>(),
+            vec![0, 12, 24, 32]
+        );
+        let total: usize = views.iter().map(|v| v.cfg.total_pairs).sum();
+        assert_eq!(total, 40);
+        for v in &views {
+            assert!(v.cfg.validate().is_ok());
+            assert_eq!(v.cfg.pairs_per_server, 4);
+        }
+    }
+
+    #[test]
+    fn partition_rejects_more_shards_than_servers() {
+        let mut base = cfg(4);
+        base.total_pairs = 8; // 2 servers
+        assert!(partition_cluster(&base, 3).is_err());
+        assert!(partition_cluster(&base, 0).is_err());
+        assert_eq!(partition_cluster(&base, 2).unwrap().len(), 2);
+    }
+
+    #[test]
+    fn e_idle_by_server_decomposes_the_ledger() {
+        let mut c = Cluster::new(cfg(2)); // 2 pairs per server
+        c.turn_on_server(0, 0.0);
+        c.turn_on_server(1, 0.0);
+        c.assign(0, 0.0, 3.0, 100.0, 100.0);
+        c.process_departures(3.0);
+        let nodes = c.e_idle_by_server(5.0);
+        assert_eq!(nodes.len(), c.server_on.len());
+        // server 0: pair0 idle 3→5 (2) + pair1 idle 0→5 (5); server 1: 2×5
+        assert!((nodes[0] - 37.0 * 7.0).abs() < 1e-9);
+        assert!((nodes[1] - 37.0 * 10.0).abs() < 1e-9);
+        let total: f64 = nodes.iter().sum();
+        assert!((total - c.e_idle_at(5.0)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn assign_log_records_batch_in_call_order() {
+        let mut c = Cluster::new(cfg(2));
+        c.turn_on_server(0, 0.0);
+        c.assign(0, 0.0, 2.0, 100.0, 10.0);
+        c.assign(1, 0.0, 3.0, 100.0, 10.0);
+        assert_eq!(c.assign_log, vec![(0, 0.0, 2.0), (1, 0.0, 3.0)]);
+        assert_eq!(c.last_assign, Some((1, 0.0, 3.0)));
+        c.assign_log.clear();
+        c.assign(0, 2.0, 1.0, 100.0, 10.0);
+        assert_eq!(c.assign_log, vec![(0, 2.0, 3.0)]);
     }
 }

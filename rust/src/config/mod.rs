@@ -41,15 +41,18 @@ impl Default for ClusterConfig {
 }
 
 impl ClusterConfig {
+    /// Builder-style override of `pairs_per_server`.
     pub fn with_l(mut self, l: usize) -> Self {
         self.pairs_per_server = l;
         self
     }
 
+    /// Server count `total_pairs / l`.
     pub fn num_servers(&self) -> usize {
         self.total_pairs / self.pairs_per_server
     }
 
+    /// Reject impossible shapes (zero or non-dividing pair counts).
     pub fn validate(&self) -> Result<(), String> {
         if self.pairs_per_server == 0 {
             return Err("pairs_per_server must be >= 1".into());
@@ -80,6 +83,7 @@ pub struct GenConfig {
     pub horizon: u64,
     /// Task-length scale factor range (inclusive; paper: [10, 50]).
     pub scale_lo: i64,
+    /// Upper end of the task-length scale range.
     pub scale_hi: i64,
 }
 
@@ -97,6 +101,7 @@ impl Default for GenConfig {
 }
 
 impl GenConfig {
+    /// Reject negative utilizations and degenerate ranges.
     pub fn validate(&self) -> Result<(), String> {
         if self.u_off < 0.0 || self.u_on < 0.0 {
             return Err("utilizations must be non-negative".into());
@@ -123,6 +128,7 @@ pub enum Backend {
 }
 
 impl Backend {
+    /// Parse a backend name (`native` | `pjrt`).
     pub fn parse(s: &str) -> Result<Backend, String> {
         match s {
             "native" => Ok(Backend::Native),
@@ -135,14 +141,19 @@ impl Backend {
 /// Full simulation configuration.
 #[derive(Clone, Debug)]
 pub struct SimConfig {
+    /// Cluster shape + static-energy parameters.
     pub cluster: ClusterConfig,
+    /// Task-set generator parameters.
     pub gen: GenConfig,
+    /// DVFS scaling interval (Wide or Narrow).
     pub interval: ScalingInterval,
     /// Task deferral threshold θ ∈ (0, 1]; 1 disables readjustment.
     pub theta: f64,
     /// Monte-Carlo repetitions.
     pub reps: usize,
+    /// Base RNG seed (each repetition forks an independent stream).
     pub seed: u64,
+    /// Which solver implementation backs Algorithm 1.
     pub backend: Backend,
     /// Directory holding the AOT artifacts.
     pub artifacts_dir: String,
@@ -184,6 +195,7 @@ const KNOWN_KEYS: &[&str] = &[
 ];
 
 impl SimConfig {
+    /// Validate every section plus the cross-cutting knobs.
     pub fn validate(&self) -> Result<(), String> {
         self.cluster.validate()?;
         self.gen.validate()?;
@@ -239,6 +251,7 @@ impl SimConfig {
         Ok(cfg)
     }
 
+    /// Load a config file (TOML subset), starting from defaults.
     pub fn from_file(path: &str) -> Result<SimConfig, String> {
         let text = std::fs::read_to_string(path)
             .map_err(|e| format!("cannot read config '{path}': {e}"))?;

@@ -9,15 +9,22 @@
 use std::collections::BTreeMap;
 
 #[derive(Clone, Debug, PartialEq)]
+/// A parsed TOML value.
 pub enum Value {
+    /// Integer literal.
     Int(i64),
+    /// Float literal.
     Float(f64),
+    /// `true` / `false`.
     Bool(bool),
+    /// Quoted string.
     Str(String),
+    /// Array of numbers.
     Arr(Vec<f64>),
 }
 
 impl Value {
+    /// Numeric view (ints widen).
     pub fn as_f64(&self) -> Option<f64> {
         match self {
             Value::Int(i) => Some(*i as f64),
@@ -25,24 +32,28 @@ impl Value {
             _ => None,
         }
     }
+    /// Integer view.
     pub fn as_i64(&self) -> Option<i64> {
         match self {
             Value::Int(i) => Some(*i),
             _ => None,
         }
     }
+    /// Boolean view.
     pub fn as_bool(&self) -> Option<bool> {
         match self {
             Value::Bool(b) => Some(*b),
             _ => None,
         }
     }
+    /// String view.
     pub fn as_str(&self) -> Option<&str> {
         match self {
             Value::Str(s) => Some(s),
             _ => None,
         }
     }
+    /// Numeric-array view.
     pub fn as_arr(&self) -> Option<&[f64]> {
         match self {
             Value::Arr(v) => Some(v),
@@ -54,10 +65,12 @@ impl Value {
 /// `section.key` → value map.
 #[derive(Clone, Debug, Default)]
 pub struct Doc {
+    /// Flattened `section.key` → value entries.
     pub entries: BTreeMap<String, Value>,
 }
 
 impl Doc {
+    /// Parse a document; duplicate keys and malformed lines error.
     pub fn parse(text: &str) -> Result<Doc, String> {
         let mut doc = Doc::default();
         let mut section = String::new();
@@ -97,10 +110,12 @@ impl Doc {
         Ok(doc)
     }
 
+    /// Raw lookup by flattened key.
     pub fn get(&self, key: &str) -> Option<&Value> {
         self.entries.get(key)
     }
 
+    /// Numeric lookup with default; type mismatch errors.
     pub fn f64_or(&self, key: &str, default: f64) -> Result<f64, String> {
         match self.get(key) {
             None => Ok(default),
@@ -110,6 +125,7 @@ impl Doc {
         }
     }
 
+    /// Non-negative integer lookup with default.
     pub fn usize_or(&self, key: &str, default: usize) -> Result<usize, String> {
         match self.get(key) {
             None => Ok(default),
@@ -121,6 +137,7 @@ impl Doc {
         }
     }
 
+    /// `u64` lookup with default.
     pub fn u64_or(&self, key: &str, default: u64) -> Result<u64, String> {
         match self.get(key) {
             None => Ok(default),
@@ -132,6 +149,7 @@ impl Doc {
         }
     }
 
+    /// String lookup with default.
     pub fn str_or<'a>(&'a self, key: &str, default: &'a str) -> Result<&'a str, String> {
         match self.get(key) {
             None => Ok(default),

@@ -6,13 +6,18 @@
 
 use super::model::g1;
 
+/// The allowed V/f scaling box (`f_c` is additionally capped at `g1(V)`).
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub struct ScalingInterval {
+    /// Lowest core voltage.
     pub v_min: f64,
+    /// Highest core voltage.
     pub v_max: f64,
     /// Core-frequency floor; the ceiling is `g1(V)`.
     pub fc_min: f64,
+    /// Lowest memory frequency.
     pub fm_min: f64,
+    /// Highest memory frequency.
     pub fm_max: f64,
 }
 
@@ -46,6 +51,7 @@ impl ScalingInterval {
         g1(self.v_max)
     }
 
+    /// Reject empty or non-finite intervals.
     pub fn validate(&self) -> Result<(), String> {
         if !(self.v_min > 0.0 && self.v_min <= self.v_max) {
             return Err("require 0 < v_min <= v_max".into());

@@ -22,6 +22,25 @@ pub fn g1_inv(fc: f64) -> f64 {
 
 /// Per-task fitted model parameters (the six scalars fitted from measured
 /// power/time samples, Sec. 5.1.3).
+///
+/// # Examples
+///
+/// ```
+/// use dvfs_sched::TaskModel;
+///
+/// // the paper's Fig. 3 demo task: P = 100 + 50·f_m + 150·V²·f_c,
+/// // t = 25·(0.5/f_c + 0.5/f_m) + 5
+/// let m = TaskModel { p0: 100.0, gamma: 50.0, c: 150.0,
+///                     d: 25.0, delta: 0.5, t0: 5.0 };
+/// // the default setting (1, 1, 1):
+/// assert_eq!(m.p_star(), 300.0);
+/// assert_eq!(m.t_star(), 30.0);
+/// assert_eq!(m.e_star(), 9000.0);
+/// // undervolting the core (V=0.8, f_c=0.88) runs slower but cheaper
+/// let e = m.energy(0.8, 0.88, 1.0);
+/// assert!(m.exec_time(0.88, 1.0) > m.t_star());
+/// assert!(e < m.e_star());
+/// ```
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub struct TaskModel {
     /// Scaling-insensitive power (includes the paired CPU's average power).
@@ -95,6 +114,7 @@ impl TaskModel {
         }
     }
 
+    /// Reject non-finite, negative, or out-of-range parameters.
     pub fn validate(&self) -> Result<(), String> {
         let all = [self.p0, self.gamma, self.c, self.d, self.delta, self.t0];
         if all.iter().any(|x| !x.is_finite()) {

@@ -24,8 +24,11 @@ const RELTOL: f64 = 1e-5;
 /// A resolved voltage/frequency configuration for one task.
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub struct Setting {
+    /// Core voltage.
     pub v: f64,
+    /// Core frequency.
     pub fc: f64,
+    /// Memory frequency.
     pub fm: f64,
     /// Execution time at this setting.
     pub t: f64,
@@ -33,10 +36,12 @@ pub struct Setting {
     pub p: f64,
     /// Energy = p * t.
     pub e: f64,
+    /// Whether any setting met the constraint.
     pub feasible: bool,
 }
 
 impl Setting {
+    /// Sentinel for an unmeetable constraint (energy = ∞).
     pub fn infeasible() -> Setting {
         Setting {
             v: 0.0,
@@ -73,6 +78,7 @@ pub struct VGrid {
 }
 
 impl VGrid {
+    /// Precompute the V walk for an interval at `grid` resolution.
     pub fn new(iv: &ScalingInterval, grid: usize) -> VGrid {
         let step = (iv.v_max - iv.v_min) / (grid - 1) as f64;
         let pts = (0..grid)

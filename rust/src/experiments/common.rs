@@ -6,7 +6,9 @@ use crate::util::table::Table;
 
 /// Execution context handed to every experiment.
 pub struct ExpCtx {
+    /// Full simulation configuration.
     pub cfg: SimConfig,
+    /// Solver built from the config's backend choice.
     pub solver: Solver,
     /// Quick mode: fewer repetitions / coarser sweeps (tests, smoke runs).
     pub quick: bool,
@@ -15,6 +17,7 @@ pub struct ExpCtx {
 }
 
 impl ExpCtx {
+    /// Context with the config's solver, full repetitions, no CSV.
     pub fn new(cfg: SimConfig) -> ExpCtx {
         let solver = Solver::from_config(&cfg);
         ExpCtx {
@@ -25,6 +28,7 @@ impl ExpCtx {
         }
     }
 
+    /// Switch to quick mode (fewer reps / coarser sweeps).
     pub fn quick(mut self) -> ExpCtx {
         self.quick = true;
         self

@@ -35,6 +35,7 @@ fn decomp_row(label: String, l: usize, a: &OnlineAgg) -> Vec<String> {
     ]
 }
 
+/// Fig. 10 — E_run vs l (constant in l).
 pub fn run_fig10(ctx: &ExpCtx) -> Vec<Table> {
     let mut t = Table::new(
         "Fig 10 — online total-energy decomposition (EDL/BIN × DVFS × l)",
@@ -56,6 +57,7 @@ pub fn run_fig10(ctx: &ExpCtx) -> Vec<Table> {
     vec![t]
 }
 
+/// Fig. 11 — E_idle vs l.
 pub fn run_fig11(ctx: &ExpCtx) -> Vec<Table> {
     let mut t = Table::new(
         "Fig 11 — online idle energy & turn-on overhead (non-DVFS vs DVFS)",
@@ -83,6 +85,7 @@ pub fn run_fig11(ctx: &ExpCtx) -> Vec<Table> {
     vec![t]
 }
 
+/// Fig. 12 — E_overhead (ω·Δ) vs l.
 pub fn run_fig12(ctx: &ExpCtx) -> Vec<Table> {
     let mut t = Table::new(
         "Fig 12 — online EDL energy vs θ (run/idle/overhead/total)",
@@ -106,6 +109,7 @@ pub fn run_fig12(ctx: &ExpCtx) -> Vec<Table> {
     vec![t]
 }
 
+/// Fig. 13 — total-energy reduction vs the baseline, by policy.
 pub fn run_fig13(ctx: &ExpCtx) -> Vec<Table> {
     let mut t = Table::new(
         "Fig 13 — online energy reduction vs non-DVFS EDL baseline (paper: 30-33%)",

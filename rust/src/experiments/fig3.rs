@@ -10,6 +10,7 @@ use super::common::ExpCtx;
 use crate::dvfs::{g1, solve_opt, TaskModel, GRID_DEFAULT};
 use crate::util::table::{f2, f3, Table};
 
+/// The Sec. 4.1 demo task model (Fig. 3's example).
 pub fn demo_model() -> TaskModel {
     TaskModel {
         p0: 100.0,
@@ -21,6 +22,7 @@ pub fn demo_model() -> TaskModel {
     }
 }
 
+/// Fig. 3 — energy surface / optimum of the demo task.
 pub fn run(ctx: &ExpCtx) -> Vec<Table> {
     let m = demo_model();
     let iv = ctx.cfg.interval;

@@ -9,6 +9,7 @@ use crate::runtime::SolveReq;
 use crate::tasks::LIBRARY;
 use crate::util::table::{f3, pct, Table};
 
+/// Fig. 4 — per-app single-task energy savings.
 pub fn run(ctx: &ExpCtx) -> Vec<Table> {
     let mut per_app = Table::new(
         "Fig 4 — optimal setting + energy saving per application",

@@ -13,6 +13,7 @@ use crate::sched::OfflinePolicy;
 use crate::sim::offline::run_offline_reps;
 use crate::util::table::{f2, pct, Table};
 
+/// Fig. 5 — offline E_run vs utilization.
 pub fn run_fig5(ctx: &ExpCtx) -> Vec<Table> {
     let mut t5a = Table::new(
         "Fig 5a — offline energy vs U_J (l=1)",
@@ -44,6 +45,7 @@ pub fn run_fig5(ctx: &ExpCtx) -> Vec<Table> {
     vec![t5a, t5b]
 }
 
+/// Fig. 6 — offline E_idle vs utilization.
 pub fn run_fig6(ctx: &ExpCtx) -> Vec<Table> {
     let mut t = Table::new(
         "Fig 6 — offline non-DVFS energy normalized to baseline (l>1)",
@@ -67,6 +69,7 @@ pub fn run_fig6(ctx: &ExpCtx) -> Vec<Table> {
     vec![t]
 }
 
+/// Fig. 7 — offline total energy vs utilization.
 pub fn run_fig7(ctx: &ExpCtx) -> Vec<Table> {
     let mut t = Table::new(
         "Fig 7 — occupied servers (l=1), non-DVFS vs DVFS",
@@ -89,6 +92,7 @@ pub fn run_fig7(ctx: &ExpCtx) -> Vec<Table> {
     vec![t]
 }
 
+/// Fig. 8 — offline pairs/servers used vs utilization.
 pub fn run_fig8(ctx: &ExpCtx) -> Vec<Table> {
     let mut t = Table::new(
         "Fig 8 — offline DVFS energy savings vs baseline (l>1)",

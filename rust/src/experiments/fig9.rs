@@ -8,6 +8,7 @@ use crate::sched::OfflinePolicy;
 use crate::sim::offline::run_offline_reps;
 use crate::util::table::{f2, pct, Table};
 
+/// Fig. 9 — θ sweep (energy vs deferral threshold).
 pub fn run(ctx: &ExpCtx) -> Vec<Table> {
     let mut t = Table::new(
         "Fig 9 — offline EDL θ-readjustment savings vs LPT-FF-DVFS",

@@ -18,8 +18,11 @@ use crate::util::table::Table;
 
 /// A runnable experiment.
 pub struct Experiment {
+    /// Short id used on the command line.
     pub id: &'static str,
+    /// Which paper table/figure this reproduces.
     pub paper_ref: &'static str,
+    /// Produce the tables.
     pub run: fn(&ExpCtx) -> Vec<Table>,
 }
 
@@ -97,6 +100,7 @@ pub const REGISTRY: &[Experiment] = &[
     },
 ];
 
+/// Look an experiment up by id.
 pub fn find(id: &str) -> Option<&'static Experiment> {
     REGISTRY.iter().find(|e| e.id == id)
 }

@@ -19,6 +19,7 @@ const ROWS: [(f64, f64); 5] = [
     (0.2, 300.0),
 ];
 
+/// The worked example's fixed task set.
 pub fn tasks() -> Vec<Task> {
     ROWS.iter()
         .enumerate()
@@ -43,6 +44,7 @@ pub fn tasks() -> Vec<Task> {
         .collect()
 }
 
+/// Table 3 — per-task settings of the worked example.
 pub fn run(ctx: &ExpCtx) -> Vec<Table> {
     let tasks = tasks();
     let prepared = prepare(&tasks, &ctx.solver, &ctx.cfg.interval, true);

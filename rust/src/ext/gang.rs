@@ -17,6 +17,7 @@ use crate::tasks::Task;
 /// A task plus its gang width.
 #[derive(Clone, Copy, Debug)]
 pub struct GangTask {
+    /// The underlying task (model, arrival, deadline).
     pub task: Task,
     /// Pairs required simultaneously (1 = the paper's base case).
     pub g: usize,
@@ -25,21 +26,30 @@ pub struct GangTask {
 /// One placed gang: `g` pairs of one server, common start/duration.
 #[derive(Clone, Debug)]
 pub struct GangPlacement {
+    /// The placed task's id.
     pub task_id: usize,
+    /// Hosting server.
     pub server: usize,
     /// The server-local pair slots this gang occupies (len == g).
     pub pairs: Vec<usize>,
+    /// Gang width.
     pub g: usize,
+    /// Common start time of all replicas.
     pub start: f64,
+    /// Common execution time.
     pub dur: f64,
+    /// Runtime power per replica.
     pub power_per_pair: f64,
+    /// Absolute deadline.
     pub deadline: f64,
 }
 
 impl GangPlacement {
+    /// Runtime energy `g · P̂ · t̂`.
     pub fn energy(&self) -> f64 {
         self.g as f64 * self.power_per_pair * self.dur
     }
+    /// Completion time.
     pub fn end(&self) -> f64 {
         self.start + self.dur
     }
@@ -48,14 +58,18 @@ impl GangPlacement {
 /// Offline gang schedule over servers of `l` pairs.
 #[derive(Clone, Debug, Default)]
 pub struct GangSchedule {
+    /// Every placed gang.
     pub placements: Vec<GangPlacement>,
     /// Per-server, per-pair finish time.
     pub server_pair_finish: Vec<Vec<f64>>,
+    /// Σ runtime energy.
     pub e_run: f64,
+    /// Deadline violations.
     pub violations: u64,
 }
 
 impl GangSchedule {
+    /// Servers opened by the schedule.
     pub fn servers_used(&self) -> usize {
         self.server_pair_finish.len()
     }
@@ -156,7 +170,7 @@ pub fn schedule_gang(
             debug_assert!(pairs[p] <= start + 1e-9);
             pairs[p] = end;
         }
-        if end > d * (1.0 + 1e-4) + 1e-6 {
+        if !crate::util::meets_deadline(end, d) {
             sched.violations += 1;
         }
         sched.e_run += g as f64 * setting.p * setting.t;

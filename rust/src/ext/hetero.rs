@@ -15,7 +15,9 @@ use crate::tasks::Task;
 /// A GPU type in a heterogeneous cluster.
 #[derive(Clone, Copy, Debug)]
 pub struct GpuType {
+    /// Marketing name of the GPU type.
     pub name: &'static str,
+    /// This type's V/f scaling interval.
     pub interval: ScalingInterval,
     /// Dynamic-power multiplier vs the measured reference GPU.
     pub power_scale: f64,
@@ -67,7 +69,9 @@ pub fn reference_fleet(total_pairs: usize) -> Vec<GpuType> {
 /// (type, setting).
 #[derive(Clone, Copy, Debug)]
 pub struct TypedPrepared {
+    /// The chosen per-task configuration.
     pub prepared: Prepared,
+    /// Index into the fleet's type list.
     pub gpu_type: usize,
 }
 
@@ -141,9 +145,13 @@ pub fn prepare_hetero(tasks: &[Task], fleet: &[GpuType]) -> Vec<TypedPrepared> {
 /// Heterogeneous offline report.
 #[derive(Clone, Debug, Default)]
 pub struct HeteroReport {
+    /// Σ runtime energy.
     pub e_run: f64,
+    /// Idle energy until each server drains.
     pub e_idle: f64,
+    /// `e_run + e_idle`.
     pub e_total: f64,
+    /// Deadline violations.
     pub violations: u64,
     /// Pairs used per type.
     pub pairs_used: Vec<usize>,

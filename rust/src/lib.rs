@@ -20,6 +20,11 @@
 //!
 //! The [`dvfs`] module implements the same analytical model natively in
 //! rust; the runtime cross-validates the two on every load.
+//!
+//! See `docs/ARCHITECTURE.md` for the module map and data flow, and
+//! `docs/PROTOCOL.md` for the service wire format.
+
+#![warn(missing_docs)]
 
 pub mod cli;
 pub mod cluster;

@@ -17,7 +17,7 @@
 //! (`--backend pjrt`) runs every Algorithm-1 batch through the
 //! AOT-compiled XLA artifacts in `artifacts/`.
 
-use dvfs_sched::cli::{apply_overrides, parse_online_policy, Args};
+use dvfs_sched::cli::{apply_overrides, parse_online_policy, parse_shard_opts, Args, ShardOpts};
 use dvfs_sched::config::SimConfig;
 use dvfs_sched::experiments::{self, ExpCtx};
 use dvfs_sched::runtime::Solver;
@@ -76,6 +76,9 @@ fn print_help() {
          serve   [--policy edl|bin]  JSON-lines scheduling daemon on stdin\n  \
          replay FILE [--policy ...]  stream a JSONL session from a file\n  \
          workload export|replay      save / replay a workload as JSON\n\n\
+         sharding flags (serve/replay): --shards N --route least-loaded|energy|round-robin\n               \
+         --batch-window SLOTS --no-steal   (any of them opts into the\n               \
+         sharded multi-threaded service with batched EDF admission)\n\n\
          common flags: --config FILE --reps N --seed S --theta X --l N\n               \
          --interval wide|narrow --backend native|pjrt --csv DIR --quick"
     );
@@ -300,32 +303,79 @@ fn cmd_workload(args: &Args) -> Result<(), String> {
     }
 }
 
+/// Run one JSONL session (stdin or a replay file) through the unsharded
+/// daemon or — when any sharding flag was given — the sharded service.
+/// On bare EOF the service is drained so the energy books close.
+fn run_service_session<R: std::io::BufRead>(
+    cfg: &SimConfig,
+    kind: OnlinePolicyKind,
+    dvfs: bool,
+    opts: Option<ShardOpts>,
+    reader: R,
+    source: &str,
+) -> Result<(), String> {
+    let stdout = std::io::stdout();
+    match opts {
+        Some(o) => {
+            if cfg.backend == dvfs_sched::config::Backend::Pjrt {
+                eprintln!(
+                    "warning: --backend pjrt is ignored by the sharded service \
+                     (the PJRT client is not Send); shards run the native solver"
+                );
+            }
+            let mut svc = dvfs_sched::service::ShardedService::new(
+                cfg, kind, dvfs, o.shards, o.route, o.window, o.steal,
+            )?;
+            eprintln!(
+                "serve: {} policy, {} pairs (l={}) across {} shard(s), {} routing, \
+                 batch window {} slot(s), steal {} — JSONL requests on {source} \
+                 (submit/query/snapshot/shutdown)",
+                kind.name(),
+                cfg.cluster.total_pairs,
+                cfg.cluster.pairs_per_server,
+                o.shards,
+                o.route.name(),
+                o.window,
+                if o.steal { "on" } else { "off" },
+            );
+            let shutdown = svc.serve(reader, stdout.lock())?;
+            if !shutdown {
+                for line in svc.shutdown() {
+                    println!("{}", line.render_compact());
+                }
+            }
+        }
+        None => {
+            let solver = Solver::from_config(cfg);
+            let mut svc = dvfs_sched::service::Service::new(cfg, kind, dvfs, &solver);
+            eprintln!(
+                "serve: {} policy, {} pairs (l={}), backend {} — JSONL requests on \
+                 {source} (submit/query/snapshot/shutdown)",
+                kind.name(),
+                cfg.cluster.total_pairs,
+                cfg.cluster.pairs_per_server,
+                solver.backend_name()
+            );
+            let shutdown = svc.serve(reader, stdout.lock())?;
+            if !shutdown {
+                println!("{}", svc.shutdown().render_compact());
+            }
+        }
+    }
+    Ok(())
+}
+
 /// `repro serve`: long-running JSON-lines scheduling daemon on stdin.
 fn cmd_serve(args: &Args) -> Result<(), String> {
     let mut cfg = SimConfig::default();
     apply_overrides(args, &mut cfg)?;
     let kind = parse_online_policy(&args.opt_str("policy").unwrap_or("edl".into()))?;
     let dvfs = !args.flag("no-dvfs");
+    let opts = parse_shard_opts(args)?;
     args.finish()?;
 
-    let solver = Solver::from_config(&cfg);
-    let mut svc = dvfs_sched::service::Service::new(&cfg, kind, dvfs, &solver);
-    eprintln!(
-        "serve: {} policy, {} pairs (l={}), backend {} — JSONL requests on stdin \
-         (submit/query/snapshot/shutdown)",
-        kind.name(),
-        cfg.cluster.total_pairs,
-        cfg.cluster.pairs_per_server,
-        solver.backend_name()
-    );
     let stdin = std::io::stdin();
-    let stdout = std::io::stdout();
-    let shutdown = svc.serve(stdin.lock(), stdout.lock())?;
-    if !shutdown {
-        // EOF without an explicit shutdown: drain so energy books close
-        println!("{}", svc.shutdown().render_compact());
-    }
-    Ok(())
+    run_service_session(&cfg, kind, dvfs, opts, stdin.lock(), "stdin")
 }
 
 /// `repro replay <file>`: stream a recorded JSONL session end-to-end.
@@ -339,18 +389,12 @@ fn cmd_replay(args: &Args) -> Result<(), String> {
         .clone();
     let kind = parse_online_policy(&args.opt_str("policy").unwrap_or("edl".into()))?;
     let dvfs = !args.flag("no-dvfs");
+    let opts = parse_shard_opts(args)?;
     args.finish()?;
 
     let file = std::fs::File::open(&path).map_err(|e| format!("opening {path}: {e}"))?;
     let reader = std::io::BufReader::new(file);
-    let solver = Solver::from_config(&cfg);
-    let mut svc = dvfs_sched::service::Service::new(&cfg, kind, dvfs, &solver);
-    let stdout = std::io::stdout();
-    let shutdown = svc.serve(reader, stdout.lock())?;
-    if !shutdown {
-        println!("{}", svc.shutdown().render_compact());
-    }
-    Ok(())
+    run_service_session(&cfg, kind, dvfs, opts, reader, &path)
 }
 
 fn cmd_online(args: &Args) -> Result<(), String> {

@@ -8,30 +8,49 @@ pub const GRID_G: usize = 64;
 
 /// params[:, k] column indices.
 pub const P_P0: usize = 0;
+/// γ column.
 pub const P_GAMMA: usize = 1;
+/// c column.
 pub const P_C: usize = 2;
+/// D column.
 pub const P_D: usize = 3;
+/// δ column.
 pub const P_DELTA: usize = 4;
+/// t0 column.
 pub const P_T0: usize = 5;
+/// time-limit column.
 pub const P_TLIM: usize = 6;
+/// Padded params row width.
 pub const NPARAM: usize = 8;
 
 /// bounds[k] indices.
 pub const B_VMIN: usize = 0;
+/// V_max index.
 pub const B_VMAX: usize = 1;
+/// f_c min index.
 pub const B_FCMIN: usize = 2;
+/// f_m min index.
 pub const B_FMMIN: usize = 3;
+/// f_m max index.
 pub const B_FMMAX: usize = 4;
+/// Padded bounds width.
 pub const NBOUND: usize = 8;
 
 /// out[:, k] column indices.
 pub const O_V: usize = 0;
+/// f_c column.
 pub const O_FC: usize = 1;
+/// f_m column.
 pub const O_FM: usize = 2;
+/// time column.
 pub const O_T: usize = 3;
+/// power column.
 pub const O_P: usize = 4;
+/// energy column.
 pub const O_E: usize = 5;
+/// feasibility flag column.
 pub const O_FEAS: usize = 6;
+/// Padded output row width.
 pub const NOUT: usize = 8;
 
 /// "No deadline cap" sentinel for `P_TLIM`.

@@ -27,6 +27,7 @@ pub use engine::DvfsEngine;
 /// A single solve request: task model + time limit/target.
 #[derive(Clone, Copy, Debug)]
 pub struct SolveReq {
+    /// The task's fitted model.
     pub model: TaskModel,
     /// `opt`: hard cap (f64::INFINITY = none). `readjust`: exact target.
     pub tlim: f64,
@@ -53,12 +54,14 @@ pub struct DvfsEngine {
 
 #[cfg(not(feature = "pjrt"))]
 impl DvfsEngine {
+    /// Always errors: this build has no PJRT backend.
     pub fn load(_dir: &str) -> Result<DvfsEngine, String> {
         Err("this build has no PJRT backend (rebuild with --features pjrt \
              and the vendored xla crate)"
             .to_string())
     }
 
+    /// Unreachable on the stub (the engine cannot be constructed).
     pub fn solve_batch(
         &self,
         _graph: Graph,
@@ -71,11 +74,14 @@ impl DvfsEngine {
 
 /// The solver the schedulers program against.
 pub enum Solver {
+    /// The analytical solver in `src/dvfs/` (grid = V-grid resolution).
     Native { grid: usize },
+    /// AOT-compiled XLA artifacts via the PJRT CPU client.
     Pjrt(DvfsEngine),
 }
 
 impl Solver {
+    /// The native analytical solver at the default grid resolution.
     pub fn native() -> Solver {
         Solver::Native {
             grid: dvfs::GRID_DEFAULT,
@@ -104,6 +110,7 @@ impl Solver {
         }
     }
 
+    /// `"native"` or `"pjrt"`, for logs and table titles.
     pub fn backend_name(&self) -> &'static str {
         match self {
             Solver::Native { .. } => "native",
@@ -158,10 +165,12 @@ impl Solver {
         self.solve_opt_batch(&[SolveReq { model: *m, tlim }], iv)[0]
     }
 
+    /// Single-task exact-target-time solve.
     pub fn solve_exact(&self, m: &TaskModel, target: f64, iv: &ScalingInterval) -> Setting {
         self.solve_exact_batch(&[SolveReq { model: *m, tlim: target }], iv)[0]
     }
 
+    /// Single-task Algorithm-1 composite solve.
     pub fn solve_window(&self, m: &TaskModel, window: f64, iv: &ScalingInterval) -> Setting {
         self.solve_window_batch(&[SolveReq { model: *m, tlim: window }], iv)[0]
     }

@@ -14,30 +14,40 @@ use crate::runtime::Solver;
 /// One task placed on a pair.
 #[derive(Clone, Copy, Debug)]
 pub struct Placement {
+    /// The placed task's id.
     pub task_id: usize,
+    /// Start time on the pair.
     pub start: f64,
+    /// Execution time at the chosen setting.
     pub dur: f64,
+    /// Runtime power at the chosen setting.
     pub power: f64,
+    /// Absolute deadline.
     pub deadline: f64,
 }
 
 impl Placement {
+    /// Completion time.
     pub fn end(&self) -> f64 {
         self.start + self.dur
     }
+    /// Runtime energy `P̂ · t̂`.
     pub fn energy(&self) -> f64 {
         self.power * self.dur
     }
+    /// Whether the placement ends past its deadline (with the shared
+    /// [`crate::util::meets_deadline`] tolerance).
     pub fn misses_deadline(&self) -> bool {
-        // tolerance covers f32 rounding from the PJRT artifact path
-        self.end() > self.deadline * (1.0 + 1e-4) + 1e-6
+        !crate::util::meets_deadline(self.end(), self.deadline)
     }
 }
 
 /// A pair's queue (`τ_kj` = `finish`).
 #[derive(Clone, Debug, Default)]
 pub struct PairLoad {
+    /// Queued placements, in start order.
     pub placements: Vec<Placement>,
+    /// When the queue drains (`τ_kj`).
     pub finish: f64,
     /// Σ task utilization on this pair (used by the BF/WF heuristics).
     pub u_sum: f64,
@@ -55,14 +65,18 @@ impl PairLoad {
 /// A complete offline schedule.
 #[derive(Clone, Debug, Default)]
 pub struct Schedule {
+    /// One queue per opened pair.
     pub loads: Vec<PairLoad>,
+    /// Σ runtime energy.
     pub e_run: f64,
+    /// Deadline violations.
     pub violations: u64,
     /// Tasks that received a θ-readjusted (non-optimal) setting.
     pub readjusted: u64,
 }
 
 impl Schedule {
+    /// Pairs opened by the schedule.
     pub fn pairs_used(&self) -> usize {
         self.loads.len()
     }
@@ -104,6 +118,7 @@ pub enum OfflinePolicy {
 }
 
 impl OfflinePolicy {
+    /// Every offline policy, for sweep loops.
     pub const ALL: [OfflinePolicy; 4] = [
         OfflinePolicy::Edl,
         OfflinePolicy::EdfBf,
@@ -111,6 +126,7 @@ impl OfflinePolicy {
         OfflinePolicy::LptFf,
     ];
 
+    /// Display name.
     pub fn name(&self) -> &'static str {
         match self {
             OfflinePolicy::Edl => "EDL",
@@ -249,15 +265,23 @@ pub fn group_servers(sched: &Schedule, cluster: &ClusterConfig) -> (f64, usize) 
 /// Full offline report for one run.
 #[derive(Clone, Copy, Debug, Default)]
 pub struct OfflineReport {
+    /// Σ runtime energy.
     pub e_run: f64,
+    /// Idle energy until each server drains.
     pub e_idle: f64,
+    /// `e_run + e_idle`.
     pub e_total: f64,
+    /// Pairs ever used.
     pub pairs_used: usize,
+    /// Servers ever used.
     pub servers_used: usize,
+    /// Deadline violations.
     pub violations: u64,
+    /// θ-readjusted settings handed out.
     pub readjusted: u64,
 }
 
+/// Assemble the offline report (grouping pairs onto servers for E_idle).
 pub fn report(sched: &Schedule, cluster: &ClusterConfig) -> OfflineReport {
     let (e_idle, servers_used) = group_servers(sched, cluster);
     OfflineReport {

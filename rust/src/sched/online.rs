@@ -13,7 +13,9 @@ use std::collections::BinaryHeap;
 
 /// Shared scheduling context for one simulation run.
 pub struct SchedCtx<'a> {
+    /// DVFS solver backing Algorithm 1.
     pub solver: &'a Solver,
+    /// Allowed V/f scaling interval.
     pub iv: ScalingInterval,
     /// `false` = the paper's non-DVFS baseline (default settings).
     pub dvfs: bool,
@@ -24,6 +26,7 @@ pub struct SchedCtx<'a> {
 /// Counters the policies report to the simulator.
 #[derive(Clone, Copy, Debug, Default)]
 pub struct PolicyStats {
+    /// Placements that took the θ-readjustment path.
     pub readjusted: u64,
     /// Tasks that could not be placed without a (recorded) violation.
     pub forced: u64,
@@ -120,12 +123,14 @@ fn open_server(cluster: &mut Cluster, t: f64) -> Option<usize> {
 // ---------------------------------------------------------------------------
 
 #[derive(Default)]
+/// The EDL θ-readjustment policy (Algorithms 4-5).
 pub struct EdlOnline {
     stats: PolicyStats,
     spt: SptHeap,
 }
 
 impl EdlOnline {
+    /// Fresh policy with empty stats.
     pub fn new() -> Self {
         Self::default()
     }
@@ -217,6 +222,7 @@ pub struct BinPacking {
 }
 
 impl BinPacking {
+    /// Fresh policy tracking `total_pairs` utilization bins.
     pub fn new(total_pairs: usize) -> Self {
         BinPacking {
             stats: PolicyStats::default(),

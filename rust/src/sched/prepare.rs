@@ -22,6 +22,7 @@ pub enum Priority {
 /// A task plus its Algorithm-1 configuration.
 #[derive(Clone, Copy, Debug)]
 pub struct Prepared {
+    /// The task being configured.
     pub task: Task,
     /// The chosen setting (free optimum, or exact-window for
     /// deadline-prior tasks).
@@ -30,6 +31,7 @@ pub struct Prepared {
     pub free: Setting,
     /// Minimum achievable execution time in the interval.
     pub t_min: f64,
+    /// Deadline- vs energy-prior classification.
     pub class: Priority,
 }
 

@@ -14,10 +14,13 @@ use crate::tasks::Task;
 /// Admission verdict for one submitted task.
 #[derive(Clone, Debug, PartialEq)]
 pub enum Verdict {
+    /// The task passed both gates and will be placed.
     Admit,
     /// Even the fastest setting cannot meet the deadline from `now`.
     RejectInfeasible {
+        /// Analytical minimum execution time (every knob at max).
         t_min: f64,
+        /// The window actually available, `deadline − effective start`.
         available: f64,
     },
     /// The task failed structural validation (bad model / u / deadline).
@@ -25,6 +28,7 @@ pub enum Verdict {
 }
 
 impl Verdict {
+    /// Whether this verdict admits the task.
     pub fn admitted(&self) -> bool {
         matches!(self, Verdict::Admit)
     }
@@ -41,29 +45,72 @@ impl Verdict {
 
 /// Stateful admission gate: evaluates tasks and keeps running counters
 /// for the metrics snapshot.
+///
+/// The two halves of the check are exposed separately because the batched
+/// (sharded) service runs them at different times: structural validation
+/// happens the moment a line is read ([`Self::check_validity`], so garbage
+/// never enters a coalesced batch), while the deadline-feasibility check
+/// runs at batch-flush time ([`Self::check_feasibility`], when the
+/// effective start is known).  The unsharded daemon runs both back to back
+/// via [`Self::evaluate`].
+///
+/// # Examples
+///
+/// ```
+/// use dvfs_sched::dvfs::ScalingInterval;
+/// use dvfs_sched::service::AdmissionController;
+/// use dvfs_sched::tasks::LIBRARY;
+/// use dvfs_sched::Task;
+///
+/// let model = LIBRARY[0].model.scaled(10.0);
+/// let task = Task { id: 0, app: 0, model, arrival: 0.0,
+///                   deadline: 2.0 * model.t_star(), u: 0.5 };
+/// let mut gate = AdmissionController::new();
+/// let verdict = gate.evaluate(&task, 0.0, &ScalingInterval::wide());
+/// assert!(verdict.admitted());
+/// assert_eq!(gate.admitted, 1);
+/// ```
 #[derive(Clone, Debug, Default)]
 pub struct AdmissionController {
+    /// Tasks admitted so far.
     pub admitted: u64,
+    /// Tasks rejected because no DVFS setting could meet the deadline.
     pub rejected_infeasible: u64,
+    /// Tasks rejected by structural validation.
     pub rejected_invalid: u64,
 }
 
 impl AdmissionController {
+    /// Fresh gate with zeroed counters.
     pub fn new() -> AdmissionController {
         AdmissionController::default()
     }
 
+    /// Total rejections (infeasible + invalid).
     pub fn rejected(&self) -> u64 {
         self.rejected_infeasible + self.rejected_invalid
     }
 
-    /// Evaluate `task` submitted at service time `now` (the task cannot
-    /// start before `max(now, arrival)`).
-    pub fn evaluate(&mut self, task: &Task, now: f64, iv: &ScalingInterval) -> Verdict {
+    /// Structural validation half of the gate (bad model / u / non-finite
+    /// times).  Counts a rejection on `Err`.
+    pub fn check_validity(&mut self, task: &Task) -> Result<(), String> {
         if let Err(e) = task.validate() {
             self.rejected_invalid += 1;
-            return Verdict::RejectInvalid(e);
+            return Err(e);
         }
+        Ok(())
+    }
+
+    /// Deadline-feasibility half of the gate, for a task already past
+    /// [`Self::check_validity`]: the analytical floor `t_min` must fit
+    /// between the effective start `max(now, arrival)` and the deadline.
+    /// Counts the verdict.
+    pub fn check_feasibility(
+        &mut self,
+        task: &Task,
+        now: f64,
+        iv: &ScalingInterval,
+    ) -> Verdict {
         let start = now.max(task.arrival);
         let available = task.deadline - start;
         let t_min = task.model.t_min(iv);
@@ -76,6 +123,16 @@ impl AdmissionController {
         }
         self.admitted += 1;
         Verdict::Admit
+    }
+
+    /// Evaluate `task` submitted at service time `now` (the task cannot
+    /// start before `max(now, arrival)`): validity first, then
+    /// feasibility.
+    pub fn evaluate(&mut self, task: &Task, now: f64, iv: &ScalingInterval) -> Verdict {
+        if let Err(e) = self.check_validity(task) {
+            return Verdict::RejectInvalid(e);
+        }
+        self.check_feasibility(task, now, iv)
     }
 }
 

@@ -36,20 +36,117 @@ const RECORD_CAP: usize = 100_000;
 /// Final state of one submitted task.
 #[derive(Clone, Copy, Debug)]
 pub struct TaskRecord {
+    /// Whether the task passed admission.
     pub admitted: bool,
+    /// Global pair index the task ran on (`None` when rejected).
     pub pair: Option<usize>,
+    /// Execution start time.
     pub start: f64,
+    /// Completion time μ.
     pub finish: f64,
+    /// The task's absolute deadline.
     pub deadline: f64,
 }
 
 impl TaskRecord {
-    fn deadline_met(&self) -> bool {
-        self.finish <= self.deadline * (1.0 + 1e-4) + 1e-6
+    /// `finish ≤ deadline` up to the simulator's float tolerance
+    /// ([`crate::util::meets_deadline`]).
+    pub fn deadline_met(&self) -> bool {
+        crate::util::meets_deadline(self.finish, self.deadline)
+    }
+}
+
+/// Bounded per-task record retention, shared by the unsharded daemon and
+/// the sharded dispatcher: remembers the outcome of the most recent
+/// `RECORD_CAP` (100 000) submissions and renders `query` responses from
+/// them.
+#[derive(Debug, Default)]
+pub struct RecordStore {
+    records: BTreeMap<usize, TaskRecord>,
+    /// Insertion order of `records` keys, for bounded eviction.
+    order: VecDeque<usize>,
+}
+
+impl RecordStore {
+    /// Empty store.
+    pub fn new() -> RecordStore {
+        RecordStore::default()
+    }
+
+    /// Remember a task's outcome, evicting the oldest records past
+    /// `RECORD_CAP` (re-submitting an id updates it in place).
+    pub fn remember(&mut self, id: usize, rec: TaskRecord) {
+        if self.records.insert(id, rec).is_none() {
+            self.order.push_back(id);
+        }
+        while self.records.len() > RECORD_CAP {
+            match self.order.pop_front() {
+                Some(old) => {
+                    self.records.remove(&old);
+                }
+                None => break,
+            }
+        }
+    }
+
+    /// The record for `id`, if still retained.
+    pub fn get(&self, id: usize) -> Option<&TaskRecord> {
+        self.records.get(&id)
+    }
+
+    /// Render the `query` response for `id` at service time `now`
+    /// (`unknown` / `rejected` / `running` / `completed`).
+    pub fn query_json(&self, id: usize, now: f64) -> Json {
+        let mut fields = vec![
+            ("ok", Json::Bool(true)),
+            ("op", s("query")),
+            ("id", num(id as f64)),
+        ];
+        match self.records.get(&id) {
+            None => fields.push(("status", s("unknown"))),
+            Some(r) if !r.admitted => fields.push(("status", s("rejected"))),
+            Some(r) => {
+                let status = if r.finish <= now + 1e-9 {
+                    "completed"
+                } else {
+                    "running"
+                };
+                fields.push(("status", s(status)));
+                fields.push(("pair", num(r.pair.unwrap_or(0) as f64)));
+                fields.push(("start", num(r.start)));
+                fields.push(("finish", num(r.finish)));
+                fields.push(("deadline_met", Json::Bool(r.deadline_met())));
+            }
+        }
+        obj(fields)
     }
 }
 
 /// One scheduling service instance.
+///
+/// # Examples
+///
+/// ```
+/// use dvfs_sched::config::SimConfig;
+/// use dvfs_sched::runtime::Solver;
+/// use dvfs_sched::service::Service;
+/// use dvfs_sched::sim::online::OnlinePolicyKind;
+/// use dvfs_sched::tasks::LIBRARY;
+/// use dvfs_sched::util::json::Json;
+/// use dvfs_sched::Task;
+///
+/// let mut cfg = SimConfig::default();
+/// cfg.cluster.total_pairs = 8;
+/// let solver = Solver::native();
+/// let mut svc = Service::new(&cfg, OnlinePolicyKind::Edl, true, &solver);
+/// let model = LIBRARY[0].model.scaled(10.0);
+/// let task = Task { id: 0, app: 0, model, arrival: 0.0,
+///                   deadline: 2.0 * model.t_star(), u: 0.5 };
+/// let resp = svc.submit(task);
+/// assert_eq!(resp.get("admitted"), Some(&Json::Bool(true)));
+/// let fin = svc.shutdown();
+/// assert_eq!(fin.get("violations").unwrap().as_f64(), Some(0.0));
+/// ```
 pub struct Service<'a> {
     cluster: Cluster,
     policy: Box<dyn OnlinePolicy>,
@@ -58,9 +155,7 @@ pub struct Service<'a> {
     solver: &'a Solver,
     cfg: SimConfig,
     dvfs: bool,
-    records: BTreeMap<usize, TaskRecord>,
-    /// Insertion order of `records` keys, for bounded eviction.
-    record_order: VecDeque<usize>,
+    records: RecordStore,
     /// Logical clock: max arrival seen (the engine clock can trail it
     /// when nothing was pending to process).
     now: f64,
@@ -68,6 +163,7 @@ pub struct Service<'a> {
 }
 
 impl<'a> Service<'a> {
+    /// Build a service over a fresh cluster with the given online policy.
     pub fn new(cfg: &SimConfig, kind: OnlinePolicyKind, dvfs: bool, solver: &'a Solver) -> Self {
         Service {
             cluster: Cluster::new(cfg.cluster.clone()),
@@ -77,26 +173,9 @@ impl<'a> Service<'a> {
             solver,
             cfg: cfg.clone(),
             dvfs,
-            records: BTreeMap::new(),
-            record_order: VecDeque::new(),
+            records: RecordStore::new(),
             now: 0.0,
             drained: false,
-        }
-    }
-
-    /// Remember a task's outcome, evicting the oldest records past
-    /// [`RECORD_CAP`] (re-submitting an id updates it in place).
-    fn remember(&mut self, id: usize, rec: TaskRecord) {
-        if self.records.insert(id, rec).is_none() {
-            self.record_order.push_back(id);
-        }
-        while self.records.len() > RECORD_CAP {
-            match self.record_order.pop_front() {
-                Some(old) => {
-                    self.records.remove(&old);
-                }
-                None => break,
-            }
         }
     }
 
@@ -114,12 +193,14 @@ impl<'a> Service<'a> {
         self.now.max(self.engine.now)
     }
 
+    /// Whether the last drain is still current (no admit since).
     pub fn drained(&self) -> bool {
         self.drained
     }
 
+    /// The retained record for task `id`, if any.
     pub fn record(&self, id: usize) -> Option<&TaskRecord> {
-        self.records.get(&id)
+        self.records.get(id)
     }
 
     /// Submit one task: admission first, then — only if admitted —
@@ -153,6 +234,9 @@ impl<'a> Service<'a> {
                 let deadline = task.deadline;
                 let ctx = self.ctx();
                 self.cluster.last_assign = None;
+                // per-submit clear keeps the batch log bounded for a
+                // long-running daemon
+                self.cluster.assign_log.clear();
                 self.engine.push_arrivals(arrival, vec![task]);
                 self.engine
                     .run_until(arrival, &mut self.cluster, self.policy.as_mut(), &ctx);
@@ -171,12 +255,12 @@ impl<'a> Service<'a> {
                 fields.push(("start", num(start)));
                 fields.push(("finish", num(finish)));
                 fields.push(("deadline_met", Json::Bool(rec.deadline_met())));
-                self.remember(id, rec);
+                self.records.remember(id, rec);
             }
             Verdict::RejectInfeasible { t_min, available } => {
                 fields.push(("t_min", num(t_min)));
                 fields.push(("available", num(available)));
-                self.remember(
+                self.records.remember(
                     id,
                     TaskRecord {
                         admitted: false,
@@ -191,7 +275,7 @@ impl<'a> Service<'a> {
                 fields.push(("detail", s(why)));
                 // record it like any other rejection so a later query
                 // answers "rejected", not "unknown"
-                self.remember(
+                self.records.remember(
                     id,
                     TaskRecord {
                         admitted: false,
@@ -206,31 +290,12 @@ impl<'a> Service<'a> {
         obj(fields)
     }
 
+    /// Render the `query` response for task `id`.
     pub fn query(&self, id: usize) -> Json {
-        let mut fields = vec![
-            ("ok", Json::Bool(true)),
-            ("op", s("query")),
-            ("id", num(id as f64)),
-        ];
-        match self.records.get(&id) {
-            None => fields.push(("status", s("unknown"))),
-            Some(r) if !r.admitted => fields.push(("status", s("rejected"))),
-            Some(r) => {
-                let status = if r.finish <= self.now() + 1e-9 {
-                    "completed"
-                } else {
-                    "running"
-                };
-                fields.push(("status", s(status)));
-                fields.push(("pair", num(r.pair.unwrap_or(0) as f64)));
-                fields.push(("start", num(r.start)));
-                fields.push(("finish", num(r.finish)));
-                fields.push(("deadline_met", Json::Bool(r.deadline_met())));
-            }
-        }
-        obj(fields)
+        self.records.query_json(id, self.now())
     }
 
+    /// Render the live metrics snapshot as the response to `op`.
     pub fn snapshot_json(&self, op: &str) -> Json {
         let snap = Snapshot::collect(
             self.now(),
@@ -373,6 +438,11 @@ mod tests {
         let total = fin.get("e_total").unwrap().as_f64().unwrap();
         assert!(run > 0.0 && idle > 0.0 && ovh > 0.0);
         assert!((total - (run + idle + ovh)).abs() < 1e-9 * total);
+        // the per-node idle decomposition is present and sums to e_idle
+        let nodes = fin.get("e_idle_nodes").unwrap().as_arr().unwrap();
+        assert_eq!(nodes.len(), 16, "32 pairs / l=2 = 16 servers");
+        let nodes_total: f64 = nodes.iter().filter_map(Json::as_f64).sum();
+        assert!((nodes_total - idle).abs() < 1e-9 * idle.max(1.0));
     }
 
     #[test]

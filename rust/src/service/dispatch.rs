@@ -1,0 +1,862 @@
+//! The sharded scheduling service: a front-end dispatcher over a
+//! [`ShardPool`].
+//!
+//! [`ShardedService`] speaks the same JSON-lines protocol as the unsharded
+//! [`crate::service::Service`] (see `docs/PROTOCOL.md`) but scales submit
+//! throughput across worker threads:
+//!
+//! * **Batched admission.**  Submits whose (clamped) arrivals fall into
+//!   the same admission slot (`--batch-window`, default one slot) are
+//!   coalesced; at flush time the batch is admission-checked and placed in
+//!   **EDF order**, restoring the simulator's EDF-within-batch ordering
+//!   that per-submit streaming loses.  Responses are deferred to the
+//!   flush — every request still gets exactly one response line, in
+//!   request order (a non-submit request, or an invalid-task bounce,
+//!   forces a flush first).  A window
+//!   of `0` disables coalescing: each submit flushes alone, which makes a
+//!   1-shard service event-for-event identical to the unsharded daemon
+//!   (property-tested in `tests/integration_service.rs`).
+//! * **Routing.**  The EDF batch is split into chunks and routed by a
+//!   pluggable [`RoutePolicy`] working from per-shard load summaries —
+//!   least-loaded by backlog, energy-greedy (prefer shards that can absorb
+//!   work without Δ turn-on costs, using the `t_min` bound as the work
+//!   estimate), or round-robin.
+//! * **Work stealing.**  Idle workers steal queued chunks from backed-up
+//!   siblings (see [`crate::service::shard`]), trading strict routing
+//!   fidelity for throughput under skew.
+//!
+//! Shards always run the native DVFS solver: the PJRT backend is not
+//! `Send`, and the per-batch solve is exactly the part sharding wants to
+//! parallelize.
+
+use crate::cluster::partition_cluster;
+use crate::config::SimConfig;
+use crate::dvfs::ScalingInterval;
+use crate::service::admission::{AdmissionController, Verdict};
+use crate::service::daemon::{RecordStore, TaskRecord};
+use crate::service::metrics::Snapshot;
+use crate::service::protocol::{error_response, num, obj, parse_request, s, Request};
+use crate::service::shard::{Placement, ShardJob, ShardLoad, ShardPool};
+use crate::sim::online::OnlinePolicyKind;
+use crate::tasks::Task;
+use crate::util::json::Json;
+use std::io::{BufRead, Write};
+use std::sync::mpsc;
+
+/// Tasks per dispatched chunk when more than one shard is running (a
+/// single shard takes each batch whole, which preserves whole-batch
+/// policy behavior such as bin-packing's worst-fit T=0 pass).  Chunks are
+/// the unit of routing and stealing; 8 tasks amortize the queue handoff
+/// while leaving enough pieces to balance.
+const CHUNK: usize = 8;
+
+/// How the dispatcher picks a shard for each chunk.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RoutePolicy {
+    /// Minimize `backlog + in-flight work` (in `t_min` seconds).
+    LeastLoaded,
+    /// Prefer shards with idle pairs on powered-on servers — placing
+    /// there costs no Δ turn-on energy; tie-break least-loaded.  Work is
+    /// estimated by the same analytical `t_min` bound admission uses.
+    EnergyGreedy,
+    /// Rotate shards regardless of load (baseline / debugging).
+    RoundRobin,
+}
+
+impl RoutePolicy {
+    /// Parse a CLI name (`least-loaded` | `energy` | `round-robin`).
+    pub fn parse(name: &str) -> Result<RoutePolicy, String> {
+        match name.to_ascii_lowercase().as_str() {
+            "least-loaded" | "least" => Ok(RoutePolicy::LeastLoaded),
+            "energy" | "energy-greedy" => Ok(RoutePolicy::EnergyGreedy),
+            "round-robin" | "rr" => Ok(RoutePolicy::RoundRobin),
+            other => Err(format!(
+                "unknown route policy '{other}' (least-loaded|energy|round-robin)"
+            )),
+        }
+    }
+
+    /// Canonical name for logs.
+    pub fn name(&self) -> &'static str {
+        match self {
+            RoutePolicy::LeastLoaded => "least-loaded",
+            RoutePolicy::EnergyGreedy => "energy-greedy",
+            RoutePolicy::RoundRobin => "round-robin",
+        }
+    }
+}
+
+/// The sharded scheduling service (see the module docs).
+///
+/// # Examples
+///
+/// ```
+/// use dvfs_sched::config::SimConfig;
+/// use dvfs_sched::service::{RoutePolicy, ShardedService};
+/// use dvfs_sched::sim::online::OnlinePolicyKind;
+/// use dvfs_sched::tasks::LIBRARY;
+/// use dvfs_sched::util::json::Json;
+/// use dvfs_sched::Task;
+///
+/// let mut cfg = SimConfig::default();
+/// cfg.cluster.total_pairs = 16;
+/// cfg.cluster.pairs_per_server = 4; // 4 servers → up to 4 shards
+/// let mut svc = ShardedService::new(
+///     &cfg, OnlinePolicyKind::Edl, true, 2, RoutePolicy::LeastLoaded, 0.0, true,
+/// ).unwrap();
+/// let model = LIBRARY[0].model.scaled(10.0);
+/// let task = Task { id: 0, app: 0, model, arrival: 0.0,
+///                   deadline: 2.0 * model.t_star(), u: 0.5 };
+/// // window 0 ⇒ the submit flushes immediately and returns its response
+/// let resp = svc.submit(task);
+/// assert_eq!(resp.len(), 1);
+/// assert_eq!(resp[0].get("admitted"), Some(&Json::Bool(true)));
+/// let fin = svc.shutdown();
+/// let snap = fin.last().unwrap();
+/// assert_eq!(snap.get("violations").unwrap().as_f64(), Some(0.0));
+/// assert_eq!(snap.get("shards").unwrap().as_f64(), Some(2.0));
+/// ```
+pub struct ShardedService {
+    pool: ShardPool,
+    route: RoutePolicy,
+    rr_next: usize,
+    /// Last load summary each shard reported.
+    loads: Vec<ShardLoad>,
+    /// `t_min` work dispatched to each shard during the current flush.
+    inflight: Vec<f64>,
+    /// Admission slot width; `0` disables coalescing.
+    window: f64,
+    /// The pending coalesced batch, in submission order.
+    batch: Vec<Task>,
+    /// Slot key of the pending batch (valid while `batch` is non-empty).
+    batch_slot: f64,
+    admission: AdmissionController,
+    records: RecordStore,
+    iv: ScalingInterval,
+    /// Logical clock: advanced by admitted flushes and by drains.
+    now: f64,
+    drained: bool,
+}
+
+impl ShardedService {
+    /// Build a sharded service: partition the configured cluster into
+    /// `n_shards` server groups and spawn one worker per shard.
+    ///
+    /// `window` is the admission-slot width in the workload's time unit
+    /// (the paper's minutes); `steal` enables work stealing between
+    /// workers.  Fails when the cluster cannot be split `n_shards` ways or
+    /// the window is negative/NaN.
+    pub fn new(
+        cfg: &SimConfig,
+        kind: OnlinePolicyKind,
+        dvfs: bool,
+        n_shards: usize,
+        route: RoutePolicy,
+        window: f64,
+        steal: bool,
+    ) -> Result<ShardedService, String> {
+        cfg.validate()?;
+        if !(window >= 0.0) {
+            return Err(format!("batch window must be >= 0, got {window}"));
+        }
+        let views = partition_cluster(&cfg.cluster, n_shards)?;
+        let pool = ShardPool::new(views, kind, dvfs, cfg.interval, cfg.theta, steal);
+        Ok(ShardedService {
+            pool,
+            route,
+            rr_next: 0,
+            loads: vec![ShardLoad::default(); n_shards],
+            inflight: vec![0.0; n_shards],
+            window,
+            batch: Vec::new(),
+            batch_slot: 0.0,
+            admission: AdmissionController::new(),
+            records: RecordStore::new(),
+            iv: cfg.interval,
+            now: 0.0,
+            drained: false,
+        })
+    }
+
+    /// Number of shards.
+    pub fn n_shards(&self) -> usize {
+        self.pool.n_shards()
+    }
+
+    /// Chunks stolen across shards so far.
+    pub fn steals(&self) -> u64 {
+        self.pool.steals()
+    }
+
+    /// The dispatcher's logical clock.
+    pub fn now(&self) -> f64 {
+        self.now
+    }
+
+    /// Whether the last drain is still current (no admit since).
+    pub fn drained(&self) -> bool {
+        self.drained
+    }
+
+    /// The retained record for task `id`, if any.
+    pub fn record(&self, id: usize) -> Option<&TaskRecord> {
+        self.records.get(id)
+    }
+
+    /// Submit one task.  Returns the response lines *released* by this
+    /// call: a structurally invalid task flushes the pending batch and is
+    /// then bounced (responses stay in request order); an out-of-slot
+    /// arrival first flushes the pending batch (those responses come
+    /// first, in their submission order); the new task's own response is
+    /// deferred to its batch's flush unless the window is `0`.
+    pub fn submit(&mut self, mut task: Task) -> Vec<Json> {
+        let mut out = Vec::new();
+        // clamp before validating, exactly like the daemon: a NaN arrival
+        // clamps to the clock (and is then judged on its other fields)
+        let arrival = task.arrival.max(self.now);
+        task.arrival = arrival;
+        // structural validation up front: garbage never enters a batch
+        // and never moves the clock.  The pending batch IS flushed first,
+        // so response lines keep strict request order even for a bounce.
+        if let Err(why) = self.admission.check_validity(&task) {
+            out.extend(self.flush());
+            self.records.remember(
+                task.id,
+                TaskRecord {
+                    admitted: false,
+                    pair: None,
+                    start: arrival,
+                    finish: arrival,
+                    deadline: task.deadline,
+                },
+            );
+            out.push(obj(vec![
+                ("ok", Json::Bool(true)),
+                ("op", s("submit")),
+                ("id", num(task.id as f64)),
+                ("now", num(self.now)),
+                ("admitted", Json::Bool(false)),
+                ("reason", s("invalid-task")),
+                ("detail", s(&why)),
+            ]));
+            return out;
+        }
+        if self.window > 0.0 {
+            let slot = (arrival / self.window).floor();
+            if !self.batch.is_empty() && slot != self.batch_slot {
+                out.extend(self.flush());
+            }
+            self.batch_slot = slot;
+            self.batch.push(task);
+        } else {
+            self.batch.push(task);
+            out.extend(self.flush());
+        }
+        out
+    }
+
+    /// Flush the pending batch: feasibility-check every member at the
+    /// batch's flush time (the newest clamped arrival in the batch — the
+    /// time the batch actually places at, so admission can never wave
+    /// through a deadline that is already unmeetable), EDF-sort the
+    /// admitted set, dispatch it across the shards, and return one
+    /// response per batch member in submission order.
+    pub fn flush(&mut self) -> Vec<Json> {
+        if self.batch.is_empty() {
+            return Vec::new();
+        }
+        let mut batch = std::mem::take(&mut self.batch);
+        // re-clamp: an out-of-order submit may have been buffered before
+        // a later-slot flush advanced the clock past it (its window
+        // shrinks — exactly what a late submission means)
+        for task in &mut batch {
+            task.arrival = task.arrival.max(self.now);
+        }
+        // the batch places at its newest arrival; coalescing costs each
+        // member at most one window of its deadline slack
+        let t = batch
+            .iter()
+            .map(|k| k.arrival)
+            .fold(self.now, f64::max);
+        let n = batch.len();
+        let mut responses: Vec<Option<Json>> = (0..n).map(|_| None).collect();
+        let mut admitted: Vec<(usize, Task)> = Vec::new();
+        for (idx, task) in batch.into_iter().enumerate() {
+            match self.admission.check_feasibility(&task, t, &self.iv) {
+                Verdict::Admit => admitted.push((idx, task)),
+                Verdict::RejectInfeasible { t_min, available } => {
+                    self.records.remember(
+                        task.id,
+                        TaskRecord {
+                            admitted: false,
+                            pair: None,
+                            start: task.arrival,
+                            finish: task.arrival,
+                            deadline: task.deadline,
+                        },
+                    );
+                    responses[idx] = Some(obj(vec![
+                        ("ok", Json::Bool(true)),
+                        ("op", s("submit")),
+                        ("id", num(task.id as f64)),
+                        ("now", num(self.now)),
+                        ("admitted", Json::Bool(false)),
+                        ("reason", s("infeasible-deadline")),
+                        ("t_min", num(t_min)),
+                        ("available", num(available)),
+                    ]));
+                }
+                Verdict::RejectInvalid(_) => unreachable!("validity checked at submit"),
+            }
+        }
+        if !admitted.is_empty() {
+            // the clock only moves on admission
+            self.now = self.now.max(t);
+            self.drained = false;
+            // EDF within the coalesced batch; the sort is stable, so
+            // deadline ties keep submission order
+            admitted.sort_by(|a, b| a.1.deadline.partial_cmp(&b.1.deadline).unwrap());
+            for (orig_idx, p) in self.dispatch(t, &admitted) {
+                let rec = TaskRecord {
+                    admitted: true,
+                    pair: Some(p.pair),
+                    start: p.start,
+                    finish: p.finish,
+                    deadline: p.deadline,
+                };
+                self.records.remember(p.id, rec);
+                responses[orig_idx] = Some(obj(vec![
+                    ("ok", Json::Bool(true)),
+                    ("op", s("submit")),
+                    ("id", num(p.id as f64)),
+                    ("now", num(t)),
+                    ("admitted", Json::Bool(true)),
+                    ("reason", s("admitted")),
+                    ("pair", num(p.pair as f64)),
+                    ("start", num(p.start)),
+                    ("finish", num(p.finish)),
+                    ("deadline_met", Json::Bool(rec.deadline_met())),
+                    ("shard", num(p.shard as f64)),
+                ]));
+            }
+        }
+        let out: Vec<Json> = responses.into_iter().flatten().collect();
+        debug_assert_eq!(out.len(), n, "every batch member got a response");
+        out
+    }
+
+    /// Route the EDF-ordered admitted batch across the shards in chunks
+    /// and collect every placement, tagged with the original submission
+    /// index.
+    fn dispatch(&mut self, t: f64, admitted: &[(usize, Task)]) -> Vec<(usize, Placement)> {
+        let n_shards = self.pool.n_shards();
+        let chunk = if n_shards == 1 {
+            admitted.len()
+        } else {
+            CHUNK
+        };
+        self.inflight.fill(0.0);
+        let (tx, rx) = mpsc::channel();
+        // tag → the chunk's original submission indices, in chunk order
+        let mut chunk_map: Vec<Vec<usize>> = Vec::new();
+        for group in admitted.chunks(chunk) {
+            let tasks: Vec<Task> = group.iter().map(|&(_, k)| k).collect();
+            let cost: f64 = tasks.iter().map(|k| k.model.t_min(&self.iv)).sum();
+            let shard = self.route_chunk();
+            self.inflight[shard] += cost;
+            let tag = chunk_map.len() as u64;
+            chunk_map.push(group.iter().map(|&(idx, _)| idx).collect());
+            self.pool.send(
+                shard,
+                ShardJob::Batch {
+                    tag,
+                    t,
+                    tasks,
+                    reply: tx.clone(),
+                },
+            );
+        }
+        drop(tx);
+        let mut out = Vec::with_capacity(admitted.len());
+        for _ in 0..chunk_map.len() {
+            let reply = rx.recv().expect("shard worker alive");
+            // per-shard replies arrive in processing order, so the last
+            // one seen per shard is its freshest load
+            self.loads[reply.shard] = reply.load;
+            let idxs = &chunk_map[reply.tag as usize];
+            assert_eq!(idxs.len(), reply.placements.len());
+            for (j, p) in reply.placements.iter().enumerate() {
+                out.push((idxs[j], *p));
+            }
+        }
+        out
+    }
+
+    /// Pick a shard for the next chunk (loads = last report + work routed
+    /// earlier in this flush).
+    fn route_chunk(&mut self) -> usize {
+        let n = self.pool.n_shards();
+        match self.route {
+            RoutePolicy::RoundRobin => {
+                let k = self.rr_next % n;
+                self.rr_next = self.rr_next.wrapping_add(1);
+                k
+            }
+            RoutePolicy::LeastLoaded => {
+                let mut best = 0;
+                let mut best_load = f64::INFINITY;
+                for k in 0..n {
+                    let load = self.loads[k].backlog + self.inflight[k];
+                    if load < best_load {
+                        best_load = load;
+                        best = k;
+                    }
+                }
+                best
+            }
+            RoutePolicy::EnergyGreedy => {
+                // shards with idle powered-on capacity absorb work at zero
+                // Δ cost; among shards that would have to open a server,
+                // prefer ones that still *can* (servers_off > 0) over
+                // fully-committed ones that could only queue; among
+                // equals, least effective load wins
+                let mut best = 0;
+                let mut best_key = (f64::INFINITY, f64::INFINITY, f64::INFINITY);
+                for k in 0..n {
+                    let no_free_capacity = if self.loads[k].idle_on > 0 { 0.0 } else { 1.0 };
+                    let saturated =
+                        if self.loads[k].idle_on == 0 && self.loads[k].servers_off == 0 {
+                            1.0
+                        } else {
+                            0.0
+                        };
+                    let key = (
+                        no_free_capacity,
+                        saturated,
+                        self.loads[k].backlog + self.inflight[k],
+                    );
+                    if key < best_key {
+                        best_key = key;
+                        best = k;
+                    }
+                }
+                best
+            }
+        }
+    }
+
+    /// Gather per-shard fragments (draining first when `drain`), merge
+    /// them, and overlay the dispatcher-side admission counters and steal
+    /// count.
+    fn collect_merged(&mut self, drain: bool) -> Snapshot {
+        let n = self.pool.n_shards();
+        let (tx, rx) = mpsc::channel();
+        for k in 0..n {
+            let job = if drain {
+                ShardJob::Drain { reply: tx.clone() }
+            } else {
+                ShardJob::Snapshot {
+                    now: self.now,
+                    reply: tx.clone(),
+                }
+            };
+            self.pool.send(k, job);
+        }
+        drop(tx);
+        let mut frags: Vec<(usize, Snapshot)> = Vec::with_capacity(n);
+        for _ in 0..n {
+            frags.push(rx.recv().expect("shard worker alive"));
+        }
+        // shard order restores the global server numbering in e_idle_nodes
+        frags.sort_by_key(|&(id, _)| id);
+        let parts: Vec<Snapshot> = frags.into_iter().map(|(_, snap)| snap).collect();
+        let mut merged = Snapshot::merge(&parts);
+        merged.submitted = self.admission.admitted + self.admission.rejected();
+        merged.admitted = self.admission.admitted;
+        merged.rejected_infeasible = self.admission.rejected_infeasible;
+        merged.rejected_invalid = self.admission.rejected_invalid;
+        merged.steals = self.pool.steals();
+        merged.now = merged.now.max(self.now);
+        if drain {
+            self.now = self.now.max(merged.now);
+        }
+        merged
+    }
+
+    /// Render the merged live snapshot as the response to `op`.  The
+    /// pending batch is *not* flushed here (a flush releases response
+    /// lines, which only [`Self::handle`] can deliver).
+    pub fn snapshot_json(&mut self, op: &str) -> Json {
+        let snap = self.collect_merged(false);
+        render_snapshot(snap, op, self.drained)
+    }
+
+    /// Graceful drain: flush the pending batch, run every shard to
+    /// completion, and report the merged closed-books decomposition.
+    /// Returns the released flush responses followed by the final
+    /// `shutdown` snapshot (always the last element).
+    pub fn shutdown(&mut self) -> Vec<Json> {
+        let mut out = self.flush();
+        let snap = self.drain_to_snapshot();
+        out.push(render_snapshot(snap, "shutdown", true));
+        out
+    }
+
+    /// [`Self::shutdown`] in structured form: flush (outcomes land in the
+    /// record store; the response *lines* are dropped, so protocol callers
+    /// should use `shutdown` instead), drain every shard, and return the
+    /// merged snapshot.  Used by the sharded simulator path
+    /// ([`crate::sim::online::run_online_workload_sharded`]).
+    pub fn drain_to_snapshot(&mut self) -> Snapshot {
+        let _ = self.flush();
+        let snap = self.collect_merged(true);
+        self.drained = true;
+        snap
+    }
+
+    /// Dispatch one decoded request.  Returns (responses, stop-serving).
+    /// Non-submit requests flush the pending batch first, so responses
+    /// always come back in request order.
+    pub fn handle(&mut self, req: Request) -> (Vec<Json>, bool) {
+        match req {
+            Request::Submit(task) => (self.submit(task), false),
+            Request::Query { id } => {
+                let mut out = self.flush();
+                out.push(self.records.query_json(id, self.now));
+                (out, false)
+            }
+            Request::Snapshot => {
+                let mut out = self.flush();
+                let snap = self.snapshot_json("snapshot");
+                out.push(snap);
+                (out, false)
+            }
+            Request::Shutdown => (self.shutdown(), true),
+        }
+    }
+
+    /// Serve a JSON-lines session until `shutdown` or EOF (the sharded
+    /// counterpart of [`crate::service::Service::serve`]).  On bare EOF
+    /// the pending batch is flushed so every submit got its response;
+    /// returns whether a shutdown was requested (callers drain on EOF).
+    pub fn serve<R: BufRead, W: Write>(
+        &mut self,
+        reader: R,
+        mut writer: W,
+    ) -> Result<bool, String> {
+        for line in reader.lines() {
+            let line = line.map_err(|e| format!("reading request line: {e}"))?;
+            let (resps, stop) = match parse_request(&line) {
+                Ok(None) => continue,
+                Ok(Some(req)) => self.handle(req),
+                Err(e) => {
+                    // release the pending batch first so the error line
+                    // lands in request order, like every other path
+                    let mut out = self.flush();
+                    out.push(error_response(&e));
+                    (out, false)
+                }
+            };
+            for r in &resps {
+                writeln!(writer, "{}", r.render_compact())
+                    .map_err(|e| format!("writing response: {e}"))?;
+            }
+            if stop {
+                return Ok(true);
+            }
+        }
+        for r in self.flush() {
+            writeln!(writer, "{}", r.render_compact())
+                .map_err(|e| format!("writing response: {e}"))?;
+        }
+        Ok(false)
+    }
+}
+
+/// Overlay the daemon-level response fields on a snapshot body (the same
+/// shape [`crate::service::Service::snapshot_json`] produces).
+fn render_snapshot(snap: Snapshot, op: &str, drained: bool) -> Json {
+    match snap.to_json() {
+        Json::Obj(mut m) => {
+            m.insert("ok".to_string(), Json::Bool(true));
+            m.insert("op".to_string(), s(op));
+            m.insert("drained".to_string(), Json::Bool(drained));
+            Json::Obj(m)
+        }
+        _ => unreachable!("snapshot renders an object"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tasks::LIBRARY;
+
+    fn small_cfg() -> SimConfig {
+        let mut cfg = SimConfig::default();
+        cfg.cluster.total_pairs = 32;
+        cfg.cluster.pairs_per_server = 2; // 16 servers
+        cfg.theta = 0.9;
+        cfg
+    }
+
+    fn mk_task(id: usize, arrival: f64, u: f64, k: f64) -> Task {
+        let model = LIBRARY[id % LIBRARY.len()].model.scaled(k);
+        Task {
+            id,
+            app: id % LIBRARY.len(),
+            model,
+            arrival,
+            deadline: arrival + model.t_star() / u,
+            u,
+        }
+    }
+
+    fn svc(n_shards: usize, window: f64) -> ShardedService {
+        ShardedService::new(
+            &small_cfg(),
+            OnlinePolicyKind::Edl,
+            true,
+            n_shards,
+            RoutePolicy::LeastLoaded,
+            window,
+            true,
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn route_policy_parses() {
+        assert_eq!(
+            RoutePolicy::parse("least-loaded").unwrap(),
+            RoutePolicy::LeastLoaded
+        );
+        assert_eq!(RoutePolicy::parse("ENERGY").unwrap(), RoutePolicy::EnergyGreedy);
+        assert_eq!(RoutePolicy::parse("rr").unwrap(), RoutePolicy::RoundRobin);
+        assert!(RoutePolicy::parse("random").is_err());
+    }
+
+    #[test]
+    fn per_submit_mode_answers_immediately() {
+        let mut service = svc(2, 0.0);
+        let out = service.submit(mk_task(0, 0.0, 0.5, 10.0));
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].get("admitted"), Some(&Json::Bool(true)));
+        assert_eq!(out[0].get("deadline_met"), Some(&Json::Bool(true)));
+        let fin = service.shutdown();
+        let snap = fin.last().unwrap();
+        assert_eq!(snap.get("drained"), Some(&Json::Bool(true)));
+        assert_eq!(snap.get("admitted").unwrap().as_f64(), Some(1.0));
+        assert_eq!(snap.get("shards").unwrap().as_f64(), Some(2.0));
+    }
+
+    #[test]
+    fn coalescing_defers_responses_to_the_flush() {
+        let mut service = svc(2, 1.0);
+        // three submits inside slot [0, 1): no responses yet
+        assert!(service.submit(mk_task(0, 0.0, 0.5, 10.0)).is_empty());
+        assert!(service.submit(mk_task(1, 0.2, 0.5, 10.0)).is_empty());
+        assert!(service.submit(mk_task(2, 0.9, 0.5, 10.0)).is_empty());
+        // a submit in slot [5, 6) flushes the earlier batch
+        let out = service.submit(mk_task(3, 5.0, 0.5, 10.0));
+        assert_eq!(out.len(), 3, "slot-0 responses released in order");
+        for (i, r) in out.iter().enumerate() {
+            assert_eq!(r.get("id").unwrap().as_f64(), Some(i as f64));
+            assert_eq!(r.get("admitted"), Some(&Json::Bool(true)));
+        }
+        // shutdown releases the last pending response + the snapshot
+        let fin = service.shutdown();
+        assert_eq!(fin.len(), 2);
+        assert_eq!(fin[0].get("id").unwrap().as_f64(), Some(3.0));
+        assert_eq!(fin[1].get("admitted").unwrap().as_f64(), Some(4.0));
+        assert_eq!(fin[1].get("violations").unwrap().as_f64(), Some(0.0));
+    }
+
+    #[test]
+    fn invalid_task_flushes_the_batch_and_keeps_request_order() {
+        let mut service = svc(2, 1.0);
+        assert!(service.submit(mk_task(0, 0.0, 0.5, 10.0)).is_empty());
+        let mut garbage = mk_task(1, 1e18, 0.5, 10.0);
+        garbage.u = 7.0;
+        let out = service.submit(garbage);
+        // the pending batch is released first, so response lines stay in
+        // request order even around a bounce
+        assert_eq!(out.len(), 2);
+        assert_eq!(out[0].get("id").unwrap().as_f64(), Some(0.0));
+        assert_eq!(out[0].get("admitted"), Some(&Json::Bool(true)));
+        assert_eq!(out[1].get("reason").unwrap().as_str(), Some("invalid-task"));
+        assert!(service.now() < 1e6, "clock poisoned: {}", service.now());
+        let fin = service.shutdown();
+        assert_eq!(fin.len(), 1, "nothing pending, just the snapshot");
+        let snap = fin.last().unwrap();
+        assert_eq!(snap.get("rejected_invalid").unwrap().as_f64(), Some(1.0));
+        assert_eq!(snap.get("admitted").unwrap().as_f64(), Some(1.0));
+    }
+
+    #[test]
+    fn batched_admission_evaluates_at_the_flush_time() {
+        // a task whose deadline fits at its own arrival but not at the
+        // batch's flush time must be bounced, not admitted-then-violated:
+        // admission and placement use the same clock
+        let mut service = svc(1, 1.0);
+        // borderline task early in the slot: window barely above t_min
+        let mut tight = mk_task(0, 0.1, 0.5, 10.0);
+        let t_min = tight.model.t_min(&ScalingInterval::wide());
+        tight.deadline = 0.1 + t_min * 1.002;
+        assert!(service.submit(tight).is_empty());
+        // a second submit later in the same slot drags the flush time to
+        // 0.9, leaving the tight task less than t_min of window
+        assert!(service.submit(mk_task(1, 0.9, 0.2, 10.0)).is_empty());
+        let fin = service.shutdown();
+        assert_eq!(fin.len(), 3);
+        let tight_resp = &fin[0];
+        assert_eq!(tight_resp.get("admitted"), Some(&Json::Bool(false)));
+        assert_eq!(
+            tight_resp.get("reason").unwrap().as_str(),
+            Some("infeasible-deadline")
+        );
+        assert_eq!(fin[1].get("admitted"), Some(&Json::Bool(true)));
+        let snap = fin.last().unwrap();
+        assert_eq!(snap.get("violations").unwrap().as_f64(), Some(0.0));
+    }
+
+    #[test]
+    fn out_of_order_slots_clamp_to_the_clock() {
+        let mut service = svc(2, 1.0);
+        assert!(service.submit(mk_task(0, 100.0, 0.5, 10.0)).is_empty());
+        // dated in the past: its slot key forces the 100-batch flush, and
+        // at its own flush the stale arrival re-clamps to the clock —
+        // admitted *now*, absolute deadline kept
+        let stale = mk_task(1, 20.0, 0.3, 10.0);
+        let d = stale.deadline;
+        let out = service.submit(stale);
+        assert_eq!(out.len(), 1, "the 100-batch flushed");
+        assert_eq!(out[0].get("id").unwrap().as_f64(), Some(0.0));
+        assert_eq!(service.now(), 100.0);
+        let fin = service.shutdown();
+        assert_eq!(fin.len(), 2);
+        assert_eq!(fin[0].get("admitted"), Some(&Json::Bool(true)));
+        let rec = service.record(1).unwrap();
+        assert_eq!(rec.deadline, d);
+        assert!(rec.start >= 100.0, "stale task placed at the clock");
+    }
+
+    #[test]
+    fn multi_shard_spreads_servers() {
+        let mut service = ShardedService::new(
+            &small_cfg(),
+            OnlinePolicyKind::Edl,
+            true,
+            4,
+            RoutePolicy::RoundRobin,
+            1.0,
+            false,
+        )
+        .unwrap();
+        // 40 concurrent tasks with very roomy deadlines (u=0.1 → window
+        // 10·t*, far above t_max, so stacking two per pair always fits):
+        // round-robin must light up all 4 partitions (8 pairs each)
+        for i in 0..40 {
+            service.submit(mk_task(i, 0.0, 0.1, 10.0));
+        }
+        let fin = service.shutdown();
+        let snap = fin.last().unwrap();
+        assert_eq!(snap.get("violations").unwrap().as_f64(), Some(0.0));
+        assert_eq!(snap.get("admitted").unwrap().as_f64(), Some(40.0));
+        assert_eq!(snap.get("shards").unwrap().as_f64(), Some(4.0));
+        // placements cover pairs from every partition (global ids)
+        let mut shards_hit = [false; 4];
+        for i in 0..40 {
+            let rec = service.record(i).unwrap();
+            shards_hit[rec.pair.unwrap() / 8] = true;
+        }
+        assert!(shards_hit.iter().all(|&h| h), "partitions hit: {shards_hit:?}");
+        // per-node idle energy covers all 16 servers and sums to e_idle
+        let nodes = snap.get("e_idle_nodes").unwrap().as_arr().unwrap();
+        assert_eq!(nodes.len(), 16);
+        let sum: f64 = nodes.iter().filter_map(Json::as_f64).sum();
+        let e_idle = snap.get("e_idle").unwrap().as_f64().unwrap();
+        assert!((sum - e_idle).abs() < 1e-9 * e_idle.max(1.0));
+    }
+
+    #[test]
+    fn serve_session_over_the_wire_with_shards() {
+        use crate::ext::trace::task_to_json;
+        let mut service = svc(2, 1.0);
+        let submit_line = |t: &Task| {
+            obj(vec![("op", s("submit")), ("task", task_to_json(t))]).render_compact()
+        };
+        let mut session = String::new();
+        session.push_str("# sharded replay\n");
+        session.push_str(&submit_line(&mk_task(0, 0.0, 0.5, 10.0)));
+        session.push('\n');
+        session.push_str(&submit_line(&mk_task(1, 0.5, 0.5, 10.0)));
+        session.push('\n');
+        // a malformed line must flush the pending batch before erroring,
+        // so responses stay in request order
+        session.push_str("not json at all\n");
+        session.push_str("{\"op\":\"query\",\"id\":0}\n");
+        session.push_str("{\"op\":\"snapshot\"}\n");
+        session.push_str("{\"op\":\"shutdown\"}\n");
+        let mut out = Vec::new();
+        let stopped = service.serve(session.as_bytes(), &mut out).unwrap();
+        assert!(stopped);
+        let lines: Vec<Json> = String::from_utf8(out)
+            .unwrap()
+            .lines()
+            .map(|l| Json::parse(l).unwrap())
+            .collect();
+        // 2 submit responses + parse error + query + snapshot + shutdown
+        assert_eq!(lines.len(), 6);
+        assert_eq!(lines[0].get("id").unwrap().as_f64(), Some(0.0));
+        assert_eq!(lines[1].get("id").unwrap().as_f64(), Some(1.0));
+        assert_eq!(lines[2].get("ok"), Some(&Json::Bool(false)));
+        assert_eq!(lines[3].get("status").unwrap().as_str(), Some("running"));
+        assert_eq!(lines[4].get("op").unwrap().as_str(), Some("snapshot"));
+        let fin = &lines[5];
+        assert_eq!(fin.get("drained"), Some(&Json::Bool(true)));
+        let run = fin.get("e_run").unwrap().as_f64().unwrap();
+        let idle = fin.get("e_idle").unwrap().as_f64().unwrap();
+        let ovh = fin.get("e_overhead").unwrap().as_f64().unwrap();
+        let total = fin.get("e_total").unwrap().as_f64().unwrap();
+        assert!((total - (run + idle + ovh)).abs() < 1e-9 * total.max(1.0));
+    }
+
+    #[test]
+    fn edf_order_within_a_coalesced_batch() {
+        // a ONE-pair cluster makes placement order observable: submitted
+        // anti-EDF (loose first) inside one slot, the tight-deadline task
+        // must still run first — placing the loose task first would leave
+        // the tight one an infeasible window and force a violation
+        let mut cfg = SimConfig::default();
+        cfg.cluster.total_pairs = 1;
+        cfg.cluster.pairs_per_server = 1;
+        let mut service = ShardedService::new(
+            &cfg,
+            OnlinePolicyKind::Edl,
+            true,
+            1,
+            RoutePolicy::LeastLoaded,
+            1.0,
+            false,
+        )
+        .unwrap();
+        let loose = mk_task(0, 0.0, 0.2, 10.0);
+        let tight = mk_task(1, 0.0, 0.95, 10.0);
+        assert!(loose.deadline > tight.deadline);
+        assert!(service.submit(loose).is_empty());
+        assert!(service.submit(tight).is_empty());
+        let fin = service.shutdown();
+        assert_eq!(fin.len(), 3);
+        let snap = fin.last().unwrap();
+        assert_eq!(snap.get("violations").unwrap().as_f64(), Some(0.0));
+        let rec_loose = service.record(0).unwrap();
+        let rec_tight = service.record(1).unwrap();
+        // EDF: the tight task got the pair at t=0, the loose one queued
+        // behind it on the same (only) pair
+        assert_eq!(rec_tight.start, 0.0);
+        assert!(rec_tight.deadline_met());
+        assert!(rec_loose.start >= rec_tight.finish - 1e-9);
+        assert!(rec_loose.deadline_met());
+    }
+}

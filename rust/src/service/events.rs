@@ -98,6 +98,7 @@ impl Default for EventEngine {
 }
 
 impl EventEngine {
+    /// An empty engine at clock 0.
     pub fn new() -> EventEngine {
         EventEngine {
             queue: BinaryHeap::new(),

@@ -1,6 +1,13 @@
 //! Live service metrics: the paper's energy decomposition plus admission
 //! and placement counters, assembled on demand from the cluster and
 //! policy state and rendered for the JSON-lines protocol.
+//!
+//! The same [`Snapshot`] type serves three roles:
+//!
+//! * the unsharded daemon's `snapshot` response body,
+//! * one shard's fragment of the sharded service's state, and
+//! * the merged cluster-wide view ([`Snapshot::merge`] sums the ledgers
+//!   and concatenates the per-node idle-energy arrays in shard order).
 
 use crate::cluster::{Cluster, PairPower};
 use crate::sched::online::PolicyStats;
@@ -9,23 +16,57 @@ use crate::util::json::Json;
 use std::collections::BTreeMap;
 
 /// A point-in-time view of the service (the `snapshot` response body).
+///
+/// # Examples
+///
+/// ```
+/// use dvfs_sched::service::Snapshot;
+///
+/// let snap = Snapshot { e_run: 10.0, e_idle: 2.5, e_overhead: 0.5, ..Snapshot::default() };
+/// assert_eq!(snap.e_total(), 13.0);
+/// assert_eq!(snap.to_json().get("e_total").unwrap().as_f64(), Some(13.0));
+/// ```
 #[derive(Clone, Debug, Default)]
 pub struct Snapshot {
+    /// Service clock when the snapshot was taken.
     pub now: f64,
+    /// Σ runtime energy of completed assignments.
     pub e_run: f64,
+    /// Idle energy, including still-open idle stretches as of `now`.
     pub e_idle: f64,
+    /// Turn-on overhead energy ω·Δ.
     pub e_overhead: f64,
+    /// Per-node (per-server) decomposition of `e_idle`, in global server
+    /// order ([`Cluster::e_idle_by_server`]); sums to `e_idle`.
+    pub e_idle_nodes: Vec<f64>,
+    /// Deadline violations observed so far.
     pub violations: u64,
+    /// Pair turn-on events ω.
     pub turn_ons: u64,
+    /// Servers currently powered on.
     pub servers_on: usize,
+    /// Servers that have ever run a task.
+    pub servers_used: usize,
+    /// Pairs currently executing a task.
     pub pairs_busy: usize,
+    /// Pairs that have ever run a task.
     pub pairs_used: usize,
+    /// Tasks submitted (admitted + rejected).
     pub submitted: u64,
+    /// Tasks admitted.
     pub admitted: u64,
+    /// Tasks rejected because no DVFS setting could meet the deadline.
     pub rejected_infeasible: u64,
+    /// Tasks rejected by structural validation.
     pub rejected_invalid: u64,
+    /// θ-readjusted placements (EDL only).
     pub readjusted: u64,
+    /// Forced placements on an exhausted cluster (may violate).
     pub forced: u64,
+    /// Batches a worker stole from an overloaded sibling shard.
+    pub steals: u64,
+    /// Shards contributing to this snapshot (1 for the unsharded daemon).
+    pub shards: usize,
 }
 
 impl Snapshot {
@@ -43,9 +84,11 @@ impl Snapshot {
             e_run: cluster.e_run,
             e_idle: cluster.e_idle_at(now),
             e_overhead: cluster.e_overhead(),
+            e_idle_nodes: cluster.e_idle_by_server(now),
             violations: cluster.violations,
             turn_ons: cluster.turn_ons,
             servers_on: cluster.server_on.iter().filter(|&&on| on).count(),
+            servers_used: cluster.servers_used(),
             pairs_busy: cluster
                 .pairs
                 .iter()
@@ -58,13 +101,47 @@ impl Snapshot {
             rejected_invalid: adm.rejected_invalid,
             readjusted: stats.readjusted,
             forced: stats.forced,
+            steals: 0,
+            shards: 1,
         }
     }
 
+    /// Merge per-shard fragments (in shard order — shard 0 owns the
+    /// lowest-numbered servers, so concatenating `e_idle_nodes` restores
+    /// the global server numbering).  Ledgers and counters are summed;
+    /// `now` is the maximum across shards.
+    pub fn merge(parts: &[Snapshot]) -> Snapshot {
+        let mut m = Snapshot::default();
+        for p in parts {
+            m.now = m.now.max(p.now);
+            m.e_run += p.e_run;
+            m.e_idle += p.e_idle;
+            m.e_overhead += p.e_overhead;
+            m.e_idle_nodes.extend(p.e_idle_nodes.iter().copied());
+            m.violations += p.violations;
+            m.turn_ons += p.turn_ons;
+            m.servers_on += p.servers_on;
+            m.servers_used += p.servers_used;
+            m.pairs_busy += p.pairs_busy;
+            m.pairs_used += p.pairs_used;
+            m.submitted += p.submitted;
+            m.admitted += p.admitted;
+            m.rejected_infeasible += p.rejected_infeasible;
+            m.rejected_invalid += p.rejected_invalid;
+            m.readjusted += p.readjusted;
+            m.forced += p.forced;
+            m.steals += p.steals;
+        }
+        m.shards = parts.len();
+        m
+    }
+
+    /// `e_run + e_idle + e_overhead` (Eq. 7's decomposition).
     pub fn e_total(&self) -> f64 {
         self.e_run + self.e_idle + self.e_overhead
     }
 
+    /// Render for the wire protocol (see `docs/PROTOCOL.md`).
     pub fn to_json(&self) -> Json {
         let mut m = BTreeMap::new();
         let mut num = |k: &str, v: f64| {
@@ -78,6 +155,7 @@ impl Snapshot {
         num("violations", self.violations as f64);
         num("turn_ons", self.turn_ons as f64);
         num("servers_on", self.servers_on as f64);
+        num("servers_used", self.servers_used as f64);
         num("pairs_busy", self.pairs_busy as f64);
         num("pairs_used", self.pairs_used as f64);
         num("submitted", self.submitted as f64);
@@ -86,6 +164,12 @@ impl Snapshot {
         num("rejected_invalid", self.rejected_invalid as f64);
         num("readjusted", self.readjusted as f64);
         num("forced", self.forced as f64);
+        num("steals", self.steals as f64);
+        num("shards", self.shards as f64);
+        m.insert(
+            "e_idle_nodes".to_string(),
+            Json::Arr(self.e_idle_nodes.iter().map(|&e| Json::Num(e)).collect()),
+        );
         Json::Obj(m)
     }
 }
@@ -111,11 +195,17 @@ mod tests {
         };
         let s = Snapshot::collect(3.0, &c, &PolicyStats::default(), &adm);
         assert_eq!(s.servers_on, 1);
+        assert_eq!(s.servers_used, 1);
         assert_eq!(s.pairs_busy, 1);
         assert_eq!(s.submitted, 3);
+        assert_eq!(s.shards, 1);
         // pair 1 idle 0→3 counts into the live idle ledger
         assert!((s.e_idle - 37.0 * 3.0).abs() < 1e-9);
         assert!((s.e_total() - (s.e_run + s.e_idle + s.e_overhead)).abs() < 1e-12);
+        // per-node decomposition covers every server and sums to e_idle
+        assert_eq!(s.e_idle_nodes.len(), 4);
+        let nodes_total: f64 = s.e_idle_nodes.iter().sum();
+        assert!((nodes_total - s.e_idle).abs() < 1e-9);
     }
 
     #[test]
@@ -123,11 +213,54 @@ mod tests {
         let s = Snapshot {
             now: 4.0,
             e_run: 10.0,
+            e_idle_nodes: vec![1.0, 2.0],
             ..Snapshot::default()
         };
         let j = s.to_json();
         assert_eq!(j.get("e_run").unwrap().as_f64(), Some(10.0));
         assert_eq!(j.get("e_total").unwrap().as_f64(), Some(10.0));
+        assert_eq!(j.get("e_idle_nodes").unwrap().as_arr().unwrap().len(), 2);
         assert!(j.render_compact().starts_with('{'));
+    }
+
+    #[test]
+    fn merge_sums_fragments_in_shard_order() {
+        let a = Snapshot {
+            now: 5.0,
+            e_run: 10.0,
+            e_idle: 1.0,
+            e_idle_nodes: vec![0.5, 0.5],
+            turn_ons: 2,
+            servers_on: 1,
+            pairs_used: 2,
+            admitted: 3,
+            submitted: 3,
+            ..Snapshot::default()
+        };
+        let b = Snapshot {
+            now: 7.0,
+            e_run: 4.0,
+            e_idle: 2.0,
+            e_idle_nodes: vec![2.0],
+            turn_ons: 1,
+            servers_on: 1,
+            pairs_used: 1,
+            admitted: 1,
+            submitted: 2,
+            rejected_infeasible: 1,
+            ..Snapshot::default()
+        };
+        let m = Snapshot::merge(&[a, b]);
+        assert_eq!(m.now, 7.0);
+        assert_eq!(m.e_run, 14.0);
+        assert_eq!(m.e_idle_nodes, vec![0.5, 0.5, 2.0]);
+        assert_eq!(m.turn_ons, 3);
+        assert_eq!(m.servers_on, 2);
+        assert_eq!(m.pairs_used, 3);
+        assert_eq!(m.submitted, 5);
+        assert_eq!(m.admitted, 4);
+        assert_eq!(m.rejected_infeasible, 1);
+        assert_eq!(m.shards, 2);
+        assert!((m.e_total() - (m.e_run + m.e_idle + m.e_overhead)).abs() < 1e-12);
     }
 }

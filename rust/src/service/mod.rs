@@ -1,5 +1,7 @@
 //! Event-driven scheduling service (the "online scheduler as a service"
-//! layer the paper's Sec. 4.2.2 batch loop grows into).
+//! layer the paper's Sec. 4.2.2 batch loop grows into).  See
+//! `docs/ARCHITECTURE.md` for the full topology and `docs/PROTOCOL.md`
+//! for the wire format.
 //!
 //! * [`events`] — the continuous-time event core: a binary-heap queue
 //!   over arrivals, departures, and DRS idle-timeout checks.  Replaces
@@ -10,18 +12,29 @@
 //!   at the door instead of poisoning the queue.
 //! * [`protocol`] — the JSON-lines wire format (`submit` / `query` /
 //!   `snapshot` / `shutdown`), schema-compatible with workload files.
-//! * [`metrics`] — live energy decomposition + admission counters.
-//! * [`daemon`] — the [`daemon::Service`] loop behind `repro serve`
-//!   (stdin) and `repro replay` (session files), with graceful drain.
+//! * [`metrics`] — live energy decomposition + admission counters, with
+//!   per-shard fragment merging.
+//! * [`daemon`] — the single-threaded [`daemon::Service`] loop behind
+//!   `repro serve` (stdin) and `repro replay` (session files), with
+//!   graceful drain.
+//! * [`shard`] — cluster partitions on worker threads: per-shard event
+//!   loops, job queues, and batch work stealing.
+//! * [`dispatch`] — the sharded front-end ([`dispatch::ShardedService`],
+//!   `repro serve --shards N`): batched EDF admission, pluggable chunk
+//!   routing, merged snapshots.
 
 pub mod admission;
 pub mod daemon;
+pub mod dispatch;
 pub mod events;
 pub mod metrics;
 pub mod protocol;
+pub mod shard;
 
 pub use admission::{AdmissionController, Verdict};
-pub use daemon::{Service, TaskRecord};
+pub use daemon::{RecordStore, Service, TaskRecord};
+pub use dispatch::{RoutePolicy, ShardedService};
 pub use events::EventEngine;
 pub use metrics::Snapshot;
 pub use protocol::{parse_request, Request};
+pub use shard::{Placement, Shard, ShardLoad, ShardPool};

@@ -35,6 +35,19 @@ pub enum Request {
 }
 
 /// Parse one wire line.  `Ok(None)` = blank/comment line (skip).
+///
+/// # Examples
+///
+/// ```
+/// use dvfs_sched::service::{parse_request, Request};
+///
+/// assert!(matches!(
+///     parse_request(r#"{"op":"query","id":7}"#),
+///     Ok(Some(Request::Query { id: 7 }))
+/// ));
+/// assert!(matches!(parse_request("# a replay comment"), Ok(None)));
+/// assert!(parse_request(r#"{"op":"warp"}"#).is_err());
+/// ```
 pub fn parse_request(line: &str) -> Result<Option<Request>, String> {
     let line = line.trim();
     if line.is_empty() || line.starts_with('#') {

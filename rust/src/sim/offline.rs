@@ -13,10 +13,13 @@ use crate::util::{parallel_map, Rng, Summary};
 /// One offline run's outcome.
 #[derive(Clone, Copy, Debug)]
 pub struct OfflineOutcome {
+    /// The schedule's energy/usage report.
     pub report: OfflineReport,
     /// Non-DVFS l=1 reference energy of the same task set (Sec. 5.3).
     pub baseline_e: f64,
+    /// Tasks generated.
     pub n_tasks: usize,
+    /// Tasks classified deadline-prior by Algorithm 1.
     pub n_deadline_prior: usize,
 }
 
@@ -51,14 +54,23 @@ pub fn run_offline(
 /// Aggregated Monte-Carlo metrics for one (policy, U_J, dvfs) cell.
 #[derive(Clone, Debug, Default)]
 pub struct OfflineAggregate {
+    /// Runtime energy across repetitions.
     pub e_run: Summary,
+    /// Idle energy across repetitions.
     pub e_idle: Summary,
+    /// Total energy across repetitions.
     pub e_total: Summary,
+    /// Non-DVFS baseline across repetitions.
     pub baseline_e: Summary,
+    /// Energy saving vs the baseline.
     pub saving: Summary,
+    /// Pairs used across repetitions.
     pub pairs_used: Summary,
+    /// Servers used across repetitions.
     pub servers_used: Summary,
+    /// Total deadline violations.
     pub violations: u64,
+    /// Total θ-readjusted settings.
     pub readjusted: u64,
 }
 

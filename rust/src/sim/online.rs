@@ -28,13 +28,17 @@ use crate::util::{parallel_map, Rng};
 /// Which online policy to run.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum OnlinePolicyKind {
+    /// EDL with θ-readjustment (Algorithms 4-5).
     Edl,
+    /// Utilization bin packing (Algorithm 6).
     Bin,
 }
 
 impl OnlinePolicyKind {
+    /// Both online policies, for sweep loops.
     pub const ALL: [OnlinePolicyKind; 2] = [OnlinePolicyKind::Edl, OnlinePolicyKind::Bin];
 
+    /// Display name (`EDL` / `BIN`).
     pub fn name(&self) -> &'static str {
         match self {
             OnlinePolicyKind::Edl => "EDL",
@@ -54,15 +58,25 @@ impl OnlinePolicyKind {
 /// Outcome of one online simulation.
 #[derive(Clone, Copy, Debug, Default)]
 pub struct OnlineOutcome {
+    /// Runtime energy.
     pub e_run: f64,
+    /// Idle energy.
     pub e_idle: f64,
+    /// Turn-on overhead energy ω·Δ.
     pub e_overhead: f64,
+    /// Non-DVFS baseline total of the same workload.
     pub baseline_e: f64,
+    /// Tasks simulated.
     pub n_tasks: usize,
+    /// Servers that ever ran a task.
     pub servers_used: usize,
+    /// Pairs that ever ran a task.
     pub pairs_used: usize,
+    /// Deadline violations.
     pub violations: u64,
+    /// θ-readjusted placements.
     pub readjusted: u64,
+    /// Forced placements on an exhausted cluster.
     pub forced: u64,
     /// Pair turn-on events ω.
     pub turn_ons: u64,
@@ -73,6 +87,7 @@ pub struct OnlineOutcome {
 }
 
 impl OnlineOutcome {
+    /// `e_run + e_idle + e_overhead` (Eq. 7).
     pub fn e_total(&self) -> f64 {
         self.e_run + self.e_idle + self.e_overhead
     }
@@ -143,6 +158,61 @@ pub fn run_online_workload(
     );
     let slots = (engine.now.ceil() as u64).max(cfg.gen.horizon) + 1;
     outcome(&cluster, policy.as_ref(), workload, slots)
+}
+
+/// Run one online simulation through the **sharded** service: the
+/// workload is streamed slot by slot into a
+/// [`crate::service::ShardedService`] with a one-slot batch window, so
+/// each slot's arrivals are admitted and placed as one EDF batch —
+/// exactly the slot loop's per-slot semantics.
+///
+/// With `n_shards == 1` the outcome matches [`run_online_workload`] and
+/// the slot-loop oracle bit-for-bit (see
+/// `prop_sharded_one_shard_matches_slot_engine` in `tests/proptests.rs`);
+/// with more shards each partition schedules independently, which trades
+/// a little packing quality for multi-core throughput.  Shards always run
+/// the native solver.
+pub fn run_online_workload_sharded(
+    kind: OnlinePolicyKind,
+    workload: &OnlineWorkload,
+    dvfs: bool,
+    cfg: &SimConfig,
+    n_shards: usize,
+    route: crate::service::RoutePolicy,
+) -> Result<OnlineOutcome, String> {
+    let mut svc = crate::service::ShardedService::new(
+        cfg,
+        kind,
+        dvfs,
+        n_shards,
+        route,
+        1.0,
+        n_shards > 1,
+    )?;
+    for t in &workload.offline.tasks {
+        svc.submit(*t);
+    }
+    for r in &workload.slots {
+        for t in &workload.online.tasks[r.clone()] {
+            svc.submit(*t);
+        }
+    }
+    let snap = svc.drain_to_snapshot();
+    let slots = (snap.now.ceil() as u64).max(cfg.gen.horizon) + 1;
+    Ok(OnlineOutcome {
+        e_run: snap.e_run,
+        e_idle: snap.e_idle,
+        e_overhead: snap.e_overhead,
+        baseline_e: workload.baseline_energy(),
+        n_tasks: workload.total_tasks(),
+        servers_used: snap.servers_used,
+        pairs_used: snap.pairs_used,
+        violations: snap.violations,
+        readjusted: snap.readjusted,
+        forced: snap.forced,
+        turn_ons: snap.turn_ons,
+        slots,
+    })
 }
 
 /// The legacy per-minute slot loop (Algorithm 4 verbatim) — the oracle
@@ -322,6 +392,66 @@ mod tests {
             assert_eq!(ev.violations, sl.violations, "{kind:?} violations");
             assert_eq!(ev.readjusted, sl.readjusted, "{kind:?} readjusted");
         }
+    }
+
+    #[test]
+    fn sharded_one_shard_matches_event_engine_smoke() {
+        // the broad randomized oracle check lives in tests/proptests.rs;
+        // this is the fast in-module smoke version
+        let cfg = small_cfg();
+        let solver = Solver::native();
+        let mut rng = Rng::new(12);
+        let w = generate_online(&cfg.gen, &mut rng);
+        for kind in OnlinePolicyKind::ALL {
+            let ev = run_online_workload(kind, &w, true, &cfg, &solver);
+            let sh = run_online_workload_sharded(
+                kind,
+                &w,
+                true,
+                &cfg,
+                1,
+                crate::service::RoutePolicy::LeastLoaded,
+            )
+            .unwrap();
+            assert!((ev.e_run - sh.e_run).abs() <= 1e-9 * ev.e_run, "{kind:?} e_run");
+            assert!(
+                (ev.e_idle - sh.e_idle).abs() <= 1e-9 * ev.e_idle.max(1.0),
+                "{kind:?} e_idle: {} vs {}",
+                ev.e_idle,
+                sh.e_idle
+            );
+            assert_eq!(ev.turn_ons, sh.turn_ons, "{kind:?} turn_ons");
+            assert_eq!(ev.violations, sh.violations, "{kind:?} violations");
+            assert_eq!(ev.readjusted, sh.readjusted, "{kind:?} readjusted");
+            assert_eq!(ev.slots, sh.slots, "{kind:?} slots");
+        }
+    }
+
+    #[test]
+    fn sharded_multi_shard_completes_with_identical_run_energy() {
+        // θ = 1 (no readjustment) fixes every task's DVFS setting up
+        // front, so E_run is placement-independent: the 4-shard run must
+        // reproduce the unsharded E_run exactly even though its E_idle
+        // and server usage differ
+        let mut cfg = small_cfg();
+        cfg.theta = 1.0;
+        let solver = Solver::native();
+        let mut rng = Rng::new(13);
+        let w = generate_online(&cfg.gen, &mut rng);
+        let ev = run_online_workload(OnlinePolicyKind::Edl, &w, true, &cfg, &solver);
+        let sh = run_online_workload_sharded(
+            OnlinePolicyKind::Edl,
+            &w,
+            true,
+            &cfg,
+            4,
+            crate::service::RoutePolicy::LeastLoaded,
+        )
+        .unwrap();
+        assert_eq!(sh.n_tasks, ev.n_tasks);
+        assert!((ev.e_run - sh.e_run).abs() <= 1e-9 * ev.e_run);
+        assert_eq!(sh.violations, 0, "EDL with ample capacity per shard");
+        assert!(sh.e_idle > 0.0 && sh.e_overhead > 0.0);
     }
 
     #[test]

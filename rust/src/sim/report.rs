@@ -7,13 +7,18 @@ use crate::util::Summary;
 /// Generic energy aggregate (used by experiments for ad-hoc cells).
 #[derive(Clone, Debug, Default)]
 pub struct EnergyAgg {
+    /// Runtime energy.
     pub run: Summary,
+    /// Idle energy.
     pub idle: Summary,
+    /// Turn-on overhead energy.
     pub overhead: Summary,
+    /// Total energy.
     pub total: Summary,
 }
 
 impl EnergyAgg {
+    /// Fold one run's decomposition in.
     pub fn add(&mut self, run: f64, idle: f64, overhead: f64) {
         self.run.add(run);
         self.idle.add(idle);
@@ -25,21 +30,34 @@ impl EnergyAgg {
 /// Aggregate over online simulation repetitions.
 #[derive(Clone, Debug, Default)]
 pub struct OnlineAgg {
+    /// Runtime energy across repetitions.
     pub e_run: Summary,
+    /// Idle energy across repetitions.
     pub e_idle: Summary,
+    /// Overhead energy across repetitions.
     pub e_overhead: Summary,
+    /// Total energy across repetitions.
     pub e_total: Summary,
+    /// Non-DVFS baseline across repetitions.
     pub baseline_e: Summary,
+    /// Servers used across repetitions.
     pub servers_used: Summary,
+    /// Pairs used across repetitions.
     pub pairs_used: Summary,
+    /// Pair turn-on events ω across repetitions.
     pub turn_ons: Summary,
+    /// Total deadline violations.
     pub violations: u64,
+    /// Total θ-readjusted placements.
     pub readjusted: u64,
+    /// Total forced placements.
     pub forced: u64,
+    /// Repetitions folded in.
     pub reps: usize,
 }
 
 impl OnlineAgg {
+    /// Fold one outcome in.
     pub fn add(&mut self, o: &OnlineOutcome) {
         self.e_run.add(o.e_run);
         self.e_idle.add(o.e_idle);

@@ -84,10 +84,12 @@ pub struct OnlineWorkload {
 }
 
 impl OnlineWorkload {
+    /// Offline + online task count.
     pub fn total_tasks(&self) -> usize {
         self.offline.len() + self.online.len()
     }
 
+    /// Non-DVFS baseline energy of the whole workload.
     pub fn baseline_energy(&self) -> f64 {
         self.offline.baseline_energy() + self.online.baseline_energy()
     }

@@ -16,7 +16,9 @@ use crate::dvfs::TaskModel;
 /// A named application entry.
 #[derive(Clone, Copy, Debug)]
 pub struct App {
+    /// Benchmark name.
     pub name: &'static str,
+    /// Fitted power/performance model.
     pub model: TaskModel,
 }
 

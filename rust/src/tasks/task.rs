@@ -5,6 +5,7 @@ use crate::dvfs::TaskModel;
 /// One schedulable job `J_i = {a_i, d_i, P_i, T_i}` (Sec. 3.2.1).
 #[derive(Clone, Copy, Debug)]
 pub struct Task {
+    /// Client-chosen task id.
     pub id: usize,
     /// Index into [`crate::tasks::LIBRARY`] (which application this is).
     pub app: usize,
@@ -34,6 +35,7 @@ impl Task {
         self.deadline - self.arrival
     }
 
+    /// Structural validation: finite times, ordered window, u ∈ (0, 1].
     pub fn validate(&self) -> Result<(), String> {
         self.model.validate()?;
         // non-finite times would poison every downstream comparison (a
@@ -55,16 +57,19 @@ impl Task {
 /// A generated task set with its bookkeeping.
 #[derive(Clone, Debug, Default)]
 pub struct TaskSet {
+    /// The tasks, in generation order.
     pub tasks: Vec<Task>,
     /// Σ u_i (absolute, not normalized).
     pub u_sum: f64,
 }
 
 impl TaskSet {
+    /// Number of tasks.
     pub fn len(&self) -> usize {
         self.tasks.len()
     }
 
+    /// Whether the set is empty.
     pub fn is_empty(&self) -> bool {
         self.tasks.is_empty()
     }
@@ -80,6 +85,7 @@ impl TaskSet {
         self.tasks.iter().map(|t| t.t_star()).sum()
     }
 
+    /// Validate every task in the set.
     pub fn validate(&self) -> Result<(), String> {
         for t in &self.tasks {
             t.validate()?;

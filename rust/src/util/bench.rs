@@ -8,22 +8,32 @@ use std::time::{Duration, Instant};
 
 pub use std::hint::black_box as bb;
 
+/// One benchmark's timing summary.
 #[derive(Clone, Debug)]
 pub struct BenchResult {
+    /// Benchmark label.
     pub name: String,
+    /// Timed iterations taken.
     pub iters: usize,
+    /// Mean wall time per iteration.
     pub mean: Duration,
+    /// Median wall time.
     pub p50: Duration,
+    /// 95th-percentile wall time.
     pub p95: Duration,
+    /// Fastest iteration.
     pub min: Duration,
 }
 
 impl BenchResult {
+    /// Iterations per second at the mean time.
     pub fn per_sec(&self) -> f64 {
         1.0 / self.mean.as_secs_f64()
     }
 }
 
+/// Adaptive timing loop: warmup, then iterate until a time target or an
+/// iteration cap is hit.
 pub struct Bencher {
     warmup: usize,
     min_iters: usize,
@@ -43,6 +53,7 @@ impl Default for Bencher {
 }
 
 impl Bencher {
+    /// Short-budget variant for smoke runs.
     pub fn quick() -> Self {
         Bencher {
             warmup: 1,
@@ -83,6 +94,7 @@ impl Bencher {
     }
 }
 
+/// One stable plain-text line per result (bench logs diff cleanly).
 pub fn format_result(r: &BenchResult) -> String {
     format!(
         "bench {:<44} {:>10} mean {:>12} p50 {:>12} p95 {:>12} min ({} iters)",
@@ -95,6 +107,7 @@ pub fn format_result(r: &BenchResult) -> String {
     )
 }
 
+/// Human-scaled duration (`ns`/`µs`/`ms`/`s`).
 pub fn fmt_dur(d: Duration) -> String {
     let ns = d.as_nanos();
     if ns < 1_000 {

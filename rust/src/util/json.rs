@@ -6,17 +6,26 @@
 use std::collections::BTreeMap;
 use std::fmt::Write as _;
 
+/// A JSON value (objects keep keys sorted via `BTreeMap`, so rendering is
+/// deterministic).
 #[derive(Clone, Debug, PartialEq)]
 pub enum Json {
+    /// `null`.
     Null,
+    /// `true` / `false`.
     Bool(bool),
+    /// Any number (always carried as `f64`).
     Num(f64),
+    /// A string.
     Str(String),
+    /// An array.
     Arr(Vec<Json>),
+    /// An object.
     Obj(BTreeMap<String, Json>),
 }
 
 impl Json {
+    /// Parse one complete JSON value (trailing bytes are an error).
     pub fn parse(s: &str) -> Result<Json, String> {
         let mut p = Parser {
             b: s.as_bytes(),
@@ -31,6 +40,7 @@ impl Json {
         Ok(v)
     }
 
+    /// Object field lookup (`None` on non-objects and missing keys).
     pub fn get(&self, key: &str) -> Option<&Json> {
         match self {
             Json::Obj(m) => m.get(key),
@@ -38,6 +48,7 @@ impl Json {
         }
     }
 
+    /// The numeric value, if this is a number.
     pub fn as_f64(&self) -> Option<f64> {
         match self {
             Json::Num(x) => Some(*x),
@@ -45,6 +56,7 @@ impl Json {
         }
     }
 
+    /// The string value, if this is a string.
     pub fn as_str(&self) -> Option<&str> {
         match self {
             Json::Str(s) => Some(s),
@@ -52,6 +64,7 @@ impl Json {
         }
     }
 
+    /// The elements, if this is an array.
     pub fn as_arr(&self) -> Option<&[Json]> {
         match self {
             Json::Arr(v) => Some(v),
@@ -59,6 +72,7 @@ impl Json {
         }
     }
 
+    /// Pretty (indented) rendering.
     pub fn render(&self) -> String {
         let mut out = String::new();
         self.write(&mut out, 0);

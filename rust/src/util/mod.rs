@@ -18,3 +18,14 @@ pub use ord::OrdF64;
 pub use parallel::parallel_map;
 pub use rng::Rng;
 pub use stats::Summary;
+
+/// The simulator-wide deadline test: `finish ≤ deadline` up to the float
+/// tolerance that covers the PJRT f32 artifact path (~1e-5 relative
+/// rounding, far below any modeling error).  Every layer — cluster
+/// violation ledger, offline schedule reports, gang extension, service
+/// records and placements — must use this one predicate so a tolerance
+/// tweak can never make them disagree.
+#[inline]
+pub fn meets_deadline(finish: f64, deadline: f64) -> bool {
+    finish <= deadline * (1.0 + 1e-4) + 1e-6
+}

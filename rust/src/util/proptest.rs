@@ -9,9 +9,13 @@
 use super::rng::Rng;
 use std::fmt::Debug;
 
+/// Harness configuration.
 pub struct Config {
+    /// Random cases to draw.
     pub iters: usize,
+    /// Base seed (overridable via the `CASE_SEED` env var).
     pub seed: u64,
+    /// Budget of shrink candidates to try after a failure.
     pub max_shrink: usize,
 }
 

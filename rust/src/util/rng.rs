@@ -48,6 +48,7 @@ impl Rng {
         Rng { s }
     }
 
+    /// Next raw 64-bit output (xoshiro256**).
     #[inline]
     pub fn next_u64(&mut self) -> u64 {
         let s = &mut self.s;

@@ -12,6 +12,7 @@ pub struct Summary {
 }
 
 impl Summary {
+    /// Empty summary.
     pub fn new() -> Self {
         Summary {
             n: 0,
@@ -22,6 +23,7 @@ impl Summary {
         }
     }
 
+    /// Summarize an iterator of samples.
     pub fn from_iter<I: IntoIterator<Item = f64>>(xs: I) -> Self {
         let mut s = Self::new();
         for x in xs {
@@ -30,6 +32,7 @@ impl Summary {
         s
     }
 
+    /// Fold one sample in.
     pub fn add(&mut self, x: f64) {
         self.n += 1;
         let d = x - self.mean;
@@ -39,6 +42,7 @@ impl Summary {
         self.max = self.max.max(x);
     }
 
+    /// Combine two summaries (Chan's parallel-variance update).
     pub fn merge(&mut self, other: &Summary) {
         if other.n == 0 {
             return;
@@ -57,15 +61,19 @@ impl Summary {
         self.max = self.max.max(other.max);
     }
 
+    /// Sample count.
     pub fn n(&self) -> u64 {
         self.n
     }
+    /// Running mean.
     pub fn mean(&self) -> f64 {
         self.mean
     }
+    /// Smallest sample.
     pub fn min(&self) -> f64 {
         self.min
     }
+    /// Largest sample.
     pub fn max(&self) -> f64 {
         self.max
     }
@@ -77,6 +85,7 @@ impl Summary {
             self.m2 / (self.n - 1) as f64
         }
     }
+    /// Sample standard deviation.
     pub fn std(&self) -> f64 {
         self.var().sqrt()
     }
@@ -108,11 +117,14 @@ pub fn percentile(xs: &[f64], q: f64) -> f64 {
 /// A labelled (x, y±err) series: the atom of every figure reproduction.
 #[derive(Clone, Debug)]
 pub struct Series {
+    /// Legend label.
     pub label: String,
-    pub points: Vec<(f64, f64, f64)>, // (x, mean, ci95)
+    /// `(x, mean, ci95)` triples in x order.
+    pub points: Vec<(f64, f64, f64)>,
 }
 
 impl Series {
+    /// Empty series with a label.
     pub fn new(label: impl Into<String>) -> Self {
         Series {
             label: label.into(),
@@ -120,14 +132,17 @@ impl Series {
         }
     }
 
+    /// Append a summarized point.
     pub fn push(&mut self, x: f64, s: &Summary) {
         self.points.push((x, s.mean(), s.ci95()));
     }
 
+    /// Append a raw point (no error bar).
     pub fn push_val(&mut self, x: f64, y: f64) {
         self.points.push((x, y, 0.0));
     }
 
+    /// The mean values, in point order.
     pub fn ys(&self) -> Vec<f64> {
         self.points.iter().map(|p| p.1).collect()
     }

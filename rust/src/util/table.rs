@@ -6,6 +6,7 @@
 
 use std::fmt::Write as _;
 
+/// A titled, fixed-arity table of string cells.
 #[derive(Clone, Debug)]
 pub struct Table {
     title: String,
@@ -14,6 +15,7 @@ pub struct Table {
 }
 
 impl Table {
+    /// Empty table with a title and column headers.
     pub fn new(title: impl Into<String>, headers: &[&str]) -> Self {
         Table {
             title: title.into(),
@@ -22,6 +24,7 @@ impl Table {
         }
     }
 
+    /// Append one row (must match the header arity).
     pub fn row(&mut self, cells: Vec<String>) -> &mut Self {
         assert_eq!(
             cells.len(),
@@ -33,10 +36,12 @@ impl Table {
         self
     }
 
+    /// Rows appended so far.
     pub fn num_rows(&self) -> usize {
         self.rows.len()
     }
 
+    /// Render as an aligned ASCII table.
     pub fn render(&self) -> String {
         let ncol = self.headers.len();
         let mut width = vec![0usize; ncol];
@@ -74,6 +79,7 @@ impl Table {
         out
     }
 
+    /// Render as RFC-4180-ish CSV (quotes escaped by doubling).
     pub fn to_csv(&self) -> String {
         let esc = |s: &str| {
             if s.contains(',') || s.contains('"') || s.contains('\n') {
@@ -99,16 +105,19 @@ impl Table {
     }
 }
 
-/// Format helpers used across experiments.
+/// Two-decimal cell (format helper used across experiments).
 pub fn f2(x: f64) -> String {
     format!("{x:.2}")
 }
+/// Three-decimal cell.
 pub fn f3(x: f64) -> String {
     format!("{x:.3}")
 }
+/// Percentage cell (`0.364` → `36.4%`).
 pub fn pct(x: f64) -> String {
     format!("{:.1}%", 100.0 * x)
 }
+/// `mean±ci` cell (the CI half-width is omitted when zero).
 pub fn pm(mean: f64, ci: f64) -> String {
     if ci > 0.0 {
         format!("{mean:.2}±{ci:.2}")

@@ -7,7 +7,8 @@ use dvfs_sched::runtime::Solver;
 use dvfs_sched::sched::online::{EdlOnline, OnlinePolicy, SchedCtx};
 use dvfs_sched::sched::{prepare, schedule_offline, OfflinePolicy};
 use dvfs_sched::sim::online::{
-    run_online_workload, run_online_workload_slots, OnlinePolicyKind,
+    run_online_workload, run_online_workload_sharded, run_online_workload_slots,
+    OnlinePolicyKind,
 };
 use dvfs_sched::tasks::{generate_online, Task, LIBRARY};
 use dvfs_sched::util::proptest::{check, check_shrink, shrink_vec_removals, Config};
@@ -302,6 +303,75 @@ fn prop_event_engine_matches_slot_engine() {
                 return Err("policy stats diverge".into());
             }
             if ev.servers_used != sl.servers_used || ev.pairs_used != sl.pairs_used {
+                return Err("usage counters diverge".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_sharded_one_shard_matches_slot_engine() {
+    // The sharded service with a single shard and a one-slot batch window
+    // streams the workload through batched admission, EDF coalescing, the
+    // dispatcher, a worker thread, and the event core — and must still
+    // reproduce the paper's slot loop exactly, across random cluster
+    // shapes, utilizations, both policies, θ settings, and DVFS on/off.
+    let solver = Solver::native();
+    check(
+        "sharded(1 shard) == slot engine",
+        Config {
+            iters: 8,
+            ..Default::default()
+        },
+        |rng| rng.next_u64(),
+        |&seed| {
+            let mut r = Rng::new(seed);
+            let mut cfg = SimConfig::default();
+            cfg.gen.base_pairs = 8 + r.index(17);
+            cfg.gen.horizon = 60 + r.index(120) as u64;
+            cfg.gen.u_off = r.uniform(0.0, 0.8);
+            cfg.gen.u_on = r.uniform(0.1, 1.6);
+            cfg.cluster.total_pairs = 64;
+            cfg.cluster.pairs_per_server = [1usize, 2, 4, 8][r.index(4)];
+            cfg.theta = [1.0, 0.9, 0.8][r.index(3)];
+            let dvfs = r.f64() < 0.8;
+            let kind = if r.f64() < 0.5 {
+                OnlinePolicyKind::Edl
+            } else {
+                OnlinePolicyKind::Bin
+            };
+            let w = generate_online(&cfg.gen, &mut r);
+            let sh = run_online_workload_sharded(
+                kind,
+                &w,
+                dvfs,
+                &cfg,
+                1,
+                dvfs_sched::service::RoutePolicy::LeastLoaded,
+            )?;
+            let sl = run_online_workload_slots(kind, &w, dvfs, &cfg, &solver);
+
+            let close = |a: f64, b: f64| (a - b).abs() <= 1e-9 * a.abs().max(b.abs()).max(1.0);
+            if !close(sh.e_run, sl.e_run) {
+                return Err(format!("e_run {} vs {}", sh.e_run, sl.e_run));
+            }
+            if !close(sh.e_idle, sl.e_idle) {
+                return Err(format!("e_idle {} vs {}", sh.e_idle, sl.e_idle));
+            }
+            if !close(sh.e_overhead, sl.e_overhead) {
+                return Err(format!("e_overhead {} vs {}", sh.e_overhead, sl.e_overhead));
+            }
+            if sh.turn_ons != sl.turn_ons {
+                return Err(format!("turn_ons {} vs {}", sh.turn_ons, sl.turn_ons));
+            }
+            if sh.violations != sl.violations {
+                return Err(format!("violations {} vs {}", sh.violations, sl.violations));
+            }
+            if sh.readjusted != sl.readjusted || sh.forced != sl.forced {
+                return Err("policy stats diverge".into());
+            }
+            if sh.servers_used != sl.servers_used || sh.pairs_used != sl.pairs_used {
                 return Err("usage counters diverge".into());
             }
             Ok(())
