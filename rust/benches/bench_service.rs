@@ -2,6 +2,12 @@
 //! throughput (tasks/sec) and the event-vs-slot engine speedup on a
 //! sparse 24h trace (the workload shape where O(horizon) slot stepping
 //! wastes the most time; acceptance target: ≥ 3×).
+//!
+//! CI smoke mode: `cargo bench --bench bench_service -- --smoke
+//! --json BENCH_service.json --min-speedup 1.5` runs a reduced
+//! configuration, writes the throughput + shard-scaling numbers as a
+//! JSON artifact, and exits non-zero when the 4-shard speedup falls
+//! below the gate (best of three rounds, to ride out runner noise).
 
 use dvfs_sched::config::SimConfig;
 use dvfs_sched::runtime::Solver;
@@ -11,10 +17,87 @@ use dvfs_sched::sim::online::{
 };
 use dvfs_sched::tasks::{generate_online, Task, LIBRARY};
 use dvfs_sched::util::bench::{bb, fmt_dur, section, Bencher};
+use dvfs_sched::util::json::{num, obj, Json};
 use dvfs_sched::util::Rng;
 use std::time::Instant;
 
+/// Reduced-config CI options parsed from the bench's own argv.
+struct SmokeOpts {
+    /// Shrink the workloads and skip the slow non-gated sections.
+    smoke: bool,
+    /// Write `{throughput, shard_scaling, speedup_4_shards}` here.
+    json: Option<String>,
+    /// Fail (exit 1) when the 4-shard speedup is below this.
+    min_speedup: Option<f64>,
+}
+
+fn parse_opts() -> SmokeOpts {
+    let mut opts = SmokeOpts {
+        smoke: false,
+        json: None,
+        min_speedup: None,
+    };
+    let mut args = std::env::args().skip(1);
+    while let Some(a) = args.next() {
+        match a.as_str() {
+            "--smoke" => opts.smoke = true,
+            "--json" => opts.json = args.next(),
+            "--min-speedup" => {
+                opts.min_speedup = args.next().and_then(|v| v.parse().ok());
+            }
+            // `cargo bench` forwards its own harness flags; ignore them
+            _ => {}
+        }
+    }
+    opts
+}
+
+/// One shard-scaling measurement: tasks/sec at each shard count.
+fn shard_scaling_round(cfg: &SimConfig, n: usize, counts: &[usize]) -> Vec<(usize, f64)> {
+    let mut out = Vec::new();
+    for &shards in counts {
+        let mut svc = ShardedService::new(
+            cfg,
+            OnlinePolicyKind::Edl,
+            true,
+            shards,
+            RoutePolicy::LeastLoaded,
+            1.0,
+            true,
+        )
+        .expect("cluster splits into the requested shard counts");
+        let mut rng = Rng::new(11);
+        let t0 = Instant::now();
+        for i in 0..n {
+            let app = rng.index(LIBRARY.len());
+            let model = LIBRARY[app].model.scaled(rng.int_range(10, 50) as f64);
+            let u = rng.open01().max(0.02);
+            let arrival = (i / 64) as f64;
+            let task = Task {
+                id: i,
+                app,
+                model,
+                arrival,
+                deadline: arrival + model.t_star() / u,
+                u,
+            };
+            bb(svc.submit(task));
+        }
+        bb(svc.flush());
+        let dt = t0.elapsed();
+        out.push((shards, n as f64 / dt.as_secs_f64()));
+        let fin = svc.shutdown();
+        bb(fin);
+    }
+    out
+}
+
 fn main() {
+    let opts = parse_opts();
+    if opts.smoke {
+        run_smoke(&opts);
+        return;
+    }
     let b = Bencher::default();
     let solver = Solver::native();
 
@@ -186,4 +269,74 @@ fn main() {
         );
     }
     println!("  -> target: >= 2x at 4 shards on the 4-partition cluster");
+}
+
+/// CI smoke: a reduced shard-scaling run (best of 3 rounds) + optional
+/// JSON artifact + optional speedup gate.
+fn run_smoke(opts: &SmokeOpts) {
+    section("bench-smoke: sharded service scaling (reduced config)");
+    let mut cfg = SimConfig::default();
+    cfg.cluster.total_pairs = 256;
+    cfg.cluster.pairs_per_server = 64; // 4 servers → up to 4 shards
+    cfg.theta = 0.9;
+    let n = 3_000usize;
+    let counts = [1usize, 2, 4];
+    // best-of-3: CI runners are noisy and the gate must not flake
+    let mut best: Vec<(usize, f64)> = Vec::new();
+    for round in 0..3 {
+        let rates = shard_scaling_round(&cfg, n, &counts);
+        for (i, &(shards, rate)) in rates.iter().enumerate() {
+            if best.len() <= i {
+                best.push((shards, rate));
+            } else if rate > best[i].1 {
+                best[i].1 = rate;
+            }
+            println!("round {round}: {shards} shard(s) {rate:>9.0} tasks/sec");
+        }
+    }
+    let base = best[0].1;
+    let speedup4 = best
+        .iter()
+        .find(|&&(s, _)| s == 4)
+        .map(|&(_, r)| r / base)
+        .expect("4-shard row");
+    for &(shards, rate) in &best {
+        println!(
+            "best: {shards} shard(s) {rate:>9.0} tasks/sec ({:.2}x vs 1)",
+            rate / base
+        );
+    }
+    if let Some(path) = &opts.json {
+        let scaling: Vec<Json> = best
+            .iter()
+            .map(|&(shards, rate)| {
+                obj(vec![
+                    ("shards", num(shards as f64)),
+                    ("tasks_per_sec", num(rate)),
+                    ("speedup", num(rate / base)),
+                ])
+            })
+            .collect();
+        let doc = obj(vec![
+            ("bench", Json::Str("bench_service".to_string())),
+            ("mode", Json::Str("smoke".to_string())),
+            ("tasks", num(n as f64)),
+            ("rounds", num(3.0)),
+            ("throughput_1_shard", num(base)),
+            ("speedup_4_shards", num(speedup4)),
+            ("shard_scaling", Json::Arr(scaling)),
+        ]);
+        std::fs::write(path, doc.render_compact()).expect("writing bench JSON artifact");
+        println!("wrote {path}");
+    }
+    if let Some(min) = opts.min_speedup {
+        println!("gate: 4-shard speedup {speedup4:.2}x (minimum {min:.2}x)");
+        if speedup4 < min {
+            eprintln!(
+                "FAIL: 4-shard speedup {speedup4:.2}x below the {min:.2}x gate — \
+                 the shard scaling trajectory regressed"
+            );
+            std::process::exit(1);
+        }
+    }
 }

@@ -194,6 +194,15 @@ pub fn apply_overrides(
     if let Some(l) = args.opt_usize("l")? {
         cfg.cluster.pairs_per_server = l;
     }
+    if let Some(spec) = args.opt_str("cluster-spec") {
+        // heterogeneous fleet: `name:servers:power_scale:speed_scale,...`
+        // — server counts are per type, so the total pair count follows
+        // from the spec and the (possibly just overridden) `l`
+        let types = crate::config::parse_cluster_spec(&spec)?;
+        let servers: usize = types.iter().map(|t| t.servers).sum();
+        cfg.cluster.total_pairs = servers * cfg.cluster.pairs_per_server;
+        cfg.cluster.types = types;
+    }
     if let Some(u) = args.opt_f64("u-off")? {
         cfg.gen.u_off = u;
     }
@@ -292,6 +301,25 @@ mod tests {
         assert_eq!(o.shards, 1);
         assert!(o.steal);
         assert_eq!(o.route, crate::service::RoutePolicy::LeastLoaded);
+    }
+
+    #[test]
+    fn cluster_spec_override_builds_typed_fleet() {
+        let a = Args::parse(&argv(
+            "serve --l 4 --cluster-spec big:8:1.8:2.0,small:8:0.55:0.8",
+        ))
+        .unwrap();
+        let mut cfg = crate::config::SimConfig::default();
+        apply_overrides(&a, &mut cfg).unwrap();
+        a.finish().unwrap();
+        assert_eq!(cfg.cluster.types.len(), 2);
+        assert_eq!(cfg.cluster.total_pairs, 16 * 4);
+        assert_eq!(cfg.cluster.num_servers(), 16);
+        assert!(cfg.validate().is_ok());
+        // bad specs fail loudly
+        let b = Args::parse(&argv("serve --cluster-spec big:8")).unwrap();
+        let mut cfg = crate::config::SimConfig::default();
+        assert!(apply_overrides(&b, &mut cfg).is_err());
     }
 
     #[test]

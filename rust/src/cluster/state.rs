@@ -49,6 +49,14 @@ pub struct ShardView {
     /// The sub-cluster's configuration (same `l`, `P_idle`, Δ, ρ as the
     /// parent; `total_pairs` is this shard's slice).
     pub cfg: ClusterConfig,
+    /// The shard's GPU-type mix as `(global type index, servers of that
+    /// type)`, in global server order.  A homogeneous cluster yields one
+    /// entry `(0, num_servers)`.  Types are contiguous server runs
+    /// globally, so each shard's slice of a type is contiguous too.
+    pub types: Vec<(usize, usize)>,
+    /// GPU-type count of the WHOLE cluster (the global type axis length
+    /// for snapshot merging; 1 for a homogeneous cluster).
+    pub n_types: usize,
 }
 
 /// Partition a cluster config into `n_shards` disjoint [`ShardView`]s.
@@ -73,12 +81,37 @@ pub fn partition_cluster(
     }
     let base = n_servers / n_shards;
     let extra = n_servers % n_shards;
+    let type_ranges = cfg.type_server_ranges();
+    let type_specs = cfg.effective_types();
     let mut views = Vec::with_capacity(n_shards);
     let mut server_offset = 0;
     for index in 0..n_shards {
         let servers = base + usize::from(index < extra);
+        let shard_range = server_offset..server_offset + servers;
+        // clip the global type runs to this shard's server range; both are
+        // contiguous, so each intersection is a contiguous run
+        let mut types = Vec::new();
+        let mut sliced_specs = Vec::new();
+        for (ti, r) in type_ranges.iter().enumerate() {
+            let lo = r.start.max(shard_range.start);
+            let hi = r.end.min(shard_range.end);
+            if lo < hi {
+                types.push((ti, hi - lo));
+                sliced_specs.push(crate::config::GpuTypeSpec {
+                    servers: hi - lo,
+                    ..type_specs[ti].clone()
+                });
+            }
+        }
         let sub = ClusterConfig {
             total_pairs: servers * cfg.pairs_per_server,
+            // a homogeneous parent keeps homogeneous (empty) slices so the
+            // sub-config is bit-identical to the pre-typed layout
+            types: if cfg.types.is_empty() {
+                Vec::new()
+            } else {
+                sliced_specs
+            },
             ..cfg.clone()
         };
         views.push(ShardView {
@@ -86,6 +119,8 @@ pub fn partition_cluster(
             server_offset,
             pair_offset: server_offset * cfg.pairs_per_server,
             cfg: sub,
+            types,
+            n_types: type_ranges.len(),
         });
         server_offset += servers;
     }
@@ -130,6 +165,14 @@ pub struct Cluster {
     /// the daemon) clear it per batch; the one-shot simulators leave it to
     /// grow for the run (bounded by the task count) and ignore it.
     pub assign_log: Vec<(usize, f64, f64)>,
+    /// Side table for multi-pair (gang) reservations: `(assign_log index,
+    /// all reserved pair indices)`.  A gang contributes ONE `assign_log`
+    /// entry (its lowest pair), so the batch zip stays one-entry-per-task;
+    /// callers that need the full reservation look it up here.  Cleared
+    /// with the log ([`Cluster::clear_assign_log`]).
+    pub gang_log: Vec<(usize, Vec<usize>)>,
+    /// Gangs placed (multi-pair reservations; g = 1 tasks do not count).
+    pub gangs_placed: u64,
 }
 
 impl Cluster {
@@ -154,6 +197,8 @@ impl Cluster {
             idle_pairs: std::collections::BTreeSet::new(),
             last_assign: None,
             assign_log: Vec::new(),
+            gang_log: Vec::new(),
+            gangs_placed: 0,
         }
     }
 
@@ -209,6 +254,64 @@ impl Cluster {
             self.violations += 1;
         }
         mu
+    }
+
+    /// Reserve `pair_ids` (all on ONE server) for a gang task: every pair
+    /// starts at the common `start` and runs `dur` at per-replica power
+    /// `p`, so runtime energy is `g·p·dur` (the [`crate::ext::gang`]
+    /// model).  The reservation is atomic — one `assign_log` entry (the
+    /// lowest pair), one violation check, and all pairs share the same μ,
+    /// so the departure sweep frees the whole gang in one event round.
+    /// Returns μ.
+    pub fn assign_gang(
+        &mut self,
+        pair_ids: &[usize],
+        start: f64,
+        dur: f64,
+        p: f64,
+        deadline: f64,
+    ) -> f64 {
+        assert!(!pair_ids.is_empty(), "gang needs at least one pair");
+        let server = self.pairs[pair_ids[0]].server;
+        let g = pair_ids.len();
+        assert!(
+            pair_ids.iter().all(|&i| self.pairs[i].server == server),
+            "gang split across servers"
+        );
+        let mut mu = start;
+        for &i in pair_ids {
+            mu = self.pairs[i].assign(start, dur);
+            self.idle_pairs.remove(&i);
+            self.departures.push(Reverse((OrdF64(mu), i)));
+        }
+        let lead = *pair_ids.iter().min().expect("non-empty gang");
+        self.last_assign = Some((lead, start, mu));
+        self.gang_log.push((self.assign_log.len(), pair_ids.to_vec()));
+        self.assign_log.push((lead, start, mu));
+        self.e_run += g as f64 * p * dur;
+        self.gangs_placed += 1;
+        if !crate::util::meets_deadline(mu, deadline) {
+            self.violations += 1;
+        }
+        mu
+    }
+
+    /// Clear the per-batch assignment logs (single-pair and gang).
+    pub fn clear_assign_log(&mut self) {
+        self.assign_log.clear();
+        self.gang_log.clear();
+    }
+
+    /// The full pair list of the assignment at `assign_log[idx]`: the
+    /// gang reservation when one was recorded there, else the single
+    /// logged pair.
+    pub fn pairs_of_log_entry(&self, idx: usize) -> Vec<usize> {
+        for (gi, pairs) in &self.gang_log {
+            if *gi == idx {
+                return pairs.clone();
+            }
+        }
+        vec![self.assign_log[idx].0]
     }
 
     /// DRS sweep (Algorithm 4 line 3): turn off every on-server whose pairs
@@ -471,6 +574,70 @@ mod tests {
         assert!((nodes[1] - 37.0 * 10.0).abs() < 1e-9);
         let total: f64 = nodes.iter().sum();
         assert!((total - c.e_idle_at(5.0)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn assign_gang_reserves_pairs_atomically() {
+        let mut c = Cluster::new(cfg(4)); // servers of 4 pairs
+        c.turn_on_server(0, 0.0);
+        let mu = c.assign_gang(&[0, 1, 2], 0.0, 5.0, 100.0, 10.0);
+        assert_eq!(mu, 5.0);
+        assert_eq!(c.gangs_placed, 1);
+        assert_eq!(c.violations, 0);
+        // energy is g·P·t
+        assert!((c.e_run - 3.0 * 100.0 * 5.0).abs() < 1e-9);
+        // one log entry (lowest pair), full reservation in the side table
+        assert_eq!(c.assign_log, vec![(0, 0.0, 5.0)]);
+        assert_eq!(c.pairs_of_log_entry(0), vec![0, 1, 2]);
+        // the whole gang departs in one sweep
+        let departed = c.process_departures(5.0);
+        assert_eq!(departed.len(), 3);
+        assert_eq!(c.lowest_idle_pair(), Some(0));
+        c.clear_assign_log();
+        assert!(c.assign_log.is_empty() && c.gang_log.is_empty());
+    }
+
+    #[test]
+    #[should_panic(expected = "gang split across servers")]
+    fn assign_gang_rejects_cross_server_pairs() {
+        let mut c = Cluster::new(cfg(2));
+        c.turn_on_server(0, 0.0);
+        c.turn_on_server(1, 0.0);
+        c.assign_gang(&[1, 2], 0.0, 1.0, 100.0, 10.0);
+    }
+
+    #[test]
+    fn partition_carries_type_slices() {
+        let mut base = cfg(4);
+        base.total_pairs = 40; // 10 servers
+        base.types = vec![
+            crate::config::GpuTypeSpec {
+                name: "big".into(),
+                servers: 4,
+                power_scale: 1.8,
+                speed_scale: 2.0,
+            },
+            crate::config::GpuTypeSpec {
+                name: "small".into(),
+                servers: 6,
+                power_scale: 0.55,
+                speed_scale: 0.8,
+            },
+        ];
+        let views = partition_cluster(&base, 3).unwrap();
+        // 10 servers into 3 shards: 4, 3, 3; type 0 = servers 0..4
+        assert_eq!(views[0].types, vec![(0, 4)]);
+        assert_eq!(views[1].types, vec![(1, 3)]);
+        assert_eq!(views[2].types, vec![(1, 3)]);
+        for v in &views {
+            assert!(v.cfg.validate().is_ok());
+            let total: usize = v.types.iter().map(|&(_, s)| s).sum();
+            assert_eq!(total, v.cfg.num_servers());
+        }
+        // a shard can straddle a type boundary
+        let views = partition_cluster(&base, 2).unwrap();
+        assert_eq!(views[0].types, vec![(0, 4), (1, 1)]);
+        assert_eq!(views[1].types, vec![(1, 5)]);
     }
 
     #[test]

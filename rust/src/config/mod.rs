@@ -10,6 +10,78 @@ pub mod toml;
 use crate::dvfs::ScalingInterval;
 use toml::Doc;
 
+/// One GPU generation in a heterogeneous cluster: a contiguous run of
+/// servers whose pairs share power/speed scaling relative to the measured
+/// reference GPU (the paper's conclusion names mixed-generation clusters
+/// as the open real-world case; see [`crate::ext::hetero`]).
+#[derive(Clone, Debug, PartialEq)]
+pub struct GpuTypeSpec {
+    /// Type name, referenced by the protocol's `gpu_type` request field.
+    pub name: String,
+    /// Whole servers of this type (each of `pairs_per_server` pairs).
+    pub servers: usize,
+    /// Dynamic-power multiplier vs the measured reference GPU.
+    pub power_scale: f64,
+    /// Throughput multiplier (>1 = faster: time components shrink).
+    pub speed_scale: f64,
+}
+
+impl GpuTypeSpec {
+    /// The implicit single type of a homogeneous cluster (reference
+    /// scales, i.e. today's paper-faithful model).
+    pub fn reference(servers: usize) -> GpuTypeSpec {
+        GpuTypeSpec {
+            name: "default".to_string(),
+            servers,
+            power_scale: 1.0,
+            speed_scale: 1.0,
+        }
+    }
+}
+
+/// Parse a `--cluster-spec` string: comma-separated
+/// `name:servers:power_scale:speed_scale` entries, e.g.
+/// `bigGPU:8:1.8:2.0,smallGPU:8:0.55:0.8`.
+///
+/// # Examples
+///
+/// ```
+/// use dvfs_sched::config::parse_cluster_spec;
+///
+/// let types = parse_cluster_spec("bigGPU:8:1.8:2.0,smallGPU:8:0.55:0.8").unwrap();
+/// assert_eq!(types.len(), 2);
+/// assert_eq!(types[0].name, "bigGPU");
+/// assert_eq!(types[1].servers, 8);
+/// assert!(parse_cluster_spec("bad").is_err());
+/// ```
+pub fn parse_cluster_spec(spec: &str) -> Result<Vec<GpuTypeSpec>, String> {
+    let mut types = Vec::new();
+    for entry in spec.split(',') {
+        let parts: Vec<&str> = entry.split(':').collect();
+        if parts.len() != 4 {
+            return Err(format!(
+                "cluster-spec entry '{entry}' must be name:servers:power_scale:speed_scale"
+            ));
+        }
+        let servers: usize = parts[1]
+            .parse()
+            .map_err(|_| format!("cluster-spec '{entry}': bad server count '{}'", parts[1]))?;
+        let power_scale: f64 = parts[2]
+            .parse()
+            .map_err(|_| format!("cluster-spec '{entry}': bad power_scale '{}'", parts[2]))?;
+        let speed_scale: f64 = parts[3]
+            .parse()
+            .map_err(|_| format!("cluster-spec '{entry}': bad speed_scale '{}'", parts[3]))?;
+        types.push(GpuTypeSpec {
+            name: parts[0].to_string(),
+            servers,
+            power_scale,
+            speed_scale,
+        });
+    }
+    Ok(types)
+}
+
 /// Cluster shape + static-energy parameters (Sec. 5.1.2).
 #[derive(Clone, Debug, PartialEq)]
 pub struct ClusterConfig {
@@ -23,6 +95,10 @@ pub struct ClusterConfig {
     pub delta_overhead: f64,
     /// DRS threshold ρ (slots a server must stay idle before turn-off).
     pub rho: u64,
+    /// GPU types, each owning a contiguous run of whole servers (type 0
+    /// first).  Empty = homogeneous reference cluster (the paper's model;
+    /// every pair behaves like the measured GPU).
+    pub types: Vec<GpuTypeSpec>,
 }
 
 impl Default for ClusterConfig {
@@ -36,6 +112,7 @@ impl Default for ClusterConfig {
             delta_overhead,
             // paper: rho = floor(Δ / P_idle) = 2
             rho: (delta_overhead / p_idle).floor() as u64,
+            types: Vec::new(),
         }
     }
 }
@@ -52,7 +129,30 @@ impl ClusterConfig {
         self.total_pairs / self.pairs_per_server
     }
 
-    /// Reject impossible shapes (zero or non-dividing pair counts).
+    /// The effective GPU-type list: the configured `types`, or the single
+    /// implicit reference type for a homogeneous cluster.
+    pub fn effective_types(&self) -> Vec<GpuTypeSpec> {
+        if self.types.is_empty() {
+            vec![GpuTypeSpec::reference(self.num_servers())]
+        } else {
+            self.types.clone()
+        }
+    }
+
+    /// Per-type contiguous global server ranges, in type order (type 0
+    /// owns the lowest-numbered servers).
+    pub fn type_server_ranges(&self) -> Vec<std::ops::Range<usize>> {
+        let mut out = Vec::new();
+        let mut offset = 0;
+        for t in self.effective_types() {
+            out.push(offset..offset + t.servers);
+            offset += t.servers;
+        }
+        out
+    }
+
+    /// Reject impossible shapes (zero or non-dividing pair counts, GPU
+    /// types that do not tile the server list).
     pub fn validate(&self) -> Result<(), String> {
         if self.pairs_per_server == 0 {
             return Err("pairs_per_server must be >= 1".into());
@@ -65,6 +165,35 @@ impl ClusterConfig {
         }
         if self.p_idle < 0.0 || self.delta_overhead < 0.0 {
             return Err("p_idle and delta_overhead must be non-negative".into());
+        }
+        if !self.types.is_empty() {
+            let servers: usize = self.types.iter().map(|t| t.servers).sum();
+            if servers != self.num_servers() {
+                return Err(format!(
+                    "GPU types cover {servers} servers but the cluster has {}",
+                    self.num_servers()
+                ));
+            }
+            for t in &self.types {
+                if t.name.is_empty() {
+                    return Err("GPU type name must be non-empty".into());
+                }
+                if t.servers == 0 {
+                    return Err(format!("GPU type '{}' owns zero servers", t.name));
+                }
+                if !(t.power_scale > 0.0 && t.speed_scale > 0.0) {
+                    return Err(format!(
+                        "GPU type '{}': power/speed scales must be positive",
+                        t.name
+                    ));
+                }
+            }
+            let mut names: Vec<&str> = self.types.iter().map(|t| t.name.as_str()).collect();
+            names.sort_unstable();
+            names.dedup();
+            if names.len() != self.types.len() {
+                return Err("GPU type names must be unique".into());
+            }
         }
         Ok(())
     }
@@ -223,6 +352,9 @@ impl SimConfig {
             p_idle: doc.f64_or("cluster.p_idle", d.cluster.p_idle)?,
             delta_overhead: doc.f64_or("cluster.delta_overhead", d.cluster.delta_overhead)?,
             rho: doc.u64_or("cluster.rho", d.cluster.rho)?,
+            // GPU types are CLI-only (`--cluster-spec`): the TOML subset
+            // has no list-of-tables syntax to express them
+            types: Vec::new(),
         };
         let gen = GenConfig {
             u_off: doc.f64_or("gen.u_off", d.gen.u_off)?,
@@ -308,6 +440,39 @@ mod tests {
         let mut c = SimConfig::default();
         c.gen.scale_lo = 60;
         assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn cluster_spec_parses_and_validates() {
+        let types = parse_cluster_spec("big:4:1.8:2.0,small:12:0.55:0.8").unwrap();
+        assert_eq!(types.len(), 2);
+        assert_eq!(types[0].servers, 4);
+        assert_eq!(types[1].power_scale, 0.55);
+        let mut c = ClusterConfig::default().with_l(2);
+        c.total_pairs = 32; // 16 servers
+        c.types = types;
+        assert!(c.validate().is_ok());
+        assert_eq!(c.type_server_ranges(), vec![0..4, 4..16]);
+        // mismatched server totals rejected
+        c.types[0].servers = 5;
+        assert!(c.validate().is_err());
+        // duplicate names rejected
+        c.types[0].servers = 4;
+        c.types[1].name = "big".into();
+        assert!(c.validate().is_err());
+        assert!(parse_cluster_spec("big:4:1.8").is_err());
+        assert!(parse_cluster_spec("big:x:1.8:2.0").is_err());
+    }
+
+    #[test]
+    fn homogeneous_cluster_has_one_implicit_type() {
+        let c = ClusterConfig::default();
+        let types = c.effective_types();
+        assert_eq!(types.len(), 1);
+        assert_eq!(types[0].name, "default");
+        assert_eq!(types[0].servers, c.num_servers());
+        assert_eq!(types[0].power_scale, 1.0);
+        assert_eq!(c.type_server_ranges(), vec![0..c.num_servers()]);
     }
 
     #[test]

@@ -12,6 +12,114 @@ use crate::sched::offline::{group_servers, Schedule};
 use crate::sched::prepare::{Prepared, Priority};
 use crate::tasks::Task;
 
+/// The projection parameters of one GPU type — the part of [`GpuType`]
+/// shared with the streaming service, whose fleet comes from
+/// [`crate::config::GpuTypeSpec`] rather than a static table.
+#[derive(Clone, Copy, Debug)]
+pub struct TypeParams {
+    /// This type's V/f scaling interval.
+    pub interval: ScalingInterval,
+    /// Dynamic-power multiplier vs the measured reference GPU.
+    pub power_scale: f64,
+    /// Throughput multiplier (>1 = faster: time components shrink).
+    pub speed_scale: f64,
+}
+
+impl TypeParams {
+    /// Project a reference-GPU task model onto this type: power terms
+    /// scale up with `power_scale`, time terms shrink with `speed_scale`.
+    /// The reference type (both scales 1) is an exact identity.
+    pub fn project(&self, m: &TaskModel) -> TaskModel {
+        TaskModel {
+            p0: m.p0 * self.power_scale,
+            gamma: m.gamma * self.power_scale,
+            c: m.c * self.power_scale,
+            d: m.d / self.speed_scale,
+            t0: m.t0 / self.speed_scale,
+            delta: m.delta,
+        }
+    }
+}
+
+/// One type's outcome of [`select_type`].
+#[derive(Clone, Copy, Debug)]
+pub struct TypeChoice {
+    /// Index into the params list.
+    pub type_idx: usize,
+    /// The projected model on the chosen type.
+    pub model: TaskModel,
+    /// The chosen DVFS setting on the projection.
+    pub setting: Setting,
+    /// The unconstrained optimum on the projection.
+    pub free: Setting,
+    /// Whether any type could meet the window (false = fastest-type
+    /// fallback; the scheduler will surface the unavoidable violation).
+    pub feasible: bool,
+}
+
+/// Algorithm 1 lifted to a type selection: solve the DVFS optimum on
+/// every type's projection of `model` over `window`, and keep the
+/// feasible-minimum-energy `(type, setting)`.  When no type can meet the
+/// window, fall back to the fastest projection at its minimum time.
+///
+/// This is THE type-resolution rule: [`prepare_hetero`] (offline) and the
+/// streaming service's `gpu_type: "any"` resolution both call it, which
+/// is what the cross-check property test in `tests/integration_scenarios.rs`
+/// pins down.
+pub fn select_type(model: &TaskModel, window: f64, params: &[TypeParams]) -> TypeChoice {
+    let mut best: Option<TypeChoice> = None;
+    for (ti, ty) in params.iter().enumerate() {
+        let m = ty.project(model);
+        let free = solve_opt(&m, f64::INFINITY, &ty.interval, GRID_DEFAULT);
+        let setting = if free.feasible && free.t <= window {
+            free
+        } else {
+            solve_for_window(&m, window, &ty.interval, GRID_DEFAULT)
+        };
+        if !setting.feasible {
+            continue;
+        }
+        if best.as_ref().map_or(true, |b| setting.e < b.setting.e) {
+            best = Some(TypeChoice {
+                type_idx: ti,
+                model: m,
+                setting,
+                free,
+                feasible: true,
+            });
+        }
+    }
+    best.unwrap_or_else(|| {
+        // no type meets the window → fastest projection at its minimum
+        // time; the scheduler will surface the (unavoidable) violation
+        // rather than panicking
+        let (ti, ty) = params
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.speed_scale.partial_cmp(&b.1.speed_scale).unwrap())
+            .expect("empty type list");
+        let m = ty.project(model);
+        let fastest = crate::dvfs::solve_exact(
+            &m,
+            m.t_min(&ty.interval) * (1.0 + 1e-6),
+            &ty.interval,
+            GRID_DEFAULT,
+        );
+        let s = if fastest.feasible {
+            fastest
+        } else {
+            Setting::default_for(&m)
+        };
+        TypeChoice {
+            type_idx: ti,
+            model: m,
+            setting: s,
+            free: s,
+            feasible: false,
+        }
+    })
+}
+
 /// A GPU type in a heterogeneous cluster.
 #[derive(Clone, Copy, Debug)]
 pub struct GpuType {
@@ -28,16 +136,18 @@ pub struct GpuType {
 }
 
 impl GpuType {
+    /// The projection/solve parameters of this type.
+    pub fn params(&self) -> TypeParams {
+        TypeParams {
+            interval: self.interval,
+            power_scale: self.power_scale,
+            speed_scale: self.speed_scale,
+        }
+    }
+
     /// Project a reference-GPU task model onto this type.
     pub fn project(&self, m: &TaskModel) -> TaskModel {
-        TaskModel {
-            p0: m.p0 * self.power_scale,
-            gamma: m.gamma * self.power_scale,
-            c: m.c * self.power_scale,
-            d: m.d / self.speed_scale,
-            t0: m.t0 / self.speed_scale,
-            delta: m.delta,
-        }
+        self.params().project(m)
     }
 }
 
@@ -77,48 +187,18 @@ pub struct TypedPrepared {
 
 /// Solve every task against every type; keep the min-energy feasible pick.
 pub fn prepare_hetero(tasks: &[Task], fleet: &[GpuType]) -> Vec<TypedPrepared> {
+    let params: Vec<TypeParams> = fleet.iter().map(GpuType::params).collect();
     tasks
         .iter()
         .map(|task| {
-            let mut best: Option<(usize, TaskModel, Setting, Setting)> = None;
-            for (ti, ty) in fleet.iter().enumerate() {
-                let m = ty.project(&task.model);
-                let free = solve_opt(&m, f64::INFINITY, &ty.interval, GRID_DEFAULT);
-                let setting = if free.feasible && free.t <= task.window() {
-                    free
-                } else {
-                    solve_for_window(&m, task.window(), &ty.interval, GRID_DEFAULT)
-                };
-                if !setting.feasible {
-                    continue;
-                }
-                if best.as_ref().map_or(true, |(_, _, s, _)| setting.e < s.e) {
-                    best = Some((ti, m, setting, free));
-                }
-            }
-            // No type meets the deadline → fall back to the fastest
-            // projection at its minimum time; the scheduler will surface
-            // the (unavoidable) violation rather than panicking.
-            let (ti, m, setting, free) = best.unwrap_or_else(|| {
-                let (ti, _) = fleet
-                    .iter()
-                    .enumerate()
-                    .max_by(|a, b| a.1.speed_scale.partial_cmp(&b.1.speed_scale).unwrap())
-                    .expect("empty fleet");
-                let m = fleet[ti].project(&task.model);
-                let fastest = crate::dvfs::solve_exact(
-                    &m,
-                    m.t_min(&fleet[ti].interval) * (1.0 + 1e-6),
-                    &fleet[ti].interval,
-                    GRID_DEFAULT,
-                );
-                let s = if fastest.feasible {
-                    fastest
-                } else {
-                    Setting::default_for(&m)
-                };
-                (ti, m, s, s)
-            });
+            let choice = select_type(&task.model, task.window(), &params);
+            let TypeChoice {
+                type_idx: ti,
+                model: m,
+                setting,
+                free,
+                ..
+            } = choice;
             let class = if free.feasible && free.t <= task.window() {
                 Priority::EnergyPrior
             } else {

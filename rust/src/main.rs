@@ -79,6 +79,9 @@ fn print_help() {
          sharding flags (serve/replay): --shards N --route least-loaded|energy|round-robin\n               \
          --batch-window SLOTS --no-steal   (any of them opts into the\n               \
          sharded multi-threaded service with batched EDF admission)\n\n\
+         scenario flags (serve/replay): --cluster-spec name:servers:power:speed[,...]\n               \
+         (heterogeneous GPU types; submits may then carry \"gpu_type\"\n               \
+         and a gang width \"g\" — see docs/PROTOCOL.md)\n\n\
          common flags: --config FILE --reps N --seed S --theta X --l N\n               \
          --interval wide|narrow --backend native|pjrt --csv DIR --quick"
     );
@@ -310,11 +313,28 @@ fn run_service_session<R: std::io::BufRead>(
     cfg: &SimConfig,
     kind: OnlinePolicyKind,
     dvfs: bool,
-    opts: Option<ShardOpts>,
+    mut opts: Option<ShardOpts>,
     reader: R,
     source: &str,
 ) -> Result<(), String> {
     let stdout = std::io::stdout();
+    if !cfg.cluster.types.is_empty() && opts.is_none() {
+        // typed fleets need the typed-pool service — even a SINGLE
+        // configured type carries power/speed scales the plain daemon
+        // would ignore; a 1-shard window-0 sharded service keeps the
+        // unsharded daemon's per-submit response cadence
+        eprintln!(
+            "note: --cluster-spec names {} GPU type(s); serving through the \
+             sharded service (1 shard, per-submit flush)",
+            cfg.cluster.types.len()
+        );
+        opts = Some(ShardOpts {
+            shards: 1,
+            route: dvfs_sched::service::RoutePolicy::LeastLoaded,
+            window: 0.0,
+            steal: false,
+        });
+    }
     match opts {
         Some(o) => {
             if cfg.backend == dvfs_sched::config::Backend::Pjrt {

@@ -4,7 +4,7 @@
 
 use super::prepare::{prepare, Prepared};
 use crate::cluster::{Cluster, PairPower};
-use crate::dvfs::ScalingInterval;
+use crate::dvfs::{ScalingInterval, Setting};
 use crate::runtime::Solver;
 use crate::tasks::Task;
 use crate::util::OrdF64;
@@ -38,6 +38,16 @@ pub trait OnlinePolicy {
     fn name(&self) -> &'static str;
     fn assign(&mut self, t: f64, arrivals: &[Task], cluster: &mut Cluster, ctx: &SchedCtx);
     fn stats(&self) -> PolicyStats;
+
+    /// A placement happened outside [`OnlinePolicy::assign`] (a gang
+    /// reservation by [`place_gang_batch`]): `pair`'s queue now extends to
+    /// `busy_until`.  Policies with internal availability caches override
+    /// this to stay coherent; the default is a no-op.
+    fn note_external_assign(&mut self, _pair: usize, _busy_until: f64) {}
+
+    /// Fold externally-observed θ-readjustments / forced placements (gang
+    /// path) into the policy's stats so the snapshot counters stay whole.
+    fn bump_stats(&mut self, _readjusted: u64, _forced: u64) {}
 }
 
 /// Find the SPT pair: minimum effective availability `max(t, μ)` over all
@@ -203,6 +213,147 @@ impl OnlinePolicy for EdlOnline {
     fn stats(&self) -> PolicyStats {
         self.stats
     }
+
+    fn note_external_assign(&mut self, pair: usize, busy_until: f64) {
+        // keep the lazy SPT heap coherent: without a fresh entry the pair
+        // would vanish from the heap once its old entry goes stale
+        self.spt.push(pair, busy_until);
+    }
+
+    fn bump_stats(&mut self, readjusted: u64, forced: u64) {
+        self.stats.readjusted += readjusted;
+        self.stats.forced += forced;
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Gang placement (multi-pair co-located reservations)
+// ---------------------------------------------------------------------------
+
+/// Place one EDF-ordered batch of gang tasks (`g` co-located pairs each,
+/// the [`crate::ext::gang`] model lifted online): per gang, pick the
+/// powered-on server whose `g` least-loaded pairs admit the earliest
+/// common start; take the prepared setting if it meets the deadline,
+/// θ-readjust into the residual window otherwise, open a fresh server when
+/// neither fits, and force (a recorded violation) only on an exhausted
+/// cluster.  Reservations go through [`Cluster::assign_gang`] — `g` pairs
+/// booked atomically, freed together at the common μ — and the policy is
+/// kept coherent via [`OnlinePolicy::note_external_assign`].
+pub fn place_gang_batch(
+    t: f64,
+    gangs: &[(Task, usize)],
+    cluster: &mut Cluster,
+    policy: &mut dyn OnlinePolicy,
+    ctx: &SchedCtx,
+) {
+    if gangs.is_empty() {
+        return;
+    }
+    let l = cluster.l();
+    let tasks: Vec<Task> = gangs.iter().map(|&(k, _)| k).collect();
+    let mut prepared: Vec<(Prepared, usize)> = prepare(&tasks, ctx.solver, &ctx.iv, ctx.dvfs)
+        .into_iter()
+        .zip(gangs.iter().map(|&(_, g)| g))
+        .collect();
+    prepared.sort_by(|a, b| a.0.task.deadline.partial_cmp(&b.0.task.deadline).unwrap());
+    for (pr, g) in &prepared {
+        let g = *g;
+        debug_assert!(g >= 1 && g <= l, "gang width {g} vs l={l} checked at admission");
+        place_gang(pr, g, t, cluster, policy, ctx);
+    }
+}
+
+/// `(server, common start)` admitting the earliest `g`-wide start among
+/// powered-on servers: the g-th smallest pair availability per server.
+fn best_gang_server(cluster: &Cluster, g: usize, t: f64) -> Option<(usize, f64)> {
+    let mut best: Option<(usize, f64)> = None;
+    for s in 0..cluster.server_on.len() {
+        if !cluster.server_on[s] {
+            continue;
+        }
+        let mut avail: Vec<f64> = cluster
+            .server_pairs(s)
+            .map(|i| cluster.pairs[i].busy_until.max(t))
+            .collect();
+        avail.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let start = avail[g - 1]; // g pairs free once the g-th frees
+        if best.map_or(true, |(_, b)| start < b) {
+            best = Some((s, start));
+        }
+    }
+    best
+}
+
+/// Reserve the `g` least-loaded pairs of `server` from `start`, running
+/// at `setting`'s (time, power).
+fn reserve_gang(
+    cluster: &mut Cluster,
+    policy: &mut dyn OnlinePolicy,
+    server: usize,
+    g: usize,
+    start: f64,
+    setting: &Setting,
+    deadline: f64,
+) {
+    let mut order: Vec<usize> = cluster.server_pairs(server).collect();
+    order.sort_by(|&a, &b| {
+        cluster.pairs[a]
+            .busy_until
+            .partial_cmp(&cluster.pairs[b].busy_until)
+            .unwrap()
+            .then(a.cmp(&b))
+    });
+    let taken: Vec<usize> = order.into_iter().take(g).collect();
+    debug_assert!(taken
+        .iter()
+        .all(|&i| cluster.pairs[i].busy_until <= start + 1e-9));
+    let mu = cluster.assign_gang(&taken, start, setting.t, setting.p, deadline);
+    for &i in &taken {
+        policy.note_external_assign(i, mu);
+    }
+}
+
+fn place_gang(
+    pr: &Prepared,
+    g: usize,
+    t: f64,
+    cluster: &mut Cluster,
+    policy: &mut dyn OnlinePolicy,
+    ctx: &SchedCtx,
+) {
+    let d = pr.task.deadline;
+    let t_hat = pr.setting.t;
+
+    if let Some((server, start)) = best_gang_server(cluster, g, t) {
+        if d - start >= t_hat - 1e-9 {
+            reserve_gang(cluster, policy, server, g, start, &pr.setting, d);
+            return;
+        }
+        // θ-readjustment into the residual window (Algorithm 5 lines
+        // 11-14 carried over unchanged: the solve is width-independent)
+        if ctx.dvfs && ctx.theta < 1.0 && d - start >= pr.t_theta(ctx.theta) - 1e-9 {
+            let adj = ctx.solver.solve_exact(&pr.task.model, d - start, &ctx.iv);
+            if adj.feasible {
+                policy.bump_stats(1, 0);
+                reserve_gang(cluster, policy, server, g, start, &adj, d);
+                return;
+            }
+        }
+    }
+    // fresh server (whole-server turn-on keeps ω accounting unchanged)
+    if let Some(s) = (0..cluster.server_on.len()).find(|&s| !cluster.server_on[s]) {
+        cluster.turn_on_server(s, t);
+        for i in cluster.server_pairs(s) {
+            policy.note_external_assign(i, cluster.pairs[i].busy_until);
+        }
+        reserve_gang(cluster, policy, s, g, t, &pr.setting, d);
+    } else if let Some((server, start)) = best_gang_server(cluster, g, t) {
+        // cluster exhausted: forced placement, may violate
+        policy.bump_stats(0, 1);
+        reserve_gang(cluster, policy, server, g, start, &pr.setting, d);
+    } else {
+        unreachable!("cluster has zero servers");
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -317,6 +468,14 @@ impl OnlinePolicy for BinPacking {
 
     fn stats(&self) -> PolicyStats {
         self.stats
+    }
+
+    fn bump_stats(&mut self, readjusted: u64, forced: u64) {
+        // gang reservations bypass the utilization bins (their time-fit is
+        // checked against the cluster's busy_until directly), but their
+        // stats still land here so snapshots stay whole
+        self.stats.readjusted += readjusted;
+        self.stats.forced += forced;
     }
 }
 
@@ -446,6 +605,67 @@ mod tests {
         // long after the task completes, a prune releases the utilization
         bin.prune(1e6);
         assert!(bin.u_pair[0] < 1e-9);
+    }
+
+    #[test]
+    fn gang_batch_colocates_and_meets_deadlines() {
+        let solver = Solver::native();
+        let ctx = ctx(&solver, 0.9);
+        let cfg = ClusterConfig {
+            total_pairs: 32,
+            pairs_per_server: 4,
+            ..ClusterConfig::default()
+        };
+        let mut cluster = Cluster::new(cfg);
+        let mut edl = EdlOnline::new();
+        let gangs: Vec<(Task, usize)> = (0..10)
+            .map(|i| (mk_task(i, 0.0, 0.4, 10.0), 1 + i % 4))
+            .collect();
+        place_gang_batch(0.0, &gangs, &mut cluster, &mut edl, &ctx);
+        assert_eq!(cluster.violations, 0);
+        assert_eq!(cluster.gangs_placed, 10);
+        // every reservation is co-located on one server with g pairs
+        let l = cluster.l();
+        for (idx, pairs) in cluster
+            .gang_log
+            .iter()
+            .map(|(i, p)| (*i, p.clone()))
+            .collect::<Vec<_>>()
+        {
+            let (lead, _, _) = cluster.assign_log[idx];
+            assert_eq!(pairs.iter().min(), Some(&lead));
+            let server = pairs[0] / l;
+            assert!(pairs.iter().all(|&p| p / l == server));
+        }
+    }
+
+    #[test]
+    fn gang_placement_keeps_edl_spt_heap_coherent() {
+        // after a gang reservation, the EDL policy must still find the
+        // extended pairs (no phantom "no pair available" → premature
+        // server turn-on) — exercised by placing a single task next
+        let solver = Solver::native();
+        let ctx = ctx(&solver, 1.0);
+        let cfg = ClusterConfig {
+            total_pairs: 8,
+            pairs_per_server: 4,
+            ..ClusterConfig::default()
+        };
+        let mut cluster = Cluster::new(cfg);
+        let mut edl = EdlOnline::new();
+        place_gang_batch(
+            0.0,
+            &[(mk_task(0, 0.0, 0.5, 10.0), 4)],
+            &mut cluster,
+            &mut edl,
+            &ctx,
+        );
+        assert_eq!(cluster.servers_used(), 1);
+        // a loose single task queues behind the gang on server 0 instead
+        // of opening server 1
+        edl.assign(0.0, &[mk_task(1, 0.0, 0.05, 10.0)], &mut cluster, &ctx);
+        assert_eq!(cluster.servers_used(), 1, "SPT heap lost the gang pairs");
+        assert_eq!(cluster.violations, 0);
     }
 
     #[test]

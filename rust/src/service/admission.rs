@@ -25,6 +25,16 @@ pub enum Verdict {
     },
     /// The task failed structural validation (bad model / u / deadline).
     RejectInvalid(String),
+    /// The requested `gpu_type` names no configured type.
+    RejectUnknownType(String),
+    /// The gang width exceeds the co-location capacity: `g` pairs cannot
+    /// fit on one server of `l` pairs.
+    RejectGangWidth {
+        /// Requested gang width.
+        g: usize,
+        /// Pairs per server.
+        l: usize,
+    },
 }
 
 impl Verdict {
@@ -39,6 +49,8 @@ impl Verdict {
             Verdict::Admit => "admitted",
             Verdict::RejectInfeasible { .. } => "infeasible-deadline",
             Verdict::RejectInvalid(_) => "invalid-task",
+            Verdict::RejectUnknownType(_) => "unknown-gpu-type",
+            Verdict::RejectGangWidth { .. } => "gang-too-wide",
         }
     }
 }
@@ -78,6 +90,10 @@ pub struct AdmissionController {
     pub rejected_infeasible: u64,
     /// Tasks rejected by structural validation.
     pub rejected_invalid: u64,
+    /// Tasks rejected for naming an unconfigured GPU type.
+    pub rejected_type: u64,
+    /// Tasks rejected because the gang width exceeds one server.
+    pub rejected_gang: u64,
 }
 
 impl AdmissionController {
@@ -86,9 +102,28 @@ impl AdmissionController {
         AdmissionController::default()
     }
 
-    /// Total rejections (infeasible + invalid).
+    /// Total rejections (infeasible + invalid + type + gang).
     pub fn rejected(&self) -> u64 {
-        self.rejected_infeasible + self.rejected_invalid
+        self.rejected_infeasible + self.rejected_invalid + self.rejected_type + self.rejected_gang
+    }
+
+    /// Scenario half of the gate: the gang width must fit one server
+    /// (`g <= l`; co-location feasibility is a hard structural bound —
+    /// no placement can ever split a gang).  Counts the verdict on
+    /// rejection; admission counting is left to the feasibility check.
+    pub fn check_gang_width(&mut self, g: usize, l: usize) -> Result<(), Verdict> {
+        if g > l {
+            self.rejected_gang += 1;
+            return Err(Verdict::RejectGangWidth { g, l });
+        }
+        Ok(())
+    }
+
+    /// Record an unknown-GPU-type rejection (the name lookup itself lives
+    /// with the caller, which owns the configured fleet).
+    pub fn reject_unknown_type(&mut self, name: &str) -> Verdict {
+        self.rejected_type += 1;
+        Verdict::RejectUnknownType(name.to_string())
     }
 
     /// Structural validation half of the gate (bad model / u / non-finite
@@ -111,9 +146,17 @@ impl AdmissionController {
         now: f64,
         iv: &ScalingInterval,
     ) -> Verdict {
+        self.check_feasibility_bound(task, now, task.model.t_min(iv))
+    }
+
+    /// [`Self::check_feasibility`] against a caller-supplied execution
+    /// floor — the heterogeneous service passes the `t_min` of the task's
+    /// *projected* model on its resolved GPU type (the gang width does not
+    /// enter: the per-replica DVFS solve is width-independent, see
+    /// [`crate::ext::gang`]).
+    pub fn check_feasibility_bound(&mut self, task: &Task, now: f64, t_min: f64) -> Verdict {
         let start = now.max(task.arrival);
         let available = task.deadline - start;
-        let t_min = task.model.t_min(iv);
         // mirror the simulator's violation tolerance so a task the
         // scheduler could place exactly on the bound is not bounced;
         // negated form so a NaN window rejects instead of admitting
@@ -186,6 +229,37 @@ mod tests {
             a.evaluate(&t, late, &iv).reason(),
             "infeasible-deadline"
         );
+    }
+
+    #[test]
+    fn gang_width_and_type_gates_count_separately() {
+        let mut a = AdmissionController::new();
+        assert!(a.check_gang_width(4, 8).is_ok());
+        let v = a.check_gang_width(9, 8).unwrap_err();
+        assert_eq!(v.reason(), "gang-too-wide");
+        assert_eq!(a.rejected_gang, 1);
+        let v = a.reject_unknown_type("H100");
+        assert_eq!(v.reason(), "unknown-gpu-type");
+        assert_eq!(a.rejected_type, 1);
+        assert_eq!(a.rejected(), 2);
+    }
+
+    #[test]
+    fn projected_floor_tightens_feasibility() {
+        // a slow type's projected t_min can make an otherwise-feasible
+        // window infeasible — the typed gate must use the projection
+        let mut a = AdmissionController::new();
+        let iv = ScalingInterval::wide();
+        let t = mk_task(0.9);
+        let base_floor = t.model.t_min(&iv);
+        assert!(a.check_feasibility_bound(&t, 0.0, base_floor).admitted());
+        let slow_floor = base_floor * 10.0; // 0.1× speed projection
+        assert_eq!(
+            a.check_feasibility_bound(&t, 0.0, slow_floor).reason(),
+            "infeasible-deadline"
+        );
+        assert_eq!(a.admitted, 1);
+        assert_eq!(a.rejected_infeasible, 1);
     }
 
     #[test]

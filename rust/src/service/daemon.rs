@@ -21,7 +21,9 @@ use crate::sched::online::{OnlinePolicy, SchedCtx};
 use crate::service::admission::{AdmissionController, Verdict};
 use crate::service::events::EventEngine;
 use crate::service::metrics::Snapshot;
-use crate::service::protocol::{error_response, num, obj, parse_request, s, Request};
+use crate::service::protocol::{
+    error_response, num, obj, parse_request, s, Request, SubmitOpts, TypePref,
+};
 use crate::sim::online::OnlinePolicyKind;
 use crate::tasks::Task;
 use crate::util::json::Json;
@@ -34,12 +36,18 @@ use std::io::{BufRead, Write};
 const RECORD_CAP: usize = 100_000;
 
 /// Final state of one submitted task.
-#[derive(Clone, Copy, Debug)]
+#[derive(Clone, Debug)]
 pub struct TaskRecord {
     /// Whether the task passed admission.
     pub admitted: bool,
-    /// Global pair index the task ran on (`None` when rejected).
+    /// Global pair index the task ran on (`None` when rejected; the
+    /// lowest reserved pair for a gang).
     pub pair: Option<usize>,
+    /// Gang width (1 = the paper's base case).
+    pub g: usize,
+    /// All reserved global pair indices (empty when rejected; length `g`
+    /// when placed).
+    pub pairs: Vec<usize>,
     /// Execution start time.
     pub start: f64,
     /// Completion time μ.
@@ -49,6 +57,19 @@ pub struct TaskRecord {
 }
 
 impl TaskRecord {
+    /// A rejected-submission record (no placement).
+    pub fn rejected(at: f64, deadline: f64) -> TaskRecord {
+        TaskRecord {
+            admitted: false,
+            pair: None,
+            g: 1,
+            pairs: Vec::new(),
+            start: at,
+            finish: at,
+            deadline,
+        }
+    }
+
     /// `finish ≤ deadline` up to the simulator's float tolerance
     /// ([`crate::util::meets_deadline`]).
     pub fn deadline_met(&self) -> bool {
@@ -116,6 +137,13 @@ impl RecordStore {
                 fields.push(("start", num(r.start)));
                 fields.push(("finish", num(r.finish)));
                 fields.push(("deadline_met", Json::Bool(r.deadline_met())));
+                if r.g > 1 {
+                    fields.push(("g", num(r.g as f64)));
+                    fields.push((
+                        "pairs",
+                        Json::Arr(r.pairs.iter().map(|&p| num(p as f64)).collect()),
+                    ));
+                }
             }
         }
         obj(fields)
@@ -156,6 +184,9 @@ pub struct Service<'a> {
     cfg: SimConfig,
     dvfs: bool,
     records: RecordStore,
+    /// The names a `gpu_type` request field may match (the daemon's
+    /// homogeneous pool answers to its configured or implicit type name).
+    type_names: Vec<String>,
     /// Logical clock: max arrival seen (the engine clock can trail it
     /// when nothing was pending to process).
     now: f64,
@@ -174,6 +205,12 @@ impl<'a> Service<'a> {
             cfg: cfg.clone(),
             dvfs,
             records: RecordStore::new(),
+            type_names: cfg
+                .cluster
+                .effective_types()
+                .into_iter()
+                .map(|t| t.name)
+                .collect(),
             now: 0.0,
             drained: false,
         }
@@ -203,6 +240,12 @@ impl<'a> Service<'a> {
         self.records.get(id)
     }
 
+    /// Submit one task with the default (paper base-case) options — see
+    /// [`Self::submit_with`].
+    pub fn submit(&mut self, task: Task) -> Json {
+        self.submit_with(task, SubmitOpts::default())
+    }
+
     /// Submit one task: admission first, then — only if admitted —
     /// clock advance and immediate placement through the event core
     /// (departures and DRS events up to the arrival time are processed
@@ -210,11 +253,35 @@ impl<'a> Service<'a> {
     /// have).  Rejected submissions never mutate the clock or the
     /// cluster, so one garbage line (e.g. an absurd arrival timestamp)
     /// cannot poison the long-running service.
-    pub fn submit(&mut self, mut task: Task) -> Json {
+    ///
+    /// `opts` carries the scenario extensions: a gang width `g > 1`
+    /// reserves `g` co-located pairs atomically, and a named `gpu_type`
+    /// must match this daemon's (single) type — the unsharded daemon
+    /// models the paper's homogeneous cluster, so mixed-generation
+    /// fleets are served by [`crate::service::ShardedService`] (the CLI
+    /// upgrades automatically when `--cluster-spec` is given).
+    pub fn submit_with(&mut self, mut task: Task, opts: SubmitOpts) -> Json {
         let arrival = task.arrival.max(self.now());
         task.arrival = arrival;
         let id = task.id;
-        let verdict = self.admission.evaluate(&task, arrival, &self.cfg.interval);
+        let verdict = 'gate: {
+            if let Err(why) = self.admission.check_validity(&task) {
+                break 'gate Verdict::RejectInvalid(why);
+            }
+            if let TypePref::Named(ref name) = opts.gpu_type {
+                if !self.type_names.iter().any(|n| n == name) {
+                    break 'gate self.admission.reject_unknown_type(name);
+                }
+            }
+            if let Err(v) = self
+                .admission
+                .check_gang_width(opts.g, self.cfg.cluster.pairs_per_server)
+            {
+                break 'gate v;
+            }
+            self.admission
+                .check_feasibility(&task, arrival, &self.cfg.interval)
+        };
         let mut fields = vec![
             ("ok", Json::Bool(true)),
             ("op", s("submit")),
@@ -232,21 +299,29 @@ impl<'a> Service<'a> {
                 self.drained = false;
                 self.now = arrival;
                 let deadline = task.deadline;
+                let g = opts.g;
                 let ctx = self.ctx();
                 self.cluster.last_assign = None;
                 // per-submit clear keeps the batch log bounded for a
                 // long-running daemon
-                self.cluster.assign_log.clear();
-                self.engine.push_arrivals(arrival, vec![task]);
+                self.cluster.clear_assign_log();
+                if g == 1 {
+                    self.engine.push_arrivals(arrival, vec![task]);
+                } else {
+                    self.engine.push_gang_arrivals(arrival, vec![(task, g)]);
+                }
                 self.engine
                     .run_until(arrival, &mut self.cluster, self.policy.as_mut(), &ctx);
                 let (pair, start, finish) = self
                     .cluster
                     .last_assign
                     .expect("policy placed an admitted task");
+                let pairs = self.cluster.pairs_of_log_entry(0);
                 let rec = TaskRecord {
                     admitted: true,
                     pair: Some(pair),
+                    g,
+                    pairs: pairs.clone(),
                     start,
                     finish,
                     deadline,
@@ -255,36 +330,38 @@ impl<'a> Service<'a> {
                 fields.push(("start", num(start)));
                 fields.push(("finish", num(finish)));
                 fields.push(("deadline_met", Json::Bool(rec.deadline_met())));
+                if g > 1 {
+                    fields.push(("g", num(g as f64)));
+                    fields.push((
+                        "pairs",
+                        Json::Arr(pairs.iter().map(|&p| num(p as f64)).collect()),
+                    ));
+                }
                 self.records.remember(id, rec);
             }
             Verdict::RejectInfeasible { t_min, available } => {
                 fields.push(("t_min", num(t_min)));
                 fields.push(("available", num(available)));
-                self.records.remember(
-                    id,
-                    TaskRecord {
-                        admitted: false,
-                        pair: None,
-                        start: arrival,
-                        finish: arrival,
-                        deadline: task.deadline,
-                    },
-                );
+                self.records
+                    .remember(id, TaskRecord::rejected(arrival, task.deadline));
             }
             Verdict::RejectInvalid(ref why) => {
                 fields.push(("detail", s(why)));
                 // record it like any other rejection so a later query
                 // answers "rejected", not "unknown"
-                self.records.remember(
-                    id,
-                    TaskRecord {
-                        admitted: false,
-                        pair: None,
-                        start: arrival,
-                        finish: arrival,
-                        deadline: task.deadline,
-                    },
-                );
+                self.records
+                    .remember(id, TaskRecord::rejected(arrival, task.deadline));
+            }
+            Verdict::RejectUnknownType(ref name) => {
+                fields.push(("gpu_type", s(name)));
+                self.records
+                    .remember(id, TaskRecord::rejected(arrival, task.deadline));
+            }
+            Verdict::RejectGangWidth { g, l } => {
+                fields.push(("g", num(g as f64)));
+                fields.push(("l", num(l as f64)));
+                self.records
+                    .remember(id, TaskRecord::rejected(arrival, task.deadline));
             }
         }
         obj(fields)
@@ -333,7 +410,7 @@ impl<'a> Service<'a> {
     /// Dispatch one decoded request.  Returns (response, stop-serving).
     pub fn handle(&mut self, req: Request) -> (Json, bool) {
         match req {
-            Request::Submit(task) => (self.submit(task), false),
+            Request::Submit(task, opts) => (self.submit_with(task, opts), false),
             Request::Query { id } => (self.query(id), false),
             Request::Snapshot => (self.snapshot_json("snapshot"), false),
             Request::Shutdown => (self.shutdown(), true),
@@ -498,6 +575,71 @@ mod tests {
         let ok = svc.submit(mk_task(2, 6.0, 0.5, 10.0));
         assert_eq!(ok.get("admitted"), Some(&Json::Bool(true)));
         assert_eq!(ok.get("now").unwrap().as_f64(), Some(6.0));
+    }
+
+    #[test]
+    fn gang_submit_reserves_colocated_pairs() {
+        let mut cfg = small_cfg();
+        cfg.cluster.pairs_per_server = 4; // 8 servers of 4 pairs
+        let solver = Solver::native();
+        let mut svc = Service::new(&cfg, OnlinePolicyKind::Edl, true, &solver);
+        let opts = SubmitOpts {
+            gpu_type: TypePref::Any,
+            g: 3,
+        };
+        let r = svc.submit_with(mk_task(0, 0.0, 0.5, 10.0), opts);
+        assert_eq!(r.get("admitted"), Some(&Json::Bool(true)));
+        assert_eq!(r.get("g").unwrap().as_f64(), Some(3.0));
+        let pairs = r.get("pairs").unwrap().as_arr().unwrap();
+        assert_eq!(pairs.len(), 3);
+        // all on one server
+        let ids: Vec<usize> = pairs.iter().map(|p| p.as_f64().unwrap() as usize).collect();
+        assert!(ids.iter().all(|&p| p / 4 == ids[0] / 4));
+        let rec = svc.record(0).unwrap();
+        assert_eq!(rec.g, 3);
+        assert_eq!(rec.pairs, ids);
+        // query reports the gang too
+        let q = svc.query(0);
+        assert_eq!(q.get("g").unwrap().as_f64(), Some(3.0));
+        let fin = svc.shutdown();
+        assert_eq!(fin.get("gangs_placed").unwrap().as_f64(), Some(1.0));
+        assert_eq!(fin.get("violations").unwrap().as_f64(), Some(0.0));
+        // runtime energy is g·P·t — cross-check vs a width-1 submission
+        // of the same task on a fresh daemon
+        let mut solo = Service::new(&cfg, OnlinePolicyKind::Edl, true, &solver);
+        solo.submit(mk_task(0, 0.0, 0.5, 10.0));
+        let fin1 = solo.shutdown();
+        let e3 = fin.get("e_run").unwrap().as_f64().unwrap();
+        let e1 = fin1.get("e_run").unwrap().as_f64().unwrap();
+        assert!((e3 / e1 - 3.0).abs() < 1e-9, "E_run ratio {}", e3 / e1);
+    }
+
+    #[test]
+    fn oversized_gang_and_unknown_type_reject_typed() {
+        let cfg = small_cfg(); // l = 2
+        let solver = Solver::native();
+        let mut svc = Service::new(&cfg, OnlinePolicyKind::Edl, true, &solver);
+        let opts = SubmitOpts {
+            gpu_type: TypePref::Any,
+            g: 3,
+        };
+        let r = svc.submit_with(mk_task(0, 0.0, 0.5, 10.0), opts);
+        assert_eq!(r.get("admitted"), Some(&Json::Bool(false)));
+        assert_eq!(r.get("reason").unwrap().as_str(), Some("gang-too-wide"));
+        assert_eq!(r.get("l").unwrap().as_f64(), Some(2.0));
+        let named = |name: &str| SubmitOpts {
+            gpu_type: TypePref::Named(name.into()),
+            g: 1,
+        };
+        let r = svc.submit_with(mk_task(1, 0.0, 0.5, 10.0), named("H100"));
+        assert_eq!(r.get("reason").unwrap().as_str(), Some("unknown-gpu-type"));
+        // the daemon's single implicit type answers to "default"
+        let r = svc.submit_with(mk_task(2, 0.0, 0.5, 10.0), named("default"));
+        assert_eq!(r.get("admitted"), Some(&Json::Bool(true)));
+        let fin = svc.shutdown();
+        assert_eq!(fin.get("rejected_gang").unwrap().as_f64(), Some(1.0));
+        assert_eq!(fin.get("rejected_type").unwrap().as_f64(), Some(1.0));
+        assert_eq!(fin.get("admitted").unwrap().as_f64(), Some(1.0));
     }
 
     #[test]

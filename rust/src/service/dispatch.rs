@@ -16,11 +16,21 @@
 //!   of `0` disables coalescing: each submit flushes alone, which makes a
 //!   1-shard service event-for-event identical to the unsharded daemon
 //!   (property-tested in `tests/integration_service.rs`).
-//! * **Routing.**  The EDF batch is split into chunks and routed by a
-//!   pluggable [`RoutePolicy`] working from per-shard load summaries —
-//!   least-loaded by backlog, energy-greedy (prefer shards that can absorb
-//!   work without Δ turn-on costs, using the `t_min` bound as the work
-//!   estimate), or round-robin.
+//! * **Routing.**  The EDF batch is split into chunks *per resolved GPU
+//!   type* and routed by a pluggable [`RoutePolicy`] working from
+//!   per-shard load summaries — least-loaded by backlog, energy-greedy
+//!   (prefer shards that can absorb work without Δ turn-on costs, using
+//!   the `t_min` bound as the work estimate), or round-robin — restricted
+//!   to shards owning servers of the chunk's type.  Routing state is kept
+//!   live within a flush: replies landing mid-flush refresh the loads,
+//!   and un-acknowledged chunks count as in-flight pair/work deltas, so
+//!   energy-greedy sees in-flight turn-on decisions instead of the last
+//!   flush's snapshot.
+//! * **Scenarios.**  Submissions may name a GPU type (or `"any"`,
+//!   resolved per task to the feasible-minimum-energy type via
+//!   [`crate::ext::hetero::select_type`]) and a gang width `g ≥ 1`;
+//!   unknown names and widths over one server bounce at the door with
+//!   typed reasons (`unknown-gpu-type`, `gang-too-wide`).
 //! * **Work stealing.**  Idle workers steal queued chunks from backed-up
 //!   siblings (see [`crate::service::shard`]), trading strict routing
 //!   fidelity for throughput under skew.
@@ -30,13 +40,16 @@
 //! parallelize.
 
 use crate::cluster::partition_cluster;
-use crate::config::SimConfig;
+use crate::config::{GpuTypeSpec, SimConfig};
 use crate::dvfs::ScalingInterval;
+use crate::ext::hetero::{select_type, TypeParams};
 use crate::service::admission::{AdmissionController, Verdict};
 use crate::service::daemon::{RecordStore, TaskRecord};
 use crate::service::metrics::Snapshot;
-use crate::service::protocol::{error_response, num, obj, parse_request, s, Request};
-use crate::service::shard::{Placement, ShardJob, ShardLoad, ShardPool};
+use crate::service::protocol::{
+    error_response, num, obj, parse_request, s, Request, SubmitOpts, TypePref,
+};
+use crate::service::shard::{BatchReply, Placement, ServiceTask, ShardJob, ShardLoad, ShardPool};
 use crate::sim::online::OnlinePolicyKind;
 use crate::tasks::Task;
 use crate::util::json::Json;
@@ -122,17 +135,38 @@ pub struct ShardedService {
     rr_next: usize,
     /// Last load summary each shard reported.
     loads: Vec<ShardLoad>,
-    /// `t_min` work dispatched to each shard during the current flush.
+    /// `t_min` work dispatched to each shard during the current flush and
+    /// not yet acknowledged by a reply.
     inflight: Vec<f64>,
+    /// Pairs' worth of unacknowledged work (Σ gang widths) routed to each
+    /// shard this flush — the in-flight delta that lets energy-greedy
+    /// routing see turn-on decisions before the next load report lands.
+    inflight_pairs: Vec<usize>,
+    /// Queue depth each shard last reported (jobs still pending behind
+    /// its freshest load summary).
+    queue_depth: Vec<usize>,
     /// Admission slot width; `0` disables coalescing.
     window: f64,
     /// The pending coalesced batch, in submission order.
-    batch: Vec<Task>,
+    batch: Vec<(Task, SubmitOpts)>,
     /// Slot key of the pending batch (valid while `batch` is non-empty).
     batch_slot: f64,
     admission: AdmissionController,
     records: RecordStore,
     iv: ScalingInterval,
+    /// The cluster's GPU types in global order (one implicit reference
+    /// type for a homogeneous cluster).
+    fleet: Vec<GpuTypeSpec>,
+    /// Per-type projection/solve parameters, aligned with `fleet`.
+    fleet_params: Vec<TypeParams>,
+    /// Global type indices each shard owns (routing eligibility).
+    shard_types: Vec<Vec<usize>>,
+    /// Whether the cluster declares explicit GPU types (`--cluster-spec`);
+    /// false = the implicit reference type (admitted responses then omit
+    /// the `gpu_type` field, keeping the oracle schema).
+    typed: bool,
+    /// Pairs per server (the gang co-location bound).
+    l: usize,
     /// Logical clock: advanced by admitted flushes and by drains.
     now: f64,
     drained: bool,
@@ -160,6 +194,19 @@ impl ShardedService {
             return Err(format!("batch window must be >= 0, got {window}"));
         }
         let views = partition_cluster(&cfg.cluster, n_shards)?;
+        let shard_types: Vec<Vec<usize>> = views
+            .iter()
+            .map(|v| v.types.iter().map(|&(ti, _)| ti).collect())
+            .collect();
+        let fleet = cfg.cluster.effective_types();
+        let fleet_params: Vec<TypeParams> = fleet
+            .iter()
+            .map(|t| TypeParams {
+                interval: cfg.interval,
+                power_scale: t.power_scale,
+                speed_scale: t.speed_scale,
+            })
+            .collect();
         let pool = ShardPool::new(views, kind, dvfs, cfg.interval, cfg.theta, steal);
         Ok(ShardedService {
             pool,
@@ -167,12 +214,19 @@ impl ShardedService {
             rr_next: 0,
             loads: vec![ShardLoad::default(); n_shards],
             inflight: vec![0.0; n_shards],
+            inflight_pairs: vec![0; n_shards],
+            queue_depth: vec![0; n_shards],
             window,
             batch: Vec::new(),
             batch_slot: 0.0,
             admission: AdmissionController::new(),
             records: RecordStore::new(),
             iv: cfg.interval,
+            fleet,
+            fleet_params,
+            shard_types,
+            typed: !cfg.cluster.types.is_empty(),
+            l: cfg.cluster.pairs_per_server,
             now: 0.0,
             drained: false,
         })
@@ -203,42 +257,62 @@ impl ShardedService {
         self.records.get(id)
     }
 
+    /// Submit one task with the default (paper base-case) options — see
+    /// [`Self::submit_with`].
+    pub fn submit(&mut self, task: Task) -> Vec<Json> {
+        self.submit_with(task, SubmitOpts::default())
+    }
+
     /// Submit one task.  Returns the response lines *released* by this
-    /// call: a structurally invalid task flushes the pending batch and is
-    /// then bounced (responses stay in request order); an out-of-slot
-    /// arrival first flushes the pending batch (those responses come
-    /// first, in their submission order); the new task's own response is
-    /// deferred to its batch's flush unless the window is `0`.
-    pub fn submit(&mut self, mut task: Task) -> Vec<Json> {
+    /// call: a structurally invalid task — or one naming an unknown GPU
+    /// type or an over-wide gang — flushes the pending batch and is then
+    /// bounced (responses stay in request order); an out-of-slot arrival
+    /// first flushes the pending batch (those responses come first, in
+    /// their submission order); the new task's own response is deferred
+    /// to its batch's flush unless the window is `0`.
+    pub fn submit_with(&mut self, mut task: Task, opts: SubmitOpts) -> Vec<Json> {
         let mut out = Vec::new();
         // clamp before validating, exactly like the daemon: a NaN arrival
         // clamps to the clock (and is then judged on its other fields)
         let arrival = task.arrival.max(self.now);
         task.arrival = arrival;
-        // structural validation up front: garbage never enters a batch
-        // and never moves the clock.  The pending batch IS flushed first,
-        // so response lines keep strict request order even for a bounce.
-        if let Err(why) = self.admission.check_validity(&task) {
+        // structural gates up front: garbage never enters a batch and
+        // never moves the clock.  The pending batch IS flushed first, so
+        // response lines keep strict request order even for a bounce.
+        let bounce: Option<Vec<(&'static str, Json)>> =
+            if let Err(why) = self.admission.check_validity(&task) {
+                Some(vec![("reason", s("invalid-task")), ("detail", s(&why))])
+            } else if let TypePref::Named(ref name) = opts.gpu_type {
+                if !self.fleet.iter().any(|t| &t.name == name) {
+                    let v = self.admission.reject_unknown_type(name);
+                    Some(vec![("reason", s(v.reason())), ("gpu_type", s(name))])
+                } else {
+                    None
+                }
+            } else {
+                None
+            };
+        let bounce = bounce.or_else(|| match self.admission.check_gang_width(opts.g, self.l) {
+            Ok(()) => None,
+            Err(v) => Some(vec![
+                ("reason", s(v.reason())),
+                ("g", num(opts.g as f64)),
+                ("l", num(self.l as f64)),
+            ]),
+        });
+        if let Some(extra) = bounce {
             out.extend(self.flush());
-            self.records.remember(
-                task.id,
-                TaskRecord {
-                    admitted: false,
-                    pair: None,
-                    start: arrival,
-                    finish: arrival,
-                    deadline: task.deadline,
-                },
-            );
-            out.push(obj(vec![
+            self.records
+                .remember(task.id, TaskRecord::rejected(arrival, task.deadline));
+            let mut fields = vec![
                 ("ok", Json::Bool(true)),
                 ("op", s("submit")),
                 ("id", num(task.id as f64)),
                 ("now", num(self.now)),
                 ("admitted", Json::Bool(false)),
-                ("reason", s("invalid-task")),
-                ("detail", s(&why)),
-            ]));
+            ];
+            fields.extend(extra);
+            out.push(obj(fields));
             return out;
         }
         if self.window > 0.0 {
@@ -247,20 +321,23 @@ impl ShardedService {
                 out.extend(self.flush());
             }
             self.batch_slot = slot;
-            self.batch.push(task);
+            self.batch.push((task, opts));
         } else {
-            self.batch.push(task);
+            self.batch.push((task, opts));
             out.extend(self.flush());
         }
         out
     }
 
-    /// Flush the pending batch: feasibility-check every member at the
+    /// Flush the pending batch: resolve every member's GPU type (`"any"`
+    /// via the feasible-minimum-energy rule of
+    /// [`crate::ext::hetero::select_type`]), feasibility-check it at the
     /// batch's flush time (the newest clamped arrival in the batch — the
     /// time the batch actually places at, so admission can never wave
-    /// through a deadline that is already unmeetable), EDF-sort the
-    /// admitted set, dispatch it across the shards, and return one
-    /// response per batch member in submission order.
+    /// through a deadline that is already unmeetable) against its
+    /// *projected* `t_min`, EDF-sort the admitted set, dispatch it across
+    /// the shards per type, and return one response per batch member in
+    /// submission order.
     pub fn flush(&mut self) -> Vec<Json> {
         if self.batch.is_empty() {
             return Vec::new();
@@ -269,32 +346,54 @@ impl ShardedService {
         // re-clamp: an out-of-order submit may have been buffered before
         // a later-slot flush advanced the clock past it (its window
         // shrinks — exactly what a late submission means)
-        for task in &mut batch {
+        for (task, _) in &mut batch {
             task.arrival = task.arrival.max(self.now);
         }
         // the batch places at its newest arrival; coalescing costs each
         // member at most one window of its deadline slack
-        let t = batch
-            .iter()
-            .map(|k| k.arrival)
-            .fold(self.now, f64::max);
+        let t = batch.iter().map(|(k, _)| k.arrival).fold(self.now, f64::max);
         let n = batch.len();
         let mut responses: Vec<Option<Json>> = (0..n).map(|_| None).collect();
-        let mut admitted: Vec<(usize, Task)> = Vec::new();
-        for (idx, task) in batch.into_iter().enumerate() {
-            match self.admission.check_feasibility(&task, t, &self.iv) {
-                Verdict::Admit => admitted.push((idx, task)),
+        let mut admitted: Vec<(usize, ServiceTask)> = Vec::new();
+        for (idx, (task, opts)) in batch.into_iter().enumerate() {
+            // resolve the GPU type at flush time (named types were
+            // validated at the door; `any` takes the feasible-minimum-
+            // energy projection over the effective window — with a single
+            // type the selection is trivially that type, no solve needed)
+            let type_idx = match opts.gpu_type {
+                TypePref::Named(ref name) => self
+                    .fleet
+                    .iter()
+                    .position(|ty| &ty.name == name)
+                    .expect("validated at submit"),
+                TypePref::Any if self.fleet.len() == 1 => 0,
+                TypePref::Any => {
+                    let window = task.deadline - t.max(task.arrival);
+                    select_type(&task.model, window, &self.fleet_params).type_idx
+                }
+            };
+            // feasibility against the resolved type's projected execution
+            // floor (the gang width does not enter: the DVFS solve is
+            // width-independent).  The reference type skips the identity
+            // projection so the homogeneous path stays bit-exact.
+            let params = &self.fleet_params[type_idx];
+            let t_min = if params.power_scale == 1.0 && params.speed_scale == 1.0 {
+                task.model.t_min(&self.iv)
+            } else {
+                params.project(&task.model).t_min(&self.iv)
+            };
+            match self.admission.check_feasibility_bound(&task, t, t_min) {
+                Verdict::Admit => admitted.push((
+                    idx,
+                    ServiceTask {
+                        task,
+                        type_idx,
+                        g: opts.g,
+                    },
+                )),
                 Verdict::RejectInfeasible { t_min, available } => {
-                    self.records.remember(
-                        task.id,
-                        TaskRecord {
-                            admitted: false,
-                            pair: None,
-                            start: task.arrival,
-                            finish: task.arrival,
-                            deadline: task.deadline,
-                        },
-                    );
+                    self.records
+                        .remember(task.id, TaskRecord::rejected(task.arrival, task.deadline));
                     responses[idx] = Some(obj(vec![
                         ("ok", Json::Bool(true)),
                         ("op", s("submit")),
@@ -306,7 +405,7 @@ impl ShardedService {
                         ("available", num(available)),
                     ]));
                 }
-                Verdict::RejectInvalid(_) => unreachable!("validity checked at submit"),
+                _ => unreachable!("validity/type/gang checked at submit"),
             }
         }
         if !admitted.is_empty() {
@@ -315,17 +414,18 @@ impl ShardedService {
             self.drained = false;
             // EDF within the coalesced batch; the sort is stable, so
             // deadline ties keep submission order
-            admitted.sort_by(|a, b| a.1.deadline.partial_cmp(&b.1.deadline).unwrap());
+            admitted.sort_by(|a, b| a.1.task.deadline.partial_cmp(&b.1.task.deadline).unwrap());
             for (orig_idx, p) in self.dispatch(t, &admitted) {
                 let rec = TaskRecord {
                     admitted: true,
                     pair: Some(p.pair),
+                    g: p.pairs.len(),
+                    pairs: p.pairs.clone(),
                     start: p.start,
                     finish: p.finish,
                     deadline: p.deadline,
                 };
-                self.records.remember(p.id, rec);
-                responses[orig_idx] = Some(obj(vec![
+                let mut fields = vec![
                     ("ok", Json::Bool(true)),
                     ("op", s("submit")),
                     ("id", num(p.id as f64)),
@@ -337,7 +437,19 @@ impl ShardedService {
                     ("finish", num(p.finish)),
                     ("deadline_met", Json::Bool(rec.deadline_met())),
                     ("shard", num(p.shard as f64)),
-                ]));
+                ];
+                if self.typed {
+                    fields.push(("gpu_type", s(&self.fleet[p.type_idx].name)));
+                }
+                if p.pairs.len() > 1 {
+                    fields.push(("g", num(p.pairs.len() as f64)));
+                    fields.push((
+                        "pairs",
+                        Json::Arr(p.pairs.iter().map(|&q| num(q as f64)).collect()),
+                    ));
+                }
+                self.records.remember(p.id, rec);
+                responses[orig_idx] = Some(obj(fields));
             }
         }
         let out: Vec<Json> = responses.into_iter().flatten().collect();
@@ -347,8 +459,12 @@ impl ShardedService {
 
     /// Route the EDF-ordered admitted batch across the shards in chunks
     /// and collect every placement, tagged with the original submission
-    /// index.
-    fn dispatch(&mut self, t: f64, admitted: &[(usize, Task)]) -> Vec<(usize, Placement)> {
+    /// index.  Chunks are formed *per resolved GPU type* (stable within
+    /// the EDF order) and only routed to shards owning servers of that
+    /// type; already-arrived replies are folded in between sends, so
+    /// later routing decisions within one big flush see fresh loads
+    /// instead of the last flush's snapshot.
+    fn dispatch(&mut self, t: f64, admitted: &[(usize, ServiceTask)]) -> Vec<(usize, Placement)> {
         let n_shards = self.pool.n_shards();
         let chunk = if n_shards == 1 {
             admitted.len()
@@ -356,59 +472,114 @@ impl ShardedService {
             CHUNK
         };
         self.inflight.fill(0.0);
+        self.inflight_pairs.fill(0);
         let (tx, rx) = mpsc::channel();
         // tag → the chunk's original submission indices, in chunk order
         let mut chunk_map: Vec<Vec<usize>> = Vec::new();
-        for group in admitted.chunks(chunk) {
-            let tasks: Vec<Task> = group.iter().map(|&(_, k)| k).collect();
-            let cost: f64 = tasks.iter().map(|k| k.model.t_min(&self.iv)).sum();
-            let shard = self.route_chunk();
-            self.inflight[shard] += cost;
-            let tag = chunk_map.len() as u64;
-            chunk_map.push(group.iter().map(|&(idx, _)| idx).collect());
-            self.pool.send(
-                shard,
-                ShardJob::Batch {
-                    tag,
-                    t,
-                    tasks,
-                    reply: tx.clone(),
-                },
+        // tag → (routed shard, t_min cost, pairs) for reply-time deltas
+        let mut chunk_meta: Vec<(usize, f64, usize)> = Vec::new();
+        let mut out = Vec::with_capacity(admitted.len());
+        // stable partition of the EDF batch by resolved type
+        let mut by_type: Vec<Vec<&(usize, ServiceTask)>> = vec![Vec::new(); self.fleet.len()];
+        for entry in admitted {
+            by_type[entry.1.type_idx].push(entry);
+        }
+        for (ti, group_list) in by_type.iter().enumerate() {
+            if group_list.is_empty() {
+                continue;
+            }
+            let eligible: Vec<usize> = (0..n_shards)
+                .filter(|&k| self.shard_types[k].contains(&ti))
+                .collect();
+            assert!(
+                !eligible.is_empty(),
+                "no shard owns GPU type {ti} (partitioning bug)"
             );
+            for group in group_list.chunks(chunk) {
+                // fold in any replies that already landed: their loads
+                // (and queue depths) supersede this flush's estimates
+                while let Ok(reply) = rx.try_recv() {
+                    self.apply_reply(&reply, &chunk_meta, &chunk_map, &mut out);
+                }
+                let tasks: Vec<ServiceTask> = group.iter().map(|e| e.1.clone()).collect();
+                let cost: f64 = tasks
+                    .iter()
+                    .map(|k| k.g as f64 * k.task.model.t_min(&self.iv))
+                    .sum();
+                let pairs: usize = tasks.iter().map(|k| k.g).sum();
+                let shard = self.route_chunk(&eligible);
+                self.inflight[shard] += cost;
+                self.inflight_pairs[shard] += pairs;
+                let tag = chunk_map.len() as u64;
+                chunk_map.push(group.iter().map(|e| e.0).collect());
+                chunk_meta.push((shard, cost, pairs));
+                self.pool.send(
+                    shard,
+                    ShardJob::Batch {
+                        tag,
+                        t,
+                        tasks,
+                        reply: tx.clone(),
+                    },
+                );
+            }
         }
         drop(tx);
-        let mut out = Vec::with_capacity(admitted.len());
-        for _ in 0..chunk_map.len() {
+        while out.len() < admitted.len() {
             let reply = rx.recv().expect("shard worker alive");
-            // per-shard replies arrive in processing order, so the last
-            // one seen per shard is its freshest load
-            self.loads[reply.shard] = reply.load;
-            let idxs = &chunk_map[reply.tag as usize];
-            assert_eq!(idxs.len(), reply.placements.len());
-            for (j, p) in reply.placements.iter().enumerate() {
-                out.push((idxs[j], *p));
-            }
+            self.apply_reply(&reply, &chunk_meta, &chunk_map, &mut out);
         }
         out
     }
 
-    /// Pick a shard for the next chunk (loads = last report + work routed
-    /// earlier in this flush).
-    fn route_chunk(&mut self) -> usize {
-        let n = self.pool.n_shards();
+    /// Fold one chunk reply into the dispatcher's routing state and
+    /// collect its placements: the executing shard's load and queue depth
+    /// are refreshed, and the routed shard's in-flight deltas released.
+    fn apply_reply(
+        &mut self,
+        reply: &BatchReply,
+        chunk_meta: &[(usize, f64, usize)],
+        chunk_map: &[Vec<usize>],
+        out: &mut Vec<(usize, Placement)>,
+    ) {
+        // per-shard replies arrive in processing order, so the last one
+        // seen per shard is its freshest load
+        self.loads[reply.shard] = reply.load;
+        self.queue_depth[reply.shard] = reply.queued;
+        // release the in-flight estimate from the shard the chunk was
+        // ROUTED to (under stealing the executor can differ — its load
+        // report above already reflects the stolen work)
+        let (routed, cost, pairs) = chunk_meta[reply.tag as usize];
+        self.inflight[routed] = (self.inflight[routed] - cost).max(0.0);
+        self.inflight_pairs[routed] = self.inflight_pairs[routed].saturating_sub(pairs);
+        let idxs = &chunk_map[reply.tag as usize];
+        assert_eq!(idxs.len(), reply.placements.len());
+        for (j, p) in reply.placements.iter().enumerate() {
+            out.push((idxs[j], p.clone()));
+        }
+    }
+
+    /// Pick a shard for the next chunk among `eligible` (shards owning
+    /// the chunk's GPU type).  Loads = freshest report + in-flight work
+    /// routed earlier in this flush and not yet acknowledged.
+    fn route_chunk(&mut self, eligible: &[usize]) -> usize {
+        debug_assert!(!eligible.is_empty());
         match self.route {
             RoutePolicy::RoundRobin => {
-                let k = self.rr_next % n;
+                let k = eligible[self.rr_next % eligible.len()];
                 self.rr_next = self.rr_next.wrapping_add(1);
                 k
             }
             RoutePolicy::LeastLoaded => {
-                let mut best = 0;
-                let mut best_load = f64::INFINITY;
-                for k in 0..n {
-                    let load = self.loads[k].backlog + self.inflight[k];
-                    if load < best_load {
-                        best_load = load;
+                let mut best = eligible[0];
+                let mut best_key = (f64::INFINITY, f64::INFINITY);
+                for &k in eligible {
+                    let key = (
+                        self.loads[k].backlog + self.inflight[k],
+                        self.queue_depth[k] as f64,
+                    );
+                    if key < best_key {
+                        best_key = key;
                         best = k;
                     }
                 }
@@ -419,21 +590,28 @@ impl ShardedService {
                 // Δ cost; among shards that would have to open a server,
                 // prefer ones that still *can* (servers_off > 0) over
                 // fully-committed ones that could only queue; among
-                // equals, least effective load wins
-                let mut best = 0;
-                let mut best_key = (f64::INFINITY, f64::INFINITY, f64::INFINITY);
-                for k in 0..n {
-                    let no_free_capacity = if self.loads[k].idle_on > 0 { 0.0 } else { 1.0 };
-                    let saturated =
-                        if self.loads[k].idle_on == 0 && self.loads[k].servers_off == 0 {
-                            1.0
-                        } else {
-                            0.0
-                        };
+                // equals, least effective load wins.  Capacity is judged
+                // net of this flush's un-acknowledged routing (the
+                // in-flight pair delta), so a burst no longer piles onto
+                // one shard's stale idle_on count while its siblings'
+                // servers stay dark.
+                let mut best = eligible[0];
+                let mut best_key = (f64::INFINITY, f64::INFINITY, f64::INFINITY, f64::INFINITY);
+                for &k in eligible {
+                    let idle_eff = self.loads[k].idle_on.saturating_sub(self.inflight_pairs[k]);
+                    // pairs routed beyond the idle pool imply in-flight
+                    // server turn-ons eating into servers_off
+                    let overflow = self.inflight_pairs[k].saturating_sub(self.loads[k].idle_on);
+                    let l = self.l.max(1);
+                    let opening = overflow / l + usize::from(overflow % l != 0);
+                    let off_eff = self.loads[k].servers_off.saturating_sub(opening);
+                    let no_free_capacity = if idle_eff > 0 { 0.0 } else { 1.0 };
+                    let saturated = if idle_eff == 0 && off_eff == 0 { 1.0 } else { 0.0 };
                     let key = (
                         no_free_capacity,
                         saturated,
                         self.loads[k].backlog + self.inflight[k],
+                        self.queue_depth[k] as f64,
                     );
                     if key < best_key {
                         best_key = key;
@@ -475,6 +653,8 @@ impl ShardedService {
         merged.admitted = self.admission.admitted;
         merged.rejected_infeasible = self.admission.rejected_infeasible;
         merged.rejected_invalid = self.admission.rejected_invalid;
+        merged.rejected_type = self.admission.rejected_type;
+        merged.rejected_gang = self.admission.rejected_gang;
         merged.steals = self.pool.steals();
         merged.now = merged.now.max(self.now);
         if drain {
@@ -519,7 +699,7 @@ impl ShardedService {
     /// always come back in request order.
     pub fn handle(&mut self, req: Request) -> (Vec<Json>, bool) {
         match req {
-            Request::Submit(task) => (self.submit(task), false),
+            Request::Submit(task, opts) => (self.submit_with(task, opts), false),
             Request::Query { id } => {
                 let mut out = self.flush();
                 out.push(self.records.query_json(id, self.now));
@@ -739,6 +919,99 @@ mod tests {
         let rec = service.record(1).unwrap();
         assert_eq!(rec.deadline, d);
         assert!(rec.start >= 100.0, "stale task placed at the clock");
+    }
+
+    #[test]
+    fn single_custom_type_admission_uses_the_projected_floor() {
+        // a ONE-entry --cluster-spec is still a typed cluster: a slow
+        // type's projected t_min must gate admission (the reference-model
+        // floor would wave through deadlines the pool cannot meet)
+        let mut cfg = small_cfg();
+        cfg.cluster.types = vec![crate::config::GpuTypeSpec {
+            name: "slowGPU".into(),
+            servers: 16,
+            power_scale: 1.0,
+            speed_scale: 0.5, // everything takes 2x the reference time
+        }];
+        let mut service = ShardedService::new(
+            &cfg,
+            OnlinePolicyKind::Edl,
+            true,
+            2,
+            RoutePolicy::LeastLoaded,
+            0.0,
+            false,
+        )
+        .unwrap();
+        let iv = ScalingInterval::wide();
+        let mut task = mk_task(0, 0.0, 0.5, 10.0);
+        let base_floor = task.model.t_min(&iv);
+        // feasible on the reference GPU, impossible on the slow type
+        task.deadline = base_floor * 1.5;
+        task.u = (task.model.t_star() / task.deadline).min(1.0);
+        let out = service.submit(task);
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].get("admitted"), Some(&Json::Bool(false)));
+        assert_eq!(
+            out[0].get("reason").unwrap().as_str(),
+            Some("infeasible-deadline")
+        );
+        // the reported floor is the PROJECTED one (2x the reference)
+        let t_min = out[0].get("t_min").unwrap().as_f64().unwrap();
+        assert!((t_min - base_floor * 2.0).abs() < 1e-9 * t_min);
+        // a deadline past the projected floor is admitted, with the
+        // type name on the response (single-type clusters are typed too)
+        let ok = service.submit(mk_task(1, 0.0, 0.3, 10.0));
+        assert_eq!(ok[0].get("admitted"), Some(&Json::Bool(true)));
+        assert_eq!(ok[0].get("gpu_type").unwrap().as_str(), Some("slowGPU"));
+        let fin = service.shutdown();
+        let snap = fin.last().unwrap();
+        assert_eq!(snap.get("violations").unwrap().as_f64(), Some(0.0));
+    }
+
+    #[test]
+    fn energy_greedy_routing_sees_inflight_turn_ons() {
+        // ROADMAP routing-feedback fix: within one flush, chunks already
+        // routed (but not yet acknowledged) must count against a shard's
+        // idle capacity.  Shard 0 reports 2 idle pairs and no off
+        // servers; shard 1 reports none idle but openable servers.  The
+        // stale-snapshot behavior sent EVERY chunk to shard 0; with
+        // in-flight deltas the second chunk must divert to shard 1.
+        let mut svc = ShardedService::new(
+            &small_cfg(),
+            OnlinePolicyKind::Edl,
+            true,
+            2,
+            RoutePolicy::EnergyGreedy,
+            1.0,
+            false,
+        )
+        .unwrap();
+        svc.loads[0] = ShardLoad {
+            backlog: 0.0,
+            idle_on: 2,
+            servers_off: 0,
+        };
+        svc.loads[1] = ShardLoad {
+            backlog: 0.0,
+            idle_on: 0,
+            servers_off: 8,
+        };
+        let eligible = [0usize, 1];
+        let first = svc.route_chunk(&eligible);
+        assert_eq!(first, 0, "free idle capacity wins");
+        // simulate routing an 8-task chunk there (dispatch() does this)
+        svc.inflight_pairs[0] += 8;
+        svc.inflight[0] += 100.0;
+        let second = svc.route_chunk(&eligible);
+        assert_eq!(
+            second, 1,
+            "shard 0's idle pairs are consumed in flight; shard 1 can still open servers"
+        );
+        // an acknowledgment releases the delta again
+        svc.inflight_pairs[0] = 0;
+        svc.inflight[0] = 0.0;
+        assert_eq!(svc.route_chunk(&eligible), 0);
     }
 
     #[test]

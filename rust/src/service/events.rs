@@ -40,6 +40,12 @@ pub enum EventKind {
     DrsCheck { server: usize },
     /// An arrival batch handed to the policy as one EDF-sorted group.
     Arrivals(Vec<Task>),
+    /// A gang arrival batch (`(task, g)` with `g` co-located pairs each),
+    /// placed by [`crate::sched::online::place_gang_batch`].  Kept
+    /// separate from [`EventKind::Arrivals`] so plain batches take the
+    /// policy path byte-for-byte unchanged; equal-timestamp FIFO ordering
+    /// preserves a flush's EDF interleaving across the two kinds.
+    GangArrivals(Vec<(Task, usize)>),
 }
 
 struct QueuedEvent {
@@ -123,6 +129,13 @@ impl EventEngine {
     pub fn push_arrivals(&mut self, t: f64, tasks: Vec<Task>) {
         if !tasks.is_empty() {
             self.push(t, RANK_ARRIVAL, EventKind::Arrivals(tasks));
+        }
+    }
+
+    /// Queue a gang arrival batch at `t` (absolute time).
+    pub fn push_gang_arrivals(&mut self, t: f64, gangs: Vec<(Task, usize)>) {
+        if !gangs.is_empty() {
+            self.push(t, RANK_ARRIVAL, EventKind::GangArrivals(gangs));
         }
     }
 
@@ -232,6 +245,9 @@ impl EventEngine {
             match ev.kind {
                 EventKind::DrsCheck { server } => self.drs_check(server, ev.time, cluster),
                 EventKind::Arrivals(tasks) => policy.assign(ev.time, &tasks, cluster, ctx),
+                EventKind::GangArrivals(gangs) => {
+                    crate::sched::online::place_gang_batch(ev.time, &gangs, cluster, policy, ctx)
+                }
             }
         }
     }

@@ -59,6 +59,20 @@ pub struct Snapshot {
     pub rejected_infeasible: u64,
     /// Tasks rejected by structural validation.
     pub rejected_invalid: u64,
+    /// Tasks rejected for naming an unconfigured GPU type.
+    pub rejected_type: u64,
+    /// Tasks rejected because the gang width exceeds one server.
+    pub rejected_gang: u64,
+    /// Gangs placed (multi-pair reservations; g = 1 tasks do not count).
+    pub gangs_placed: u64,
+    /// Per-GPU-type energy split (`E_run + E_idle + E_overhead` of each
+    /// type's pair pool, in global type order).  A homogeneous cluster
+    /// reports one entry equal to `e_total`.
+    pub e_by_type: Vec<f64>,
+    /// Pairs currently busy, per GPU type.
+    pub busy_by_type: Vec<u64>,
+    /// Total pairs per GPU type (the denominator of `util_by_type`).
+    pub pairs_by_type: Vec<u64>,
     /// θ-readjusted placements (EDL only).
     pub readjusted: u64,
     /// Forced placements on an exhausted cluster (may violate).
@@ -79,31 +93,59 @@ impl Snapshot {
         stats: &PolicyStats,
         adm: &AdmissionController,
     ) -> Snapshot {
+        let e_idle = cluster.e_idle_at(now);
+        let e_total = cluster.e_run + e_idle + cluster.e_overhead();
+        let pairs_busy = cluster
+            .pairs
+            .iter()
+            .filter(|p| p.power == PairPower::Busy)
+            .count();
         Snapshot {
             now,
             e_run: cluster.e_run,
-            e_idle: cluster.e_idle_at(now),
+            e_idle,
             e_overhead: cluster.e_overhead(),
             e_idle_nodes: cluster.e_idle_by_server(now),
             violations: cluster.violations,
             turn_ons: cluster.turn_ons,
             servers_on: cluster.server_on.iter().filter(|&&on| on).count(),
             servers_used: cluster.servers_used(),
-            pairs_busy: cluster
-                .pairs
-                .iter()
-                .filter(|p| p.power == PairPower::Busy)
-                .count(),
+            pairs_busy,
             pairs_used: cluster.pairs_used(),
             submitted: adm.admitted + adm.rejected(),
             admitted: adm.admitted,
             rejected_infeasible: adm.rejected_infeasible,
             rejected_invalid: adm.rejected_invalid,
+            rejected_type: adm.rejected_type,
+            rejected_gang: adm.rejected_gang,
+            gangs_placed: cluster.gangs_placed,
+            // one homogeneous pool: the whole ledger is this type's.
+            // Typed services collect one fragment per type pool and remap
+            // these slots into the global type order before merging.
+            e_by_type: vec![e_total],
+            busy_by_type: vec![pairs_busy as u64],
+            pairs_by_type: vec![cluster.pairs.len() as u64],
             readjusted: stats.readjusted,
             forced: stats.forced,
             steals: 0,
             shards: 1,
         }
+    }
+
+    /// Re-slot the per-type vectors into global type order: this snapshot
+    /// was collected from one homogeneous pool of type `type_idx` out of
+    /// `n_types` (fragments of different types then merge elementwise).
+    pub fn remap_type(mut self, type_idx: usize, n_types: usize) -> Snapshot {
+        let e = self.e_by_type.first().copied().unwrap_or(0.0);
+        let busy = self.busy_by_type.first().copied().unwrap_or(0);
+        let pairs = self.pairs_by_type.first().copied().unwrap_or(0);
+        self.e_by_type = vec![0.0; n_types];
+        self.busy_by_type = vec![0; n_types];
+        self.pairs_by_type = vec![0; n_types];
+        self.e_by_type[type_idx] = e;
+        self.busy_by_type[type_idx] = busy;
+        self.pairs_by_type[type_idx] = pairs;
+        self
     }
 
     /// Merge per-shard fragments (in shard order — shard 0 owns the
@@ -128,6 +170,26 @@ impl Snapshot {
             m.admitted += p.admitted;
             m.rejected_infeasible += p.rejected_infeasible;
             m.rejected_invalid += p.rejected_invalid;
+            m.rejected_type += p.rejected_type;
+            m.rejected_gang += p.rejected_gang;
+            m.gangs_placed += p.gangs_placed;
+            // per-type vectors sum elementwise (unlike per-node idle
+            // energy, which concatenates): every fragment reports the
+            // same global type axis, zero-padded off its own type
+            if m.e_by_type.len() < p.e_by_type.len() {
+                m.e_by_type.resize(p.e_by_type.len(), 0.0);
+                m.busy_by_type.resize(p.busy_by_type.len(), 0);
+                m.pairs_by_type.resize(p.pairs_by_type.len(), 0);
+            }
+            for (i, &e) in p.e_by_type.iter().enumerate() {
+                m.e_by_type[i] += e;
+            }
+            for (i, &b) in p.busy_by_type.iter().enumerate() {
+                m.busy_by_type[i] += b;
+            }
+            for (i, &n) in p.pairs_by_type.iter().enumerate() {
+                m.pairs_by_type[i] += n;
+            }
             m.readjusted += p.readjusted;
             m.forced += p.forced;
             m.steals += p.steals;
@@ -162,6 +224,9 @@ impl Snapshot {
         num("admitted", self.admitted as f64);
         num("rejected_infeasible", self.rejected_infeasible as f64);
         num("rejected_invalid", self.rejected_invalid as f64);
+        num("rejected_type", self.rejected_type as f64);
+        num("rejected_gang", self.rejected_gang as f64);
+        num("gangs_placed", self.gangs_placed as f64);
         num("readjusted", self.readjusted as f64);
         num("forced", self.forced as f64);
         num("steals", self.steals as f64);
@@ -169,6 +234,20 @@ impl Snapshot {
         m.insert(
             "e_idle_nodes".to_string(),
             Json::Arr(self.e_idle_nodes.iter().map(|&e| Json::Num(e)).collect()),
+        );
+        m.insert(
+            "e_by_type".to_string(),
+            Json::Arr(self.e_by_type.iter().map(|&e| Json::Num(e)).collect()),
+        );
+        m.insert(
+            "util_by_type".to_string(),
+            Json::Arr(
+                self.busy_by_type
+                    .iter()
+                    .zip(&self.pairs_by_type)
+                    .map(|(&b, &n)| Json::Num(if n == 0 { 0.0 } else { b as f64 / n as f64 }))
+                    .collect(),
+            ),
         );
         Json::Obj(m)
     }
@@ -191,7 +270,7 @@ mod tests {
         let adm = AdmissionController {
             admitted: 1,
             rejected_infeasible: 2,
-            rejected_invalid: 0,
+            ..AdmissionController::default()
         };
         let s = Snapshot::collect(3.0, &c, &PolicyStats::default(), &adm);
         assert_eq!(s.servers_on, 1);
@@ -221,6 +300,32 @@ mod tests {
         assert_eq!(j.get("e_total").unwrap().as_f64(), Some(10.0));
         assert_eq!(j.get("e_idle_nodes").unwrap().as_arr().unwrap().len(), 2);
         assert!(j.render_compact().starts_with('{'));
+    }
+
+    #[test]
+    fn remap_type_slots_fragments_onto_the_global_axis() {
+        let frag = Snapshot {
+            e_run: 6.0,
+            e_idle: 3.0,
+            e_overhead: 1.0,
+            e_by_type: vec![10.0],
+            busy_by_type: vec![3],
+            pairs_by_type: vec![8],
+            ..Snapshot::default()
+        };
+        let a = frag.clone().remap_type(0, 2);
+        let b = frag.remap_type(1, 2);
+        assert_eq!(a.e_by_type, vec![10.0, 0.0]);
+        assert_eq!(b.e_by_type, vec![0.0, 10.0]);
+        let m = Snapshot::merge(&[a, b]);
+        assert_eq!(m.e_by_type, vec![10.0, 10.0]);
+        assert_eq!(m.busy_by_type, vec![3, 3]);
+        assert_eq!(m.pairs_by_type, vec![8, 8]);
+        let j = m.to_json();
+        let util = j.get("util_by_type").unwrap().as_arr().unwrap();
+        assert_eq!(util.len(), 2);
+        assert_eq!(util[0].as_f64(), Some(3.0 / 8.0));
+        assert_eq!(j.get("e_by_type").unwrap().as_arr().unwrap().len(), 2);
     }
 
     #[test]

@@ -36,5 +36,5 @@ pub use daemon::{RecordStore, Service, TaskRecord};
 pub use dispatch::{RoutePolicy, ShardedService};
 pub use events::EventEngine;
 pub use metrics::Snapshot;
-pub use protocol::{parse_request, Request};
-pub use shard::{Placement, Shard, ShardLoad, ShardPool};
+pub use protocol::{parse_request, Request, SubmitOpts, TypePref};
+pub use shard::{Placement, ServiceTask, Shard, ShardLoad, ShardPool};

@@ -6,10 +6,16 @@
 //! {"op":"submit","task":{"id":1,"app":0,"arrival":0,"deadline":120,"u":0.5,
 //!                        "model":{"p0":53.4,"gamma":22.12,"c":100.4,
 //!                                 "d":54.18,"delta":0.182,"t0":8.3}}}
+//! {"op":"submit","task":{...},"gpu_type":"bigGPU","g":4}
 //! {"op":"query","id":1}
 //! {"op":"snapshot"}
 //! {"op":"shutdown"}
 //! ```
+//!
+//! `gpu_type` (default `"any"`) names a configured GPU type — `"any"` is
+//! resolved to the feasible-minimum-energy type per task — and `g`
+//! (default 1) is the gang width: pairs the task occupies simultaneously
+//! on one server (see `docs/PROTOCOL.md`).
 //!
 //! The task schema is exactly the workload-file schema
 //! ([`crate::ext::trace`]), so `repro workload export` output can be
@@ -21,11 +27,52 @@ use crate::tasks::Task;
 use crate::util::json::Json;
 pub use crate::util::json::{num, obj};
 
+/// The client's GPU-type preference on a `submit`.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub enum TypePref {
+    /// No preference: the service resolves the feasible-minimum-energy
+    /// type per task ([`crate::ext::hetero::select_type`]).  The wire
+    /// spelling is `"any"` or an absent `gpu_type` field.
+    #[default]
+    Any,
+    /// A specific configured type by name; unknown names are rejected
+    /// with reason `unknown-gpu-type`.
+    Named(String),
+}
+
+/// Scenario options riding on a `submit` request: the GPU-type preference
+/// and the gang width `g` (pairs occupied simultaneously on one server;
+/// `1` is the paper's base case).  The defaults reproduce the original
+/// request semantics exactly.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct SubmitOpts {
+    /// Requested GPU type.
+    pub gpu_type: TypePref,
+    /// Gang width `g >= 1`.
+    pub g: usize,
+}
+
+impl Default for SubmitOpts {
+    fn default() -> Self {
+        SubmitOpts {
+            gpu_type: TypePref::Any,
+            g: 1,
+        }
+    }
+}
+
+impl SubmitOpts {
+    /// Whether these are the plain (paper base-case) semantics.
+    pub fn is_default(&self) -> bool {
+        self.g == 1 && self.gpu_type == TypePref::Any
+    }
+}
+
 /// A decoded client request.
 #[derive(Clone, Debug)]
 pub enum Request {
     /// Submit one task for admission + placement.
-    Submit(Task),
+    Submit(Task, SubmitOpts),
     /// Query the record of a previously submitted task id.
     Query { id: usize },
     /// Report live metrics.
@@ -61,7 +108,30 @@ pub fn parse_request(line: &str) -> Result<Option<Request>, String> {
     let req = match op {
         "submit" => {
             let tj = j.get("task").ok_or("submit: missing 'task'")?;
-            Request::Submit(task_from_json(tj).map_err(|e| format!("submit: {e}"))?)
+            let task = task_from_json(tj).map_err(|e| format!("submit: {e}"))?;
+            let gpu_type = match j.get("gpu_type") {
+                None => TypePref::Any,
+                Some(v) => match v.as_str() {
+                    Some("any") => TypePref::Any,
+                    Some(name) => TypePref::Named(name.to_string()),
+                    None => return Err("submit: 'gpu_type' must be a string".into()),
+                },
+            };
+            let g = match j.get("g") {
+                None => 1,
+                Some(v) => {
+                    let g = v.as_f64().ok_or("submit: 'g' must be a number")?;
+                    // like query ids: saturating casts would silently turn
+                    // 0.5 or -3 into a different gang — reject instead
+                    if !(g.fract() == 0.0 && (1.0..=usize::MAX as f64).contains(&g)) {
+                        return Err(format!(
+                            "submit: 'g' must be a positive integer, got {g}"
+                        ));
+                    }
+                    g as usize
+                }
+            };
+            Request::Submit(task, SubmitOpts { gpu_type, g })
         }
         "query" => {
             let id = j
@@ -119,13 +189,60 @@ mod tests {
         let t = demo_task();
         let line = obj(vec![("op", s("submit")), ("task", task_to_json(&t))]).render_compact();
         match parse_request(&line).unwrap().unwrap() {
-            Request::Submit(got) => {
+            Request::Submit(got, opts) => {
                 assert_eq!(got.id, t.id);
                 assert_eq!(got.deadline, t.deadline);
                 assert_eq!(got.model, t.model);
+                assert!(opts.is_default(), "absent fields mean the base case");
             }
             other => panic!("wrong request: {other:?}"),
         }
+    }
+
+    #[test]
+    fn submit_parses_gpu_type_and_gang_width() {
+        let t = demo_task();
+        let line = obj(vec![
+            ("op", s("submit")),
+            ("task", task_to_json(&t)),
+            ("gpu_type", s("bigGPU")),
+            ("g", num(4.0)),
+        ])
+        .render_compact();
+        match parse_request(&line).unwrap().unwrap() {
+            Request::Submit(_, opts) => {
+                assert_eq!(opts.gpu_type, TypePref::Named("bigGPU".into()));
+                assert_eq!(opts.g, 4);
+                assert!(!opts.is_default());
+            }
+            other => panic!("wrong request: {other:?}"),
+        }
+        // explicit "any" is the default preference
+        let line = obj(vec![
+            ("op", s("submit")),
+            ("task", task_to_json(&t)),
+            ("gpu_type", s("any")),
+        ])
+        .render_compact();
+        match parse_request(&line).unwrap().unwrap() {
+            Request::Submit(_, opts) => assert!(opts.is_default()),
+            other => panic!("wrong request: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn submit_rejects_bad_gang_widths() {
+        let t = demo_task();
+        let line = |g: &str| {
+            format!(
+                "{{\"op\":\"submit\",\"task\":{},\"g\":{g}}}",
+                task_to_json(&t).render_compact()
+            )
+        };
+        assert!(parse_request(&line("0")).is_err());
+        assert!(parse_request(&line("-2")).is_err());
+        assert!(parse_request(&line("2.5")).is_err());
+        assert!(parse_request(&line("1")).unwrap().is_some());
     }
 
     #[test]

@@ -24,7 +24,9 @@
 //!   merged snapshots use the same numbering as the unsharded daemon.
 
 use crate::cluster::{Cluster, PairPower, ShardView};
+use crate::config::ClusterConfig;
 use crate::dvfs::ScalingInterval;
+use crate::ext::hetero::TypeParams;
 use crate::runtime::Solver;
 use crate::sched::online::{OnlinePolicy, SchedCtx};
 use crate::service::admission::AdmissionController;
@@ -38,16 +40,47 @@ use std::sync::mpsc::Sender;
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
 
+/// One admitted task as dispatched to a shard: the task, its resolved
+/// GPU type (a *global* type index — `"any"` preferences are resolved by
+/// the dispatcher before routing), and its gang width.
+#[derive(Clone, Debug)]
+pub struct ServiceTask {
+    /// The admitted task (reference-GPU model; the owning pool projects
+    /// it onto its type).
+    pub task: Task,
+    /// Global GPU-type index the task runs on.
+    pub type_idx: usize,
+    /// Gang width `g >= 1` (pairs reserved simultaneously on one server).
+    pub g: usize,
+}
+
+impl ServiceTask {
+    /// The paper base case: type 0, width 1.
+    pub fn plain(task: Task) -> ServiceTask {
+        ServiceTask {
+            task,
+            type_idx: 0,
+            g: 1,
+        }
+    }
+}
+
 /// One placed task, reported back by a shard in global pair numbering.
-#[derive(Clone, Copy, Debug)]
+#[derive(Clone, Debug)]
 pub struct Placement {
     /// The task's id.
     pub id: usize,
     /// Shard that executed the placement (not necessarily the routed
     /// shard, when the batch was stolen).
     pub shard: usize,
-    /// Global pair index the task runs on.
+    /// Global pair index the task runs on (the lowest reserved pair for
+    /// a gang).
     pub pair: usize,
+    /// All reserved global pair indices (length = gang width; co-located
+    /// on one server).
+    pub pairs: Vec<usize>,
+    /// Global GPU-type index the task ran on.
+    pub type_idx: usize,
     /// Execution start time.
     pub start: f64,
     /// Completion time μ.
@@ -91,18 +124,26 @@ pub struct BatchReply {
     pub placements: Vec<Placement>,
     /// Shard load after the chunk.
     pub load: ShardLoad,
+    /// Jobs still queued for this worker when the reply was sent — the
+    /// queue-depth delta the dispatcher folds into routing so
+    /// energy-greedy sees in-flight turn-on decisions instead of the last
+    /// flush's snapshot.
+    pub queued: usize,
 }
 
 /// A job queued for a shard worker.
 pub enum ShardJob {
-    /// Place an EDF-ordered chunk at logical batch time `t`.  Stealable.
+    /// Place an EDF-ordered chunk at logical batch time `t`.  Stealable
+    /// only between shards whose type mix covers the chunk (the
+    /// dispatcher routes per type, so single-type chunks steal freely on
+    /// homogeneous clusters).
     Batch {
         /// Dispatcher-chosen chunk tag, echoed back in the reply.
         tag: u64,
         /// Batch flush time (all chunks of one flush share it).
         t: f64,
         /// The chunk, sorted by deadline (EDF).
-        tasks: Vec<Task>,
+        tasks: Vec<ServiceTask>,
         /// Where to send the [`BatchReply`].
         reply: Sender<BatchReply>,
     },
@@ -122,7 +163,31 @@ pub enum ShardJob {
     Stop,
 }
 
-/// One cluster partition with its own continuous-time event loop.
+/// One GPU-type pool inside a shard: a homogeneous sub-cluster with its
+/// own policy instance and event loop.  Tasks are projected onto the
+/// pool's type before placement; the reference type's projection is the
+/// identity, so a homogeneous shard is bit-identical to the pre-typed
+/// single-cluster layout.
+struct TypePool {
+    /// Global GPU-type index.
+    type_idx: usize,
+    /// Projection parameters (reference scales for type 0 of a
+    /// homogeneous cluster).
+    params: TypeParams,
+    /// Both scales exactly 1 — skip projection (IEEE `*1.0`/`/1.0` are
+    /// exact, but skipping keeps the oracle path textually untouched).
+    identity: bool,
+    cluster: Cluster,
+    policy: Box<dyn OnlinePolicy>,
+    engine: EventEngine,
+    /// First global pair index of this pool.
+    pair_offset: usize,
+}
+
+/// One cluster partition with its own continuous-time event loops — one
+/// type pool (homogeneous sub-cluster + policy + event engine) per GPU
+/// type the partition owns (exactly one for the paper's homogeneous
+/// cluster).
 ///
 /// Single-threaded by itself; [`ShardPool`] runs one per worker thread.
 /// Building a shard creates its own native DVFS solver, so shards never
@@ -135,7 +200,7 @@ pub enum ShardJob {
 /// use dvfs_sched::cluster::partition_cluster;
 /// use dvfs_sched::config::ClusterConfig;
 /// use dvfs_sched::dvfs::ScalingInterval;
-/// use dvfs_sched::service::shard::Shard;
+/// use dvfs_sched::service::shard::{ServiceTask, Shard};
 /// use dvfs_sched::sim::online::OnlinePolicyKind;
 /// use dvfs_sched::tasks::LIBRARY;
 /// use dvfs_sched::Task;
@@ -148,7 +213,7 @@ pub enum ShardJob {
 /// let model = LIBRARY[0].model.scaled(10.0);
 /// let task = Task { id: 7, app: 0, model, arrival: 0.0,
 ///                   deadline: 2.0 * model.t_star(), u: 0.5 };
-/// let placed = shard.place_batch(0.0, vec![task]);
+/// let placed = shard.place_batch(0.0, vec![ServiceTask::plain(task)]);
 /// // shard 1 owns global pairs 4..8, so its first pair reports as 4
 /// assert_eq!(placed.len(), 1);
 /// assert_eq!(placed[0].pair, 4);
@@ -156,9 +221,9 @@ pub enum ShardJob {
 /// ```
 pub struct Shard {
     view: ShardView,
-    cluster: Cluster,
-    policy: Box<dyn OnlinePolicy>,
-    engine: EventEngine,
+    pools: Vec<TypePool>,
+    /// Global GPU-type count (for snapshot type-axis remapping).
+    n_types: usize,
     solver: Solver,
     iv: ScalingInterval,
     dvfs: bool,
@@ -166,7 +231,8 @@ pub struct Shard {
 }
 
 impl Shard {
-    /// Build the shard for one partition view.
+    /// Build the shard for one partition view: one pool per GPU type the
+    /// partition owns, laid out in global server order.
     pub fn new(
         view: ShardView,
         kind: OnlinePolicyKind,
@@ -174,13 +240,38 @@ impl Shard {
         iv: ScalingInterval,
         theta: f64,
     ) -> Shard {
-        let cluster = Cluster::new(view.cfg.clone());
-        let policy = kind.build(view.cfg.total_pairs);
+        let l = view.cfg.pairs_per_server;
+        let specs = view.cfg.effective_types();
+        debug_assert_eq!(specs.len(), view.types.len());
+        let mut pools = Vec::with_capacity(view.types.len());
+        let mut pair_offset = view.pair_offset;
+        for (&(type_idx, servers), spec) in view.types.iter().zip(&specs) {
+            let cfg = ClusterConfig {
+                total_pairs: servers * l,
+                types: Vec::new(), // each pool is homogeneous
+                ..view.cfg.clone()
+            };
+            let policy = kind.build(cfg.total_pairs);
+            pools.push(TypePool {
+                type_idx,
+                params: TypeParams {
+                    interval: iv,
+                    power_scale: spec.power_scale,
+                    speed_scale: spec.speed_scale,
+                },
+                identity: spec.power_scale == 1.0 && spec.speed_scale == 1.0,
+                cluster: Cluster::new(cfg),
+                policy,
+                engine: EventEngine::new(),
+                pair_offset,
+            });
+            pair_offset += servers * l;
+        }
+        let n_types = view.n_types;
         Shard {
             view,
-            cluster,
-            policy,
-            engine: EventEngine::new(),
+            pools,
+            n_types,
             solver: Solver::native(),
             iv,
             dvfs,
@@ -193,65 +284,137 @@ impl Shard {
         self.view.index
     }
 
-    /// Place one EDF-ordered batch at logical time `t`: process every
-    /// pending departure / DRS event up to `t`, hand the batch to the
-    /// policy as one arrival event, and read the per-task placements back
-    /// from the cluster's assign log (policies place strictly in the EDF
-    /// order of the batch, so the log zips with the input).
+    /// The latest pool clock (the shard's logical event time).
+    fn now(&self) -> f64 {
+        self.pools.iter().map(|p| p.engine.now).fold(0.0, f64::max)
+    }
+
+    /// Place one EDF-ordered batch at logical time `t`: tasks are split
+    /// across the shard's type pools (projected onto their type), each
+    /// pool processes every pending departure / DRS event up to `t`, its
+    /// policy places the plain tasks as one arrival event and gangs via
+    /// the gang placer, and the per-task placements are read back from
+    /// the cluster assign logs and scattered back into input order.
     ///
     /// `t` must be non-decreasing across calls (the dispatcher's logical
     /// clock guarantees this).
-    pub fn place_batch(&mut self, t: f64, tasks: Vec<Task>) -> Vec<Placement> {
+    pub fn place_batch(&mut self, t: f64, tasks: Vec<ServiceTask>) -> Vec<Placement> {
         if tasks.is_empty() {
             return Vec::new();
         }
         debug_assert!(
-            t >= self.engine.now - 1e-9,
+            t >= self.now() - 1e-9,
             "batch time {t} behind the shard clock {}",
-            self.engine.now
+            self.now()
         );
-        let meta: Vec<(usize, f64)> = tasks.iter().map(|k| (k.id, k.deadline)).collect();
-        self.cluster.assign_log.clear();
-        self.engine.push_arrivals(t, tasks);
+        let n = tasks.len();
+        // split by pool, preserving the batch's EDF order within a pool
+        let mut per_pool: Vec<Vec<(usize, Task, usize)>> = vec![Vec::new(); self.pools.len()];
+        for (idx, st) in tasks.into_iter().enumerate() {
+            let pi = self
+                .pools
+                .iter()
+                .position(|p| p.type_idx == st.type_idx)
+                .unwrap_or_else(|| {
+                    panic!(
+                        "shard {} owns no type {} (router bug)",
+                        self.view.index, st.type_idx
+                    )
+                });
+            let pool = &self.pools[pi];
+            let task = if pool.identity {
+                st.task
+            } else {
+                Task {
+                    model: pool.params.project(&st.task.model),
+                    ..st.task
+                }
+            };
+            per_pool[pi].push((idx, task, st.g));
+        }
+        let mut out: Vec<Option<Placement>> = (0..n).map(|_| None).collect();
         let ctx = SchedCtx {
             solver: &self.solver,
             iv: self.iv,
             dvfs: self.dvfs,
             theta: self.theta,
         };
-        self.engine
-            .run_until(t, &mut self.cluster, self.policy.as_mut(), &ctx);
-        assert_eq!(
-            self.cluster.assign_log.len(),
-            meta.len(),
-            "policy placed every task of the batch"
-        );
-        meta.iter()
-            .zip(self.cluster.assign_log.iter())
-            .map(|(&(id, deadline), &(pair, start, finish))| Placement {
-                id,
-                shard: self.view.index,
-                pair: self.view.pair_offset + pair,
-                start,
-                finish,
-                deadline,
-            })
+        for (pi, list) in per_pool.into_iter().enumerate() {
+            if list.is_empty() {
+                continue;
+            }
+            let pool = &mut self.pools[pi];
+            pool.cluster.clear_assign_log();
+            // push maximal same-kind runs so plain tasks keep taking the
+            // policy path as whole sub-batches (bit-identical when no
+            // gangs are present) while equal-time FIFO ordering preserves
+            // the EDF interleaving across runs
+            let mut plain: Vec<Task> = Vec::new();
+            let mut gangs: Vec<(Task, usize)> = Vec::new();
+            for &(_, ref task, g) in &list {
+                if g == 1 {
+                    if !gangs.is_empty() {
+                        pool.engine.push_gang_arrivals(t, std::mem::take(&mut gangs));
+                    }
+                    plain.push(*task);
+                } else {
+                    if !plain.is_empty() {
+                        pool.engine.push_arrivals(t, std::mem::take(&mut plain));
+                    }
+                    gangs.push((*task, g));
+                }
+            }
+            pool.engine.push_arrivals(t, plain);
+            pool.engine.push_gang_arrivals(t, gangs);
+            pool.engine
+                .run_until(t, &mut pool.cluster, pool.policy.as_mut(), &ctx);
+            assert_eq!(
+                pool.cluster.assign_log.len(),
+                list.len(),
+                "pool placed every task of its sub-batch"
+            );
+            for (k, (idx, task, _)) in list.into_iter().enumerate() {
+                let (lead, start, finish) = pool.cluster.assign_log[k];
+                let pairs: Vec<usize> = pool
+                    .cluster
+                    .pairs_of_log_entry(k)
+                    .into_iter()
+                    .map(|p| pool.pair_offset + p)
+                    .collect();
+                out[idx] = Some(Placement {
+                    id: task.id,
+                    shard: self.view.index,
+                    pair: pool.pair_offset + lead,
+                    pairs,
+                    type_idx: pool.type_idx,
+                    start,
+                    finish,
+                    deadline: task.deadline,
+                });
+            }
+        }
+        out.into_iter()
+            .map(|p| p.expect("every batch member placed"))
             .collect()
     }
 
-    /// Current load summary (see [`ShardLoad`]).
+    /// Current load summary (see [`ShardLoad`]), aggregated over the
+    /// shard's type pools.
     pub fn load(&self) -> ShardLoad {
-        let now = self.engine.now;
         let mut backlog = 0.0;
         let mut idle_on = 0;
-        for p in &self.cluster.pairs {
-            match p.power {
-                PairPower::Busy => backlog += (p.busy_until - now).max(0.0),
-                PairPower::Idle => idle_on += 1,
-                PairPower::Off => {}
+        let mut servers_off = 0;
+        for pool in &self.pools {
+            let now = pool.engine.now;
+            for p in &pool.cluster.pairs {
+                match p.power {
+                    PairPower::Busy => backlog += (p.busy_until - now).max(0.0),
+                    PairPower::Idle => idle_on += 1,
+                    PairPower::Off => {}
+                }
             }
+            servers_off += pool.cluster.server_on.iter().filter(|&&on| !on).count();
         }
-        let servers_off = self.cluster.server_on.iter().filter(|&&on| !on).count();
         ShardLoad {
             backlog,
             idle_on,
@@ -260,16 +423,28 @@ impl Shard {
     }
 
     /// Metrics fragment at service time `now` (does not advance the event
-    /// loop, mirroring the unsharded daemon's snapshot semantics).
-    /// Admission counters are zero here — admission lives in the
-    /// dispatcher, which overwrites them after the merge.
+    /// loops, mirroring the unsharded daemon's snapshot semantics): the
+    /// pool fragments merge in global server order, with each pool's
+    /// ledger re-slotted onto the global type axis.  Admission counters
+    /// are zero here — admission lives in the dispatcher, which overwrites
+    /// them after the merge.
     pub fn snapshot(&self, now: f64) -> Snapshot {
-        Snapshot::collect(
-            now.max(self.engine.now),
-            &self.cluster,
-            &self.policy.stats(),
-            &AdmissionController::new(),
-        )
+        let parts: Vec<Snapshot> = self
+            .pools
+            .iter()
+            .map(|p| {
+                Snapshot::collect(
+                    now.max(p.engine.now),
+                    &p.cluster,
+                    &p.policy.stats(),
+                    &AdmissionController::new(),
+                )
+                .remap_type(p.type_idx, self.n_types)
+            })
+            .collect();
+        let mut snap = Snapshot::merge(&parts);
+        snap.shards = 1; // one shard fragment, however many pools
+        snap
     }
 
     /// Graceful drain: run every pending event (queued tasks finish, DRS
@@ -282,9 +457,11 @@ impl Shard {
             dvfs: self.dvfs,
             theta: self.theta,
         };
-        self.engine
-            .run_to_completion(&mut self.cluster, self.policy.as_mut(), &ctx);
-        self.snapshot(self.engine.now)
+        for pool in &mut self.pools {
+            pool.engine
+                .run_to_completion(&mut pool.cluster, pool.policy.as_mut(), &ctx);
+        }
+        self.snapshot(self.now())
     }
 }
 
@@ -371,9 +548,12 @@ impl Drop for ShardPool {
 }
 
 /// Pop the next job for worker `me`: own queue first (FIFO), then — when
-/// idle and stealing is on — the newest batch of the most backed-up
-/// sibling.  Blocks on the pool condvar when nothing is runnable.
-fn next_job(shared: &PoolShared, me: usize, steal: bool) -> ShardJob {
+/// idle and stealing is on — the newest *stealable* batch of the most
+/// backed-up sibling.  A batch is stealable only when every task's GPU
+/// type is in `owned_types` (the thief's partition must be able to host
+/// the chunk; on a homogeneous cluster that is every batch).  Blocks on
+/// the pool condvar when nothing is runnable.
+fn next_job(shared: &PoolShared, me: usize, steal: bool, owned_types: &[usize]) -> ShardJob {
     let mut qs = shared.queues.lock().unwrap();
     loop {
         if let Some(job) = qs[me].pop_front() {
@@ -387,10 +567,13 @@ fn next_job(shared: &PoolShared, me: usize, steal: bool) -> ShardJob {
             // to it promptly; stealing is for genuine backlog.
             let mut victim: Option<(usize, usize)> = None; // (queue len, shard)
             for (k, q) in qs.iter().enumerate() {
-                if k != me
-                    && q.len() >= 2
-                    && matches!(q.back(), Some(ShardJob::Batch { .. }))
-                {
+                let hostable = match q.back() {
+                    Some(ShardJob::Batch { tasks, .. }) => tasks
+                        .iter()
+                        .all(|st| owned_types.contains(&st.type_idx)),
+                    _ => false,
+                };
+                if k != me && q.len() >= 2 && hostable {
                     let len = q.len();
                     if victim.map_or(true, |(best, _)| len > best) {
                         victim = Some((len, k));
@@ -418,9 +601,10 @@ fn worker_loop(
     shared: &PoolShared,
 ) {
     let me = view.index;
+    let owned_types: Vec<usize> = view.types.iter().map(|&(ti, _)| ti).collect();
     let mut shard = Shard::new(view, kind, dvfs, iv, theta);
     loop {
-        match next_job(shared, me, steal) {
+        match next_job(shared, me, steal, &owned_types) {
             ShardJob::Batch {
                 tag,
                 t,
@@ -429,6 +613,9 @@ fn worker_loop(
             } => {
                 let placements = shard.place_batch(t, tasks);
                 let load = shard.load();
+                // piggyback the live queue depth so the dispatcher's
+                // routing sees this worker's remaining in-flight work
+                let queued = shared.queues.lock().unwrap()[me].len();
                 // a dropped receiver means the dispatcher gave up on the
                 // flush (it is propagating a panic); nothing to do here
                 let _ = reply.send(BatchReply {
@@ -436,6 +623,7 @@ fn worker_loop(
                     shard: shard.id(),
                     placements,
                     load,
+                    queued,
                 });
             }
             ShardJob::Snapshot { now, reply } => {
@@ -488,7 +676,7 @@ mod tests {
             ScalingInterval::wide(),
             1.0,
         );
-        let placed = shard.place_batch(0.0, vec![mk_task(0, 0.0, 0.5, 10.0)]);
+        let placed = shard.place_batch(0.0, vec![ServiceTask::plain(mk_task(0, 0.0, 0.5, 10.0))]);
         assert_eq!(placed.len(), 1);
         // shard 1 owns servers 2..4 = global pairs 8..16
         assert_eq!(placed[0].pair, 8);
@@ -513,12 +701,48 @@ mod tests {
         a.id = 10;
         b.id = 11;
         assert!(a.deadline < b.deadline);
-        let placed = shard.place_batch(0.0, vec![a, b]);
+        let placed = shard.place_batch(0.0, vec![ServiceTask::plain(a), ServiceTask::plain(b)]);
         assert_eq!(placed.len(), 2);
         assert_eq!(placed[0].id, 10, "log zips with EDF input order");
         assert_eq!(placed[1].id, 11);
         // the tight task grabbed the first pair at t=0
         assert_eq!(placed[0].start, 0.0);
+    }
+
+    #[test]
+    fn mixed_plain_and_gang_batch_zips_in_input_order() {
+        // EDF-sorted batch interleaving widths 1 and >1: every input slot
+        // must get its own placement, gangs with their full co-located
+        // reservation, in the same order the dispatcher sent them
+        let vs = views(16, 4, 1);
+        let mut shard = Shard::new(
+            vs[0].clone(),
+            OnlinePolicyKind::Edl,
+            true,
+            ScalingInterval::wide(),
+            0.9,
+        );
+        let mut batch: Vec<ServiceTask> = Vec::new();
+        for (i, &g) in [1usize, 3, 1, 2].iter().enumerate() {
+            let u = 0.8 - 0.15 * i as f64;
+            let mut st = ServiceTask::plain(mk_task(i, 0.0, u, 10.0));
+            st.g = g;
+            batch.push(st);
+        }
+        batch.sort_by(|a, b| a.task.deadline.partial_cmp(&b.task.deadline).unwrap());
+        let expect: Vec<(usize, usize)> = batch.iter().map(|s| (s.task.id, s.g)).collect();
+        let placed = shard.place_batch(0.0, batch);
+        assert_eq!(placed.len(), 4);
+        for (p, &(id, g)) in placed.iter().zip(&expect) {
+            assert_eq!(p.id, id, "placements scatter back to input order");
+            assert_eq!(p.pairs.len(), g);
+            assert_eq!(p.pair, *p.pairs.iter().min().unwrap());
+            let server = p.pairs[0] / 4;
+            assert!(p.pairs.iter().all(|&q| q / 4 == server), "gang co-located");
+        }
+        let snap = shard.drain();
+        assert_eq!(snap.violations, 0);
+        assert_eq!(snap.gangs_placed, 2);
     }
 
     #[test]
@@ -532,7 +756,7 @@ mod tests {
             0.9,
         );
         for i in 0..4 {
-            shard.place_batch(i as f64, vec![mk_task(i, i as f64, 0.5, 10.0)]);
+            shard.place_batch(i as f64, vec![ServiceTask::plain(mk_task(i, i as f64, 0.5, 10.0))]);
         }
         let snap = shard.drain();
         assert_eq!(snap.violations, 0);
@@ -560,7 +784,7 @@ mod tests {
             ShardJob::Batch {
                 tag: 0,
                 t: 0.0,
-                tasks: vec![mk_task(0, 0.0, 0.5, 10.0)],
+                tasks: vec![ServiceTask::plain(mk_task(0, 0.0, 0.5, 10.0))],
                 reply: tx.clone(),
             },
         );
@@ -569,7 +793,7 @@ mod tests {
             ShardJob::Batch {
                 tag: 1,
                 t: 0.0,
-                tasks: vec![mk_task(1, 0.0, 0.5, 10.0)],
+                tasks: vec![ServiceTask::plain(mk_task(1, 0.0, 0.5, 10.0))],
                 reply: tx,
             },
         );
@@ -614,7 +838,7 @@ mod tests {
                     ShardJob::Batch {
                         tag: i as u64,
                         t: round as f64,
-                        tasks: vec![mk_task(i, round as f64, 0.2, 30.0)],
+                        tasks: vec![ServiceTask::plain(mk_task(i, round as f64, 0.2, 30.0))],
                         reply: tx.clone(),
                     },
                 );

