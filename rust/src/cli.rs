@@ -173,6 +173,61 @@ pub fn parse_shard_opts(args: &Args) -> Result<Option<ShardOpts>, String> {
     }))
 }
 
+/// Front-end options shared by `serve` and `replay`, decoded from
+/// `--listen stdio|unix:<path>|tcp:<addr> --clock virtual|wall
+/// --time-scale SECS` (defaults: stdio, virtual, 1 second per slot).
+#[derive(Clone, Debug)]
+pub struct FrontEndOpts {
+    /// Where sessions come from.
+    pub listen: crate::service::ListenAddr,
+    /// Wall clock (arrival = receipt time) instead of virtual replay time.
+    pub wall: bool,
+    /// Real seconds per workload slot under the wall clock.
+    pub time_scale: f64,
+}
+
+impl FrontEndOpts {
+    /// Build the requested [`crate::service::Clock`].
+    pub fn clock(&self) -> Box<dyn crate::service::Clock> {
+        if self.wall {
+            Box::new(crate::service::WallClock::new(self.time_scale))
+        } else {
+            Box::new(crate::service::VirtualClock)
+        }
+    }
+
+    /// Clock name for the serve banner (`virtual` | `wall`).
+    pub fn clock_name(&self) -> &'static str {
+        if self.wall {
+            "wall"
+        } else {
+            "virtual"
+        }
+    }
+}
+
+/// Decode the front-end flags shared by `serve` and `replay`.
+pub fn parse_front_end_opts(args: &Args) -> Result<FrontEndOpts, String> {
+    let listen = match args.opt_str("listen") {
+        Some(s) => crate::service::ListenAddr::parse(&s)?,
+        None => crate::service::ListenAddr::Stdio,
+    };
+    let wall = match args.opt_str("clock").as_deref() {
+        None | Some("virtual") => false,
+        Some("wall") => true,
+        Some(other) => return Err(format!("unknown clock '{other}' (virtual|wall)")),
+    };
+    let time_scale = args.opt_f64("time-scale")?.unwrap_or(1.0);
+    if !(time_scale.is_finite() && time_scale > 0.0) {
+        return Err(format!("--time-scale must be positive, got {time_scale}"));
+    }
+    Ok(FrontEndOpts {
+        listen,
+        wall,
+        time_scale,
+    })
+}
+
 /// Apply the common overrides (--reps/--seed/--theta/--l/--interval/
 /// --backend/--config/...) to a SimConfig.
 pub fn apply_overrides(
@@ -301,6 +356,33 @@ mod tests {
         assert_eq!(o.shards, 1);
         assert!(o.steal);
         assert_eq!(o.route, crate::service::RoutePolicy::LeastLoaded);
+    }
+
+    #[test]
+    fn front_end_opts_parse() {
+        use crate::service::ListenAddr;
+        let a = Args::parse(&argv("serve")).unwrap();
+        let fe = parse_front_end_opts(&a).unwrap();
+        assert_eq!(fe.listen, ListenAddr::Stdio);
+        assert!(!fe.wall);
+        assert_eq!(fe.clock_name(), "virtual");
+        a.finish().unwrap();
+        let b = Args::parse(&argv(
+            "serve --listen unix:/tmp/r.sock --clock wall --time-scale 0.5",
+        ))
+        .unwrap();
+        let fe = parse_front_end_opts(&b).unwrap();
+        assert_eq!(fe.listen, ListenAddr::Unix("/tmp/r.sock".into()));
+        assert!(fe.wall);
+        assert_eq!(fe.time_scale, 0.5);
+        assert_eq!(fe.clock_name(), "wall");
+        b.finish().unwrap();
+        let c = Args::parse(&argv("serve --clock lunar")).unwrap();
+        assert!(parse_front_end_opts(&c).is_err());
+        let d = Args::parse(&argv("serve --time-scale -1")).unwrap();
+        assert!(parse_front_end_opts(&d).is_err());
+        let e = Args::parse(&argv("serve --listen carrier:pigeon")).unwrap();
+        assert!(parse_front_end_opts(&e).is_err());
     }
 
     #[test]

@@ -170,6 +170,26 @@ pub fn load_workload(path: &str) -> Result<OnlineWorkload, String> {
     workload_from_json(&Json::parse(&text)?)
 }
 
+/// Render a workload as a JSONL service session: one `submit` line per
+/// task in arrival order (offline batch first), optionally ending with a
+/// `shutdown`.  The output streams straight into `repro replay` / `repro
+/// serve` — it is how the CI socket-smoke job turns a generated workload
+/// into client scripts (`repro workload session`).
+pub fn workload_to_session(w: &OnlineWorkload, shutdown: bool) -> String {
+    let mut out = String::new();
+    for t in w.offline.tasks.iter().chain(w.online.tasks.iter()) {
+        out.push_str(
+            &obj(vec![("op", Json::Str("submit".into())), ("task", task_to_json(t))])
+                .render_compact(),
+        );
+        out.push('\n');
+    }
+    if shutdown {
+        out.push_str("{\"op\":\"shutdown\"}\n");
+    }
+    out
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -218,6 +238,28 @@ mod tests {
         assert_eq!(a.e_total(), b.e_total());
         assert_eq!(a.violations, b.violations);
         assert_eq!(a.servers_used, b.servers_used);
+    }
+
+    #[test]
+    fn workload_renders_as_a_replayable_session() {
+        let w = small_workload(5);
+        let session = workload_to_session(&w, true);
+        let lines: Vec<&str> = session.lines().collect();
+        assert_eq!(lines.len(), w.total_tasks() + 1, "one submit per task + shutdown");
+        assert_eq!(*lines.last().unwrap(), "{\"op\":\"shutdown\"}");
+        // arrivals are non-decreasing, so the stream replays in order
+        let mut last = 0.0;
+        for line in &lines[..lines.len() - 1] {
+            let j = Json::parse(line).unwrap();
+            assert_eq!(j.get("op").unwrap().as_str(), Some("submit"));
+            let a = j.get("task").unwrap().get("arrival").unwrap().as_f64().unwrap();
+            assert!(a >= last, "arrival went backwards: {a} < {last}");
+            last = a;
+        }
+        assert_eq!(
+            workload_to_session(&w, false).lines().count(),
+            w.total_tasks()
+        );
     }
 
     #[test]

@@ -17,7 +17,10 @@
 //! (`--backend pjrt`) runs every Algorithm-1 batch through the
 //! AOT-compiled XLA artifacts in `artifacts/`.
 
-use dvfs_sched::cli::{apply_overrides, parse_online_policy, parse_shard_opts, Args, ShardOpts};
+use dvfs_sched::cli::{
+    apply_overrides, parse_front_end_opts, parse_online_policy, parse_shard_opts, Args,
+    FrontEndOpts, ShardOpts,
+};
 use dvfs_sched::config::SimConfig;
 use dvfs_sched::experiments::{self, ExpCtx};
 use dvfs_sched::runtime::Solver;
@@ -73,9 +76,13 @@ fn print_help() {
          solve --app NAME            single-task DVFS optimization\n  \
          offline --u X [--policy P]  one offline scheduling cell\n  \
          online  [--policy edl|bin]  one online simulation cell\n  \
-         serve   [--policy edl|bin]  JSON-lines scheduling daemon on stdin\n  \
+         serve   [--policy edl|bin]  JSON-lines scheduling daemon\n  \
          replay FILE [--policy ...]  stream a JSONL session from a file\n  \
-         workload export|replay      save / replay a workload as JSON\n\n\
+         workload export|replay|session  save / replay / sessionize a workload\n\n\
+         front-end flags (serve): --listen stdio|unix:<path>|tcp:<addr>\n               \
+         --clock virtual|wall --time-scale SECS   (socket listeners serve\n               \
+         multiple concurrent sessions; the wall clock stamps arrival =\n               \
+         receipt time — see docs/PROTOCOL.md §Sessions)\n\n\
          sharding flags (serve/replay): --shards N --route least-loaded|energy|round-robin\n               \
          --batch-window SLOTS --no-steal   (any of them opts into the\n               \
          sharded multi-threaded service with batched EDF admission)\n\n\
@@ -253,13 +260,14 @@ fn cmd_offline(args: &Args) -> Result<(), String> {
 }
 
 /// `workload export --out FILE` / `workload replay --in FILE [--policy ..]`
+/// / `workload session --in FILE --out FILE [--no-shutdown]`
 fn cmd_workload(args: &Args) -> Result<(), String> {
     let mut cfg = SimConfig::default();
     apply_overrides(args, &mut cfg)?;
     let sub = args
         .positional
         .first()
-        .ok_or("usage: repro workload <export|replay> ...")?
+        .ok_or("usage: repro workload <export|replay|session> ...")?
         .clone();
     match sub.as_str() {
         "export" => {
@@ -302,22 +310,77 @@ fn cmd_workload(args: &Args) -> Result<(), String> {
             );
             Ok(())
         }
+        "session" => {
+            // turn a workload file into a JSONL session (one submit per
+            // task in arrival order) for `replay` or socket clients
+            let input = args.opt_str("in").ok_or("--in FILE required")?;
+            let out = args.opt_str("out").unwrap_or("session.jsonl".into());
+            let shutdown = !args.flag("no-shutdown");
+            args.finish()?;
+            let w = dvfs_sched::ext::trace::load_workload(&input)?;
+            let text = dvfs_sched::ext::trace::workload_to_session(&w, shutdown);
+            std::fs::write(&out, &text).map_err(|e| format!("writing {out}: {e}"))?;
+            println!(
+                "wrote {} request line(s) ({} tasks{}) to {out}",
+                text.lines().count(),
+                w.total_tasks(),
+                if shutdown { " + shutdown" } else { "" }
+            );
+            Ok(())
+        }
         other => Err(format!("unknown workload subcommand '{other}'")),
     }
 }
 
-/// Run one JSONL session (stdin or a replay file) through the unsharded
-/// daemon or — when any sharding flag was given — the sharded service.
-/// On bare EOF the service is drained so the energy books close.
+/// Drive one scheduling core through the shared session front end
+/// ([`dvfs_sched::service::session`]): a replay reader runs the
+/// synchronous single-session path; otherwise the configured listener is
+/// bound and served as multiplexed concurrent sessions (socket
+/// transports greet each client with a `hello`).  Returns whether a
+/// `shutdown` request ended the session(s).
+fn serve_front_end<C, R>(
+    core: &mut C,
+    fe: &FrontEndOpts,
+    replay: Option<R>,
+) -> Result<bool, String>
+where
+    C: dvfs_sched::service::ServiceCore + ?Sized,
+    R: std::io::BufRead,
+{
+    use dvfs_sched::service::{serve_mux, serve_session, ListenAddr};
+    let clock = fe.clock();
+    match replay {
+        Some(reader) => {
+            let stdout = std::io::stdout();
+            serve_session(core, clock.as_ref(), reader, stdout.lock())
+        }
+        None => {
+            let listener = fe.listen.bind()?;
+            let hello = fe.listen != ListenAddr::Stdio;
+            let res = serve_mux(core, clock.as_ref(), listener, hello);
+            if let ListenAddr::Unix(path) = &fe.listen {
+                // the acceptor may still hold the fd; removing the path
+                // is what frees the address for the next daemon
+                let _ = std::fs::remove_file(path);
+            }
+            res
+        }
+    }
+}
+
+/// Run one JSONL service (a bound listener, or a replay file when
+/// `replay` is `Some`) through the unsharded daemon or — when any
+/// sharding flag was given — the sharded service.  On bare EOF the
+/// service is drained so the energy books close.
 fn run_service_session<R: std::io::BufRead>(
     cfg: &SimConfig,
     kind: OnlinePolicyKind,
     dvfs: bool,
     mut opts: Option<ShardOpts>,
-    reader: R,
+    fe: &FrontEndOpts,
+    replay: Option<R>,
     source: &str,
 ) -> Result<(), String> {
-    let stdout = std::io::stdout();
     if !cfg.cluster.types.is_empty() && opts.is_none() {
         // typed fleets need the typed-pool service — even a SINGLE
         // configured type carries power/speed scales the plain daemon
@@ -348,8 +411,8 @@ fn run_service_session<R: std::io::BufRead>(
             )?;
             eprintln!(
                 "serve: {} policy, {} pairs (l={}) across {} shard(s), {} routing, \
-                 batch window {} slot(s), steal {} — JSONL requests on {source} \
-                 (submit/query/snapshot/shutdown)",
+                 batch window {} slot(s), steal {} — JSONL sessions on {source}, \
+                 {} clock (submit/query/snapshot/ping/shutdown)",
                 kind.name(),
                 cfg.cluster.total_pairs,
                 cfg.cluster.pairs_per_server,
@@ -357,8 +420,9 @@ fn run_service_session<R: std::io::BufRead>(
                 o.route.name(),
                 o.window,
                 if o.steal { "on" } else { "off" },
+                fe.clock_name(),
             );
-            let shutdown = svc.serve(reader, stdout.lock())?;
+            let shutdown = serve_front_end(&mut svc, fe, replay)?;
             if !shutdown {
                 for line in svc.shutdown() {
                     println!("{}", line.render_compact());
@@ -369,14 +433,15 @@ fn run_service_session<R: std::io::BufRead>(
             let solver = Solver::from_config(cfg);
             let mut svc = dvfs_sched::service::Service::new(cfg, kind, dvfs, &solver);
             eprintln!(
-                "serve: {} policy, {} pairs (l={}), backend {} — JSONL requests on \
-                 {source} (submit/query/snapshot/shutdown)",
+                "serve: {} policy, {} pairs (l={}), backend {} — JSONL sessions on \
+                 {source}, {} clock (submit/query/snapshot/ping/shutdown)",
                 kind.name(),
                 cfg.cluster.total_pairs,
                 cfg.cluster.pairs_per_server,
-                solver.backend_name()
+                solver.backend_name(),
+                fe.clock_name(),
             );
-            let shutdown = svc.serve(reader, stdout.lock())?;
+            let shutdown = serve_front_end(&mut svc, fe, replay)?;
             if !shutdown {
                 println!("{}", svc.shutdown().render_compact());
             }
@@ -385,20 +450,35 @@ fn run_service_session<R: std::io::BufRead>(
     Ok(())
 }
 
-/// `repro serve`: long-running JSON-lines scheduling daemon on stdin.
+/// `repro serve`: long-running JSON-lines scheduling daemon on stdio or
+/// a unix/TCP socket (`--listen`), on virtual or wall time (`--clock`).
 fn cmd_serve(args: &Args) -> Result<(), String> {
     let mut cfg = SimConfig::default();
     apply_overrides(args, &mut cfg)?;
     let kind = parse_online_policy(&args.opt_str("policy").unwrap_or("edl".into()))?;
     let dvfs = !args.flag("no-dvfs");
     let opts = parse_shard_opts(args)?;
+    let fe = parse_front_end_opts(args)?;
     args.finish()?;
 
-    let stdin = std::io::stdin();
-    run_service_session(&cfg, kind, dvfs, opts, stdin.lock(), "stdin")
+    let source = match &fe.listen {
+        dvfs_sched::service::ListenAddr::Stdio => "stdio".to_string(),
+        dvfs_sched::service::ListenAddr::Unix(p) => format!("unix:{}", p.display()),
+        dvfs_sched::service::ListenAddr::Tcp(a) => format!("tcp:{a}"),
+    };
+    run_service_session(
+        &cfg,
+        kind,
+        dvfs,
+        opts,
+        &fe,
+        None::<std::io::BufReader<std::fs::File>>,
+        &source,
+    )
 }
 
-/// `repro replay <file>`: stream a recorded JSONL session end-to-end.
+/// `repro replay <file>`: stream a recorded JSONL session end-to-end
+/// through the synchronous front end (virtual clock by default).
 fn cmd_replay(args: &Args) -> Result<(), String> {
     let mut cfg = SimConfig::default();
     apply_overrides(args, &mut cfg)?;
@@ -410,11 +490,14 @@ fn cmd_replay(args: &Args) -> Result<(), String> {
     let kind = parse_online_policy(&args.opt_str("policy").unwrap_or("edl".into()))?;
     let dvfs = !args.flag("no-dvfs");
     let opts = parse_shard_opts(args)?;
+    let mut fe = parse_front_end_opts(args)?;
+    // a replay file IS the session; any --listen flag is irrelevant here
+    fe.listen = dvfs_sched::service::ListenAddr::Stdio;
     args.finish()?;
 
     let file = std::fs::File::open(&path).map_err(|e| format!("opening {path}: {e}"))?;
     let reader = std::io::BufReader::new(file);
-    run_service_session(&cfg, kind, dvfs, opts, reader, &path)
+    run_service_session(&cfg, kind, dvfs, opts, &fe, Some(reader), &path)
 }
 
 fn cmd_online(args: &Args) -> Result<(), String> {

@@ -1,0 +1,173 @@
+//! Pluggable service time sources.
+//!
+//! The scheduling cores ([`crate::service::Service`],
+//! [`crate::service::ShardedService`]) run on a *logical* clock advanced
+//! by submitted arrival times.  Where that logical time comes from is the
+//! front end's choice, abstracted by [`Clock`]:
+//!
+//! * [`VirtualClock`] — replay semantics: the submitted `arrival` field
+//!   *is* the time.  A recorded session replays bit-identically no matter
+//!   how fast the transport delivers it; this is the paper-faithful mode
+//!   and the oracle for every equivalence property test.
+//! * [`WallClock`] — live-service semantics: a task arrives when its
+//!   request is received (`arrival` = receipt time), whatever the client
+//!   wrote in the `arrival` field, and the front-end event loop wakes on
+//!   real-time boundaries so batched admission windows flush when their
+//!   wall-clock slot passes even if no further request ever arrives.
+//!
+//! Workload time is in the paper's abstract slots (minutes in Sec. 5.1);
+//! [`WallClock::scale`] maps real seconds onto slots so demos don't have
+//! to wait a literal day for a 1440-slot horizon.
+
+use std::time::{Duration, Instant};
+
+/// A source of service time for the session front end
+/// ([`crate::service::session`]).
+pub trait Clock {
+    /// The arrival timestamp to use for a submission whose request named
+    /// `requested` (virtual time passes it through; wall time overrides
+    /// it with the receipt time).
+    fn stamp(&self, requested: f64) -> f64;
+
+    /// Real time now, in workload slots — `None` for a virtual clock
+    /// (time only moves when submissions say so).
+    fn now(&self) -> Option<f64>;
+
+    /// How long the multiplexed event loop may block waiting for input
+    /// before it must wake and offer the core a timer tick; `None` blocks
+    /// indefinitely (virtual time never advances on its own).
+    fn poll(&self) -> Option<Duration>;
+
+    /// Canonical name on the wire (`hello` responses): `virtual` | `wall`.
+    fn name(&self) -> &'static str;
+}
+
+/// Replay time: submissions carry their own arrival timestamps.
+///
+/// # Examples
+///
+/// ```
+/// use dvfs_sched::service::{Clock, VirtualClock};
+///
+/// let c = VirtualClock;
+/// assert_eq!(c.stamp(42.0), 42.0);
+/// assert_eq!(c.now(), None);
+/// assert_eq!(c.name(), "virtual");
+/// ```
+#[derive(Clone, Copy, Debug, Default)]
+pub struct VirtualClock;
+
+impl Clock for VirtualClock {
+    fn stamp(&self, requested: f64) -> f64 {
+        requested
+    }
+
+    fn now(&self) -> Option<f64> {
+        None
+    }
+
+    fn poll(&self) -> Option<Duration> {
+        None
+    }
+
+    fn name(&self) -> &'static str {
+        "virtual"
+    }
+}
+
+/// Wall time: arrival = receipt time, measured from the clock's creation.
+///
+/// # Examples
+///
+/// ```
+/// use dvfs_sched::service::{Clock, WallClock};
+///
+/// let c = WallClock::new(60.0); // one workload slot per real minute
+/// // whatever the request claimed, the stamp is the receipt time
+/// let stamped = c.stamp(9999.0);
+/// assert!(stamped < 1.0, "service just started: {stamped}");
+/// assert_eq!(c.name(), "wall");
+/// ```
+#[derive(Clone, Debug)]
+pub struct WallClock {
+    /// Service epoch (t = 0 in workload time).
+    start: Instant,
+    /// Real seconds per workload slot.
+    scale: f64,
+}
+
+impl WallClock {
+    /// A wall clock whose workload slot lasts `seconds_per_slot` real
+    /// seconds (the CLI's `--time-scale`, default 1.0).  Non-positive and
+    /// non-finite scales are clamped to 1.0 — a zero scale would make
+    /// every duration infinite.
+    pub fn new(seconds_per_slot: f64) -> WallClock {
+        let scale = if seconds_per_slot.is_finite() && seconds_per_slot > 0.0 {
+            seconds_per_slot
+        } else {
+            1.0
+        };
+        WallClock {
+            start: Instant::now(),
+            scale,
+        }
+    }
+
+    /// Real seconds per workload slot.
+    pub fn scale(&self) -> f64 {
+        self.scale
+    }
+}
+
+impl Clock for WallClock {
+    fn stamp(&self, _requested: f64) -> f64 {
+        self.start.elapsed().as_secs_f64() / self.scale
+    }
+
+    fn now(&self) -> Option<f64> {
+        Some(self.start.elapsed().as_secs_f64() / self.scale)
+    }
+
+    fn poll(&self) -> Option<Duration> {
+        // fine enough to flush a batch window promptly, coarse enough to
+        // stay invisible in profiles
+        Some(Duration::from_millis(20))
+    }
+
+    fn name(&self) -> &'static str {
+        "wall"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn virtual_clock_passes_arrivals_through() {
+        let c = VirtualClock;
+        assert_eq!(c.stamp(0.0), 0.0);
+        assert_eq!(c.stamp(1e9), 1e9);
+        assert!(c.now().is_none());
+        assert!(c.poll().is_none());
+    }
+
+    #[test]
+    fn wall_clock_stamps_receipt_time() {
+        let c = WallClock::new(0.001); // 1 slot per millisecond
+        let a = c.stamp(1e12);
+        std::thread::sleep(Duration::from_millis(5));
+        let b = c.stamp(0.0);
+        assert!(b > a, "wall time moves on its own: {a} -> {b}");
+        assert!(c.now().unwrap() >= b);
+        assert!(c.poll().is_some());
+    }
+
+    #[test]
+    fn degenerate_scales_clamp() {
+        assert_eq!(WallClock::new(0.0).scale(), 1.0);
+        assert_eq!(WallClock::new(-3.0).scale(), 1.0);
+        assert_eq!(WallClock::new(f64::NAN).scale(), 1.0);
+        assert_eq!(WallClock::new(2.5).scale(), 2.5);
+    }
+}

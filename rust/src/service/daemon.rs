@@ -21,9 +21,9 @@ use crate::sched::online::{OnlinePolicy, SchedCtx};
 use crate::service::admission::{AdmissionController, Verdict};
 use crate::service::events::EventEngine;
 use crate::service::metrics::Snapshot;
-use crate::service::protocol::{
-    error_response, num, obj, parse_request, s, Request, SubmitOpts, TypePref,
-};
+use crate::service::protocol::{num, obj, pong, s, Request, SubmitOpts, TypePref};
+use crate::service::session::{serve_session, ServiceCore};
+use crate::service::VirtualClock;
 use crate::sim::online::OnlinePolicyKind;
 use crate::tasks::Task;
 use crate::util::json::Json;
@@ -413,27 +413,35 @@ impl<'a> Service<'a> {
             Request::Submit(task, opts) => (self.submit_with(task, opts), false),
             Request::Query { id } => (self.query(id), false),
             Request::Snapshot => (self.snapshot_json("snapshot"), false),
+            Request::Ping => (pong(), false),
             Request::Shutdown => (self.shutdown(), true),
         }
     }
 
-    /// Serve a JSON-lines session until `shutdown` or EOF.  Returns
-    /// whether a shutdown was requested (callers drain on bare EOF).
-    pub fn serve<R: BufRead, W: Write>(&mut self, reader: R, mut writer: W) -> Result<bool, String> {
-        for line in reader.lines() {
-            let line = line.map_err(|e| format!("reading request line: {e}"))?;
-            let (resp, stop) = match parse_request(&line) {
-                Ok(None) => continue,
-                Ok(Some(req)) => self.handle(req),
-                Err(e) => (error_response(&e), false),
-            };
-            writeln!(writer, "{}", resp.render_compact())
-                .map_err(|e| format!("writing response: {e}"))?;
-            if stop {
-                return Ok(true);
-            }
-        }
-        Ok(false)
+    /// Serve a JSON-lines session until `shutdown` or EOF, through the
+    /// shared front end ([`crate::service::session::serve_session`]) on a
+    /// virtual clock — byte-identical to the pre-front-end daemon loop.
+    /// Returns whether a shutdown was requested (callers drain on bare
+    /// EOF).
+    pub fn serve<R: BufRead, W: Write>(&mut self, reader: R, writer: W) -> Result<bool, String> {
+        serve_session(self, &VirtualClock, reader, writer)
+    }
+}
+
+/// The unsharded daemon answers every request immediately, so the front
+/// end's pending queue never holds more than the request in flight.
+impl ServiceCore for Service<'_> {
+    fn serve_request(&mut self, req: Request) -> (Vec<Json>, bool) {
+        let (resp, stop) = self.handle(req);
+        (vec![resp], stop)
+    }
+
+    fn flush_pending(&mut self) -> Vec<Json> {
+        Vec::new() // nothing is ever deferred
+    }
+
+    fn tick(&mut self, _now: f64) -> Vec<Json> {
+        Vec::new() // no admission window to expire
     }
 }
 

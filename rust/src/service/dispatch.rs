@@ -46,10 +46,10 @@ use crate::ext::hetero::{select_type, TypeParams};
 use crate::service::admission::{AdmissionController, Verdict};
 use crate::service::daemon::{RecordStore, TaskRecord};
 use crate::service::metrics::Snapshot;
-use crate::service::protocol::{
-    error_response, num, obj, parse_request, s, Request, SubmitOpts, TypePref,
-};
+use crate::service::protocol::{num, obj, pong, s, Request, SubmitOpts, TypePref};
+use crate::service::session::{serve_session, ServiceCore};
 use crate::service::shard::{BatchReply, Placement, ServiceTask, ShardJob, ShardLoad, ShardPool};
+use crate::service::VirtualClock;
 use crate::sim::online::OnlinePolicyKind;
 use crate::tasks::Task;
 use crate::util::json::Json;
@@ -133,15 +133,19 @@ pub struct ShardedService {
     pool: ShardPool,
     route: RoutePolicy,
     rr_next: usize,
-    /// Last load summary each shard reported.
+    /// Last load summary each shard reported (whole-shard totals plus the
+    /// per-GPU-type breakdown routing compares on).
     loads: Vec<ShardLoad>,
     /// `t_min` work dispatched to each shard during the current flush and
-    /// not yet acknowledged by a reply.
-    inflight: Vec<f64>,
+    /// not yet acknowledged by a reply, split per GPU type
+    /// (`inflight[shard][type]`) so typed routing charges the in-flight
+    /// work against the pool it actually lands on.
+    inflight: Vec<Vec<f64>>,
     /// Pairs' worth of unacknowledged work (Σ gang widths) routed to each
-    /// shard this flush — the in-flight delta that lets energy-greedy
-    /// routing see turn-on decisions before the next load report lands.
-    inflight_pairs: Vec<usize>,
+    /// shard this flush, per GPU type — the in-flight delta that lets
+    /// energy-greedy routing see turn-on decisions before the next load
+    /// report lands.
+    inflight_pairs: Vec<Vec<usize>>,
     /// Queue depth each shard last reported (jobs still pending behind
     /// its freshest load summary).
     queue_depth: Vec<usize>,
@@ -207,14 +211,15 @@ impl ShardedService {
                 speed_scale: t.speed_scale,
             })
             .collect();
+        let n_types = fleet.len();
         let pool = ShardPool::new(views, kind, dvfs, cfg.interval, cfg.theta, steal);
         Ok(ShardedService {
             pool,
             route,
             rr_next: 0,
             loads: vec![ShardLoad::default(); n_shards],
-            inflight: vec![0.0; n_shards],
-            inflight_pairs: vec![0; n_shards],
+            inflight: vec![vec![0.0; n_types]; n_shards],
+            inflight_pairs: vec![vec![0; n_types]; n_shards],
             queue_depth: vec![0; n_shards],
             window,
             batch: Vec::new(),
@@ -471,13 +476,18 @@ impl ShardedService {
         } else {
             CHUNK
         };
-        self.inflight.fill(0.0);
-        self.inflight_pairs.fill(0);
+        for v in &mut self.inflight {
+            v.fill(0.0);
+        }
+        for v in &mut self.inflight_pairs {
+            v.fill(0);
+        }
         let (tx, rx) = mpsc::channel();
         // tag → the chunk's original submission indices, in chunk order
         let mut chunk_map: Vec<Vec<usize>> = Vec::new();
-        // tag → (routed shard, t_min cost, pairs) for reply-time deltas
-        let mut chunk_meta: Vec<(usize, f64, usize)> = Vec::new();
+        // tag → (routed shard, type, t_min cost, pairs) for reply-time
+        // deltas
+        let mut chunk_meta: Vec<(usize, usize, f64, usize)> = Vec::new();
         let mut out = Vec::with_capacity(admitted.len());
         // stable partition of the EDF batch by resolved type
         let mut by_type: Vec<Vec<&(usize, ServiceTask)>> = vec![Vec::new(); self.fleet.len()];
@@ -507,12 +517,12 @@ impl ShardedService {
                     .map(|k| k.g as f64 * k.task.model.t_min(&self.iv))
                     .sum();
                 let pairs: usize = tasks.iter().map(|k| k.g).sum();
-                let shard = self.route_chunk(&eligible);
-                self.inflight[shard] += cost;
-                self.inflight_pairs[shard] += pairs;
+                let shard = self.route_chunk(&eligible, ti);
+                self.inflight[shard][ti] += cost;
+                self.inflight_pairs[shard][ti] += pairs;
                 let tag = chunk_map.len() as u64;
                 chunk_map.push(group.iter().map(|e| e.0).collect());
-                chunk_meta.push((shard, cost, pairs));
+                chunk_meta.push((shard, ti, cost, pairs));
                 self.pool.send(
                     shard,
                     ShardJob::Batch {
@@ -538,20 +548,20 @@ impl ShardedService {
     fn apply_reply(
         &mut self,
         reply: &BatchReply,
-        chunk_meta: &[(usize, f64, usize)],
+        chunk_meta: &[(usize, usize, f64, usize)],
         chunk_map: &[Vec<usize>],
         out: &mut Vec<(usize, Placement)>,
     ) {
         // per-shard replies arrive in processing order, so the last one
         // seen per shard is its freshest load
-        self.loads[reply.shard] = reply.load;
+        self.loads[reply.shard] = reply.load.clone();
         self.queue_depth[reply.shard] = reply.queued;
-        // release the in-flight estimate from the shard the chunk was
-        // ROUTED to (under stealing the executor can differ — its load
-        // report above already reflects the stolen work)
-        let (routed, cost, pairs) = chunk_meta[reply.tag as usize];
-        self.inflight[routed] = (self.inflight[routed] - cost).max(0.0);
-        self.inflight_pairs[routed] = self.inflight_pairs[routed].saturating_sub(pairs);
+        // release the in-flight estimate from the shard (and type pool)
+        // the chunk was ROUTED to (under stealing the executor can differ
+        // — its load report above already reflects the stolen work)
+        let (routed, ti, cost, pairs) = chunk_meta[reply.tag as usize];
+        self.inflight[routed][ti] = (self.inflight[routed][ti] - cost).max(0.0);
+        self.inflight_pairs[routed][ti] = self.inflight_pairs[routed][ti].saturating_sub(pairs);
         let idxs = &chunk_map[reply.tag as usize];
         assert_eq!(idxs.len(), reply.placements.len());
         for (j, p) in reply.placements.iter().enumerate() {
@@ -560,9 +570,13 @@ impl ShardedService {
     }
 
     /// Pick a shard for the next chunk among `eligible` (shards owning
-    /// the chunk's GPU type).  Loads = freshest report + in-flight work
-    /// routed earlier in this flush and not yet acknowledged.
-    fn route_chunk(&mut self, eligible: &[usize]) -> usize {
+    /// the chunk's GPU type `ti`).  Loads are compared **on the resolved
+    /// type's pool**, not the whole shard ([`ShardLoad::for_type`]): a
+    /// shard drowning in big-GPU work but idle on small GPUs is still the
+    /// right home for a small-GPU chunk.  Keys = freshest per-type report
+    /// + in-flight work routed to that pool earlier in this flush and not
+    /// yet acknowledged.
+    fn route_chunk(&mut self, eligible: &[usize], ti: usize) -> usize {
         debug_assert!(!eligible.is_empty());
         match self.route {
             RoutePolicy::RoundRobin => {
@@ -574,8 +588,9 @@ impl ShardedService {
                 let mut best = eligible[0];
                 let mut best_key = (f64::INFINITY, f64::INFINITY);
                 for &k in eligible {
+                    let tl = self.loads[k].for_type(ti);
                     let key = (
-                        self.loads[k].backlog + self.inflight[k],
+                        tl.backlog + self.inflight[k][ti],
                         self.queue_depth[k] as f64,
                     );
                     if key < best_key {
@@ -586,9 +601,10 @@ impl ShardedService {
                 best
             }
             RoutePolicy::EnergyGreedy => {
-                // shards with idle powered-on capacity absorb work at zero
-                // Δ cost; among shards that would have to open a server,
-                // prefer ones that still *can* (servers_off > 0) over
+                // shards with idle powered-on capacity *of this type*
+                // absorb work at zero Δ cost; among shards that would
+                // have to open a server, prefer ones that still *can*
+                // (servers_off > 0 in the type's pool) over
                 // fully-committed ones that could only queue; among
                 // equals, least effective load wins.  Capacity is judged
                 // net of this flush's un-acknowledged routing (the
@@ -598,19 +614,20 @@ impl ShardedService {
                 let mut best = eligible[0];
                 let mut best_key = (f64::INFINITY, f64::INFINITY, f64::INFINITY, f64::INFINITY);
                 for &k in eligible {
-                    let idle_eff = self.loads[k].idle_on.saturating_sub(self.inflight_pairs[k]);
+                    let tl = self.loads[k].for_type(ti);
+                    let idle_eff = tl.idle_on.saturating_sub(self.inflight_pairs[k][ti]);
                     // pairs routed beyond the idle pool imply in-flight
                     // server turn-ons eating into servers_off
-                    let overflow = self.inflight_pairs[k].saturating_sub(self.loads[k].idle_on);
+                    let overflow = self.inflight_pairs[k][ti].saturating_sub(tl.idle_on);
                     let l = self.l.max(1);
                     let opening = overflow / l + usize::from(overflow % l != 0);
-                    let off_eff = self.loads[k].servers_off.saturating_sub(opening);
+                    let off_eff = tl.servers_off.saturating_sub(opening);
                     let no_free_capacity = if idle_eff > 0 { 0.0 } else { 1.0 };
                     let saturated = if idle_eff == 0 && off_eff == 0 { 1.0 } else { 0.0 };
                     let key = (
                         no_free_capacity,
                         saturated,
-                        self.loads[k].backlog + self.inflight[k],
+                        tl.backlog + self.inflight[k][ti],
                         self.queue_depth[k] as f64,
                     );
                     if key < best_key {
@@ -696,7 +713,8 @@ impl ShardedService {
 
     /// Dispatch one decoded request.  Returns (responses, stop-serving).
     /// Non-submit requests flush the pending batch first, so responses
-    /// always come back in request order.
+    /// always come back in request order (`ping` is the one out-of-band
+    /// exception — the front end normally intercepts it).
     pub fn handle(&mut self, req: Request) -> (Vec<Json>, bool) {
         match req {
             Request::Submit(task, opts) => (self.submit_with(task, opts), false),
@@ -711,45 +729,45 @@ impl ShardedService {
                 out.push(snap);
                 (out, false)
             }
+            Request::Ping => (vec![pong()], false),
             Request::Shutdown => (self.shutdown(), true),
         }
     }
 
     /// Serve a JSON-lines session until `shutdown` or EOF (the sharded
-    /// counterpart of [`crate::service::Service::serve`]).  On bare EOF
-    /// the pending batch is flushed so every submit got its response;
-    /// returns whether a shutdown was requested (callers drain on EOF).
-    pub fn serve<R: BufRead, W: Write>(
-        &mut self,
-        reader: R,
-        mut writer: W,
-    ) -> Result<bool, String> {
-        for line in reader.lines() {
-            let line = line.map_err(|e| format!("reading request line: {e}"))?;
-            let (resps, stop) = match parse_request(&line) {
-                Ok(None) => continue,
-                Ok(Some(req)) => self.handle(req),
-                Err(e) => {
-                    // release the pending batch first so the error line
-                    // lands in request order, like every other path
-                    let mut out = self.flush();
-                    out.push(error_response(&e));
-                    (out, false)
-                }
-            };
-            for r in &resps {
-                writeln!(writer, "{}", r.render_compact())
-                    .map_err(|e| format!("writing response: {e}"))?;
-            }
-            if stop {
-                return Ok(true);
-            }
+    /// counterpart of [`crate::service::Service::serve`]), through the
+    /// shared front end ([`crate::service::session::serve_session`]) on a
+    /// virtual clock.  On bare EOF the pending batch is flushed so every
+    /// submit got its response; returns whether a shutdown was requested
+    /// (callers drain on EOF).
+    pub fn serve<R: BufRead, W: Write>(&mut self, reader: R, writer: W) -> Result<bool, String> {
+        serve_session(self, &VirtualClock, reader, writer)
+    }
+}
+
+/// Batched-admission front-end contract: deferred submit responses are
+/// released in request order by the next flush, wherever it comes from —
+/// a later request, EOF ([`ServiceCore::flush_pending`]), or a wall-clock
+/// window expiry ([`ServiceCore::tick`]).
+impl ServiceCore for ShardedService {
+    fn serve_request(&mut self, req: Request) -> (Vec<Json>, bool) {
+        self.handle(req)
+    }
+
+    fn flush_pending(&mut self) -> Vec<Json> {
+        self.flush()
+    }
+
+    fn tick(&mut self, now: f64) -> Vec<Json> {
+        // flush once real time leaves the pending batch's admission slot
+        // — the wall-clock analogue of a later-slot submit forcing the
+        // flush in virtual time
+        let expired = now >= (self.batch_slot + 1.0) * self.window;
+        if self.window > 0.0 && !self.batch.is_empty() && expired {
+            self.flush()
+        } else {
+            Vec::new()
         }
-        for r in self.flush() {
-            writeln!(writer, "{}", r.render_compact())
-                .map_err(|e| format!("writing response: {e}"))?;
-        }
-        Ok(false)
     }
 }
 
@@ -770,6 +788,7 @@ fn render_snapshot(snap: Snapshot, op: &str, drained: bool) -> Json {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::service::shard::TypeLoad;
     use crate::tasks::LIBRARY;
 
     fn small_cfg() -> SimConfig {
@@ -987,31 +1006,98 @@ mod tests {
             false,
         )
         .unwrap();
-        svc.loads[0] = ShardLoad {
-            backlog: 0.0,
-            idle_on: 2,
-            servers_off: 0,
-        };
-        svc.loads[1] = ShardLoad {
-            backlog: 0.0,
-            idle_on: 0,
-            servers_off: 8,
-        };
+        svc.loads[0] = ShardLoad::homogeneous(0.0, 2, 0);
+        svc.loads[1] = ShardLoad::homogeneous(0.0, 0, 8);
         let eligible = [0usize, 1];
-        let first = svc.route_chunk(&eligible);
+        let first = svc.route_chunk(&eligible, 0);
         assert_eq!(first, 0, "free idle capacity wins");
         // simulate routing an 8-task chunk there (dispatch() does this)
-        svc.inflight_pairs[0] += 8;
-        svc.inflight[0] += 100.0;
-        let second = svc.route_chunk(&eligible);
+        svc.inflight_pairs[0][0] += 8;
+        svc.inflight[0][0] += 100.0;
+        let second = svc.route_chunk(&eligible, 0);
         assert_eq!(
             second, 1,
             "shard 0's idle pairs are consumed in flight; shard 1 can still open servers"
         );
         // an acknowledgment releases the delta again
-        svc.inflight_pairs[0] = 0;
-        svc.inflight[0] = 0.0;
-        assert_eq!(svc.route_chunk(&eligible), 0);
+        svc.inflight_pairs[0][0] = 0;
+        svc.inflight[0][0] = 0.0;
+        assert_eq!(svc.route_chunk(&eligible, 0), 0);
+    }
+
+    #[test]
+    fn routing_compares_load_on_the_resolved_type() {
+        // ROADMAP per-type-load fix: shard 0 is drowning in type-B work
+        // but idle on type A; shard 1 is the reverse.  Whole-shard
+        // backlogs would route an A-chunk to shard 1 (50 < 100) — the
+        // per-type comparison must route it to shard 0 (A backlog 0).
+        let mut cfg = small_cfg();
+        cfg.cluster.pairs_per_server = 2;
+        cfg.cluster.types = vec![
+            crate::config::GpuTypeSpec {
+                name: "A".into(),
+                servers: 8,
+                power_scale: 1.0,
+                speed_scale: 1.0,
+            },
+            crate::config::GpuTypeSpec {
+                name: "B".into(),
+                servers: 8,
+                power_scale: 1.2,
+                speed_scale: 1.5,
+            },
+        ];
+        cfg.cluster.total_pairs = 32;
+        let mut svc = ShardedService::new(
+            &cfg,
+            OnlinePolicyKind::Edl,
+            true,
+            2,
+            RoutePolicy::LeastLoaded,
+            1.0,
+            false,
+        )
+        .unwrap();
+        let mk_load = |a: TypeLoad, b: TypeLoad| ShardLoad {
+            backlog: a.backlog + b.backlog,
+            idle_on: a.idle_on + b.idle_on,
+            servers_off: a.servers_off + b.servers_off,
+            by_type: vec![a, b],
+        };
+        let tl = |backlog: f64, idle_on: usize, servers_off: usize| TypeLoad {
+            backlog,
+            idle_on,
+            servers_off,
+        };
+        svc.loads[0] = mk_load(tl(0.0, 2, 0), tl(100.0, 0, 0));
+        svc.loads[1] = mk_load(tl(50.0, 1, 0), tl(0.0, 3, 0));
+        let eligible = [0usize, 1];
+        assert_eq!(svc.route_chunk(&eligible, 0), 0, "type-A load decides");
+        assert_eq!(svc.route_chunk(&eligible, 1), 1, "type-B load decides");
+        // energy-greedy: same story with idle capacity — shard 1 has the
+        // only powered-on idle B pairs, whatever its whole-shard state
+        svc.route = RoutePolicy::EnergyGreedy;
+        svc.loads[0] = mk_load(tl(0.0, 4, 8), tl(0.0, 0, 0));
+        svc.loads[1] = mk_load(tl(10.0, 0, 0), tl(10.0, 2, 4));
+        assert_eq!(svc.route_chunk(&eligible, 1), 1, "B idle capacity wins");
+        assert_eq!(svc.route_chunk(&eligible, 0), 0, "A idle capacity wins");
+    }
+
+    #[test]
+    fn sharded_core_ticks_an_expired_wall_window() {
+        // ServiceCore::tick is the wall-clock flush path: a pending batch
+        // whose admission slot has passed must flush on a timer tick,
+        // releasing the deferred responses without any further request
+        let mut service = svc(2, 2.0);
+        assert!(service.submit(mk_task(0, 0.5, 0.5, 10.0)).is_empty());
+        // still inside slot [0, 2): nothing to release
+        assert!(service.tick(1.0).is_empty());
+        let out = service.tick(2.5);
+        assert_eq!(out.len(), 1, "window expired: deferred response released");
+        assert_eq!(out[0].get("id").unwrap().as_f64(), Some(0.0));
+        assert_eq!(out[0].get("admitted"), Some(&Json::Bool(true)));
+        let fin = service.shutdown();
+        assert_eq!(fin.len(), 1, "nothing left pending");
     }
 
     #[test]

@@ -19,6 +19,12 @@
 //!    fully-idle server reaches the ρ threshold; stale checks (the server
 //!    was re-used or already turned off) validate and drop out.
 //! 3. **Arrival batches** — dispatched to the [`OnlinePolicy`].
+//!
+//! The engine's time is *logical*: it advances only when a caller runs it
+//! to a submitted arrival (or to completion).  Where those timestamps
+//! come from — replayed virtual time or live wall-clock receipt time —
+//! is decided one layer up by [`crate::service::clock`]; the engine never
+//! reads a real clock, which is what keeps replays bit-identical.
 
 use crate::cluster::{Cluster, PairPower};
 use crate::sched::online::{OnlinePolicy, SchedCtx};

@@ -8,6 +8,12 @@
 //! * one shard's fragment of the sharded service's state, and
 //! * the merged cluster-wide view ([`Snapshot::merge`] sums the ledgers
 //!   and concatenates the per-node idle-energy arrays in shard order).
+//!
+//! Whatever transport a `snapshot` request arrives on (stdio, unix
+//! socket, TCP — see [`crate::service::transport`]), all sessions share
+//! one scheduler, so a snapshot always reports the *merged* view of
+//! every client's traffic; per-session response routing happens in the
+//! front end, not here.
 
 use crate::cluster::{Cluster, PairPower};
 use crate::sched::online::PolicyStats;

@@ -19,22 +19,37 @@
 //!   graceful drain.
 //! * [`shard`] — cluster partitions on worker threads: per-shard event
 //!   loops, job queues, and batch work stealing.
-//! * [`dispatch`] — the sharded front-end ([`dispatch::ShardedService`],
+//! * [`dispatch`] — the sharded dispatcher ([`dispatch::ShardedService`],
 //!   `repro serve --shards N`): batched EDF admission, pluggable chunk
 //!   routing, merged snapshots.
+//! * [`transport`] — where sessions come from: stdio, unix-socket, and
+//!   TCP listeners, each yielding framed line [`transport::Connection`]s.
+//! * [`clock`] — pluggable time: [`clock::VirtualClock`] replay semantics
+//!   vs [`clock::WallClock`] arrival-equals-receipt live semantics.
+//! * [`session`] — the transport-agnostic front end both cores sit
+//!   behind ([`session::ServiceCore`]): single-session
+//!   ([`session::serve_session`]) and multiplexed concurrent clients
+//!   ([`session::serve_mux`]) with strict per-session response ordering
+//!   and `rid` request tagging.
 
 pub mod admission;
+pub mod clock;
 pub mod daemon;
 pub mod dispatch;
 pub mod events;
 pub mod metrics;
 pub mod protocol;
+pub mod session;
 pub mod shard;
+pub mod transport;
 
 pub use admission::{AdmissionController, Verdict};
+pub use clock::{Clock, VirtualClock, WallClock};
 pub use daemon::{RecordStore, Service, TaskRecord};
 pub use dispatch::{RoutePolicy, ShardedService};
 pub use events::EventEngine;
 pub use metrics::Snapshot;
-pub use protocol::{parse_request, Request, SubmitOpts, TypePref};
-pub use shard::{Placement, ServiceTask, Shard, ShardLoad, ShardPool};
+pub use protocol::{parse_request, parse_request_rid, Request, SubmitOpts, TypePref};
+pub use session::{serve_mux, serve_session, ServiceCore};
+pub use shard::{Placement, ServiceTask, Shard, ShardLoad, ShardPool, TypeLoad};
+pub use transport::{Connection, ListenAddr, Listener, StaticListener, StdioListener};

@@ -9,6 +9,7 @@
 //! {"op":"submit","task":{...},"gpu_type":"bigGPU","g":4}
 //! {"op":"query","id":1}
 //! {"op":"snapshot"}
+//! {"op":"ping"}
 //! {"op":"shutdown"}
 //! ```
 //!
@@ -16,6 +17,12 @@
 //! resolved to the feasible-minimum-energy type per task — and `g`
 //! (default 1) is the gang width: pairs the task occupies simultaneously
 //! on one server (see `docs/PROTOCOL.md`).
+//!
+//! Any request may carry a `rid` field (any JSON value): the matching
+//! response echoes it verbatim, which is how multiplexed clients
+//! correlate deferred batch responses (see [`crate::service::session`]).
+//! `ping` is an out-of-band liveness probe answered by the front end
+//! without flushing a pending batch.
 //!
 //! The task schema is exactly the workload-file schema
 //! ([`crate::ext::trace`]), so `repro workload export` output can be
@@ -77,6 +84,10 @@ pub enum Request {
     Query { id: usize },
     /// Report live metrics.
     Snapshot,
+    /// Out-of-band liveness probe: the session front end answers it
+    /// directly (clock mode, live sessions, accepted requests) without
+    /// flushing a pending batch; a bare core answers a minimal [`pong`].
+    Ping,
     /// Graceful drain: finish everything queued, power down, report.
     Shutdown,
 }
@@ -96,6 +107,13 @@ pub enum Request {
 /// assert!(parse_request(r#"{"op":"warp"}"#).is_err());
 /// ```
 pub fn parse_request(line: &str) -> Result<Option<Request>, String> {
+    Ok(parse_request_rid(line)?.map(|(req, _rid)| req))
+}
+
+/// [`parse_request`] plus the request's `rid` tag, if it carried one.
+/// The front end echoes the tag on the matching response line
+/// (`rid` may be any JSON value; absent = untagged).
+pub fn parse_request_rid(line: &str) -> Result<Option<(Request, Option<Json>)>, String> {
     let line = line.trim();
     if line.is_empty() || line.starts_with('#') {
         return Ok(None);
@@ -105,6 +123,7 @@ pub fn parse_request(line: &str) -> Result<Option<Request>, String> {
         .get("op")
         .and_then(Json::as_str)
         .ok_or("missing string field 'op'")?;
+    let rid = j.get("rid").cloned();
     let req = match op {
         "submit" => {
             let tj = j.get("task").ok_or("submit: missing 'task'")?;
@@ -146,10 +165,19 @@ pub fn parse_request(line: &str) -> Result<Option<Request>, String> {
             Request::Query { id: id as usize }
         }
         "snapshot" => Request::Snapshot,
+        "ping" => Request::Ping,
         "shutdown" => Request::Shutdown,
         other => return Err(format!("unknown op '{other}'")),
     };
-    Ok(Some(req))
+    Ok(Some((req, rid)))
+}
+
+/// The minimal `ping` answer a bare core gives when handed a
+/// [`Request::Ping`] directly (the session front end intercepts pings
+/// first and answers with session/clock details instead — see
+/// [`crate::service::session::ping_response`]).
+pub fn pong() -> Json {
+    obj(vec![("ok", Json::Bool(true)), ("op", s("ping"))])
 }
 
 /// Shorthand for a JSON string (the `obj`/`num` builders live in
@@ -259,6 +287,38 @@ mod tests {
             parse_request(r#"{"op":"query","id":7}"#).unwrap().unwrap(),
             Request::Query { id: 7 }
         ));
+    }
+
+    #[test]
+    fn rid_tags_round_trip() {
+        let (req, rid) = parse_request_rid(r#"{"op":"query","id":3,"rid":"q-3"}"#)
+            .unwrap()
+            .unwrap();
+        assert!(matches!(req, Request::Query { id: 3 }));
+        assert_eq!(rid.unwrap().as_str(), Some("q-3"));
+        // any JSON value works as a tag; absent means untagged
+        let (_, rid) = parse_request_rid(r#"{"op":"snapshot","rid":42}"#)
+            .unwrap()
+            .unwrap();
+        assert_eq!(rid.unwrap().as_f64(), Some(42.0));
+        let (_, rid) = parse_request_rid(r#"{"op":"snapshot"}"#).unwrap().unwrap();
+        assert!(rid.is_none());
+        // parse_request drops the tag but accepts the same lines
+        assert!(matches!(
+            parse_request(r#"{"op":"query","id":3,"rid":"q-3"}"#).unwrap().unwrap(),
+            Request::Query { id: 3 }
+        ));
+    }
+
+    #[test]
+    fn ping_parses_and_pong_renders() {
+        assert!(matches!(
+            parse_request(r#"{"op":"ping"}"#).unwrap().unwrap(),
+            Request::Ping
+        ));
+        let p = pong();
+        assert_eq!(p.get("ok"), Some(&Json::Bool(true)));
+        assert_eq!(p.get("op").unwrap().as_str(), Some("ping"));
     }
 
     #[test]

@@ -1,0 +1,487 @@
+//! The transport-agnostic service front end: sessions over any
+//! [`Connection`](crate::service::transport::Connection), on any
+//! [`Clock`], in front of any scheduling core.
+//!
+//! Both scheduling cores — the unsharded [`crate::service::Service`] and
+//! the sharded [`crate::service::ShardedService`] — implement
+//! [`ServiceCore`]; everything wire-facing lives here, once:
+//!
+//! * [`serve_session`] — the synchronous single-client loop (`repro
+//!   replay`, `Service::serve`, `ShardedService::serve`, and every
+//!   equivalence property test).  With a [`VirtualClock`]
+//!   (`crate::service::VirtualClock`) this path is response-line-identical
+//!   to the pre-front-end daemons — that identity is the oracle.
+//! * [`serve_mux`] — the multiplexed event loop behind `repro serve
+//!   --listen unix:<path>|tcp:<addr>`: an acceptor thread turns a
+//!   [`Listener`] into sessions, one reader thread per session feeds a
+//!   single fair-merge channel (per-session FIFO, cross-session arrival
+//!   order), and the loop routes every released response line back to the
+//!   session that asked.
+//!
+//! **Ordering.**  Cores release response lines in global request-arrival
+//! order (deferred batch responses flush before any later request is
+//! answered), so the front end keeps one FIFO of `(session, rid)` claims
+//! and matches released lines to claims positionally.  Per session this
+//! means *strict request-order responses*, even when another session's
+//! request triggered the flush that released them.
+//!
+//! **Request ids.**  Any request may carry a `rid` field (any JSON
+//! value); the matching response echoes it verbatim.  Requests without
+//! `rid` get byte-identical responses to the pre-session protocol, which
+//! is what keeps the oracle property testable.
+//!
+//! **Disconnects.**  A session that disappears mid-batch loses only its
+//! response lines: admitted work stays admitted, and its deferred
+//! responses are discarded when released.  A `shutdown` from *any*
+//! session drains the whole service and ends every session.
+//!
+//! **Liveness.**  `{"op":"ping"}` is answered out of band by the front
+//! end itself — it never reaches the core and never forces a batch flush
+//! — reporting the clock mode, live session count, and how many requests
+//! have been accepted so far.
+
+use crate::service::clock::Clock;
+use crate::service::protocol::{error_response, num, obj, parse_request_rid, s, Request};
+use crate::service::transport::{Connection, Listener};
+use crate::util::json::Json;
+use std::collections::{BTreeMap, VecDeque};
+use std::io::{BufRead, Write};
+use std::sync::mpsc;
+
+/// Protocol revision announced in `hello` responses.
+pub const PROTO_VERSION: &str = "jsonl-1";
+
+/// What the front end needs from a scheduling core.  Implemented by
+/// [`crate::service::Service`] and [`crate::service::ShardedService`].
+///
+/// The one contract that makes session multiplexing possible: **response
+/// lines are released in global request-arrival order**, exactly one line
+/// per accepted request, however long a batching core defers them.
+pub trait ServiceCore {
+    /// Handle one decoded request.  Returns the response lines *released*
+    /// by it (its own answer, possibly preceded by deferred answers to
+    /// older requests) and whether serving should stop (`shutdown`).
+    fn serve_request(&mut self, req: Request) -> (Vec<Json>, bool);
+
+    /// Release every deferred response (pending coalesced batch) without
+    /// handling a new request — the EOF/disconnect path.
+    fn flush_pending(&mut self) -> Vec<Json>;
+
+    /// Offer the core a wall-clock timer tick at workload time `now`:
+    /// a batching core flushes a coalesced batch whose admission window
+    /// has expired in real time.  Returns the released response lines.
+    fn tick(&mut self, now: f64) -> Vec<Json>;
+}
+
+/// The front end's out-of-band `ping` answer (see the module docs).
+pub fn ping_response(clock: &str, sessions: usize, received: u64) -> Json {
+    obj(vec![
+        ("ok", Json::Bool(true)),
+        ("op", s("ping")),
+        ("clock", s(clock)),
+        ("sessions", num(sessions as f64)),
+        ("received", num(received as f64)),
+    ])
+}
+
+/// The per-connection greeting sent by [`serve_mux`] on socket
+/// transports: the session id, clock mode, and protocol revision.
+pub fn hello_response(session: u64, clock: &str) -> Json {
+    obj(vec![
+        ("ok", Json::Bool(true)),
+        ("op", s("hello")),
+        ("proto", s(PROTO_VERSION)),
+        ("session", num(session as f64)),
+        ("clock", s(clock)),
+    ])
+}
+
+/// Echo a request's `rid` (if any) on its response object.
+fn attach_rid(line: Json, rid: Option<Json>) -> Json {
+    match (line, rid) {
+        (Json::Obj(mut m), Some(r)) => {
+            m.insert("rid".to_string(), r);
+            Json::Obj(m)
+        }
+        (l, _) => l,
+    }
+}
+
+/// Serve one synchronous JSONL session until `shutdown` or EOF — the
+/// shared body of `Service::serve`, `ShardedService::serve`, and `repro
+/// replay`.  Returns whether a shutdown was requested (callers drain on
+/// bare EOF).
+///
+/// # Examples
+///
+/// ```
+/// use dvfs_sched::config::SimConfig;
+/// use dvfs_sched::runtime::Solver;
+/// use dvfs_sched::service::{serve_session, Service, VirtualClock};
+/// use dvfs_sched::sim::online::OnlinePolicyKind;
+///
+/// let mut cfg = SimConfig::default();
+/// cfg.cluster.total_pairs = 8;
+/// let solver = Solver::native();
+/// let mut svc = Service::new(&cfg, OnlinePolicyKind::Edl, true, &solver);
+/// let session = "{\"op\":\"snapshot\",\"rid\":7}\n{\"op\":\"shutdown\"}\n";
+/// let mut out = Vec::new();
+/// let stopped = serve_session(&mut svc, &VirtualClock, session.as_bytes(), &mut out).unwrap();
+/// assert!(stopped);
+/// let text = String::from_utf8(out).unwrap();
+/// assert!(text.lines().next().unwrap().contains("\"rid\":7"));
+/// ```
+pub fn serve_session<C, R, W>(
+    core: &mut C,
+    clock: &dyn Clock,
+    reader: R,
+    mut writer: W,
+) -> Result<bool, String>
+where
+    C: ServiceCore + ?Sized,
+    R: BufRead,
+    W: Write,
+{
+    fn write_line<W: Write>(writer: &mut W, line: &Json) -> Result<(), String> {
+        writeln!(writer, "{}", line.render_compact())
+            .map_err(|e| format!("writing response: {e}"))
+    }
+    let mut pending: VecDeque<Option<Json>> = VecDeque::new();
+    let mut received: u64 = 0;
+    for line in reader.lines() {
+        let line = line.map_err(|e| format!("reading request line: {e}"))?;
+        match parse_request_rid(&line) {
+            Ok(None) => continue,
+            Ok(Some((Request::Ping, rid))) => {
+                let resp = attach_rid(ping_response(clock.name(), 1, received), rid);
+                write_line(&mut writer, &resp)?;
+            }
+            Ok(Some((mut req, rid))) => {
+                received += 1;
+                if let Request::Submit(ref mut task, _) = req {
+                    task.arrival = clock.stamp(task.arrival);
+                }
+                pending.push_back(rid);
+                let (resps, stop) = core.serve_request(req);
+                for r in resps {
+                    let rid = pending.pop_front().flatten();
+                    write_line(&mut writer, &attach_rid(r, rid))?;
+                }
+                if stop {
+                    let _ = writer.flush();
+                    return Ok(true);
+                }
+            }
+            Err(e) => {
+                // release the pending batch first so the error line lands
+                // in request order, like every other path
+                for r in core.flush_pending() {
+                    let rid = pending.pop_front().flatten();
+                    write_line(&mut writer, &attach_rid(r, rid))?;
+                }
+                write_line(&mut writer, &error_response(&e))?;
+            }
+        }
+    }
+    for r in core.flush_pending() {
+        let rid = pending.pop_front().flatten();
+        write_line(&mut writer, &attach_rid(r, rid))?;
+    }
+    let _ = writer.flush();
+    Ok(false)
+}
+
+/// An event on the multiplexer's fair-merge channel.
+enum Event {
+    /// The acceptor produced a new client connection.
+    Conn(Connection),
+    /// One request line from session `sid` (per-session FIFO).
+    Line { sid: u64, line: String },
+    /// Session `sid` hit EOF or a read error.
+    Eof { sid: u64 },
+    /// The listener is exhausted — no further clients will ever arrive.
+    NoMoreClients,
+    /// The listener failed.
+    ListenerError(String),
+}
+
+/// One session's write half.  `open` tracks the *read* side: an EOF
+/// half-closes the session (no more requests) but the writer stays usable
+/// — deferred responses released by a later flush are still delivered
+/// (stdin EOF with stdout open is the classic pipe session).  A session
+/// is dropped entirely only when a write to it fails.
+struct SessionState {
+    writer: Box<dyn Write + Send>,
+    open: bool,
+}
+
+/// Write one response line to a session; a failed write means the client
+/// is gone — drop the session and discard its future lines.
+fn send_direct(sessions: &mut BTreeMap<u64, SessionState>, sid: u64, line: &Json) {
+    let dead = match sessions.get_mut(&sid) {
+        Some(sess) => writeln!(sess.writer, "{}", line.render_compact())
+            .and_then(|_| sess.writer.flush())
+            .is_err(),
+        None => false,
+    };
+    if dead {
+        sessions.remove(&sid);
+    }
+}
+
+/// Match released response lines to the pending FIFO of `(session, rid)`
+/// claims and deliver each to its session (discarding lines owed to
+/// sessions that have disconnected).
+fn route(
+    lines: Vec<Json>,
+    pending: &mut VecDeque<(u64, Option<Json>)>,
+    sessions: &mut BTreeMap<u64, SessionState>,
+) {
+    if lines.is_empty() {
+        return;
+    }
+    for line in lines {
+        // sid 0 is never allocated: an over-release routes nowhere
+        let (sid, rid) = pending.pop_front().unwrap_or((0, None));
+        send_direct(sessions, sid, &attach_rid(line, rid));
+    }
+    // a half-closed session exists only to receive its owed responses:
+    // once none remain pending, drop it (writer fd and all) so repeated
+    // mid-batch disconnects cannot grow the session map unboundedly
+    sessions.retain(|sid, s| s.open || pending.iter().any(|&(p, _)| p == *sid));
+}
+
+/// Serve concurrent JSONL sessions from `listener` until a `shutdown`
+/// request (from any session) or until the listener is exhausted and the
+/// last session has closed.  Returns whether a shutdown was requested.
+///
+/// Socket transports greet each connection with a [`hello_response`]
+/// (pass `hello = false` for stdio/replay-shaped transports, whose
+/// single-client byte stream must stay identical to the classic daemon).
+/// With a wall clock, the loop wakes on [`Clock::poll`] boundaries and
+/// offers the core a [`ServiceCore::tick`], so batched-admission windows
+/// flush on real time instead of waiting for the next request.
+///
+/// A listener failure is contained: the mux stops accepting new clients
+/// (reported on stderr) but keeps serving live sessions, and the
+/// drain-on-EOF contract still closes the energy books.
+pub fn serve_mux<C>(
+    core: &mut C,
+    clock: &dyn Clock,
+    listener: Box<dyn Listener>,
+    hello: bool,
+) -> Result<bool, String>
+where
+    C: ServiceCore + ?Sized,
+{
+    let (tx, rx) = mpsc::channel::<Event>();
+    let acceptor_tx = tx.clone();
+    std::thread::spawn(move || {
+        let mut listener = listener;
+        loop {
+            match listener.accept() {
+                Ok(Some(conn)) => {
+                    if acceptor_tx.send(Event::Conn(conn)).is_err() {
+                        return;
+                    }
+                }
+                Ok(None) => {
+                    let _ = acceptor_tx.send(Event::NoMoreClients);
+                    return;
+                }
+                Err(e) => {
+                    let _ = acceptor_tx.send(Event::ListenerError(e));
+                    return;
+                }
+            }
+        }
+    });
+
+    let mut sessions: BTreeMap<u64, SessionState> = BTreeMap::new();
+    let mut pending: VecDeque<(u64, Option<Json>)> = VecDeque::new();
+    let mut next_sid: u64 = 1;
+    let mut more_clients = true;
+    let mut received: u64 = 0;
+    loop {
+        // `tx` stays alive in this scope, so the channel can only drain,
+        // never disconnect; exits are the explicit returns below.
+        let ev = match clock.poll() {
+            Some(d) => match rx.recv_timeout(d) {
+                Ok(ev) => Some(ev),
+                Err(mpsc::RecvTimeoutError::Timeout) => None,
+                Err(mpsc::RecvTimeoutError::Disconnected) => return Ok(false),
+            },
+            None => match rx.recv() {
+                Ok(ev) => Some(ev),
+                Err(_) => return Ok(false),
+            },
+        };
+        match ev {
+            None => {
+                if let Some(now) = clock.now() {
+                    let lines = core.tick(now);
+                    route(lines, &mut pending, &mut sessions);
+                }
+            }
+            Some(Event::Conn(conn)) => {
+                let sid = next_sid;
+                next_sid += 1;
+                let mut sess = SessionState {
+                    writer: conn.writer,
+                    open: true,
+                };
+                if hello {
+                    let h = hello_response(sid, clock.name());
+                    let dead = writeln!(sess.writer, "{}", h.render_compact())
+                        .and_then(|_| sess.writer.flush())
+                        .is_err();
+                    if dead {
+                        continue; // client vanished before the greeting
+                    }
+                }
+                let reader_tx = tx.clone();
+                let mut reader = conn.reader;
+                std::thread::spawn(move || {
+                    let mut buf = String::new();
+                    loop {
+                        buf.clear();
+                        match reader.read_line(&mut buf) {
+                            Ok(0) | Err(_) => {
+                                let _ = reader_tx.send(Event::Eof { sid });
+                                return;
+                            }
+                            Ok(_) => {
+                                let line =
+                                    buf.trim_end_matches('\n').trim_end_matches('\r').to_string();
+                                if reader_tx.send(Event::Line { sid, line }).is_err() {
+                                    return;
+                                }
+                            }
+                        }
+                    }
+                });
+                sessions.insert(sid, sess);
+            }
+            Some(Event::Line { sid, line }) => match parse_request_rid(&line) {
+                Ok(None) => {}
+                Ok(Some((Request::Ping, rid))) => {
+                    let live = sessions.values().filter(|s| s.open).count();
+                    let resp = attach_rid(ping_response(clock.name(), live, received), rid);
+                    send_direct(&mut sessions, sid, &resp);
+                }
+                Ok(Some((mut req, rid))) => {
+                    received += 1;
+                    if let Request::Submit(ref mut task, _) = req {
+                        task.arrival = clock.stamp(task.arrival);
+                    }
+                    pending.push_back((sid, rid));
+                    let (lines, stop) = core.serve_request(req);
+                    route(lines, &mut pending, &mut sessions);
+                    if stop {
+                        // dropping `sessions` closes every client: they see
+                        // EOF right after their flushed response lines
+                        return Ok(true);
+                    }
+                }
+                Err(e) => {
+                    let lines = core.flush_pending();
+                    route(lines, &mut pending, &mut sessions);
+                    send_direct(&mut sessions, sid, &error_response(&e));
+                }
+            },
+            Some(Event::Eof { sid }) => {
+                // half-close when responses are still owed (they deliver
+                // at the next flush); drop outright when nothing is owed,
+                // so a long-running daemon's session map stays bounded
+                if pending.iter().any(|&(s, _)| s == sid) {
+                    if let Some(sess) = sessions.get_mut(&sid) {
+                        sess.open = false;
+                    }
+                } else {
+                    sessions.remove(&sid);
+                }
+                if all_input_exhausted(more_clients, &sessions) {
+                    // the bare-EOF contract: flush the pending batch and
+                    // deliver the deferred responses BEFORE exiting — a
+                    // read-side EOF does not close the write side
+                    let lines = core.flush_pending();
+                    route(lines, &mut pending, &mut sessions);
+                    return Ok(false);
+                }
+            }
+            Some(Event::NoMoreClients) => {
+                more_clients = false;
+                if all_input_exhausted(more_clients, &sessions) {
+                    let lines = core.flush_pending();
+                    route(lines, &mut pending, &mut sessions);
+                    return Ok(false);
+                }
+            }
+            Some(Event::ListenerError(e)) => {
+                // an accept failure must not kill live sessions: stop
+                // accepting (like an exhausted listener) and keep serving
+                // — the drain-on-EOF contract still closes the books
+                eprintln!("serve: listener error, no longer accepting: {e}");
+                more_clients = false;
+                if all_input_exhausted(more_clients, &sessions) {
+                    let lines = core.flush_pending();
+                    route(lines, &mut pending, &mut sessions);
+                    return Ok(false);
+                }
+            }
+        }
+    }
+}
+
+/// Whether no further request can ever arrive: the listener is exhausted
+/// and every remaining session has hit read-side EOF.
+fn all_input_exhausted(more_clients: bool, sessions: &BTreeMap<u64, SessionState>) -> bool {
+    !more_clients && sessions.values().all(|s| !s.open)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::SimConfig;
+    use crate::runtime::Solver;
+    use crate::service::clock::VirtualClock;
+    use crate::service::Service;
+    use crate::sim::online::OnlinePolicyKind;
+
+    #[test]
+    fn rid_attaches_only_to_objects() {
+        let tagged = attach_rid(obj(vec![("ok", Json::Bool(true))]), Some(num(3.0)));
+        assert_eq!(tagged.get("rid"), Some(&num(3.0)));
+        let untouched = attach_rid(obj(vec![("ok", Json::Bool(true))]), None);
+        assert_eq!(untouched.get("rid"), None);
+    }
+
+    #[test]
+    fn ping_is_answered_out_of_band() {
+        let mut cfg = SimConfig::default();
+        cfg.cluster.total_pairs = 8;
+        let solver = Solver::native();
+        let mut svc = Service::new(&cfg, OnlinePolicyKind::Edl, true, &solver);
+        let session = "{\"op\":\"ping\",\"rid\":\"p1\"}\n{\"op\":\"snapshot\"}\n";
+        let mut out = Vec::new();
+        let stopped = serve_session(&mut svc, &VirtualClock, session.as_bytes(), &mut out).unwrap();
+        assert!(!stopped);
+        let text = String::from_utf8(out).unwrap();
+        let lines: Vec<Json> = text.lines().map(|l| Json::parse(l).unwrap()).collect();
+        assert_eq!(lines.len(), 2);
+        assert_eq!(lines[0].get("op").unwrap().as_str(), Some("ping"));
+        assert_eq!(lines[0].get("rid").unwrap().as_str(), Some("p1"));
+        assert_eq!(lines[0].get("received").unwrap().as_f64(), Some(0.0));
+        assert_eq!(lines[0].get("clock").unwrap().as_str(), Some("virtual"));
+        assert_eq!(lines[1].get("op").unwrap().as_str(), Some("snapshot"));
+    }
+
+    #[test]
+    fn hello_response_shape() {
+        let h = hello_response(4, "wall");
+        assert_eq!(h.get("op").unwrap().as_str(), Some("hello"));
+        assert_eq!(h.get("session").unwrap().as_f64(), Some(4.0));
+        assert_eq!(h.get("clock").unwrap().as_str(), Some("wall"));
+        assert_eq!(h.get("proto").unwrap().as_str(), Some(PROTO_VERSION));
+    }
+}

@@ -97,10 +97,26 @@ impl Placement {
     }
 }
 
+/// One GPU-type pool's slice of a shard's load (the unit routing
+/// actually compares — a chunk of type `t` only ever competes for type
+/// `t`'s pairs, so whole-shard numbers would let one type's backlog hide
+/// another's idle capacity).
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct TypeLoad {
+    /// Queued work: Σ `max(busy_until − now, 0)` over the pool's pairs.
+    pub backlog: f64,
+    /// Idle pairs on powered-on servers (free capacity with no Δ cost).
+    pub idle_on: usize,
+    /// Servers currently off (capacity that costs Δ to open).
+    pub servers_off: usize,
+}
+
 /// Cheap load summary a shard returns with every batch reply; the
 /// dispatcher's routing policies ([`crate::service::dispatch::RoutePolicy`])
-/// work from these instead of touching shard state.
-#[derive(Clone, Copy, Debug, Default)]
+/// work from these instead of touching shard state.  Whole-shard totals
+/// ride along for display/debugging; routing reads the per-type
+/// breakdown via [`ShardLoad::for_type`].
+#[derive(Clone, Debug, Default)]
 pub struct ShardLoad {
     /// Queued work: Σ `max(busy_until − now, 0)` over the shard's pairs.
     pub backlog: f64,
@@ -108,6 +124,38 @@ pub struct ShardLoad {
     pub idle_on: usize,
     /// Servers currently off (capacity that costs Δ to open).
     pub servers_off: usize,
+    /// Per-GPU-type breakdown on the *global* type axis (slots for types
+    /// this shard does not own stay zero; they are never eligible for
+    /// routing anyway).
+    pub by_type: Vec<TypeLoad>,
+}
+
+impl ShardLoad {
+    /// The load of GPU type `ti`'s pool.  Falls back to the whole-shard
+    /// totals when no per-type report has landed yet (a fresh service's
+    /// defaults — all zeros either way).
+    pub fn for_type(&self, ti: usize) -> TypeLoad {
+        self.by_type.get(ti).copied().unwrap_or(TypeLoad {
+            backlog: self.backlog,
+            idle_on: self.idle_on,
+            servers_off: self.servers_off,
+        })
+    }
+
+    /// A single-type (homogeneous) load summary — the common case and
+    /// the test constructor.
+    pub fn homogeneous(backlog: f64, idle_on: usize, servers_off: usize) -> ShardLoad {
+        ShardLoad {
+            backlog,
+            idle_on,
+            servers_off,
+            by_type: vec![TypeLoad {
+                backlog,
+                idle_on,
+                servers_off,
+            }],
+        }
+    }
 }
 
 /// One chunk's results: who placed it, where everything went, and the
@@ -398,28 +446,56 @@ impl Shard {
             .collect()
     }
 
-    /// Current load summary (see [`ShardLoad`]), aggregated over the
-    /// shard's type pools.
+    /// Current load summary (see [`ShardLoad`]): one [`TypeLoad`] per
+    /// global GPU type (zeros for types this shard does not own) plus the
+    /// whole-shard totals.
     pub fn load(&self) -> ShardLoad {
-        let mut backlog = 0.0;
-        let mut idle_on = 0;
-        let mut servers_off = 0;
+        let mut by_type = vec![TypeLoad::default(); self.n_types];
         for pool in &self.pools {
+            let tl = &mut by_type[pool.type_idx];
             let now = pool.engine.now;
             for p in &pool.cluster.pairs {
                 match p.power {
-                    PairPower::Busy => backlog += (p.busy_until - now).max(0.0),
-                    PairPower::Idle => idle_on += 1,
+                    PairPower::Busy => tl.backlog += (p.busy_until - now).max(0.0),
+                    PairPower::Idle => tl.idle_on += 1,
                     PairPower::Off => {}
                 }
             }
-            servers_off += pool.cluster.server_on.iter().filter(|&&on| !on).count();
+            tl.servers_off += pool.cluster.server_on.iter().filter(|&&on| !on).count();
         }
         ShardLoad {
-            backlog,
-            idle_on,
-            servers_off,
+            backlog: by_type.iter().map(|t| t.backlog).sum(),
+            idle_on: by_type.iter().map(|t| t.idle_on).sum(),
+            servers_off: by_type.iter().map(|t| t.servers_off).sum(),
+            by_type,
         }
+    }
+
+    /// The widest gang this shard could currently host on GPU type
+    /// `type_idx`: the maximum count of not-currently-busy pairs on any
+    /// single server of that pool (0 when the shard does not own the
+    /// type).  Conservative — a pair whose queue tail has already passed
+    /// the pool clock still counts busy until its departure event runs —
+    /// which is the right bias for the steal guard: leave a wide gang
+    /// with its routed shard rather than concentrate it on a thief that
+    /// would have to queue it.
+    pub fn gang_headroom(&self, type_idx: usize) -> usize {
+        let l = self.view.cfg.pairs_per_server.max(1);
+        let Some(pool) = self.pools.iter().find(|p| p.type_idx == type_idx) else {
+            return 0;
+        };
+        let now = pool.engine.now;
+        pool.cluster
+            .pairs
+            .chunks(l)
+            .map(|server| {
+                server
+                    .iter()
+                    .filter(|p| !(p.power == PairPower::Busy && p.busy_until > now))
+                    .count()
+            })
+            .max()
+            .unwrap_or(0)
     }
 
     /// Metrics fragment at service time `now` (does not advance the event
@@ -547,13 +623,40 @@ impl Drop for ShardPool {
     }
 }
 
+/// Whether the thief can host every task of a candidate chunk: each
+/// task's GPU type must be owned, and — the gang-fairness guard — a
+/// gang's width must fit the thief's single-server headroom on that type
+/// (`headroom[i]` aligns with `owned_types[i]`; see
+/// [`Shard::gang_headroom`]).  Without the headroom check a thief whose
+/// servers are already committed would concentrate wide gangs onto
+/// itself, queueing them behind its own work while the routed shard's
+/// co-located capacity sat idle.
+fn chunk_hostable(tasks: &[ServiceTask], owned_types: &[usize], headroom: &[usize]) -> bool {
+    tasks.iter().all(|st| {
+        match owned_types.iter().position(|&t| t == st.type_idx) {
+            Some(i) => st.g <= 1 || headroom[i] >= st.g,
+            None => false,
+        }
+    })
+}
+
 /// Pop the next job for worker `me`: own queue first (FIFO), then — when
 /// idle and stealing is on — the newest *stealable* batch of the most
-/// backed-up sibling.  A batch is stealable only when every task's GPU
-/// type is in `owned_types` (the thief's partition must be able to host
-/// the chunk; on a homogeneous cluster that is every batch).  Blocks on
-/// the pool condvar when nothing is runnable.
-fn next_job(shared: &PoolShared, me: usize, steal: bool, owned_types: &[usize]) -> ShardJob {
+/// backed-up sibling.  A batch is stealable only when the thief can host
+/// it ([`chunk_hostable`]: every task's GPU type owned, and every gang's
+/// width within the thief's single-server headroom).  `headroom` is
+/// computed by the caller *outside* the queue lock — only the owning
+/// worker ever mutates a shard, so values taken just before blocking
+/// here stay exact for as long as the call blocks — keeping the
+/// lock-held steal scan O(queues · chunk), not O(pairs).  Blocks on the
+/// pool condvar when nothing is runnable.
+fn next_job(
+    shared: &PoolShared,
+    me: usize,
+    steal: bool,
+    owned_types: &[usize],
+    headroom: &[usize],
+) -> ShardJob {
     let mut qs = shared.queues.lock().unwrap();
     loop {
         if let Some(job) = qs[me].pop_front() {
@@ -568,9 +671,9 @@ fn next_job(shared: &PoolShared, me: usize, steal: bool, owned_types: &[usize]) 
             let mut victim: Option<(usize, usize)> = None; // (queue len, shard)
             for (k, q) in qs.iter().enumerate() {
                 let hostable = match q.back() {
-                    Some(ShardJob::Batch { tasks, .. }) => tasks
-                        .iter()
-                        .all(|st| owned_types.contains(&st.type_idx)),
+                    Some(ShardJob::Batch { tasks, .. }) => {
+                        chunk_hostable(tasks, owned_types, headroom)
+                    }
                     _ => false,
                 };
                 if k != me && q.len() >= 2 && hostable {
@@ -604,7 +707,15 @@ fn worker_loop(
     let owned_types: Vec<usize> = view.types.iter().map(|&(ti, _)| ti).collect();
     let mut shard = Shard::new(view, kind, dvfs, iv, theta);
     loop {
-        match next_job(shared, me, steal, &owned_types) {
+        // per-type single-server gang headroom, taken OUTSIDE the queue
+        // lock: only this worker mutates `shard`, so the values stay
+        // exact however long next_job blocks
+        let headroom: Vec<usize> = if steal {
+            owned_types.iter().map(|&ti| shard.gang_headroom(ti)).collect()
+        } else {
+            Vec::new()
+        };
+        match next_job(shared, me, steal, &owned_types, &headroom) {
             ShardJob::Batch {
                 tag,
                 t,
@@ -812,6 +923,124 @@ mod tests {
         assert_eq!(merged.violations, 0);
         assert_eq!(merged.pairs_used, 2);
         drop(pool); // joins workers; hangs here = Stop plumbing broke
+    }
+
+    #[test]
+    fn load_reports_the_per_type_breakdown() {
+        let vs = views(8, 2, 2);
+        let mut shard = Shard::new(
+            vs[0].clone(),
+            OnlinePolicyKind::Edl,
+            true,
+            ScalingInterval::wide(),
+            1.0,
+        );
+        let before = shard.load();
+        assert_eq!(before.by_type.len(), 1, "homogeneous cluster: one type");
+        assert_eq!(before.for_type(0), TypeLoad::default());
+        shard.place_batch(0.0, vec![ServiceTask::plain(mk_task(0, 0.0, 0.5, 10.0))]);
+        let after = shard.load();
+        assert!(after.backlog > 0.0);
+        // the single type's slice IS the whole-shard load
+        let tl = after.for_type(0);
+        assert_eq!(tl.backlog, after.backlog);
+        assert_eq!(tl.idle_on, after.idle_on);
+        assert_eq!(tl.servers_off, after.servers_off);
+        // an unreported type index falls back to whole-shard totals
+        assert_eq!(after.for_type(9).backlog, after.backlog);
+    }
+
+    #[test]
+    fn gang_headroom_tracks_single_server_capacity() {
+        // one server of 4 pairs
+        let vs = views(4, 4, 1);
+        let mut shard = Shard::new(
+            vs[0].clone(),
+            OnlinePolicyKind::Edl,
+            true,
+            ScalingInterval::wide(),
+            0.9,
+        );
+        assert_eq!(shard.gang_headroom(0), 4, "fresh shard: a whole server");
+        assert_eq!(shard.gang_headroom(7), 0, "unowned type: no headroom");
+        // occupy 3 of the 4 pairs with a gang: headroom drops to 1
+        let mut st = ServiceTask::plain(mk_task(0, 0.0, 0.3, 30.0));
+        st.g = 3;
+        shard.place_batch(0.0, vec![st]);
+        assert_eq!(shard.gang_headroom(0), 1);
+        // a width-2 chunk is now un-hostable here, width 1 still fine
+        // (headroom[i] aligns with owned_types[i], as worker_loop builds it)
+        let mut wide = ServiceTask::plain(mk_task(1, 0.0, 0.3, 10.0));
+        wide.g = 2;
+        let headroom = [shard.gang_headroom(0)];
+        assert!(!chunk_hostable(&[wide.clone()], &[0], &headroom));
+        assert!(chunk_hostable(
+            &[ServiceTask::plain(mk_task(2, 0.0, 0.3, 10.0))],
+            &[0],
+            &headroom
+        ));
+        // owning the type at all is still required
+        assert!(!chunk_hostable(&[wide], &[1], &[shard.gang_headroom(1)]));
+    }
+
+    #[test]
+    fn gangs_are_not_stolen_past_the_thiefs_headroom() {
+        // ROADMAP gang-fairness fix: shard 1's only server is saturated,
+        // so width-4 gang chunks queued on shard 0 must NOT be stolen —
+        // they stay with the shard whose server can co-locate them.
+        // 2 shards × 1 server × 4 pairs.
+        let pool = ShardPool::new(
+            views(8, 4, 2),
+            OnlinePolicyKind::Edl,
+            true,
+            ScalingInterval::wide(),
+            1.0,
+            true,
+        );
+        // saturate shard 1's single server with 4 long width-1 tasks
+        let (tx, rx) = mpsc::channel();
+        let long: Vec<ServiceTask> = (0..4)
+            .map(|i| ServiceTask::plain(mk_task(100 + i, 0.0, 0.1, 50.0)))
+            .collect();
+        pool.send(
+            1,
+            ShardJob::Batch {
+                tag: 999,
+                t: 0.0,
+                tasks: long,
+                reply: tx.clone(),
+            },
+        );
+        rx.recv().unwrap();
+        // back shard 0 up with wide-gang chunks; shard 1 idles but its
+        // headroom is 0, so every gang must place on shard 0 (pairs 0..4)
+        let n = 24;
+        for i in 0..n {
+            let mut st = ServiceTask::plain(mk_task(i, 0.0, 0.05, 10.0));
+            st.g = 4;
+            pool.send(
+                0,
+                ShardJob::Batch {
+                    tag: i as u64,
+                    t: 0.0,
+                    tasks: vec![st],
+                    reply: tx.clone(),
+                },
+            );
+        }
+        drop(tx);
+        for _ in 0..n {
+            let reply = rx.recv().unwrap();
+            assert_eq!(reply.shard, 0, "gang chunk stolen by a full thief");
+            for p in &reply.placements {
+                assert!(
+                    p.pairs.iter().all(|&q| q < 4),
+                    "gang left shard 0's server: {:?}",
+                    p.pairs
+                );
+            }
+        }
+        assert_eq!(pool.steals(), 0, "saturated thief must not steal gangs");
     }
 
     #[test]

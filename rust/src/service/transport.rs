@@ -1,0 +1,367 @@
+//! Transports: where JSONL sessions come from.
+//!
+//! The service front end ([`crate::service::session`]) is written against
+//! two small abstractions so the scheduling cores never know whether they
+//! are talking to a pipe, a socket, or a test buffer:
+//!
+//! * [`Connection`] — one framed line-oriented client: a buffered reader
+//!   half and a writer half (split so a reader thread can block on input
+//!   while the multiplexer owns the writer).
+//! * [`Listener`] — a source of connections: [`StdioListener`] yields
+//!   exactly one (the classic `repro serve < requests` pipe),
+//!   [`UnixSocketListener`] and [`TcpSocketListener`] accept any number
+//!   of concurrent clients.
+//!
+//! [`ListenAddr`] is the CLI surface: `stdio`, `unix:<path>`, or
+//! `tcp:<addr>`, parsed from `repro serve --listen ...`.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpListener;
+#[cfg(unix)]
+use std::os::unix::net::UnixListener;
+#[cfg(unix)]
+use std::path::{Path, PathBuf};
+
+/// One connected JSONL client, split into its two directions.
+///
+/// The reader half is handed to a per-session reader thread by the
+/// multiplexer; the writer half stays with the front-end event loop so
+/// response lines interleave safely.
+pub struct Connection {
+    /// Buffered line input from the client.
+    pub reader: Box<dyn BufRead + Send>,
+    /// Response sink back to the same client.
+    pub writer: Box<dyn Write + Send>,
+    /// Human-readable peer description for logs (`stdio`,
+    /// `unix:<path>#3`, `tcp:127.0.0.1:52114`, ...).
+    pub peer: String,
+}
+
+impl std::fmt::Debug for Connection {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Connection").field("peer", &self.peer).finish()
+    }
+}
+
+impl Connection {
+    /// A connection over arbitrary reader/writer halves (how tests build
+    /// in-memory clients and `repro replay` wraps a session file).
+    pub fn new<R, W>(reader: R, writer: W, peer: &str) -> Connection
+    where
+        R: BufRead + Send + 'static,
+        W: Write + Send + 'static,
+    {
+        Connection {
+            reader: Box::new(reader),
+            writer: Box::new(writer),
+            peer: peer.to_string(),
+        }
+    }
+}
+
+/// A source of client [`Connection`]s, driven by the front end's acceptor
+/// thread.  `accept` blocking is fine (the acceptor owns its thread);
+/// returning `Ok(None)` ends the accept loop — no further clients will
+/// ever arrive (how stdio models "one client, then EOF").
+pub trait Listener: Send {
+    /// Block for the next client.  `Ok(None)` = this transport is
+    /// exhausted (the session multiplexer then drains and exits once the
+    /// remaining sessions close).
+    fn accept(&mut self) -> Result<Option<Connection>, String>;
+
+    /// Human-readable bind description for the serve banner.
+    fn describe(&self) -> String;
+}
+
+/// The single-client stdio transport: one connection wrapping the
+/// process's stdin/stdout, then `None`.
+#[derive(Debug, Default)]
+pub struct StdioListener {
+    used: bool,
+}
+
+impl StdioListener {
+    /// A fresh stdio listener.
+    pub fn new() -> StdioListener {
+        StdioListener::default()
+    }
+}
+
+impl Listener for StdioListener {
+    fn accept(&mut self) -> Result<Option<Connection>, String> {
+        if self.used {
+            return Ok(None);
+        }
+        self.used = true;
+        Ok(Some(Connection::new(
+            BufReader::new(std::io::stdin()),
+            std::io::stdout(),
+            "stdio",
+        )))
+    }
+
+    fn describe(&self) -> String {
+        "stdio".to_string()
+    }
+}
+
+/// A listener yielding a fixed set of pre-built connections, then `None`.
+///
+/// This is the test transport: property tests drive the full multiplexed
+/// front end over in-memory buffers with it, no sockets required.
+#[derive(Debug, Default)]
+pub struct StaticListener {
+    conns: Vec<Connection>,
+}
+
+impl StaticListener {
+    /// Serve exactly `conns`, in order.
+    pub fn new(conns: Vec<Connection>) -> StaticListener {
+        let mut conns = conns;
+        conns.reverse(); // pop() yields them in the given order
+        StaticListener { conns }
+    }
+}
+
+impl Listener for StaticListener {
+    fn accept(&mut self) -> Result<Option<Connection>, String> {
+        Ok(self.conns.pop())
+    }
+
+    fn describe(&self) -> String {
+        "static".to_string()
+    }
+}
+
+/// Unix-domain-socket transport (`--listen unix:/path`).  Binding
+/// replaces a *stale* socket file (one nothing answers on) so a crashed
+/// daemon does not wedge its successor — but refuses to touch a
+/// non-socket path or a socket another daemon is actively serving.
+#[cfg(unix)]
+pub struct UnixSocketListener {
+    inner: UnixListener,
+    path: PathBuf,
+    accepted: usize,
+}
+
+#[cfg(unix)]
+impl UnixSocketListener {
+    /// Bind the socket at `path` (replacing a stale socket file; erroring
+    /// on a non-socket file or a live daemon's socket).
+    pub fn bind(path: &Path) -> Result<UnixSocketListener, String> {
+        if let Ok(meta) = std::fs::symlink_metadata(path) {
+            use std::os::unix::fs::FileTypeExt;
+            if !meta.file_type().is_socket() {
+                return Err(format!(
+                    "{} exists and is not a socket; refusing to replace it",
+                    path.display()
+                ));
+            }
+            if std::os::unix::net::UnixStream::connect(path).is_ok() {
+                return Err(format!(
+                    "{} is already being served by a live daemon",
+                    path.display()
+                ));
+            }
+            // a socket nobody answers on: a crashed daemon's leftover
+            let _ = std::fs::remove_file(path);
+        }
+        let inner = UnixListener::bind(path)
+            .map_err(|e| format!("binding unix socket {}: {e}", path.display()))?;
+        Ok(UnixSocketListener {
+            inner,
+            path: path.to_path_buf(),
+            accepted: 0,
+        })
+    }
+
+    /// The bound socket path.
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+}
+
+#[cfg(unix)]
+impl Listener for UnixSocketListener {
+    fn accept(&mut self) -> Result<Option<Connection>, String> {
+        let (stream, _addr) = self
+            .inner
+            .accept()
+            .map_err(|e| format!("accepting on {}: {e}", self.path.display()))?;
+        let reader = stream
+            .try_clone()
+            .map_err(|e| format!("cloning unix stream: {e}"))?;
+        self.accepted += 1;
+        Ok(Some(Connection::new(
+            BufReader::new(reader),
+            stream,
+            &format!("unix:{}#{}", self.path.display(), self.accepted),
+        )))
+    }
+
+    fn describe(&self) -> String {
+        format!("unix:{}", self.path.display())
+    }
+}
+
+/// TCP transport (`--listen tcp:host:port`).
+pub struct TcpSocketListener {
+    inner: TcpListener,
+}
+
+impl TcpSocketListener {
+    /// Bind `addr` (e.g. `127.0.0.1:7070`; port 0 picks a free port).
+    pub fn bind(addr: &str) -> Result<TcpSocketListener, String> {
+        let inner =
+            TcpListener::bind(addr).map_err(|e| format!("binding tcp {addr}: {e}"))?;
+        Ok(TcpSocketListener { inner })
+    }
+
+    /// The bound local address (resolves port 0 to the actual port).
+    pub fn local_addr(&self) -> Result<std::net::SocketAddr, String> {
+        self.inner
+            .local_addr()
+            .map_err(|e| format!("reading local addr: {e}"))
+    }
+}
+
+impl Listener for TcpSocketListener {
+    fn accept(&mut self) -> Result<Option<Connection>, String> {
+        let (stream, peer) = self
+            .inner
+            .accept()
+            .map_err(|e| format!("accepting tcp connection: {e}"))?;
+        let reader = stream
+            .try_clone()
+            .map_err(|e| format!("cloning tcp stream: {e}"))?;
+        Ok(Some(Connection::new(
+            BufReader::new(reader),
+            stream,
+            &format!("tcp:{peer}"),
+        )))
+    }
+
+    fn describe(&self) -> String {
+        match self.inner.local_addr() {
+            Ok(a) => format!("tcp:{a}"),
+            Err(_) => "tcp:?".to_string(),
+        }
+    }
+}
+
+/// A parsed `--listen` value.
+///
+/// # Examples
+///
+/// ```
+/// use dvfs_sched::service::ListenAddr;
+///
+/// assert!(matches!(ListenAddr::parse("stdio"), Ok(ListenAddr::Stdio)));
+/// assert!(matches!(ListenAddr::parse("tcp:127.0.0.1:0"), Ok(ListenAddr::Tcp(_))));
+/// assert!(ListenAddr::parse("carrier-pigeon:coop").is_err());
+/// ```
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum ListenAddr {
+    /// The classic single-client pipe (`repro serve < session.jsonl`).
+    Stdio,
+    /// A unix-domain socket at the given path.
+    Unix(std::path::PathBuf),
+    /// A TCP bind address (`host:port`).
+    Tcp(String),
+}
+
+impl ListenAddr {
+    /// Parse `stdio` | `unix:<path>` | `tcp:<addr>`.
+    pub fn parse(s: &str) -> Result<ListenAddr, String> {
+        if s == "stdio" {
+            return Ok(ListenAddr::Stdio);
+        }
+        if let Some(path) = s.strip_prefix("unix:") {
+            if path.is_empty() {
+                return Err("unix: needs a socket path".into());
+            }
+            return Ok(ListenAddr::Unix(std::path::PathBuf::from(path)));
+        }
+        if let Some(addr) = s.strip_prefix("tcp:") {
+            if addr.is_empty() {
+                return Err("tcp: needs a bind address (host:port)".into());
+            }
+            return Ok(ListenAddr::Tcp(addr.to_string()));
+        }
+        Err(format!(
+            "unknown listen address '{s}' (stdio | unix:<path> | tcp:<addr>)"
+        ))
+    }
+
+    /// Bind this address into a ready [`Listener`].
+    pub fn bind(&self) -> Result<Box<dyn Listener>, String> {
+        match self {
+            ListenAddr::Stdio => Ok(Box::new(StdioListener::new())),
+            #[cfg(unix)]
+            ListenAddr::Unix(path) => Ok(Box::new(UnixSocketListener::bind(path)?)),
+            #[cfg(not(unix))]
+            ListenAddr::Unix(_) => Err("unix sockets are not supported on this platform".into()),
+            ListenAddr::Tcp(addr) => Ok(Box::new(TcpSocketListener::bind(addr)?)),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    #[test]
+    fn listen_addr_parses() {
+        assert_eq!(ListenAddr::parse("stdio").unwrap(), ListenAddr::Stdio);
+        assert_eq!(
+            ListenAddr::parse("unix:/tmp/x.sock").unwrap(),
+            ListenAddr::Unix("/tmp/x.sock".into())
+        );
+        assert_eq!(
+            ListenAddr::parse("tcp:0.0.0.0:7070").unwrap(),
+            ListenAddr::Tcp("0.0.0.0:7070".into())
+        );
+        assert!(ListenAddr::parse("unix:").is_err());
+        assert!(ListenAddr::parse("tcp:").is_err());
+        assert!(ListenAddr::parse("udp:1.2.3.4:5").is_err());
+    }
+
+    #[test]
+    fn static_listener_yields_in_order_then_none() {
+        let mk = |peer: &str| Connection::new(Cursor::new(Vec::new()), Vec::new(), peer);
+        let mut l = StaticListener::new(vec![mk("a"), mk("b")]);
+        assert_eq!(l.accept().unwrap().unwrap().peer, "a");
+        assert_eq!(l.accept().unwrap().unwrap().peer, "b");
+        assert!(l.accept().unwrap().is_none());
+    }
+
+    #[cfg(unix)]
+    #[test]
+    fn unix_listener_replaces_a_stale_socket_only() {
+        let path = std::env::temp_dir().join(format!("dvfs-transport-{}.sock", std::process::id()));
+        let first = UnixSocketListener::bind(&path).unwrap();
+        // a LIVE daemon's socket must not be hijacked
+        let err = UnixSocketListener::bind(&path).unwrap_err();
+        assert!(err.contains("live daemon"), "{err}");
+        drop(first); // leaves the socket file behind, like a crash would
+        let second = UnixSocketListener::bind(&path).unwrap();
+        assert_eq!(second.path(), path.as_path());
+        drop(second);
+        let _ = std::fs::remove_file(&path);
+        // a regular file at the path is never deleted
+        std::fs::write(&path, b"precious data").unwrap();
+        let err = UnixSocketListener::bind(&path).unwrap_err();
+        assert!(err.contains("not a socket"), "{err}");
+        assert_eq!(std::fs::read(&path).unwrap(), b"precious data");
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn tcp_listener_binds_an_ephemeral_port() {
+        let l = TcpSocketListener::bind("127.0.0.1:0").unwrap();
+        let addr = l.local_addr().unwrap();
+        assert_ne!(addr.port(), 0);
+        assert!(l.describe().starts_with("tcp:127.0.0.1:"));
+    }
+}

@@ -16,6 +16,13 @@
 //!   After the horizon it drains until the cluster is fully off.
 //!
 //! Both report the energy decomposition E_run + E_idle + E_overhead.
+//!
+//! The streaming services wrap the same event core behind the
+//! transport/session/clock front end ([`crate::service::session`]): a
+//! virtual-clock replay of a workload's `submit` stream (see
+//! [`crate::ext::trace::workload_to_session`]) is the wire-level
+//! equivalent of calling [`run_online_workload`] directly, which is what
+//! the session-equivalence tests and the CI socket-smoke job lean on.
 
 use crate::cluster::Cluster;
 use crate::config::SimConfig;

@@ -1,0 +1,113 @@
+#!/usr/bin/env python3
+"""Drive two concurrent JSONL clients plus a controller against a running
+`repro serve --listen unix:<path>` daemon.
+
+Usage: socket_clients.py SOCKET_PATH CLIENT1.jsonl CLIENT2.jsonl EXPECTED_SUBMITS
+
+The two client threads stream their request files concurrently and then
+drain their response lines until EOF.  The controller polls the
+out-of-band `ping` op until the service has accepted EXPECTED_SUBMITS
+requests (so every submit is inside the coalesced admission batch), then
+sends `shutdown` and prints the final snapshot line to stdout.
+
+Exit code is non-zero when any client sees a malformed response or a
+missing response line, so the CI job fails loudly.
+"""
+
+import json
+import socket
+import sys
+import threading
+import time
+
+
+def connect(path: str) -> socket.socket:
+    s = socket.socket(socket.AF_UNIX, socket.SOCK_STREAM)
+    s.settimeout(120)
+    s.connect(path)
+    return s
+
+
+def read_lines(sock: socket.socket):
+    """Yield decoded lines until EOF."""
+    buf = b""
+    while True:
+        while b"\n" in buf:
+            line, buf = buf.split(b"\n", 1)
+            yield line.decode()
+        try:
+            chunk = sock.recv(65536)
+        except socket.timeout as e:
+            raise SystemExit(f"timed out waiting for a response line: {e}")
+        if not chunk:
+            return
+        buf += chunk
+
+
+def run_client(path: str, requests_file: str, errors: list):
+    try:
+        sock = connect(path)
+        lines = read_lines(sock)
+        hello = json.loads(next(lines))
+        assert hello["op"] == "hello", hello
+        n_sent = 0
+        with open(requests_file, "r", encoding="utf-8") as f:
+            for line in f:
+                line = line.strip()
+                if not line or line.startswith("#"):
+                    continue
+                sock.sendall((line + "\n").encode())
+                n_sent += 1
+        # responses are deferred to the controller-triggered flush; drain
+        # them all (one per submit), then expect EOF on shutdown
+        n_resp = 0
+        for line in lines:
+            resp = json.loads(line)
+            assert resp.get("ok") is True, resp
+            if resp.get("op") == "submit":
+                n_resp += 1
+        assert n_resp == n_sent, f"expected {n_sent} submit responses, got {n_resp}"
+    except Exception as e:  # noqa: BLE001 - surface everything to the job log
+        errors.append(f"{requests_file}: {e!r}")
+
+
+def main() -> int:
+    path, c1, c2, expected = sys.argv[1], sys.argv[2], sys.argv[3], int(sys.argv[4])
+    errors: list = []
+    threads = [
+        threading.Thread(target=run_client, args=(path, f, errors)) for f in (c1, c2)
+    ]
+    for t in threads:
+        t.start()
+
+    ctrl = connect(path)
+    lines = read_lines(ctrl)
+    hello = json.loads(next(lines))
+    assert hello["op"] == "hello", hello
+    deadline = time.time() + 120
+    while True:
+        ctrl.sendall(b'{"op":"ping"}\n')
+        pong = json.loads(next(lines))
+        assert pong["op"] == "ping", pong
+        if int(pong["received"]) >= expected:
+            break
+        if time.time() > deadline:
+            print(f"gave up: received={pong['received']} < {expected}", file=sys.stderr)
+            return 1
+        time.sleep(0.05)
+    ctrl.sendall(b'{"op":"shutdown"}\n')
+    final = json.loads(next(lines))
+    assert final["op"] == "shutdown", final
+
+    for t in threads:
+        t.join()
+    if errors:
+        for e in errors:
+            print(f"client error: {e}", file=sys.stderr)
+        return 1
+    print(json.dumps(final))
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

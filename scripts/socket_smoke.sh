@@ -1,0 +1,69 @@
+#!/usr/bin/env bash
+# CI socket smoke: serve over a unix socket, stream one workload through
+# TWO concurrent clients, and check the final snapshot's energy books
+# against a single-client replay of the merged trace.
+#
+# Determinism: the server runs 1 shard with a batch window wider than the
+# whole horizon, so both clients' submits coalesce into ONE admission
+# batch that is EDF-ordered at flush — whatever interleaving the sockets
+# produced.  The merged replay uses the same window, so the two runs place
+# the identical EDF batch and must close identical energy books.
+
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+REPRO=rust/target/release/repro
+if [ ! -x "$REPRO" ]; then
+    cargo build --release --manifest-path rust/Cargo.toml
+fi
+
+TMP=$(mktemp -d)
+SRV=""
+trap '[ -n "$SRV" ] && kill "$SRV" 2>/dev/null; rm -rf "$TMP"' EXIT
+
+# a small deterministic workload, rendered as submit lines in arrival order
+"$REPRO" workload export --out "$TMP/w.json" --seed 7 --horizon 40 --u-off 0.02 --u-on 0.06
+"$REPRO" workload session --in "$TMP/w.json" --out "$TMP/merged.jsonl" --no-shutdown
+awk 'NR % 2 == 1' "$TMP/merged.jsonl" > "$TMP/c1.jsonl"
+awk 'NR % 2 == 0' "$TMP/merged.jsonl" > "$TMP/c2.jsonl"
+N=$(wc -l < "$TMP/merged.jsonl")
+echo "workload: $N submits split across 2 clients"
+
+SOCK="$TMP/repro.sock"
+WINDOW=1000000
+"$REPRO" serve --listen "unix:$SOCK" --clock virtual \
+    --shards 1 --batch-window "$WINDOW" --no-steal \
+    2> "$TMP/server.err" &
+SRV=$!
+
+for _ in $(seq 100); do
+    [ -S "$SOCK" ] && break
+    sleep 0.1
+done
+[ -S "$SOCK" ] || { echo "server never bound $SOCK"; cat "$TMP/server.err"; exit 1; }
+
+python3 scripts/socket_clients.py "$SOCK" "$TMP/c1.jsonl" "$TMP/c2.jsonl" "$N" \
+    > "$TMP/final.json"
+wait "$SRV"
+echo "two-client snapshot: $(cat "$TMP/final.json")"
+
+# single-client oracle: replay the merged trace with the same batching
+cat "$TMP/merged.jsonl" > "$TMP/merged_full.jsonl"
+echo '{"op":"shutdown"}' >> "$TMP/merged_full.jsonl"
+"$REPRO" replay "$TMP/merged_full.jsonl" \
+    --shards 1 --batch-window "$WINDOW" --no-steal \
+    2> /dev/null | tail -1 > "$TMP/oracle.json"
+echo "replay snapshot:     $(cat "$TMP/oracle.json")"
+
+python3 - "$TMP/final.json" "$TMP/oracle.json" <<'EOF'
+import json, sys
+a = json.load(open(sys.argv[1]))
+b = json.load(open(sys.argv[2]))
+for k in ("e_total", "e_run", "e_idle", "e_overhead",
+          "admitted", "submitted", "violations", "servers_used"):
+    da, db = a[k], b[k]
+    assert abs(da - db) <= 1e-9 * max(abs(db), 1.0), f"{k}: sockets={da} replay={db}"
+print(f"socket smoke OK: E_total={a['e_total']:.6e}, "
+      f"{int(a['admitted'])}/{int(a['submitted'])} admitted, "
+      f"{int(a['violations'])} violations")
+EOF
