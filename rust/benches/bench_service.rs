@@ -4,12 +4,15 @@
 //! wastes the most time; acceptance target: ≥ 3×).
 //!
 //! CI smoke mode: `cargo bench --bench bench_service -- --smoke
-//! --json BENCH_service.json --min-speedup 1.5` runs a reduced
-//! configuration, writes the throughput + shard-scaling numbers as a
-//! JSON artifact, and exits non-zero when the 4-shard speedup falls
-//! below the gate (best of three rounds, to ride out runner noise).
+//! --json BENCH_service.json --min-speedup 1.5 --min-cached-speedup 5`
+//! runs a reduced configuration, writes the throughput + shard-scaling +
+//! submit-latency numbers as a JSON artifact, and exits non-zero when the
+//! 4-shard speedup falls below the shard gate (best of three rounds, to
+//! ride out runner noise) or the solve-plane cache delivers less than the
+//! cached-solve throughput gate over the fresh grid solver.
 
 use dvfs_sched::config::SimConfig;
+use dvfs_sched::dvfs::{solve_opt, SolveCache, GRID_DEFAULT};
 use dvfs_sched::runtime::Solver;
 use dvfs_sched::service::{RoutePolicy, Service, ShardedService};
 use dvfs_sched::sim::online::{
@@ -18,6 +21,7 @@ use dvfs_sched::sim::online::{
 use dvfs_sched::tasks::{generate_online, Task, LIBRARY};
 use dvfs_sched::util::bench::{bb, fmt_dur, section, Bencher};
 use dvfs_sched::util::json::{num, obj, Json};
+use dvfs_sched::util::stats::percentile;
 use dvfs_sched::util::Rng;
 use std::time::Instant;
 
@@ -25,10 +29,14 @@ use std::time::Instant;
 struct SmokeOpts {
     /// Shrink the workloads and skip the slow non-gated sections.
     smoke: bool,
-    /// Write `{throughput, shard_scaling, speedup_4_shards}` here.
+    /// Write `{throughput, shard_scaling, speedup_4_shards, latency,
+    /// solves/sec}` here.
     json: Option<String>,
     /// Fail (exit 1) when the 4-shard speedup is below this.
     min_speedup: Option<f64>,
+    /// Fail (exit 1) when cached solve throughput is below this multiple
+    /// of the fresh grid solver.
+    min_cached_speedup: Option<f64>,
 }
 
 fn parse_opts() -> SmokeOpts {
@@ -36,6 +44,7 @@ fn parse_opts() -> SmokeOpts {
         smoke: false,
         json: None,
         min_speedup: None,
+        min_cached_speedup: None,
     };
     let mut args = std::env::args().skip(1);
     while let Some(a) = args.next() {
@@ -45,6 +54,9 @@ fn parse_opts() -> SmokeOpts {
             "--min-speedup" => {
                 opts.min_speedup = args.next().and_then(|v| v.parse().ok());
             }
+            "--min-cached-speedup" => {
+                opts.min_cached_speedup = args.next().and_then(|v| v.parse().ok());
+            }
             // `cargo bench` forwards its own harness flags; ignore them
             _ => {}
         }
@@ -53,10 +65,17 @@ fn parse_opts() -> SmokeOpts {
 }
 
 /// One shard-scaling measurement: tasks/sec at each shard count.
+///
+/// Runs with the solve-plane caches OFF: the scaling gate has always
+/// measured the fresh-solver placement engine (that was the only mode
+/// before the caches existed), and keeping that workload profile keeps
+/// the 1.5× CI gate's trajectory comparable across PRs.  The cache's own
+/// win is measured separately (cached-vs-fresh solves and the
+/// typed-cluster flush comparison below).
 fn shard_scaling_round(cfg: &SimConfig, n: usize, counts: &[usize]) -> Vec<(usize, f64)> {
     let mut out = Vec::new();
     for &shards in counts {
-        let mut svc = ShardedService::new(
+        let mut svc = ShardedService::new_with_cache(
             cfg,
             OnlinePolicyKind::Edl,
             true,
@@ -64,6 +83,7 @@ fn shard_scaling_round(cfg: &SimConfig, n: usize, counts: &[usize]) -> Vec<(usiz
             RoutePolicy::LeastLoaded,
             1.0,
             true,
+            false,
         )
         .expect("cluster splits into the requested shard counts");
         let mut rng = Rng::new(11);
@@ -271,8 +291,73 @@ fn main() {
     println!("  -> target: >= 2x at 4 shards on the 4-partition cluster");
 }
 
-/// CI smoke: a reduced shard-scaling run (best of 3 rounds) + optional
-/// JSON artifact + optional speedup gate.
+/// Tasks/sec flushing a typed two-type cluster (half the submits name a
+/// type, half say `"any"`), with the solve-plane caches on or off — the
+/// end-to-end view of what the cache buys a batch flush.
+fn typed_flush_rate(n: usize, cache: bool) -> f64 {
+    let mut cfg = SimConfig::default();
+    cfg.cluster.total_pairs = 256;
+    cfg.cluster.pairs_per_server = 32; // 8 servers
+    cfg.cluster.types = vec![
+        dvfs_sched::config::GpuTypeSpec {
+            name: "big".into(),
+            servers: 4,
+            power_scale: 1.8,
+            speed_scale: 2.0,
+        },
+        dvfs_sched::config::GpuTypeSpec {
+            name: "small".into(),
+            servers: 4,
+            power_scale: 0.55,
+            speed_scale: 0.8,
+        },
+    ];
+    cfg.theta = 0.9;
+    let mut svc = ShardedService::new_with_cache(
+        &cfg,
+        OnlinePolicyKind::Edl,
+        true,
+        2,
+        RoutePolicy::LeastLoaded,
+        1.0,
+        false,
+        cache,
+    )
+    .expect("typed cluster splits in two");
+    let mut rng = Rng::new(23);
+    let t0 = Instant::now();
+    for i in 0..n {
+        let app = rng.index(LIBRARY.len());
+        let model = LIBRARY[app].model.scaled(rng.int_range(10, 50) as f64);
+        let u = rng.open01().max(0.05);
+        let arrival = (i / 64) as f64;
+        let task = Task {
+            id: i,
+            app,
+            model,
+            arrival,
+            deadline: arrival + model.t_star() / u,
+            u,
+        };
+        let opts = dvfs_sched::service::SubmitOpts {
+            gpu_type: match i % 4 {
+                0 => dvfs_sched::service::TypePref::Named("big".into()),
+                1 => dvfs_sched::service::TypePref::Named("small".into()),
+                _ => dvfs_sched::service::TypePref::Any,
+            },
+            g: 1 + i % 3,
+        };
+        bb(svc.submit_with(task, opts));
+    }
+    bb(svc.flush());
+    let rate = n as f64 / t0.elapsed().as_secs_f64();
+    bb(svc.shutdown());
+    rate
+}
+
+/// CI smoke: a reduced shard-scaling run (best of 3 rounds) + submit
+/// latency percentiles + cached-vs-fresh solve throughput (gated) +
+/// typed-cluster flush comparison, with an optional JSON artifact.
 fn run_smoke(opts: &SmokeOpts) {
     section("bench-smoke: sharded service scaling (reduced config)");
     let mut cfg = SimConfig::default();
@@ -306,6 +391,98 @@ fn run_smoke(opts: &SmokeOpts) {
             rate / base
         );
     }
+
+    section("bench-smoke: submit latency (1 shard, 1-slot window)");
+    // per-submit wall latency through the full dispatcher path; slot-edge
+    // submits pay their batch's flush, which is exactly the tail we want
+    // the p99 to expose
+    let lat_n = 4_000usize;
+    let mut svc = ShardedService::new(
+        &cfg,
+        OnlinePolicyKind::Edl,
+        true,
+        1,
+        RoutePolicy::LeastLoaded,
+        1.0,
+        false,
+    )
+    .expect("1-shard service");
+    let mut rng = Rng::new(17);
+    let mut lat_us: Vec<f64> = Vec::with_capacity(lat_n);
+    for i in 0..lat_n {
+        let app = rng.index(LIBRARY.len());
+        let model = LIBRARY[app].model.scaled(rng.int_range(10, 50) as f64);
+        let u = rng.open01().max(0.02);
+        let arrival = (i / 64) as f64;
+        let task = Task {
+            id: i,
+            app,
+            model,
+            arrival,
+            deadline: arrival + model.t_star() / u,
+            u,
+        };
+        let t0 = Instant::now();
+        bb(svc.submit(task));
+        lat_us.push(t0.elapsed().as_secs_f64() * 1e6);
+    }
+    bb(svc.flush());
+    bb(svc.shutdown());
+    let lat_p50 = percentile(&lat_us, 50.0);
+    let lat_p99 = percentile(&lat_us, 99.0);
+    println!("submit latency over {lat_n} submits: p50 {lat_p50:.1} us, p99 {lat_p99:.1} us");
+
+    section("bench-smoke: cached vs fresh solve throughput");
+    let mix: Vec<dvfs_sched::TaskModel> = {
+        let mut rng = Rng::new(29);
+        (0..512)
+            .map(|_| {
+                LIBRARY[rng.index(LIBRARY.len())]
+                    .model
+                    .scaled(rng.int_range(10, 50) as f64)
+            })
+            .collect()
+    };
+    let iv = cfg.interval;
+    let mut cache = SolveCache::new(iv, GRID_DEFAULT);
+    for m in &mix {
+        bb(cache.solve_opt(m, f64::INFINITY)); // warm
+    }
+    let solves_round = |f: &mut dyn FnMut() -> f64| -> f64 {
+        // best of 3 timed rounds over the 512-model mix
+        let mut best = f64::INFINITY;
+        for _ in 0..3 {
+            let t0 = Instant::now();
+            bb(f());
+            best = best.min(t0.elapsed().as_secs_f64());
+        }
+        512.0 / best
+    };
+    let fresh_rate = solves_round(&mut || {
+        mix.iter()
+            .map(|m| solve_opt(m, f64::INFINITY, &iv, GRID_DEFAULT).e)
+            .sum::<f64>()
+    });
+    let cached_rate = solves_round(&mut || {
+        mix.iter()
+            .map(|m| cache.solve_opt(m, f64::INFINITY).e)
+            .sum::<f64>()
+    });
+    let cached_speedup = cached_rate / fresh_rate;
+    println!(
+        "solves/sec: cached {cached_rate:.2e} vs fresh {fresh_rate:.2e} = {cached_speedup:.1}x"
+    );
+
+    section("bench-smoke: typed-cluster flush throughput, cache on vs off");
+    let flush_n = 3_000usize;
+    let typed_uncached = typed_flush_rate(flush_n, false);
+    let typed_cached = typed_flush_rate(flush_n, true);
+    let typed_speedup = typed_cached / typed_uncached;
+    println!(
+        "typed flush: cached {typed_cached:.0} tasks/sec vs uncached {typed_uncached:.0} \
+         = {typed_speedup:.2}x (target >= 2x)"
+    );
+
     if let Some(path) = &opts.json {
         let scaling: Vec<Json> = best
             .iter()
@@ -325,10 +502,19 @@ fn run_smoke(opts: &SmokeOpts) {
             ("throughput_1_shard", num(base)),
             ("speedup_4_shards", num(speedup4)),
             ("shard_scaling", Json::Arr(scaling)),
+            ("submit_latency_p50_us", num(lat_p50)),
+            ("submit_latency_p99_us", num(lat_p99)),
+            ("solves_per_sec_fresh", num(fresh_rate)),
+            ("solves_per_sec_cached", num(cached_rate)),
+            ("cached_solve_speedup", num(cached_speedup)),
+            ("typed_flush_tasks_per_sec_uncached", num(typed_uncached)),
+            ("typed_flush_tasks_per_sec_cached", num(typed_cached)),
+            ("typed_flush_speedup", num(typed_speedup)),
         ]);
         std::fs::write(path, doc.render_compact()).expect("writing bench JSON artifact");
         println!("wrote {path}");
     }
+    let mut failed = false;
     if let Some(min) = opts.min_speedup {
         println!("gate: 4-shard speedup {speedup4:.2}x (minimum {min:.2}x)");
         if speedup4 < min {
@@ -336,7 +522,20 @@ fn run_smoke(opts: &SmokeOpts) {
                 "FAIL: 4-shard speedup {speedup4:.2}x below the {min:.2}x gate — \
                  the shard scaling trajectory regressed"
             );
-            std::process::exit(1);
+            failed = true;
         }
+    }
+    if let Some(min) = opts.min_cached_speedup {
+        println!("gate: cached solve speedup {cached_speedup:.2}x (minimum {min:.2}x)");
+        if cached_speedup < min {
+            eprintln!(
+                "FAIL: cached solve throughput {cached_speedup:.2}x below the {min:.2}x gate — \
+                 the solve-plane cache regressed"
+            );
+            failed = true;
+        }
+    }
+    if failed {
+        std::process::exit(1);
     }
 }

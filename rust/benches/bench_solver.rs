@@ -4,7 +4,7 @@
 //! the PJRT artifact backend (per batch size), plus the Algorithm-1
 //! two-pass prepare over a realistic arrival batch.
 
-use dvfs_sched::dvfs::ScalingInterval;
+use dvfs_sched::dvfs::{solve_exact, solve_opt, ScalingInterval, SolveCache, GRID_DEFAULT};
 use dvfs_sched::runtime::{SolveReq, Solver};
 use dvfs_sched::sched::prepare;
 use dvfs_sched::tasks::{Task, LIBRARY};
@@ -73,6 +73,48 @@ fn main() {
         }
         Err(e) => println!("pjrt unavailable: {e:#}"),
     }
+
+    section("solve-plane cache vs fresh grid sweep (the per-task hot path)");
+    // a realistic service mix: models drawn from the class library with
+    // integer scale factors, so the cache hit rate approaches 1 after the
+    // first flush (exactly the streaming service's traffic shape)
+    let mix = reqs(512, 7);
+    let mut cache = SolveCache::new(iv, GRID_DEFAULT);
+    for r in &mix {
+        bb(cache.solve_opt(&r.model, f64::INFINITY)); // warm the planes
+    }
+    let fresh_opt = b.run("solve_opt/fresh/512", || {
+        mix.iter()
+            .map(|r| solve_opt(&r.model, f64::INFINITY, &iv, GRID_DEFAULT).e)
+            .sum::<f64>()
+    });
+    let cached_opt = b.run("solve_opt/cached/512", || {
+        mix.iter()
+            .map(|r| cache.solve_opt(&r.model, f64::INFINITY).e)
+            .sum::<f64>()
+    });
+    println!(
+        "  -> cached {:.2e} solves/s vs fresh {:.2e} solves/s = {:.1}x (gate >= 5x in CI smoke)",
+        512.0 * cached_opt.per_sec(),
+        512.0 * fresh_opt.per_sec(),
+        fresh_opt.mean.as_secs_f64() / cached_opt.mean.as_secs_f64(),
+    );
+    let fresh_exact = b.run("solve_exact/fresh/512", || {
+        mix.iter()
+            .map(|r| solve_exact(&r.model, r.model.t_star(), &iv, GRID_DEFAULT).e)
+            .sum::<f64>()
+    });
+    let cached_exact = b.run("solve_exact/cached/512", || {
+        mix.iter()
+            .map(|r| cache.solve_exact(&r.model, r.model.t_star()).e)
+            .sum::<f64>()
+    });
+    println!(
+        "  -> exact-solve cached vs fresh: {:.1}x (hits {} / misses {})",
+        fresh_exact.mean.as_secs_f64() / cached_exact.mean.as_secs_f64(),
+        cache.hits,
+        cache.misses,
+    );
 
     section("Algorithm-1 prepare (two-pass) over an arrival batch");
     let ts = tasks(256, 3);

@@ -173,6 +173,18 @@ pub struct Cluster {
     pub gang_log: Vec<(usize, Vec<usize>)>,
     /// Gangs placed (multi-pair reservations; g = 1 tasks do not count).
     pub gangs_placed: u64,
+    /// Powered-off servers by index: the fresh-server scan
+    /// ([`Cluster::first_off_server`]) in O(log n) instead of O(servers).
+    off_servers: std::collections::BTreeSet<usize>,
+    /// Per-server count of idle pairs (0 for off servers).  Maintained by
+    /// assign / gang-assign / departures / power transitions.
+    free_pairs: Vec<usize>,
+    /// Powered-ON servers bucketed by idle-pair count:
+    /// `free_by_count[c]` holds exactly the on-servers with `c` idle
+    /// pairs.  Gang placement reads "lowest server with ≥ g free pairs"
+    /// ([`Cluster::server_with_free_pairs`]) in O(l·log n) instead of the
+    /// O(servers × pairs) availability scan.
+    free_by_count: Vec<std::collections::BTreeSet<usize>>,
 }
 
 impl Cluster {
@@ -199,7 +211,53 @@ impl Cluster {
             assign_log: Vec::new(),
             gang_log: Vec::new(),
             gangs_placed: 0,
+            off_servers: (0..n_servers).collect(),
+            free_pairs: vec![0; n_servers],
+            free_by_count: vec![std::collections::BTreeSet::new(); l + 1],
         }
+    }
+
+    /// Move on-server `s` from its current free-pair bucket to `new`.
+    fn set_free_count(&mut self, s: usize, new: usize) {
+        let old = self.free_pairs[s];
+        if old != new {
+            self.free_by_count[old].remove(&s);
+            self.free_by_count[new].insert(s);
+            self.free_pairs[s] = new;
+        }
+    }
+
+    /// Lowest-indexed powered-off server (the fresh-server target).
+    pub fn first_off_server(&self) -> Option<usize> {
+        self.off_servers.iter().next().copied()
+    }
+
+    /// Lowest-indexed powered-on server with at least `g` idle pairs —
+    /// the gang fast path: such a server admits a `g`-wide common start
+    /// at the current time, which no other server can beat.
+    pub fn server_with_free_pairs(&self, g: usize) -> Option<usize> {
+        let mut best: Option<usize> = None;
+        for bucket in self.free_by_count.iter().skip(g) {
+            if let Some(&s) = bucket.iter().next() {
+                best = Some(best.map_or(s, |b| b.min(s)));
+            }
+        }
+        best
+    }
+
+    /// The widest reservation any single server could host right now:
+    /// `l` while an off server remains (opening it frees a whole server),
+    /// else the maximum idle-pair count over powered-on servers.  The
+    /// work-stealing gang-headroom guard reads this in O(l·log n) instead
+    /// of scanning every pair.
+    pub fn max_free_pairs(&self) -> usize {
+        if !self.off_servers.is_empty() {
+            return self.l();
+        }
+        (0..self.free_by_count.len())
+            .rev()
+            .find(|&c| !self.free_by_count[c].is_empty())
+            .unwrap_or(0)
     }
 
     /// Pairs per server.
@@ -222,6 +280,9 @@ impl Cluster {
             self.pairs[i].turn_on(now);
             self.idle_pairs.insert(i);
         }
+        self.off_servers.remove(&s);
+        self.free_pairs[s] = self.l();
+        self.free_by_count[self.l()].insert(s);
     }
 
     /// Turn a server off at `now`; all pairs must be non-busy.
@@ -232,6 +293,9 @@ impl Cluster {
             self.pairs[i].turn_off(now);
             self.idle_pairs.remove(&i);
         }
+        self.free_by_count[self.free_pairs[s]].remove(&s);
+        self.free_pairs[s] = 0;
+        self.off_servers.insert(s);
     }
 
     /// Assign a task to pair `i` starting at `start` with duration `dur`
@@ -244,7 +308,12 @@ impl Cluster {
         p: f64,
         deadline: f64,
     ) -> f64 {
+        let server = self.pairs[i].server;
+        let was_idle = self.pairs[i].power == PairPower::Idle;
         let mu = self.pairs[i].assign(start, dur);
+        if was_idle {
+            self.set_free_count(server, self.free_pairs[server] - 1);
+        }
         self.idle_pairs.remove(&i);
         self.departures.push(Reverse((OrdF64(mu), i)));
         self.last_assign = Some((i, start, mu));
@@ -280,7 +349,11 @@ impl Cluster {
         );
         let mut mu = start;
         for &i in pair_ids {
+            let was_idle = self.pairs[i].power == PairPower::Idle;
             mu = self.pairs[i].assign(start, dur);
+            if was_idle {
+                self.set_free_count(server, self.free_pairs[server] - 1);
+            }
             self.idle_pairs.remove(&i);
             self.departures.push(Reverse((OrdF64(mu), i)));
         }
@@ -353,6 +426,8 @@ impl Cluster {
             let p = &mut self.pairs[i];
             if p.power == PairPower::Busy && p.busy_until == mu {
                 p.depart();
+                let server = p.server;
+                self.set_free_count(server, self.free_pairs[server] + 1);
                 self.idle_pairs.insert(i);
                 departed.push(i);
             }
@@ -638,6 +713,47 @@ mod tests {
         let views = partition_cluster(&base, 2).unwrap();
         assert_eq!(views[0].types, vec![(0, 4), (1, 1)]);
         assert_eq!(views[1].types, vec![(1, 5)]);
+    }
+
+    #[test]
+    fn placement_indexes_track_power_and_occupancy() {
+        // 4 servers of 2 pairs: the off-server index, per-server free-pair
+        // counts, and the free-by-count buckets must stay exact through
+        // turn-on / assign / gang / departure / turn-off transitions
+        let mut c = Cluster::new(cfg(2));
+        assert_eq!(c.server_on.len(), 128);
+        assert_eq!(c.first_off_server(), Some(0));
+        assert_eq!(c.server_with_free_pairs(1), None, "everything off");
+        assert_eq!(c.max_free_pairs(), 2, "an off server can host l=2");
+
+        c.turn_on_server(0, 0.0);
+        c.turn_on_server(2, 0.0);
+        assert_eq!(c.first_off_server(), Some(1));
+        assert_eq!(c.server_with_free_pairs(2), Some(0), "lowest index wins");
+        assert_eq!(c.server_with_free_pairs(3), None, "wider than a server");
+
+        c.assign(0, 0.0, 5.0, 100.0, 100.0);
+        assert_eq!(c.server_with_free_pairs(2), Some(2), "server 0 half-busy");
+        assert_eq!(c.server_with_free_pairs(1), Some(0));
+        c.assign_gang(&[4, 5], 0.0, 3.0, 100.0, 100.0);
+        assert_eq!(c.server_with_free_pairs(1), Some(0), "server 2 full");
+
+        // queueing onto a busy pair must not double-count the slot
+        c.assign(0, 5.0, 1.0, 100.0, 100.0);
+        assert_eq!(c.server_with_free_pairs(1), Some(0));
+
+        c.process_departures(3.0);
+        assert_eq!(c.server_with_free_pairs(2), Some(2), "gang departed");
+        c.process_departures(6.0);
+        assert_eq!(c.server_with_free_pairs(2), Some(0));
+        assert_eq!(c.max_free_pairs(), 2);
+
+        c.turn_off_server(2, 7.0);
+        assert_eq!(c.first_off_server(), Some(1));
+        assert_eq!(c.server_with_free_pairs(2), Some(0));
+        c.turn_off_server(0, 7.0);
+        assert_eq!(c.server_with_free_pairs(1), None);
+        assert_eq!(c.first_off_server(), Some(0));
     }
 
     #[test]

@@ -8,10 +8,12 @@
 
 pub mod interval;
 pub mod model;
+pub mod plane;
 pub mod solver;
 
 pub use interval::ScalingInterval;
 pub use model::{g1, g1_inv, TaskModel};
+pub use plane::{SolveCache, SolvePlane};
 pub use solver::{
     solve_exact, solve_for_window, solve_opt, solve_opt_on_grid, Setting, VGrid, GRID_DEFAULT,
 };

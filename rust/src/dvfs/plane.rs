@@ -1,0 +1,605 @@
+//! Solve-plane caching: the per-`(TaskModel, ScalingInterval)` structure
+//! of the DVFS optimum, materialized once and looked up per placement.
+//!
+//! The paper's central claim is that the analytical model is fast enough
+//! to drive per-task voltage/frequency selection online — but the
+//! schedulers call [`solve_opt`](crate::dvfs::solve_opt) /
+//! [`solve_exact`](crate::dvfs::solve_exact) per task per placement, and
+//! each call re-walks a 64-point grid with a square root per point.  For
+//! a *fixed* task model the grid walk is query-independent: the optimal
+//! setting as a function of the time budget is a monotone frontier
+//! (Ilager et al.'s data-driven frequency scaling and Rizvandi et al.'s
+//! optimal-frequency analysis exploit the same structure).  A
+//! [`SolvePlane`] walks the V-grid once, keeps every point's
+//! query-independent state, and answers:
+//!
+//! * [`SolvePlane::solve_opt`] — binary search over the free-region
+//!   frontier plus a short exact scan of the deadline-binding tail
+//!   (typically empty for the energy-prior hot path `tlim = ∞`),
+//! * [`SolvePlane::solve_exact`] — a scan of precomputed fm-grid points
+//!   with **no** transcendentals per point,
+//! * [`SolvePlane::t_min`] / [`SolvePlane::t_max`] — O(1).
+//!
+//! **Correctness contract:** every lookup reproduces the fresh solver's
+//! arithmetic operation-for-operation on the winning grid point, so
+//! results are bit-identical to [`crate::dvfs::solve_opt`] /
+//! [`crate::dvfs::solve_exact`] except at measure-zero float knife edges
+//! (pinned by `prop_solve_plane_matches_fresh_solver` in
+//! `tests/proptests.rs` and by the cached-vs-uncached service regression
+//! in `tests/integration_service.rs`).
+//!
+//! [`SolveCache`] keys planes by the model's parameter bits.  Task models
+//! come from a small class library scaled by integer factors, so service
+//! hit rates are near 1; caches are kept shard-local (one per
+//! [`crate::service::shard::Shard`] type pool) so the lookup path takes
+//! no locks.
+
+use super::interval::ScalingInterval;
+use super::model::{g1, g1_inv, TaskModel};
+use super::solver::{Setting, VGrid, BIG, GRID_DEFAULT, RELTOL, TINY};
+use std::collections::HashMap;
+
+/// Planes retained per cache before an epoch flush.  Task models are
+/// drawn from a small class set, so real workloads never approach this;
+/// the cap only bounds memory against adversarial streams of distinct
+/// models (each plane is ~10 KB).
+const PLANE_CACHE_CAP: usize = 1024;
+
+/// One V-grid point's query-independent state for
+/// [`SolvePlane::solve_opt`].
+#[derive(Clone, Copy, Debug)]
+struct OptPoint {
+    /// Grid index in the fresh solver's scan order (the tie-break axis).
+    gi: usize,
+    /// Core voltage at this point.
+    v: f64,
+    /// Core frequency `g1(v).max(fc_min)`.
+    fc: f64,
+    /// `t0 + d·δ/fc` — the memory-independent time share.
+    t_core: f64,
+    /// Closed-form unconstrained `f_m` optimum at this point.
+    fm_star: f64,
+    /// Time budget below which the point leaves its free region (the
+    /// `f_m` requirement crosses the knee / feasibility ceiling).
+    t_edge: f64,
+    /// The point's free-region candidate — constant for `tlim ≥ t_edge`.
+    free: Setting,
+}
+
+/// The [`SolvePlane::solve_opt`] index: points sorted by `t_edge`.
+#[derive(Clone, Debug)]
+struct OptPlane {
+    /// Points sorted by `t_edge` ascending, grid index as tie-break.
+    pts: Vec<OptPoint>,
+    /// `prefix_best[i]` = index into `pts` of the minimum-energy free
+    /// candidate among `pts[..=i]` (ties to the lowest grid index — the
+    /// fresh solver's scan-order tie-break).
+    prefix_best: Vec<usize>,
+    /// `suffix_floor[i]` = min free energy over `pts[i..]`.  A binding
+    /// candidate never beats its own point's free optimum, so the query
+    /// scan stops once the incumbent undercuts the remaining floor.
+    suffix_floor: Vec<f64>,
+}
+
+/// One fm-grid point's query-independent state for
+/// [`SolvePlane::solve_exact`].
+#[derive(Clone, Copy, Debug)]
+struct ExactPoint {
+    /// Memory frequency at this grid point.
+    fm: f64,
+    /// `fm.max(TINY)` — the time-equation denominator the oracle uses.
+    fm_t: f64,
+    /// `(1 − δ)/fm` — the query-independent part of the time equation.
+    c1: f64,
+}
+
+/// The precomputed solve structure of one `(model, interval)` pair.
+///
+/// # Examples
+///
+/// ```
+/// use dvfs_sched::dvfs::{solve_opt, ScalingInterval, SolvePlane, TaskModel, GRID_DEFAULT};
+///
+/// let m = TaskModel { p0: 57.0, gamma: 28.5, c: 104.5, d: 5.0, delta: 0.5, t0: 0.5 };
+/// let iv = ScalingInterval::wide();
+/// let plane = SolvePlane::build(&m, &iv, GRID_DEFAULT);
+/// let fresh = solve_opt(&m, f64::INFINITY, &iv, GRID_DEFAULT);
+/// let cached = plane.solve_opt(f64::INFINITY);
+/// assert_eq!(cached.e, fresh.e);
+/// assert_eq!(cached.fm, fresh.fm);
+/// assert_eq!(plane.t_min(), m.t_min(&iv));
+/// ```
+#[derive(Clone, Debug)]
+pub struct SolvePlane {
+    model: TaskModel,
+    iv: ScalingInterval,
+    /// `d·(1 − δ)` — the fm-requirement numerator.
+    kq: f64,
+    /// `d.max(TINY)` — the exact solve's time-equation denominator.
+    d_t: f64,
+    /// `fm_max·(1 + RELTOL)` — the feasibility ceiling.
+    fm_cap_tol: f64,
+    /// `g1(v_max)` — the reachable core-frequency cap.
+    fc_cap: f64,
+    /// `g1(v_min)` — the only other `g1` value an exact query can need.
+    g1_vmin: f64,
+    /// `δ < 1e-6` — the exact solve's degenerate-core branch.
+    delta_zero: bool,
+    t_min: f64,
+    t_max: f64,
+    opt: OptPlane,
+    exact: Vec<ExactPoint>,
+}
+
+impl SolvePlane {
+    /// Walk the V-grid once and materialize the plane.
+    pub fn build(m: &TaskModel, iv: &ScalingInterval, grid: usize) -> SolvePlane {
+        let vg = VGrid::new(iv, grid);
+        let kq = m.d * (1.0 - m.delta);
+        let fm_cap_tol = iv.fm_max * (1.0 + RELTOL);
+        let mut pts = Vec::with_capacity(grid);
+        for (gi, &(v, fc, v2fc)) in vg.points().iter().enumerate() {
+            // identical arithmetic to solve_opt_on_grid, hoisted per point
+            let t_core = m.t0 + m.d * m.delta / fc;
+            let num = (m.p0 + m.c * v2fc) * m.d * (1.0 - m.delta);
+            let den = m.gamma * t_core;
+            let fm_star = (num / den.max(TINY)).sqrt();
+            // the oracle's clamp chain collapses to this fm whenever the
+            // requirement stays below the knee max(fm_star, fm_min)
+            let fm_knee = fm_star.max(iv.fm_min);
+            let fm_free = fm_knee.min(iv.fm_max);
+            let t_free = m.exec_time(fc, fm_free);
+            let p_free = m.power(v, fc, fm_free);
+            let free = Setting {
+                v,
+                fc,
+                fm: fm_free,
+                t: t_free,
+                p: p_free,
+                e: p_free * t_free,
+                feasible: true,
+            };
+            // tlim below which the requirement crosses the knee (or the
+            // feasibility ceiling, whichever binds first)
+            let fm_gate = fm_knee.min(fm_cap_tol);
+            let t_edge = if kq > 0.0 { t_core + kq / fm_gate } else { t_core };
+            pts.push(OptPoint {
+                gi,
+                v,
+                fc,
+                t_core,
+                fm_star,
+                t_edge,
+                free,
+            });
+        }
+        pts.sort_by(|a, b| {
+            a.t_edge
+                .partial_cmp(&b.t_edge)
+                .unwrap()
+                .then(a.gi.cmp(&b.gi))
+        });
+        let mut prefix_best = Vec::with_capacity(pts.len());
+        let mut best = 0usize;
+        for (i, p) in pts.iter().enumerate() {
+            if i == 0 || (p.free.e, p.gi) < (pts[best].free.e, pts[best].gi) {
+                best = i;
+            }
+            prefix_best.push(best);
+        }
+        let mut suffix_floor = vec![0.0; pts.len()];
+        let mut floor = f64::INFINITY;
+        for i in (0..pts.len()).rev() {
+            floor = floor.min(pts[i].free.e);
+            suffix_floor[i] = floor;
+        }
+        let step = (iv.fm_max - iv.fm_min) / (grid - 1) as f64;
+        let exact = (0..grid)
+            .map(|gi| {
+                let fm = iv.fm_min + gi as f64 * step;
+                ExactPoint {
+                    fm,
+                    fm_t: fm.max(TINY),
+                    c1: (1.0 - m.delta) / fm,
+                }
+            })
+            .collect();
+        SolvePlane {
+            model: *m,
+            iv: *iv,
+            kq,
+            d_t: m.d.max(TINY),
+            fm_cap_tol,
+            fc_cap: g1(iv.v_max),
+            g1_vmin: g1(iv.v_min),
+            delta_zero: m.delta < 1e-6,
+            t_min: m.t_min(iv),
+            t_max: m.t_max(iv),
+            opt: OptPlane {
+                pts,
+                prefix_best,
+                suffix_floor,
+            },
+            exact,
+        }
+    }
+
+    /// The model this plane was built for.
+    pub fn model(&self) -> &TaskModel {
+        &self.model
+    }
+
+    /// Minimum achievable execution time (everything at max) — O(1).
+    pub fn t_min(&self) -> f64 {
+        self.t_min
+    }
+
+    /// Maximum achievable execution time (everything at min) — O(1).
+    pub fn t_max(&self) -> f64 {
+        self.t_max
+    }
+
+    /// [`crate::dvfs::solve_opt`] as a frontier lookup: binary search
+    /// over the free-region prefix, then an exact scan of the (usually
+    /// empty) deadline-binding tail with an energy-floor early exit.
+    pub fn solve_opt(&self, tlim: f64) -> Setting {
+        let m = &self.model;
+        let iv = &self.iv;
+        let tlim = tlim.min(BIG);
+        let mut best = Setting::infeasible();
+        let mut best_gi = usize::MAX;
+        // certainly-free prefix: points whose t_edge sits below the
+        // budget by a 1e-9 relative guard contribute their precomputed
+        // free candidate; knife-edge points fall through to the exact
+        // scan so boundary rounding can never misclassify a candidate
+        let cut = tlim * (1.0 - 1e-9);
+        let k = self.opt.pts.partition_point(|p| p.t_edge <= cut);
+        if k > 0 {
+            let b = &self.opt.pts[self.opt.prefix_best[k - 1]];
+            best = b.free;
+            best_gi = b.gi;
+        }
+        for (j, p) in self.opt.pts.iter().enumerate().skip(k) {
+            // no remaining point can beat the incumbent: a binding
+            // candidate is never below its own free optimum (the margin
+            // absorbs flat-region rounding)
+            if best.feasible && best.e <= self.opt.suffix_floor[j] * (1.0 - 1e-12) {
+                break;
+            }
+            // the fresh solver's per-point body, fm_star precomputed
+            let budget = tlim - p.t_core;
+            let fm_req = if budget > 0.0 {
+                self.kq / budget.max(TINY)
+            } else {
+                BIG
+            };
+            let fm_lo = fm_req.max(iv.fm_min);
+            if !(fm_lo <= self.fm_cap_tol) {
+                continue;
+            }
+            let fm = p.fm_star.max(fm_lo).min(iv.fm_max);
+            let t = m.exec_time(p.fc, fm);
+            let pw = m.power(p.v, p.fc, fm);
+            let e = pw * t;
+            if e < best.e || (e == best.e && p.gi < best_gi) {
+                best = Setting {
+                    v: p.v,
+                    fc: p.fc,
+                    fm,
+                    t,
+                    p: pw,
+                    e,
+                    feasible: true,
+                };
+                best_gi = p.gi;
+            }
+        }
+        best
+    }
+
+    /// [`crate::dvfs::solve_exact`] on precomputed fm-grid points: the
+    /// same candidates and arithmetic, with no square root per point (the
+    /// `g1` stability check reduces to build-time constants).
+    pub fn solve_exact(&self, t_target: f64) -> Setting {
+        let m = &self.model;
+        let iv = &self.iv;
+        let mut best = Setting::infeasible();
+        let base = (t_target - m.t0) / self.d_t;
+        for pt in &self.exact {
+            let q = base - pt.c1;
+            let fc_raw = if self.delta_zero {
+                iv.fc_min
+            } else if q > 0.0 {
+                m.delta / q.max(TINY)
+            } else {
+                BIG
+            };
+            let fc = fc_raw.clamp(iv.fc_min, self.fc_cap);
+            let v = g1_inv(fc).clamp(iv.v_min, iv.v_max);
+            // decision-identical to the oracle's `g1(v)·(1+RELTOL) ≥ fc`
+            // without the sqrt: an interior (or v_max-clamped) v
+            // round-trips g1 within ulps of fc — far inside RELTOL — so
+            // only the v_min edge can decide, and there g1(v_min) is a
+            // build-time constant
+            let fc_ok = v > iv.v_min || self.g1_vmin * (1.0 + RELTOL) >= fc;
+            let t = m.exec_time(fc, pt.fm_t);
+            let meets = t <= t_target * (1.0 + RELTOL) + 1e-6;
+            if !(fc_ok && meets) {
+                continue;
+            }
+            let p = m.power(v, fc, pt.fm);
+            let e = p * t;
+            if e < best.e {
+                best = Setting {
+                    v,
+                    fc,
+                    fm: pt.fm,
+                    t,
+                    p,
+                    e,
+                    feasible: true,
+                };
+            }
+        }
+        best
+    }
+
+    /// [`crate::dvfs::solve_for_window`] on the plane: best of the capped
+    /// free optimum and the exact-window parametrization.
+    pub fn solve_for_window(&self, window: f64) -> Setting {
+        let opt = self.solve_opt(window);
+        let adj = self.solve_exact(window);
+        if adj.feasible && (!opt.feasible || adj.e < opt.e) {
+            adj
+        } else {
+            opt
+        }
+    }
+}
+
+/// Cache key: the model's six parameter bit patterns.
+type PlaneKey = [u64; 6];
+
+fn plane_key(m: &TaskModel) -> PlaneKey {
+    [
+        m.p0.to_bits(),
+        m.gamma.to_bits(),
+        m.c.to_bits(),
+        m.d.to_bits(),
+        m.delta.to_bits(),
+        m.t0.to_bits(),
+    ]
+}
+
+/// A keyed store of [`SolvePlane`]s for one scaling interval.
+///
+/// Single-threaded by design: every scheduling context owns its cache
+/// (shard type pools keep one each), so lookups never take a lock.  A
+/// disabled cache ([`SolveCache::disabled`]) makes callers fall back to
+/// the fresh solver — the PJRT backend path, and the regression tests'
+/// uncached oracle.
+///
+/// # Examples
+///
+/// ```
+/// use dvfs_sched::dvfs::{ScalingInterval, SolveCache, TaskModel, GRID_DEFAULT};
+///
+/// let m = TaskModel { p0: 57.0, gamma: 28.5, c: 104.5, d: 5.0, delta: 0.5, t0: 0.5 };
+/// let mut cache = SolveCache::new(ScalingInterval::wide(), GRID_DEFAULT);
+/// let a = cache.solve_opt(&m, f64::INFINITY);
+/// let b = cache.solve_opt(&m, f64::INFINITY);
+/// assert_eq!(a, b);
+/// assert_eq!((cache.misses, cache.hits), (1, 1));
+/// ```
+#[derive(Clone, Debug)]
+pub struct SolveCache {
+    iv: ScalingInterval,
+    grid: usize,
+    enabled: bool,
+    planes: HashMap<PlaneKey, SolvePlane>,
+    /// Lookups served by an existing plane.
+    pub hits: u64,
+    /// Lookups that built a new plane.
+    pub misses: u64,
+}
+
+impl SolveCache {
+    /// An enabled cache for `iv` at `grid` resolution.
+    pub fn new(iv: ScalingInterval, grid: usize) -> SolveCache {
+        SolveCache {
+            iv,
+            grid,
+            enabled: true,
+            planes: HashMap::new(),
+            hits: 0,
+            misses: 0,
+        }
+    }
+
+    /// A disabled cache: [`SolveCache::enabled`] reports false and
+    /// callers route solves to the fresh solver instead.
+    pub fn disabled(iv: ScalingInterval) -> SolveCache {
+        SolveCache {
+            enabled: false,
+            ..SolveCache::new(iv, GRID_DEFAULT)
+        }
+    }
+
+    /// Whether plane lookups should be used.
+    pub fn enabled(&self) -> bool {
+        self.enabled
+    }
+
+    /// Whether this cache was built for `iv` (callers pair one cache per
+    /// scheduling context, so a mismatch is a wiring bug).
+    pub fn matches(&self, iv: &ScalingInterval) -> bool {
+        self.iv == *iv
+    }
+
+    /// Planes currently materialized.
+    pub fn len(&self) -> usize {
+        self.planes.len()
+    }
+
+    /// Whether no plane has been materialized yet.
+    pub fn is_empty(&self) -> bool {
+        self.planes.is_empty()
+    }
+
+    /// The plane for `m`, building it on first sight (epoch-flushing the
+    /// store past `PLANE_CACHE_CAP` distinct models).
+    pub fn plane(&mut self, m: &TaskModel) -> &SolvePlane {
+        let key = plane_key(m);
+        if self.planes.contains_key(&key) {
+            self.hits += 1;
+        } else {
+            self.misses += 1;
+            if self.planes.len() >= PLANE_CACHE_CAP {
+                self.planes.clear();
+            }
+        }
+        let (iv, grid) = (self.iv, self.grid);
+        self.planes
+            .entry(key)
+            .or_insert_with(|| SolvePlane::build(m, &iv, grid))
+    }
+
+    /// Cached [`crate::dvfs::solve_opt`].
+    pub fn solve_opt(&mut self, m: &TaskModel, tlim: f64) -> Setting {
+        self.plane(m).solve_opt(tlim)
+    }
+
+    /// Cached [`crate::dvfs::solve_exact`].
+    pub fn solve_exact(&mut self, m: &TaskModel, t_target: f64) -> Setting {
+        self.plane(m).solve_exact(t_target)
+    }
+
+    /// Cached [`crate::dvfs::solve_for_window`].
+    pub fn solve_for_window(&mut self, m: &TaskModel, window: f64) -> Setting {
+        self.plane(m).solve_for_window(window)
+    }
+
+    /// Cached [`TaskModel::t_min`].
+    pub fn t_min(&mut self, m: &TaskModel) -> f64 {
+        self.plane(m).t_min()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dvfs::solver::{solve_exact, solve_for_window, solve_opt};
+    use crate::tasks::LIBRARY;
+
+    fn close(a: f64, b: f64) -> bool {
+        (a - b).abs() <= 1e-9 * a.abs().max(b.abs()).max(1e-12)
+    }
+
+    fn assert_same(plane: &Setting, fresh: &Setting, what: &str) {
+        assert_eq!(plane.feasible, fresh.feasible, "{what}: feasibility");
+        if fresh.feasible {
+            assert!(close(plane.e, fresh.e), "{what}: e {} vs {}", plane.e, fresh.e);
+            assert!(close(plane.t, fresh.t), "{what}: t {} vs {}", plane.t, fresh.t);
+            assert!(close(plane.p, fresh.p), "{what}: p {} vs {}", plane.p, fresh.p);
+        }
+    }
+
+    #[test]
+    fn plane_matches_fresh_solver_across_budgets() {
+        let iv = ScalingInterval::wide();
+        for (ai, app) in LIBRARY.iter().enumerate() {
+            let m = app.model.scaled(10.0 + ai as f64);
+            let plane = SolvePlane::build(&m, &iv, GRID_DEFAULT);
+            let free = solve_opt(&m, f64::INFINITY, &iv, GRID_DEFAULT);
+            assert_same(&plane.solve_opt(f64::INFINITY), &free, "free");
+            assert_eq!(plane.t_min(), m.t_min(&iv));
+            assert_eq!(plane.t_max(), m.t_max(&iv));
+            for frac in [2.0, 1.0, 0.95, 0.9, 0.85, 0.5, 0.1] {
+                let tlim = free.t * frac;
+                assert_same(
+                    &plane.solve_opt(tlim),
+                    &solve_opt(&m, tlim, &iv, GRID_DEFAULT),
+                    "capped opt",
+                );
+                assert_same(
+                    &plane.solve_exact(tlim),
+                    &solve_exact(&m, tlim, &iv, GRID_DEFAULT),
+                    "exact",
+                );
+                assert_same(
+                    &plane.solve_for_window(tlim),
+                    &solve_for_window(&m, tlim, &iv, GRID_DEFAULT),
+                    "window",
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn plane_matches_on_narrow_interval_and_degenerate_deltas() {
+        let iv = ScalingInterval::narrow();
+        let base = LIBRARY[0].model.scaled(20.0);
+        for delta in [0.0, 0.3, 1.0] {
+            let m = TaskModel { delta, ..base };
+            let plane = SolvePlane::build(&m, &iv, GRID_DEFAULT);
+            for target in [m.t_min(&iv) * 0.5, m.t_min(&iv), m.t_star(), m.t_max(&iv)] {
+                assert_same(
+                    &plane.solve_opt(target),
+                    &solve_opt(&m, target, &iv, GRID_DEFAULT),
+                    "opt",
+                );
+                assert_same(
+                    &plane.solve_exact(target),
+                    &solve_exact(&m, target, &iv, GRID_DEFAULT),
+                    "exact",
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn frontier_energy_monotone_in_budget() {
+        let iv = ScalingInterval::wide();
+        let m = LIBRARY[1].model.scaled(15.0);
+        let plane = SolvePlane::build(&m, &iv, GRID_DEFAULT);
+        let free = plane.solve_opt(f64::INFINITY);
+        let mut prev = free.e;
+        let mut tlim = free.t;
+        while tlim > plane.t_min() {
+            let s = plane.solve_opt(tlim);
+            if !s.feasible {
+                break;
+            }
+            assert!(s.e >= prev * (1.0 - 1e-9), "tightening lowered energy");
+            prev = s.e;
+            tlim *= 0.97;
+        }
+    }
+
+    #[test]
+    fn infeasible_budget_is_infeasible_on_both_paths() {
+        let iv = ScalingInterval::wide();
+        let m = LIBRARY[2].model.scaled(10.0);
+        let plane = SolvePlane::build(&m, &iv, GRID_DEFAULT);
+        let too_tight = m.t0 * 0.5;
+        assert!(!plane.solve_opt(too_tight).feasible);
+        assert!(!solve_opt(&m, too_tight, &iv, GRID_DEFAULT).feasible);
+        assert!(!plane.solve_exact(too_tight).feasible);
+    }
+
+    #[test]
+    fn cache_counts_hits_and_misses() {
+        let mut cache = SolveCache::new(ScalingInterval::wide(), GRID_DEFAULT);
+        let a = LIBRARY[0].model.scaled(10.0);
+        let b = LIBRARY[1].model.scaled(10.0);
+        cache.solve_opt(&a, f64::INFINITY);
+        cache.solve_opt(&a, 100.0);
+        cache.t_min(&b);
+        assert_eq!(cache.misses, 2);
+        assert_eq!(cache.hits, 1);
+        assert_eq!(cache.len(), 2);
+        assert!(cache.enabled());
+        assert!(cache.matches(&ScalingInterval::wide()));
+        assert!(!SolveCache::disabled(ScalingInterval::wide()).enabled());
+    }
+}

@@ -17,9 +17,9 @@ use super::model::{g1, g1_inv, TaskModel};
 /// Grid resolution matching the AOT artifacts (`layout::GRID_G`).
 pub const GRID_DEFAULT: usize = 64;
 
-const TINY: f64 = 1e-12;
-const BIG: f64 = 1e30;
-const RELTOL: f64 = 1e-5;
+pub(crate) const TINY: f64 = 1e-12;
+pub(crate) const BIG: f64 = 1e30;
+pub(crate) const RELTOL: f64 = 1e-5;
 
 /// A resolved voltage/frequency configuration for one task.
 #[derive(Clone, Copy, Debug, PartialEq)]
@@ -89,6 +89,13 @@ impl VGrid {
             })
             .collect();
         VGrid { pts }
+    }
+
+    /// The precomputed `(v, fc, v²·fc)` walk — the build input of
+    /// [`crate::dvfs::SolvePlane`], exposed so the plane mirrors the grid
+    /// solver point-for-point.
+    pub fn points(&self) -> &[(f64, f64, f64)] {
+        &self.pts
     }
 }
 

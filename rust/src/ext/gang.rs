@@ -11,8 +11,10 @@
 
 use crate::dvfs::ScalingInterval;
 use crate::runtime::Solver;
-use crate::sched::prepare::{prepare, Prepared};
+use crate::sched::online::SchedCtx;
+use crate::sched::prepare::{prepare_cached, Prepared};
 use crate::tasks::Task;
+use std::cell::RefCell;
 
 /// A task plus its gang width.
 #[derive(Clone, Copy, Debug)]
@@ -107,9 +109,18 @@ pub fn schedule_gang(
         );
     }
 
-    // Algorithm 1 per task (the DVFS solve is width-independent).
+    // Algorithm 1 per task (the DVFS solve is width-independent), through
+    // a run-local solve-plane cache shared by the θ-readjustments below.
+    let cache = RefCell::new(solver.solve_cache(*iv));
+    let ctx = SchedCtx {
+        solver,
+        iv: *iv,
+        dvfs: true,
+        theta,
+        cache: &cache,
+    };
     let tasks: Vec<Task> = gangs.iter().map(|g| g.task).collect();
-    let prepared: Vec<Prepared> = prepare(&tasks, solver, iv, true);
+    let prepared: Vec<Prepared> = prepare_cached(&tasks, &ctx);
 
     // EDF order over the gangs
     let mut order: Vec<usize> = (0..gangs.len()).collect();
@@ -146,7 +157,7 @@ pub fn schedule_gang(
                 if d - start >= pr.t_theta(theta) - 1e-9 && theta < 1.0 =>
             {
                 // θ-readjustment: squeeze the gang into the residual window
-                let adj = solver.solve_exact(&pr.task.model, d - start, iv);
+                let adj = ctx.solve_exact(&pr.task.model, d - start);
                 if adj.feasible {
                     (s, start, adj)
                 } else {
@@ -253,7 +264,7 @@ mod tests {
             .map(|g| GangTask { g: 1, ..g })
             .collect();
         let tasks: Vec<Task> = gangs.iter().map(|g| g.task).collect();
-        let prepared = prepare(&tasks, &solver, &iv, true);
+        let prepared = crate::sched::prepare(&tasks, &solver, &iv, true);
         let flat = crate::sched::schedule_offline(
             crate::sched::OfflinePolicy::Edl,
             &prepared,

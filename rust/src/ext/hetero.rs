@@ -7,10 +7,13 @@
 //! feasible-minimum-energy (type, setting); the EDL packing then runs per
 //! type pool.
 
-use crate::dvfs::{solve_for_window, solve_opt, ScalingInterval, Setting, TaskModel, GRID_DEFAULT};
+use crate::dvfs::{
+    solve_for_window, solve_opt, ScalingInterval, Setting, SolveCache, TaskModel, GRID_DEFAULT,
+};
 use crate::sched::offline::{group_servers, Schedule};
 use crate::sched::prepare::{Prepared, Priority};
 use crate::tasks::Task;
+use std::cell::RefCell;
 
 /// The projection parameters of one GPU type — the part of [`GpuType`]
 /// shared with the streaming service, whose fleet comes from
@@ -120,6 +123,92 @@ pub fn select_type(model: &TaskModel, window: f64, params: &[TypeParams]) -> Typ
     })
 }
 
+/// [`select_type`] through per-type solve-plane caches (`caches[i]`
+/// aligned with `params[i]`, each built for that type's interval): the
+/// per-type free/window solves become [`crate::dvfs::SolvePlane`]
+/// lookups keyed by the projected model.  Selection is solve-for-solve
+/// the same rule — the streaming service's `"any"` resolution calls this
+/// with its dispatcher-side caches while the offline [`prepare_hetero`]
+/// shares one cache set across its whole task list, and the cross-check
+/// property test in `tests/integration_scenarios.rs` pins the two paths
+/// to the same choices.  A disabled cache entry falls back to the fresh
+/// solver per type.
+pub fn select_type_cached(
+    model: &TaskModel,
+    window: f64,
+    params: &[TypeParams],
+    caches: &[RefCell<SolveCache>],
+) -> TypeChoice {
+    debug_assert_eq!(params.len(), caches.len());
+    let solve = |ti: usize, m: &TaskModel, kind: SolveKind| -> Setting {
+        let ty = &params[ti];
+        let mut c = caches[ti].borrow_mut();
+        if c.enabled() {
+            match kind {
+                SolveKind::Free => c.solve_opt(m, f64::INFINITY),
+                SolveKind::Window(w) => c.solve_for_window(m, w),
+                SolveKind::Exact(t) => c.solve_exact(m, t),
+            }
+        } else {
+            match kind {
+                SolveKind::Free => solve_opt(m, f64::INFINITY, &ty.interval, GRID_DEFAULT),
+                SolveKind::Window(w) => solve_for_window(m, w, &ty.interval, GRID_DEFAULT),
+                SolveKind::Exact(t) => crate::dvfs::solve_exact(m, t, &ty.interval, GRID_DEFAULT),
+            }
+        }
+    };
+    let mut best: Option<TypeChoice> = None;
+    for (ti, ty) in params.iter().enumerate() {
+        let m = ty.project(model);
+        let free = solve(ti, &m, SolveKind::Free);
+        let setting = if free.feasible && free.t <= window {
+            free
+        } else {
+            solve(ti, &m, SolveKind::Window(window))
+        };
+        if !setting.feasible {
+            continue;
+        }
+        if best.as_ref().map_or(true, |b| setting.e < b.setting.e) {
+            best = Some(TypeChoice {
+                type_idx: ti,
+                model: m,
+                setting,
+                free,
+                feasible: true,
+            });
+        }
+    }
+    best.unwrap_or_else(|| {
+        let (ti, ty) = params
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.speed_scale.partial_cmp(&b.1.speed_scale).unwrap())
+            .expect("empty type list");
+        let m = ty.project(model);
+        let fastest = solve(ti, &m, SolveKind::Exact(m.t_min(&ty.interval) * (1.0 + 1e-6)));
+        let s = if fastest.feasible {
+            fastest
+        } else {
+            Setting::default_for(&m)
+        };
+        TypeChoice {
+            type_idx: ti,
+            model: m,
+            setting: s,
+            free: s,
+            feasible: false,
+        }
+    })
+}
+
+/// Which solve [`select_type_cached`] routes through a cache entry.
+enum SolveKind {
+    Free,
+    Window(f64),
+    Exact(f64),
+}
+
 /// A GPU type in a heterogeneous cluster.
 #[derive(Clone, Copy, Debug)]
 pub struct GpuType {
@@ -186,12 +275,18 @@ pub struct TypedPrepared {
 }
 
 /// Solve every task against every type; keep the min-energy feasible pick.
+/// One solve-plane cache per type is shared across the whole task list,
+/// so repeated task classes amortize their grid walks.
 pub fn prepare_hetero(tasks: &[Task], fleet: &[GpuType]) -> Vec<TypedPrepared> {
     let params: Vec<TypeParams> = fleet.iter().map(GpuType::params).collect();
+    let caches: Vec<RefCell<SolveCache>> = params
+        .iter()
+        .map(|p| RefCell::new(SolveCache::new(p.interval, GRID_DEFAULT)))
+        .collect();
     tasks
         .iter()
         .map(|task| {
-            let choice = select_type(&task.model, task.window(), &params);
+            let choice = select_type_cached(&task.model, task.window(), &params, &caches);
             let TypeChoice {
                 type_idx: ti,
                 model: m,
@@ -327,6 +422,30 @@ mod tests {
         assert!((p.p_star() - 2.0 * m.p_star()).abs() < 1e-9);
         assert!((p.t_star() - m.t_star() / 4.0).abs() < 1e-9);
         assert_eq!(p.delta, m.delta);
+    }
+
+    #[test]
+    fn cached_type_selection_matches_fresh_selection() {
+        // select_type_cached is the dispatcher's "any" resolution; it
+        // must pick the same type and settings as the fresh-solver rule
+        let fleet = reference_fleet(64);
+        let params: Vec<TypeParams> = fleet.iter().map(GpuType::params).collect();
+        let caches: Vec<RefCell<SolveCache>> = params
+            .iter()
+            .map(|p| RefCell::new(SolveCache::new(p.interval, GRID_DEFAULT)))
+            .collect();
+        for (i, t) in tasks(48, 9).into_iter().enumerate() {
+            // mix in unmeetable windows to exercise the fallback branch
+            let window = if i % 7 == 0 { t.window() * 1e-3 } else { t.window() };
+            let fresh = select_type(&t.model, window, &params);
+            let cached = select_type_cached(&t.model, window, &params, &caches);
+            assert_eq!(fresh.type_idx, cached.type_idx, "task {i}");
+            assert_eq!(fresh.feasible, cached.feasible, "task {i}");
+            assert_eq!(fresh.setting, cached.setting, "task {i}");
+            assert_eq!(fresh.free, cached.free, "task {i}");
+        }
+        let hits: u64 = caches.iter().map(|c| c.borrow().hits).sum();
+        assert!(hits > 0, "repeated classes must hit the caches");
     }
 
     #[test]

@@ -110,6 +110,16 @@ impl Solver {
         }
     }
 
+    /// A [`dvfs::SolveCache`] matched to this backend: enabled at the
+    /// native grid resolution, disabled for PJRT (whose f32 kernels the
+    /// plane does not mirror — those calls keep using the artifacts).
+    pub fn solve_cache(&self, iv: ScalingInterval) -> dvfs::SolveCache {
+        match self {
+            Solver::Native { grid } => dvfs::SolveCache::new(iv, *grid),
+            Solver::Pjrt(_) => dvfs::SolveCache::disabled(iv),
+        }
+    }
+
     /// `"native"` or `"pjrt"`, for logs and table titles.
     pub fn backend_name(&self) -> &'static str {
         match self {

@@ -13,4 +13,4 @@ pub mod prepare;
 
 pub use offline::{group_servers, report, schedule_offline, OfflinePolicy, OfflineReport};
 pub use online::{BinPacking, EdlOnline, OnlinePolicy, SchedCtx};
-pub use prepare::{count_deadline_prior, prepare, Prepared, Priority};
+pub use prepare::{count_deadline_prior, prepare, prepare_cached, Prepared, Priority};

@@ -2,12 +2,13 @@
 //! (Algorithms 4-5) and the comparison bin-packing heuristic (Algorithm 6),
 //! both combined with dynamic resource sleep on the [`Cluster`].
 
-use super::prepare::{prepare, Prepared};
+use super::prepare::{prepare_cached, Prepared};
 use crate::cluster::{Cluster, PairPower};
-use crate::dvfs::{ScalingInterval, Setting};
+use crate::dvfs::{ScalingInterval, Setting, SolveCache, TaskModel};
 use crate::runtime::Solver;
 use crate::tasks::Task;
 use crate::util::OrdF64;
+use std::cell::RefCell;
 use std::cmp::Reverse;
 use std::collections::BinaryHeap;
 
@@ -21,6 +22,31 @@ pub struct SchedCtx<'a> {
     pub dvfs: bool,
     /// Task deferral threshold θ (EDL only; 1 disables readjustment).
     pub theta: f64,
+    /// The run's solve-plane cache ([`crate::dvfs::SolveCache`]): owned by
+    /// the scheduling loop (one per shard type pool in the service, one
+    /// per run in the simulators) and consulted through interior
+    /// mutability — scheduling is single-threaded per cluster, so the
+    /// lookup path takes no locks.  A disabled cache (the PJRT backend)
+    /// routes every solve back to [`SchedCtx::solver`].
+    pub cache: &'a RefCell<SolveCache>,
+}
+
+impl SchedCtx<'_> {
+    /// Exact-target-time solve (the θ-readjustment hot call), through the
+    /// plane cache when enabled — bit-compatible with
+    /// [`Solver::solve_exact`].  The batch-prepare path reaches the cache
+    /// through [`crate::sched::prepare::prepare_cached`] instead, which
+    /// holds one borrow across its whole batch.
+    pub fn solve_exact(&self, m: &TaskModel, target: f64) -> Setting {
+        {
+            let mut c = self.cache.borrow_mut();
+            debug_assert!(c.matches(&self.iv), "cache interval mismatch");
+            if c.enabled() {
+                return c.solve_exact(m, target);
+            }
+        }
+        self.solver.solve_exact(m, target, &self.iv)
+    }
 }
 
 /// Counters the policies report to the simulator.
@@ -122,8 +148,10 @@ impl SptHeap {
 
 /// Turn on the lowest-indexed off server and return its first pair
 /// (Algorithm 5 lines 15-17).  `None` if the cluster is exhausted.
+/// O(log n) via the cluster's off-server index (the fresh-server scan was
+/// O(servers) per placement).
 fn open_server(cluster: &mut Cluster, t: f64) -> Option<usize> {
-    let s = (0..cluster.server_on.len()).find(|&s| !cluster.server_on[s])?;
+    let s = cluster.first_off_server()?;
     cluster.turn_on_server(s, t);
     Some(cluster.server_pairs(s).start)
 }
@@ -166,7 +194,7 @@ impl EdlOnline {
             if ctx.dvfs && ctx.theta < 1.0 {
                 let t_theta = pr.t_theta(ctx.theta);
                 if slack >= t_theta - 1e-9 {
-                    let adj = ctx.solver.solve_exact(&pr.task.model, slack, &ctx.iv);
+                    let adj = ctx.solve_exact(&pr.task.model, slack);
                     if adj.feasible {
                         self.stats.readjusted += 1;
                         let mu = cluster.assign(pair, avail, adj.t, adj.p, d);
@@ -203,7 +231,7 @@ impl OnlinePolicy for EdlOnline {
             return;
         }
         // Algorithm 5 lines 1-4: configure every arrival, then EDF order.
-        let mut prepared = prepare(arrivals, ctx.solver, &ctx.iv, ctx.dvfs);
+        let mut prepared = prepare_cached(arrivals, ctx);
         prepared.sort_by(|a, b| a.task.deadline.partial_cmp(&b.task.deadline).unwrap());
         for pr in &prepared {
             self.place(pr, t, cluster, ctx);
@@ -251,7 +279,7 @@ pub fn place_gang_batch(
     }
     let l = cluster.l();
     let tasks: Vec<Task> = gangs.iter().map(|&(k, _)| k).collect();
-    let mut prepared: Vec<(Prepared, usize)> = prepare(&tasks, ctx.solver, &ctx.iv, ctx.dvfs)
+    let mut prepared: Vec<(Prepared, usize)> = prepare_cached(&tasks, ctx)
         .into_iter()
         .zip(gangs.iter().map(|&(_, g)| g))
         .collect();
@@ -265,7 +293,19 @@ pub fn place_gang_batch(
 
 /// `(server, common start)` admitting the earliest `g`-wide start among
 /// powered-on servers: the g-th smallest pair availability per server.
+///
+/// Fast path: the cluster's per-server free-pair index answers "does any
+/// powered-on server have `g` idle pairs" in O(l·log n).  Such a server
+/// starts the gang at `t`, which nothing can beat, and the index returns
+/// the lowest-indexed one — the same winner the scan's first-strict-min
+/// tie-break picks (busy pairs are never available at `t`: departures up
+/// to `t` have been processed before any placement runs).  Only when no
+/// server has `g` idle pairs does the O(servers × pairs) scan run, and
+/// then every candidate start exceeds `t` anyway.
 fn best_gang_server(cluster: &Cluster, g: usize, t: f64) -> Option<(usize, f64)> {
+    if let Some(s) = cluster.server_with_free_pairs(g) {
+        return Some((s, t));
+    }
     let mut best: Option<(usize, f64)> = None;
     for s in 0..cluster.server_on.len() {
         if !cluster.server_on[s] {
@@ -332,7 +372,7 @@ fn place_gang(
         // θ-readjustment into the residual window (Algorithm 5 lines
         // 11-14 carried over unchanged: the solve is width-independent)
         if ctx.dvfs && ctx.theta < 1.0 && d - start >= pr.t_theta(ctx.theta) - 1e-9 {
-            let adj = ctx.solver.solve_exact(&pr.task.model, d - start, &ctx.iv);
+            let adj = ctx.solve_exact(&pr.task.model, d - start);
             if adj.feasible {
                 policy.bump_stats(1, 0);
                 reserve_gang(cluster, policy, server, g, start, &adj, d);
@@ -340,8 +380,9 @@ fn place_gang(
             }
         }
     }
-    // fresh server (whole-server turn-on keeps ω accounting unchanged)
-    if let Some(s) = (0..cluster.server_on.len()).find(|&s| !cluster.server_on[s]) {
+    // fresh server (whole-server turn-on keeps ω accounting unchanged;
+    // O(log n) via the off-server index)
+    if let Some(s) = cluster.first_off_server() {
         cluster.turn_on_server(s, t);
         for i in cluster.server_pairs(s) {
             policy.note_external_assign(i, cluster.pairs[i].busy_until);
@@ -457,7 +498,7 @@ impl OnlinePolicy for BinPacking {
             return;
         }
         self.prune(t);
-        let mut prepared = prepare(arrivals, ctx.solver, &ctx.iv, ctx.dvfs);
+        let mut prepared = prepare_cached(arrivals, ctx);
         prepared.sort_by(|a, b| a.task.deadline.partial_cmp(&b.task.deadline).unwrap());
         let worst_fit = self.first_batch; // Alg 6: WF for the T=0 batch, FF online
         self.first_batch = false;
@@ -497,19 +538,25 @@ mod tests {
         }
     }
 
-    fn ctx(solver: &Solver, theta: f64) -> SchedCtx<'_> {
+    fn mk_cache(solver: &Solver) -> RefCell<SolveCache> {
+        RefCell::new(solver.solve_cache(ScalingInterval::wide()))
+    }
+
+    fn ctx<'a>(solver: &'a Solver, cache: &'a RefCell<SolveCache>, theta: f64) -> SchedCtx<'a> {
         SchedCtx {
             solver,
             iv: ScalingInterval::wide(),
             dvfs: true,
             theta,
+            cache,
         }
     }
 
     #[test]
     fn edl_assigns_all_and_meets_deadlines() {
         let solver = Solver::native();
-        let ctx = ctx(&solver, 0.9);
+        let cache = mk_cache(&solver);
+        let ctx = ctx(&solver, &cache, 0.9);
         let cfg = ClusterConfig {
             total_pairs: 64,
             ..ClusterConfig::default()
@@ -528,7 +575,8 @@ mod tests {
     #[test]
     fn edl_packs_busy_pairs_before_opening_servers() {
         let solver = Solver::native();
-        let ctx = ctx(&solver, 1.0);
+        let cache = mk_cache(&solver);
+        let ctx = ctx(&solver, &cache, 1.0);
         let cfg = ClusterConfig {
             total_pairs: 64,
             ..ClusterConfig::default()
@@ -554,12 +602,14 @@ mod tests {
         let t1 = mk_task(0, 0.0, 0.6, 10.0);
         let t2 = mk_task(1, 0.0, 0.6, 10.0);
 
-        let strict_ctx = ctx(&solver, 1.0);
+        let cache_a = mk_cache(&solver);
+        let strict_ctx = ctx(&solver, &cache_a, 1.0);
         let mut cluster_a = Cluster::new(cfg.clone());
         let mut edl_a = EdlOnline::new();
         edl_a.assign(0.0, &[t1, t2], &mut cluster_a, &strict_ctx);
 
-        let relaxed_ctx = ctx(&solver, 0.8);
+        let cache_b = mk_cache(&solver);
+        let relaxed_ctx = ctx(&solver, &cache_b, 0.8);
         let mut cluster_b = Cluster::new(cfg);
         let mut edl_b = EdlOnline::new();
         edl_b.assign(0.0, &[t1, t2], &mut cluster_b, &relaxed_ctx);
@@ -572,7 +622,8 @@ mod tests {
     #[test]
     fn bin_respects_utilization_bound() {
         let solver = Solver::native();
-        let ctx = ctx(&solver, 1.0);
+        let cache = mk_cache(&solver);
+        let ctx = ctx(&solver, &cache, 1.0);
         let cfg = ClusterConfig {
             total_pairs: 64,
             ..ClusterConfig::default()
@@ -591,7 +642,8 @@ mod tests {
     #[test]
     fn bin_utilization_decays_after_departure() {
         let solver = Solver::native();
-        let ctx = ctx(&solver, 1.0);
+        let cache = mk_cache(&solver);
+        let ctx = ctx(&solver, &cache, 1.0);
         let cfg = ClusterConfig {
             total_pairs: 8,
             ..ClusterConfig::default()
@@ -610,7 +662,8 @@ mod tests {
     #[test]
     fn gang_batch_colocates_and_meets_deadlines() {
         let solver = Solver::native();
-        let ctx = ctx(&solver, 0.9);
+        let cache = mk_cache(&solver);
+        let ctx = ctx(&solver, &cache, 0.9);
         let cfg = ClusterConfig {
             total_pairs: 32,
             pairs_per_server: 4,
@@ -645,7 +698,8 @@ mod tests {
         // extended pairs (no phantom "no pair available" → premature
         // server turn-on) — exercised by placing a single task next
         let solver = Solver::native();
-        let ctx = ctx(&solver, 1.0);
+        let cache = mk_cache(&solver);
+        let ctx = ctx(&solver, &cache, 1.0);
         let cfg = ClusterConfig {
             total_pairs: 8,
             pairs_per_server: 4,
@@ -671,7 +725,8 @@ mod tests {
     #[test]
     fn exhausted_cluster_forces_placement() {
         let solver = Solver::native();
-        let ctx = ctx(&solver, 1.0);
+        let cache = mk_cache(&solver);
+        let ctx = ctx(&solver, &cache, 1.0);
         let cfg = ClusterConfig {
             total_pairs: 1,
             ..ClusterConfig::default()

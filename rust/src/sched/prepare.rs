@@ -126,6 +126,60 @@ pub fn prepare(
     out
 }
 
+/// Algorithm 1 through a [`crate::sched::online::SchedCtx`]'s solve-plane
+/// cache: per task, the free optimum / window solve / `t_min` become
+/// plane lookups ([`crate::dvfs::SolvePlane`]), bit-compatible with
+/// [`prepare`] on the native solver.  With the cache disabled (the PJRT
+/// backend, whose batched artifact execution is the whole point there) or
+/// DVFS off, this delegates to the batched [`prepare`] unchanged.
+pub fn prepare_cached(
+    tasks: &[Task],
+    ctx: &crate::sched::online::SchedCtx,
+) -> Vec<Prepared> {
+    if !ctx.dvfs || !ctx.cache.borrow().enabled() {
+        return prepare(tasks, ctx.solver, &ctx.iv, ctx.dvfs);
+    }
+    let mut cache = ctx.cache.borrow_mut();
+    tasks
+        .iter()
+        .map(|task| {
+            let plane = cache.plane(&task.model);
+            let free = plane.solve_opt(f64::INFINITY);
+            let t_min = plane.t_min();
+            if free.t > task.window() {
+                // deadline-prior: exact-window solve, with the same
+                // fastest-setting fallback chain as `prepare`
+                let s = plane.solve_for_window(task.window());
+                let setting = if s.feasible {
+                    s
+                } else {
+                    let fastest = plane.solve_exact(t_min * (1.0 + 1e-6));
+                    if fastest.feasible {
+                        fastest
+                    } else {
+                        Setting::default_for(&task.model)
+                    }
+                };
+                Prepared {
+                    task: *task,
+                    setting,
+                    free,
+                    t_min,
+                    class: Priority::DeadlinePrior,
+                }
+            } else {
+                Prepared {
+                    task: *task,
+                    setting: free,
+                    free,
+                    t_min,
+                    class: Priority::EnergyPrior,
+                }
+            }
+        })
+        .collect()
+}
+
 /// Number of deadline-prior tasks (`n_1` in Algorithm 1).
 pub fn count_deadline_prior(prepared: &[Prepared]) -> usize {
     prepared
@@ -194,6 +248,36 @@ mod tests {
         assert!((p.t_theta(1.0) - p.setting.t).abs() < 1e-12);
         assert!(p.t_theta(0.8) >= p.t_min);
         assert!(p.t_theta(0.8) <= p.setting.t);
+    }
+
+    #[test]
+    fn cached_prepare_matches_batched_prepare_exactly() {
+        // the service hot path (prepare_cached over the solve-plane
+        // cache) must reproduce the batched two-pass prepare bit-for-bit
+        // — settings, classes, and t_min — on a class-mixed batch
+        let solver = Solver::native();
+        let iv = ScalingInterval::wide();
+        let cache = std::cell::RefCell::new(solver.solve_cache(iv));
+        let ctx = crate::sched::online::SchedCtx {
+            solver: &solver,
+            iv,
+            dvfs: true,
+            theta: 0.9,
+            cache: &cache,
+        };
+        let tasks: Vec<Task> = (0..60)
+            .map(|i| mk_task(i, 0.05 + 0.024 * (i % 40) as f64, 5.0 + (i % 9) as f64))
+            .collect();
+        let batched = prepare(&tasks, &solver, &iv, true);
+        let cached = prepare_cached(&tasks, &ctx);
+        assert_eq!(batched.len(), cached.len());
+        for (b, c) in batched.iter().zip(&cached) {
+            assert_eq!(b.class, c.class, "task {}", b.task.id);
+            assert_eq!(b.t_min, c.t_min, "task {}", b.task.id);
+            assert_eq!(b.setting, c.setting, "task {}", b.task.id);
+            assert_eq!(b.free, c.free, "task {}", b.task.id);
+        }
+        assert!(cache.borrow().hits > 0, "class reuse must hit the cache");
     }
 
     #[test]

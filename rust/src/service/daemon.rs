@@ -16,8 +16,10 @@
 
 use crate::cluster::Cluster;
 use crate::config::SimConfig;
+use crate::dvfs::SolveCache;
 use crate::runtime::Solver;
 use crate::sched::online::{OnlinePolicy, SchedCtx};
+use std::cell::RefCell;
 use crate::service::admission::{AdmissionController, Verdict};
 use crate::service::events::EventEngine;
 use crate::service::metrics::Snapshot;
@@ -187,6 +189,9 @@ pub struct Service<'a> {
     /// The names a `gpu_type` request field may match (the daemon's
     /// homogeneous pool answers to its configured or implicit type name).
     type_names: Vec<String>,
+    /// The daemon's solve-plane cache (disabled when the solver is PJRT;
+    /// see [`Service::set_solve_cache`] for the benchmark baseline).
+    cache: RefCell<SolveCache>,
     /// Logical clock: max arrival seen (the engine clock can trail it
     /// when nothing was pending to process).
     now: f64,
@@ -211,18 +216,22 @@ impl<'a> Service<'a> {
                 .into_iter()
                 .map(|t| t.name)
                 .collect(),
+            cache: RefCell::new(solver.solve_cache(cfg.interval)),
             now: 0.0,
             drained: false,
         }
     }
 
-    fn ctx(&self) -> SchedCtx<'a> {
-        SchedCtx {
-            solver: self.solver,
-            iv: self.cfg.interval,
-            dvfs: self.dvfs,
-            theta: self.cfg.theta,
-        }
+    /// Enable or disable the solve-plane cache (enabled by default on the
+    /// native solver).  The disabled path routes every solve to the fresh
+    /// grid solver — the cached-vs-uncached regression oracle and the
+    /// benchmark baseline.
+    pub fn set_solve_cache(&mut self, enabled: bool) {
+        self.cache = RefCell::new(if enabled {
+            self.solver.solve_cache(self.cfg.interval)
+        } else {
+            SolveCache::disabled(self.cfg.interval)
+        });
     }
 
     /// The service clock (logical submit time vs engine event time).
@@ -300,7 +309,15 @@ impl<'a> Service<'a> {
                 self.now = arrival;
                 let deadline = task.deadline;
                 let g = opts.g;
-                let ctx = self.ctx();
+                // built from disjoint fields (not a helper) so the cache
+                // borrow coexists with the &mut cluster/engine below
+                let ctx = SchedCtx {
+                    solver: self.solver,
+                    iv: self.cfg.interval,
+                    dvfs: self.dvfs,
+                    theta: self.cfg.theta,
+                    cache: &self.cache,
+                };
                 self.cluster.last_assign = None;
                 // per-submit clear keeps the batch log bounded for a
                 // long-running daemon
@@ -399,7 +416,13 @@ impl<'a> Service<'a> {
     /// Graceful drain: run every pending event (all queued tasks finish,
     /// DRS reclaims every server) and report the final decomposition.
     pub fn shutdown(&mut self) -> Json {
-        let ctx = self.ctx();
+        let ctx = SchedCtx {
+            solver: self.solver,
+            iv: self.cfg.interval,
+            dvfs: self.dvfs,
+            theta: self.cfg.theta,
+            cache: &self.cache,
+        };
         self.engine
             .run_to_completion(&mut self.cluster, self.policy.as_mut(), &ctx);
         self.now = self.now.max(self.engine.now);

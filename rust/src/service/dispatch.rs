@@ -41,8 +41,9 @@
 
 use crate::cluster::partition_cluster;
 use crate::config::{GpuTypeSpec, SimConfig};
-use crate::dvfs::ScalingInterval;
-use crate::ext::hetero::{select_type, TypeParams};
+use crate::dvfs::{ScalingInterval, SolveCache, GRID_DEFAULT};
+use crate::ext::hetero::{select_type_cached, TypeParams};
+use std::cell::RefCell;
 use crate::service::admission::{AdmissionController, Verdict};
 use crate::service::daemon::{RecordStore, TaskRecord};
 use crate::service::metrics::Snapshot;
@@ -163,6 +164,13 @@ pub struct ShardedService {
     fleet: Vec<GpuTypeSpec>,
     /// Per-type projection/solve parameters, aligned with `fleet`.
     fleet_params: Vec<TypeParams>,
+    /// Dispatcher-side solve-plane caches, one per GPU type (aligned with
+    /// `fleet`): `"any"` type resolution's per-type free/window solves
+    /// become plane lookups keyed by the *projected* model, so the
+    /// per-flush solve cost stops scaling with batch size for repeated
+    /// task classes.  Shard workers keep their own caches — these never
+    /// cross a thread.
+    type_caches: Vec<RefCell<SolveCache>>,
     /// Global type indices each shard owns (routing eligibility).
     shard_types: Vec<Vec<usize>>,
     /// Whether the cluster declares explicit GPU types (`--cluster-spec`);
@@ -193,6 +201,24 @@ impl ShardedService {
         window: f64,
         steal: bool,
     ) -> Result<ShardedService, String> {
+        Self::new_with_cache(cfg, kind, dvfs, n_shards, route, window, steal, true)
+    }
+
+    /// [`Self::new`] with the solve-plane caches switchable: `cache =
+    /// false` keeps every solve (dispatcher admission/resolution and all
+    /// shard pools) on the fresh grid solver — the cached-vs-uncached
+    /// regression oracle and the benchmark baseline.
+    #[allow(clippy::too_many_arguments)]
+    pub fn new_with_cache(
+        cfg: &SimConfig,
+        kind: OnlinePolicyKind,
+        dvfs: bool,
+        n_shards: usize,
+        route: RoutePolicy,
+        window: f64,
+        steal: bool,
+        cache: bool,
+    ) -> Result<ShardedService, String> {
         cfg.validate()?;
         if !(window >= 0.0) {
             return Err(format!("batch window must be >= 0, got {window}"));
@@ -212,7 +238,16 @@ impl ShardedService {
             })
             .collect();
         let n_types = fleet.len();
-        let pool = ShardPool::new(views, kind, dvfs, cfg.interval, cfg.theta, steal);
+        let type_caches: Vec<RefCell<SolveCache>> = (0..n_types)
+            .map(|_| {
+                RefCell::new(if cache {
+                    SolveCache::new(cfg.interval, GRID_DEFAULT)
+                } else {
+                    SolveCache::disabled(cfg.interval)
+                })
+            })
+            .collect();
+        let pool = ShardPool::new(views, kind, dvfs, cfg.interval, cfg.theta, steal, cache);
         Ok(ShardedService {
             pool,
             route,
@@ -229,6 +264,7 @@ impl ShardedService {
             iv: cfg.interval,
             fleet,
             fleet_params,
+            type_caches,
             shard_types,
             typed: !cfg.cluster.types.is_empty(),
             l: cfg.cluster.pairs_per_server,
@@ -359,7 +395,7 @@ impl ShardedService {
         let t = batch.iter().map(|(k, _)| k.arrival).fold(self.now, f64::max);
         let n = batch.len();
         let mut responses: Vec<Option<Json>> = (0..n).map(|_| None).collect();
-        let mut admitted: Vec<(usize, ServiceTask)> = Vec::new();
+        let mut admitted: Vec<(usize, ServiceTask, f64)> = Vec::new();
         for (idx, (task, opts)) in batch.into_iter().enumerate() {
             // resolve the GPU type at flush time (named types were
             // validated at the door; `any` takes the feasible-minimum-
@@ -374,19 +410,25 @@ impl ShardedService {
                 TypePref::Any if self.fleet.len() == 1 => 0,
                 TypePref::Any => {
                     let window = task.deadline - t.max(task.arrival);
-                    select_type(&task.model, window, &self.fleet_params).type_idx
+                    select_type_cached(&task.model, window, &self.fleet_params, &self.type_caches)
+                        .type_idx
                 }
             };
             // feasibility against the resolved type's projected execution
             // floor (the gang width does not enter: the DVFS solve is
             // width-independent).  The reference type skips the identity
-            // projection so the homogeneous path stays bit-exact.
+            // projection so the homogeneous path stays bit-exact; the
+            // floor is computed ONCE here and carried on the admitted
+            // record — routing used to re-derive it per chunk member.
             let params = &self.fleet_params[type_idx];
-            let t_min = if params.power_scale == 1.0 && params.speed_scale == 1.0 {
-                task.model.t_min(&self.iv)
+            let floor_model = if params.power_scale == 1.0 && params.speed_scale == 1.0 {
+                task.model
             } else {
-                params.project(&task.model).t_min(&self.iv)
+                params.project(&task.model)
             };
+            // t_min is closed-form O(1) — cheaper computed directly than
+            // through a plane (the caches exist for the `"any"` solves)
+            let t_min = floor_model.t_min(&self.iv);
             match self.admission.check_feasibility_bound(&task, t, t_min) {
                 Verdict::Admit => admitted.push((
                     idx,
@@ -395,6 +437,7 @@ impl ShardedService {
                         type_idx,
                         g: opts.g,
                     },
+                    t_min,
                 )),
                 Verdict::RejectInfeasible { t_min, available } => {
                     self.records
@@ -468,8 +511,14 @@ impl ShardedService {
     /// the EDF order) and only routed to shards owning servers of that
     /// type; already-arrived replies are folded in between sends, so
     /// later routing decisions within one big flush see fresh loads
-    /// instead of the last flush's snapshot.
-    fn dispatch(&mut self, t: f64, admitted: &[(usize, ServiceTask)]) -> Vec<(usize, Placement)> {
+    /// instead of the last flush's snapshot.  Each entry carries the
+    /// `t_min` floor admission already computed, so the routing cost
+    /// never re-solves it.
+    fn dispatch(
+        &mut self,
+        t: f64,
+        admitted: &[(usize, ServiceTask, f64)],
+    ) -> Vec<(usize, Placement)> {
         let n_shards = self.pool.n_shards();
         let chunk = if n_shards == 1 {
             admitted.len()
@@ -490,7 +539,8 @@ impl ShardedService {
         let mut chunk_meta: Vec<(usize, usize, f64, usize)> = Vec::new();
         let mut out = Vec::with_capacity(admitted.len());
         // stable partition of the EDF batch by resolved type
-        let mut by_type: Vec<Vec<&(usize, ServiceTask)>> = vec![Vec::new(); self.fleet.len()];
+        let mut by_type: Vec<Vec<&(usize, ServiceTask, f64)>> =
+            vec![Vec::new(); self.fleet.len()];
         for entry in admitted {
             by_type[entry.1.type_idx].push(entry);
         }
@@ -512,10 +562,9 @@ impl ShardedService {
                     self.apply_reply(&reply, &chunk_meta, &chunk_map, &mut out);
                 }
                 let tasks: Vec<ServiceTask> = group.iter().map(|e| e.1.clone()).collect();
-                let cost: f64 = tasks
-                    .iter()
-                    .map(|k| k.g as f64 * k.task.model.t_min(&self.iv))
-                    .sum();
+                // t_min hoisted from admission (entry .2) — this loop used
+                // to re-run the floor solve per task per chunk
+                let cost: f64 = group.iter().map(|e| e.1.g as f64 * e.2).sum();
                 let pairs: usize = tasks.iter().map(|k| k.g).sum();
                 let shard = self.route_chunk(&eligible, ti);
                 self.inflight[shard][ti] += cost;

@@ -296,11 +296,13 @@ mod tests {
     #[test]
     fn drains_and_turns_everything_off() {
         let solver = Solver::native();
+        let cache = std::cell::RefCell::new(solver.solve_cache(ScalingInterval::wide()));
         let ctx = SchedCtx {
             solver: &solver,
             iv: ScalingInterval::wide(),
             dvfs: true,
             theta: 1.0,
+            cache: &cache,
         };
         let mut cluster = Cluster::new(ClusterConfig {
             total_pairs: 32,
@@ -320,11 +322,13 @@ mod tests {
     #[test]
     fn run_until_stops_at_the_boundary() {
         let solver = Solver::native();
+        let cache = std::cell::RefCell::new(solver.solve_cache(ScalingInterval::wide()));
         let ctx = SchedCtx {
             solver: &solver,
             iv: ScalingInterval::wide(),
             dvfs: true,
             theta: 1.0,
+            cache: &cache,
         };
         let mut cluster = Cluster::new(ClusterConfig {
             total_pairs: 8,
@@ -351,11 +355,13 @@ mod tests {
         // a task departing at a fractional time must still be reclaimed at
         // the integer slot the per-minute sweep would have used
         let solver = Solver::native();
+        let cache = std::cell::RefCell::new(solver.solve_cache(ScalingInterval::wide()));
         let ctx = SchedCtx {
             solver: &solver,
             iv: ScalingInterval::wide(),
             dvfs: false,
             theta: 1.0,
+            cache: &cache,
         };
         let cfg = ClusterConfig {
             total_pairs: 4,

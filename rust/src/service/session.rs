@@ -134,7 +134,7 @@ fn attach_rid(line: Json, rid: Option<Json>) -> Json {
 pub fn serve_session<C, R, W>(
     core: &mut C,
     clock: &dyn Clock,
-    reader: R,
+    mut reader: R,
     mut writer: W,
 ) -> Result<bool, String>
 where
@@ -142,19 +142,34 @@ where
     R: BufRead,
     W: Write,
 {
-    fn write_line<W: Write>(writer: &mut W, line: &Json) -> Result<(), String> {
-        writeln!(writer, "{}", line.render_compact())
+    // allocation-lean protocol path: one request-line buffer and one
+    // response-render buffer, reused for the whole session (the per-line
+    // `String` churn showed up on sustained submit streams)
+    fn write_line<W: Write>(writer: &mut W, buf: &mut String, line: &Json) -> Result<(), String> {
+        line.render_compact_into(buf);
+        buf.push('\n');
+        writer
+            .write_all(buf.as_bytes())
             .map_err(|e| format!("writing response: {e}"))
     }
     let mut pending: VecDeque<Option<Json>> = VecDeque::new();
     let mut received: u64 = 0;
-    for line in reader.lines() {
-        let line = line.map_err(|e| format!("reading request line: {e}"))?;
-        match parse_request_rid(&line) {
+    let mut line = String::new();
+    let mut out_buf = String::new();
+    loop {
+        line.clear();
+        let n = reader
+            .read_line(&mut line)
+            .map_err(|e| format!("reading request line: {e}"))?;
+        if n == 0 {
+            break;
+        }
+        let trimmed = line.trim_end_matches('\n').trim_end_matches('\r');
+        match parse_request_rid(trimmed) {
             Ok(None) => continue,
             Ok(Some((Request::Ping, rid))) => {
                 let resp = attach_rid(ping_response(clock.name(), 1, received), rid);
-                write_line(&mut writer, &resp)?;
+                write_line(&mut writer, &mut out_buf, &resp)?;
             }
             Ok(Some((mut req, rid))) => {
                 received += 1;
@@ -165,7 +180,7 @@ where
                 let (resps, stop) = core.serve_request(req);
                 for r in resps {
                     let rid = pending.pop_front().flatten();
-                    write_line(&mut writer, &attach_rid(r, rid))?;
+                    write_line(&mut writer, &mut out_buf, &attach_rid(r, rid))?;
                 }
                 if stop {
                     let _ = writer.flush();
@@ -177,15 +192,15 @@ where
                 // in request order, like every other path
                 for r in core.flush_pending() {
                     let rid = pending.pop_front().flatten();
-                    write_line(&mut writer, &attach_rid(r, rid))?;
+                    write_line(&mut writer, &mut out_buf, &attach_rid(r, rid))?;
                 }
-                write_line(&mut writer, &error_response(&e))?;
+                write_line(&mut writer, &mut out_buf, &error_response(&e))?;
             }
         }
     }
     for r in core.flush_pending() {
         let rid = pending.pop_front().flatten();
-        write_line(&mut writer, &attach_rid(r, rid))?;
+        write_line(&mut writer, &mut out_buf, &attach_rid(r, rid))?;
     }
     let _ = writer.flush();
     Ok(false)
@@ -302,6 +317,12 @@ where
     let mut next_sid: u64 = 1;
     let mut more_clients = true;
     let mut received: u64 = 0;
+    // per-session observability (socket transports only — the bare stdio
+    // path must stay byte-identical to the classic daemon): sessions ever
+    // accepted and submits received per session, overlaid on snapshot /
+    // shutdown responses
+    let mut sessions_ever: u64 = 0;
+    let mut session_submits: BTreeMap<u64, u64> = BTreeMap::new();
     loop {
         // `tx` stays alive in this scope, so the channel can only drain,
         // never disconnect; exits are the explicit returns below.
@@ -326,6 +347,7 @@ where
             Some(Event::Conn(conn)) => {
                 let sid = next_sid;
                 next_sid += 1;
+                sessions_ever += 1;
                 let mut sess = SessionState {
                     writer: conn.writer,
                     open: true,
@@ -373,9 +395,21 @@ where
                     received += 1;
                     if let Request::Submit(ref mut task, _) = req {
                         task.arrival = clock.stamp(task.arrival);
+                        *session_submits.entry(sid).or_insert(0) += 1;
                     }
+                    // counters ride only on hello-greeting transports,
+                    // whose byte streams already diverge from the classic
+                    // daemon — the stdio identity oracle stays intact
+                    let overlay = hello && matches!(req, Request::Snapshot | Request::Shutdown);
                     pending.push_back((sid, rid));
-                    let (lines, stop) = core.serve_request(req);
+                    let (mut lines, stop) = core.serve_request(req);
+                    if overlay {
+                        // the requesting session's own answer is the last
+                        // released line (deferred responses come first)
+                        if let Some(last) = lines.last_mut() {
+                            attach_session_stats(last, sessions_ever, &session_submits);
+                        }
+                    }
                     route(lines, &mut pending, &mut sessions);
                     if stop {
                         // dropping `sessions` closes every client: they see
@@ -430,6 +464,25 @@ where
                 }
             }
         }
+    }
+}
+
+/// Overlay the front end's per-session counters on a snapshot-shaped
+/// response object (socket transports only): `sessions_total` = sessions
+/// ever accepted, `session_submits` = submits received per live-or-past
+/// session id.  Closes the ROADMAP per-session-observability item.
+fn attach_session_stats(line: &mut Json, sessions_ever: u64, submits: &BTreeMap<u64, u64>) {
+    if let Json::Obj(m) = line {
+        m.insert("sessions_total".to_string(), num(sessions_ever as f64));
+        m.insert(
+            "session_submits".to_string(),
+            Json::Obj(
+                submits
+                    .iter()
+                    .map(|(&sid, &n)| (sid.to_string(), num(n as f64)))
+                    .collect(),
+            ),
+        );
     }
 }
 

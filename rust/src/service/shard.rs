@@ -25,8 +25,9 @@
 
 use crate::cluster::{Cluster, PairPower, ShardView};
 use crate::config::ClusterConfig;
-use crate::dvfs::ScalingInterval;
+use crate::dvfs::{ScalingInterval, SolveCache};
 use crate::ext::hetero::TypeParams;
+use std::cell::RefCell;
 use crate::runtime::Solver;
 use crate::sched::online::{OnlinePolicy, SchedCtx};
 use crate::service::admission::AdmissionController;
@@ -230,6 +231,10 @@ struct TypePool {
     engine: EventEngine,
     /// First global pair index of this pool.
     pair_offset: usize,
+    /// Pool-local solve-plane cache: per-type and shard-local, so the
+    /// lookup path takes no locks and projected models of different
+    /// types never share a key space.
+    cache: RefCell<SolveCache>,
 }
 
 /// One cluster partition with its own continuous-time event loops — one
@@ -256,7 +261,7 @@ struct TypePool {
 /// let cfg = ClusterConfig { total_pairs: 8, pairs_per_server: 2, ..ClusterConfig::default() };
 /// let views = partition_cluster(&cfg, 2).unwrap();
 /// let mut shard = Shard::new(
-///     views[1].clone(), OnlinePolicyKind::Edl, true, ScalingInterval::wide(), 1.0,
+///     views[1].clone(), OnlinePolicyKind::Edl, true, ScalingInterval::wide(), 1.0, true,
 /// );
 /// let model = LIBRARY[0].model.scaled(10.0);
 /// let task = Task { id: 7, app: 0, model, arrival: 0.0,
@@ -280,13 +285,16 @@ pub struct Shard {
 
 impl Shard {
     /// Build the shard for one partition view: one pool per GPU type the
-    /// partition owns, laid out in global server order.
+    /// partition owns, laid out in global server order.  `cache` enables
+    /// the per-pool solve-plane caches (disabled = every solve stays on
+    /// the fresh grid solver — the benchmark / regression baseline).
     pub fn new(
         view: ShardView,
         kind: OnlinePolicyKind,
         dvfs: bool,
         iv: ScalingInterval,
         theta: f64,
+        cache: bool,
     ) -> Shard {
         let l = view.cfg.pairs_per_server;
         let specs = view.cfg.effective_types();
@@ -312,6 +320,11 @@ impl Shard {
                 policy,
                 engine: EventEngine::new(),
                 pair_offset,
+                cache: RefCell::new(if cache {
+                    SolveCache::new(iv, crate::dvfs::GRID_DEFAULT)
+                } else {
+                    SolveCache::disabled(iv)
+                }),
             });
             pair_offset += servers * l;
         }
@@ -381,17 +394,20 @@ impl Shard {
             per_pool[pi].push((idx, task, st.g));
         }
         let mut out: Vec<Option<Placement>> = (0..n).map(|_| None).collect();
-        let ctx = SchedCtx {
-            solver: &self.solver,
-            iv: self.iv,
-            dvfs: self.dvfs,
-            theta: self.theta,
-        };
         for (pi, list) in per_pool.into_iter().enumerate() {
             if list.is_empty() {
                 continue;
             }
             let pool = &mut self.pools[pi];
+            // ctx per pool: each type pool brings its own shard-local
+            // solve-plane cache to the scheduling loop
+            let ctx = SchedCtx {
+                solver: &self.solver,
+                iv: self.iv,
+                dvfs: self.dvfs,
+                theta: self.theta,
+                cache: &pool.cache,
+            };
             pool.cluster.clear_assign_log();
             // push maximal same-kind runs so plain tasks keep taking the
             // policy path as whole sub-batches (bit-identical when no
@@ -472,30 +488,19 @@ impl Shard {
     }
 
     /// The widest gang this shard could currently host on GPU type
-    /// `type_idx`: the maximum count of not-currently-busy pairs on any
-    /// single server of that pool (0 when the shard does not own the
-    /// type).  Conservative — a pair whose queue tail has already passed
-    /// the pool clock still counts busy until its departure event runs —
-    /// which is the right bias for the steal guard: leave a wide gang
-    /// with its routed shard rather than concentrate it on a thief that
-    /// would have to queue it.
+    /// `type_idx`: the maximum count of non-busy pairs on any single
+    /// server of that pool — `l` while the pool still has an off server,
+    /// else its best idle-pair count (0 when the shard does not own the
+    /// type).  Served by the cluster's per-server free-pair index
+    /// ([`Cluster::max_free_pairs`]) in O(l·log n) instead of a scan over
+    /// every pair; the two agree because a pool's departures are always
+    /// processed up to its event clock before the worker polls for work,
+    /// so no busy pair's tail sits at or before `now`.
     pub fn gang_headroom(&self, type_idx: usize) -> usize {
-        let l = self.view.cfg.pairs_per_server.max(1);
         let Some(pool) = self.pools.iter().find(|p| p.type_idx == type_idx) else {
             return 0;
         };
-        let now = pool.engine.now;
-        pool.cluster
-            .pairs
-            .chunks(l)
-            .map(|server| {
-                server
-                    .iter()
-                    .filter(|p| !(p.power == PairPower::Busy && p.busy_until > now))
-                    .count()
-            })
-            .max()
-            .unwrap_or(0)
+        pool.cluster.max_free_pairs()
     }
 
     /// Metrics fragment at service time `now` (does not advance the event
@@ -527,13 +532,14 @@ impl Shard {
     /// powers every server of the partition down) and report the
     /// closed-books fragment.
     pub fn drain(&mut self) -> Snapshot {
-        let ctx = SchedCtx {
-            solver: &self.solver,
-            iv: self.iv,
-            dvfs: self.dvfs,
-            theta: self.theta,
-        };
         for pool in &mut self.pools {
+            let ctx = SchedCtx {
+                solver: &self.solver,
+                iv: self.iv,
+                dvfs: self.dvfs,
+                theta: self.theta,
+                cache: &pool.cache,
+            };
             pool.engine
                 .run_to_completion(&mut pool.cluster, pool.policy.as_mut(), &ctx);
         }
@@ -563,7 +569,7 @@ pub struct ShardPool {
 impl ShardPool {
     /// Spawn one worker per partition view.  `steal` enables batch work
     /// stealing between workers (meaningless — and disabled — for a
-    /// single shard).
+    /// single shard); `cache` enables the per-pool solve-plane caches.
     pub fn new(
         views: Vec<ShardView>,
         kind: OnlinePolicyKind,
@@ -571,6 +577,7 @@ impl ShardPool {
         iv: ScalingInterval,
         theta: f64,
         steal: bool,
+        cache: bool,
     ) -> ShardPool {
         let n = views.len();
         let shared = Arc::new(PoolShared {
@@ -583,7 +590,7 @@ impl ShardPool {
         for view in views {
             let shared = Arc::clone(&shared);
             workers.push(std::thread::spawn(move || {
-                worker_loop(view, kind, dvfs, iv, theta, steal, &shared);
+                worker_loop(view, kind, dvfs, iv, theta, steal, cache, &shared);
             }));
         }
         ShardPool { shared, workers }
@@ -694,6 +701,7 @@ fn next_job(
     }
 }
 
+#[allow(clippy::too_many_arguments)]
 fn worker_loop(
     view: ShardView,
     kind: OnlinePolicyKind,
@@ -701,11 +709,12 @@ fn worker_loop(
     iv: ScalingInterval,
     theta: f64,
     steal: bool,
+    cache: bool,
     shared: &PoolShared,
 ) {
     let me = view.index;
     let owned_types: Vec<usize> = view.types.iter().map(|&(ti, _)| ti).collect();
-    let mut shard = Shard::new(view, kind, dvfs, iv, theta);
+    let mut shard = Shard::new(view, kind, dvfs, iv, theta, cache);
     loop {
         // per-type single-server gang headroom, taken OUTSIDE the queue
         // lock: only this worker mutates `shard`, so the values stay
@@ -786,6 +795,7 @@ mod tests {
             true,
             ScalingInterval::wide(),
             1.0,
+            true,
         );
         let placed = shard.place_batch(0.0, vec![ServiceTask::plain(mk_task(0, 0.0, 0.5, 10.0))]);
         assert_eq!(placed.len(), 1);
@@ -805,6 +815,7 @@ mod tests {
             true,
             ScalingInterval::wide(),
             1.0,
+            true,
         );
         // EDF-sorted input: tightest deadline first
         let mut a = mk_task(0, 0.0, 0.9, 10.0);
@@ -832,6 +843,7 @@ mod tests {
             true,
             ScalingInterval::wide(),
             0.9,
+            true,
         );
         let mut batch: Vec<ServiceTask> = Vec::new();
         for (i, &g) in [1usize, 3, 1, 2].iter().enumerate() {
@@ -865,6 +877,7 @@ mod tests {
             true,
             ScalingInterval::wide(),
             0.9,
+            true,
         );
         for i in 0..4 {
             shard.place_batch(i as f64, vec![ServiceTask::plain(mk_task(i, i as f64, 0.5, 10.0))]);
@@ -888,6 +901,7 @@ mod tests {
             ScalingInterval::wide(),
             1.0,
             false,
+            true,
         );
         let (tx, rx) = mpsc::channel();
         pool.send(
@@ -934,6 +948,7 @@ mod tests {
             true,
             ScalingInterval::wide(),
             1.0,
+            true,
         );
         let before = shard.load();
         assert_eq!(before.by_type.len(), 1, "homogeneous cluster: one type");
@@ -960,6 +975,7 @@ mod tests {
             true,
             ScalingInterval::wide(),
             0.9,
+            true,
         );
         assert_eq!(shard.gang_headroom(0), 4, "fresh shard: a whole server");
         assert_eq!(shard.gang_headroom(7), 0, "unowned type: no headroom");
@@ -995,6 +1011,7 @@ mod tests {
             true,
             ScalingInterval::wide(),
             1.0,
+            true,
             true,
         );
         // saturate shard 1's single server with 4 long width-1 tasks
@@ -1055,6 +1072,7 @@ mod tests {
             true,
             ScalingInterval::wide(),
             1.0,
+            true,
             true,
         );
         let n = 64;

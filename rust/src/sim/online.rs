@@ -145,11 +145,13 @@ pub fn run_online_workload(
 ) -> OnlineOutcome {
     let mut cluster = Cluster::new(cfg.cluster.clone());
     let mut policy = kind.build(cfg.cluster.total_pairs);
+    let cache = std::cell::RefCell::new(solver.solve_cache(cfg.interval));
     let ctx = SchedCtx {
         solver,
         iv: cfg.interval,
         dvfs,
         theta: cfg.theta,
+        cache: &cache,
     };
 
     let mut engine = EventEngine::new();
@@ -286,11 +288,13 @@ pub fn run_online_workload_slots(
 ) -> OnlineOutcome {
     let mut cluster = Cluster::new(cfg.cluster.clone());
     let mut policy = kind.build(cfg.cluster.total_pairs);
+    let cache = std::cell::RefCell::new(solver.solve_cache(cfg.interval));
     let ctx = SchedCtx {
         solver,
         iv: cfg.interval,
         dvfs,
         theta: cfg.theta,
+        cache: &cache,
     };
 
     // T = 0: the initial offline batch (Algorithm 4 line 1)

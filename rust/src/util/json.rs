@@ -87,6 +87,14 @@ impl Json {
         out
     }
 
+    /// [`Json::render_compact`] into a caller-owned buffer (cleared
+    /// first): the service front end renders every response line through
+    /// one reused buffer instead of allocating a fresh `String` per line.
+    pub fn render_compact_into(&self, out: &mut String) {
+        out.clear();
+        self.write_compact(out);
+    }
+
     fn write_compact(&self, out: &mut String) {
         match self {
             Json::Null => out.push_str("null"),

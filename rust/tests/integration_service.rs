@@ -67,6 +67,95 @@ fn strip_shard(j: &Json) -> Json {
 }
 
 #[test]
+fn prop_cached_service_identical_to_uncached_service() {
+    // The solve-plane cache is pure performance: with it enabled (the
+    // default) every response line — submits, interleaved snapshots, the
+    // final drained energy books — must be EQUAL to the uncached fresh-
+    // solver run, on both the unsharded daemon and the 1-shard sharded
+    // service.  Not approximately: plane lookups mirror the grid solver's
+    // arithmetic bit-for-bit on the winning point.
+    check(
+        "cached run == uncached run",
+        Config {
+            iters: 6,
+            ..Default::default()
+        },
+        |rng| rng.next_u64(),
+        |&seed| {
+            let cfg = small_cfg();
+            let solver = Solver::native();
+            let kind = if seed % 2 == 0 {
+                OnlinePolicyKind::Edl
+            } else {
+                OnlinePolicyKind::Bin
+            };
+            let mut cached = Service::new(&cfg, kind, true, &solver);
+            let mut uncached = Service::new(&cfg, kind, true, &solver);
+            uncached.set_solve_cache(false);
+            let mut sh_cached = ShardedService::new(
+                &cfg,
+                kind,
+                true,
+                1,
+                RoutePolicy::LeastLoaded,
+                0.0,
+                false,
+            )?;
+            let mut sh_uncached = ShardedService::new_with_cache(
+                &cfg,
+                kind,
+                true,
+                1,
+                RoutePolicy::LeastLoaded,
+                0.0,
+                false,
+                false,
+            )?;
+            let mut rng = Rng::new(seed);
+            let stream = rand_stream(&mut rng, 40, &cfg.interval);
+            for (i, task) in stream.iter().enumerate() {
+                let a = cached.submit(*task);
+                let b = uncached.submit(*task);
+                if a != b {
+                    return Err(format!(
+                        "daemon submit {i} diverged:\n  cached   {}\n  uncached {}",
+                        a.render_compact(),
+                        b.render_compact()
+                    ));
+                }
+                let sa = sh_cached.submit(*task);
+                let sb = sh_uncached.submit(*task);
+                if sa != sb {
+                    return Err(format!("sharded submit {i} diverged"));
+                }
+                if i % 11 == 0 {
+                    let qa = cached.query(task.id);
+                    let qb = uncached.query(task.id);
+                    if qa != qb {
+                        return Err(format!("query {i} diverged"));
+                    }
+                }
+            }
+            let fa = cached.shutdown();
+            let fb = uncached.shutdown();
+            if fa != fb {
+                return Err(format!(
+                    "daemon books diverged:\n  cached   {}\n  uncached {}",
+                    fa.render_compact(),
+                    fb.render_compact()
+                ));
+            }
+            let sa = sh_cached.shutdown();
+            let sb = sh_uncached.shutdown();
+            if sa != sb {
+                return Err("sharded books diverged".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
 fn prop_one_shard_sharded_run_identical_to_daemon() {
     // Every submit response, every interleaved snapshot, every retained
     // record, and the final drained snapshot must be *equal* between the

@@ -294,6 +294,17 @@ fn two_clients_interleave_submits_over_a_loopback_socket() {
     assert_eq!(fin.get("admitted").unwrap().as_f64(), Some(2.0 * n as f64));
     assert_eq!(fin.get("violations").unwrap().as_f64(), Some(0.0));
     assert_eq!(fin.get("drained"), Some(&Json::Bool(true)));
+    // per-session observability: both workers + this controller connected,
+    // and each worker session's submit count is attributed to its sid
+    assert_eq!(fin.get("sessions_total").unwrap().as_f64(), Some(3.0));
+    let per_session = fin.get("session_submits").unwrap();
+    for sid in [sa, sb] {
+        let count = per_session
+            .get(&format!("{}", sid as u64))
+            .and_then(Json::as_f64);
+        assert_eq!(count, Some(n as f64), "session {sid} submit count");
+    }
+    assert_eq!(per_session.get("3"), None, "controller submitted nothing");
 
     let (svc, stopped) = server.join().unwrap();
     assert!(stopped, "shutdown request ended the mux");

@@ -2,7 +2,10 @@
 //! `util::proptest`).  Seeds are reproducible via `CASE_SEED=<n>`.
 
 use dvfs_sched::config::{ClusterConfig, SimConfig};
-use dvfs_sched::dvfs::{g1, solve_exact, solve_opt, ScalingInterval, GRID_DEFAULT};
+use dvfs_sched::dvfs::{
+    g1, solve_exact, solve_for_window, solve_opt, ScalingInterval, SolvePlane, TaskModel,
+    GRID_DEFAULT,
+};
 use dvfs_sched::runtime::Solver;
 use dvfs_sched::sched::online::{EdlOnline, OnlinePolicy, SchedCtx};
 use dvfs_sched::sched::{prepare, schedule_offline, OfflinePolicy};
@@ -214,6 +217,153 @@ fn prop_exact_solve_never_exceeds_target() {
     );
 }
 
+/// A random fitted model spanning (and exceeding) the measured library
+/// parameter ranges, including the degenerate δ ∈ {0, 1} edges.
+fn rand_model(rng: &mut Rng) -> TaskModel {
+    let delta = match rng.index(8) {
+        0 => 0.0,
+        1 => 1.0,
+        _ => rng.uniform(0.0, 1.0),
+    };
+    TaskModel {
+        p0: rng.uniform(20.0, 150.0),
+        gamma: if rng.f64() < 0.1 { 0.0 } else { rng.uniform(5.0, 80.0) },
+        c: rng.uniform(50.0, 250.0),
+        d: rng.uniform(0.5, 80.0),
+        delta,
+        t0: rng.uniform(0.05, 10.0),
+    }
+}
+
+/// A random (occasionally degenerate-width) scaling interval.
+fn rand_interval(rng: &mut Rng) -> ScalingInterval {
+    match rng.index(4) {
+        0 => ScalingInterval::wide(),
+        1 => ScalingInterval::narrow(),
+        _ => {
+            let v_min = rng.uniform(0.4, 0.9);
+            let v_max = v_min + rng.uniform(0.05, 0.6);
+            let fm_min = rng.uniform(0.3, 0.9);
+            // the core-frequency floor must stay below the g1(v_max)
+            // ceiling (the exact solver clamps fc into [fc_min, g1(v_max)])
+            let fc_min = rng.uniform(0.3, 0.9).min(g1(v_max) * 0.98);
+            ScalingInterval {
+                v_min,
+                v_max,
+                fc_min,
+                fm_min,
+                fm_max: fm_min + rng.uniform(0.05, 0.6),
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_solve_plane_matches_fresh_solver() {
+    // The tentpole's correctness anchor: for random models, intervals,
+    // and time budgets — from far-infeasible through knife-edge to
+    // unconstrained — every plane lookup must agree with the fresh grid
+    // solver (feasibility exactly; e/t/p to far better than float32
+    // tolerance, since the plane mirrors the solver's arithmetic).
+    check(
+        "solve plane == fresh solver",
+        Config {
+            iters: 96,
+            ..Default::default()
+        },
+        |rng| {
+            let m = rand_model(rng);
+            let iv = rand_interval(rng);
+            let budgets: Vec<f64> = {
+                let lo = m.t_min(&iv);
+                let hi = m.t_max(&iv);
+                (0..12)
+                    .map(|_| lo * 0.5 + (hi * 1.5 - lo * 0.5) * rng.f64())
+                    .chain([f64::INFINITY, lo, hi, m.t_star()])
+                    .collect()
+            };
+            (m, iv, budgets)
+        },
+        |(m, iv, budgets)| {
+            if iv.validate().is_err() || m.validate().is_err() {
+                return Ok(());
+            }
+            let plane = SolvePlane::build(m, iv, GRID_DEFAULT);
+            if plane.t_min() != m.t_min(iv) || plane.t_max() != m.t_max(iv) {
+                return Err("t_min/t_max differ".into());
+            }
+            let close = |a: f64, b: f64| (a - b).abs() <= 1e-6 * a.abs().max(b.abs()).max(1e-9);
+            for &tl in budgets {
+                let po = plane.solve_opt(tl);
+                let fo = solve_opt(m, tl, iv, GRID_DEFAULT);
+                if po.feasible != fo.feasible {
+                    return Err(format!("opt feasibility {} vs {} at tlim {tl}", po.feasible, fo.feasible));
+                }
+                if fo.feasible && !(close(po.e, fo.e) && close(po.t, fo.t) && close(po.p, fo.p)) {
+                    return Err(format!("opt diverges at tlim {tl}: {po:?} vs {fo:?}"));
+                }
+                if tl.is_finite() {
+                    let pe = plane.solve_exact(tl);
+                    let fe = solve_exact(m, tl, iv, GRID_DEFAULT);
+                    if pe.feasible != fe.feasible {
+                        return Err(format!("exact feasibility differs at target {tl}"));
+                    }
+                    if fe.feasible && !(close(pe.e, fe.e) && close(pe.t, fe.t)) {
+                        return Err(format!("exact diverges at target {tl}: {pe:?} vs {fe:?}"));
+                    }
+                    let pw = plane.solve_for_window(tl);
+                    let fw = solve_for_window(m, tl, iv, GRID_DEFAULT);
+                    if pw.feasible != fw.feasible || (fw.feasible && !close(pw.e, fw.e)) {
+                        return Err(format!("window diverges at {tl}: {pw:?} vs {fw:?}"));
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_plane_frontier_monotone_in_budget() {
+    // E*(tlim) is a monotone frontier: tightening the budget never
+    // lowers the optimal energy, and loosening it never raises it.
+    check(
+        "E*(tlim) monotone",
+        Config {
+            iters: 64,
+            ..Default::default()
+        },
+        |rng| (rand_model(rng), rand_interval(rng)),
+        |(m, iv)| {
+            if iv.validate().is_err() || m.validate().is_err() {
+                return Ok(());
+            }
+            let plane = SolvePlane::build(m, iv, GRID_DEFAULT);
+            let free = plane.solve_opt(f64::INFINITY);
+            if !free.feasible {
+                return Ok(());
+            }
+            let mut prev_e = free.e;
+            let mut tlim = free.t * 1.5;
+            while tlim > plane.t_min() * 0.8 {
+                let s = plane.solve_opt(tlim);
+                if !s.feasible {
+                    break;
+                }
+                if s.e < prev_e * (1.0 - 1e-9) {
+                    return Err(format!("tightening to {tlim} lowered energy to {}", s.e));
+                }
+                if s.t > tlim * (1.0 + 1e-4) {
+                    return Err(format!("budget violated: t={} > {tlim}", s.t));
+                }
+                prev_e = s.e;
+                tlim *= 0.93;
+            }
+            Ok(())
+        },
+    );
+}
+
 #[test]
 fn prop_online_energy_identity_and_determinism() {
     let solver = Solver::native();
@@ -409,11 +559,13 @@ fn prop_online_batch_assignment_respects_deadlines() {
                 ..ClusterConfig::default()
             });
             let mut edl = EdlOnline::new();
+            let cache = std::cell::RefCell::new(solver.solve_cache(iv));
             let ctx = SchedCtx {
                 solver: &solver,
                 iv,
                 dvfs: true,
                 theta: 0.9,
+                cache: &cache,
             };
             edl.assign(t0, &batch, &mut cluster, &ctx);
             if cluster.violations != 0 {
