@@ -21,8 +21,7 @@ use dvfs_sched::sim::online::{
 use dvfs_sched::tasks::{generate_online, Task, LIBRARY};
 use dvfs_sched::util::bench::{bb, fmt_dur, section, Bencher};
 use dvfs_sched::util::json::{num, obj, Json};
-use dvfs_sched::util::stats::percentile;
-use dvfs_sched::util::Rng;
+use dvfs_sched::util::{Hist, Rng};
 use std::time::Instant;
 
 /// Reduced-config CI options parsed from the bench's own argv.
@@ -408,7 +407,10 @@ fn run_smoke(opts: &SmokeOpts) {
     )
     .expect("1-shard service");
     let mut rng = Rng::new(17);
-    let mut lat_us: Vec<f64> = Vec::with_capacity(lat_n);
+    // the service's own fixed-bucket log-scale histogram (util::Hist):
+    // zero-alloc recording, and the same quantile semantics the live
+    // `metrics` surface reports
+    let mut lat = Hist::new();
     for i in 0..lat_n {
         let app = rng.index(LIBRARY.len());
         let model = LIBRARY[app].model.scaled(rng.int_range(10, 50) as f64);
@@ -424,13 +426,17 @@ fn run_smoke(opts: &SmokeOpts) {
         };
         let t0 = Instant::now();
         bb(svc.submit(task));
-        lat_us.push(t0.elapsed().as_secs_f64() * 1e6);
+        lat.record(t0.elapsed().as_secs_f64() * 1e6);
     }
     bb(svc.flush());
     bb(svc.shutdown());
-    let lat_p50 = percentile(&lat_us, 50.0);
-    let lat_p99 = percentile(&lat_us, 99.0);
-    println!("submit latency over {lat_n} submits: p50 {lat_p50:.1} us, p99 {lat_p99:.1} us");
+    let lat_p50 = lat.quantile(0.50);
+    let lat_p99 = lat.quantile(0.99);
+    let lat_p999 = lat.quantile(0.999);
+    println!(
+        "submit latency over {lat_n} submits: p50 {lat_p50:.1} us, p99 {lat_p99:.1} us, \
+         p999 {lat_p999:.1} us"
+    );
 
     section("bench-smoke: cached vs fresh solve throughput");
     let mix: Vec<dvfs_sched::TaskModel> = {
@@ -504,6 +510,8 @@ fn run_smoke(opts: &SmokeOpts) {
             ("shard_scaling", Json::Arr(scaling)),
             ("submit_latency_p50_us", num(lat_p50)),
             ("submit_latency_p99_us", num(lat_p99)),
+            ("submit_latency_p999_us", num(lat_p999)),
+            ("submit_latency_hist_us", lat.summary_json()),
             ("solves_per_sec_fresh", num(fresh_rate)),
             ("solves_per_sec_cached", num(cached_rate)),
             ("cached_solve_speedup", num(cached_speedup)),

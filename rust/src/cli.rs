@@ -228,6 +228,37 @@ pub fn parse_front_end_opts(args: &Args) -> Result<FrontEndOpts, String> {
     })
 }
 
+/// Observability options shared by `serve` and `replay`, decoded from
+/// `--journal <path> --metrics-every <slots>` (see
+/// `docs/OBSERVABILITY.md`).  Both default off; off means the service is
+/// response-line-identical to an instrumentation-free build.
+#[derive(Clone, Debug, Default)]
+pub struct ObsOpts {
+    /// Append a structured JSONL event journal to this path.
+    pub journal: Option<String>,
+    /// Emit a `metrics` journal line every this many clock slots
+    /// (requires `--journal`).
+    pub metrics_every: Option<f64>,
+}
+
+/// Decode the observability flags shared by `serve` and `replay`.
+pub fn parse_obs_opts(args: &Args) -> Result<ObsOpts, String> {
+    let journal = args.opt_str("journal");
+    let metrics_every = args.opt_f64("metrics-every")?;
+    if let Some(e) = metrics_every {
+        if !(e.is_finite() && e > 0.0) {
+            return Err(format!("--metrics-every must be positive, got {e}"));
+        }
+        if journal.is_none() {
+            return Err("--metrics-every requires --journal".into());
+        }
+    }
+    Ok(ObsOpts {
+        journal,
+        metrics_every,
+    })
+}
+
 /// Apply the common overrides (--reps/--seed/--theta/--l/--interval/
 /// --backend/--config/...) to a SimConfig.
 pub fn apply_overrides(
@@ -383,6 +414,24 @@ mod tests {
         assert!(parse_front_end_opts(&d).is_err());
         let e = Args::parse(&argv("serve --listen carrier:pigeon")).unwrap();
         assert!(parse_front_end_opts(&e).is_err());
+    }
+
+    #[test]
+    fn obs_opts_parse() {
+        let a = Args::parse(&argv("serve")).unwrap();
+        let o = parse_obs_opts(&a).unwrap();
+        assert!(o.journal.is_none() && o.metrics_every.is_none());
+        a.finish().unwrap();
+        let b = Args::parse(&argv("serve --journal j.jsonl --metrics-every 10")).unwrap();
+        let o = parse_obs_opts(&b).unwrap();
+        assert_eq!(o.journal.as_deref(), Some("j.jsonl"));
+        assert_eq!(o.metrics_every, Some(10.0));
+        b.finish().unwrap();
+        // metrics cadence without a journal has nowhere to go
+        let c = Args::parse(&argv("serve --metrics-every 10")).unwrap();
+        assert!(parse_obs_opts(&c).is_err());
+        let d = Args::parse(&argv("serve --journal j --metrics-every 0")).unwrap();
+        assert!(parse_obs_opts(&d).is_err());
     }
 
     #[test]

@@ -5,4 +5,4 @@ pub mod pair;
 pub mod state;
 
 pub use pair::{Pair, PairPower};
-pub use state::{partition_cluster, Cluster, ShardView};
+pub use state::{partition_cluster, Cluster, ClusterEvent, ObsLog, ShardView};

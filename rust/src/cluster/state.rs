@@ -127,6 +127,101 @@ pub fn partition_cluster(
     Ok(views)
 }
 
+/// One cluster transition observed for the service's event journal.
+///
+/// Strictly observational: recording these never feeds back into any
+/// scheduling or energy decision, so a cluster with the log enabled makes
+/// bit-identical choices to one without.
+#[derive(Clone, Debug, PartialEq)]
+pub enum ClusterEvent {
+    /// Server powered on.
+    PowerOn {
+        /// Server index (shard-local until offset by the shard layer).
+        server: usize,
+        /// Transition time (slots).
+        t: f64,
+    },
+    /// Server powered off (DRS sweep or finalize).
+    PowerOff {
+        /// Server index (shard-local until offset by the shard layer).
+        server: usize,
+        /// Transition time (slots).
+        t: f64,
+    },
+    /// A pair fell idle: its queued work completed at `t`.
+    Depart {
+        /// Pair index (shard-local until offset by the shard layer).
+        pair: usize,
+        /// Completion time μ (slots).
+        t: f64,
+        /// Realized duration of the assignment that released the pair.
+        dur: f64,
+        /// Realized runtime energy of that assignment (per replica).
+        energy: f64,
+    },
+}
+
+impl ClusterEvent {
+    /// The same event in global numbering: server indices shifted by
+    /// `server_offset`, pair indices by `pair_offset` (the shard layer's
+    /// translation when it forwards worker-local events upstream).
+    pub fn offset(self, server_offset: usize, pair_offset: usize) -> ClusterEvent {
+        match self {
+            ClusterEvent::PowerOn { server, t } => ClusterEvent::PowerOn {
+                server: server + server_offset,
+                t,
+            },
+            ClusterEvent::PowerOff { server, t } => ClusterEvent::PowerOff {
+                server: server + server_offset,
+                t,
+            },
+            ClusterEvent::Depart {
+                pair,
+                t,
+                dur,
+                energy,
+            } => ClusterEvent::Depart {
+                pair: pair + pair_offset,
+                t,
+                dur,
+                energy,
+            },
+        }
+    }
+}
+
+/// The cluster's observational transition log (power transitions and
+/// departures with realized duration/energy), drained by the journaling
+/// layer.  Departures report the assignment that released the pair: tasks
+/// queued behind it extended the same busy stretch and are folded into
+/// the final departure the event heap actually fires.
+#[derive(Clone, Debug, Default)]
+pub struct ObsLog {
+    /// Events since the last drain.
+    events: Vec<ClusterEvent>,
+    /// Per-pair (duration, per-replica energy) of the latest assignment.
+    pending: Vec<(f64, f64)>,
+}
+
+impl ObsLog {
+    fn note_assign(&mut self, pair: usize, dur: f64, energy: f64) {
+        if self.pending.len() <= pair {
+            self.pending.resize(pair + 1, (0.0, 0.0));
+        }
+        self.pending[pair] = (dur, energy);
+    }
+
+    fn note_depart(&mut self, pair: usize, t: f64) {
+        let (dur, energy) = self.pending.get(pair).copied().unwrap_or((0.0, 0.0));
+        self.events.push(ClusterEvent::Depart {
+            pair,
+            t,
+            dur,
+            energy,
+        });
+    }
+}
+
 #[derive(Clone, Debug)]
 /// The live cluster: pair/server state machines plus energy ledgers.
 pub struct Cluster {
@@ -185,6 +280,11 @@ pub struct Cluster {
     /// ([`Cluster::server_with_free_pairs`]) in O(l·log n) instead of the
     /// O(servers × pairs) availability scan.
     free_by_count: Vec<std::collections::BTreeSet<usize>>,
+    /// Observational transition log for the service journal: `None` (the
+    /// default) records nothing and costs one branch per transition.
+    /// Enable with [`Cluster::enable_obs`], drain with
+    /// [`Cluster::drain_obs`].
+    pub obs: Option<ObsLog>,
 }
 
 impl Cluster {
@@ -214,7 +314,25 @@ impl Cluster {
             off_servers: (0..n_servers).collect(),
             free_pairs: vec![0; n_servers],
             free_by_count: vec![std::collections::BTreeSet::new(); l + 1],
+            obs: None,
         }
+    }
+
+    /// Start recording power transitions and departures into the
+    /// observational log (idempotent; see [`ObsLog`]).
+    pub fn enable_obs(&mut self) {
+        if self.obs.is_none() {
+            self.obs = Some(ObsLog::default());
+        }
+    }
+
+    /// Take every event recorded since the last drain (empty when the log
+    /// is disabled).
+    pub fn drain_obs(&mut self) -> Vec<ClusterEvent> {
+        self.obs
+            .as_mut()
+            .map(|o| std::mem::take(&mut o.events))
+            .unwrap_or_default()
     }
 
     /// Move on-server `s` from its current free-pair bucket to `new`.
@@ -283,6 +401,9 @@ impl Cluster {
         self.off_servers.remove(&s);
         self.free_pairs[s] = self.l();
         self.free_by_count[self.l()].insert(s);
+        if let Some(o) = self.obs.as_mut() {
+            o.events.push(ClusterEvent::PowerOn { server: s, t: now });
+        }
     }
 
     /// Turn a server off at `now`; all pairs must be non-busy.
@@ -296,6 +417,9 @@ impl Cluster {
         self.free_by_count[self.free_pairs[s]].remove(&s);
         self.free_pairs[s] = 0;
         self.off_servers.insert(s);
+        if let Some(o) = self.obs.as_mut() {
+            o.events.push(ClusterEvent::PowerOff { server: s, t: now });
+        }
     }
 
     /// Assign a task to pair `i` starting at `start` with duration `dur`
@@ -319,6 +443,9 @@ impl Cluster {
         self.last_assign = Some((i, start, mu));
         self.assign_log.push((i, start, mu));
         self.e_run += p * dur;
+        if let Some(o) = self.obs.as_mut() {
+            o.note_assign(i, dur, p * dur);
+        }
         if !crate::util::meets_deadline(mu, deadline) {
             self.violations += 1;
         }
@@ -356,6 +483,9 @@ impl Cluster {
             }
             self.idle_pairs.remove(&i);
             self.departures.push(Reverse((OrdF64(mu), i)));
+            if let Some(o) = self.obs.as_mut() {
+                o.note_assign(i, dur, p * dur);
+            }
         }
         let lead = *pair_ids.iter().min().expect("non-empty gang");
         self.last_assign = Some((lead, start, mu));
@@ -429,6 +559,9 @@ impl Cluster {
                 let server = p.server;
                 self.set_free_count(server, self.free_pairs[server] + 1);
                 self.idle_pairs.insert(i);
+                if let Some(o) = self.obs.as_mut() {
+                    o.note_depart(i, mu);
+                }
                 departed.push(i);
             }
         }
@@ -754,6 +887,50 @@ mod tests {
         c.turn_off_server(0, 7.0);
         assert_eq!(c.server_with_free_pairs(1), None);
         assert_eq!(c.first_off_server(), Some(0));
+    }
+
+    #[test]
+    fn obs_log_records_transitions_observationally() {
+        let mut c = Cluster::new(cfg(2)); // rho = 2
+        c.enable_obs();
+        c.turn_on_server(0, 0.0);
+        c.assign(0, 0.0, 3.0, 100.0, 100.0);
+        c.process_departures(3.0);
+        assert_eq!(c.drs_sweep(5.0), 1);
+        let ev = c.drain_obs();
+        assert_eq!(
+            ev,
+            vec![
+                ClusterEvent::PowerOn { server: 0, t: 0.0 },
+                ClusterEvent::Depart {
+                    pair: 0,
+                    t: 3.0,
+                    dur: 3.0,
+                    energy: 300.0
+                },
+                ClusterEvent::PowerOff { server: 0, t: 5.0 },
+            ]
+        );
+        assert!(c.drain_obs().is_empty(), "drain empties the log");
+        // shard-layer translation into global numbering
+        assert_eq!(
+            ev[1].clone().offset(4, 8),
+            ClusterEvent::Depart {
+                pair: 8,
+                t: 3.0,
+                dur: 3.0,
+                energy: 300.0
+            }
+        );
+        // ledgers match the un-observed cluster exactly
+        let mut plain = Cluster::new(cfg(2));
+        plain.turn_on_server(0, 0.0);
+        plain.assign(0, 0.0, 3.0, 100.0, 100.0);
+        plain.process_departures(3.0);
+        assert_eq!(plain.drs_sweep(5.0), 1);
+        assert_eq!(plain.e_run, c.e_run);
+        assert_eq!(plain.turn_ons, c.turn_ons);
+        assert!((plain.e_idle() - c.e_idle()).abs() < 1e-12);
     }
 
     #[test]

@@ -401,6 +401,10 @@ pub struct SolveCache {
     pub hits: u64,
     /// Lookups that built a new plane.
     pub misses: u64,
+    /// Times the store was cleared after exceeding the plane cap (each
+    /// flush restarts every model from a miss — a non-zero count says the
+    /// workload's model diversity defeats the cache).
+    pub epoch_flushes: u64,
 }
 
 impl SolveCache {
@@ -413,6 +417,7 @@ impl SolveCache {
             planes: HashMap::new(),
             hits: 0,
             misses: 0,
+            epoch_flushes: 0,
         }
     }
 
@@ -456,6 +461,7 @@ impl SolveCache {
             self.misses += 1;
             if self.planes.len() >= PLANE_CACHE_CAP {
                 self.planes.clear();
+                self.epoch_flushes += 1;
             }
         }
         let (iv, grid) = (self.iv, self.grid);
@@ -597,6 +603,7 @@ mod tests {
         cache.t_min(&b);
         assert_eq!(cache.misses, 2);
         assert_eq!(cache.hits, 1);
+        assert_eq!(cache.epoch_flushes, 0);
         assert_eq!(cache.len(), 2);
         assert!(cache.enabled());
         assert!(cache.matches(&ScalingInterval::wide()));

@@ -18,8 +18,8 @@
 //! AOT-compiled XLA artifacts in `artifacts/`.
 
 use dvfs_sched::cli::{
-    apply_overrides, parse_front_end_opts, parse_online_policy, parse_shard_opts, Args,
-    FrontEndOpts, ShardOpts,
+    apply_overrides, parse_front_end_opts, parse_obs_opts, parse_online_policy, parse_shard_opts,
+    Args, FrontEndOpts, ObsOpts, ShardOpts,
 };
 use dvfs_sched::config::SimConfig;
 use dvfs_sched::experiments::{self, ExpCtx};
@@ -86,6 +86,9 @@ fn print_help() {
          sharding flags (serve/replay): --shards N --route least-loaded|energy|round-robin\n               \
          --batch-window SLOTS --no-steal   (any of them opts into the\n               \
          sharded multi-threaded service with batched EDF admission)\n\n\
+         observability flags (serve/replay): --journal FILE --metrics-every SLOTS\n               \
+         (structured JSONL event journal + periodic live metrics; the\n               \
+         `metrics` request works either way — see docs/OBSERVABILITY.md)\n\n\
          scenario flags (serve/replay): --cluster-spec name:servers:power:speed[,...]\n               \
          (heterogeneous GPU types; submits may then carry \"gpu_type\"\n               \
          and a gang width \"g\" — see docs/PROTOCOL.md)\n\n\
@@ -378,9 +381,26 @@ fn run_service_session<R: std::io::BufRead>(
     dvfs: bool,
     mut opts: Option<ShardOpts>,
     fe: &FrontEndOpts,
+    obs: &ObsOpts,
     replay: Option<R>,
     source: &str,
 ) -> Result<(), String> {
+    let journal = match &obs.journal {
+        Some(path) => Some(
+            dvfs_sched::service::Journal::create(path)
+                .map_err(|e| format!("opening journal {path}: {e}"))?,
+        ),
+        None => None,
+    };
+    if let Some(path) = &obs.journal {
+        eprintln!(
+            "journal: {path}{}",
+            match obs.metrics_every {
+                Some(e) => format!(", metrics every {e} slot(s)"),
+                None => String::new(),
+            }
+        );
+    }
     if !cfg.cluster.types.is_empty() && opts.is_none() {
         // typed fleets need the typed-pool service — even a SINGLE
         // configured type carries power/speed scales the plain daemon
@@ -409,10 +429,11 @@ fn run_service_session<R: std::io::BufRead>(
             let mut svc = dvfs_sched::service::ShardedService::new(
                 cfg, kind, dvfs, o.shards, o.route, o.window, o.steal,
             )?;
+            svc.set_obs(journal, obs.metrics_every);
             eprintln!(
                 "serve: {} policy, {} pairs (l={}) across {} shard(s), {} routing, \
                  batch window {} slot(s), steal {} — JSONL sessions on {source}, \
-                 {} clock (submit/query/snapshot/ping/shutdown)",
+                 {} clock (submit/query/snapshot/metrics/ping/shutdown)",
                 kind.name(),
                 cfg.cluster.total_pairs,
                 cfg.cluster.pairs_per_server,
@@ -432,9 +453,10 @@ fn run_service_session<R: std::io::BufRead>(
         None => {
             let solver = Solver::from_config(cfg);
             let mut svc = dvfs_sched::service::Service::new(cfg, kind, dvfs, &solver);
+            svc.set_obs(journal, obs.metrics_every);
             eprintln!(
                 "serve: {} policy, {} pairs (l={}), backend {} — JSONL sessions on \
-                 {source}, {} clock (submit/query/snapshot/ping/shutdown)",
+                 {source}, {} clock (submit/query/snapshot/metrics/ping/shutdown)",
                 kind.name(),
                 cfg.cluster.total_pairs,
                 cfg.cluster.pairs_per_server,
@@ -459,6 +481,7 @@ fn cmd_serve(args: &Args) -> Result<(), String> {
     let dvfs = !args.flag("no-dvfs");
     let opts = parse_shard_opts(args)?;
     let fe = parse_front_end_opts(args)?;
+    let obs = parse_obs_opts(args)?;
     args.finish()?;
 
     let source = match &fe.listen {
@@ -472,6 +495,7 @@ fn cmd_serve(args: &Args) -> Result<(), String> {
         dvfs,
         opts,
         &fe,
+        &obs,
         None::<std::io::BufReader<std::fs::File>>,
         &source,
     )
@@ -493,11 +517,12 @@ fn cmd_replay(args: &Args) -> Result<(), String> {
     let mut fe = parse_front_end_opts(args)?;
     // a replay file IS the session; any --listen flag is irrelevant here
     fe.listen = dvfs_sched::service::ListenAddr::Stdio;
+    let obs = parse_obs_opts(args)?;
     args.finish()?;
 
     let file = std::fs::File::open(&path).map_err(|e| format!("opening {path}: {e}"))?;
     let reader = std::io::BufReader::new(file);
-    run_service_session(&cfg, kind, dvfs, opts, &fe, Some(reader), &path)
+    run_service_session(&cfg, kind, dvfs, opts, &fe, &obs, Some(reader), &path)
 }
 
 fn cmd_online(args: &Args) -> Result<(), String> {

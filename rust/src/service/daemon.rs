@@ -22,6 +22,7 @@ use crate::sched::online::{OnlinePolicy, SchedCtx};
 use std::cell::RefCell;
 use crate::service::admission::{AdmissionController, Verdict};
 use crate::service::events::EventEngine;
+use crate::service::journal::Journal;
 use crate::service::metrics::Snapshot;
 use crate::service::protocol::{num, obj, pong, s, Request, SubmitOpts, TypePref};
 use crate::service::session::{serve_session, ServiceCore};
@@ -29,8 +30,10 @@ use crate::service::VirtualClock;
 use crate::sim::online::OnlinePolicyKind;
 use crate::tasks::Task;
 use crate::util::json::Json;
+use crate::util::Hist;
 use std::collections::{BTreeMap, VecDeque};
 use std::io::{BufRead, Write};
+use std::time::Instant;
 
 /// Retention cap on per-task records: beyond this, the oldest-submitted
 /// records are evicted (a `query` for them answers `unknown`).  Keeps a
@@ -196,6 +199,21 @@ pub struct Service<'a> {
     /// when nothing was pending to process).
     now: f64,
     drained: bool,
+    /// The structured event journal behind `--journal` (`None` keeps the
+    /// service response-line-identical to a journal-free daemon).
+    journal: Option<Journal>,
+    /// Emit one `metrics` journal line every this many clock slots
+    /// (`--metrics-every`; requires a journal).
+    metrics_every: Option<f64>,
+    /// Next slot boundary at which a `metrics` line is owed.
+    next_metrics: f64,
+    /// Receipt→response service latency (µs), recorded by the front end
+    /// through [`ServiceCore::note_latency`].
+    hist_submit: Hist,
+    /// Admission-gate solve latency (µs) per submission.
+    hist_solve: Hist,
+    /// Event-engine flush latency (µs) per `run_until` / drain.
+    hist_flush: Hist,
 }
 
 impl<'a> Service<'a> {
@@ -219,7 +237,27 @@ impl<'a> Service<'a> {
             cache: RefCell::new(solver.solve_cache(cfg.interval)),
             now: 0.0,
             drained: false,
+            journal: None,
+            metrics_every: None,
+            next_metrics: 0.0,
+            hist_submit: Hist::new(),
+            hist_solve: Hist::new(),
+            hist_flush: Hist::new(),
         }
+    }
+
+    /// Attach the observability surface: a structured event journal
+    /// (`--journal`) and/or periodic `metrics` journal lines every
+    /// `metrics_every` clock slots (`--metrics-every`).  Strictly
+    /// observational — response lines are byte-identical either way
+    /// (property-tested in `tests/integration_observability.rs`).
+    pub fn set_obs(&mut self, journal: Option<Journal>, metrics_every: Option<f64>) {
+        if journal.is_some() {
+            self.cluster.enable_obs();
+        }
+        self.journal = journal;
+        self.metrics_every = metrics_every;
+        self.next_metrics = metrics_every.unwrap_or(0.0);
     }
 
     /// Enable or disable the solve-plane cache (enabled by default on the
@@ -273,6 +311,7 @@ impl<'a> Service<'a> {
         let arrival = task.arrival.max(self.now());
         task.arrival = arrival;
         let id = task.id;
+        let gate_t0 = Instant::now();
         let verdict = 'gate: {
             if let Err(why) = self.admission.check_validity(&task) {
                 break 'gate Verdict::RejectInvalid(why);
@@ -291,6 +330,19 @@ impl<'a> Service<'a> {
             self.admission
                 .check_feasibility(&task, arrival, &self.cfg.interval)
         };
+        self.hist_solve.record(gate_t0.elapsed().as_secs_f64() * 1e6);
+        let admit_t = if verdict.admitted() { arrival } else { self.now() };
+        if let Some(j) = self.journal.as_mut() {
+            j.record(
+                "admit",
+                admit_t,
+                vec![
+                    ("id", num(id as f64)),
+                    ("ok", Json::Bool(verdict.admitted())),
+                    ("reason", s(verdict.reason())),
+                ],
+            );
+        }
         let mut fields = vec![
             ("ok", Json::Bool(true)),
             ("op", s("submit")),
@@ -327,8 +379,11 @@ impl<'a> Service<'a> {
                 } else {
                     self.engine.push_gang_arrivals(arrival, vec![(task, g)]);
                 }
+                let flush_t0 = Instant::now();
                 self.engine
                     .run_until(arrival, &mut self.cluster, self.policy.as_mut(), &ctx);
+                self.hist_flush
+                    .record(flush_t0.elapsed().as_secs_f64() * 1e6);
                 let (pair, start, finish) = self
                     .cluster
                     .last_assign
@@ -355,6 +410,26 @@ impl<'a> Service<'a> {
                     ));
                 }
                 self.records.remember(id, rec);
+                if self.journal.is_some() {
+                    let events = self.cluster.drain_obs();
+                    if let Some(j) = self.journal.as_mut() {
+                        let mut jf = vec![
+                            ("id", num(id as f64)),
+                            ("pair", num(pair as f64)),
+                            ("start", num(start)),
+                            ("mu", num(finish)),
+                        ];
+                        if g > 1 {
+                            jf.push(("g", num(g as f64)));
+                            jf.push((
+                                "pairs",
+                                Json::Arr(pairs.iter().map(|&p| num(p as f64)).collect()),
+                            ));
+                        }
+                        j.record("place", arrival, jf);
+                        j.record_cluster_events(None, &events);
+                    }
+                }
             }
             Verdict::RejectInfeasible { t_min, available } => {
                 fields.push(("t_min", num(t_min)));
@@ -381,7 +456,61 @@ impl<'a> Service<'a> {
                     .remember(id, TaskRecord::rejected(arrival, task.deadline));
             }
         }
+        self.maybe_emit_metrics();
         obj(fields)
+    }
+
+    /// Emit one `metrics` journal line per `--metrics-every` slot
+    /// boundary the logical clock has crossed since the last emission.
+    /// These are the only journal lines carrying wall-clock data (the
+    /// latency histograms), which is why they are opt-in: a `--journal`
+    /// run without `--metrics-every` is bit-reproducible across replays.
+    fn maybe_emit_metrics(&mut self) {
+        let every = match self.metrics_every {
+            Some(e) if e > 0.0 && self.journal.is_some() => e,
+            _ => return,
+        };
+        while self.now() >= self.next_metrics {
+            let t = self.next_metrics;
+            let payload = Json::Obj(self.metrics_obj());
+            if let Some(j) = self.journal.as_mut() {
+                j.record_merged("metrics", t, payload);
+                j.flush();
+            }
+            self.next_metrics += every;
+        }
+    }
+
+    /// The full observability payload: the frozen snapshot schema plus
+    /// solve-cache counters, per-type queue occupancy, and the three
+    /// latency histogram summaries.  Reading it never flushes pending
+    /// work or mutates scheduling state.
+    fn metrics_obj(&self) -> BTreeMap<String, Json> {
+        let mut snap = Snapshot::collect(
+            self.now(),
+            &self.cluster,
+            &self.policy.stats(),
+            &self.admission,
+        );
+        snap.add_cache(&self.cache.borrow());
+        let mut m = match snap.to_json_obs() {
+            Json::Obj(m) => m,
+            _ => unreachable!("snapshot renders an object"),
+        };
+        m.insert("drained".to_string(), Json::Bool(self.drained));
+        m.insert("hist_submit_us".to_string(), self.hist_submit.summary_json());
+        m.insert("hist_solve_us".to_string(), self.hist_solve.summary_json());
+        m.insert("hist_flush_us".to_string(), self.hist_flush.summary_json());
+        m
+    }
+
+    /// Render the `metrics` response: everything `snapshot` reports plus
+    /// cache counters, queue occupancy, and latency histograms.
+    pub fn metrics_json(&self) -> Json {
+        let mut m = self.metrics_obj();
+        m.insert("ok".to_string(), Json::Bool(true));
+        m.insert("op".to_string(), s("metrics"));
+        Json::Obj(m)
     }
 
     /// Render the `query` response for task `id`.
@@ -423,10 +552,23 @@ impl<'a> Service<'a> {
             theta: self.cfg.theta,
             cache: &self.cache,
         };
+        let flush_t0 = Instant::now();
         self.engine
             .run_to_completion(&mut self.cluster, self.policy.as_mut(), &ctx);
+        self.hist_flush
+            .record(flush_t0.elapsed().as_secs_f64() * 1e6);
         self.now = self.now.max(self.engine.now);
         self.drained = true;
+        if self.journal.is_some() {
+            let events = self.cluster.drain_obs();
+            if let Some(j) = self.journal.as_mut() {
+                j.record_cluster_events(None, &events);
+            }
+        }
+        self.maybe_emit_metrics();
+        if let Some(j) = self.journal.as_mut() {
+            j.flush();
+        }
         self.snapshot_json("shutdown")
     }
 
@@ -436,6 +578,7 @@ impl<'a> Service<'a> {
             Request::Submit(task, opts) => (self.submit_with(task, opts), false),
             Request::Query { id } => (self.query(id), false),
             Request::Snapshot => (self.snapshot_json("snapshot"), false),
+            Request::Metrics => (self.metrics_json(), false),
             Request::Ping => (pong(), false),
             Request::Shutdown => (self.shutdown(), true),
         }
@@ -465,6 +608,22 @@ impl ServiceCore for Service<'_> {
 
     fn tick(&mut self, _now: f64) -> Vec<Json> {
         Vec::new() // no admission window to expire
+    }
+
+    fn metrics(&mut self) -> Json {
+        self.metrics_json()
+    }
+
+    fn journal_mut(&mut self) -> Option<&mut Journal> {
+        self.journal.as_mut()
+    }
+
+    fn note_latency(&mut self, micros: f64) {
+        self.hist_submit.record(micros);
+    }
+
+    fn logical_now(&self) -> f64 {
+        self.now()
     }
 }
 

@@ -39,13 +39,14 @@
 //! `Send`, and the per-batch solve is exactly the part sharding wants to
 //! parallelize.
 
-use crate::cluster::partition_cluster;
+use crate::cluster::{partition_cluster, ClusterEvent};
 use crate::config::{GpuTypeSpec, SimConfig};
 use crate::dvfs::{ScalingInterval, SolveCache, GRID_DEFAULT};
 use crate::ext::hetero::{select_type_cached, TypeParams};
 use std::cell::RefCell;
 use crate::service::admission::{AdmissionController, Verdict};
 use crate::service::daemon::{RecordStore, TaskRecord};
+use crate::service::journal::Journal;
 use crate::service::metrics::Snapshot;
 use crate::service::protocol::{num, obj, pong, s, Request, SubmitOpts, TypePref};
 use crate::service::session::{serve_session, ServiceCore};
@@ -54,8 +55,11 @@ use crate::service::VirtualClock;
 use crate::sim::online::OnlinePolicyKind;
 use crate::tasks::Task;
 use crate::util::json::Json;
+use crate::util::Hist;
+use std::collections::BTreeMap;
 use std::io::{BufRead, Write};
 use std::sync::mpsc;
+use std::time::Instant;
 
 /// Tasks per dispatched chunk when more than one shard is running (a
 /// single shard takes each batch whole, which preserves whole-batch
@@ -182,6 +186,30 @@ pub struct ShardedService {
     /// Logical clock: advanced by admitted flushes and by drains.
     now: f64,
     drained: bool,
+    /// The structured event journal behind `--journal` (`None` keeps the
+    /// service response-line-identical to a journal-free dispatcher).
+    journal: Option<Journal>,
+    /// Emit one `metrics` journal line every this many clock slots
+    /// (`--metrics-every`; requires a journal).
+    metrics_every: Option<f64>,
+    /// Next slot boundary at which a `metrics` line is owed.
+    next_metrics: f64,
+    /// Receipt→response service latency (µs), fed by the front end
+    /// through [`ServiceCore::note_latency`].
+    hist_submit: Hist,
+    /// Admission latency (µs) per flush: type resolution + feasibility
+    /// over the whole batch.
+    hist_solve: Hist,
+    /// Whole-flush latency (µs): admission + dispatch + reply collection.
+    hist_flush: Hist,
+    /// Cluster events buffered per reply during a dispatch (shard,
+    /// events).  Replies race across shards, so events are journaled
+    /// only at the end of the flush, stably sorted by shard — per-shard
+    /// order is deterministic, and the sort makes the interleaving so.
+    pending_events: Vec<(usize, Vec<ClusterEvent>)>,
+    /// Steal notices buffered the same way: (routed shard, executing
+    /// shard, tasks).
+    pending_steals: Vec<(usize, usize, usize)>,
 }
 
 impl ShardedService {
@@ -270,7 +298,34 @@ impl ShardedService {
             l: cfg.cluster.pairs_per_server,
             now: 0.0,
             drained: false,
+            journal: None,
+            metrics_every: None,
+            next_metrics: 0.0,
+            hist_submit: Hist::new(),
+            hist_solve: Hist::new(),
+            hist_flush: Hist::new(),
+            pending_events: Vec::new(),
+            pending_steals: Vec::new(),
         })
+    }
+
+    /// Attach the observability surface (`--journal` /
+    /// `--metrics-every`): stores the journal and queues
+    /// [`ShardJob::EnableObs`] on every shard.  Call before the first
+    /// submit — each worker drains its own queue in FIFO order (and
+    /// stealing only ever takes batches, never control jobs), so
+    /// observation is on before any placement.  Strictly observational:
+    /// response lines are byte-identical either way (property-tested in
+    /// `tests/integration_observability.rs`).
+    pub fn set_obs(&mut self, journal: Option<Journal>, metrics_every: Option<f64>) {
+        if journal.is_some() {
+            for k in 0..self.pool.n_shards() {
+                self.pool.send(k, ShardJob::EnableObs);
+            }
+        }
+        self.journal = journal;
+        self.metrics_every = metrics_every;
+        self.next_metrics = metrics_every.unwrap_or(0.0);
     }
 
     /// Number of shards.
@@ -345,6 +400,11 @@ impl ShardedService {
             out.extend(self.flush());
             self.records
                 .remember(task.id, TaskRecord::rejected(arrival, task.deadline));
+            if let Some(j) = self.journal.as_mut() {
+                let mut jf = vec![("id", num(task.id as f64)), ("ok", Json::Bool(false))];
+                jf.extend(extra.iter().map(|(k, v)| (*k, v.clone())));
+                j.record("admit", self.now, jf);
+            }
             let mut fields = vec![
                 ("ok", Json::Bool(true)),
                 ("op", s("submit")),
@@ -383,6 +443,7 @@ impl ShardedService {
         if self.batch.is_empty() {
             return Vec::new();
         }
+        let flush_t0 = Instant::now();
         let mut batch = std::mem::take(&mut self.batch);
         // re-clamp: an out-of-order submit may have been buffered before
         // a later-slot flush advanced the clock past it (its window
@@ -396,6 +457,7 @@ impl ShardedService {
         let n = batch.len();
         let mut responses: Vec<Option<Json>> = (0..n).map(|_| None).collect();
         let mut admitted: Vec<(usize, ServiceTask, f64)> = Vec::new();
+        let gate_t0 = Instant::now();
         for (idx, (task, opts)) in batch.into_iter().enumerate() {
             // resolve the GPU type at flush time (named types were
             // validated at the door; `any` takes the feasible-minimum-
@@ -429,19 +491,44 @@ impl ShardedService {
             // t_min is closed-form O(1) — cheaper computed directly than
             // through a plane (the caches exist for the `"any"` solves)
             let t_min = floor_model.t_min(&self.iv);
+            let id = task.id;
             match self.admission.check_feasibility_bound(&task, t, t_min) {
-                Verdict::Admit => admitted.push((
-                    idx,
-                    ServiceTask {
-                        task,
-                        type_idx,
-                        g: opts.g,
-                    },
-                    t_min,
-                )),
+                Verdict::Admit => {
+                    admitted.push((
+                        idx,
+                        ServiceTask {
+                            task,
+                            type_idx,
+                            g: opts.g,
+                        },
+                        t_min,
+                    ));
+                    if let Some(j) = self.journal.as_mut() {
+                        j.record(
+                            "admit",
+                            t,
+                            vec![
+                                ("id", num(id as f64)),
+                                ("ok", Json::Bool(true)),
+                                ("reason", s("admitted")),
+                            ],
+                        );
+                    }
+                }
                 Verdict::RejectInfeasible { t_min, available } => {
                     self.records
                         .remember(task.id, TaskRecord::rejected(task.arrival, task.deadline));
+                    if let Some(j) = self.journal.as_mut() {
+                        j.record(
+                            "admit",
+                            t,
+                            vec![
+                                ("id", num(id as f64)),
+                                ("ok", Json::Bool(false)),
+                                ("reason", s("infeasible-deadline")),
+                            ],
+                        );
+                    }
                     responses[idx] = Some(obj(vec![
                         ("ok", Json::Bool(true)),
                         ("op", s("submit")),
@@ -456,6 +543,7 @@ impl ShardedService {
                 _ => unreachable!("validity/type/gang checked at submit"),
             }
         }
+        self.hist_solve.record(gate_t0.elapsed().as_secs_f64() * 1e6);
         if !admitted.is_empty() {
             // the clock only moves on admission
             self.now = self.now.max(t);
@@ -463,7 +551,12 @@ impl ShardedService {
             // EDF within the coalesced batch; the sort is stable, so
             // deadline ties keep submission order
             admitted.sort_by(|a, b| a.1.task.deadline.partial_cmp(&b.1.task.deadline).unwrap());
-            for (orig_idx, p) in self.dispatch(t, &admitted) {
+            // submission order: responses are indexed (so any order
+            // works), but journal place lines must not inherit the
+            // reply races' arrival order
+            let mut placed = self.dispatch(t, &admitted);
+            placed.sort_by_key(|&(orig_idx, _)| orig_idx);
+            for (orig_idx, p) in placed {
                 let rec = TaskRecord {
                     admitted: true,
                     pair: Some(p.pair),
@@ -496,10 +589,62 @@ impl ShardedService {
                         Json::Arr(p.pairs.iter().map(|&q| num(q as f64)).collect()),
                     ));
                 }
+                if let Some(j) = self.journal.as_mut() {
+                    let mut jf = vec![
+                        ("id", num(p.id as f64)),
+                        ("pair", num(p.pair as f64)),
+                        ("shard", num(p.shard as f64)),
+                        ("start", num(p.start)),
+                        ("mu", num(p.finish)),
+                    ];
+                    if p.pairs.len() > 1 {
+                        jf.push(("g", num(p.pairs.len() as f64)));
+                        jf.push((
+                            "pairs",
+                            Json::Arr(p.pairs.iter().map(|&q| num(q as f64)).collect()),
+                        ));
+                    }
+                    j.record("place", t, jf);
+                }
                 self.records.remember(p.id, rec);
                 responses[orig_idx] = Some(obj(fields));
             }
         }
+        if self.journal.is_some() {
+            let mut steals = std::mem::take(&mut self.pending_steals);
+            steals.sort_unstable();
+            let mut events = std::mem::take(&mut self.pending_events);
+            // stable by shard: per-shard sequences keep their (already
+            // deterministic) internal order
+            events.sort_by_key(|&(shard, _)| shard);
+            if let Some(j) = self.journal.as_mut() {
+                for (from, to, tasks) in steals {
+                    j.record(
+                        "steal",
+                        t,
+                        vec![
+                            ("from", num(from as f64)),
+                            ("to", num(to as f64)),
+                            ("tasks", num(tasks as f64)),
+                        ],
+                    );
+                }
+                for (shard, evs) in &events {
+                    j.record_cluster_events(Some(*shard), evs);
+                }
+                j.record(
+                    "flush",
+                    t,
+                    vec![
+                        ("n", num(n as f64)),
+                        ("admitted", num(admitted.len() as f64)),
+                    ],
+                );
+                j.flush();
+            }
+        }
+        self.hist_flush.record(flush_t0.elapsed().as_secs_f64() * 1e6);
+        self.maybe_emit_metrics();
         let out: Vec<Json> = responses.into_iter().flatten().collect();
         debug_assert_eq!(out.len(), n, "every batch member got a response");
         out
@@ -611,6 +756,18 @@ impl ShardedService {
         let (routed, ti, cost, pairs) = chunk_meta[reply.tag as usize];
         self.inflight[routed][ti] = (self.inflight[routed][ti] - cost).max(0.0);
         self.inflight_pairs[routed][ti] = self.inflight_pairs[routed][ti].saturating_sub(pairs);
+        if self.journal.is_some() {
+            // buffered, not journaled here: replies race across shards,
+            // so the flush emits these in a deterministic order
+            if reply.shard != routed {
+                self.pending_steals
+                    .push((routed, reply.shard, reply.placements.len()));
+            }
+            if !reply.events.is_empty() {
+                self.pending_events
+                    .push((reply.shard, reply.events.clone()));
+            }
+        }
         let idxs = &chunk_map[reply.tag as usize];
         assert_eq!(idxs.len(), reply.placements.len());
         for (j, p) in reply.placements.iter().enumerate() {
@@ -694,22 +851,45 @@ impl ShardedService {
     /// count.
     fn collect_merged(&mut self, drain: bool) -> Snapshot {
         let n = self.pool.n_shards();
-        let (tx, rx) = mpsc::channel();
-        for k in 0..n {
-            let job = if drain {
-                ShardJob::Drain { reply: tx.clone() }
-            } else {
-                ShardJob::Snapshot {
-                    now: self.now,
-                    reply: tx.clone(),
-                }
-            };
-            self.pool.send(k, job);
-        }
-        drop(tx);
         let mut frags: Vec<(usize, Snapshot)> = Vec::with_capacity(n);
-        for _ in 0..n {
-            frags.push(rx.recv().expect("shard worker alive"));
+        if drain {
+            // drain replies carry the shard's residual cluster events so
+            // shutdown departures still reach the journal
+            let (tx, rx) = mpsc::channel();
+            for k in 0..n {
+                self.pool.send(k, ShardJob::Drain { reply: tx.clone() });
+            }
+            drop(tx);
+            let mut events: Vec<(usize, Vec<ClusterEvent>)> = Vec::with_capacity(n);
+            for _ in 0..n {
+                let (id, snap, evs) = rx.recv().expect("shard worker alive");
+                frags.push((id, snap));
+                if !evs.is_empty() {
+                    events.push((id, evs));
+                }
+            }
+            // deterministic journal order regardless of reply arrival
+            events.sort_by_key(|&(id, _)| id);
+            if let Some(j) = self.journal.as_mut() {
+                for (id, evs) in &events {
+                    j.record_cluster_events(Some(*id), evs);
+                }
+            }
+        } else {
+            let (tx, rx) = mpsc::channel();
+            for k in 0..n {
+                self.pool.send(
+                    k,
+                    ShardJob::Snapshot {
+                        now: self.now,
+                        reply: tx.clone(),
+                    },
+                );
+            }
+            drop(tx);
+            for _ in 0..n {
+                frags.push(rx.recv().expect("shard worker alive"));
+            }
         }
         // shard order restores the global server numbering in e_idle_nodes
         frags.sort_by_key(|&(id, _)| id);
@@ -737,6 +917,98 @@ impl ShardedService {
         render_snapshot(snap, op, self.drained)
     }
 
+    /// Pending coalesced-batch depth per GPU type (the live
+    /// `queued_by_type` family).  `"any"` submissions on a multi-type
+    /// fleet resolve their type only at flush time, so they count in the
+    /// scalar `pending_batch` overlay but not here.
+    fn pending_by_type(&self) -> Vec<u64> {
+        let mut queued = vec![0u64; self.fleet.len()];
+        for (_, opts) in &self.batch {
+            match &opts.gpu_type {
+                TypePref::Named(name) => {
+                    if let Some(i) = self.fleet.iter().position(|ty| &ty.name == name) {
+                        queued[i] += 1;
+                    }
+                }
+                TypePref::Any if self.fleet.len() == 1 => queued[0] += 1,
+                TypePref::Any => {}
+            }
+        }
+        queued
+    }
+
+    /// The live metrics body: a non-draining merged snapshot rendered
+    /// through [`Snapshot::to_json_obs`] (cache counters and
+    /// `queued_by_type` included), overlaid with dispatcher state the
+    /// snapshot cannot see — routing policy, coalescing window, pending
+    /// batch depth, per-shard queue depth and in-flight pairs — and the
+    /// three wall-clock histograms.  Does **not** flush the pending
+    /// batch (flushing releases response lines, which only
+    /// [`Self::handle`] can deliver).
+    fn metrics_obj(&mut self) -> BTreeMap<String, Json> {
+        let mut snap = self.collect_merged(false);
+        // the per-shard caches already merged in via Shard::snapshot;
+        // the dispatcher's own type-selection caches stack on top
+        for cache in &self.type_caches {
+            snap.add_cache(&cache.borrow());
+        }
+        snap.queued_by_type = self.pending_by_type();
+        let mut m = match snap.to_json_obs() {
+            Json::Obj(m) => m,
+            _ => unreachable!("snapshot renders an object"),
+        };
+        m.insert("drained".to_string(), Json::Bool(self.drained));
+        m.insert("route".to_string(), s(self.route.name()));
+        m.insert("window".to_string(), num(self.window));
+        m.insert("pending_batch".to_string(), num(self.batch.len() as f64));
+        m.insert(
+            "shard_queue_depth".to_string(),
+            Json::Arr(self.queue_depth.iter().map(|&q| num(q as f64)).collect()),
+        );
+        m.insert(
+            "inflight_pairs".to_string(),
+            Json::Arr(
+                self.inflight_pairs
+                    .iter()
+                    .map(|v| num(v.iter().sum::<usize>() as f64))
+                    .collect(),
+            ),
+        );
+        m.insert("hist_submit_us".to_string(), self.hist_submit.summary_json());
+        m.insert("hist_solve_us".to_string(), self.hist_solve.summary_json());
+        m.insert("hist_flush_us".to_string(), self.hist_flush.summary_json());
+        m
+    }
+
+    /// The `metrics` protocol response (the sharded counterpart of
+    /// [`crate::service::Service::metrics_json`]).
+    pub fn metrics_json(&mut self) -> Json {
+        let mut m = self.metrics_obj();
+        m.insert("ok".to_string(), Json::Bool(true));
+        m.insert("op".to_string(), s("metrics"));
+        Json::Obj(m)
+    }
+
+    /// Emit one `metrics` journal line per elapsed `--metrics-every`
+    /// stride of the logical clock.  The body embeds wall-clock
+    /// histograms, so journals carrying these lines are not
+    /// byte-deterministic across runs — `--journal` alone stays so.
+    fn maybe_emit_metrics(&mut self) {
+        let every = match self.metrics_every {
+            Some(e) if e > 0.0 && self.journal.is_some() => e,
+            _ => return,
+        };
+        while self.now >= self.next_metrics {
+            let t = self.next_metrics;
+            let payload = Json::Obj(self.metrics_obj());
+            if let Some(j) = self.journal.as_mut() {
+                j.record_merged("metrics", t, payload);
+                j.flush();
+            }
+            self.next_metrics += every;
+        }
+    }
+
     /// Graceful drain: flush the pending batch, run every shard to
     /// completion, and report the merged closed-books decomposition.
     /// Returns the released flush responses followed by the final
@@ -745,6 +1017,12 @@ impl ShardedService {
         let mut out = self.flush();
         let snap = self.drain_to_snapshot();
         out.push(render_snapshot(snap, "shutdown", true));
+        // the drain advanced the clock; settle any metrics strides it
+        // crossed, then close the journal cleanly
+        self.maybe_emit_metrics();
+        if let Some(j) = self.journal.as_mut() {
+            j.flush();
+        }
         out
     }
 
@@ -779,6 +1057,15 @@ impl ShardedService {
                 (out, false)
             }
             Request::Ping => (vec![pong()], false),
+            Request::Metrics => {
+                // order-preserving fallback for direct callers: the front
+                // end answers `metrics` out of band without flushing, but
+                // a bare `handle` must not let the metrics line overtake
+                // deferred submit responses
+                let mut out = self.flush();
+                out.push(self.metrics_json());
+                (out, false)
+            }
             Request::Shutdown => (self.shutdown(), true),
         }
     }
@@ -817,6 +1104,22 @@ impl ServiceCore for ShardedService {
         } else {
             Vec::new()
         }
+    }
+
+    fn metrics(&mut self) -> Json {
+        self.metrics_json()
+    }
+
+    fn journal_mut(&mut self) -> Option<&mut Journal> {
+        self.journal.as_mut()
+    }
+
+    fn note_latency(&mut self, micros: f64) {
+        self.hist_submit.record(micros);
+    }
+
+    fn logical_now(&self) -> f64 {
+        self.now
     }
 }
 

@@ -1,0 +1,205 @@
+//! Structured append-only JSONL event journal: one JSON object per line,
+//! recording every admission decision, placement, departure, power
+//! transition, steal, flush, request, and session transition the service
+//! observes — the durable substrate the ROADMAP's failure-recovery
+//! (`repro recover`) and RLS power-model-fitting items build on, and the
+//! long-open `--log` request trace (request lines are journaled verbatim
+//! with their session/rid stamps, so a journal alone reconstructs the
+//! merged input trace).
+//!
+//! Journaling is strictly observational: with `--journal` disabled the
+//! service emits byte-identical response lines (property-tested in
+//! `tests/integration_observability.rs`), and with it enabled under the
+//! virtual clock two identical replays produce identical journals (every
+//! event is stamped with logical slot time; objects render through the
+//! sorted-key [`Json`] writer).  `metrics` lines are the one exception:
+//! they embed wall-clock latency histograms, so they are only emitted
+//! when `--metrics-every` explicitly asks for them.
+//!
+//! See `docs/OBSERVABILITY.md` for the per-event schema table and
+//! `scripts/journal_check.py` for the CI validator.
+
+use crate::cluster::ClusterEvent;
+use crate::util::json::{num, Json};
+use std::collections::BTreeMap;
+use std::fmt;
+use std::fs::File;
+use std::io::{self, BufWriter, Write};
+
+/// An append-only JSONL event sink with a reused render buffer (the
+/// record path allocates only when a line grows past every previous one).
+///
+/// # Examples
+///
+/// ```no_run
+/// use dvfs_sched::service::Journal;
+/// use dvfs_sched::util::json::{num, Json};
+///
+/// let mut j = Journal::create("events.jsonl").unwrap();
+/// j.record("admit", 0.0, vec![("id", num(7.0)), ("ok", Json::Bool(true))]);
+/// assert_eq!(j.lines(), 1);
+/// ```
+pub struct Journal {
+    out: Box<dyn Write>,
+    buf: String,
+    lines: u64,
+}
+
+impl fmt::Debug for Journal {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.debug_struct("Journal").field("lines", &self.lines).finish()
+    }
+}
+
+impl Journal {
+    /// A journal appending to a fresh file at `path`.
+    pub fn create(path: &str) -> io::Result<Journal> {
+        Ok(Journal::to_writer(BufWriter::new(File::create(path)?)))
+    }
+
+    /// A journal appending to any writer (tests capture lines in memory).
+    pub fn to_writer<W: Write + 'static>(w: W) -> Journal {
+        Journal {
+            out: Box::new(w),
+            buf: String::new(),
+            lines: 0,
+        }
+    }
+
+    /// Append one event line: `{"ev": ev, "t": t, ...fields}`.  Keys are
+    /// rendered sorted, so identical events always serialize identically.
+    /// Write errors are swallowed — the journal is observational and must
+    /// never take the service down.
+    pub fn record(&mut self, ev: &str, t: f64, fields: Vec<(&str, Json)>) {
+        let mut m = BTreeMap::new();
+        for (k, v) in fields {
+            m.insert(k.to_string(), v);
+        }
+        self.write_event(ev, t, m);
+    }
+
+    /// Append one event line whose payload is an already-built object
+    /// (the `metrics` path journals the full snapshot): the payload's
+    /// fields are merged at the top level, then stamped with `ev`/`t`.
+    /// A non-object payload lands under a `"payload"` key.
+    pub fn record_merged(&mut self, ev: &str, t: f64, payload: Json) {
+        let m = match payload {
+            Json::Obj(m) => m,
+            other => {
+                let mut m = BTreeMap::new();
+                m.insert("payload".to_string(), other);
+                m
+            }
+        };
+        self.write_event(ev, t, m);
+    }
+
+    fn write_event(&mut self, ev: &str, t: f64, mut m: BTreeMap<String, Json>) {
+        m.insert("ev".to_string(), Json::Str(ev.to_string()));
+        m.insert("t".to_string(), Json::Num(t));
+        Json::Obj(m).render_compact_into(&mut self.buf);
+        self.buf.push('\n');
+        let _ = self.out.write_all(self.buf.as_bytes());
+        self.lines += 1;
+    }
+
+    /// Journal a batch of [`ClusterEvent`]s (already translated to global
+    /// numbering) as `power` / `depart` lines, tagged with `shard` when
+    /// the source is a sharded worker.
+    pub fn record_cluster_events(&mut self, shard: Option<usize>, events: &[ClusterEvent]) {
+        for e in events {
+            let mut fields: Vec<(&str, Json)> = Vec::with_capacity(4);
+            if let Some(s) = shard {
+                fields.push(("shard", num(s as f64)));
+            }
+            match *e {
+                ClusterEvent::PowerOn { server, t } => {
+                    fields.push(("server", num(server as f64)));
+                    fields.push(("to", Json::Str("on".to_string())));
+                    self.record("power", t, fields);
+                }
+                ClusterEvent::PowerOff { server, t } => {
+                    fields.push(("server", num(server as f64)));
+                    fields.push(("to", Json::Str("off".to_string())));
+                    self.record("power", t, fields);
+                }
+                ClusterEvent::Depart {
+                    pair,
+                    t,
+                    dur,
+                    energy,
+                } => {
+                    fields.push(("pair", num(pair as f64)));
+                    fields.push(("dur", num(dur)));
+                    fields.push(("e", num(energy)));
+                    self.record("depart", t, fields);
+                }
+            }
+        }
+    }
+
+    /// Lines written so far.
+    pub fn lines(&self) -> u64 {
+        self.lines
+    }
+
+    /// Flush the underlying writer (called on shutdown, session close,
+    /// and periodic metrics lines; per-event lines stay buffered).
+    pub fn flush(&mut self) {
+        let _ = self.out.flush();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::{Arc, Mutex};
+
+    /// A `Write` handle tests can read back after the journal is dropped.
+    #[derive(Clone, Default)]
+    struct SharedBuf(Arc<Mutex<Vec<u8>>>);
+
+    impl Write for SharedBuf {
+        fn write(&mut self, buf: &[u8]) -> io::Result<usize> {
+            self.0.lock().unwrap().extend_from_slice(buf);
+            Ok(buf.len())
+        }
+        fn flush(&mut self) -> io::Result<()> {
+            Ok(())
+        }
+    }
+
+    #[test]
+    fn record_emits_sorted_single_line_json() {
+        let sink = SharedBuf::default();
+        let mut j = Journal::to_writer(sink.clone());
+        j.record("admit", 2.5, vec![("ok", Json::Bool(true)), ("id", num(7.0))]);
+        j.record_cluster_events(
+            Some(1),
+            &[ClusterEvent::Depart {
+                pair: 3,
+                t: 9.0,
+                dur: 4.0,
+                energy: 100.0,
+            }],
+        );
+        assert_eq!(j.lines(), 2);
+        drop(j);
+        let text = String::from_utf8(sink.0.lock().unwrap().clone()).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(
+            lines[0],
+            r#"{"ev":"admit","id":7,"ok":true,"t":2.5}"#
+        );
+        assert_eq!(
+            lines[1],
+            r#"{"dur":4,"e":100,"ev":"depart","pair":3,"shard":1,"t":9}"#
+        );
+        // every line round-trips through the parser
+        for l in lines {
+            let v = Json::parse(l).unwrap();
+            assert!(v.get("ev").unwrap().as_str().is_some());
+            assert!(v.get("t").unwrap().as_f64().is_some());
+        }
+    }
+}

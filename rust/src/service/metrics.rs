@@ -16,6 +16,7 @@
 //! front end, not here.
 
 use crate::cluster::{Cluster, PairPower};
+use crate::dvfs::SolveCache;
 use crate::sched::online::PolicyStats;
 use crate::service::admission::AdmissionController;
 use crate::util::json::Json;
@@ -87,6 +88,24 @@ pub struct Snapshot {
     pub steals: u64,
     /// Shards contributing to this snapshot (1 for the unsharded daemon).
     pub shards: usize,
+    /// Solve-plane cache hits, summed over every cache feeding this
+    /// fragment ([`Snapshot::add_cache`]).  The cache families render on
+    /// the `metrics` response only ([`Snapshot::to_json_obs`]) — the
+    /// `snapshot`/`shutdown` schema is frozen by the byte-identity
+    /// oracles, and cache hit patterns legitimately differ between the
+    /// unsharded and sharded services.
+    pub cache_hits: u64,
+    /// Solve-plane cache misses (plane builds), summed like `cache_hits`.
+    pub cache_misses: u64,
+    /// Planes currently materialized across the contributing caches.
+    pub cache_planes: u64,
+    /// Epoch flushes (cap-exceeded full clears) across the caches.
+    pub cache_epoch_flushes: u64,
+    /// Tasks admitted but not yet flushed to a shard, per GPU type in
+    /// global type order (the dispatcher's coalesced-batch depth; always
+    /// zero for the unsharded daemon, which places at admission).  Merges
+    /// elementwise and remaps like the other per-type families.
+    pub queued_by_type: Vec<u64>,
 }
 
 impl Snapshot {
@@ -135,7 +154,23 @@ impl Snapshot {
             forced: stats.forced,
             steals: 0,
             shards: 1,
+            cache_hits: 0,
+            cache_misses: 0,
+            cache_planes: 0,
+            cache_epoch_flushes: 0,
+            // like e_by_type: one homogeneous slot, remapped by typed
+            // services; the backlog itself is known only to the caller
+            queued_by_type: vec![0],
         }
+    }
+
+    /// Fold one solve cache's counters into this fragment (shards call
+    /// this once per type pool, the daemon once for its cache).
+    pub fn add_cache(&mut self, cache: &SolveCache) {
+        self.cache_hits += cache.hits;
+        self.cache_misses += cache.misses;
+        self.cache_planes += cache.len() as u64;
+        self.cache_epoch_flushes += cache.epoch_flushes;
     }
 
     /// Re-slot the per-type vectors into global type order: this snapshot
@@ -145,12 +180,15 @@ impl Snapshot {
         let e = self.e_by_type.first().copied().unwrap_or(0.0);
         let busy = self.busy_by_type.first().copied().unwrap_or(0);
         let pairs = self.pairs_by_type.first().copied().unwrap_or(0);
+        let queued = self.queued_by_type.first().copied().unwrap_or(0);
         self.e_by_type = vec![0.0; n_types];
         self.busy_by_type = vec![0; n_types];
         self.pairs_by_type = vec![0; n_types];
+        self.queued_by_type = vec![0; n_types];
         self.e_by_type[type_idx] = e;
         self.busy_by_type[type_idx] = busy;
         self.pairs_by_type[type_idx] = pairs;
+        self.queued_by_type[type_idx] = queued;
         self
     }
 
@@ -187,6 +225,9 @@ impl Snapshot {
                 m.busy_by_type.resize(p.busy_by_type.len(), 0);
                 m.pairs_by_type.resize(p.pairs_by_type.len(), 0);
             }
+            if m.queued_by_type.len() < p.queued_by_type.len() {
+                m.queued_by_type.resize(p.queued_by_type.len(), 0);
+            }
             for (i, &e) in p.e_by_type.iter().enumerate() {
                 m.e_by_type[i] += e;
             }
@@ -196,9 +237,16 @@ impl Snapshot {
             for (i, &n) in p.pairs_by_type.iter().enumerate() {
                 m.pairs_by_type[i] += n;
             }
+            for (i, &q) in p.queued_by_type.iter().enumerate() {
+                m.queued_by_type[i] += q;
+            }
             m.readjusted += p.readjusted;
             m.forced += p.forced;
             m.steals += p.steals;
+            m.cache_hits += p.cache_hits;
+            m.cache_misses += p.cache_misses;
+            m.cache_planes += p.cache_planes;
+            m.cache_epoch_flushes += p.cache_epoch_flushes;
         }
         m.shards = parts.len();
         m
@@ -252,6 +300,43 @@ impl Snapshot {
                     .iter()
                     .zip(&self.pairs_by_type)
                     .map(|(&b, &n)| Json::Num(if n == 0 { 0.0 } else { b as f64 / n as f64 }))
+                    .collect(),
+            ),
+        );
+        Json::Obj(m)
+    }
+
+    /// [`Snapshot::to_json`] plus the observability families the frozen
+    /// `snapshot` schema cannot carry: solve-cache counters and the
+    /// per-type queue depth.  This is the `metrics` response body and the
+    /// `--metrics-every` journal-line body.
+    pub fn to_json_obs(&self) -> Json {
+        let mut m = match self.to_json() {
+            Json::Obj(m) => m,
+            _ => unreachable!("to_json renders an object"),
+        };
+        m.insert(
+            "cache_hits".to_string(),
+            Json::Num(self.cache_hits as f64),
+        );
+        m.insert(
+            "cache_misses".to_string(),
+            Json::Num(self.cache_misses as f64),
+        );
+        m.insert(
+            "cache_planes".to_string(),
+            Json::Num(self.cache_planes as f64),
+        );
+        m.insert(
+            "cache_epoch_flushes".to_string(),
+            Json::Num(self.cache_epoch_flushes as f64),
+        );
+        m.insert(
+            "queued_by_type".to_string(),
+            Json::Arr(
+                self.queued_by_type
+                    .iter()
+                    .map(|&q| Json::Num(q as f64))
                     .collect(),
             ),
         );
@@ -317,16 +402,24 @@ mod tests {
             e_by_type: vec![10.0],
             busy_by_type: vec![3],
             pairs_by_type: vec![8],
+            queued_by_type: vec![5],
             ..Snapshot::default()
         };
         let a = frag.clone().remap_type(0, 2);
         let b = frag.remap_type(1, 2);
         assert_eq!(a.e_by_type, vec![10.0, 0.0]);
         assert_eq!(b.e_by_type, vec![0.0, 10.0]);
+        assert_eq!(a.queued_by_type, vec![5, 0]);
+        assert_eq!(b.queued_by_type, vec![0, 5]);
         let m = Snapshot::merge(&[a, b]);
         assert_eq!(m.e_by_type, vec![10.0, 10.0]);
         assert_eq!(m.busy_by_type, vec![3, 3]);
         assert_eq!(m.pairs_by_type, vec![8, 8]);
+        assert_eq!(
+            m.queued_by_type,
+            vec![5, 5],
+            "per-type queue counters must survive the merge from every shard"
+        );
         let j = m.to_json();
         let util = j.get("util_by_type").unwrap().as_arr().unwrap();
         assert_eq!(util.len(), 2);
@@ -373,5 +466,65 @@ mod tests {
         assert_eq!(m.rejected_infeasible, 1);
         assert_eq!(m.shards, 2);
         assert!((m.e_total() - (m.e_run + m.e_idle + m.e_overhead)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn merge_sums_cache_counters_and_obs_json_extends_the_frozen_schema() {
+        let a = Snapshot {
+            cache_hits: 10,
+            cache_misses: 2,
+            cache_planes: 2,
+            cache_epoch_flushes: 1,
+            queued_by_type: vec![4, 0],
+            ..Snapshot::default()
+        };
+        let b = Snapshot {
+            cache_hits: 5,
+            cache_misses: 3,
+            cache_planes: 3,
+            queued_by_type: vec![0, 7],
+            ..Snapshot::default()
+        };
+        let m = Snapshot::merge(&[a, b]);
+        assert_eq!(m.cache_hits, 15);
+        assert_eq!(m.cache_misses, 5);
+        assert_eq!(m.cache_planes, 5);
+        assert_eq!(m.cache_epoch_flushes, 1);
+        assert_eq!(m.queued_by_type, vec![4, 7]);
+        // the frozen snapshot schema must not grow the new keys...
+        let frozen = m.to_json();
+        assert!(frozen.get("cache_hits").is_none());
+        assert!(frozen.get("queued_by_type").is_none());
+        // ...while the metrics rendering is a strict superset of it
+        let obs = m.to_json_obs();
+        assert_eq!(obs.get("cache_hits").unwrap().as_f64(), Some(15.0));
+        assert_eq!(obs.get("cache_epoch_flushes").unwrap().as_f64(), Some(1.0));
+        let q = obs.get("queued_by_type").unwrap().as_arr().unwrap();
+        assert_eq!(q.len(), 2);
+        assert_eq!(q[1].as_f64(), Some(7.0));
+        if let (Json::Obj(f), Json::Obj(o)) = (&frozen, &obs) {
+            for (k, v) in f {
+                assert_eq!(o.get(k), Some(v), "metrics must carry snapshot key {k}");
+            }
+        } else {
+            panic!("renderings must be objects");
+        }
+    }
+
+    #[test]
+    fn add_cache_folds_counters() {
+        use crate::dvfs::{ScalingInterval, GRID_DEFAULT};
+        use crate::tasks::LIBRARY;
+        let mut cache = SolveCache::new(ScalingInterval::wide(), GRID_DEFAULT);
+        let m0 = LIBRARY[0].model.scaled(10.0);
+        cache.solve_opt(&m0, f64::INFINITY);
+        cache.solve_opt(&m0, 50.0);
+        let mut s = Snapshot::default();
+        s.add_cache(&cache);
+        s.add_cache(&SolveCache::disabled(ScalingInterval::wide()));
+        assert_eq!(s.cache_hits, 1);
+        assert_eq!(s.cache_misses, 1);
+        assert_eq!(s.cache_planes, 1);
+        assert_eq!(s.cache_epoch_flushes, 0);
     }
 }

@@ -14,6 +14,10 @@
 //!   `snapshot` / `shutdown`), schema-compatible with workload files.
 //! * [`metrics`] — live energy decomposition + admission counters, with
 //!   per-shard fragment merging.
+//! * [`journal`] — the structured JSONL event journal behind `--journal`:
+//!   admissions, placements, departures, power transitions, steals,
+//!   flushes, request traces, and session lifecycles, stamped with slot /
+//!   shard / session / rid (see `docs/OBSERVABILITY.md`).
 //! * [`daemon`] — the single-threaded [`daemon::Service`] loop behind
 //!   `repro serve` (stdin) and `repro replay` (session files), with
 //!   graceful drain.
@@ -37,6 +41,7 @@ pub mod clock;
 pub mod daemon;
 pub mod dispatch;
 pub mod events;
+pub mod journal;
 pub mod metrics;
 pub mod protocol;
 pub mod session;
@@ -48,6 +53,7 @@ pub use clock::{Clock, VirtualClock, WallClock};
 pub use daemon::{RecordStore, Service, TaskRecord};
 pub use dispatch::{RoutePolicy, ShardedService};
 pub use events::EventEngine;
+pub use journal::Journal;
 pub use metrics::Snapshot;
 pub use protocol::{parse_request, parse_request_rid, Request, SubmitOpts, TypePref};
 pub use session::{serve_mux, serve_session, ServiceCore};

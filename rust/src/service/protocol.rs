@@ -9,6 +9,7 @@
 //! {"op":"submit","task":{...},"gpu_type":"bigGPU","g":4}
 //! {"op":"query","id":1}
 //! {"op":"snapshot"}
+//! {"op":"metrics"}
 //! {"op":"ping"}
 //! {"op":"shutdown"}
 //! ```
@@ -82,8 +83,16 @@ pub enum Request {
     Submit(Task, SubmitOpts),
     /// Query the record of a previously submitted task id.
     Query { id: usize },
-    /// Report live metrics.
+    /// Report the frozen-schema live snapshot (energy decomposition and
+    /// admission counters).
     Snapshot,
+    /// Report the full observability surface: everything `snapshot`
+    /// reports plus solve-cache counters, per-shard/per-type queue depth,
+    /// and latency/solve-time histogram summaries.  Strictly
+    /// observational — unlike `query`/`snapshot` it never flushes a
+    /// pending batch, so it can watch a window fill without perturbing
+    /// batching (see `docs/OBSERVABILITY.md`).
+    Metrics,
     /// Out-of-band liveness probe: the session front end answers it
     /// directly (clock mode, live sessions, accepted requests) without
     /// flushing a pending batch; a bare core answers a minimal [`pong`].
@@ -165,6 +174,7 @@ pub fn parse_request_rid(line: &str) -> Result<Option<(Request, Option<Json>)>, 
             Request::Query { id: id as usize }
         }
         "snapshot" => Request::Snapshot,
+        "metrics" => Request::Metrics,
         "ping" => Request::Ping,
         "shutdown" => Request::Shutdown,
         other => return Err(format!("unknown op '{other}'")),
@@ -282,6 +292,10 @@ mod tests {
         assert!(matches!(
             parse_request(r#"{"op":"shutdown"}"#).unwrap().unwrap(),
             Request::Shutdown
+        ));
+        assert!(matches!(
+            parse_request(r#"{"op":"metrics"}"#).unwrap().unwrap(),
+            Request::Metrics
         ));
         assert!(matches!(
             parse_request(r#"{"op":"query","id":7}"#).unwrap().unwrap(),

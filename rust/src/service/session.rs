@@ -38,15 +38,20 @@
 //! **Liveness.**  `{"op":"ping"}` is answered out of band by the front
 //! end itself — it never reaches the core and never forces a batch flush
 //! — reporting the clock mode, live session count, and how many requests
-//! have been accepted so far.
+//! have been accepted so far.  `{"op":"metrics"}` is answered out of
+//! band too ([`ServiceCore::metrics`]): reading the observability surface
+//! must never flush a pending batch, so its response may overtake
+//! deferred submit responses.
 
 use crate::service::clock::Clock;
+use crate::service::journal::Journal;
 use crate::service::protocol::{error_response, num, obj, parse_request_rid, s, Request};
 use crate::service::transport::{Connection, Listener};
 use crate::util::json::Json;
 use std::collections::{BTreeMap, VecDeque};
 use std::io::{BufRead, Write};
 use std::sync::mpsc;
+use std::time::Instant;
 
 /// Protocol revision announced in `hello` responses.
 pub const PROTO_VERSION: &str = "jsonl-1";
@@ -71,6 +76,78 @@ pub trait ServiceCore {
     /// a batching core flushes a coalesced batch whose admission window
     /// has expired in real time.  Returns the released response lines.
     fn tick(&mut self, now: f64) -> Vec<Json>;
+
+    /// Render the `metrics` observability response: everything `snapshot`
+    /// reports plus cache counters, queue occupancy, and latency
+    /// histograms.  Like `ping`, it is answered **out of band** by the
+    /// front end — it must never flush a pending batch or release
+    /// deferred responses (which is what lets it skip the response-order
+    /// FIFO).  The default reports only the op, for cores without an
+    /// observability surface.
+    fn metrics(&mut self) -> Json {
+        obj(vec![("ok", Json::Bool(true)), ("op", s("metrics"))])
+    }
+
+    /// The core's event journal when `--journal` is enabled — the front
+    /// end records request traces and session lifecycles through it.
+    /// Cores without a journal (the default) return `None`.
+    fn journal_mut(&mut self) -> Option<&mut Journal> {
+        None
+    }
+
+    /// Record one receipt→response service latency (µs) into the core's
+    /// submit histogram (surfaced by the `metrics` op).  No-op by
+    /// default.
+    fn note_latency(&mut self, _micros: f64) {}
+
+    /// The core's logical clock, used to stamp front-end journal events
+    /// when the session clock is virtual (real time is meaningless in a
+    /// replay).  `0.0` by default.
+    fn logical_now(&self) -> f64 {
+        0.0
+    }
+}
+
+/// Journal one accepted request line verbatim — the request trace that
+/// closes the ROADMAP `--log` item: `{"ev":"request","sid":…,"line":…}`
+/// plus the request's `rid` when it carried one.
+fn journal_request<C: ServiceCore + ?Sized>(
+    core: &mut C,
+    clock: &dyn Clock,
+    sid: u64,
+    rid: &Option<Json>,
+    line: &str,
+) {
+    let t = clock.now().unwrap_or_else(|| core.logical_now());
+    if let Some(j) = core.journal_mut() {
+        let mut fields = vec![
+            ("sid", num(sid as f64)),
+            ("line", Json::Str(line.to_string())),
+        ];
+        if let Some(r) = rid {
+            fields.push(("rid", r.clone()));
+        }
+        j.record("request", t, fields);
+    }
+}
+
+/// Journal a session lifecycle transition (`open` / `close`) and flush,
+/// so a tailing consumer sees session boundaries promptly.
+fn journal_session<C: ServiceCore + ?Sized>(
+    core: &mut C,
+    clock: &dyn Clock,
+    sid: u64,
+    state: &str,
+) {
+    let t = clock.now().unwrap_or_else(|| core.logical_now());
+    if let Some(j) = core.journal_mut() {
+        j.record(
+            "session",
+            t,
+            vec![("sid", num(sid as f64)), ("state", s(state))],
+        );
+        j.flush();
+    }
 }
 
 /// The front end's out-of-band `ping` answer (see the module docs).
@@ -156,6 +233,8 @@ where
     let mut received: u64 = 0;
     let mut line = String::new();
     let mut out_buf = String::new();
+    // the synchronous path serves exactly one client: session id 0
+    journal_session(core, clock, 0, "open");
     loop {
         line.clear();
         let n = reader
@@ -168,7 +247,13 @@ where
         match parse_request_rid(trimmed) {
             Ok(None) => continue,
             Ok(Some((Request::Ping, rid))) => {
+                journal_request(core, clock, 0, &rid, trimmed);
                 let resp = attach_rid(ping_response(clock.name(), 1, received), rid);
+                write_line(&mut writer, &mut out_buf, &resp)?;
+            }
+            Ok(Some((Request::Metrics, rid))) => {
+                journal_request(core, clock, 0, &rid, trimmed);
+                let resp = attach_rid(core.metrics(), rid);
                 write_line(&mut writer, &mut out_buf, &resp)?;
             }
             Ok(Some((mut req, rid))) => {
@@ -176,14 +261,18 @@ where
                 if let Request::Submit(ref mut task, _) = req {
                     task.arrival = clock.stamp(task.arrival);
                 }
+                journal_request(core, clock, 0, &rid, trimmed);
                 pending.push_back(rid);
+                let recv_t = Instant::now();
                 let (resps, stop) = core.serve_request(req);
+                core.note_latency(recv_t.elapsed().as_secs_f64() * 1e6);
                 for r in resps {
                     let rid = pending.pop_front().flatten();
                     write_line(&mut writer, &mut out_buf, &attach_rid(r, rid))?;
                 }
                 if stop {
                     let _ = writer.flush();
+                    journal_session(core, clock, 0, "close");
                     return Ok(true);
                 }
             }
@@ -203,6 +292,7 @@ where
         write_line(&mut writer, &mut out_buf, &attach_rid(r, rid))?;
     }
     let _ = writer.flush();
+    journal_session(core, clock, 0, "close");
     Ok(false)
 }
 
@@ -383,12 +473,19 @@ where
                     }
                 });
                 sessions.insert(sid, sess);
+                journal_session(core, clock, sid, "open");
             }
             Some(Event::Line { sid, line }) => match parse_request_rid(&line) {
                 Ok(None) => {}
                 Ok(Some((Request::Ping, rid))) => {
+                    journal_request(core, clock, sid, &rid, &line);
                     let live = sessions.values().filter(|s| s.open).count();
                     let resp = attach_rid(ping_response(clock.name(), live, received), rid);
+                    send_direct(&mut sessions, sid, &resp);
+                }
+                Ok(Some((Request::Metrics, rid))) => {
+                    journal_request(core, clock, sid, &rid, &line);
+                    let resp = attach_rid(core.metrics(), rid);
                     send_direct(&mut sessions, sid, &resp);
                 }
                 Ok(Some((mut req, rid))) => {
@@ -397,12 +494,15 @@ where
                         task.arrival = clock.stamp(task.arrival);
                         *session_submits.entry(sid).or_insert(0) += 1;
                     }
+                    journal_request(core, clock, sid, &rid, &line);
                     // counters ride only on hello-greeting transports,
                     // whose byte streams already diverge from the classic
                     // daemon — the stdio identity oracle stays intact
                     let overlay = hello && matches!(req, Request::Snapshot | Request::Shutdown);
                     pending.push_back((sid, rid));
+                    let recv_t = Instant::now();
                     let (mut lines, stop) = core.serve_request(req);
+                    core.note_latency(recv_t.elapsed().as_secs_f64() * 1e6);
                     if overlay {
                         // the requesting session's own answer is the last
                         // released line (deferred responses come first)
@@ -424,6 +524,7 @@ where
                 }
             },
             Some(Event::Eof { sid }) => {
+                journal_session(core, clock, sid, "close");
                 // half-close when responses are still owed (they deliver
                 // at the next flush); drop outright when nothing is owed,
                 // so a long-running daemon's session map stays bounded

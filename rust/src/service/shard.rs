@@ -23,7 +23,7 @@
 //!   through the partition's [`ShardView`] offsets, so [`Placement`]s and
 //!   merged snapshots use the same numbering as the unsharded daemon.
 
-use crate::cluster::{Cluster, PairPower, ShardView};
+use crate::cluster::{Cluster, ClusterEvent, PairPower, ShardView};
 use crate::config::ClusterConfig;
 use crate::dvfs::{ScalingInterval, SolveCache};
 use crate::ext::hetero::TypeParams;
@@ -178,6 +178,10 @@ pub struct BatchReply {
     /// energy-greedy sees in-flight turn-on decisions instead of the last
     /// flush's snapshot.
     pub queued: usize,
+    /// Cluster events (power transitions, departures) observed while
+    /// placing the chunk, in global numbering.  Empty unless the
+    /// dispatcher enabled observation ([`ShardJob::EnableObs`]).
+    pub events: Vec<ClusterEvent>,
 }
 
 /// A job queued for a shard worker.
@@ -203,11 +207,17 @@ pub enum ShardJob {
         /// Where to send the fragment.
         reply: Sender<(usize, Snapshot)>,
     },
-    /// Drain every pending event and report the closed-books fragment.
+    /// Drain every pending event and report the closed-books fragment
+    /// plus the cluster events the drain generated (empty unless
+    /// observation is enabled).
     Drain {
         /// Where to send the fragment.
-        reply: Sender<(usize, Snapshot)>,
+        reply: Sender<(usize, Snapshot, Vec<ClusterEvent>)>,
     },
+    /// Enable cluster-event observation on every pool of the shard
+    /// (`--journal`).  A control job — never stolen — queued by the
+    /// dispatcher before any batch, so every placement is observed.
+    EnableObs,
     /// Exit the worker loop (sent once per shard on pool shutdown).
     Stop,
 }
@@ -487,6 +497,28 @@ impl Shard {
         }
     }
 
+    /// Enable cluster-event observation on every pool (idempotent; see
+    /// [`Cluster::enable_obs`]).
+    pub fn enable_obs(&mut self) {
+        for pool in &mut self.pools {
+            pool.cluster.enable_obs();
+        }
+    }
+
+    /// Drain the pools' observation logs, translated to global server and
+    /// pair numbering (empty when observation is disabled).
+    pub fn drain_obs(&mut self) -> Vec<ClusterEvent> {
+        let l = self.view.cfg.pairs_per_server;
+        let mut out = Vec::new();
+        for pool in &mut self.pools {
+            let server_offset = pool.pair_offset / l;
+            for e in pool.cluster.drain_obs() {
+                out.push(e.offset(server_offset, pool.pair_offset));
+            }
+        }
+        out
+    }
+
     /// The widest gang this shard could currently host on GPU type
     /// `type_idx`: the maximum count of non-busy pairs on any single
     /// server of that pool — `l` while the pool still has an off server,
@@ -525,6 +557,9 @@ impl Shard {
             .collect();
         let mut snap = Snapshot::merge(&parts);
         snap.shards = 1; // one shard fragment, however many pools
+        for p in &self.pools {
+            snap.add_cache(&p.cache.borrow());
+        }
         snap
     }
 
@@ -733,6 +768,7 @@ fn worker_loop(
             } => {
                 let placements = shard.place_batch(t, tasks);
                 let load = shard.load();
+                let events = shard.drain_obs();
                 // piggyback the live queue depth so the dispatcher's
                 // routing sees this worker's remaining in-flight work
                 let queued = shared.queues.lock().unwrap()[me].len();
@@ -744,14 +780,18 @@ fn worker_loop(
                     placements,
                     load,
                     queued,
+                    events,
                 });
             }
             ShardJob::Snapshot { now, reply } => {
                 let _ = reply.send((shard.id(), shard.snapshot(now)));
             }
             ShardJob::Drain { reply } => {
-                let _ = reply.send((shard.id(), shard.drain()));
+                let snap = shard.drain();
+                let events = shard.drain_obs();
+                let _ = reply.send((shard.id(), snap, events));
             }
+            ShardJob::EnableObs => shard.enable_obs(),
             ShardJob::Stop => break,
         }
     }

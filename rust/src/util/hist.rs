@@ -1,0 +1,281 @@
+//! Fixed-bucket log-scale histograms for latency and solve-time
+//! distributions: a zero-allocation record path (one `log2` + one array
+//! increment), elementwise merge, and percentile summaries.
+//!
+//! Buckets are geometric: [`PER_OCTAVE`] buckets per power of two, so
+//! every bucket spans a fixed ~19% relative width and the whole range
+//! `2^-32 .. 2^32` (sub-nanosecond to decades, in any one unit) fits in
+//! [`BUCKETS`] fixed slots.  Percentiles are read back as the upper edge
+//! of the bucket where the cumulative count crosses the requested rank,
+//! clamped into the observed `[min, max]` — a deterministic ≤ 19%
+//! overestimate, which is the histogram's stated resolution.
+//!
+//! The service records three of these per core (session receipt→response,
+//! batch-flush, solve time); `bench_service` reports p50/p99/p999 from
+//! the same type instead of sorting a sample vector.
+
+use crate::util::json::{num, obj, Json};
+
+/// Buckets per power of two (relative bucket width `2^(1/4) − 1` ≈ 19%).
+const PER_OCTAVE: usize = 4;
+
+/// Exponent of the lowest bucket edge: values at or below `2^MIN_EXP`
+/// (and all non-positive or non-finite samples) land in bucket 0.
+const MIN_EXP: i32 = -32;
+
+/// Powers of two covered above [`MIN_EXP`]; values beyond the top edge
+/// saturate into the last bucket.
+const OCTAVES: usize = 64;
+
+/// Total fixed bucket count.
+const BUCKETS: usize = PER_OCTAVE * OCTAVES;
+
+/// Bucket index for a sample (clamping non-positive / non-finite input).
+fn bucket_of(v: f64) -> usize {
+    if !(v > 0.0) {
+        return 0;
+    }
+    if !v.is_finite() {
+        return BUCKETS - 1;
+    }
+    let oct = v.log2() - MIN_EXP as f64;
+    if oct <= 0.0 {
+        return 0;
+    }
+    ((oct * PER_OCTAVE as f64) as usize).min(BUCKETS - 1)
+}
+
+/// Upper edge of bucket `i` (`2^(MIN_EXP + (i+1)/PER_OCTAVE)`).
+fn bucket_hi(i: usize) -> f64 {
+    (MIN_EXP as f64 + (i + 1) as f64 / PER_OCTAVE as f64).exp2()
+}
+
+/// A fixed-bucket log-scale histogram.
+///
+/// # Examples
+///
+/// ```
+/// use dvfs_sched::util::hist::Hist;
+///
+/// let mut h = Hist::new();
+/// for v in [1.0, 2.0, 4.0, 1000.0] {
+///     h.record(v);
+/// }
+/// assert_eq!(h.n(), 4);
+/// assert_eq!(h.max(), 1000.0);
+/// let p50 = h.quantile(0.5);
+/// assert!((1.0..=4.0).contains(&p50));
+///
+/// let mut other = Hist::new();
+/// other.record(0.5);
+/// h.merge(&other);
+/// assert_eq!(h.n(), 5);
+/// assert_eq!(h.min(), 0.5);
+/// ```
+#[derive(Clone, Debug)]
+pub struct Hist {
+    counts: Vec<u64>,
+    n: u64,
+    sum: f64,
+    min: f64,
+    max: f64,
+}
+
+impl Default for Hist {
+    fn default() -> Self {
+        Hist::new()
+    }
+}
+
+impl Hist {
+    /// An empty histogram (the bucket array is the only allocation this
+    /// type ever makes — [`Hist::record`] is allocation-free).
+    pub fn new() -> Hist {
+        Hist {
+            counts: vec![0; BUCKETS],
+            n: 0,
+            sum: 0.0,
+            min: f64::INFINITY,
+            max: f64::NEG_INFINITY,
+        }
+    }
+
+    /// Fold one sample in.  Non-finite and negative samples are clamped
+    /// to 0 so the summary stays well-defined on junk input.
+    pub fn record(&mut self, v: f64) {
+        let v = if v.is_finite() && v > 0.0 { v } else { 0.0 };
+        self.counts[bucket_of(v)] += 1;
+        self.n += 1;
+        self.sum += v;
+        self.min = self.min.min(v);
+        self.max = self.max.max(v);
+    }
+
+    /// Merge another histogram in (bucket-wise sum; the result is exactly
+    /// the histogram of the union of both sample streams).
+    pub fn merge(&mut self, other: &Hist) {
+        for (a, b) in self.counts.iter_mut().zip(&other.counts) {
+            *a += b;
+        }
+        self.n += other.n;
+        self.sum += other.sum;
+        self.min = self.min.min(other.min);
+        self.max = self.max.max(other.max);
+    }
+
+    /// Samples recorded.
+    pub fn n(&self) -> u64 {
+        self.n
+    }
+
+    /// Whether no sample has been recorded.
+    pub fn is_empty(&self) -> bool {
+        self.n == 0
+    }
+
+    /// Mean of the recorded samples (0 when empty).
+    pub fn mean(&self) -> f64 {
+        if self.n == 0 {
+            0.0
+        } else {
+            self.sum / self.n as f64
+        }
+    }
+
+    /// Smallest recorded sample (0 when empty).
+    pub fn min(&self) -> f64 {
+        if self.n == 0 {
+            0.0
+        } else {
+            self.min
+        }
+    }
+
+    /// Largest recorded sample (0 when empty).
+    pub fn max(&self) -> f64 {
+        if self.n == 0 {
+            0.0
+        } else {
+            self.max
+        }
+    }
+
+    /// The `q`-quantile (`q` in `[0, 1]`): upper edge of the bucket where
+    /// the cumulative count reaches `ceil(q·n)`, clamped to the observed
+    /// range.  0 when empty.
+    pub fn quantile(&self, q: f64) -> f64 {
+        if self.n == 0 {
+            return 0.0;
+        }
+        let rank = ((q * self.n as f64).ceil() as u64).clamp(1, self.n);
+        let mut cum = 0u64;
+        for (i, &c) in self.counts.iter().enumerate() {
+            cum += c;
+            if cum >= rank {
+                return bucket_hi(i).clamp(self.min, self.max);
+            }
+        }
+        self.max
+    }
+
+    /// The summary object the `metrics` response and journal lines embed:
+    /// `{n, mean, min, max, p50, p99, p999}`.
+    pub fn summary_json(&self) -> Json {
+        obj(vec![
+            ("n", num(self.n as f64)),
+            ("mean", num(self.mean())),
+            ("min", num(self.min())),
+            ("max", num(self.max())),
+            ("p50", num(self.quantile(0.50))),
+            ("p99", num(self.quantile(0.99))),
+            ("p999", num(self.quantile(0.999))),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bucket_boundaries_are_geometric() {
+        // midpoints avoid float knife edges at the exact bucket borders
+        let i1 = bucket_of(1.5);
+        let i2 = bucket_of(3.0); // one octave up -> PER_OCTAVE buckets later
+        assert_eq!(i2 - i1, PER_OCTAVE);
+        // within one bucket's ~19% width the index must not change
+        assert_eq!(bucket_of(1.5), bucket_of(1.5 * 1.18));
+        // monotone in the sample value
+        let mut prev = 0;
+        for k in 0..200 {
+            let v = 1e-3 * 1.21f64.powi(k);
+            let b = bucket_of(v);
+            assert!(b >= prev, "bucket index went backwards at {v}");
+            prev = b;
+        }
+    }
+
+    #[test]
+    fn bucket_clamps_junk_and_extremes() {
+        assert_eq!(bucket_of(0.0), 0);
+        assert_eq!(bucket_of(-5.0), 0);
+        assert_eq!(bucket_of(f64::NAN), 0);
+        assert_eq!(bucket_of(1e-300), 0);
+        assert_eq!(bucket_of(f64::INFINITY), BUCKETS - 1);
+        assert_eq!(bucket_of(1e300), BUCKETS - 1);
+    }
+
+    #[test]
+    fn quantiles_bracket_the_true_percentile() {
+        let mut h = Hist::new();
+        let xs: Vec<f64> = (1..=1000).map(|i| i as f64).collect();
+        for &x in &xs {
+            h.record(x);
+        }
+        // upper-edge read-back: within one bucket width above the truth
+        for (q, truth) in [(0.5, 500.0), (0.99, 990.0), (0.999, 999.0)] {
+            let est = h.quantile(q);
+            assert!(est >= truth * 0.99, "q{q}: {est} under {truth}");
+            assert!(est <= truth * 1.20, "q{q}: {est} over bucket width");
+        }
+        assert_eq!(h.quantile(0.0), 1.0);
+        assert_eq!(h.quantile(1.0), 1000.0);
+        assert!((h.mean() - 500.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn merge_equals_union_recording() {
+        let mut a = Hist::new();
+        let mut b = Hist::new();
+        let mut u = Hist::new();
+        for i in 0..500 {
+            let x = 0.37 * (i as f64 + 1.0);
+            let y = 40.0 * (i as f64 + 1.0);
+            a.record(x);
+            b.record(y);
+            u.record(x);
+            u.record(y);
+        }
+        a.merge(&b);
+        assert_eq!(a.n(), u.n());
+        assert_eq!(a.counts, u.counts);
+        assert_eq!(a.min(), u.min());
+        assert_eq!(a.max(), u.max());
+        for q in [0.1, 0.5, 0.9, 0.99, 0.999] {
+            assert_eq!(a.quantile(q), u.quantile(q));
+        }
+    }
+
+    #[test]
+    fn empty_histogram_summarizes_to_zeros() {
+        let h = Hist::new();
+        assert!(h.is_empty());
+        assert_eq!(h.quantile(0.5), 0.0);
+        assert_eq!(h.mean(), 0.0);
+        assert_eq!(h.min(), 0.0);
+        assert_eq!(h.max(), 0.0);
+        let j = h.summary_json();
+        assert_eq!(j.get("n").unwrap().as_f64(), Some(0.0));
+        assert_eq!(j.get("p999").unwrap().as_f64(), Some(0.0));
+    }
+}

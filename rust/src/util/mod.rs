@@ -6,6 +6,7 @@
 //! are implemented here.
 
 pub mod bench;
+pub mod hist;
 pub mod json;
 pub mod ord;
 pub mod parallel;
@@ -14,6 +15,7 @@ pub mod rng;
 pub mod stats;
 pub mod table;
 
+pub use hist::Hist;
 pub use ord::OrdF64;
 pub use parallel::parallel_map;
 pub use rng::Rng;

@@ -1,0 +1,304 @@
+//! Integration tests for the observability layer: the journal must be
+//! strictly observational (enabling it cannot change a single response
+//! byte, on either service flavor), deterministic under the virtual
+//! clock (two identical replays produce identical journals), and
+//! well-formed (every line parses, round-trips through the JSON
+//! renderer, and covers the documented event kinds).  The `metrics`
+//! request must work with instrumentation both on and off.
+
+use dvfs_sched::config::SimConfig;
+use dvfs_sched::ext::trace::task_to_json;
+use dvfs_sched::runtime::Solver;
+use dvfs_sched::service::{Journal, RoutePolicy, Service, ShardedService};
+use dvfs_sched::sim::online::OnlinePolicyKind;
+use dvfs_sched::tasks::LIBRARY;
+use dvfs_sched::util::json::{obj, Json};
+use dvfs_sched::util::proptest::{check, Config};
+use dvfs_sched::util::Rng;
+use dvfs_sched::Task;
+use std::io::Write;
+use std::sync::{Arc, Mutex};
+
+fn small_cfg() -> SimConfig {
+    let mut cfg = SimConfig::default();
+    cfg.cluster.total_pairs = 32;
+    cfg.cluster.pairs_per_server = 2;
+    cfg.theta = 0.9;
+    cfg
+}
+
+/// A journal sink the test can read back after the service is dropped.
+#[derive(Clone, Default)]
+struct SharedBuf(Arc<Mutex<Vec<u8>>>);
+
+impl SharedBuf {
+    fn contents(&self) -> String {
+        String::from_utf8(self.0.lock().unwrap().clone()).unwrap()
+    }
+}
+
+impl Write for SharedBuf {
+    fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
+        self.0.lock().unwrap().extend_from_slice(buf);
+        Ok(buf.len())
+    }
+    fn flush(&mut self) -> std::io::Result<()> {
+        Ok(())
+    }
+}
+
+/// A protocol session exercising every request kind whose response is
+/// deterministic: feasible + infeasible submits, queries, snapshots,
+/// ping, and a final shutdown.  (`metrics` responses embed wall-clock
+/// histograms, so they are exercised separately, not byte-compared.)
+fn session_text(seed: u64, n: usize) -> String {
+    let mut rng = Rng::new(seed);
+    let mut out = String::new();
+    let mut now = 0.0;
+    for id in 0..n {
+        now += rng.uniform(0.0, 3.0);
+        let app = rng.index(LIBRARY.len());
+        let model = LIBRARY[app].model.scaled(rng.int_range(5, 30) as f64);
+        let u = rng.open01().max(0.05);
+        let mut deadline = now + model.t_star() / u;
+        if rng.f64() < 0.2 {
+            // below the analytical floor: a deterministic reject
+            deadline = now + model.t_min(&SimConfig::default().interval) * 0.3;
+        }
+        let task = Task {
+            id,
+            app,
+            model,
+            arrival: now,
+            deadline,
+            u,
+        };
+        out.push_str(
+            &obj(vec![
+                ("op", Json::Str("submit".into())),
+                ("task", task_to_json(&task)),
+            ])
+            .render_compact(),
+        );
+        out.push('\n');
+        if id % 7 == 3 {
+            out.push_str(&format!("{{\"op\":\"query\",\"id\":{id}}}\n"));
+        }
+        if id % 11 == 5 {
+            out.push_str("{\"op\":\"snapshot\"}\n");
+        }
+    }
+    out.push_str("{\"op\":\"ping\"}\n{\"op\":\"shutdown\"}\n");
+    out
+}
+
+/// Serve `session` through the unsharded daemon, optionally journaled,
+/// and return the raw response bytes.
+fn run_daemon(session: &str, journal: Option<Journal>) -> Vec<u8> {
+    let cfg = small_cfg();
+    let solver = Solver::native();
+    let mut svc = Service::new(&cfg, OnlinePolicyKind::Edl, true, &solver);
+    svc.set_obs(journal, None);
+    let mut out = Vec::new();
+    assert!(svc.serve(session.as_bytes(), &mut out).unwrap());
+    out
+}
+
+/// Serve `session` through the sharded service (2 shards, 1-slot
+/// window, stealing off so chunk executors are deterministic),
+/// optionally journaled, and return the raw response bytes.
+fn run_sharded(session: &str, journal: Option<Journal>) -> Vec<u8> {
+    let cfg = small_cfg();
+    let mut svc = ShardedService::new(
+        &cfg,
+        OnlinePolicyKind::Edl,
+        true,
+        2,
+        RoutePolicy::LeastLoaded,
+        1.0,
+        false,
+    )
+    .unwrap();
+    svc.set_obs(journal, None);
+    let mut out = Vec::new();
+    assert!(svc.serve(session.as_bytes(), &mut out).unwrap());
+    out
+}
+
+#[test]
+fn prop_journaling_never_changes_a_response_byte() {
+    // The tentpole's safety contract: --journal is strictly
+    // observational.  The full response stream — submits, queries,
+    // snapshots, the drained books — must be BYTE-identical with the
+    // journal on and off, on both service flavors.
+    check(
+        "journaled run == plain run",
+        Config {
+            iters: 6,
+            ..Default::default()
+        },
+        |rng| rng.next_u64(),
+        |&seed| {
+            let session = session_text(seed, 30);
+            let plain = run_daemon(&session, None);
+            let journaled = run_daemon(&session, Some(Journal::to_writer(std::io::sink())));
+            if plain != journaled {
+                return Err("daemon responses diverged under --journal".into());
+            }
+            let plain = run_sharded(&session, None);
+            let journaled = run_sharded(&session, Some(Journal::to_writer(std::io::sink())));
+            if plain != journaled {
+                return Err("sharded responses diverged under --journal".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn journal_replays_are_deterministic_and_well_formed() {
+    // Two identical replays on the virtual clock must write identical
+    // journals (the fitting/recovery substrate), every line must parse
+    // and round-trip through the sorted-key renderer, and the stream
+    // must cover the documented event kinds.
+    let session = session_text(42, 40);
+    let mut journals = Vec::new();
+    for _ in 0..2 {
+        let buf = SharedBuf::default();
+        let _ = run_daemon(&session, Some(Journal::to_writer(buf.clone())));
+        journals.push(buf.contents());
+    }
+    assert_eq!(journals[0], journals[1], "daemon journal must be deterministic");
+    let mut sharded_journals = Vec::new();
+    for _ in 0..2 {
+        let buf = SharedBuf::default();
+        let _ = run_sharded(&session, Some(Journal::to_writer(buf.clone())));
+        sharded_journals.push(buf.contents());
+    }
+    assert_eq!(
+        sharded_journals[0], sharded_journals[1],
+        "sharded journal must be deterministic"
+    );
+
+    for (flavor, text) in [("daemon", &journals[0]), ("sharded", &sharded_journals[0])] {
+        let mut kinds = std::collections::BTreeSet::new();
+        for line in text.lines() {
+            let j = Json::parse(line)
+                .unwrap_or_else(|e| panic!("{flavor} journal line '{line}': {e}"));
+            assert_eq!(
+                j.render_compact(),
+                line,
+                "{flavor} journal lines are rendered sorted-key compact"
+            );
+            let ev = j.get("ev").and_then(Json::as_str).expect("ev field").to_string();
+            assert!(j.get("t").and_then(Json::as_f64).is_some(), "t field on {ev}");
+            kinds.insert(ev);
+        }
+        for required in ["session", "request", "admit", "place", "power", "depart"] {
+            assert!(
+                kinds.contains(required),
+                "{flavor} journal is missing event kind '{required}' (got {kinds:?})"
+            );
+        }
+    }
+    // the sharded journal additionally stamps flush boundaries
+    assert!(
+        sharded_journals[0].lines().any(|l| l.contains("\"ev\":\"flush\"")),
+        "sharded journal records flush events"
+    );
+}
+
+#[test]
+fn metrics_request_works_with_and_without_instrumentation() {
+    // `metrics` is part of the protocol whether or not a journal is
+    // attached, on both flavors, and carries the counter families the
+    // snapshot deliberately omits.
+    let session = session_text(7, 20);
+    for journaled in [false, true] {
+        let journal = journaled.then(|| Journal::to_writer(std::io::sink()));
+        let cfg = small_cfg();
+        let solver = Solver::native();
+        let mut svc = Service::new(&cfg, OnlinePolicyKind::Edl, true, &solver);
+        svc.set_obs(journal, None);
+        let mut out = Vec::new();
+        let with_metrics = format!("{{\"op\":\"metrics\"}}\n{session}");
+        assert!(svc.serve(with_metrics.as_bytes(), &mut out).unwrap());
+        let first = String::from_utf8(out).unwrap();
+        let first = first.lines().next().expect("metrics response");
+        let j = Json::parse(first).unwrap();
+        assert_eq!(j.get("op").and_then(Json::as_str), Some("metrics"));
+        assert_eq!(j.get("ok"), Some(&Json::Bool(true)));
+        for key in [
+            "cache_hits",
+            "cache_misses",
+            "cache_planes",
+            "cache_epoch_flushes",
+            "queued_by_type",
+            "hist_submit_us",
+            "hist_solve_us",
+            "hist_flush_us",
+        ] {
+            assert!(j.get(key).is_some(), "metrics response carries {key}");
+        }
+        // the frozen snapshot schema must NOT grow these keys
+        let snap = svc.snapshot_json("snapshot");
+        assert!(snap.get("cache_hits").is_none());
+        assert!(snap.get("queued_by_type").is_none());
+    }
+
+    // sharded flavor: metrics is answered out of band, so it may be
+    // served while submits are still coalesced — and must report them
+    let cfg = small_cfg();
+    let mut svc = ShardedService::new(
+        &cfg,
+        OnlinePolicyKind::Edl,
+        true,
+        2,
+        RoutePolicy::LeastLoaded,
+        1.0,
+        false,
+    )
+    .unwrap();
+    let m = svc.metrics_json();
+    assert_eq!(m.get("op").and_then(Json::as_str), Some("metrics"));
+    assert!(m.get("pending_batch").is_some());
+    assert!(m.get("shard_queue_depth").is_some());
+    assert!(m.get("route").is_some());
+}
+
+#[test]
+fn journal_records_request_trace_with_rids() {
+    // Satellite: the journal doubles as the long-open session request
+    // trace — every inbound line is recorded verbatim with its sid, and
+    // tagged rids are carried through.
+    let cfg = small_cfg();
+    let solver = Solver::native();
+    let mut svc = Service::new(&cfg, OnlinePolicyKind::Edl, true, &solver);
+    let buf = SharedBuf::default();
+    svc.set_obs(Some(Journal::to_writer(buf.clone())), None);
+    let session = "{\"op\":\"ping\",\"rid\":\"r-1\"}\n{\"op\":\"shutdown\",\"rid\":7}\n";
+    let mut out = Vec::new();
+    assert!(svc.serve(session.as_bytes(), &mut out).unwrap());
+    let text = buf.contents();
+    let requests: Vec<Json> = text
+        .lines()
+        .map(|l| Json::parse(l).unwrap())
+        .filter(|j| j.get("ev").and_then(Json::as_str) == Some("request"))
+        .collect();
+    assert_eq!(requests.len(), 2, "both request lines journaled: {text}");
+    assert_eq!(
+        requests[0].get("line").and_then(Json::as_str),
+        Some("{\"op\":\"ping\",\"rid\":\"r-1\"}"),
+        "the raw request line is recorded verbatim"
+    );
+    assert_eq!(
+        requests[0].get("rid").and_then(Json::as_str),
+        Some("r-1"),
+        "string rid carried through"
+    );
+    assert_eq!(requests[1].get("rid").and_then(Json::as_f64), Some(7.0));
+    assert!(
+        text.lines().any(|l| l.contains("\"ev\":\"session\"")),
+        "session open/close events recorded"
+    );
+}

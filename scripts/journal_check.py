@@ -1,0 +1,157 @@
+#!/usr/bin/env python3
+"""Validate a `repro serve --journal` event journal (JSONL).
+
+Checks, stdlib only (CI has no extra deps):
+
+  * every line parses as a JSON object with an `ev` kind and a numeric
+    `t` stamp;
+  * every event kind carries its documented required fields (see
+    docs/OBSERVABILITY.md) with the right JSON types;
+  * `t` is finite and non-negative;
+  * the journal covers at least `--min-kinds` distinct event kinds
+    (the CI smoke gate: a journaled round that only produced one or two
+    kinds means the instrumentation hooks regressed).
+
+Exit status: 0 clean, 1 validation failure, 2 usage/IO error.
+
+Usage:
+    python3 scripts/journal_check.py JOURNAL.jsonl [--min-kinds N]
+        [--expect-kind EV ...] [--quiet]
+"""
+
+import argparse
+import json
+import math
+import sys
+
+# ev -> {field: allowed JSON types}; `t` and `ev` are checked globally.
+# Fields beyond the required set are allowed (the schema is additive).
+SCHEMAS = {
+    "session": {"sid": (int, float), "state": (str,)},
+    "request": {"sid": (int, float), "line": (str,)},
+    "admit": {"id": (int, float), "ok": (bool,), "reason": (str,)},
+    "place": {
+        "id": (int, float),
+        "pair": (int, float),
+        "start": (int, float),
+        "mu": (int, float),
+    },
+    "power": {"server": (int, float), "to": (str,)},
+    "depart": {
+        "pair": (int, float),
+        "dur": (int, float),
+        "e": (int, float),
+    },
+    "flush": {"n": (int, float), "admitted": (int, float)},
+    "steal": {
+        "from": (int, float),
+        "to": (int, float),
+        "tasks": (int, float),
+    },
+    "metrics": {"admitted": (int, float), "cache_hits": (int, float)},
+}
+
+
+def check_line(lineno, raw, errors):
+    """Validate one journal line; returns its event kind or None."""
+    try:
+        obj = json.loads(raw)
+    except json.JSONDecodeError as e:
+        errors.append(f"line {lineno}: not JSON ({e})")
+        return None
+    if not isinstance(obj, dict):
+        errors.append(f"line {lineno}: not a JSON object")
+        return None
+    ev = obj.get("ev")
+    if not isinstance(ev, str) or not ev:
+        errors.append(f"line {lineno}: missing/empty 'ev'")
+        return None
+    t = obj.get("t")
+    if isinstance(t, bool) or not isinstance(t, (int, float)):
+        errors.append(f"line {lineno} ({ev}): missing numeric 't'")
+        return ev
+    if not math.isfinite(t) or t < 0:
+        errors.append(f"line {lineno} ({ev}): bad stamp t={t}")
+        return ev
+    schema = SCHEMAS.get(ev)
+    if schema is None:
+        errors.append(f"line {lineno}: unknown event kind '{ev}'")
+        return ev
+    for field, types in schema.items():
+        v = obj.get(field)
+        if v is None:
+            errors.append(f"line {lineno} ({ev}): missing '{field}'")
+        elif isinstance(v, bool) and bool not in types:
+            errors.append(f"line {lineno} ({ev}): '{field}' must not be bool")
+        elif not isinstance(v, types):
+            errors.append(
+                f"line {lineno} ({ev}): '{field}' has type "
+                f"{type(v).__name__}"
+            )
+    return ev
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("journal", help="journal file (JSONL)")
+    ap.add_argument(
+        "--min-kinds",
+        type=int,
+        default=0,
+        help="require at least N distinct event kinds",
+    )
+    ap.add_argument(
+        "--expect-kind",
+        action="append",
+        default=[],
+        metavar="EV",
+        help="require this event kind to appear (repeatable)",
+    )
+    ap.add_argument("--quiet", action="store_true", help="only print failures")
+    args = ap.parse_args()
+
+    try:
+        with open(args.journal, encoding="utf-8") as fh:
+            lines = fh.read().splitlines()
+    except OSError as e:
+        print(f"error: {e}", file=sys.stderr)
+        return 2
+
+    errors = []
+    counts = {}
+    for lineno, raw in enumerate(lines, start=1):
+        if not raw.strip():
+            continue
+        ev = check_line(lineno, raw, errors)
+        if ev is not None:
+            counts[ev] = counts.get(ev, 0) + 1
+
+    if not counts:
+        errors.append("journal is empty")
+    if args.min_kinds and len(counts) < args.min_kinds:
+        errors.append(
+            f"only {len(counts)} distinct event kind(s) "
+            f"({', '.join(sorted(counts))}); need {args.min_kinds}"
+        )
+    for kind in args.expect_kind:
+        if kind not in counts:
+            errors.append(f"expected event kind '{kind}' never appeared")
+
+    if not args.quiet:
+        total = sum(counts.values())
+        print(f"{args.journal}: {total} event(s), {len(counts)} kind(s)")
+        for ev in sorted(counts):
+            print(f"  {ev:>8}: {counts[ev]}")
+    if errors:
+        for e in errors[:25]:
+            print(f"FAIL: {e}", file=sys.stderr)
+        if len(errors) > 25:
+            print(f"FAIL: ... and {len(errors) - 25} more", file=sys.stderr)
+        return 1
+    if not args.quiet:
+        print("journal OK")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
