@@ -239,12 +239,16 @@ pub struct ObsOpts {
     /// Emit a `metrics` journal line every this many clock slots
     /// (requires `--journal`).
     pub metrics_every: Option<f64>,
+    /// fsync the journal after every line (requires `--journal`); makes
+    /// the journal crash-durable against power loss, not just `kill -9`.
+    pub journal_sync: bool,
 }
 
 /// Decode the observability flags shared by `serve` and `replay`.
 pub fn parse_obs_opts(args: &Args) -> Result<ObsOpts, String> {
     let journal = args.opt_str("journal");
     let metrics_every = args.opt_f64("metrics-every")?;
+    let journal_sync = args.flag("journal-sync");
     if let Some(e) = metrics_every {
         if !(e.is_finite() && e > 0.0) {
             return Err(format!("--metrics-every must be positive, got {e}"));
@@ -253,10 +257,44 @@ pub fn parse_obs_opts(args: &Args) -> Result<ObsOpts, String> {
             return Err("--metrics-every requires --journal".into());
         }
     }
+    if journal_sync && journal.is_none() {
+        return Err("--journal-sync requires --journal".into());
+    }
     Ok(ObsOpts {
         journal,
         metrics_every,
+        journal_sync,
     })
+}
+
+/// Parse `--fail-at slot:server[,slot:server...]` into `(slot, server)`
+/// pairs for replay-side fault injection (see
+/// [`crate::service::inject_failures`]).
+pub fn parse_fail_at(spec: &str) -> Result<Vec<(f64, usize)>, String> {
+    let mut out = Vec::new();
+    for part in spec.split(',') {
+        let part = part.trim();
+        if part.is_empty() {
+            continue;
+        }
+        let (slot, server) = part
+            .split_once(':')
+            .ok_or_else(|| format!("--fail-at expects slot:server, got '{part}'"))?;
+        let slot: f64 = slot
+            .parse()
+            .map_err(|_| format!("--fail-at slot must be a number, got '{slot}'"))?;
+        if !(slot.is_finite() && slot >= 0.0) {
+            return Err(format!("--fail-at slot must be >= 0, got {slot}"));
+        }
+        let server: usize = server
+            .parse()
+            .map_err(|_| format!("--fail-at server must be an integer, got '{server}'"))?;
+        out.push((slot, server));
+    }
+    if out.is_empty() {
+        return Err("--fail-at expects at least one slot:server pair".into());
+    }
+    Ok(out)
 }
 
 /// Apply the common overrides (--reps/--seed/--theta/--l/--interval/
@@ -432,6 +470,27 @@ mod tests {
         assert!(parse_obs_opts(&c).is_err());
         let d = Args::parse(&argv("serve --journal j --metrics-every 0")).unwrap();
         assert!(parse_obs_opts(&d).is_err());
+        // --journal-sync piggybacks on the journal path
+        let e = Args::parse(&argv("serve --journal j.jsonl --journal-sync")).unwrap();
+        let o = parse_obs_opts(&e).unwrap();
+        assert!(o.journal_sync);
+        e.finish().unwrap();
+        let f = Args::parse(&argv("serve --journal-sync")).unwrap();
+        assert!(parse_obs_opts(&f).is_err());
+    }
+
+    #[test]
+    fn fail_at_spec_parses() {
+        assert_eq!(parse_fail_at("2:1").unwrap(), vec![(2.0, 1)]);
+        assert_eq!(
+            parse_fail_at("5.5:0, 3:2").unwrap(),
+            vec![(5.5, 0), (3.0, 2)]
+        );
+        assert!(parse_fail_at("").is_err());
+        assert!(parse_fail_at("5").is_err());
+        assert!(parse_fail_at("x:1").is_err());
+        assert!(parse_fail_at("1:y").is_err());
+        assert!(parse_fail_at("-1:0").is_err());
     }
 
     #[test]

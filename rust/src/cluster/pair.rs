@@ -98,6 +98,17 @@ impl Pair {
         self.power = PairPower::Off;
     }
 
+    /// Power the pair off at `now` unconditionally (pair/server failure).
+    /// Unlike [`Pair::turn_off`] this is legal on a Busy pair: its queued
+    /// work is dropped — the cluster settles the energy ledger — and
+    /// `busy_until` collapses to `now` so stale departure-heap entries
+    /// self-discard.  An Idle pair closes its idle stretch first.
+    pub fn fail(&mut self, now: f64) {
+        self.settle_idle(now);
+        self.power = PairPower::Off;
+        self.busy_until = now;
+    }
+
     /// How long the pair has been continuously idle at `now`.
     pub fn idle_span(&self, now: f64) -> f64 {
         match self.power {
@@ -147,6 +158,23 @@ mod tests {
         assert!((p.idle_span(9.0) - 4.0).abs() < 1e-12);
         p.assign(9.0, 1.0);
         assert_eq!(p.idle_span(9.5), 0.0);
+    }
+
+    #[test]
+    fn fail_drops_a_busy_pair_without_idle_accrual() {
+        let mut p = Pair::new(0, 0);
+        p.turn_on(0.0);
+        p.assign(0.0, 10.0);
+        p.fail(4.0);
+        assert_eq!(p.power, PairPower::Off);
+        assert_eq!(p.busy_until, 4.0, "queue collapses to the fail time");
+        assert_eq!(p.idle_time, 0.0, "busy pair accrues no idle on failure");
+        // an idle pair closes its stretch, like turn_off
+        let mut q = Pair::new(0, 1);
+        q.turn_on(0.0);
+        q.fail(3.0);
+        assert!((q.idle_time - 3.0).abs() < 1e-12);
+        assert_eq!(q.power, PairPower::Off);
     }
 
     #[test]

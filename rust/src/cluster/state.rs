@@ -285,6 +285,20 @@ pub struct Cluster {
     /// Enable with [`Cluster::enable_obs`], drain with
     /// [`Cluster::drain_obs`].
     pub obs: Option<ObsLog>,
+    /// Per-pair failure markers (fault injection): a failed pair never
+    /// hosts work again and is excluded from every placement index.
+    failed: Vec<bool>,
+    /// Servers whose pairs have ALL failed.  Such a server is dropped
+    /// from `off_servers` and never re-opened.
+    failed_servers: Vec<bool>,
+    /// Whether any pair has failed — guards the failure-aware branches so
+    /// the healthy hot path stays exactly as cheap as before.
+    any_failed: bool,
+    /// Per-pair open segments of queued work as (start, dur, per-replica
+    /// power): pushed on assign, cleared when the pair's queue drains.
+    /// [`Cluster::fail_pair`] settles E_run from these — realized
+    /// portions stay booked, unrealized remainders are refunded.
+    segments: Vec<Vec<(f64, f64, f64)>>,
 }
 
 impl Cluster {
@@ -292,7 +306,8 @@ impl Cluster {
     pub fn new(cfg: ClusterConfig) -> Cluster {
         let l = cfg.pairs_per_server;
         let n_servers = cfg.num_servers();
-        let mut pairs = Vec::with_capacity(cfg.total_pairs);
+        let cfg_pairs = cfg.total_pairs;
+        let mut pairs = Vec::with_capacity(cfg_pairs);
         for s in 0..n_servers {
             for k in 0..l {
                 pairs.push(Pair::new(s, k));
@@ -315,6 +330,10 @@ impl Cluster {
             free_pairs: vec![0; n_servers],
             free_by_count: vec![std::collections::BTreeSet::new(); l + 1],
             obs: None,
+            failed: vec![false; cfg_pairs],
+            failed_servers: vec![false; n_servers],
+            any_failed: false,
+            segments: vec![Vec::new(); cfg_pairs],
         }
     }
 
@@ -350,6 +369,20 @@ impl Cluster {
         self.off_servers.iter().next().copied()
     }
 
+    /// Lowest-indexed powered-off server with at least `g` live pairs.
+    /// Fault-free this is exactly [`Cluster::first_off_server`] (every off
+    /// server offers all `l` pairs); under failures, partially-failed off
+    /// servers too narrow for a `g`-wide gang are skipped.
+    pub fn first_off_server_with_live(&self, g: usize) -> Option<usize> {
+        if !self.any_failed {
+            return if g <= self.l() { self.first_off_server() } else { None };
+        }
+        self.off_servers
+            .iter()
+            .copied()
+            .find(|&s| self.server_pairs(s).filter(|&i| !self.failed[i]).count() >= g)
+    }
+
     /// Lowest-indexed powered-on server with at least `g` idle pairs —
     /// the gang fast path: such a server admits a `g`-wide common start
     /// at the current time, which no other server can beat.
@@ -369,12 +402,37 @@ impl Cluster {
     /// work-stealing gang-headroom guard reads this in O(l·log n) instead
     /// of scanning every pair.
     pub fn max_free_pairs(&self) -> usize {
-        if !self.off_servers.is_empty() {
+        if !self.off_servers.is_empty() && !self.any_failed {
+            // an untouched off server can host a full-width gang
             return self.l();
         }
-        (0..self.free_by_count.len())
+        let best_on = (0..self.free_by_count.len())
             .rev()
             .find(|&c| !self.free_by_count[c].is_empty())
+            .unwrap_or(0);
+        if self.off_servers.is_empty() {
+            return best_on;
+        }
+        // under failures an off server only offers its live pairs
+        let best_off = self
+            .off_servers
+            .iter()
+            .map(|&s| self.server_pairs(s).filter(|&i| !self.failed[i]).count())
+            .max()
+            .unwrap_or(0);
+        best_on.max(best_off)
+    }
+
+    /// The largest count of live (non-failed) pairs on any single server
+    /// — the effective co-location bound gang admission checks under
+    /// failures.  Exactly [`Cluster::l`] while the cluster is healthy.
+    pub fn widest_live_server(&self) -> usize {
+        if !self.any_failed {
+            return self.l();
+        }
+        (0..self.server_on.len())
+            .map(|s| self.server_pairs(s).filter(|&i| !self.failed[i]).count())
+            .max()
             .unwrap_or(0)
     }
 
@@ -389,18 +447,26 @@ impl Cluster {
         s * l..(s + 1) * l
     }
 
-    /// Turn a server on at `now`: all its pairs go Idle, ω += l.
+    /// Turn a server on at `now`: all its live pairs go Idle, ω += the
+    /// count turned on (= `l` unless pairs of the server have failed —
+    /// failed pairs stay off and out of every index).
     pub fn turn_on_server(&mut self, s: usize, now: f64) {
         assert!(!self.server_on[s], "server {s} already on");
+        debug_assert!(!self.failed_servers[s], "turning on a failed server");
         self.server_on[s] = true;
-        self.turn_ons += self.l() as u64;
+        let mut live = 0usize;
         for i in self.server_pairs(s) {
+            if self.any_failed && self.failed[i] {
+                continue;
+            }
             self.pairs[i].turn_on(now);
             self.idle_pairs.insert(i);
+            live += 1;
         }
+        self.turn_ons += live as u64;
         self.off_servers.remove(&s);
-        self.free_pairs[s] = self.l();
-        self.free_by_count[self.l()].insert(s);
+        self.free_pairs[s] = live;
+        self.free_by_count[live].insert(s);
         if let Some(o) = self.obs.as_mut() {
             o.events.push(ClusterEvent::PowerOn { server: s, t: now });
         }
@@ -443,6 +509,7 @@ impl Cluster {
         self.last_assign = Some((i, start, mu));
         self.assign_log.push((i, start, mu));
         self.e_run += p * dur;
+        self.segments[i].push((start, dur, p));
         if let Some(o) = self.obs.as_mut() {
             o.note_assign(i, dur, p * dur);
         }
@@ -483,6 +550,7 @@ impl Cluster {
             }
             self.idle_pairs.remove(&i);
             self.departures.push(Reverse((OrdF64(mu), i)));
+            self.segments[i].push((start, dur, p));
             if let Some(o) = self.obs.as_mut() {
                 o.note_assign(i, dur, p * dur);
             }
@@ -528,9 +596,14 @@ impl Cluster {
             }
             let all_idle_long = self
                 .server_pairs(s)
-                .all(|i| match self.pairs[i].power {
-                    PairPower::Idle => self.pairs[i].idle_span(now) >= rho - 1e-9,
-                    _ => false,
+                .all(|i| {
+                    // failed pairs are permanently off: they must not
+                    // block DRS from reclaiming the server's live pairs
+                    self.failed[i]
+                        || match self.pairs[i].power {
+                            PairPower::Idle => self.pairs[i].idle_span(now) >= rho - 1e-9,
+                            _ => false,
+                        }
                 });
             if all_idle_long {
                 self.turn_off_server(s, now);
@@ -559,6 +632,7 @@ impl Cluster {
                 let server = p.server;
                 self.set_free_count(server, self.free_pairs[server] + 1);
                 self.idle_pairs.insert(i);
+                self.segments[i].clear();
                 if let Some(o) = self.obs.as_mut() {
                     o.note_depart(i, mu);
                 }
@@ -657,6 +731,91 @@ impl Cluster {
     /// Pairs ever used.
     pub fn pairs_used(&self) -> usize {
         self.pairs.iter().filter(|p| p.tasks_run > 0).count()
+    }
+
+    /// Whether pair `i` has failed (fault injection).
+    pub fn pair_failed(&self, i: usize) -> bool {
+        self.failed[i]
+    }
+
+    /// Whether every pair of server `s` has failed.
+    pub fn server_failed(&self, s: usize) -> bool {
+        self.failed_servers[s]
+    }
+
+    /// Whether any pair has failed at all (cheap guard for
+    /// failure-aware slow paths).
+    pub fn any_failed(&self) -> bool {
+        self.any_failed
+    }
+
+    /// Pairs that have not failed.
+    pub fn live_pairs(&self) -> usize {
+        self.pairs.len() - self.failed.iter().filter(|&&f| f).count()
+    }
+
+    /// Powered-off servers that could still be opened (excludes servers
+    /// whose pairs have all failed).  Fault-free this equals the plain
+    /// off-server count.
+    pub fn servers_off_live(&self) -> usize {
+        self.off_servers.len()
+    }
+
+    /// Fail pair `i` at `now` (fault injection): the pair powers off
+    /// unconditionally, any queued work is dropped with its unrealized
+    /// energy refunded from E_run (the realized portion up to `now`
+    /// stays booked — the physics of a task killed mid-flight), and the
+    /// pair leaves every placement index for good.  When this was the
+    /// server's last live pair the whole server is marked failed and
+    /// removed from the off-server index.  Returns `false` when the pair
+    /// had already failed (idempotent).
+    ///
+    /// Deadline-violation and `tasks_run` counters are intentionally NOT
+    /// rolled back: they describe scheduling decisions that were made,
+    /// not work that completed.  Callers (the service layer) track
+    /// evicted/migrated tasks themselves.
+    pub fn fail_pair(&mut self, i: usize, now: f64) -> bool {
+        if self.failed[i] {
+            return false;
+        }
+        let s = self.pairs[i].server;
+        // refund the unrealized remainder of every open segment
+        for &(start, dur, p) in &self.segments[i] {
+            if start + dur > now + 1e-9 {
+                let realized = (now - start).clamp(0.0, dur);
+                self.e_run -= p * (dur - realized);
+            }
+        }
+        self.segments[i].clear();
+        if self.pairs[i].power == PairPower::Idle {
+            self.idle_pairs.remove(&i);
+            self.set_free_count(s, self.free_pairs[s] - 1);
+        }
+        self.pairs[i].fail(now);
+        self.failed[i] = true;
+        self.any_failed = true;
+        if self.server_pairs(s).all(|j| self.failed[j]) {
+            self.failed_servers[s] = true;
+            if self.server_on[s] {
+                self.server_on[s] = false;
+                self.free_by_count[self.free_pairs[s]].remove(&s);
+                self.free_pairs[s] = 0;
+                if let Some(o) = self.obs.as_mut() {
+                    o.events.push(ClusterEvent::PowerOff { server: s, t: now });
+                }
+            } else {
+                self.off_servers.remove(&s);
+            }
+        }
+        true
+    }
+
+    /// Fail every pair of server `s` at `now` ([`Cluster::fail_pair`] per
+    /// pair).  Returns the pairs that newly failed.
+    pub fn fail_server(&mut self, s: usize, now: f64) -> Vec<usize> {
+        self.server_pairs(s)
+            .filter(|&i| self.fail_pair(i, now))
+            .collect()
     }
 }
 
@@ -931,6 +1090,107 @@ mod tests {
         assert_eq!(plain.e_run, c.e_run);
         assert_eq!(plain.turn_ons, c.turn_ons);
         assert!((plain.e_idle() - c.e_idle()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn fail_pair_refunds_unrealized_energy() {
+        let mut c = Cluster::new(cfg(2));
+        c.turn_on_server(0, 0.0);
+        // one running task (0..10) plus one queued behind it (10..14)
+        c.assign(0, 0.0, 10.0, 100.0, 100.0);
+        c.assign(0, 10.0, 4.0, 50.0, 100.0);
+        assert!((c.e_run - (1000.0 + 200.0)).abs() < 1e-9);
+        assert!(c.fail_pair(0, 4.0));
+        // running: 4 of 10 slots realized; queued: fully refunded
+        assert!((c.e_run - 400.0).abs() < 1e-9, "e_run {}", c.e_run);
+        assert!(c.pair_failed(0));
+        assert!(!c.fail_pair(0, 5.0), "idempotent");
+        assert!((c.e_run - 400.0).abs() < 1e-9, "no double refund");
+        // the stale departure entries self-discard
+        assert_eq!(c.peek_departure(), None);
+        assert!(c.process_departures(20.0).is_empty());
+        assert_eq!(c.pairs[0].power, PairPower::Off);
+        assert_eq!(c.live_pairs(), c.pairs.len() - 1);
+    }
+
+    #[test]
+    fn fail_pair_completed_segments_stay_booked() {
+        let mut c = Cluster::new(cfg(1));
+        c.turn_on_server(0, 0.0);
+        c.assign(0, 0.0, 3.0, 100.0, 10.0);
+        c.process_departures(3.0);
+        // the departed segment is settled; failing later refunds nothing
+        assert!(c.fail_pair(0, 5.0));
+        assert!((c.e_run - 300.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn fail_idle_pair_updates_free_indexes() {
+        let mut c = Cluster::new(cfg(2));
+        c.turn_on_server(0, 0.0);
+        assert_eq!(c.server_with_free_pairs(2), Some(0));
+        assert!(c.fail_pair(1, 1.0));
+        assert_eq!(c.server_with_free_pairs(2), None, "one live pair left");
+        assert_eq!(c.server_with_free_pairs(1), Some(0));
+        assert_eq!(c.lowest_idle_pair(), Some(0));
+        // idle ledger closed at the fail time
+        assert!((c.pairs[1].idle_time - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn fail_server_leaves_every_index() {
+        let mut c = Cluster::new(cfg(2));
+        c.turn_on_server(0, 0.0);
+        c.assign(0, 0.0, 5.0, 100.0, 100.0);
+        let newly = c.fail_server(0, 2.0);
+        assert_eq!(newly, vec![0, 1]);
+        assert!(c.server_failed(0));
+        assert!(!c.server_on[0], "failed server reads as not-on");
+        assert_eq!(c.first_off_server(), Some(1), "but is NOT openable");
+        assert_eq!(c.lowest_idle_pair(), None);
+        assert_eq!(c.server_with_free_pairs(1), None);
+        // failing an off server removes it from the off index too
+        let newly = c.fail_server(2, 2.0);
+        assert_eq!(newly.len(), 2);
+        assert_eq!(c.first_off_server(), Some(1));
+        assert_eq!(c.servers_off_live(), c.server_on.len() - 2);
+    }
+
+    #[test]
+    fn partially_failed_server_reopens_live_pairs_only() {
+        let mut base = cfg(2); // rho = 2
+        base.total_pairs = 4; // 2 servers of 2 pairs
+        let mut c = Cluster::new(base);
+        c.fail_server(1, 0.0); // server 1 gone outright
+        c.turn_on_server(0, 0.0);
+        assert!(c.fail_pair(1, 0.0));
+        c.assign(0, 0.0, 1.0, 100.0, 100.0);
+        c.process_departures(1.0);
+        // DRS must reclaim the server despite the permanently-off pair
+        assert_eq!(c.drs_sweep(3.0), 1);
+        assert!(!c.server_on[0]);
+        assert_eq!(c.first_off_server(), Some(0), "still openable");
+        assert_eq!(c.max_free_pairs(), 1, "only the live pair counts");
+        let before = c.turn_ons;
+        c.turn_on_server(0, 4.0);
+        assert_eq!(c.turn_ons - before, 1, "one live pair turned on");
+        assert_eq!(c.free_pairs[0], 1);
+        assert_eq!(c.lowest_idle_pair(), Some(0));
+        assert_eq!(c.pairs[1].power, PairPower::Off, "failed pair stays off");
+    }
+
+    #[test]
+    fn fail_pair_of_gang_refunds_one_replica() {
+        let mut c = Cluster::new(cfg(4));
+        c.turn_on_server(0, 0.0);
+        c.assign_gang(&[0, 1, 2], 0.0, 5.0, 100.0, 10.0);
+        assert!((c.e_run - 1500.0).abs() < 1e-9);
+        c.fail_pair(1, 2.0);
+        // one replica refunded its unrealized 3 slots
+        assert!((c.e_run - 1200.0).abs() < 1e-9);
+        // the surviving replicas still depart normally
+        let departed = c.process_departures(5.0);
+        assert_eq!(departed, vec![0, 2]);
     }
 
     #[test]

@@ -8,6 +8,7 @@
 //!   online [...]                 one online (event-driven) simulation
 //!   serve [...]                  JSON-lines scheduling daemon on stdin
 //!   replay <file> [...]          stream a JSONL session from a file
+//!   recover <journal> [...]      rebuild a dead daemon from its journal
 //!
 //! Common flags: --config FILE --reps N --seed S --theta X --l N
 //!               --interval wide|narrow --backend native|pjrt
@@ -18,8 +19,8 @@
 //! AOT-compiled XLA artifacts in `artifacts/`.
 
 use dvfs_sched::cli::{
-    apply_overrides, parse_front_end_opts, parse_obs_opts, parse_online_policy, parse_shard_opts,
-    Args, FrontEndOpts, ObsOpts, ShardOpts,
+    apply_overrides, parse_fail_at, parse_front_end_opts, parse_obs_opts, parse_online_policy,
+    parse_shard_opts, Args, FrontEndOpts, ObsOpts, ShardOpts,
 };
 use dvfs_sched::config::SimConfig;
 use dvfs_sched::experiments::{self, ExpCtx};
@@ -48,6 +49,7 @@ fn main() {
         "online" => cmd_online(&args),
         "serve" => cmd_serve(&args),
         "replay" => cmd_replay(&args),
+        "recover" => cmd_recover(&args),
         "workload" => cmd_workload(&args),
         "help" | "--help" | "-h" => {
             print_help();
@@ -78,6 +80,7 @@ fn print_help() {
          online  [--policy edl|bin]  one online simulation cell\n  \
          serve   [--policy edl|bin]  JSON-lines scheduling daemon\n  \
          replay FILE [--policy ...]  stream a JSONL session from a file\n  \
+         recover JOURNAL [...]       replay a journal's request trace, then resume\n  \
          workload export|replay|session  save / replay / sessionize a workload\n\n\
          front-end flags (serve): --listen stdio|unix:<path>|tcp:<addr>\n               \
          --clock virtual|wall --time-scale SECS   (socket listeners serve\n               \
@@ -86,9 +89,13 @@ fn print_help() {
          sharding flags (serve/replay): --shards N --route least-loaded|energy|round-robin\n               \
          --batch-window SLOTS --no-steal   (any of them opts into the\n               \
          sharded multi-threaded service with batched EDF admission)\n\n\
-         observability flags (serve/replay): --journal FILE --metrics-every SLOTS\n               \
-         (structured JSONL event journal + periodic live metrics; the\n               \
-         `metrics` request works either way — see docs/OBSERVABILITY.md)\n\n\
+         observability flags (serve/replay/recover): --journal FILE --metrics-every SLOTS\n               \
+         --journal-sync   (structured JSONL event journal + periodic live\n               \
+         metrics + per-line fsync; the `metrics` request works either\n               \
+         way — see docs/OBSERVABILITY.md)\n\n\
+         fault flags (replay/recover): --fail-at slot:server[,...]   (inject\n               \
+         fail_server requests at arrival slots; live sessions can send\n               \
+         fail_server / fail_pair directly — see docs/PROTOCOL.md)\n\n\
          scenario flags (serve/replay): --cluster-spec name:servers:power:speed[,...]\n               \
          (heterogeneous GPU types; submits may then carry \"gpu_type\"\n               \
          and a gang width \"g\" — see docs/PROTOCOL.md)\n\n\
@@ -341,23 +348,47 @@ fn cmd_workload(args: &Args) -> Result<(), String> {
 /// bound and served as multiplexed concurrent sessions (socket
 /// transports greet each client with a `hello`).  Returns whether a
 /// `shutdown` request ended the session(s).
+///
+/// A recovery `prefix` (the journal's verbatim request trace) is chained
+/// *ahead of* the replay reader or live stdin in ONE continuous session:
+/// a crash can split an admission slot's coalesced batch across the
+/// prefix and the resumed tail, and only a single session lets those
+/// submits coalesce back into the batch they would have formed
+/// uninterrupted.  Socket listeners replay the prefix as a session of
+/// its own first — each socket client is a fresh session anyway.
 fn serve_front_end<C, R>(
     core: &mut C,
     fe: &FrontEndOpts,
     replay: Option<R>,
+    prefix: Option<String>,
 ) -> Result<bool, String>
 where
     C: dvfs_sched::service::ServiceCore + ?Sized,
     R: std::io::BufRead,
 {
     use dvfs_sched::service::{serve_mux, serve_session, ListenAddr};
+    use std::io::{Cursor, Read};
     let clock = fe.clock();
-    match replay {
-        Some(reader) => {
-            let stdout = std::io::stdout();
-            serve_session(core, clock.as_ref(), reader, stdout.lock())
+    let stdout = std::io::stdout();
+    match (replay, prefix) {
+        (Some(reader), Some(p)) => {
+            serve_session(core, clock.as_ref(), Cursor::new(p).chain(reader), stdout.lock())
         }
-        None => {
+        (Some(reader), None) => serve_session(core, clock.as_ref(), reader, stdout.lock()),
+        (None, Some(p)) if fe.listen == ListenAddr::Stdio => serve_session(
+            core,
+            clock.as_ref(),
+            Cursor::new(p).chain(std::io::stdin().lock()),
+            stdout.lock(),
+        ),
+        (None, prefix) => {
+            if let Some(p) = prefix {
+                if serve_session(core, clock.as_ref(), Cursor::new(p), stdout.lock())? {
+                    // the journal's trace ended in a shutdown: the run it
+                    // recorded had completed, so there is nothing to resume
+                    return Ok(true);
+                }
+            }
             let listener = fe.listen.bind()?;
             let hello = fe.listen != ListenAddr::Stdio;
             let res = serve_mux(core, clock.as_ref(), listener, hello);
@@ -383,23 +414,42 @@ fn run_service_session<R: std::io::BufRead>(
     fe: &FrontEndOpts,
     obs: &ObsOpts,
     replay: Option<R>,
+    recover_prefix: Option<String>,
     source: &str,
 ) -> Result<(), String> {
-    let journal = match &obs.journal {
+    let mut journal = match &obs.journal {
         Some(path) => Some(
-            dvfs_sched::service::Journal::create(path)
-                .map_err(|e| format!("opening journal {path}: {e}"))?,
+            if obs.journal_sync {
+                dvfs_sched::service::Journal::create_sync(path)
+            } else {
+                dvfs_sched::service::Journal::create(path)
+            }
+            .map_err(|e| format!("opening journal {path}: {e}"))?,
         ),
         None => None,
     };
     if let Some(path) = &obs.journal {
         eprintln!(
-            "journal: {path}{}",
+            "journal: {path}{}{}",
+            if obs.journal_sync { " (fsync per line)" } else { "" },
             match obs.metrics_every {
                 Some(e) => format!(", metrics every {e} slot(s)"),
                 None => String::new(),
             }
         );
+    }
+    if let (Some(j), Some(p)) = (&mut journal, &recover_prefix) {
+        // stamp the new journal so a recovered run's history is
+        // self-describing (journal_check.py validates the schema)
+        j.record(
+            "recover",
+            0.0,
+            vec![
+                ("requests", dvfs_sched::util::json::num(p.lines().count() as f64)),
+                ("source", dvfs_sched::util::json::Json::Str(source.to_string())),
+            ],
+        );
+        j.flush();
     }
     if !cfg.cluster.types.is_empty() && opts.is_none() {
         // typed fleets need the typed-pool service — even a SINGLE
@@ -443,7 +493,7 @@ fn run_service_session<R: std::io::BufRead>(
                 if o.steal { "on" } else { "off" },
                 fe.clock_name(),
             );
-            let shutdown = serve_front_end(&mut svc, fe, replay)?;
+            let shutdown = serve_front_end(&mut svc, fe, replay, recover_prefix)?;
             if !shutdown {
                 for line in svc.shutdown() {
                     println!("{}", line.render_compact());
@@ -463,7 +513,7 @@ fn run_service_session<R: std::io::BufRead>(
                 solver.backend_name(),
                 fe.clock_name(),
             );
-            let shutdown = serve_front_end(&mut svc, fe, replay)?;
+            let shutdown = serve_front_end(&mut svc, fe, replay, recover_prefix)?;
             if !shutdown {
                 println!("{}", svc.shutdown().render_compact());
             }
@@ -497,6 +547,7 @@ fn cmd_serve(args: &Args) -> Result<(), String> {
         &fe,
         &obs,
         None::<std::io::BufReader<std::fs::File>>,
+        None,
         &source,
     )
 }
@@ -518,11 +569,96 @@ fn cmd_replay(args: &Args) -> Result<(), String> {
     // a replay file IS the session; any --listen flag is irrelevant here
     fe.listen = dvfs_sched::service::ListenAddr::Stdio;
     let obs = parse_obs_opts(args)?;
+    let fail_at = match args.opt_str("fail-at") {
+        Some(s) => Some(parse_fail_at(&s)?),
+        None => None,
+    };
     args.finish()?;
 
+    if let Some(faults) = fail_at {
+        // fault injection rewrites the trace, so buffer it up front
+        let text =
+            std::fs::read_to_string(&path).map_err(|e| format!("opening {path}: {e}"))?;
+        let lines: Vec<String> = text.lines().map(str::to_string).collect();
+        let mut injected = dvfs_sched::service::inject_failures(&lines, &faults).join("\n");
+        if !injected.is_empty() {
+            injected.push('\n');
+        }
+        let reader = std::io::Cursor::new(injected);
+        return run_service_session(&cfg, kind, dvfs, opts, &fe, &obs, Some(reader), None, &path);
+    }
     let file = std::fs::File::open(&path).map_err(|e| format!("opening {path}: {e}"))?;
     let reader = std::io::BufReader::new(file);
-    run_service_session(&cfg, kind, dvfs, opts, &fe, &obs, Some(reader), &path)
+    run_service_session(&cfg, kind, dvfs, opts, &fe, &obs, Some(reader), None, &path)
+}
+
+/// `repro recover <journal>`: rebuild a dead service from the request
+/// trace its event journal retained, then resume serving on `--listen`.
+///
+/// The journal records every request line verbatim, flushed per line, so
+/// replaying those lines through the same virtual-clock front end —
+/// chained ahead of new input in one continuous session — reconstructs
+/// the exact pre-crash state: same placements, same energy books, same
+/// response bytes.  The scheduler flags (`--policy`, `--shards`,
+/// `--cluster-spec`, ...) must match the crashed run; the journal stores
+/// the workload's history, not the daemon's configuration.
+fn cmd_recover(args: &Args) -> Result<(), String> {
+    let mut cfg = SimConfig::default();
+    apply_overrides(args, &mut cfg)?;
+    let path = args
+        .positional
+        .first()
+        .ok_or("usage: repro recover <journal.jsonl> [--fail-at slot:server[,...]] [serve flags]")?
+        .clone();
+    let kind = parse_online_policy(&args.opt_str("policy").unwrap_or("edl".into()))?;
+    let dvfs = !args.flag("no-dvfs");
+    let opts = parse_shard_opts(args)?;
+    let fe = parse_front_end_opts(args)?;
+    let obs = parse_obs_opts(args)?;
+    let fail_at = match args.opt_str("fail-at") {
+        Some(s) => Some(parse_fail_at(&s)?),
+        None => None,
+    };
+    args.finish()?;
+    if fe.wall {
+        return Err(
+            "recover replays the journal on the virtual clock; --clock wall is not supported"
+                .into(),
+        );
+    }
+
+    // read the source journal BEFORE run_service_session opens --journal:
+    // pointing the new journal at the old path is legal (the history is
+    // re-recorded as the recovered run replays)
+    let text = std::fs::read_to_string(&path).map_err(|e| format!("reading journal {path}: {e}"))?;
+    let mut lines = dvfs_sched::service::journal_requests(&text).map_err(|e| format!("{path}: {e}"))?;
+    if let Some(faults) = &fail_at {
+        lines = dvfs_sched::service::inject_failures(&lines, faults);
+    }
+    eprintln!(
+        "recover: {} request line(s) from {path}{}",
+        lines.len(),
+        match &fail_at {
+            Some(f) => format!(", {} injected fault(s)", f.len()),
+            None => String::new(),
+        }
+    );
+    let mut prefix = lines.join("\n");
+    if !prefix.is_empty() {
+        prefix.push('\n');
+    }
+    let source = format!("recover:{path}");
+    run_service_session(
+        &cfg,
+        kind,
+        dvfs,
+        opts,
+        &fe,
+        &obs,
+        None::<std::io::BufReader<std::fs::File>>,
+        Some(prefix),
+        &source,
+    )
 }
 
 fn cmd_online(args: &Args) -> Result<(), String> {

@@ -146,14 +146,15 @@ impl SptHeap {
     }
 }
 
-/// Turn on the lowest-indexed off server and return its first pair
+/// Turn on the lowest-indexed off server and return its first live pair
 /// (Algorithm 5 lines 15-17).  `None` if the cluster is exhausted.
 /// O(log n) via the cluster's off-server index (the fresh-server scan was
-/// O(servers) per placement).
+/// O(servers) per placement).  An off server always has at least one live
+/// pair — fully-failed servers leave the off-server index for good.
 fn open_server(cluster: &mut Cluster, t: f64) -> Option<usize> {
     let s = cluster.first_off_server()?;
     cluster.turn_on_server(s, t);
-    Some(cluster.server_pairs(s).start)
+    cluster.server_pairs(s).find(|&i| !cluster.pair_failed(i))
 }
 
 // ---------------------------------------------------------------------------
@@ -313,8 +314,12 @@ fn best_gang_server(cluster: &Cluster, g: usize, t: f64) -> Option<(usize, f64)>
         }
         let mut avail: Vec<f64> = cluster
             .server_pairs(s)
+            .filter(|&i| !cluster.pair_failed(i))
             .map(|i| cluster.pairs[i].busy_until.max(t))
             .collect();
+        if avail.len() < g {
+            continue; // partially-failed server too narrow for this gang
+        }
         avail.sort_by(|a, b| a.partial_cmp(b).unwrap());
         let start = avail[g - 1]; // g pairs free once the g-th frees
         if best.map_or(true, |(_, b)| start < b) {
@@ -335,7 +340,10 @@ fn reserve_gang(
     setting: &Setting,
     deadline: f64,
 ) {
-    let mut order: Vec<usize> = cluster.server_pairs(server).collect();
+    let mut order: Vec<usize> = cluster
+        .server_pairs(server)
+        .filter(|&i| !cluster.pair_failed(i))
+        .collect();
     order.sort_by(|&a, &b| {
         cluster.pairs[a]
             .busy_until
@@ -344,6 +352,7 @@ fn reserve_gang(
             .then(a.cmp(&b))
     });
     let taken: Vec<usize> = order.into_iter().take(g).collect();
+    debug_assert_eq!(taken.len(), g, "server {server} too narrow for gang");
     debug_assert!(taken
         .iter()
         .all(|&i| cluster.pairs[i].busy_until <= start + 1e-9));
@@ -381,11 +390,13 @@ fn place_gang(
         }
     }
     // fresh server (whole-server turn-on keeps ω accounting unchanged;
-    // O(log n) via the off-server index)
-    if let Some(s) = cluster.first_off_server() {
+    // O(log n) via the off-server index; must be wide enough for the gang)
+    if let Some(s) = cluster.first_off_server_with_live(g) {
         cluster.turn_on_server(s, t);
         for i in cluster.server_pairs(s) {
-            policy.note_external_assign(i, cluster.pairs[i].busy_until);
+            if !cluster.pair_failed(i) {
+                policy.note_external_assign(i, cluster.pairs[i].busy_until);
+            }
         }
         reserve_gang(cluster, policy, s, g, t, &pr.setting, d);
     } else if let Some((server, start)) = best_gang_server(cluster, g, t) {
@@ -720,6 +731,46 @@ mod tests {
         edl.assign(0.0, &[mk_task(1, 0.0, 0.05, 10.0)], &mut cluster, &ctx);
         assert_eq!(cluster.servers_used(), 1, "SPT heap lost the gang pairs");
         assert_eq!(cluster.violations, 0);
+    }
+
+    #[test]
+    fn placements_avoid_failed_pairs_and_servers() {
+        let solver = Solver::native();
+        let cache = mk_cache(&solver);
+        let ctx = ctx(&solver, &cache, 0.9);
+        let cfg = ClusterConfig {
+            total_pairs: 8,
+            pairs_per_server: 4,
+            ..ClusterConfig::default()
+        };
+        let mut cluster = Cluster::new(cfg);
+        // server 0 dies outright; pair 4 of server 1 dies too
+        cluster.fail_server(0, 0.0);
+        cluster.fail_pair(4, 0.0);
+        let mut edl = EdlOnline::new();
+        let tasks: Vec<Task> = (0..6).map(|i| mk_task(i, 0.0, 0.05, 10.0)).collect();
+        edl.assign(0.0, &tasks, &mut cluster, &ctx);
+        assert_eq!(cluster.violations, 0);
+        for (i, p) in cluster.pairs.iter().enumerate() {
+            assert!(
+                !cluster.pair_failed(i) || p.tasks_run == 0,
+                "task landed on failed pair {i}"
+            );
+        }
+        let placed: usize = cluster.pairs.iter().map(|p| p.tasks_run).sum();
+        assert_eq!(placed, 6, "all tasks placed on the 3 live pairs");
+        // a width-3 gang still fits on server 1's live pairs; width 4 is
+        // forced onto it (no server is wide enough any more)
+        place_gang_batch(
+            10.0,
+            &[(mk_task(10, 10.0, 0.4, 10.0), 3)],
+            &mut cluster,
+            &mut edl,
+            &ctx,
+        );
+        assert_eq!(cluster.gangs_placed, 1);
+        let (_, pairs) = &cluster.gang_log[cluster.gang_log.len() - 1];
+        assert!(pairs.iter().all(|&p| !cluster.pair_failed(p) && p >= 5));
     }
 
     #[test]

@@ -11,6 +11,11 @@
 use crate::dvfs::ScalingInterval;
 use crate::tasks::Task;
 
+/// Wire reason tag for a task evicted by a server/pair failure that no
+/// surviving pair can still finish by its deadline (see
+/// [`AdmissionController::recheck_migration`]).
+pub const EVICTED_INFEASIBLE: &str = "evicted-infeasible";
+
 /// Admission verdict for one submitted task.
 #[derive(Clone, Debug, PartialEq)]
 pub enum Verdict {
@@ -94,6 +99,15 @@ pub struct AdmissionController {
     pub rejected_type: u64,
     /// Tasks rejected because the gang width exceeds one server.
     pub rejected_gang: u64,
+    /// Tasks evicted by a failure and successfully re-placed on a
+    /// surviving pair (not part of [`Self::rejected`]: the task was and
+    /// stays admitted — it just moved).
+    pub migrated: u64,
+    /// Tasks evicted by a failure whose remaining deadline slack no
+    /// longer fits even the fastest surviving setting (wire reason
+    /// [`EVICTED_INFEASIBLE`]).  Kept out of [`Self::rejected`]: these
+    /// tasks *passed* admission; the cluster broke underneath them.
+    pub evicted_infeasible: u64,
 }
 
 impl AdmissionController {
@@ -166,6 +180,24 @@ impl AdmissionController {
         }
         self.admitted += 1;
         Verdict::Admit
+    }
+
+    /// Post-failure migration recheck: can an *already admitted* task,
+    /// evicted at `now` by a server/pair failure, still finish by its
+    /// deadline on a surviving pair with execution floor `t_min`?  Same
+    /// tolerance as [`Self::check_feasibility_bound`], but it never
+    /// touches the admission counters — the task was admitted once and
+    /// must not be counted twice.  Bumps `migrated` / `evicted_infeasible`
+    /// instead and reports the verdict as a plain bool.
+    pub fn recheck_migration(&mut self, task: &Task, now: f64, t_min: f64) -> bool {
+        let start = now.max(task.arrival);
+        let available = task.deadline - start;
+        if !(available >= t_min * (1.0 - 1e-4) - 1e-6) {
+            self.evicted_infeasible += 1;
+            return false;
+        }
+        self.migrated += 1;
+        true
     }
 
     /// Evaluate `task` submitted at service time `now` (the task cannot
@@ -260,6 +292,25 @@ mod tests {
         );
         assert_eq!(a.admitted, 1);
         assert_eq!(a.rejected_infeasible, 1);
+    }
+
+    #[test]
+    fn migration_recheck_counts_apart_from_admission() {
+        // a migration re-check must never re-count `admitted` or land in
+        // `rejected()` — both outcomes book into their own counters
+        let mut a = AdmissionController::new();
+        let iv = ScalingInterval::wide();
+        let t = mk_task(0.5);
+        assert!(a.evaluate(&t, 0.0, &iv).admitted());
+        let floor = t.model.t_min(&iv);
+        assert!(a.recheck_migration(&t, 0.0, floor));
+        // evicted too late: the remaining window is below the floor
+        let late = t.deadline - floor * 0.5;
+        assert!(!a.recheck_migration(&t, late, floor));
+        assert_eq!(a.admitted, 1);
+        assert_eq!(a.migrated, 1);
+        assert_eq!(a.evicted_infeasible, 1);
+        assert_eq!(a.rejected(), 0);
     }
 
     #[test]

@@ -82,6 +82,17 @@ impl TaskRecord {
     }
 }
 
+/// A placed task whose completion μ is still in the future: everything a
+/// failure-time eviction needs to identify and re-place it.  Pruned
+/// lazily (entries whose μ has passed) on every admission and failure.
+#[derive(Clone, Debug)]
+struct Inflight {
+    task: Task,
+    g: usize,
+    pairs: Vec<usize>,
+    finish: f64,
+}
+
 /// Bounded per-task record retention, shared by the unsharded daemon and
 /// the sharded dispatcher: remembers the outcome of the most recent
 /// `RECORD_CAP` (100 000) submissions and renders `query` responses from
@@ -189,6 +200,9 @@ pub struct Service<'a> {
     cfg: SimConfig,
     dvfs: bool,
     records: RecordStore,
+    /// Placed-but-unfinished tasks by id — the eviction set a
+    /// `fail_server` / `fail_pair` request consults.
+    inflight: BTreeMap<usize, Inflight>,
     /// The names a `gpu_type` request field may match (the daemon's
     /// homogeneous pool answers to its configured or implicit type name).
     type_names: Vec<String>,
@@ -228,6 +242,7 @@ impl<'a> Service<'a> {
             cfg: cfg.clone(),
             dvfs,
             records: RecordStore::new(),
+            inflight: BTreeMap::new(),
             type_names: cfg
                 .cluster
                 .effective_types()
@@ -321,9 +336,20 @@ impl<'a> Service<'a> {
                     break 'gate self.admission.reject_unknown_type(name);
                 }
             }
+            if self.cluster.live_pairs() == 0 {
+                // every pair has failed: no deadline is servable (the
+                // window is effectively nil), whatever its slack
+                self.admission.rejected_infeasible += 1;
+                break 'gate Verdict::RejectInfeasible {
+                    t_min: task.model.t_min(&self.cfg.interval),
+                    available: 0.0,
+                };
+            }
+            // under failures the co-location bound shrinks to the widest
+            // surviving server (identical to `l` on a healthy cluster)
             if let Err(v) = self
                 .admission
-                .check_gang_width(opts.g, self.cfg.cluster.pairs_per_server)
+                .check_gang_width(opts.g, self.cluster.widest_live_server())
             {
                 break 'gate v;
             }
@@ -410,6 +436,16 @@ impl<'a> Service<'a> {
                     ));
                 }
                 self.records.remember(id, rec);
+                self.inflight.retain(|_, f| f.finish > arrival + 1e-9);
+                self.inflight.insert(
+                    id,
+                    Inflight {
+                        task,
+                        g,
+                        pairs: pairs.clone(),
+                        finish,
+                    },
+                );
                 if self.journal.is_some() {
                     let events = self.cluster.drain_obs();
                     if let Some(j) = self.journal.as_mut() {
@@ -572,6 +608,223 @@ impl<'a> Service<'a> {
         self.snapshot_json("shutdown")
     }
 
+    /// Inject a server or pair failure at `when` (clamped forward to the
+    /// service clock): the engine first advances to the failure instant —
+    /// departures due before it complete normally and are not evicted —
+    /// then the failed pairs drop their queued work (unrealized energy
+    /// refunded by [`Cluster::fail_pair`]) and every in-flight task
+    /// holding a failed pair is evicted.  Victims re-place on surviving
+    /// pairs in EDF order when the remaining window still admits the
+    /// fastest setting ([`AdmissionController::recheck_migration`]);
+    /// otherwise they reject with reason
+    /// [`crate::service::admission::EVICTED_INFEASIBLE`].  Journals one
+    /// `fail` line plus one `migrate`/`evict` line per victim, so a
+    /// recovery replay of a faulted session reconstructs the same books.
+    pub fn fail(&mut self, server: Option<usize>, pair: Option<usize>, when: Option<f64>) -> Json {
+        let op = if server.is_some() { "fail_server" } else { "fail_pair" };
+        if server.map_or(false, |v| v >= self.cluster.server_on.len())
+            || pair.map_or(false, |v| v >= self.cluster.pairs.len())
+        {
+            return obj(vec![
+                ("ok", Json::Bool(false)),
+                ("op", s(op)),
+                ("error", s("index out of range")),
+            ]);
+        }
+        let t_f = self.now().max(when.unwrap_or(0.0));
+        self.drained = false;
+        let ctx = SchedCtx {
+            solver: self.solver,
+            iv: self.cfg.interval,
+            dvfs: self.dvfs,
+            theta: self.cfg.theta,
+            cache: &self.cache,
+        };
+        self.engine
+            .run_until(t_f, &mut self.cluster, self.policy.as_mut(), &ctx);
+        self.now = self.now.max(t_f);
+        if self.journal.is_some() {
+            let events = self.cluster.drain_obs();
+            if let Some(j) = self.journal.as_mut() {
+                j.record_cluster_events(None, &events);
+            }
+        }
+        let newly: Vec<usize> = match (server, pair) {
+            (Some(sv), _) => self.cluster.fail_server(sv, t_f),
+            (_, Some(i)) => {
+                if self.cluster.fail_pair(i, t_f) {
+                    vec![i]
+                } else {
+                    Vec::new()
+                }
+            }
+            _ => unreachable!("protocol guarantees one target"),
+        };
+        if self.journal.is_some() {
+            let events = self.cluster.drain_obs();
+            if let Some(j) = self.journal.as_mut() {
+                let mut jf: Vec<(&str, Json)> = Vec::with_capacity(2);
+                if let Some(sv) = server {
+                    jf.push(("server", num(sv as f64)));
+                }
+                if let Some(i) = pair {
+                    jf.push(("pair", num(i as f64)));
+                }
+                jf.push((
+                    "pairs",
+                    Json::Arr(newly.iter().map(|&p| num(p as f64)).collect()),
+                ));
+                j.record("fail", t_f, jf);
+                j.record_cluster_events(None, &events);
+            }
+        }
+        // victims: in-flight tasks holding a newly-failed pair (tasks on
+        // previously-failed pairs were evicted when those pairs failed)
+        self.inflight.retain(|_, f| f.finish > t_f + 1e-9);
+        let ids: Vec<usize> = self
+            .inflight
+            .iter()
+            .filter(|(_, f)| f.pairs.iter().any(|p| newly.contains(p)))
+            .map(|(&id, _)| id)
+            .collect();
+        let mut victims: Vec<(usize, Inflight)> = ids
+            .into_iter()
+            .map(|id| (id, self.inflight.remove(&id).expect("victim listed")))
+            .collect();
+        // EDF order, id tie-break: the same order a fresh arrival batch
+        // would place in, so migration is deterministic
+        victims.sort_by(|a, b| {
+            a.1.task
+                .deadline
+                .partial_cmp(&b.1.task.deadline)
+                .unwrap()
+                .then(a.0.cmp(&b.0))
+        });
+        let mut migrated_ids: Vec<usize> = Vec::new();
+        let mut evicted_ids: Vec<usize> = Vec::new();
+        for (id, v) in victims {
+            let mut task = v.task;
+            task.arrival = t_f;
+            let from = v.pairs.first().copied().unwrap_or(0);
+            let capacity = if v.g == 1 {
+                self.cluster.live_pairs() > 0
+            } else {
+                self.cluster.widest_live_server() >= v.g
+            };
+            let feasible = if capacity {
+                self.admission
+                    .recheck_migration(&task, t_f, task.model.t_min(&self.cfg.interval))
+            } else {
+                // no surviving pair (or no server wide enough for the
+                // gang): evicted outright, booked under the same counter
+                self.admission.evicted_infeasible += 1;
+                false
+            };
+            if feasible {
+                // re-place through the normal arrival path — same event
+                // core, same policy; a new placement, not a new admission
+                self.cluster.last_assign = None;
+                self.cluster.clear_assign_log();
+                if v.g == 1 {
+                    self.engine.push_arrivals(t_f, vec![task]);
+                } else {
+                    self.engine.push_gang_arrivals(t_f, vec![(task, v.g)]);
+                }
+                self.engine
+                    .run_until(t_f, &mut self.cluster, self.policy.as_mut(), &ctx);
+                let (new_pair, start, finish) = self
+                    .cluster
+                    .last_assign
+                    .expect("surviving capacity was rechecked");
+                let pairs = self.cluster.pairs_of_log_entry(0);
+                if self.journal.is_some() {
+                    let events = self.cluster.drain_obs();
+                    if let Some(j) = self.journal.as_mut() {
+                        let mut jf = vec![
+                            ("id", num(id as f64)),
+                            ("from", num(from as f64)),
+                            ("pair", num(new_pair as f64)),
+                            ("start", num(start)),
+                            ("mu", num(finish)),
+                        ];
+                        if v.g > 1 {
+                            jf.push(("g", num(v.g as f64)));
+                            jf.push((
+                                "pairs",
+                                Json::Arr(pairs.iter().map(|&p| num(p as f64)).collect()),
+                            ));
+                        }
+                        j.record("migrate", t_f, jf);
+                        j.record_cluster_events(None, &events);
+                    }
+                }
+                self.records.remember(
+                    id,
+                    TaskRecord {
+                        admitted: true,
+                        pair: Some(new_pair),
+                        g: v.g,
+                        pairs: pairs.clone(),
+                        start,
+                        finish,
+                        deadline: task.deadline,
+                    },
+                );
+                self.inflight.insert(
+                    id,
+                    Inflight {
+                        task,
+                        g: v.g,
+                        pairs,
+                        finish,
+                    },
+                );
+                migrated_ids.push(id);
+            } else {
+                if let Some(j) = self.journal.as_mut() {
+                    j.record(
+                        "evict",
+                        t_f,
+                        vec![
+                            ("id", num(id as f64)),
+                            ("from", num(from as f64)),
+                            ("reason", s(crate::service::admission::EVICTED_INFEASIBLE)),
+                        ],
+                    );
+                }
+                // a later query answers "rejected", like any task the
+                // service could not carry to completion
+                self.records
+                    .remember(id, TaskRecord::rejected(t_f, task.deadline));
+                evicted_ids.push(id);
+            }
+        }
+        self.maybe_emit_metrics();
+        let mut fields = vec![("ok", Json::Bool(true)), ("op", s(op))];
+        if let Some(sv) = server {
+            fields.push(("server", num(sv as f64)));
+        }
+        if let Some(i) = pair {
+            fields.push(("pair", num(i as f64)));
+        }
+        fields.push(("now", num(t_f)));
+        fields.push((
+            "failed_pairs",
+            Json::Arr(newly.iter().map(|&p| num(p as f64)).collect()),
+        ));
+        fields.push(("migrated", num(migrated_ids.len() as f64)));
+        fields.push(("evicted", num(evicted_ids.len() as f64)));
+        fields.push((
+            "migrated_ids",
+            Json::Arr(migrated_ids.iter().map(|&i| num(i as f64)).collect()),
+        ));
+        fields.push((
+            "evicted_ids",
+            Json::Arr(evicted_ids.iter().map(|&i| num(i as f64)).collect()),
+        ));
+        obj(fields)
+    }
+
     /// Dispatch one decoded request.  Returns (response, stop-serving).
     pub fn handle(&mut self, req: Request) -> (Json, bool) {
         match req {
@@ -580,6 +833,8 @@ impl<'a> Service<'a> {
             Request::Snapshot => (self.snapshot_json("snapshot"), false),
             Request::Metrics => (self.metrics_json(), false),
             Request::Ping => (pong(), false),
+            Request::FailServer { server, t } => (self.fail(Some(server), None, t), false),
+            Request::FailPair { pair, t } => (self.fail(None, Some(pair), t), false),
             Request::Shutdown => (self.shutdown(), true),
         }
     }
@@ -830,6 +1085,113 @@ mod tests {
         assert_eq!(fin.get("rejected_gang").unwrap().as_f64(), Some(1.0));
         assert_eq!(fin.get("rejected_type").unwrap().as_f64(), Some(1.0));
         assert_eq!(fin.get("admitted").unwrap().as_f64(), Some(1.0));
+    }
+
+    #[test]
+    fn fail_server_migrates_its_inflight_task() {
+        let cfg = small_cfg();
+        let solver = Solver::native();
+        let mut svc = Service::new(&cfg, OnlinePolicyKind::Edl, true, &solver);
+        let r = svc.submit(mk_task(0, 0.0, 0.5, 10.0));
+        let pair0 = r.get("pair").unwrap().as_f64().unwrap() as usize;
+        let server0 = pair0 / cfg.cluster.pairs_per_server;
+        // fail the hosting server while the task is mid-flight: the full
+        // window is still open, so the task must migrate, not evict
+        let f = svc.fail(Some(server0), None, Some(0.0));
+        assert_eq!(f.get("ok"), Some(&Json::Bool(true)));
+        assert_eq!(f.get("migrated").unwrap().as_f64(), Some(1.0));
+        assert_eq!(f.get("evicted").unwrap().as_f64(), Some(0.0));
+        let ids = f.get("migrated_ids").unwrap().as_arr().unwrap();
+        assert_eq!(ids[0].as_f64(), Some(0.0));
+        let rec = svc.record(0).unwrap();
+        assert!(rec.admitted);
+        let new_server = rec.pair.unwrap() / cfg.cluster.pairs_per_server;
+        assert_ne!(new_server, server0, "migrated off the failed server");
+        assert!(rec.deadline_met(), "full slack admits an on-time restart");
+        // later traffic must not land on the failed server either
+        let r2 = svc.submit(mk_task(1, 1.0, 0.5, 10.0));
+        let p2 = r2.get("pair").unwrap().as_f64().unwrap() as usize;
+        assert_ne!(p2 / cfg.cluster.pairs_per_server, server0);
+        let fin = svc.shutdown();
+        assert_eq!(fin.get("violations").unwrap().as_f64(), Some(0.0));
+    }
+
+    #[test]
+    fn late_failure_evicts_as_infeasible() {
+        let cfg = small_cfg();
+        let solver = Solver::native();
+        let mut svc = Service::new(&cfg, OnlinePolicyKind::Edl, true, &solver);
+        let mut t = mk_task(0, 0.0, 0.5, 10.0);
+        let t_min = t.model.t_min(&cfg.interval);
+        t.deadline = 1.05 * t_min; // barely feasible: t_hat >= t_min
+        let r = svc.submit(t);
+        assert_eq!(r.get("admitted"), Some(&Json::Bool(true)));
+        let pair0 = r.get("pair").unwrap().as_f64().unwrap() as usize;
+        let e_before = svc.snapshot_json("snapshot").get("e_run").unwrap().as_f64().unwrap();
+        // by half a t_min the residual window is below the floor on any
+        // surviving pair: the victim cannot be re-placed
+        let f = svc.fail(None, Some(pair0), Some(0.5 * t_min));
+        assert_eq!(f.get("migrated").unwrap().as_f64(), Some(0.0));
+        assert_eq!(f.get("evicted").unwrap().as_f64(), Some(1.0));
+        let q = svc.query(0);
+        assert_eq!(q.get("status").unwrap().as_str(), Some("rejected"));
+        // the unrealized tail of the dropped segment was refunded
+        let e_after = svc.snapshot_json("snapshot").get("e_run").unwrap().as_f64().unwrap();
+        assert!(e_after < e_before, "refund: {e_after} vs {e_before}");
+        assert!(e_after > 0.0, "the realized prefix stays booked");
+        let fin = svc.shutdown();
+        // the task never departs, so it cannot count as a violation
+        assert_eq!(fin.get("violations").unwrap().as_f64(), Some(0.0));
+        // failing the same pair again is a no-op
+        let f2 = svc.fail(None, Some(pair0), None);
+        assert_eq!(f2.get("failed_pairs").unwrap().as_arr().unwrap().len(), 0);
+        // out-of-range targets answer an error, not a panic
+        let bad = svc.fail(Some(10_000), None, None);
+        assert_eq!(bad.get("ok"), Some(&Json::Bool(false)));
+    }
+
+    #[test]
+    fn fail_events_land_in_the_journal() {
+        use std::sync::{Arc, Mutex};
+        #[derive(Clone, Default)]
+        struct Buf(Arc<Mutex<Vec<u8>>>);
+        impl std::io::Write for Buf {
+            fn write(&mut self, b: &[u8]) -> std::io::Result<usize> {
+                self.0.lock().unwrap().extend_from_slice(b);
+                Ok(b.len())
+            }
+            fn flush(&mut self) -> std::io::Result<()> {
+                Ok(())
+            }
+        }
+        let cfg = small_cfg();
+        let solver = Solver::native();
+        let mut svc = Service::new(&cfg, OnlinePolicyKind::Edl, true, &solver);
+        let sink = Buf::default();
+        svc.set_obs(Some(Journal::to_writer(sink.clone())), None);
+        let r = svc.submit(mk_task(0, 0.0, 0.5, 10.0));
+        let pair0 = r.get("pair").unwrap().as_f64().unwrap() as usize;
+        svc.fail(None, Some(pair0), Some(0.0));
+        svc.shutdown();
+        let text = String::from_utf8(sink.0.lock().unwrap().clone()).unwrap();
+        let kinds: Vec<String> = text
+            .lines()
+            .map(|l| {
+                Json::parse(l)
+                    .unwrap()
+                    .get("ev")
+                    .unwrap()
+                    .as_str()
+                    .unwrap()
+                    .to_string()
+            })
+            .collect();
+        assert!(kinds.iter().any(|k| k == "fail"));
+        assert!(kinds.iter().any(|k| k == "migrate"));
+        let fail_line = text.lines().find(|l| l.contains("\"ev\":\"fail\"")).unwrap();
+        let fj = Json::parse(fail_line).unwrap();
+        assert_eq!(fj.get("pair").unwrap().as_f64(), Some(pair0 as f64));
+        assert_eq!(fj.get("pairs").unwrap().as_arr().unwrap().len(), 1);
     }
 
     #[test]

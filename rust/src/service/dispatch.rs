@@ -44,7 +44,7 @@ use crate::config::{GpuTypeSpec, SimConfig};
 use crate::dvfs::{ScalingInterval, SolveCache, GRID_DEFAULT};
 use crate::ext::hetero::{select_type_cached, TypeParams};
 use std::cell::RefCell;
-use crate::service::admission::{AdmissionController, Verdict};
+use crate::service::admission::{AdmissionController, Verdict, EVICTED_INFEASIBLE};
 use crate::service::daemon::{RecordStore, TaskRecord};
 use crate::service::journal::Journal;
 use crate::service::metrics::Snapshot;
@@ -56,7 +56,7 @@ use crate::sim::online::OnlinePolicyKind;
 use crate::tasks::Task;
 use crate::util::json::Json;
 use crate::util::Hist;
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, BTreeSet};
 use std::io::{BufRead, Write};
 use std::sync::mpsc;
 use std::time::Instant;
@@ -102,6 +102,18 @@ impl RoutePolicy {
             RoutePolicy::RoundRobin => "round-robin",
         }
     }
+}
+
+/// A placement the dispatcher may have to migrate: the submitted task
+/// (with its resolved type and gang width), the floor admission judged
+/// it against, and the pairs it currently occupies.  Kept dispatcher-side
+/// because a `fail_*` request must find victims without a round trip to
+/// every shard.
+struct InflightTask {
+    st: ServiceTask,
+    t_min: f64,
+    pairs: Vec<usize>,
+    finish: f64,
 }
 
 /// The sharded scheduling service (see the module docs).
@@ -183,6 +195,22 @@ pub struct ShardedService {
     typed: bool,
     /// Pairs per server (the gang co-location bound).
     l: usize,
+    /// Global pair index range `(lo, hi)` per shard, recorded before the
+    /// views move into the pool.  Servers are never split across shards,
+    /// so every server's pairs sit inside exactly one range.
+    shard_pairs: Vec<(usize, usize)>,
+    /// Global pair index range `(lo, hi)` per GPU type, aligned with
+    /// `fleet` (types are contiguous server runs globally).
+    type_pair_ranges: Vec<(usize, usize)>,
+    /// Globally failed pair indices, accumulated from the shards'
+    /// [`ShardJob::Fail`] replies.  Empty on a healthy cluster — every
+    /// failure-aware guard checks that first, keeping the fault-free
+    /// paths byte-identical to the pre-failure service.
+    failed: BTreeSet<usize>,
+    /// In-flight placements by task id — what a `fail_*` request consults
+    /// to find eviction victims.  Pruned of finished entries on every
+    /// flush and failure.
+    inflight_tasks: BTreeMap<usize, InflightTask>,
     /// Logical clock: advanced by admitted flushes and by drains.
     now: f64,
     drained: bool,
@@ -256,6 +284,19 @@ impl ShardedService {
             .iter()
             .map(|v| v.types.iter().map(|&(ti, _)| ti).collect())
             .collect();
+        // recorded before the views move into the pool: failure handling
+        // maps servers and GPU types onto shards from these ranges alone
+        let shard_pairs: Vec<(usize, usize)> = views
+            .iter()
+            .map(|v| (v.pair_offset, v.pair_offset + v.cfg.total_pairs))
+            .collect();
+        let l = cfg.cluster.pairs_per_server;
+        let type_pair_ranges: Vec<(usize, usize)> = cfg
+            .cluster
+            .type_server_ranges()
+            .iter()
+            .map(|r| (r.start * l, r.end * l))
+            .collect();
         let fleet = cfg.cluster.effective_types();
         let fleet_params: Vec<TypeParams> = fleet
             .iter()
@@ -296,6 +337,10 @@ impl ShardedService {
             shard_types,
             typed: !cfg.cluster.types.is_empty(),
             l: cfg.cluster.pairs_per_server,
+            shard_pairs,
+            type_pair_ranges,
+            failed: BTreeSet::new(),
+            inflight_tasks: BTreeMap::new(),
             now: 0.0,
             drained: false,
             journal: None,
@@ -353,6 +398,61 @@ impl ShardedService {
         self.records.get(id)
     }
 
+    /// Live (non-failed) pairs inside the global pair range `[lo, hi)`.
+    fn live_pairs_in(&self, lo: usize, hi: usize) -> usize {
+        (hi - lo) - self.failed.range(lo..hi).count()
+    }
+
+    /// Live pairs of GPU type `ti` across the whole cluster.
+    fn type_live_pairs(&self, ti: usize) -> usize {
+        let (lo, hi) = self.type_pair_ranges[ti];
+        self.live_pairs_in(lo, hi)
+    }
+
+    /// Widest run of live pairs on any single server whose pairs fall in
+    /// `[lo, hi)` (both bounds server-aligned: shard and type ranges are).
+    fn widest_live_in(&self, lo: usize, hi: usize) -> usize {
+        (lo / self.l..hi / self.l)
+            .map(|sv| self.live_pairs_in(sv * self.l, (sv + 1) * self.l))
+            .max()
+            .unwrap_or(0)
+    }
+
+    /// Widest live server of GPU type `ti`.
+    fn type_widest_live(&self, ti: usize) -> usize {
+        let (lo, hi) = self.type_pair_ranges[ti];
+        self.widest_live_in(lo, hi)
+    }
+
+    /// Widest live server anywhere — the gang-width bound a degraded
+    /// cluster can still honor (`l` while no pair has failed).
+    fn widest_live_server_global(&self) -> usize {
+        let total = self.shard_pairs.last().map_or(0, |&(_, hi)| hi);
+        self.widest_live_in(0, total)
+    }
+
+    /// Whether shard `k` still has a live pair of GPU type `ti`.
+    fn shard_type_live(&self, k: usize, ti: usize) -> bool {
+        let (slo, shi) = self.shard_pairs[k];
+        let (tlo, thi) = self.type_pair_ranges[ti];
+        let lo = slo.max(tlo);
+        let hi = shi.min(thi);
+        lo < hi && self.live_pairs_in(lo, hi) > 0
+    }
+
+    /// Widest live server of GPU type `ti` owned by shard `k`.
+    fn shard_type_widest(&self, k: usize, ti: usize) -> usize {
+        let (slo, shi) = self.shard_pairs[k];
+        let (tlo, thi) = self.type_pair_ranges[ti];
+        let lo = slo.max(tlo);
+        let hi = shi.min(thi);
+        if lo < hi {
+            self.widest_live_in(lo, hi)
+        } else {
+            0
+        }
+    }
+
     /// Submit one task with the default (paper base-case) options — see
     /// [`Self::submit_with`].
     pub fn submit(&mut self, task: Task) -> Vec<Json> {
@@ -388,12 +488,32 @@ impl ShardedService {
             } else {
                 None
             };
-        let bounce = bounce.or_else(|| match self.admission.check_gang_width(opts.g, self.l) {
+        // surviving-capacity gates, mirroring the unsharded daemon (both
+        // are no-ops on a healthy cluster): a fully failed cluster can
+        // never run anything, and a gang can only be as wide as the
+        // widest surviving server
+        let bounce = bounce.or_else(|| {
+            if self.failed.is_empty() || self.widest_live_server_global() > 0 {
+                return None;
+            }
+            self.admission.rejected_infeasible += 1;
+            Some(vec![
+                ("reason", s("infeasible-deadline")),
+                ("t_min", num(task.model.t_min(&self.iv))),
+                ("available", num(0.0)),
+            ])
+        });
+        let gang_bound = if self.failed.is_empty() {
+            self.l
+        } else {
+            self.widest_live_server_global()
+        };
+        let bounce = bounce.or_else(|| match self.admission.check_gang_width(opts.g, gang_bound) {
             Ok(()) => None,
             Err(v) => Some(vec![
                 ("reason", s(v.reason())),
                 ("g", num(opts.g as f64)),
-                ("l", num(self.l as f64)),
+                ("l", num(gang_bound as f64)),
             ]),
         });
         if let Some(extra) = bounce {
@@ -492,6 +612,59 @@ impl ShardedService {
             // through a plane (the caches exist for the `"any"` solves)
             let t_min = floor_model.t_min(&self.iv);
             let id = task.id;
+            // capacity may have shrunk since the submit-time gates ran
+            // (failures land between flushes): a task whose resolved type
+            // has no surviving pair — or no surviving server wide enough
+            // for its gang — bounces here, before routing would have to
+            // pick a shard that cannot host it
+            if !self.failed.is_empty() {
+                let extra: Option<Vec<(&'static str, Json)>> =
+                    if self.type_live_pairs(type_idx) == 0 {
+                        self.admission.rejected_infeasible += 1;
+                        Some(vec![
+                            ("reason", s("infeasible-deadline")),
+                            ("t_min", num(t_min)),
+                            ("available", num(0.0)),
+                        ])
+                    } else {
+                        let widest = self.type_widest_live(type_idx);
+                        if opts.g > widest {
+                            self.admission.rejected_gang += 1;
+                            Some(vec![
+                                ("reason", s("gang-too-wide")),
+                                ("g", num(opts.g as f64)),
+                                ("l", num(widest as f64)),
+                            ])
+                        } else {
+                            None
+                        }
+                    };
+                if let Some(extra) = extra {
+                    self.records
+                        .remember(id, TaskRecord::rejected(task.arrival, task.deadline));
+                    if let Some(j) = self.journal.as_mut() {
+                        j.record(
+                            "admit",
+                            t,
+                            vec![
+                                ("id", num(id as f64)),
+                                ("ok", Json::Bool(false)),
+                                ("reason", extra[0].1.clone()),
+                            ],
+                        );
+                    }
+                    let mut fields = vec![
+                        ("ok", Json::Bool(true)),
+                        ("op", s("submit")),
+                        ("id", num(id as f64)),
+                        ("now", num(self.now)),
+                        ("admitted", Json::Bool(false)),
+                    ];
+                    fields.extend(extra);
+                    responses[idx] = Some(obj(fields));
+                    continue;
+                }
+            }
             match self.admission.check_feasibility_bound(&task, t, t_min) {
                 Verdict::Admit => {
                     admitted.push((
@@ -548,6 +721,9 @@ impl ShardedService {
             // the clock only moves on admission
             self.now = self.now.max(t);
             self.drained = false;
+            // placements already finished can never be failure victims;
+            // prune before booking this batch's
+            self.inflight_tasks.retain(|_, f| f.finish > t + 1e-9);
             // EDF within the coalesced batch; the sort is stable, so
             // deadline ties keep submission order
             admitted.sort_by(|a, b| a.1.task.deadline.partial_cmp(&b.1.task.deadline).unwrap());
@@ -556,6 +732,13 @@ impl ShardedService {
             // reply races' arrival order
             let mut placed = self.dispatch(t, &admitted);
             placed.sort_by_key(|&(orig_idx, _)| orig_idx);
+            // submission index → admitted-vector position, for the
+            // in-flight bookkeeping below (placed ⊆ admitted)
+            let admitted_at: BTreeMap<usize, usize> = admitted
+                .iter()
+                .enumerate()
+                .map(|(j, e)| (e.0, j))
+                .collect();
             for (orig_idx, p) in placed {
                 let rec = TaskRecord {
                     admitted: true,
@@ -607,31 +790,24 @@ impl ShardedService {
                     j.record("place", t, jf);
                 }
                 self.records.remember(p.id, rec);
+                // remember the placement for fault injection: a later
+                // fail_* request evicts and re-places in-flight tasks
+                let (_, st, t_min) = &admitted[admitted_at[&orig_idx]];
+                self.inflight_tasks.insert(
+                    p.id,
+                    InflightTask {
+                        st: st.clone(),
+                        t_min: *t_min,
+                        pairs: p.pairs.clone(),
+                        finish: p.finish,
+                    },
+                );
                 responses[orig_idx] = Some(obj(fields));
             }
         }
         if self.journal.is_some() {
-            let mut steals = std::mem::take(&mut self.pending_steals);
-            steals.sort_unstable();
-            let mut events = std::mem::take(&mut self.pending_events);
-            // stable by shard: per-shard sequences keep their (already
-            // deterministic) internal order
-            events.sort_by_key(|&(shard, _)| shard);
+            self.journal_dispatch_effects(t);
             if let Some(j) = self.journal.as_mut() {
-                for (from, to, tasks) in steals {
-                    j.record(
-                        "steal",
-                        t,
-                        vec![
-                            ("from", num(from as f64)),
-                            ("to", num(to as f64)),
-                            ("tasks", num(tasks as f64)),
-                        ],
-                    );
-                }
-                for (shard, evs) in &events {
-                    j.record_cluster_events(Some(*shard), evs);
-                }
                 j.record(
                     "flush",
                     t,
@@ -648,6 +824,39 @@ impl ShardedService {
         let out: Vec<Json> = responses.into_iter().flatten().collect();
         debug_assert_eq!(out.len(), n, "every batch member got a response");
         out
+    }
+
+    /// Journal the side effects buffered during a dispatch — steal
+    /// notices and per-shard cluster events — in a deterministic order.
+    /// Replies race across shards, so [`Self::apply_reply`] only buffers
+    /// them; sorting here (steals lexicographically, events stably by
+    /// shard) makes the interleaving reproducible.
+    fn journal_dispatch_effects(&mut self, t: f64) {
+        if self.journal.is_none() {
+            return;
+        }
+        let mut steals = std::mem::take(&mut self.pending_steals);
+        steals.sort_unstable();
+        let mut events = std::mem::take(&mut self.pending_events);
+        // stable by shard: per-shard sequences keep their (already
+        // deterministic) internal order
+        events.sort_by_key(|&(shard, _)| shard);
+        if let Some(j) = self.journal.as_mut() {
+            for (from, to, tasks) in steals {
+                j.record(
+                    "steal",
+                    t,
+                    vec![
+                        ("from", num(from as f64)),
+                        ("to", num(to as f64)),
+                        ("tasks", num(tasks as f64)),
+                    ],
+                );
+            }
+            for (shard, evs) in &events {
+                j.record_cluster_events(Some(*shard), evs);
+            }
+        }
     }
 
     /// Route the EDF-ordered admitted batch across the shards in chunks
@@ -711,7 +920,33 @@ impl ShardedService {
                 // to re-run the floor solve per task per chunk
                 let cost: f64 = group.iter().map(|e| e.1.g as f64 * e.2).sum();
                 let pairs: usize = tasks.iter().map(|k| k.g).sum();
-                let shard = self.route_chunk(&eligible, ti);
+                // under failures, drop shards that cannot host this
+                // chunk: a dead pool places nothing, and a gang needs one
+                // surviving server at least as wide as itself.  Admission
+                // rechecked surviving capacity per task, so the filter
+                // never empties (the shard holding the type's widest live
+                // server always qualifies).
+                let group_elig: Vec<usize> = if self.failed.is_empty() {
+                    eligible.clone()
+                } else {
+                    let need = group.iter().map(|e| e.1.g).max().unwrap_or(1);
+                    eligible
+                        .iter()
+                        .copied()
+                        .filter(|&k| {
+                            if need > 1 {
+                                self.shard_type_widest(k, ti) >= need
+                            } else {
+                                self.shard_type_live(k, ti)
+                            }
+                        })
+                        .collect()
+                };
+                assert!(
+                    !group_elig.is_empty(),
+                    "admission rechecked surviving capacity for the batch"
+                );
+                let shard = self.route_chunk(&group_elig, ti);
                 self.inflight[shard][ti] += cost;
                 self.inflight_pairs[shard][ti] += pairs;
                 let tag = chunk_map.len() as u64;
@@ -846,6 +1081,225 @@ impl ShardedService {
         }
     }
 
+    /// Inject a server or pair failure at `when` (clamped to the clock):
+    /// the owning worker advances its event loop to the failure time and
+    /// drops the pairs ([`crate::service::shard::Shard::fail_pairs`]),
+    /// then the dispatcher evicts every in-flight task that held a
+    /// newly-failed pair and re-places each one through the normal
+    /// routing path when its remaining deadline slack still admits the
+    /// floor — the sharded counterpart of
+    /// [`crate::service::Service::fail`], with the same response shape
+    /// and journal lines (`fail` / `migrate` / `evict`).
+    pub fn fail(&mut self, server: Option<usize>, pair: Option<usize>, when: Option<f64>) -> Json {
+        let op = if server.is_some() { "fail_server" } else { "fail_pair" };
+        let total_pairs = self.shard_pairs.last().map_or(0, |&(_, hi)| hi);
+        let n_servers = total_pairs / self.l.max(1);
+        if server.map_or(false, |v| v >= n_servers)
+            || pair.map_or(false, |v| v >= total_pairs)
+        {
+            return obj(vec![
+                ("ok", Json::Bool(false)),
+                ("op", s(op)),
+                ("error", s("index out of range")),
+            ]);
+        }
+        let t_f = self.now.max(when.unwrap_or(0.0));
+        self.drained = false;
+        let target: Vec<usize> = match (server, pair) {
+            (Some(sv), _) => (sv * self.l..(sv + 1) * self.l).collect(),
+            (_, Some(i)) => vec![i],
+            _ => unreachable!("protocol guarantees one target"),
+        };
+        // servers are never split across shards, so exactly one worker
+        // owns the target; the Fail control job runs on that worker (it
+        // is never stolen) and replies with the newly-failed global pairs
+        let (tx, rx) = mpsc::channel();
+        let mut expected = 0;
+        for (k, &(lo, hi)) in self.shard_pairs.iter().enumerate() {
+            if target.iter().any(|&p| p >= lo && p < hi) {
+                self.pool.send(
+                    k,
+                    ShardJob::Fail {
+                        t: t_f,
+                        pairs: target.clone(),
+                        reply: tx.clone(),
+                    },
+                );
+                expected += 1;
+            }
+        }
+        drop(tx);
+        let mut newly: Vec<usize> = Vec::new();
+        let mut fail_events: Vec<(usize, Vec<ClusterEvent>)> = Vec::new();
+        for _ in 0..expected {
+            let (id, nw, load, evs) = rx.recv().expect("shard worker alive");
+            self.loads[id] = load;
+            newly.extend(nw);
+            if !evs.is_empty() {
+                fail_events.push((id, evs));
+            }
+        }
+        newly.sort_unstable();
+        fail_events.sort_by_key(|&(id, _)| id);
+        self.now = self.now.max(t_f);
+        self.failed.extend(newly.iter().copied());
+        if let Some(j) = self.journal.as_mut() {
+            let mut jf: Vec<(&str, Json)> = Vec::with_capacity(2);
+            if let Some(sv) = server {
+                jf.push(("server", num(sv as f64)));
+            }
+            if let Some(i) = pair {
+                jf.push(("pair", num(i as f64)));
+            }
+            jf.push((
+                "pairs",
+                Json::Arr(newly.iter().map(|&p| num(p as f64)).collect()),
+            ));
+            j.record("fail", t_f, jf);
+            for (id, evs) in &fail_events {
+                j.record_cluster_events(Some(*id), evs);
+            }
+        }
+        // victims: in-flight tasks holding a newly-failed pair, evicted
+        // and re-placed in EDF order (id tie-break) — the same order a
+        // fresh arrival batch would place in, so migration is
+        // deterministic and matches the unsharded daemon
+        self.inflight_tasks.retain(|_, f| f.finish > t_f + 1e-9);
+        let ids: Vec<usize> = self
+            .inflight_tasks
+            .iter()
+            .filter(|(_, f)| f.pairs.iter().any(|p| newly.binary_search(p).is_ok()))
+            .map(|(&id, _)| id)
+            .collect();
+        let mut victims: Vec<(usize, InflightTask)> = ids
+            .into_iter()
+            .map(|id| (id, self.inflight_tasks.remove(&id).expect("victim listed")))
+            .collect();
+        victims.sort_by(|a, b| {
+            a.1.st
+                .task
+                .deadline
+                .partial_cmp(&b.1.st.task.deadline)
+                .unwrap()
+                .then(a.0.cmp(&b.0))
+        });
+        let mut migrated_ids: Vec<usize> = Vec::new();
+        let mut evicted_ids: Vec<usize> = Vec::new();
+        for (id, mut v) in victims {
+            v.st.task.arrival = t_f;
+            let from = v.pairs.first().copied().unwrap_or(0);
+            let ti = v.st.type_idx;
+            let capacity = if v.st.g <= 1 {
+                self.type_live_pairs(ti) > 0
+            } else {
+                self.type_widest_live(ti) >= v.st.g
+            };
+            let feasible = if capacity {
+                self.admission.recheck_migration(&v.st.task, t_f, v.t_min)
+            } else {
+                // no surviving pair of the task's type (or no server wide
+                // enough for its gang): evicted outright, booked under
+                // the same counter
+                self.admission.evicted_infeasible += 1;
+                false
+            };
+            if feasible {
+                // the normal routing path, one victim at a time so the
+                // EDF order above IS the placement order — a new
+                // placement, not a new admission
+                let entry = (0usize, v.st.clone(), v.t_min);
+                let placed = self.dispatch(t_f, std::slice::from_ref(&entry));
+                let p = &placed[0].1;
+                if let Some(j) = self.journal.as_mut() {
+                    let mut jf = vec![
+                        ("id", num(id as f64)),
+                        ("from", num(from as f64)),
+                        ("pair", num(p.pair as f64)),
+                        ("start", num(p.start)),
+                        ("mu", num(p.finish)),
+                    ];
+                    if p.pairs.len() > 1 {
+                        jf.push(("g", num(p.pairs.len() as f64)));
+                        jf.push((
+                            "pairs",
+                            Json::Arr(p.pairs.iter().map(|&q| num(q as f64)).collect()),
+                        ));
+                    }
+                    j.record("migrate", t_f, jf);
+                }
+                self.journal_dispatch_effects(t_f);
+                self.records.remember(
+                    id,
+                    TaskRecord {
+                        admitted: true,
+                        pair: Some(p.pair),
+                        g: p.pairs.len(),
+                        pairs: p.pairs.clone(),
+                        start: p.start,
+                        finish: p.finish,
+                        deadline: p.deadline,
+                    },
+                );
+                let pairs = p.pairs.clone();
+                let finish = p.finish;
+                migrated_ids.push(id);
+                self.inflight_tasks.insert(
+                    id,
+                    InflightTask {
+                        st: v.st,
+                        t_min: v.t_min,
+                        pairs,
+                        finish,
+                    },
+                );
+            } else {
+                if let Some(j) = self.journal.as_mut() {
+                    j.record(
+                        "evict",
+                        t_f,
+                        vec![
+                            ("id", num(id as f64)),
+                            ("from", num(from as f64)),
+                            ("reason", s(EVICTED_INFEASIBLE)),
+                        ],
+                    );
+                }
+                // a later query answers "rejected", like any task the
+                // service could not carry to completion
+                self.records
+                    .remember(id, TaskRecord::rejected(t_f, v.st.task.deadline));
+                evicted_ids.push(id);
+            }
+        }
+        if let Some(j) = self.journal.as_mut() {
+            j.flush();
+        }
+        self.maybe_emit_metrics();
+        let mut fields = vec![("ok", Json::Bool(true)), ("op", s(op))];
+        if let Some(sv) = server {
+            fields.push(("server", num(sv as f64)));
+        }
+        if let Some(i) = pair {
+            fields.push(("pair", num(i as f64)));
+        }
+        fields.push(("now", num(t_f)));
+        fields.push((
+            "failed_pairs",
+            Json::Arr(newly.iter().map(|&p| num(p as f64)).collect()),
+        ));
+        fields.push(("migrated", num(migrated_ids.len() as f64)));
+        fields.push(("evicted", num(evicted_ids.len() as f64)));
+        fields.push((
+            "migrated_ids",
+            Json::Arr(migrated_ids.iter().map(|&i| num(i as f64)).collect()),
+        ));
+        fields.push((
+            "evicted_ids",
+            Json::Arr(evicted_ids.iter().map(|&i| num(i as f64)).collect()),
+        ));
+        obj(fields)
+    }
+
     /// Gather per-shard fragments (draining first when `drain`), merge
     /// them, and overlay the dispatcher-side admission counters and steal
     /// count.
@@ -901,6 +1355,8 @@ impl ShardedService {
         merged.rejected_invalid = self.admission.rejected_invalid;
         merged.rejected_type = self.admission.rejected_type;
         merged.rejected_gang = self.admission.rejected_gang;
+        merged.migrated = self.admission.migrated;
+        merged.evicted = self.admission.evicted_infeasible;
         merged.steals = self.pool.steals();
         merged.now = merged.now.max(self.now);
         if drain {
@@ -1064,6 +1520,16 @@ impl ShardedService {
                 // deferred submit responses
                 let mut out = self.flush();
                 out.push(self.metrics_json());
+                (out, false)
+            }
+            Request::FailServer { server, t } => {
+                let mut out = self.flush();
+                out.push(self.fail(Some(server), None, t));
+                (out, false)
+            }
+            Request::FailPair { pair, t } => {
+                let mut out = self.flush();
+                out.push(self.fail(None, Some(pair), t));
                 (out, false)
             }
             Request::Shutdown => (self.shutdown(), true),
@@ -1569,5 +2035,124 @@ mod tests {
         assert!(rec_tight.deadline_met());
         assert!(rec_loose.start >= rec_tight.finish - 1e-9);
         assert!(rec_loose.deadline_met());
+    }
+
+    #[test]
+    fn fail_server_migrates_and_later_traffic_avoids_it() {
+        let mut service = svc(2, 0.0);
+        let out = service.submit(mk_task(0, 0.0, 0.5, 10.0));
+        assert_eq!(out[0].get("admitted"), Some(&Json::Bool(true)));
+        let pair0 = service.record(0).unwrap().pair.unwrap();
+        let sv = pair0 / 2; // l = 2 in small_cfg
+        let resp = service.fail(Some(sv), None, None);
+        assert_eq!(resp.get("ok"), Some(&Json::Bool(true)));
+        assert_eq!(resp.get("migrated").unwrap().as_f64(), Some(1.0));
+        assert_eq!(resp.get("evicted").unwrap().as_f64(), Some(0.0));
+        let failed: Vec<usize> = resp
+            .get("failed_pairs")
+            .unwrap()
+            .as_arr()
+            .unwrap()
+            .iter()
+            .filter_map(Json::as_f64)
+            .map(|p| p as usize)
+            .collect();
+        assert_eq!(failed, vec![sv * 2, sv * 2 + 1]);
+        let rec = service.record(0).unwrap();
+        let new_pair = rec.pair.unwrap();
+        assert!(!failed.contains(&new_pair), "migrated off the dead server");
+        assert!(rec.deadline_met());
+        // later traffic routes around the dead server
+        for i in 1..9 {
+            let out = service.submit(mk_task(i, 0.0, 0.5, 10.0));
+            assert_eq!(out[0].get("admitted"), Some(&Json::Bool(true)));
+            let p = service.record(i).unwrap().pair.unwrap();
+            assert!(!failed.contains(&p), "task {i} landed on a dead pair");
+        }
+        // the obs rendering carries the migration counters
+        let m = service.metrics_json();
+        assert_eq!(m.get("migrated").unwrap().as_f64(), Some(1.0));
+        assert_eq!(m.get("evicted").unwrap().as_f64(), Some(0.0));
+        let fin = service.shutdown();
+        let snap = fin.last().unwrap();
+        assert_eq!(snap.get("violations").unwrap().as_f64(), Some(0.0));
+        assert_eq!(snap.get("admitted").unwrap().as_f64(), Some(9.0));
+        // the frozen snapshot schema does not grow
+        assert!(snap.get("migrated").is_none());
+    }
+
+    #[test]
+    fn late_pair_failure_evicts_when_slack_is_gone() {
+        let mut service = svc(1, 0.0);
+        let iv = ScalingInterval::wide();
+        let mut task = mk_task(0, 0.0, 0.5, 10.0);
+        let t_min = task.model.t_min(&iv);
+        task.deadline = 1.05 * t_min;
+        let out = service.submit(task);
+        assert_eq!(out[0].get("admitted"), Some(&Json::Bool(true)));
+        let p = service.record(0).unwrap().pair.unwrap();
+        // by half the floor, the remaining slack cannot fit t_min anywhere
+        let resp = service.fail(None, Some(p), Some(0.5 * t_min));
+        assert_eq!(resp.get("migrated").unwrap().as_f64(), Some(0.0));
+        assert_eq!(resp.get("evicted").unwrap().as_f64(), Some(1.0));
+        assert_eq!(resp.get("evicted_ids").unwrap().as_arr().unwrap().len(), 1);
+        // the eviction books as a rejection, not a violation
+        assert!(!service.record(0).unwrap().admitted);
+        // idempotent: the pair is already dead
+        let again = service.fail(None, Some(p), None);
+        assert!(again
+            .get("failed_pairs")
+            .unwrap()
+            .as_arr()
+            .unwrap()
+            .is_empty());
+        // bounds-checked like the daemon
+        let oob = service.fail(Some(10_000), None, None);
+        assert_eq!(oob.get("ok"), Some(&Json::Bool(false)));
+        let fin = service.shutdown();
+        let snap = fin.last().unwrap();
+        assert_eq!(snap.get("violations").unwrap().as_f64(), Some(0.0));
+        assert_eq!(snap.get("admitted").unwrap().as_f64(), Some(1.0));
+    }
+
+    #[test]
+    fn degraded_cluster_bounces_too_wide_gangs() {
+        // l = 2, 2 servers; failing one pair of each leaves width-1
+        // servers only, so a g=2 gang must bounce with the surviving
+        // width while width-1 work still flows
+        let mut cfg = small_cfg();
+        cfg.cluster.total_pairs = 4;
+        let mut service = ShardedService::new(
+            &cfg,
+            OnlinePolicyKind::Edl,
+            true,
+            1,
+            RoutePolicy::LeastLoaded,
+            0.0,
+            false,
+        )
+        .unwrap();
+        assert_eq!(
+            service.fail(None, Some(1), None).get("ok"),
+            Some(&Json::Bool(true))
+        );
+        assert_eq!(
+            service.fail(None, Some(2), None).get("ok"),
+            Some(&Json::Bool(true))
+        );
+        let opts = SubmitOpts {
+            g: 2,
+            ..SubmitOpts::default()
+        };
+        let out = service.submit_with(mk_task(0, 0.0, 0.5, 10.0), opts);
+        assert_eq!(out[0].get("admitted"), Some(&Json::Bool(false)));
+        assert_eq!(out[0].get("reason").unwrap().as_str(), Some("gang-too-wide"));
+        assert_eq!(out[0].get("l").unwrap().as_f64(), Some(1.0));
+        let ok = service.submit(mk_task(1, 0.0, 0.5, 10.0));
+        assert_eq!(ok[0].get("admitted"), Some(&Json::Bool(true)));
+        let fin = service.shutdown();
+        let snap = fin.last().unwrap();
+        assert_eq!(snap.get("violations").unwrap().as_f64(), Some(0.0));
+        assert_eq!(snap.get("rejected_gang").unwrap().as_f64(), Some(1.0));
     }
 }

@@ -170,6 +170,10 @@ impl EventEngine {
             let mut latest = f64::NEG_INFINITY;
             let mut all_idle = true;
             for j in cluster.server_pairs(s) {
+                if cluster.pair_failed(j) {
+                    // permanently off; must not block reclaiming the rest
+                    continue;
+                }
                 match cluster.pairs[j].power {
                     PairPower::Idle => latest = latest.max(cluster.pairs[j].idle_since),
                     _ => {
@@ -196,9 +200,12 @@ impl EventEngine {
             return;
         }
         let rho = cluster.cfg.rho as f64;
-        let all_idle_long = cluster.server_pairs(server).all(|i| match cluster.pairs[i].power {
-            PairPower::Idle => cluster.pairs[i].idle_span(now) >= rho - 1e-9,
-            _ => false,
+        let all_idle_long = cluster.server_pairs(server).all(|i| {
+            cluster.pair_failed(i)
+                || match cluster.pairs[i].power {
+                    PairPower::Idle => cluster.pairs[i].idle_span(now) >= rho - 1e-9,
+                    _ => false,
+                }
         });
         if all_idle_long {
             cluster.turn_off_server(server, now);

@@ -1,11 +1,12 @@
 //! Structured append-only JSONL event journal: one JSON object per line,
 //! recording every admission decision, placement, departure, power
-//! transition, steal, flush, request, and session transition the service
-//! observes — the durable substrate the ROADMAP's failure-recovery
-//! (`repro recover`) and RLS power-model-fitting items build on, and the
-//! long-open `--log` request trace (request lines are journaled verbatim
-//! with their session/rid stamps, so a journal alone reconstructs the
-//! merged input trace).
+//! transition, steal, flush, request, session transition, and
+//! failure/migration/eviction the service observes — the durable
+//! substrate crash recovery (`repro recover`, [`crate::service::recover`])
+//! replays and the ROADMAP's RLS power-model-fitting item builds on, and
+//! the long-open `--log` request trace (request lines are journaled
+//! verbatim with their session/rid stamps, so a journal alone
+//! reconstructs the merged input trace).
 //!
 //! Journaling is strictly observational: with `--journal` disabled the
 //! service emits byte-identical response lines (property-tested in
@@ -43,6 +44,10 @@ pub struct Journal {
     out: Box<dyn Write>,
     buf: String,
     lines: u64,
+    /// `--journal-sync`: a second handle to the journal file, fsynced
+    /// after every line (durability against host crashes, not just
+    /// process crashes).  `None` for plain journals and test writers.
+    sync: Option<File>,
 }
 
 impl fmt::Debug for Journal {
@@ -57,12 +62,24 @@ impl Journal {
         Ok(Journal::to_writer(BufWriter::new(File::create(path)?)))
     }
 
+    /// Like [`Journal::create`], but additionally `fsync`s the file after
+    /// every line (`--journal-sync`): a machine crash loses at most the
+    /// line being written, at a per-event syscall cost.
+    pub fn create_sync(path: &str) -> io::Result<Journal> {
+        let f = File::create(path)?;
+        let sync = f.try_clone()?;
+        let mut j = Journal::to_writer(BufWriter::new(f));
+        j.sync = Some(sync);
+        Ok(j)
+    }
+
     /// A journal appending to any writer (tests capture lines in memory).
     pub fn to_writer<W: Write + 'static>(w: W) -> Journal {
         Journal {
             out: Box::new(w),
             buf: String::new(),
             lines: 0,
+            sync: None,
         }
     }
 
@@ -100,6 +117,14 @@ impl Journal {
         Json::Obj(m).render_compact_into(&mut self.buf);
         self.buf.push('\n');
         let _ = self.out.write_all(self.buf.as_bytes());
+        // line-granular flush: the journal is the crash-recovery
+        // substrate, so a committed admission must not sit in a BufWriter
+        // when the process dies — a crash loses at most one partial line
+        // (which the recover parser and journal_check.py tolerate)
+        let _ = self.out.flush();
+        if let Some(f) = &self.sync {
+            let _ = f.sync_data();
+        }
         self.lines += 1;
     }
 
@@ -143,8 +168,9 @@ impl Journal {
         self.lines
     }
 
-    /// Flush the underlying writer (called on shutdown, session close,
-    /// and periodic metrics lines; per-event lines stay buffered).
+    /// Flush the underlying writer.  Every recorded line already flushes
+    /// itself (crash safety); this remains for shutdown paths and custom
+    /// writers with deeper buffering.
     pub fn flush(&mut self) {
         let _ = self.out.flush();
     }
@@ -167,6 +193,20 @@ mod tests {
         fn flush(&mut self) -> io::Result<()> {
             Ok(())
         }
+    }
+
+    #[test]
+    fn every_line_lands_without_an_explicit_flush() {
+        // crash-safety contract: a journaled event must be visible in the
+        // underlying sink immediately, even through a BufWriter, without
+        // waiting for drop/flush — a kill -9 right after `record` returns
+        // must not lose the line
+        let sink = SharedBuf::default();
+        let mut j = Journal::to_writer(BufWriter::new(sink.clone()));
+        j.record("admit", 1.0, vec![("id", num(1.0)), ("ok", Json::Bool(true))]);
+        let text = String::from_utf8(sink.0.lock().unwrap().clone()).unwrap();
+        assert_eq!(text, "{\"ev\":\"admit\",\"id\":1,\"ok\":true,\"t\":1}\n");
+        std::mem::forget(j); // simulate the crash: no Drop, no flush
     }
 
     #[test]

@@ -106,6 +106,15 @@ pub struct Snapshot {
     /// zero for the unsharded daemon, which places at admission).  Merges
     /// elementwise and remaps like the other per-type families.
     pub queued_by_type: Vec<u64>,
+    /// Tasks evicted by a server/pair failure and re-placed on a
+    /// surviving pair.  Renders on the `metrics` body only
+    /// ([`Snapshot::to_json_obs`]) — the `snapshot` schema is frozen and
+    /// fault-free runs must stay byte-identical to the oracle.
+    pub migrated: u64,
+    /// Tasks evicted by a failure that no surviving pair could still
+    /// finish in time (`evicted-infeasible`).  Metrics-only, like
+    /// `migrated`.
+    pub evicted: u64,
 }
 
 impl Snapshot {
@@ -161,6 +170,8 @@ impl Snapshot {
             // like e_by_type: one homogeneous slot, remapped by typed
             // services; the backlog itself is known only to the caller
             queued_by_type: vec![0],
+            migrated: adm.migrated,
+            evicted: adm.evicted_infeasible,
         }
     }
 
@@ -247,6 +258,8 @@ impl Snapshot {
             m.cache_misses += p.cache_misses;
             m.cache_planes += p.cache_planes;
             m.cache_epoch_flushes += p.cache_epoch_flushes;
+            m.migrated += p.migrated;
+            m.evicted += p.evicted;
         }
         m.shards = parts.len();
         m
@@ -340,6 +353,8 @@ impl Snapshot {
                     .collect(),
             ),
         );
+        m.insert("migrated".to_string(), Json::Num(self.migrated as f64));
+        m.insert("evicted".to_string(), Json::Num(self.evicted as f64));
         Json::Obj(m)
     }
 }
@@ -476,6 +491,8 @@ mod tests {
             cache_planes: 2,
             cache_epoch_flushes: 1,
             queued_by_type: vec![4, 0],
+            migrated: 2,
+            evicted: 1,
             ..Snapshot::default()
         };
         let b = Snapshot {
@@ -483,6 +500,7 @@ mod tests {
             cache_misses: 3,
             cache_planes: 3,
             queued_by_type: vec![0, 7],
+            migrated: 1,
             ..Snapshot::default()
         };
         let m = Snapshot::merge(&[a, b]);
@@ -491,14 +509,20 @@ mod tests {
         assert_eq!(m.cache_planes, 5);
         assert_eq!(m.cache_epoch_flushes, 1);
         assert_eq!(m.queued_by_type, vec![4, 7]);
+        assert_eq!(m.migrated, 3);
+        assert_eq!(m.evicted, 1);
         // the frozen snapshot schema must not grow the new keys...
         let frozen = m.to_json();
         assert!(frozen.get("cache_hits").is_none());
         assert!(frozen.get("queued_by_type").is_none());
+        assert!(frozen.get("migrated").is_none());
+        assert!(frozen.get("evicted").is_none());
         // ...while the metrics rendering is a strict superset of it
         let obs = m.to_json_obs();
         assert_eq!(obs.get("cache_hits").unwrap().as_f64(), Some(15.0));
         assert_eq!(obs.get("cache_epoch_flushes").unwrap().as_f64(), Some(1.0));
+        assert_eq!(obs.get("migrated").unwrap().as_f64(), Some(3.0));
+        assert_eq!(obs.get("evicted").unwrap().as_f64(), Some(1.0));
         let q = obs.get("queued_by_type").unwrap().as_arr().unwrap();
         assert_eq!(q.len(), 2);
         assert_eq!(q[1].as_f64(), Some(7.0));

@@ -15,9 +15,16 @@
 //! * [`metrics`] — live energy decomposition + admission counters, with
 //!   per-shard fragment merging.
 //! * [`journal`] — the structured JSONL event journal behind `--journal`:
-//!   admissions, placements, departures, power transitions, steals,
-//!   flushes, request traces, and session lifecycles, stamped with slot /
-//!   shard / session / rid (see `docs/OBSERVABILITY.md`).
+//!   admissions, placements, departures, power transitions, failures,
+//!   migrations, evictions, steals, flushes, request traces, and session
+//!   lifecycles, stamped with slot / shard / session / rid (see
+//!   `docs/OBSERVABILITY.md`), flushed line-by-line so the journal
+//!   survives a crash minus at most one torn tail line.
+//! * [`recover`] — journal-driven crash recovery (`repro recover`):
+//!   extract the journal's verbatim request trace and replay it through
+//!   the same front end, chained ahead of new input, rebuilding
+//!   bit-identical service state; plus replay-side fault injection
+//!   (`--fail-at`).
 //! * [`daemon`] — the single-threaded [`daemon::Service`] loop behind
 //!   `repro serve` (stdin) and `repro replay` (session files), with
 //!   graceful drain.
@@ -44,6 +51,7 @@ pub mod events;
 pub mod journal;
 pub mod metrics;
 pub mod protocol;
+pub mod recover;
 pub mod session;
 pub mod shard;
 pub mod transport;
@@ -56,6 +64,7 @@ pub use events::EventEngine;
 pub use journal::Journal;
 pub use metrics::Snapshot;
 pub use protocol::{parse_request, parse_request_rid, Request, SubmitOpts, TypePref};
+pub use recover::{inject_failures, journal_requests};
 pub use session::{serve_mux, serve_session, ServiceCore};
 pub use shard::{Placement, ServiceTask, Shard, ShardLoad, ShardPool, TypeLoad};
 pub use transport::{Connection, ListenAddr, Listener, StaticListener, StdioListener};

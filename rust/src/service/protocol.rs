@@ -11,6 +11,8 @@
 //! {"op":"snapshot"}
 //! {"op":"metrics"}
 //! {"op":"ping"}
+//! {"op":"fail_server","server":3}
+//! {"op":"fail_pair","pair":12,"t":40}
 //! {"op":"shutdown"}
 //! ```
 //!
@@ -97,8 +99,63 @@ pub enum Request {
     /// directly (clock mode, live sessions, accepted requests) without
     /// flushing a pending batch; a bare core answers a minimal [`pong`].
     Ping,
+    /// Fault injection: kill every pair of one server at time `t`
+    /// (default: the service's logical now).  In-flight tasks on the
+    /// server are evicted and rescheduled onto surviving pairs when their
+    /// remaining deadline slack admits a feasible `t_min`, rejected with
+    /// reason `evicted-infeasible` otherwise.  The server leaves every
+    /// placement index for good (see `docs/PROTOCOL.md`).
+    FailServer {
+        /// Global server index to fail.
+        server: usize,
+        /// Failure time in slots; `None` = now.
+        t: Option<f64>,
+    },
+    /// Fault injection at single-pair granularity ([`Request::FailServer`]
+    /// semantics for one CPU-GPU pair).
+    FailPair {
+        /// Global pair index to fail.
+        pair: usize,
+        /// Failure time in slots; `None` = now.
+        t: Option<f64>,
+    },
     /// Graceful drain: finish everything queued, power down, report.
     Shutdown,
+}
+
+/// Parse a non-negative-integer field (shared by `query` ids and the
+/// fault-injection indices): saturating casts would silently redirect
+/// `-1` or `7.9` at a different target, so anything non-integral is
+/// rejected instead.
+fn req_index(j: &Json, op: &str, key: &str) -> Result<usize, String> {
+    let v = j
+        .get(key)
+        .and_then(Json::as_f64)
+        .ok_or_else(|| format!("{op}: missing numeric '{key}'"))?;
+    if !(v.fract() == 0.0 && (0.0..=usize::MAX as f64).contains(&v)) {
+        return Err(format!(
+            "{op}: '{key}' must be a non-negative integer, got {v}"
+        ));
+    }
+    Ok(v as usize)
+}
+
+/// Parse the optional `t` (failure time) of a fault-injection request.
+fn req_opt_time(j: &Json, op: &str) -> Result<Option<f64>, String> {
+    match j.get("t") {
+        None => Ok(None),
+        Some(v) => {
+            let t = v
+                .as_f64()
+                .ok_or_else(|| format!("{op}: 't' must be a number"))?;
+            if !t.is_finite() || t < 0.0 {
+                return Err(format!(
+                    "{op}: 't' must be a finite non-negative time, got {t}"
+                ));
+            }
+            Ok(Some(t))
+        }
+    }
 }
 
 /// Parse one wire line.  `Ok(None)` = blank/comment line (skip).
@@ -176,6 +233,14 @@ pub fn parse_request_rid(line: &str) -> Result<Option<(Request, Option<Json>)>, 
         "snapshot" => Request::Snapshot,
         "metrics" => Request::Metrics,
         "ping" => Request::Ping,
+        "fail_server" => Request::FailServer {
+            server: req_index(&j, "fail_server", "server")?,
+            t: req_opt_time(&j, "fail_server")?,
+        },
+        "fail_pair" => Request::FailPair {
+            pair: req_index(&j, "fail_pair", "pair")?,
+            t: req_opt_time(&j, "fail_pair")?,
+        },
         "shutdown" => Request::Shutdown,
         other => return Err(format!("unknown op '{other}'")),
     };
@@ -349,6 +414,29 @@ mod tests {
         assert!(parse_request(r#"{"op":"submit"}"#).is_err());
         assert!(parse_request(r#"{"op":"query"}"#).is_err());
         assert!(parse_request(r#"{"id":3}"#).is_err());
+    }
+
+    #[test]
+    fn fail_ops_parse_and_validate() {
+        match parse_request(r#"{"op":"fail_server","server":3}"#).unwrap().unwrap() {
+            Request::FailServer { server, t } => {
+                assert_eq!(server, 3);
+                assert!(t.is_none());
+            }
+            other => panic!("wrong request: {other:?}"),
+        }
+        match parse_request(r#"{"op":"fail_pair","pair":12,"t":40}"#).unwrap().unwrap() {
+            Request::FailPair { pair, t } => {
+                assert_eq!(pair, 12);
+                assert_eq!(t, Some(40.0));
+            }
+            other => panic!("wrong request: {other:?}"),
+        }
+        assert!(parse_request(r#"{"op":"fail_server"}"#).is_err());
+        assert!(parse_request(r#"{"op":"fail_server","server":-1}"#).is_err());
+        assert!(parse_request(r#"{"op":"fail_server","server":1.5}"#).is_err());
+        assert!(parse_request(r#"{"op":"fail_pair","pair":0,"t":-3}"#).is_err());
+        assert!(parse_request(r#"{"op":"fail_pair","pair":0,"t":"x"}"#).is_err());
     }
 
     #[test]

@@ -1,0 +1,190 @@
+//! Journal-driven crash recovery: rebuild a dead service from the
+//! verbatim `request` lines its event journal retained.
+//!
+//! The journal ([`crate::service::Journal`]) records every accepted
+//! request line verbatim (`{"ev":"request","line":…}`), flushed
+//! line-by-line, so after a crash — `kill -9` included — the journal IS
+//! the request trace up to the instant of death, minus at most one
+//! partial trailing line.  Recovery is therefore replay:
+//! [`journal_requests`] extracts the request lines, and `repro recover`
+//! feeds them through the **same** [`VirtualClock`][vc] front end that
+//! produced them, chained ahead of any new input, in one session.  The
+//! single chained session matters: a crash can split an admission slot's
+//! coalesced batch across the replayed prefix and the resumed tail, and
+//! only a continuous session lets those submits coalesce back into the
+//! batch they would have formed uninterrupted.  The result is
+//! bit-identical daemon state — same placements, same energy books, same
+//! response bytes — property-tested in `tests/integration_recovery.rs`.
+//!
+//! [`inject_failures`] is the replay-side fault-injection hook behind
+//! `--fail-at`: it weaves synthesized `fail_server` requests into a
+//! request trace at chosen arrival slots, so kill-and-recover batteries
+//! can exercise eviction, migration, and the `evicted-infeasible` path
+//! deterministically.
+//!
+//! [vc]: crate::service::VirtualClock
+
+use crate::util::json::{num, obj, Json};
+
+/// Extract the verbatim request lines from journal text, in order.
+///
+/// Tolerates exactly one truncated trailing line — the crash artifact a
+/// line-granular-flushed journal can legally end with.  An unparsable
+/// line anywhere *before* the tail is corruption, not a crash, and
+/// errors out rather than silently replaying a damaged history.
+///
+/// # Examples
+///
+/// ```
+/// use dvfs_sched::service::recover::journal_requests;
+///
+/// let journal = "{\"ev\":\"request\",\"line\":\"{\\\"op\\\":\\\"ping\\\"}\",\"sid\":1,\"t\":0}\n\
+///                {\"ev\":\"admit\",\"id\":0,\"ok\":true,\"t\":0}\n\
+///                {\"ev\":\"request\",\"line\":\"{\\\"op\\\":\\\"snap"; // torn write
+/// let reqs = journal_requests(journal).unwrap();
+/// assert_eq!(reqs, vec!["{\"op\":\"ping\"}".to_string()]);
+/// ```
+pub fn journal_requests(text: &str) -> Result<Vec<String>, String> {
+    let lines: Vec<&str> = text.lines().collect();
+    let mut out = Vec::new();
+    for (i, raw) in lines.iter().enumerate() {
+        let line = raw.trim();
+        if line.is_empty() {
+            continue;
+        }
+        let v = match Json::parse(line) {
+            Ok(v) => v,
+            Err(e) => {
+                if i + 1 == lines.len() {
+                    // the one torn tail a crash mid-write leaves behind
+                    break;
+                }
+                return Err(format!("journal line {}: {e}", i + 1));
+            }
+        };
+        if v.get("ev").and_then(Json::as_str) == Some("request") {
+            match v.get("line").and_then(Json::as_str) {
+                Some(l) => out.push(l.to_string()),
+                None => {
+                    return Err(format!(
+                        "journal line {}: request event without a line field",
+                        i + 1
+                    ))
+                }
+            }
+        }
+    }
+    Ok(out)
+}
+
+/// Weave synthesized `fail_server` requests into a request-line trace
+/// (`--fail-at slot:server[,...]`).
+///
+/// Each `(slot, server)` inserts `{"op":"fail_server","server":S,"t":slot}`
+/// immediately before the first submit whose task arrival is `>= slot`,
+/// so under the virtual clock the failure lands at `max(now, slot)` —
+/// after everything that arrived earlier, before everything that arrives
+/// later, exactly where a real mid-run failure would.  Faults past the
+/// last arrival append at the trace tail (note a trailing `shutdown`
+/// line ends the session first; place faults inside the arrival span to
+/// see them acted on).
+pub fn inject_failures(lines: &[String], fail_at: &[(f64, usize)]) -> Vec<String> {
+    let mut faults: Vec<(f64, usize)> = fail_at.to_vec();
+    faults.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap().then(a.1.cmp(&b.1)));
+    let mut next = faults.into_iter().peekable();
+    let mut out = Vec::with_capacity(lines.len() + fail_at.len());
+    for l in lines {
+        let arrival = Json::parse(l.trim())
+            .ok()
+            .filter(|v| v.get("op").and_then(Json::as_str) == Some("submit"))
+            .and_then(|v| {
+                v.get("task")
+                    .and_then(|t| t.get("arrival"))
+                    .and_then(Json::as_f64)
+            });
+        if let Some(a) = arrival {
+            while next.peek().map_or(false, |&(slot, _)| slot <= a) {
+                let (slot, sv) = next.next().expect("peeked");
+                out.push(fail_line(slot, sv));
+            }
+        }
+        out.push(l.clone());
+    }
+    for (slot, sv) in next {
+        out.push(fail_line(slot, sv));
+    }
+    out
+}
+
+/// One synthesized fault request, rendered through the canonical writer
+/// so injected lines are byte-stable across runs.
+fn fail_line(slot: f64, server: usize) -> String {
+    obj(vec![
+        ("op", Json::Str("fail_server".to_string())),
+        ("server", num(server as f64)),
+        ("t", num(slot)),
+    ])
+    .render_compact()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn extracts_request_lines_and_tolerates_one_torn_tail() {
+        let journal = concat!(
+            "{\"ev\":\"session\",\"sid\":1,\"state\":\"open\",\"t\":0}\n",
+            "{\"ev\":\"request\",\"line\":\"{\\\"op\\\":\\\"ping\\\"}\",\"sid\":1,\"t\":0}\n",
+            "{\"ev\":\"admit\",\"id\":0,\"ok\":true,\"t\":0}\n",
+            "{\"ev\":\"request\",\"line\":\"{\\\"op\\\":\\\"snapshot\\\"}\",\"sid\":1,\"t\":0}\n",
+            "{\"ev\":\"request\",\"line\":\"{\\\"op\\\":\\\"sh"
+        );
+        let reqs = journal_requests(journal).unwrap();
+        assert_eq!(
+            reqs,
+            vec!["{\"op\":\"ping\"}".to_string(), "{\"op\":\"snapshot\"}".to_string()]
+        );
+        // a complete journal (trailing newline, no torn line) keeps all
+        let whole = journal_requests(&journal[..journal.rfind('\n').unwrap() + 1]).unwrap();
+        assert_eq!(whole, reqs);
+    }
+
+    #[test]
+    fn corruption_before_the_tail_is_an_error() {
+        let journal = "not json at all\n{\"ev\":\"request\",\"line\":\"{}\",\"t\":0}\n";
+        let err = journal_requests(journal).unwrap_err();
+        assert!(err.contains("line 1"), "{err}");
+        // a request event missing its line payload is also an error
+        let bad = "{\"ev\":\"request\",\"t\":0}\n{\"ev\":\"flush\",\"n\":0,\"t\":0}\n";
+        assert!(journal_requests(bad).is_err());
+    }
+
+    #[test]
+    fn failure_injection_lands_before_the_matching_slot() {
+        let lines: Vec<String> = vec![
+            r#"{"op":"submit","task":{"arrival":0}}"#.into(),
+            r#"{"op":"submit","task":{"arrival":3}}"#.into(),
+            r#"{"op":"shutdown"}"#.into(),
+        ];
+        let out = inject_failures(&lines, &[(2.0, 5)]);
+        assert_eq!(out.len(), 4);
+        assert_eq!(out[0], lines[0]);
+        assert_eq!(out[1], r#"{"op":"fail_server","server":5,"t":2}"#);
+        assert_eq!(out[2], lines[1]);
+        assert_eq!(out[3], lines[2]);
+        // same-slot faults fire ahead of the arrival that shares the slot
+        let tie = inject_failures(&lines, &[(3.0, 1), (0.0, 2)]);
+        assert_eq!(tie[0], r#"{"op":"fail_server","server":2,"t":0}"#);
+        assert_eq!(tie[2], r#"{"op":"fail_server","server":1,"t":3}"#);
+        // a slot past every arrival appends at the tail
+        let head = lines[..2].to_vec();
+        let tail = inject_failures(&head, &[(9.0, 1)]);
+        assert_eq!(
+            tail.last().unwrap(),
+            r#"{"op":"fail_server","server":1,"t":9}"#
+        );
+        // no faults → the trace passes through untouched
+        assert_eq!(inject_failures(&lines, &[]), lines);
+    }
+}

@@ -214,6 +214,18 @@ pub enum ShardJob {
         /// Where to send the fragment.
         reply: Sender<(usize, Snapshot, Vec<ClusterEvent>)>,
     },
+    /// Fail a set of *global* pair indices at time `t` (a `fail_server`
+    /// / `fail_pair` request mapped onto this shard).  A control job —
+    /// never stolen: only the owning worker may mutate the shard.
+    Fail {
+        /// Failure time (the dispatcher's logical clock).
+        t: f64,
+        /// Global pair indices to fail (pre-filtered to this shard).
+        pairs: Vec<usize>,
+        /// Where to send `(shard, newly failed global pairs, load after
+        /// the failure, observed cluster events)`.
+        reply: Sender<(usize, Vec<usize>, ShardLoad, Vec<ClusterEvent>)>,
+    },
     /// Enable cluster-event observation on every pool of the shard
     /// (`--journal`).  A control job — never stolen — queued by the
     /// dispatcher before any batch, so every placement is observed.
@@ -487,7 +499,9 @@ impl Shard {
                     PairPower::Off => {}
                 }
             }
-            tl.servers_off += pool.cluster.server_on.iter().filter(|&&on| !on).count();
+            // live off servers only: a fully-failed server is not
+            // openable capacity and must not attract routed work
+            tl.servers_off += pool.cluster.servers_off_live();
         }
         ShardLoad {
             backlog: by_type.iter().map(|t| t.backlog).sum(),
@@ -533,6 +547,55 @@ impl Shard {
             return 0;
         };
         pool.cluster.max_free_pairs()
+    }
+
+    /// Fail the given *global* pair indices at time `t`: each owning
+    /// pool first advances its event loop to `t` (departures due before
+    /// the failure complete normally and are not evicted), then drops
+    /// the pair ([`Cluster::fail_pair`] — queued work evicted, its
+    /// unrealized energy refunded).  Returns the newly-failed global
+    /// pair indices; pairs already failed or outside this shard are
+    /// skipped, so the call is idempotent.
+    pub fn fail_pairs(&mut self, t: f64, pairs: &[usize]) -> Vec<usize> {
+        let mut newly = Vec::new();
+        for pool in &mut self.pools {
+            let lo = pool.pair_offset;
+            let hi = lo + pool.cluster.pairs.len();
+            let local: Vec<usize> = pairs
+                .iter()
+                .filter(|&&p| p >= lo && p < hi)
+                .map(|&p| p - lo)
+                .collect();
+            if local.is_empty() {
+                continue;
+            }
+            let ctx = SchedCtx {
+                solver: &self.solver,
+                iv: self.iv,
+                dvfs: self.dvfs,
+                theta: self.theta,
+                cache: &pool.cache,
+            };
+            let t_pool = t.max(pool.engine.now);
+            pool.engine
+                .run_until(t_pool, &mut pool.cluster, pool.policy.as_mut(), &ctx);
+            for i in local {
+                if pool.cluster.fail_pair(i, t_pool) {
+                    newly.push(lo + i);
+                }
+            }
+        }
+        newly
+    }
+
+    /// Whether the pool for `type_idx` still has any live (non-failed)
+    /// pair.  A dead pool must neither steal nor be routed work — its
+    /// placement path has nowhere to put a task.
+    pub fn type_alive(&self, type_idx: usize) -> bool {
+        self.pools
+            .iter()
+            .find(|p| p.type_idx == type_idx)
+            .map_or(false, |p| p.cluster.live_pairs() > 0)
     }
 
     /// Metrics fragment at service time `now` (does not advance the event
@@ -666,17 +729,23 @@ impl Drop for ShardPool {
 }
 
 /// Whether the thief can host every task of a candidate chunk: each
-/// task's GPU type must be owned, and — the gang-fairness guard — a
-/// gang's width must fit the thief's single-server headroom on that type
-/// (`headroom[i]` aligns with `owned_types[i]`; see
-/// [`Shard::gang_headroom`]).  Without the headroom check a thief whose
-/// servers are already committed would concentrate wide gangs onto
-/// itself, queueing them behind its own work while the routed shard's
-/// co-located capacity sat idle.
-fn chunk_hostable(tasks: &[ServiceTask], owned_types: &[usize], headroom: &[usize]) -> bool {
+/// task's GPU type must be owned *and still alive* (`alive[i]` — a pool
+/// whose every pair has failed has nowhere to place anything), and — the
+/// gang-fairness guard — a gang's width must fit the thief's
+/// single-server headroom on that type (`headroom[i]` aligns with
+/// `owned_types[i]`; see [`Shard::gang_headroom`]).  Without the
+/// headroom check a thief whose servers are already committed would
+/// concentrate wide gangs onto itself, queueing them behind its own work
+/// while the routed shard's co-located capacity sat idle.
+fn chunk_hostable(
+    tasks: &[ServiceTask],
+    owned_types: &[usize],
+    headroom: &[usize],
+    alive: &[bool],
+) -> bool {
     tasks.iter().all(|st| {
         match owned_types.iter().position(|&t| t == st.type_idx) {
-            Some(i) => st.g <= 1 || headroom[i] >= st.g,
+            Some(i) => alive[i] && (st.g <= 1 || headroom[i] >= st.g),
             None => false,
         }
     })
@@ -698,6 +767,7 @@ fn next_job(
     steal: bool,
     owned_types: &[usize],
     headroom: &[usize],
+    alive: &[bool],
 ) -> ShardJob {
     let mut qs = shared.queues.lock().unwrap();
     loop {
@@ -714,7 +784,7 @@ fn next_job(
             for (k, q) in qs.iter().enumerate() {
                 let hostable = match q.back() {
                     Some(ShardJob::Batch { tasks, .. }) => {
-                        chunk_hostable(tasks, owned_types, headroom)
+                        chunk_hostable(tasks, owned_types, headroom, alive)
                     }
                     _ => false,
                 };
@@ -759,7 +829,12 @@ fn worker_loop(
         } else {
             Vec::new()
         };
-        match next_job(shared, me, steal, &owned_types, &headroom) {
+        let alive: Vec<bool> = if steal {
+            owned_types.iter().map(|&ti| shard.type_alive(ti)).collect()
+        } else {
+            Vec::new()
+        };
+        match next_job(shared, me, steal, &owned_types, &headroom, &alive) {
             ShardJob::Batch {
                 tag,
                 t,
@@ -785,6 +860,12 @@ fn worker_loop(
             }
             ShardJob::Snapshot { now, reply } => {
                 let _ = reply.send((shard.id(), shard.snapshot(now)));
+            }
+            ShardJob::Fail { t, pairs, reply } => {
+                let newly = shard.fail_pairs(t, &pairs);
+                let load = shard.load();
+                let events = shard.drain_obs();
+                let _ = reply.send((shard.id(), newly, load, events));
             }
             ShardJob::Drain { reply } => {
                 let snap = shard.drain();
@@ -1029,14 +1110,54 @@ mod tests {
         let mut wide = ServiceTask::plain(mk_task(1, 0.0, 0.3, 10.0));
         wide.g = 2;
         let headroom = [shard.gang_headroom(0)];
-        assert!(!chunk_hostable(&[wide.clone()], &[0], &headroom));
+        let alive = [shard.type_alive(0)];
+        assert!(!chunk_hostable(&[wide.clone()], &[0], &headroom, &alive));
         assert!(chunk_hostable(
             &[ServiceTask::plain(mk_task(2, 0.0, 0.3, 10.0))],
             &[0],
-            &headroom
+            &headroom,
+            &alive,
         ));
         // owning the type at all is still required
-        assert!(!chunk_hostable(&[wide], &[1], &[shard.gang_headroom(1)]));
+        assert!(!chunk_hostable(
+            &[wide.clone()],
+            &[1],
+            &[shard.gang_headroom(1)],
+            &[shard.type_alive(1)],
+        ));
+        // ...and so is the pool being alive: a dead pool steals nothing
+        wide.g = 1;
+        assert!(!chunk_hostable(&[wide], &[0], &headroom, &[false]));
+    }
+
+    #[test]
+    fn shard_fail_pairs_maps_global_indices_and_refunds() {
+        // shard 1 of 2 owns global pairs 8..16 (servers 2..4, l = 4)
+        let vs = views(16, 4, 2);
+        let mut shard = Shard::new(
+            vs[1].clone(),
+            OnlinePolicyKind::Edl,
+            true,
+            ScalingInterval::wide(),
+            1.0,
+            true,
+        );
+        let placed = shard.place_batch(0.0, vec![ServiceTask::plain(mk_task(0, 0.0, 0.5, 10.0))]);
+        let gp = placed[0].pair;
+        assert_eq!(gp, 8);
+        let e_before = shard.snapshot(0.0).e_run;
+        // indices outside the shard are ignored; the hosting pair drops
+        let newly = shard.fail_pairs(0.0, &[0, 3, gp]);
+        assert_eq!(newly, vec![gp]);
+        assert!(shard.snapshot(0.0).e_run < e_before, "unrealized energy refunded");
+        assert!(shard.type_alive(0), "three live pairs remain on the server");
+        // idempotent: a second failure of the same pair reports nothing
+        assert!(shard.fail_pairs(1.0, &[gp]).is_empty());
+        // load's off-server count excludes nothing here (server 0 of the
+        // shard is on and partially failed, server 1 still off and live)
+        assert_eq!(shard.load().servers_off, 1);
+        let snap = shard.drain();
+        assert_eq!(snap.violations, 0, "the evicted task never departs");
     }
 
     #[test]

@@ -1,0 +1,695 @@
+//! Kill-and-recover test battery for journal-driven crash recovery and
+//! server fault injection.
+//!
+//! The tentpole claim: the event journal's verbatim `request` trace,
+//! replayed through the same virtual-clock front end as ONE session
+//! chained ahead of the remaining input, rebuilds bit-identical service
+//! state — response bytes, energy books, and the new journal all equal
+//! the uninterrupted run's.  A kill is simulated faithfully: the reader
+//! fails mid-stream (no EOF, so no graceful pending-batch flush), the
+//! service is dropped undrained, and only the line-granular-flushed
+//! journal survives.
+//!
+//! Satellites exercised here: fault injection (`fail_server` requests,
+//! `--fail-at`-style weaving via [`inject_failures`]) with its
+//! invariants — failed pairs never host later work, migrated tasks meet
+//! their deadlines, evicted tasks query as rejected, fault-free oracle
+//! equivalence — and torn-tail journal tolerance end to end.
+
+use dvfs_sched::config::{GpuTypeSpec, SimConfig};
+use dvfs_sched::ext::trace::task_to_json;
+use dvfs_sched::runtime::Solver;
+use dvfs_sched::service::{
+    inject_failures, journal_requests, serve_session, Journal, RoutePolicy, Service, ServiceCore,
+    ShardedService, VirtualClock,
+};
+use dvfs_sched::sim::online::OnlinePolicyKind;
+use dvfs_sched::tasks::LIBRARY;
+use dvfs_sched::util::json::{num, obj, Json};
+use dvfs_sched::util::proptest::{check, Config};
+use dvfs_sched::util::Rng;
+use dvfs_sched::Task;
+use std::collections::BTreeSet;
+use std::io::{self, BufRead, Read, Write};
+use std::sync::{Arc, Mutex};
+
+fn small_cfg() -> SimConfig {
+    let mut cfg = SimConfig::default();
+    cfg.cluster.total_pairs = 32;
+    cfg.cluster.pairs_per_server = 2;
+    cfg.theta = 0.9;
+    cfg
+}
+
+/// A two-type fleet: 8 fast power-hungry servers, 8 slow efficient ones.
+fn hetero_cfg(l: usize) -> SimConfig {
+    let mut cfg = SimConfig::default();
+    cfg.cluster.pairs_per_server = l;
+    cfg.cluster.total_pairs = 16 * l;
+    cfg.cluster.types = vec![
+        GpuTypeSpec {
+            name: "bigGPU".into(),
+            servers: 8,
+            power_scale: 1.8,
+            speed_scale: 2.0,
+        },
+        GpuTypeSpec {
+            name: "smallGPU".into(),
+            servers: 8,
+            power_scale: 0.55,
+            speed_scale: 0.8,
+        },
+    ];
+    cfg.theta = 0.9;
+    cfg
+}
+
+fn mk_task(id: usize, arrival: f64, u: f64, k: f64) -> Task {
+    let model = LIBRARY[id % LIBRARY.len()].model.scaled(k);
+    Task {
+        id,
+        app: id % LIBRARY.len(),
+        model,
+        arrival,
+        deadline: arrival + model.t_star() / u,
+        u,
+    }
+}
+
+/// A journal sink the tests can read back after the service is dropped —
+/// the journal's line-granular flush means every written line is visible
+/// here even when the service dies without a drain.
+#[derive(Clone, Default)]
+struct SharedBuf(Arc<Mutex<Vec<u8>>>);
+
+impl SharedBuf {
+    fn contents(&self) -> String {
+        String::from_utf8(self.0.lock().unwrap().clone()).unwrap()
+    }
+}
+
+impl Write for SharedBuf {
+    fn write(&mut self, buf: &[u8]) -> io::Result<usize> {
+        self.0.lock().unwrap().extend_from_slice(buf);
+        Ok(buf.len())
+    }
+    fn flush(&mut self) -> io::Result<()> {
+        Ok(())
+    }
+}
+
+/// A reader that delivers its bytes and then fails like a severed pipe.
+/// `serve_session` surfaces the error immediately — WITHOUT the graceful
+/// EOF pending-batch flush — which is exactly what `kill -9` looks like
+/// to the core: a coalesced admission batch dies unflushed.
+struct KilledPipe<'a> {
+    data: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> KilledPipe<'a> {
+    fn new(data: &'a [u8]) -> Self {
+        KilledPipe { data, pos: 0 }
+    }
+}
+
+impl Read for KilledPipe<'_> {
+    fn read(&mut self, buf: &mut [u8]) -> io::Result<usize> {
+        if self.pos >= self.data.len() {
+            return Err(io::Error::new(io::ErrorKind::ConnectionReset, "killed"));
+        }
+        let n = (self.data.len() - self.pos).min(buf.len());
+        buf[..n].copy_from_slice(&self.data[self.pos..self.pos + n]);
+        self.pos += n;
+        Ok(n)
+    }
+}
+
+impl BufRead for KilledPipe<'_> {
+    fn fill_buf(&mut self) -> io::Result<&[u8]> {
+        if self.pos >= self.data.len() {
+            return Err(io::Error::new(io::ErrorKind::ConnectionReset, "killed"));
+        }
+        Ok(&self.data[self.pos..])
+    }
+    fn consume(&mut self, n: usize) {
+        self.pos += n;
+    }
+}
+
+/// A deterministic protocol session: submits (optionally typed + gang),
+/// queries, snapshots, a ping, and a final shutdown.
+fn session_text(seed: u64, n: usize, typed: bool) -> String {
+    let mut rng = Rng::new(seed);
+    let mut out = String::new();
+    let mut now = 0.0;
+    for id in 0..n {
+        now += rng.uniform(0.0, 3.0);
+        let u = rng.open01().max(0.05);
+        let mut task = mk_task(id, now, u, rng.int_range(5, 30) as f64);
+        if rng.f64() < 0.2 {
+            // below the analytical floor on every type: a deterministic
+            // reject (the fastest type halves t_min; 0.3× is still under)
+            task.deadline = now + task.model.t_min(&SimConfig::default().interval) * 0.3;
+        }
+        let mut fields = vec![
+            ("op", Json::Str("submit".into())),
+            ("task", task_to_json(&task)),
+        ];
+        if typed {
+            match rng.index(4) {
+                0 => {}
+                1 => fields.push(("gpu_type", Json::Str("any".into()))),
+                2 => fields.push(("gpu_type", Json::Str("bigGPU".into()))),
+                _ => fields.push(("gpu_type", Json::Str("smallGPU".into()))),
+            }
+            let g = 1 << rng.index(3); // 1, 2, or 4 (l = 4 in hetero_cfg(4))
+            if g > 1 {
+                fields.push(("g", num(g as f64)));
+            }
+        }
+        out.push_str(&obj(fields).render_compact());
+        out.push('\n');
+        if id % 7 == 3 {
+            out.push_str(&format!("{{\"op\":\"query\",\"id\":{id}}}\n"));
+        }
+        if id % 11 == 5 {
+            out.push_str("{\"op\":\"snapshot\"}\n");
+        }
+    }
+    out.push_str("{\"op\":\"ping\"}\n{\"op\":\"shutdown\"}\n");
+    out
+}
+
+/// The tentpole experiment, for any service flavor `mk` builds:
+///
+/// 1. run `session` uninterrupted (the oracle), journal attached;
+/// 2. run a fresh service, kill it after `kill_line` request lines (read
+///    error, no flush, no drain), keeping only its journal;
+/// 3. recover: extract the journal's request trace, chain the remaining
+///    session lines behind it, and serve the whole thing as ONE session
+///    on a fresh service.
+///
+/// Asserts the pre-kill responses are a prefix of the oracle stream, and
+/// that the recovered run's responses AND journal are byte-identical to
+/// the uninterrupted run's.  Returns the uninterrupted journal text for
+/// callers that want to inspect the recorded history.
+fn kill_recover_case<C, F>(mut mk: F, session: &str, kill_line: usize) -> Result<String, String>
+where
+    C: ServiceCore,
+    F: FnMut(Journal) -> C,
+{
+    let lines: Vec<&str> = session.lines().collect();
+    assert!(
+        kill_line >= 1 && kill_line < lines.len(),
+        "kill point must leave work both before and after it"
+    );
+
+    // 1: the uninterrupted oracle
+    let full_buf = SharedBuf::default();
+    let mut svc = mk(Journal::to_writer(full_buf.clone()));
+    let mut full_out = Vec::new();
+    serve_session(&mut svc, &VirtualClock, session.as_bytes(), &mut full_out)?;
+    drop(svc);
+
+    // 2: the killed run — reader dies after `kill_line` lines
+    let cut: String = lines[..kill_line].iter().map(|l| format!("{l}\n")).collect();
+    let kill_buf = SharedBuf::default();
+    let mut svc = mk(Journal::to_writer(kill_buf.clone()));
+    let mut killed_out = Vec::new();
+    let res = serve_session(
+        &mut svc,
+        &VirtualClock,
+        KilledPipe::new(cut.as_bytes()),
+        &mut killed_out,
+    );
+    if res.is_ok() {
+        return Err("the kill must surface as a read error, not EOF".into());
+    }
+    drop(svc); // kill -9: no shutdown, no drain, only the journal remains
+
+    if !full_out.starts_with(killed_out.as_slice()) {
+        return Err(format!(
+            "pre-kill responses are not a prefix of the uninterrupted stream (kill at line {kill_line})"
+        ));
+    }
+
+    // 3: recover — journal request trace + remaining input, ONE session
+    let reqs = journal_requests(&kill_buf.contents())?;
+    let mut chained = String::new();
+    for r in &reqs {
+        chained.push_str(r);
+        chained.push('\n');
+    }
+    for l in &lines[kill_line..] {
+        chained.push_str(l);
+        chained.push('\n');
+    }
+    let rec_buf = SharedBuf::default();
+    let mut svc = mk(Journal::to_writer(rec_buf.clone()));
+    let mut rec_out = Vec::new();
+    serve_session(&mut svc, &VirtualClock, chained.as_bytes(), &mut rec_out)?;
+
+    if rec_out != full_out {
+        return Err(format!(
+            "recovered responses diverge from the uninterrupted run (kill at line {kill_line})"
+        ));
+    }
+    if rec_buf.contents() != full_buf.contents() {
+        return Err(format!(
+            "recovered journal diverges from the uninterrupted journal (kill at line {kill_line})"
+        ));
+    }
+    Ok(full_buf.contents())
+}
+
+#[test]
+fn prop_kill_anywhere_and_recover_is_byte_identical() {
+    // Random workloads, killed after a random request prefix, recovered,
+    // and finished: responses and journals must equal the uninterrupted
+    // run byte for byte — on the daemon and the 2-shard batched service.
+    check(
+        "kill/recover == uninterrupted",
+        Config {
+            iters: 5,
+            ..Default::default()
+        },
+        |rng| rng.next_u64(),
+        |&seed| {
+            let session = session_text(seed, 24, false);
+            let n_lines = session.lines().count();
+            let mut kill_rng = Rng::new(seed ^ 0x9E37_79B9_7F4A_7C15);
+            let k = 1 + kill_rng.index(n_lines - 1);
+            let cfg = small_cfg();
+            let solver = Solver::native();
+            let kind = OnlinePolicyKind::Edl;
+            kill_recover_case(
+                |j| {
+                    let mut s = Service::new(&cfg, kind, true, &solver);
+                    s.set_obs(Some(j), None);
+                    s
+                },
+                &session,
+                k,
+            )?;
+            kill_recover_case(
+                |j| {
+                    let mut s = ShardedService::new(
+                        &cfg,
+                        kind,
+                        true,
+                        2,
+                        RoutePolicy::LeastLoaded,
+                        1.0,
+                        false,
+                    )
+                    .unwrap();
+                    s.set_obs(Some(j), None);
+                    s
+                },
+                &session,
+                k,
+            )?;
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn kill_and_recover_with_typed_clusters_and_gangs() {
+    // The same experiment on a heterogeneous 2-type fleet with gang
+    // submissions, through the 2-shard service with a 1-slot admission
+    // window — the batch-coalescing path a kill is most likely to split.
+    for seed in [3u64, 11, 29] {
+        let session = session_text(seed, 24, true);
+        let n_lines = session.lines().count();
+        let mut kill_rng = Rng::new(seed);
+        let k = 1 + kill_rng.index(n_lines - 1);
+        let cfg = hetero_cfg(4);
+        kill_recover_case(
+            |j| {
+                let mut s = ShardedService::new(
+                    &cfg,
+                    OnlinePolicyKind::Edl,
+                    true,
+                    2,
+                    RoutePolicy::LeastLoaded,
+                    1.0,
+                    false,
+                )
+                .unwrap();
+                s.set_obs(Some(j), None);
+                s
+            },
+            &session,
+            k,
+        )
+        .unwrap();
+    }
+}
+
+/// Submit-only request lines with arrivals spread over ~20 slots, the
+/// raw material for `--fail-at`-style fault weaving.
+fn submit_lines(seed: u64, n: usize) -> Vec<String> {
+    let mut rng = Rng::new(seed);
+    let mut now = 0.0;
+    (0..n)
+        .map(|id| {
+            now += rng.uniform(0.5, 1.5);
+            let task = mk_task(id, now, rng.uniform(0.1, 0.7), rng.int_range(5, 30) as f64);
+            obj(vec![
+                ("op", Json::Str("submit".into())),
+                ("task", task_to_json(&task)),
+            ])
+            .render_compact()
+        })
+        .collect()
+}
+
+#[test]
+fn recovering_a_faulted_run_is_bit_identical() {
+    // fail/migrate/evict history is journaled, so recovery of a run that
+    // lost a server mid-stream — killed AFTER the failure — must be just
+    // as bit-identical as a healthy run's.
+    let cfg = small_cfg();
+    let solver = Solver::native();
+    let kind = OnlinePolicyKind::Edl;
+    for sharded in [false, true] {
+        let mut all = inject_failures(&submit_lines(41, 20), &[(8.0, 0)]);
+        all.push("{\"op\":\"shutdown\"}".into());
+        let session: String = all.iter().map(|l| format!("{l}\n")).collect();
+        let fail_idx = all
+            .iter()
+            .position(|l| l.contains("fail_server"))
+            .expect("fault woven into the trace");
+        // kill a little after the failure so eviction/migration state is
+        // part of what recovery has to rebuild
+        let k = (fail_idx + 3).min(all.len() - 1);
+        let journal = if sharded {
+            kill_recover_case(
+                |j| {
+                    let mut s = ShardedService::new(
+                        &cfg,
+                        kind,
+                        true,
+                        2,
+                        RoutePolicy::LeastLoaded,
+                        1.0,
+                        false,
+                    )
+                    .unwrap();
+                    s.set_obs(Some(j), None);
+                    s
+                },
+                &session,
+                k,
+            )
+            .unwrap()
+        } else {
+            kill_recover_case(
+                |j| {
+                    let mut s = Service::new(&cfg, kind, true, &solver);
+                    s.set_obs(Some(j), None);
+                    s
+                },
+                &session,
+                k,
+            )
+            .unwrap()
+        };
+        assert!(
+            journal.lines().any(|l| l.contains("\"ev\":\"fail\"")),
+            "the failure itself is part of the journaled history"
+        );
+    }
+}
+
+#[test]
+fn failed_pairs_never_host_later_work_and_migrations_meet_deadlines() {
+    // Fault-injection invariants on a typed, ganged, sharded run with two
+    // server failures: (a) once a pair fails, no later place/migrate ever
+    // names it; (b) every migrated task's record still meets its
+    // deadline; (c) every evicted task queries as rejected; (d) zero
+    // deadline violations overall; (e) the per-type energy split still
+    // sums to the total after eviction refunds.
+    let cfg = hetero_cfg(2); // servers 0..8 bigGPU, 8..16 smallGPU, l = 2
+    let mut all = inject_failures(&submit_lines(7, 40), &[(5.0, 0), (12.0, 9)]);
+    all.push("{\"op\":\"metrics\"}".into());
+    all.push("{\"op\":\"shutdown\"}".into());
+    let session: String = all.iter().map(|l| format!("{l}\n")).collect();
+
+    let buf = SharedBuf::default();
+    let mut svc = ShardedService::new(
+        &cfg,
+        OnlinePolicyKind::Edl,
+        true,
+        2,
+        RoutePolicy::LeastLoaded,
+        1.0,
+        false,
+    )
+    .unwrap();
+    svc.set_obs(Some(Journal::to_writer(buf.clone())), None);
+    let mut out = Vec::new();
+    assert!(serve_session(&mut svc, &VirtualClock, session.as_bytes(), &mut out).unwrap());
+
+    // (a) walk the journal in write order, accumulating failed pairs
+    let mut failed: BTreeSet<usize> = BTreeSet::new();
+    let mut migrate_ids = Vec::new();
+    let mut evict_ids = Vec::new();
+    let mut fail_events = 0usize;
+    for line in buf.contents().lines() {
+        let j = Json::parse(line).unwrap();
+        match j.get("ev").and_then(Json::as_str) {
+            Some("fail") => {
+                fail_events += 1;
+                for p in j.get("pairs").and_then(Json::as_arr).expect("fail pairs") {
+                    failed.insert(p.as_f64().unwrap() as usize);
+                }
+            }
+            Some(ev @ ("place" | "migrate")) => {
+                let mut touched =
+                    vec![j.get("pair").and_then(Json::as_f64).expect("pair") as usize];
+                if let Some(arr) = j.get("pairs").and_then(Json::as_arr) {
+                    touched.extend(arr.iter().map(|p| p.as_f64().unwrap() as usize));
+                }
+                for p in touched {
+                    assert!(!failed.contains(&p), "{ev} on failed pair {p}: {line}");
+                }
+                if ev == "migrate" {
+                    migrate_ids.push(j.get("id").and_then(Json::as_f64).unwrap() as usize);
+                }
+            }
+            Some("evict") => {
+                assert_eq!(
+                    j.get("reason").and_then(Json::as_str),
+                    Some("evicted-infeasible")
+                );
+                evict_ids.push(j.get("id").and_then(Json::as_f64).unwrap() as usize);
+            }
+            _ => {}
+        }
+    }
+    assert_eq!(fail_events, 2, "both injected failures journaled");
+    assert_eq!(failed.len(), 4, "two l=2 servers lost");
+
+    // (b) migrated records exist, avoid dead pairs, and meet deadlines
+    for &id in &migrate_ids {
+        let rec = svc.record(id).expect("migrated task has a record");
+        assert!(rec.admitted, "task {id} stays admitted after migration");
+        for &p in &rec.pairs {
+            assert!(!failed.contains(&p), "task {id} migrated onto dead pair {p}");
+        }
+        assert!(
+            rec.finish <= rec.deadline + 1e-9,
+            "migrated task {id} misses its deadline: {} > {}",
+            rec.finish,
+            rec.deadline
+        );
+    }
+    // (c) evicted tasks read back as rejected
+    for &id in &evict_ids {
+        let rec = svc.record(id).expect("evicted task has a record");
+        assert!(!rec.admitted, "evicted task {id} must query as rejected");
+    }
+
+    // (d)/(e) the closed books: no violations, consistent per-type split
+    let lines: Vec<Json> = String::from_utf8(out)
+        .unwrap()
+        .lines()
+        .map(|l| Json::parse(l).unwrap())
+        .collect();
+    let fin = lines.last().expect("shutdown snapshot");
+    assert_eq!(fin.get("drained"), Some(&Json::Bool(true)));
+    assert_eq!(fin.get("violations").and_then(Json::as_f64), Some(0.0));
+    let split: f64 = fin
+        .get("e_by_type")
+        .and_then(Json::as_arr)
+        .expect("typed snapshot")
+        .iter()
+        .filter_map(Json::as_f64)
+        .sum();
+    let total = fin.get("e_total").and_then(Json::as_f64).unwrap();
+    assert!(
+        (split - total).abs() < 1e-9 * total.max(1.0),
+        "e_by_type must still sum to e_total after failures: {split} vs {total}"
+    );
+    // the frozen snapshot schema must NOT grow failure counters...
+    assert!(fin.get("migrated").is_none());
+    assert!(fin.get("evicted").is_none());
+    // ...which live on the observability surface instead
+    let metrics = lines
+        .iter()
+        .find(|j| j.get("op").and_then(Json::as_str) == Some("metrics"))
+        .expect("metrics response");
+    assert_eq!(
+        metrics.get("migrated").and_then(Json::as_f64),
+        Some(migrate_ids.len() as f64),
+        "metrics migrated counter matches the journaled migrations"
+    );
+    assert_eq!(
+        metrics.get("evicted").and_then(Json::as_f64),
+        Some(evict_ids.len() as f64),
+        "metrics evicted counter matches the journaled evictions"
+    );
+}
+
+#[test]
+fn failing_an_unused_server_changes_only_the_fail_response() {
+    // Fault-free oracle equivalence: losing a server nothing ever ran on
+    // must not perturb a single placement, power decision, or energy
+    // cent — the response streams are identical once the fail response
+    // itself is stripped.
+    let cfg = small_cfg(); // 16 servers × 2 pairs
+    let solver = Solver::native();
+    let base = submit_lines(13, 6);
+    let mut clean = base.clone();
+    clean.push("{\"op\":\"shutdown\"}".into());
+    let clean_session: String = clean.iter().map(|l| format!("{l}\n")).collect();
+
+    let buf = SharedBuf::default();
+    let mut svc = Service::new(&cfg, OnlinePolicyKind::Edl, true, &solver);
+    svc.set_obs(Some(Journal::to_writer(buf.clone())), None);
+    let mut clean_out = Vec::new();
+    assert!(
+        serve_session(&mut svc, &VirtualClock, clean_session.as_bytes(), &mut clean_out).unwrap()
+    );
+    drop(svc);
+
+    // a server the clean run never placed on NOR power-cycled
+    let l = cfg.cluster.pairs_per_server;
+    let mut touched: BTreeSet<usize> = BTreeSet::new();
+    for line in buf.contents().lines() {
+        let j = Json::parse(line).unwrap();
+        match j.get("ev").and_then(Json::as_str) {
+            Some("place") => {
+                touched.insert(j.get("pair").and_then(Json::as_f64).unwrap() as usize / l);
+                if let Some(arr) = j.get("pairs").and_then(Json::as_arr) {
+                    touched.extend(arr.iter().map(|p| p.as_f64().unwrap() as usize / l));
+                }
+            }
+            Some("power") => {
+                touched.insert(j.get("server").and_then(Json::as_f64).unwrap() as usize);
+            }
+            _ => {}
+        }
+    }
+    let idle_server = (0..cfg.cluster.num_servers())
+        .rev()
+        .find(|s| !touched.contains(s))
+        .expect("a 16-server fleet under 6 tasks has an untouched server");
+
+    let mut faulted = inject_failures(&base, &[(3.0, idle_server)]);
+    faulted.push("{\"op\":\"shutdown\"}".into());
+    let faulted_session: String = faulted.iter().map(|l| format!("{l}\n")).collect();
+    let mut svc = Service::new(&cfg, OnlinePolicyKind::Edl, true, &solver);
+    let mut faulted_out = Vec::new();
+    assert!(serve_session(
+        &mut svc,
+        &VirtualClock,
+        faulted_session.as_bytes(),
+        &mut faulted_out
+    )
+    .unwrap());
+
+    let clean_lines: Vec<&str> = std::str::from_utf8(&clean_out).unwrap().lines().collect();
+    let faulted_lines: Vec<&str> = std::str::from_utf8(&faulted_out).unwrap().lines().collect();
+    let fail_resp = faulted_lines
+        .iter()
+        .find(|line| line.contains("\"op\":\"fail_server\""))
+        .map(|line| Json::parse(line).unwrap())
+        .expect("fail response present");
+    assert_eq!(fail_resp.get("ok"), Some(&Json::Bool(true)));
+    assert_eq!(fail_resp.get("migrated").and_then(Json::as_f64), Some(0.0));
+    assert_eq!(fail_resp.get("evicted").and_then(Json::as_f64), Some(0.0));
+    assert_eq!(
+        fail_resp
+            .get("failed_pairs")
+            .and_then(Json::as_arr)
+            .unwrap()
+            .len(),
+        l,
+        "the whole idle server is marked failed"
+    );
+    let stripped: Vec<&str> = faulted_lines
+        .iter()
+        .copied()
+        .filter(|line| !line.contains("\"op\":\"fail_server\""))
+        .collect();
+    assert_eq!(
+        stripped, clean_lines,
+        "an idle server's failure must not change any other response byte"
+    );
+}
+
+#[test]
+fn a_torn_journal_tail_recovers_the_surviving_requests() {
+    // End to end: kill a journaled run mid-stream, then tear the last
+    // few bytes off the journal (the torn-write artifact line-granular
+    // flushing can legally leave).  Recovery must keep every surviving
+    // whole request line and still drive a clean, drained run.
+    let cfg = small_cfg();
+    let solver = Solver::native();
+    let session = session_text(99, 18, false);
+    let lines: Vec<&str> = session.lines().collect();
+    let cut: String = lines[..10].iter().map(|l| format!("{l}\n")).collect();
+
+    let buf = SharedBuf::default();
+    let mut svc = Service::new(&cfg, OnlinePolicyKind::Edl, true, &solver);
+    svc.set_obs(Some(Journal::to_writer(buf.clone())), None);
+    let mut out = Vec::new();
+    assert!(
+        serve_session(&mut svc, &VirtualClock, KilledPipe::new(cut.as_bytes()), &mut out).is_err()
+    );
+    drop(svc);
+
+    let journal = buf.contents();
+    assert!(journal.ends_with('\n'), "every journal line is whole");
+    let torn = &journal[..journal.len() - 3]; // tear the final line mid-object
+    let survivors = journal_requests(torn).unwrap();
+
+    // the torn line is lost entirely; every earlier request survives
+    let mut whole: Vec<&str> = journal.lines().collect();
+    whole.pop();
+    let expected = journal_requests(&whole.join("\n")).unwrap();
+    assert_eq!(survivors, expected, "exactly the pre-tear requests survive");
+    assert!(!survivors.is_empty());
+
+    // and the survivors still replay into a clean, closed book
+    let mut replay: String = survivors.iter().map(|l| format!("{l}\n")).collect();
+    replay.push_str("{\"op\":\"shutdown\"}\n");
+    let mut svc = Service::new(&cfg, OnlinePolicyKind::Edl, true, &solver);
+    let mut rec_out = Vec::new();
+    assert!(serve_session(&mut svc, &VirtualClock, replay.as_bytes(), &mut rec_out).unwrap());
+    let fin = Json::parse(
+        std::str::from_utf8(&rec_out)
+            .unwrap()
+            .lines()
+            .last()
+            .unwrap(),
+    )
+    .unwrap();
+    assert_eq!(fin.get("op").and_then(Json::as_str), Some("shutdown"));
+    assert_eq!(fin.get("drained"), Some(&Json::Bool(true)));
+    assert_eq!(fin.get("violations").and_then(Json::as_f64), Some(0.0));
+}

@@ -12,6 +12,12 @@ Checks, stdlib only (CI has no extra deps):
     (the CI smoke gate: a journaled round that only produced one or two
     kinds means the instrumentation hooks regressed).
 
+Exactly ONE unparsable trailing line is tolerated (reported, not
+failed): the journal is flushed line-by-line, so a crash mid-write can
+legally leave a single torn tail — the same artifact the Rust recovery
+parser (`journal_requests`) skips.  An unparsable line anywhere earlier
+is corruption and still fails.
+
 Exit status: 0 clean, 1 validation failure, 2 usage/IO error.
 
 Usage:
@@ -49,14 +55,39 @@ SCHEMAS = {
         "tasks": (int, float),
     },
     "metrics": {"admitted": (int, float), "cache_hits": (int, float)},
+    # fault injection: `server` or `pair` names the target; `pairs` lists
+    # the newly-failed global pair indices
+    "fail": {"pairs": (list,)},
+    "migrate": {
+        "id": (int, float),
+        "from": (int, float),
+        "pair": (int, float),
+        "start": (int, float),
+        "mu": (int, float),
+    },
+    "evict": {
+        "id": (int, float),
+        "from": (int, float),
+        "reason": (str,),
+    },
+    # stamped by `repro recover`: how many journal request lines were
+    # replayed, and from which source journal
+    "recover": {"requests": (int, float), "source": (str,)},
 }
 
 
-def check_line(lineno, raw, errors):
-    """Validate one journal line; returns its event kind or None."""
+def check_line(lineno, raw, errors, is_tail=False):
+    """Validate one journal line; returns its event kind or None.
+
+    With `is_tail` the line is the journal's last: a parse failure is
+    the torn-write artifact a crash can leave and is tolerated (returns
+    the sentinel kind "(torn tail)" so the caller can report it).
+    """
     try:
         obj = json.loads(raw)
     except json.JSONDecodeError as e:
+        if is_tail:
+            return "(torn tail)"
         errors.append(f"line {lineno}: not JSON ({e})")
         return None
     if not isinstance(obj, dict):
@@ -119,11 +150,16 @@ def main():
 
     errors = []
     counts = {}
+    torn_tail = False
+    nonempty = [i for i, raw in enumerate(lines) if raw.strip()]
+    last = nonempty[-1] if nonempty else -1
     for lineno, raw in enumerate(lines, start=1):
         if not raw.strip():
             continue
-        ev = check_line(lineno, raw, errors)
-        if ev is not None:
+        ev = check_line(lineno, raw, errors, is_tail=(lineno - 1 == last))
+        if ev == "(torn tail)":
+            torn_tail = True
+        elif ev is not None:
             counts[ev] = counts.get(ev, 0) + 1
 
     if not counts:
@@ -142,6 +178,8 @@ def main():
         print(f"{args.journal}: {total} event(s), {len(counts)} kind(s)")
         for ev in sorted(counts):
             print(f"  {ev:>8}: {counts[ev]}")
+    if torn_tail and not args.quiet:
+        print("note: tolerated one torn trailing line (crash artifact)")
     if errors:
         for e in errors[:25]:
             print(f"FAIL: {e}", file=sys.stderr)

@@ -1,7 +1,11 @@
 #!/usr/bin/env bash
 # CI socket smoke: serve over a unix socket, stream one workload through
 # TWO concurrent clients, and check the final snapshot's energy books
-# against a single-client replay of the merged trace.
+# against a single-client replay of the merged trace.  Then the crash
+# round: kill -9 a journaled server mid-stream, rebuild it with
+# `repro recover`, feed the rest of the trace, and require the recovered
+# response stream to be byte-identical to an uninterrupted replay; and a
+# fault round that replays with --fail-at and validates the journal.
 #
 # Determinism: the server runs 1 shard with a batch window wider than the
 # whole horizon, so both clients' submits coalesce into ONE admission
@@ -12,6 +16,10 @@
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
+# `sockets` = two-client round only, `crash` = crash/fault rounds only,
+# default = everything (local use)
+PHASE="${1:-all}"
+
 REPRO=rust/target/release/repro
 if [ ! -x "$REPRO" ]; then
     cargo build --release --manifest-path rust/Cargo.toml
@@ -19,7 +27,8 @@ fi
 
 TMP=$(mktemp -d)
 SRV=""
-trap '[ -n "$SRV" ] && kill "$SRV" 2>/dev/null; rm -rf "$TMP"' EXIT
+CRASH=""
+trap '[ -n "$SRV" ] && kill "$SRV" 2>/dev/null; [ -n "$CRASH" ] && kill -9 "$CRASH" 2>/dev/null; rm -rf "$TMP"' EXIT
 
 # a small deterministic workload, rendered as submit lines in arrival order
 "$REPRO" workload export --out "$TMP/w.json" --seed 7 --horizon 40 --u-off 0.02 --u-on 0.06
@@ -28,9 +37,13 @@ awk 'NR % 2 == 1' "$TMP/merged.jsonl" > "$TMP/c1.jsonl"
 awk 'NR % 2 == 0' "$TMP/merged.jsonl" > "$TMP/c2.jsonl"
 N=$(wc -l < "$TMP/merged.jsonl")
 echo "workload: $N submits split across 2 clients"
+cat "$TMP/merged.jsonl" > "$TMP/merged_full.jsonl"
+echo '{"op":"shutdown"}' >> "$TMP/merged_full.jsonl"
+WINDOW=1000000
+
+if [ "$PHASE" != "crash" ]; then
 
 SOCK="$TMP/repro.sock"
-WINDOW=1000000
 "$REPRO" serve --listen "unix:$SOCK" --clock virtual \
     --shards 1 --batch-window "$WINDOW" --no-steal \
     2> "$TMP/server.err" &
@@ -48,8 +61,6 @@ wait "$SRV"
 echo "two-client snapshot: $(cat "$TMP/final.json")"
 
 # single-client oracle: replay the merged trace with the same batching
-cat "$TMP/merged.jsonl" > "$TMP/merged_full.jsonl"
-echo '{"op":"shutdown"}' >> "$TMP/merged_full.jsonl"
 "$REPRO" replay "$TMP/merged_full.jsonl" \
     --shards 1 --batch-window "$WINDOW" --no-steal \
     2> /dev/null | tail -1 > "$TMP/oracle.json"
@@ -67,3 +78,77 @@ print(f"socket smoke OK: E_total={a['e_total']:.6e}, "
       f"{int(a['admitted'])}/{int(a['submitted'])} admitted, "
       f"{int(a['violations'])} violations")
 EOF
+
+fi  # PHASE != crash
+
+if [ "$PHASE" = "sockets" ]; then exit 0; fi
+
+# ---------------------------------------------------------------------------
+# Crash recovery: kill -9 a journaled stdio server mid-stream, rebuild it
+# with `repro recover <journal>`, feed the remaining trace on stdin, and
+# require the recovered response stream (replayed prefix + resumed tail)
+# to be byte-identical to an uninterrupted replay of the whole trace.
+
+"$REPRO" replay "$TMP/merged_full.jsonl" \
+    --shards 1 --batch-window "$WINDOW" --no-steal \
+    2> /dev/null > "$TMP/uninterrupted.out"
+
+K=$(( (N + 1) / 2 ))
+mkfifo "$TMP/crash.in"
+"$REPRO" serve --clock virtual \
+    --shards 1 --batch-window "$WINDOW" --no-steal \
+    --journal "$TMP/crash.jsonl" \
+    < "$TMP/crash.in" > /dev/null 2> "$TMP/crash.err" &
+CRASH=$!
+exec 3> "$TMP/crash.in"
+head -n "$K" "$TMP/merged_full.jsonl" >&3
+for _ in $(seq 100); do
+    [ -s "$TMP/crash.jsonl" ] && break
+    sleep 0.1
+done
+sleep 1   # let the prefix drain through the line-flushed journal
+kill -9 "$CRASH" 2>/dev/null || true
+wait "$CRASH" 2>/dev/null || true
+CRASH=""
+exec 3>&-
+
+# whole request lines that made it into the journal before the kill; this
+# count mirrors the Rust recovery parser, dropping at most one torn tail
+REQ=$(python3 - "$TMP/crash.jsonl" <<'EOF'
+import json, sys
+lines = open(sys.argv[1], encoding="utf-8").read().splitlines()
+n = 0
+for i, raw in enumerate(lines):
+    if not raw.strip():
+        continue
+    try:
+        obj = json.loads(raw)
+    except json.JSONDecodeError:
+        if i == len(lines) - 1:
+            break  # the one torn tail a kill mid-write can leave
+        raise
+    if obj.get("ev") == "request":
+        n += 1
+print(n)
+EOF
+)
+echo "crash: killed -9 after journaling $REQ of $((N + 1)) request(s)"
+tail -n +"$((REQ + 1))" "$TMP/merged_full.jsonl" > "$TMP/rest.jsonl"
+"$REPRO" recover "$TMP/crash.jsonl" \
+    --shards 1 --batch-window "$WINDOW" --no-steal \
+    < "$TMP/rest.jsonl" 2> /dev/null > "$TMP/recovered.out"
+diff "$TMP/uninterrupted.out" "$TMP/recovered.out" \
+    || { echo "recovered responses diverge from the uninterrupted replay"; exit 1; }
+python3 scripts/journal_check.py "$TMP/crash.jsonl" --quiet
+echo "crash recovery OK: recovered responses byte-identical to the replay"
+
+# ---------------------------------------------------------------------------
+# Fault round: replay the same trace with server 0 failing at slot 5 and
+# validate the journal end to end (fail event present, schemas hold).
+
+"$REPRO" replay "$TMP/merged_full.jsonl" \
+    --shards 1 --batch-window "$WINDOW" --no-steal \
+    --fail-at 5:0 --journal "$TMP/faulted.jsonl" \
+    2> /dev/null > /dev/null
+python3 scripts/journal_check.py "$TMP/faulted.jsonl" --expect-kind fail
+echo "fault smoke OK: faulted journal validates"
