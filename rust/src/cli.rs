@@ -267,6 +267,49 @@ pub fn parse_obs_opts(args: &Args) -> Result<ObsOpts, String> {
     })
 }
 
+/// Overload-control options shared by `serve`, `replay`, and `recover`,
+/// decoded from `--max-pending N --max-queue-depth N` (see
+/// `docs/ARCHITECTURE.md` §Backpressure and shedding).  Both default
+/// off; off means the service is response-line-identical to a build
+/// without backpressure.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct OverloadOpts {
+    /// Bound on the multiplexer's pending-response FIFO; submits past it
+    /// get a typed `overloaded` reject (requires `--listen` mux path).
+    pub max_pending: Option<usize>,
+    /// Bound on the sharded dispatcher's admission backlog (buffered
+    /// batch + live shard queues); requires a sharded service.
+    pub max_queue_depth: Option<usize>,
+}
+
+/// Decode the overload flags shared by `serve` / `replay` / `recover`.
+/// `sharded` says whether a [`ShardOpts`] was present — the dispatcher
+/// bound has no enforcement point in the unsharded daemon, so asking
+/// for it there is an error rather than a silent no-op.
+pub fn parse_overload_opts(args: &Args, sharded: bool) -> Result<OverloadOpts, String> {
+    let max_pending = args.opt_usize("max-pending")?;
+    let max_queue_depth = args.opt_usize("max-queue-depth")?;
+    if let Some(p) = max_pending {
+        if p == 0 {
+            return Err("--max-pending must be >= 1".into());
+        }
+    }
+    if let Some(d) = max_queue_depth {
+        if d == 0 {
+            return Err("--max-queue-depth must be >= 1".into());
+        }
+        if !sharded {
+            return Err(
+                "--max-queue-depth requires the sharded dispatcher (add --shards N)".into(),
+            );
+        }
+    }
+    Ok(OverloadOpts {
+        max_pending,
+        max_queue_depth,
+    })
+}
+
 /// Parse `--fail-at slot:server[,slot:server...]` into `(slot, server)`
 /// pairs for replay-side fault injection (see
 /// [`crate::service::inject_failures`]).
@@ -477,6 +520,27 @@ mod tests {
         e.finish().unwrap();
         let f = Args::parse(&argv("serve --journal-sync")).unwrap();
         assert!(parse_obs_opts(&f).is_err());
+    }
+
+    #[test]
+    fn overload_opts_parse() {
+        let a = Args::parse(&argv("serve")).unwrap();
+        let o = parse_overload_opts(&a, false).unwrap();
+        assert!(o.max_pending.is_none() && o.max_queue_depth.is_none());
+        a.finish().unwrap();
+        let b = Args::parse(&argv("serve --max-pending 64 --max-queue-depth 512")).unwrap();
+        let o = parse_overload_opts(&b, true).unwrap();
+        assert_eq!(o.max_pending, Some(64));
+        assert_eq!(o.max_queue_depth, Some(512));
+        b.finish().unwrap();
+        // the dispatcher bound needs a dispatcher to enforce it
+        let c = Args::parse(&argv("serve --max-queue-depth 512")).unwrap();
+        assert!(parse_overload_opts(&c, false).is_err());
+        // zero bounds would shed everything — reject them loudly
+        let d = Args::parse(&argv("serve --max-pending 0")).unwrap();
+        assert!(parse_overload_opts(&d, false).is_err());
+        let e = Args::parse(&argv("serve --max-queue-depth 0")).unwrap();
+        assert!(parse_overload_opts(&e, true).is_err());
     }
 
     #[test]

@@ -190,6 +190,45 @@ pub fn workload_to_session(w: &OnlineWorkload, shutdown: bool) -> String {
     out
 }
 
+/// Stream a storm session (`repro workload storm`) straight to a writer:
+/// `n` submit lines with non-decreasing arrivals spread uniformly across
+/// slots `1..=horizon`, optionally ending in a `shutdown`.  Unlike
+/// [`workload_to_session`] this never materializes the task set — a
+/// million-task datacenter-day trace writes in O(1) memory, which is the
+/// point: the trace is the load-harness input, not a simulation input.
+/// Returns the number of request lines written.
+pub fn write_storm_session<W: std::io::Write>(
+    n: usize,
+    horizon: u64,
+    cfg: &crate::config::GenConfig,
+    rng: &mut crate::util::Rng,
+    shutdown: bool,
+    out: &mut W,
+) -> Result<usize, String> {
+    if n == 0 {
+        return Err("storm needs at least one task".into());
+    }
+    let horizon = horizon.max(1);
+    let mut lines = 0usize;
+    for i in 0..n {
+        // deterministic uniform pacing: slot = 1 + floor(i * horizon / n)
+        let arrival = (1 + (i as u64).saturating_mul(horizon) / n as u64) as f64;
+        let t = crate::tasks::storm_task(i, arrival, cfg, rng);
+        let line = obj(vec![
+            ("op", Json::Str("submit".into())),
+            ("task", task_to_json(&t)),
+        ])
+        .render_compact();
+        writeln!(out, "{line}").map_err(|e| format!("writing storm trace: {e}"))?;
+        lines += 1;
+    }
+    if shutdown {
+        writeln!(out, "{{\"op\":\"shutdown\"}}").map_err(|e| format!("writing storm trace: {e}"))?;
+        lines += 1;
+    }
+    Ok(lines)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -260,6 +299,38 @@ mod tests {
             workload_to_session(&w, false).lines().count(),
             w.total_tasks()
         );
+    }
+
+    #[test]
+    fn storm_session_streams_valid_paced_submits() {
+        let cfg = GenConfig::default();
+        let mut rng = Rng::new(7);
+        let mut buf = Vec::new();
+        let n = write_storm_session(100, 10, &cfg, &mut rng, true, &mut buf).unwrap();
+        assert_eq!(n, 101, "100 submits + shutdown");
+        let text = String::from_utf8(buf).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(*lines.last().unwrap(), "{\"op\":\"shutdown\"}");
+        let mut last = 0.0;
+        for (i, line) in lines[..100].iter().enumerate() {
+            let j = Json::parse(line).unwrap();
+            assert_eq!(j.get("op").unwrap().as_str(), Some("submit"));
+            let t = task_from_json(j.get("task").unwrap()).unwrap();
+            t.validate().unwrap();
+            assert_eq!(t.id, i);
+            assert!(t.arrival >= last, "arrival went backwards");
+            assert!(t.arrival >= 1.0 && t.arrival <= 10.0);
+            last = t.arrival;
+        }
+        // uniform pacing: 100 tasks over 10 slots → 10 per slot
+        assert_eq!(lines[..100].len(), 100);
+        assert!(write_storm_session(0, 10, &cfg, &mut Rng::new(1), false, &mut Vec::new()).is_err());
+        // deterministic given the seed
+        let mut a = Vec::new();
+        let mut b = Vec::new();
+        write_storm_session(50, 5, &cfg, &mut Rng::new(9), false, &mut a).unwrap();
+        write_storm_session(50, 5, &cfg, &mut Rng::new(9), false, &mut b).unwrap();
+        assert_eq!(a, b);
     }
 
     #[test]

@@ -20,7 +20,7 @@
 
 use dvfs_sched::cli::{
     apply_overrides, parse_fail_at, parse_front_end_opts, parse_obs_opts, parse_online_policy,
-    parse_shard_opts, Args, FrontEndOpts, ObsOpts, ShardOpts,
+    parse_overload_opts, parse_shard_opts, Args, FrontEndOpts, ObsOpts, OverloadOpts, ShardOpts,
 };
 use dvfs_sched::config::SimConfig;
 use dvfs_sched::experiments::{self, ExpCtx};
@@ -81,7 +81,8 @@ fn print_help() {
          serve   [--policy edl|bin]  JSON-lines scheduling daemon\n  \
          replay FILE [--policy ...]  stream a JSONL session from a file\n  \
          recover JOURNAL [...]       replay a journal's request trace, then resume\n  \
-         workload export|replay|session  save / replay / sessionize a workload\n\n\
+         workload export|replay|session  save / replay / sessionize a workload\n  \
+         workload storm --tasks N    stream a load-harness session trace to disk\n\n\
          front-end flags (serve): --listen stdio|unix:<path>|tcp:<addr>\n               \
          --clock virtual|wall --time-scale SECS   (socket listeners serve\n               \
          multiple concurrent sessions; the wall clock stamps arrival =\n               \
@@ -93,6 +94,10 @@ fn print_help() {
          --journal-sync   (structured JSONL event journal + periodic live\n               \
          metrics + per-line fsync; the `metrics` request works either\n               \
          way — see docs/OBSERVABILITY.md)\n\n\
+         overload flags (serve/replay/recover): --max-pending N --max-queue-depth N\n               \
+         (bound the mux pending-response FIFO / the dispatcher's admission\n               \
+         backlog; excess submits get a typed 'overloaded' reject with a\n               \
+         retry_after hint — see docs/ARCHITECTURE.md §Backpressure)\n\n\
          fault flags (replay/recover): --fail-at slot:server[,...]   (inject\n               \
          fail_server requests at arrival slots; live sessions can send\n               \
          fail_server / fail_pair directly — see docs/PROTOCOL.md)\n\n\
@@ -271,13 +276,14 @@ fn cmd_offline(args: &Args) -> Result<(), String> {
 
 /// `workload export --out FILE` / `workload replay --in FILE [--policy ..]`
 /// / `workload session --in FILE --out FILE [--no-shutdown]`
+/// / `workload storm --tasks N --out FILE [--seed S --horizon H]`
 fn cmd_workload(args: &Args) -> Result<(), String> {
     let mut cfg = SimConfig::default();
     apply_overrides(args, &mut cfg)?;
     let sub = args
         .positional
         .first()
-        .ok_or("usage: repro workload <export|replay|session> ...")?
+        .ok_or("usage: repro workload <export|replay|session|storm> ...")?
         .clone();
     match sub.as_str() {
         "export" => {
@@ -338,6 +344,35 @@ fn cmd_workload(args: &Args) -> Result<(), String> {
             );
             Ok(())
         }
+        "storm" => {
+            // load-harness trace (`--tasks 1000000` is a datacenter-day):
+            // streamed straight to disk, one submit line per task, paced
+            // uniformly across the horizon — O(1) memory at any scale
+            let tasks = args.opt_usize("tasks")?.unwrap_or(1_000_000);
+            let out = args.opt_str("out").unwrap_or("storm.jsonl".into());
+            let shutdown = !args.flag("no-shutdown");
+            args.finish()?;
+            let file =
+                std::fs::File::create(&out).map_err(|e| format!("creating {out}: {e}"))?;
+            let mut w = std::io::BufWriter::new(file);
+            let mut rng = dvfs_sched::util::Rng::new(cfg.seed);
+            let n = dvfs_sched::ext::trace::write_storm_session(
+                tasks,
+                cfg.gen.horizon,
+                &cfg.gen,
+                &mut rng,
+                shutdown,
+                &mut w,
+            )?;
+            use std::io::Write;
+            w.flush().map_err(|e| format!("flushing {out}: {e}"))?;
+            println!(
+                "wrote {n} request line(s) ({tasks} storm task(s) over {} slot(s){}) to {out}",
+                cfg.gen.horizon,
+                if shutdown { " + shutdown" } else { "" }
+            );
+            Ok(())
+        }
         other => Err(format!("unknown workload subcommand '{other}'")),
     }
 }
@@ -356,17 +391,23 @@ fn cmd_workload(args: &Args) -> Result<(), String> {
 /// submits coalesce back into the batch they would have formed
 /// uninterrupted.  Socket listeners replay the prefix as a session of
 /// its own first — each socket client is a fresh session anyway.
+///
+/// `max_pending` bounds the multiplexer's pending-response FIFO
+/// (`--max-pending`); the synchronous single-session paths answer every
+/// request before reading the next, so the bound only arms the
+/// multiplexed listener.
 fn serve_front_end<C, R>(
     core: &mut C,
     fe: &FrontEndOpts,
     replay: Option<R>,
     prefix: Option<String>,
+    max_pending: Option<usize>,
 ) -> Result<bool, String>
 where
     C: dvfs_sched::service::ServiceCore + ?Sized,
     R: std::io::BufRead,
 {
-    use dvfs_sched::service::{serve_mux, serve_session, ListenAddr};
+    use dvfs_sched::service::{serve_mux_bounded, serve_session, ListenAddr};
     use std::io::{Cursor, Read};
     let clock = fe.clock();
     let stdout = std::io::stdout();
@@ -391,7 +432,7 @@ where
             }
             let listener = fe.listen.bind()?;
             let hello = fe.listen != ListenAddr::Stdio;
-            let res = serve_mux(core, clock.as_ref(), listener, hello);
+            let res = serve_mux_bounded(core, clock.as_ref(), listener, hello, max_pending);
             if let ListenAddr::Unix(path) = &fe.listen {
                 // the acceptor may still hold the fd; removing the path
                 // is what frees the address for the next daemon
@@ -413,6 +454,7 @@ fn run_service_session<R: std::io::BufRead>(
     mut opts: Option<ShardOpts>,
     fe: &FrontEndOpts,
     obs: &ObsOpts,
+    ov: &OverloadOpts,
     replay: Option<R>,
     recover_prefix: Option<String>,
     source: &str,
@@ -480,6 +522,16 @@ fn run_service_session<R: std::io::BufRead>(
                 cfg, kind, dvfs, o.shards, o.route, o.window, o.steal,
             )?;
             svc.set_obs(journal, obs.metrics_every);
+            svc.set_overload(ov.max_queue_depth);
+            if ov.max_pending.is_some() || ov.max_queue_depth.is_some() {
+                let show = |v: Option<usize>| v.map_or_else(|| "off".to_string(), |n| n.to_string());
+                eprintln!(
+                    "overload: max-pending {} / max-queue-depth {} — excess submits get a \
+                     typed 'overloaded' reject with a retry_after hint",
+                    show(ov.max_pending),
+                    show(ov.max_queue_depth),
+                );
+            }
             eprintln!(
                 "serve: {} policy, {} pairs (l={}) across {} shard(s), {} routing, \
                  batch window {} slot(s), steal {} — JSONL sessions on {source}, \
@@ -493,7 +545,7 @@ fn run_service_session<R: std::io::BufRead>(
                 if o.steal { "on" } else { "off" },
                 fe.clock_name(),
             );
-            let shutdown = serve_front_end(&mut svc, fe, replay, recover_prefix)?;
+            let shutdown = serve_front_end(&mut svc, fe, replay, recover_prefix, ov.max_pending)?;
             if !shutdown {
                 for line in svc.shutdown() {
                     println!("{}", line.render_compact());
@@ -513,7 +565,13 @@ fn run_service_session<R: std::io::BufRead>(
                 solver.backend_name(),
                 fe.clock_name(),
             );
-            let shutdown = serve_front_end(&mut svc, fe, replay, recover_prefix)?;
+            if let Some(p) = ov.max_pending {
+                eprintln!(
+                    "overload: max-pending {p} — excess mux submits get a typed \
+                     'overloaded' reject with a retry_after hint"
+                );
+            }
+            let shutdown = serve_front_end(&mut svc, fe, replay, recover_prefix, ov.max_pending)?;
             if !shutdown {
                 println!("{}", svc.shutdown().render_compact());
             }
@@ -532,6 +590,9 @@ fn cmd_serve(args: &Args) -> Result<(), String> {
     let opts = parse_shard_opts(args)?;
     let fe = parse_front_end_opts(args)?;
     let obs = parse_obs_opts(args)?;
+    // typed fleets are auto-upgraded to the sharded service below, so the
+    // dispatcher bound is enforceable there too
+    let ov = parse_overload_opts(args, opts.is_some() || !cfg.cluster.types.is_empty())?;
     args.finish()?;
 
     let source = match &fe.listen {
@@ -546,6 +607,7 @@ fn cmd_serve(args: &Args) -> Result<(), String> {
         opts,
         &fe,
         &obs,
+        &ov,
         None::<std::io::BufReader<std::fs::File>>,
         None,
         &source,
@@ -553,7 +615,9 @@ fn cmd_serve(args: &Args) -> Result<(), String> {
 }
 
 /// `repro replay <file>`: stream a recorded JSONL session end-to-end
-/// through the synchronous front end (virtual clock by default).
+/// through the synchronous front end (virtual clock by default).  Only
+/// the dispatcher overload bound applies — the synchronous session has
+/// no pending-response FIFO to cap, so `--max-pending` is an error here.
 fn cmd_replay(args: &Args) -> Result<(), String> {
     let mut cfg = SimConfig::default();
     apply_overrides(args, &mut cfg)?;
@@ -569,6 +633,14 @@ fn cmd_replay(args: &Args) -> Result<(), String> {
     // a replay file IS the session; any --listen flag is irrelevant here
     fe.listen = dvfs_sched::service::ListenAddr::Stdio;
     let obs = parse_obs_opts(args)?;
+    let ov = parse_overload_opts(args, opts.is_some() || !cfg.cluster.types.is_empty())?;
+    if ov.max_pending.is_some() {
+        return Err(
+            "--max-pending bounds the multiplexed listener's pending-response FIFO; \
+             replay is one synchronous session (use --max-queue-depth)"
+                .into(),
+        );
+    }
     let fail_at = match args.opt_str("fail-at") {
         Some(s) => Some(parse_fail_at(&s)?),
         None => None,
@@ -585,11 +657,13 @@ fn cmd_replay(args: &Args) -> Result<(), String> {
             injected.push('\n');
         }
         let reader = std::io::Cursor::new(injected);
-        return run_service_session(&cfg, kind, dvfs, opts, &fe, &obs, Some(reader), None, &path);
+        return run_service_session(
+            &cfg, kind, dvfs, opts, &fe, &obs, &ov, Some(reader), None, &path,
+        );
     }
     let file = std::fs::File::open(&path).map_err(|e| format!("opening {path}: {e}"))?;
     let reader = std::io::BufReader::new(file);
-    run_service_session(&cfg, kind, dvfs, opts, &fe, &obs, Some(reader), None, &path)
+    run_service_session(&cfg, kind, dvfs, opts, &fe, &obs, &ov, Some(reader), None, &path)
 }
 
 /// `repro recover <journal>`: rebuild a dead service from the request
@@ -615,6 +689,7 @@ fn cmd_recover(args: &Args) -> Result<(), String> {
     let opts = parse_shard_opts(args)?;
     let fe = parse_front_end_opts(args)?;
     let obs = parse_obs_opts(args)?;
+    let ov = parse_overload_opts(args, opts.is_some() || !cfg.cluster.types.is_empty())?;
     let fail_at = match args.opt_str("fail-at") {
         Some(s) => Some(parse_fail_at(&s)?),
         None => None,
@@ -655,6 +730,7 @@ fn cmd_recover(args: &Args) -> Result<(), String> {
         opts,
         &fe,
         &obs,
+        &ov,
         None::<std::io::BufReader<std::fs::File>>,
         Some(prefix),
         &source,

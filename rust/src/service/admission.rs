@@ -16,6 +16,13 @@ use crate::tasks::Task;
 /// [`AdmissionController::recheck_migration`]).
 pub const EVICTED_INFEASIBLE: &str = "evicted-infeasible";
 
+/// Wire reason tag for a submit shed by backpressure: the service's
+/// pending-response FIFO (`--max-pending`) or a shard job queue
+/// (`--max-queue-depth`) is past its high-water mark, or degraded-mode
+/// admission tightened the feasibility bound.  The response carries a
+/// `retry_after` hint (slots until the projected drain).
+pub const OVERLOADED: &str = "overloaded";
+
 /// Admission verdict for one submitted task.
 #[derive(Clone, Debug, PartialEq)]
 pub enum Verdict {
@@ -40,6 +47,17 @@ pub enum Verdict {
         /// Pairs per server.
         l: usize,
     },
+    /// Shed by backpressure (wire reason [`OVERLOADED`]): a bounded queue
+    /// is past its high-water mark, or — `degraded` — sustained overload
+    /// tightened admission to the cheapest-feasible execution bound and
+    /// this task's window cannot fit it.
+    RejectOverloaded {
+        /// Hint: slots until the queue is projected to drain (queue depth
+        /// over the recent flush rate).
+        retry_after: f64,
+        /// Whether degraded-mode admission (not raw queue depth) shed it.
+        degraded: bool,
+    },
 }
 
 impl Verdict {
@@ -56,6 +74,7 @@ impl Verdict {
             Verdict::RejectInvalid(_) => "invalid-task",
             Verdict::RejectUnknownType(_) => "unknown-gpu-type",
             Verdict::RejectGangWidth { .. } => "gang-too-wide",
+            Verdict::RejectOverloaded { .. } => OVERLOADED,
         }
     }
 }
@@ -108,6 +127,17 @@ pub struct AdmissionController {
     /// [`EVICTED_INFEASIBLE`]).  Kept out of [`Self::rejected`]: these
     /// tasks *passed* admission; the cluster broke underneath them.
     pub evicted_infeasible: u64,
+    /// Submits shed because a bounded queue was past its high-water mark
+    /// (wire reason [`OVERLOADED`]).  Kept out of [`Self::rejected`]:
+    /// backpressure says nothing about the task itself, only about the
+    /// service's momentary capacity, and the frozen `snapshot` schema's
+    /// rejection counters must not move when backpressure is off.
+    pub shed_overloaded: u64,
+    /// Submits shed by degraded-mode admission: under sustained overload
+    /// the gate tightens from the fastest-setting floor `t_min` to the
+    /// cheapest-feasible execution time, so work that would need the
+    /// expensive high-frequency settings sheds before cheap work.
+    pub shed_degraded: u64,
 }
 
 impl AdmissionController {
@@ -119,6 +149,49 @@ impl AdmissionController {
     /// Total rejections (infeasible + invalid + type + gang).
     pub fn rejected(&self) -> u64 {
         self.rejected_infeasible + self.rejected_invalid + self.rejected_type + self.rejected_gang
+    }
+
+    /// Total backpressure sheds (queue-depth plus degraded-mode).
+    pub fn shed(&self) -> u64 {
+        self.shed_overloaded + self.shed_degraded
+    }
+
+    /// Record a backpressure shed and build its verdict.  `degraded`
+    /// books the shed under the degraded-admission counter instead of the
+    /// raw queue-depth one; `retry_after` is the caller's projected-drain
+    /// hint (slots), echoed on the wire.
+    pub fn reject_overloaded(&mut self, retry_after: f64, degraded: bool) -> Verdict {
+        if degraded {
+            self.shed_degraded += 1;
+        } else {
+            self.shed_overloaded += 1;
+        }
+        Verdict::RejectOverloaded {
+            retry_after,
+            degraded,
+        }
+    }
+
+    /// Degraded-mode tightening: under sustained overload the gate
+    /// requires the window to fit `t_cheap` — the energy-cheapest
+    /// execution time (the model's unconstrained `t_star`, projected by
+    /// the caller for typed fleets) — instead of the fastest-setting
+    /// floor `t_min`.  Returns `Some(verdict)` when the task must shed
+    /// (same float tolerance as [`Self::check_feasibility_bound`]),
+    /// `None` when it survives the tightened gate.
+    pub fn check_degraded(
+        &mut self,
+        task: &Task,
+        now: f64,
+        t_cheap: f64,
+        retry_after: f64,
+    ) -> Option<Verdict> {
+        let start = now.max(task.arrival);
+        let available = task.deadline - start;
+        if !(available >= t_cheap * (1.0 - 1e-4) - 1e-6) {
+            return Some(self.reject_overloaded(retry_after, true));
+        }
+        None
     }
 
     /// Scenario half of the gate: the gang width must fit one server
@@ -311,6 +384,52 @@ mod tests {
         assert_eq!(a.migrated, 1);
         assert_eq!(a.evicted_infeasible, 1);
         assert_eq!(a.rejected(), 0);
+    }
+
+    #[test]
+    fn overload_sheds_count_apart_from_rejections() {
+        let mut a = AdmissionController::new();
+        let v = a.reject_overloaded(3.0, false);
+        assert_eq!(v.reason(), "overloaded");
+        assert!(!v.admitted());
+        let v = a.reject_overloaded(1.0, true);
+        assert_eq!(v.reason(), "overloaded");
+        assert_eq!(a.shed_overloaded, 1);
+        assert_eq!(a.shed_degraded, 1);
+        assert_eq!(a.shed(), 2);
+        // sheds must not leak into the frozen snapshot's rejection sum
+        assert_eq!(a.rejected(), 0);
+        assert_eq!(a.admitted, 0);
+    }
+
+    #[test]
+    fn degraded_gate_requires_the_cheap_bound() {
+        // the tightened gate sheds work that fits t_min but not t_cheap —
+        // the "expensive work sheds before cheap work" half of degradation
+        let mut a = AdmissionController::new();
+        let iv = ScalingInterval::wide();
+        let mut t = mk_task(0.5);
+        let t_min = t.model.t_min(&iv);
+        let t_cheap = t.model.t_star();
+        assert!(t_cheap > t_min, "the cheap bound is the slower one");
+        t.deadline = (t_min + t_cheap) / 2.0; // feasible fast, not cheap
+        assert!(a.check_feasibility(&t, 0.0, &iv).admitted());
+        let v = a.check_degraded(&t, 0.0, t_cheap, 2.0).expect("shed");
+        assert_eq!(v.reason(), "overloaded");
+        match v {
+            Verdict::RejectOverloaded {
+                retry_after,
+                degraded,
+            } => {
+                assert_eq!(retry_after, 2.0);
+                assert!(degraded);
+            }
+            other => panic!("wrong verdict {other:?}"),
+        }
+        // a loose window survives the tightened gate
+        t.deadline = 2.0 * t_cheap;
+        assert!(a.check_degraded(&t, 0.0, t_cheap, 2.0).is_none());
+        assert_eq!(a.shed_degraded, 1);
     }
 
     #[test]

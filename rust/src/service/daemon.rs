@@ -880,6 +880,10 @@ impl ServiceCore for Service<'_> {
     fn logical_now(&self) -> f64 {
         self.now()
     }
+
+    fn note_overload_shed(&mut self) {
+        self.admission.shed_overloaded += 1;
+    }
 }
 
 #[cfg(test)]

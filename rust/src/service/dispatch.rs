@@ -34,6 +34,15 @@
 //! * **Work stealing.**  Idle workers steal queued chunks from backed-up
 //!   siblings (see [`crate::service::shard`]), trading strict routing
 //!   fidelity for throughput under skew.
+//! * **Backpressure.**  `--max-queue-depth` bounds the admission backlog
+//!   (pending batch + deepest live shard queue): past the high-water
+//!   mark submits shed with a typed `overloaded` reject carrying a
+//!   `retry_after` drain hint, and sustained shedding engages degraded
+//!   admission — the feasibility gate tightens from the `t_min` floor to
+//!   the nominal `t_star`, so expensive work sheds before cheap work
+//!   (see `docs/ARCHITECTURE.md` §Backpressure and shedding).  Off by
+//!   default, and then response-line-identical to a dispatcher without
+//!   the gate.
 //!
 //! Shards always run the native DVFS solver: the PJRT backend is not
 //! `Send`, and the per-batch solve is exactly the part sharding wants to
@@ -44,7 +53,7 @@ use crate::config::{GpuTypeSpec, SimConfig};
 use crate::dvfs::{ScalingInterval, SolveCache, GRID_DEFAULT};
 use crate::ext::hetero::{select_type_cached, TypeParams};
 use std::cell::RefCell;
-use crate::service::admission::{AdmissionController, Verdict, EVICTED_INFEASIBLE};
+use crate::service::admission::{AdmissionController, Verdict, EVICTED_INFEASIBLE, OVERLOADED};
 use crate::service::daemon::{RecordStore, TaskRecord};
 use crate::service::journal::Journal;
 use crate::service::metrics::Snapshot;
@@ -56,7 +65,7 @@ use crate::sim::online::OnlinePolicyKind;
 use crate::tasks::Task;
 use crate::util::json::Json;
 use crate::util::Hist;
-use std::collections::{BTreeMap, BTreeSet};
+use std::collections::{BTreeMap, BTreeSet, VecDeque};
 use std::io::{BufRead, Write};
 use std::sync::mpsc;
 use std::time::Instant;
@@ -67,6 +76,18 @@ use std::time::Instant;
 /// the unit of routing and stealing; 8 tasks amortize the queue handoff
 /// while leaving enough pieces to balance.
 const CHUNK: usize = 8;
+
+/// Overload sheds within [`DEGRADE_WINDOW`] slots that flip the
+/// dispatcher into degraded admission ("sustained overload").
+const DEGRADE_AFTER: usize = 4;
+
+/// Sliding window (logical slots) over which sheds count as sustained.
+const DEGRADE_WINDOW: f64 = 16.0;
+
+/// Slots degraded admission holds past its most recent trigger before
+/// the exit conditions are even consulted (hysteresis: a single quiet
+/// slot must not flap the gate).
+const DEGRADE_HOLD: f64 = 8.0;
 
 /// How the dispatcher picks a shard for each chunk.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -238,6 +259,27 @@ pub struct ShardedService {
     /// Steal notices buffered the same way: (routed shard, executing
     /// shard, tasks).
     pending_steals: Vec<(usize, usize, usize)>,
+    /// `--max-queue-depth`: high-water mark on the admission backlog
+    /// (pending coalesced batch + deepest live shard job queue).  `None`
+    /// disables the overload gate entirely, keeping every response line
+    /// byte-identical to a pre-backpressure dispatcher (property-tested
+    /// in `tests/integration_overload.rs`).
+    max_queue_depth: Option<usize>,
+    /// EMA of admitted tasks per admission slot — the drain-rate estimate
+    /// behind the `retry_after` hint on `overloaded` rejects.
+    flush_rate: f64,
+    /// Deepest admission backlog observed (a `metrics`-body gauge).
+    peak_depth: usize,
+    /// Logical times of recent overload sheds, pruned to the trailing
+    /// [`DEGRADE_WINDOW`]; [`DEGRADE_AFTER`] of them engage degraded
+    /// admission.
+    recent_sheds: VecDeque<f64>,
+    /// Whether degraded admission is active: feasibility tightens from
+    /// the `t_min` floor to the nominal `t_star`, shedding work that
+    /// would need expensive high-frequency settings before cheap work.
+    degraded: bool,
+    /// Logical time the degraded hold expires (see [`DEGRADE_HOLD`]).
+    degrade_until: f64,
 }
 
 impl ShardedService {
@@ -351,7 +393,23 @@ impl ShardedService {
             hist_flush: Hist::new(),
             pending_events: Vec::new(),
             pending_steals: Vec::new(),
+            max_queue_depth: None,
+            flush_rate: 1.0,
+            peak_depth: 0,
+            recent_sheds: VecDeque::new(),
+            degraded: false,
+            degrade_until: 0.0,
         })
+    }
+
+    /// Arm the overload gate (`--max-queue-depth`): submits arriving with
+    /// the admission backlog at or past `max_queue_depth` are shed with a
+    /// typed [`OVERLOADED`] reject and a `retry_after` drain hint instead
+    /// of buffering without bound, and sustained shedding engages
+    /// degraded admission.  `None` (the default) disables the gate; the
+    /// service is then response-line-identical to one without this call.
+    pub fn set_overload(&mut self, max_queue_depth: Option<usize>) {
+        self.max_queue_depth = max_queue_depth;
     }
 
     /// Attach the observability surface (`--journal` /
@@ -536,6 +594,44 @@ impl ShardedService {
             out.push(obj(fields));
             return out;
         }
+        // overload gate (--max-queue-depth): the admission backlog is the
+        // pending coalesced batch plus the deepest live shard job queue;
+        // at or past the high-water mark this submit sheds with a typed
+        // `overloaded` reject + retry_after hint instead of buffering
+        // without bound.  The depth is measured BEFORE the shed's flush:
+        // the flush is only there to keep response lines in request
+        // order (the bounce pattern above), not to excuse the overload.
+        let depth = self.batch.len() + self.pool.queue_depths().into_iter().max().unwrap_or(0);
+        self.peak_depth = self.peak_depth.max(depth);
+        if let Some(hwm) = self.max_queue_depth {
+            // degraded-mode exit: hold expired AND the backlog is back
+            // under the low-water mark (half the high-water)
+            if self.degraded && arrival >= self.degrade_until && depth <= hwm / 2 {
+                self.set_degraded(false, arrival);
+            }
+            if depth >= hwm {
+                let retry_after = self.retry_after_hint(depth);
+                let v = self.admission.reject_overloaded(retry_after, false);
+                out.extend(self.flush());
+                self.records
+                    .remember(task.id, TaskRecord::rejected(arrival, task.deadline));
+                self.note_shed(arrival, task.id, retry_after, false);
+                // `degraded` tags the shed's CAUSE (raw depth here), not
+                // the mode the shed may have just engaged — mode is a
+                // `metrics` gauge
+                out.push(obj(vec![
+                    ("ok", Json::Bool(true)),
+                    ("op", s("submit")),
+                    ("id", num(task.id as f64)),
+                    ("now", num(self.now)),
+                    ("admitted", Json::Bool(false)),
+                    ("reason", s(v.reason())),
+                    ("retry_after", num(retry_after)),
+                    ("degraded", Json::Bool(false)),
+                ]));
+                return out;
+            }
+        }
         if self.window > 0.0 {
             let slot = (arrival / self.window).floor();
             if !self.batch.is_empty() && slot != self.batch_slot {
@@ -667,6 +763,36 @@ impl ShardedService {
             }
             match self.admission.check_feasibility_bound(&task, t, t_min) {
                 Verdict::Admit => {
+                    // degraded admission (sustained overload): the gate
+                    // tightens from the t_min floor to the nominal
+                    // t_star, so work that would need expensive
+                    // high-frequency settings to meet its deadline sheds
+                    // first while cheap work keeps flowing.  Runs AFTER
+                    // the normal bound so truly infeasible tasks keep
+                    // their `infeasible-deadline` reason.
+                    if self.degraded {
+                        let hint = self.retry_after_hint(n);
+                        if self
+                            .admission
+                            .check_degraded(&task, t, floor_model.t_star(), hint)
+                            .is_some()
+                        {
+                            self.records
+                                .remember(id, TaskRecord::rejected(task.arrival, task.deadline));
+                            self.note_shed(t, id, hint, true);
+                            responses[idx] = Some(obj(vec![
+                                ("ok", Json::Bool(true)),
+                                ("op", s("submit")),
+                                ("id", num(id as f64)),
+                                ("now", num(self.now)),
+                                ("admitted", Json::Bool(false)),
+                                ("reason", s(OVERLOADED)),
+                                ("retry_after", num(hint)),
+                                ("degraded", Json::Bool(true)),
+                            ]));
+                            continue;
+                        }
+                    }
                     admitted.push((
                         idx,
                         ServiceTask {
@@ -819,11 +945,59 @@ impl ShardedService {
                 j.flush();
             }
         }
+        // drain-rate estimate behind retry_after hints: admitted tasks
+        // per admission slot, exponentially smoothed (window 0 flushes
+        // per submit, so a slot is at least one flush wide)
+        let sample = admitted.len() as f64 / self.window.max(1.0);
+        self.flush_rate = 0.5 * self.flush_rate + 0.5 * sample;
         self.hist_flush.record(flush_t0.elapsed().as_secs_f64() * 1e6);
         self.maybe_emit_metrics();
         let out: Vec<Json> = responses.into_iter().flatten().collect();
         debug_assert_eq!(out.len(), n, "every batch member got a response");
         out
+    }
+
+    /// Slots until a backlog of `depth` is projected to drain at the
+    /// recent flush rate — the `retry_after` hint on an [`OVERLOADED`]
+    /// reject.  The rate is clamped to ≥ 1 task/slot so a cold or
+    /// starved estimate never inflates the hint past `depth` slots.
+    fn retry_after_hint(&self, depth: usize) -> f64 {
+        (depth as f64 / self.flush_rate.max(1.0)).ceil().max(1.0)
+    }
+
+    /// Book one overload shed at logical time `t`: journal it, slide the
+    /// recent-shed window, and engage (or extend) degraded admission when
+    /// [`DEGRADE_AFTER`] sheds land within [`DEGRADE_WINDOW`] slots.
+    fn note_shed(&mut self, t: f64, id: usize, retry_after: f64, degraded_shed: bool) {
+        if let Some(j) = self.journal.as_mut() {
+            let mut jf = vec![("id", num(id as f64)), ("retry_after", num(retry_after))];
+            if degraded_shed {
+                jf.push(("degraded", Json::Bool(true)));
+            }
+            j.record("shed", t, jf);
+        }
+        self.recent_sheds.push_back(t);
+        while self
+            .recent_sheds
+            .front()
+            .map_or(false, |&s| s < t - DEGRADE_WINDOW)
+        {
+            self.recent_sheds.pop_front();
+        }
+        if self.recent_sheds.len() >= DEGRADE_AFTER {
+            self.degrade_until = t + DEGRADE_HOLD;
+            if !self.degraded {
+                self.set_degraded(true, t);
+            }
+        }
+    }
+
+    /// Flip degraded admission and journal the transition.
+    fn set_degraded(&mut self, active: bool, t: f64) {
+        self.degraded = active;
+        if let Some(j) = self.journal.as_mut() {
+            j.record("degrade", t, vec![("active", Json::Bool(active))]);
+        }
     }
 
     /// Journal the side effects buffered during a dispatch — steal
@@ -1349,7 +1523,12 @@ impl ShardedService {
         frags.sort_by_key(|&(id, _)| id);
         let parts: Vec<Snapshot> = frags.into_iter().map(|(_, snap)| snap).collect();
         let mut merged = Snapshot::merge(&parts);
-        merged.submitted = self.admission.admitted + self.admission.rejected();
+        // sheds are neither admissions nor admission-rejections, but a
+        // shed submit WAS received: the books stay balanced as
+        // submitted = admitted + rejected + shed (shed() is 0 — and the
+        // rendered line byte-identical — unless backpressure is armed)
+        merged.submitted =
+            self.admission.admitted + self.admission.rejected() + self.admission.shed();
         merged.admitted = self.admission.admitted;
         merged.rejected_infeasible = self.admission.rejected_infeasible;
         merged.rejected_invalid = self.admission.rejected_invalid;
@@ -1357,6 +1536,8 @@ impl ShardedService {
         merged.rejected_gang = self.admission.rejected_gang;
         merged.migrated = self.admission.migrated;
         merged.evicted = self.admission.evicted_infeasible;
+        merged.shed = self.admission.shed_overloaded;
+        merged.shed_degraded = self.admission.shed_degraded;
         merged.steals = self.pool.steals();
         merged.now = merged.now.max(self.now);
         if drain {
@@ -1430,6 +1611,11 @@ impl ShardedService {
                     .collect(),
             ),
         );
+        m.insert("peak_queue_depth".to_string(), num(self.peak_depth as f64));
+        m.insert("degraded".to_string(), Json::Bool(self.degraded));
+        if let Some(hwm) = self.max_queue_depth {
+            m.insert("max_queue_depth".to_string(), num(hwm as f64));
+        }
         m.insert("hist_submit_us".to_string(), self.hist_submit.summary_json());
         m.insert("hist_solve_us".to_string(), self.hist_solve.summary_json());
         m.insert("hist_flush_us".to_string(), self.hist_flush.summary_json());
@@ -1586,6 +1772,10 @@ impl ServiceCore for ShardedService {
 
     fn logical_now(&self) -> f64 {
         self.now
+    }
+
+    fn note_overload_shed(&mut self) {
+        self.admission.shed_overloaded += 1;
     }
 }
 
@@ -2154,5 +2344,127 @@ mod tests {
         let snap = fin.last().unwrap();
         assert_eq!(snap.get("violations").unwrap().as_f64(), Some(0.0));
         assert_eq!(snap.get("rejected_gang").unwrap().as_f64(), Some(1.0));
+    }
+
+    #[test]
+    fn overload_gate_sheds_past_the_high_water_mark() {
+        let mut service = svc(2, 1.0);
+        service.set_overload(Some(2));
+        // two submits buffer inside slot [0, 1): backlog = 2
+        assert!(service.submit(mk_task(0, 0.0, 0.5, 10.0)).is_empty());
+        assert!(service.submit(mk_task(1, 0.0, 0.5, 10.0)).is_empty());
+        // the third hits the high-water mark: the pending batch flushes
+        // first (request order), then the shed reject comes back typed
+        let out = service.submit(mk_task(2, 0.0, 0.5, 10.0));
+        assert_eq!(out.len(), 3);
+        assert_eq!(out[0].get("id").unwrap().as_f64(), Some(0.0));
+        assert_eq!(out[0].get("admitted"), Some(&Json::Bool(true)));
+        assert_eq!(out[1].get("admitted"), Some(&Json::Bool(true)));
+        let shed = &out[2];
+        assert_eq!(shed.get("id").unwrap().as_f64(), Some(2.0));
+        assert_eq!(shed.get("admitted"), Some(&Json::Bool(false)));
+        assert_eq!(shed.get("reason").unwrap().as_str(), Some(OVERLOADED));
+        assert_eq!(shed.get("degraded"), Some(&Json::Bool(false)));
+        // cold flush-rate estimate is 1 task/slot → hint = depth slots
+        let retry = shed.get("retry_after").unwrap().as_f64().unwrap();
+        assert_eq!(retry, 2.0);
+        // the shed task is NOT in the books, and queries as rejected
+        let q = service.records.query_json(2, service.now());
+        assert_eq!(q.get("status").unwrap().as_str(), Some("rejected"));
+        // retry_after honored: resubmitting at the hinted slot lands on a
+        // drained backlog (no shed; it buffers into a fresh batch)
+        assert!(service.submit(mk_task(2, retry, 0.5, 10.0)).is_empty());
+        let again = service.flush();
+        assert_eq!(again.len(), 1);
+        assert_eq!(again[0].get("id").unwrap().as_f64(), Some(2.0));
+        assert_eq!(again[0].get("admitted"), Some(&Json::Bool(true)));
+        // one shed rides the metrics body (not the frozen snapshot), and
+        // the books balance: submitted = admitted + rejected + shed
+        let m = service.metrics_json();
+        assert_eq!(m.get("shed").unwrap().as_f64(), Some(1.0));
+        assert_eq!(m.get("shed_degraded").unwrap().as_f64(), Some(0.0));
+        assert_eq!(m.get("max_queue_depth").unwrap().as_f64(), Some(2.0));
+        assert!(m.get("peak_queue_depth").unwrap().as_f64().unwrap() >= 2.0);
+        let fin = service.shutdown();
+        let snap = fin.last().unwrap();
+        assert!(snap.get("shed").is_none(), "frozen snapshot schema grew");
+        assert_eq!(snap.get("submitted").unwrap().as_f64(), Some(4.0));
+        assert_eq!(snap.get("admitted").unwrap().as_f64(), Some(3.0));
+    }
+
+    #[test]
+    fn sustained_sheds_engage_and_release_degraded_admission() {
+        let mut service = svc(1, 1.0);
+        service.set_overload(Some(2));
+        // every third same-slot submit sheds; four sheds inside the
+        // DEGRADE_WINDOW flip the dispatcher into degraded admission
+        let mut sheds = 0;
+        for i in 0..12 {
+            let out = service.submit(mk_task(i, 0.0, 0.5, 10.0));
+            if let Some(r) = out.last() {
+                if r.get("reason").map(|v| v.as_str()) == Some(Some(OVERLOADED)) {
+                    sheds += 1;
+                }
+            }
+        }
+        assert_eq!(sheds, 4);
+        assert!(service.degraded, "4 sheds in-window engage degradation");
+        // degraded: a task feasible by t_min but needing an expensive
+        // high-frequency setting (window < t_star) sheds; cheap work
+        // (window ≥ t_star) keeps flowing
+        let iv = ScalingInterval::wide();
+        let mut pricey = mk_task(100, 0.0, 0.5, 10.0);
+        let t_min = pricey.model.t_min(&iv);
+        let t_star = pricey.model.t_star();
+        assert!(t_star > t_min);
+        pricey.deadline = 0.5 * (t_min + t_star);
+        pricey.u = (t_star / pricey.deadline).min(1.0);
+        assert!(service.submit(pricey).is_empty());
+        assert!(service.submit(mk_task(101, 0.0, 0.3, 10.0)).is_empty());
+        let out = service.flush();
+        assert_eq!(out.len(), 2);
+        assert_eq!(out[0].get("admitted"), Some(&Json::Bool(false)));
+        assert_eq!(out[0].get("reason").unwrap().as_str(), Some(OVERLOADED));
+        assert_eq!(out[0].get("degraded"), Some(&Json::Bool(true)));
+        assert!(out[0].get("retry_after").unwrap().as_f64().unwrap() >= 1.0);
+        assert_eq!(out[1].get("admitted"), Some(&Json::Bool(true)));
+        let m = service.metrics_json();
+        assert_eq!(m.get("degraded"), Some(&Json::Bool(true)));
+        assert_eq!(m.get("shed").unwrap().as_f64(), Some(4.0));
+        assert_eq!(m.get("shed_degraded").unwrap().as_f64(), Some(1.0));
+        // hysteresis: the mode holds until DEGRADE_HOLD expires AND the
+        // backlog is back under the low-water mark — a submit arriving
+        // after the hold on a drained backlog releases it
+        let late = service.submit(mk_task(102, DEGRADE_HOLD + 2.0, 0.5, 10.0));
+        assert!(late.is_empty(), "buffered: backlog is under the mark");
+        assert!(!service.degraded, "hold expired on a drained backlog");
+        let fin = service.shutdown();
+        assert_eq!(
+            fin[0].get("admitted"),
+            Some(&Json::Bool(true)),
+            "post-degraded admission is back to the t_min floor"
+        );
+    }
+
+    #[test]
+    fn unarmed_overload_gate_is_response_identical() {
+        // the gate OFF (default) and armed-but-untripped must release
+        // byte-identical response lines — the oracle-preserving contract
+        let drive = |svc: &mut ShardedService| -> Vec<String> {
+            let mut lines = Vec::new();
+            for i in 0..10 {
+                for r in svc.submit(mk_task(i, i as f64 / 3.0, 0.4, 10.0)) {
+                    lines.push(r.render_compact());
+                }
+            }
+            for r in svc.shutdown() {
+                lines.push(r.render_compact());
+            }
+            lines
+        };
+        let mut plain = svc(2, 1.0);
+        let mut armed = svc(2, 1.0);
+        armed.set_overload(Some(1_000_000));
+        assert_eq!(drive(&mut plain), drive(&mut armed));
     }
 }

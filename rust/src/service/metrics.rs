@@ -58,7 +58,7 @@ pub struct Snapshot {
     pub pairs_busy: usize,
     /// Pairs that have ever run a task.
     pub pairs_used: usize,
-    /// Tasks submitted (admitted + rejected).
+    /// Tasks submitted (admitted + rejected + shed).
     pub submitted: u64,
     /// Tasks admitted.
     pub admitted: u64,
@@ -115,6 +115,14 @@ pub struct Snapshot {
     /// finish in time (`evicted-infeasible`).  Metrics-only, like
     /// `migrated`.
     pub evicted: u64,
+    /// Submits shed by backpressure (`overloaded` rejects from a queue
+    /// past its `--max-pending` / `--max-queue-depth` high-water mark).
+    /// Metrics-only, like `migrated` — backpressure-off runs must stay
+    /// byte-identical on the frozen `snapshot` schema.
+    pub shed: u64,
+    /// Submits shed by degraded-mode admission (the tightened
+    /// cheapest-feasible gate under sustained overload).  Metrics-only.
+    pub shed_degraded: u64,
 }
 
 impl Snapshot {
@@ -146,7 +154,10 @@ impl Snapshot {
             servers_used: cluster.servers_used(),
             pairs_busy,
             pairs_used: cluster.pairs_used(),
-            submitted: adm.admitted + adm.rejected(),
+            // sheds are neither admissions nor admission-rejections, but
+            // a shed submit WAS received; shed() is 0 unless backpressure
+            // is armed, so the unarmed rendering is byte-identical
+            submitted: adm.admitted + adm.rejected() + adm.shed(),
             admitted: adm.admitted,
             rejected_infeasible: adm.rejected_infeasible,
             rejected_invalid: adm.rejected_invalid,
@@ -172,6 +183,8 @@ impl Snapshot {
             queued_by_type: vec![0],
             migrated: adm.migrated,
             evicted: adm.evicted_infeasible,
+            shed: adm.shed_overloaded,
+            shed_degraded: adm.shed_degraded,
         }
     }
 
@@ -260,6 +273,8 @@ impl Snapshot {
             m.cache_epoch_flushes += p.cache_epoch_flushes;
             m.migrated += p.migrated;
             m.evicted += p.evicted;
+            m.shed += p.shed;
+            m.shed_degraded += p.shed_degraded;
         }
         m.shards = parts.len();
         m
@@ -355,6 +370,11 @@ impl Snapshot {
         );
         m.insert("migrated".to_string(), Json::Num(self.migrated as f64));
         m.insert("evicted".to_string(), Json::Num(self.evicted as f64));
+        m.insert("shed".to_string(), Json::Num(self.shed as f64));
+        m.insert(
+            "shed_degraded".to_string(),
+            Json::Num(self.shed_degraded as f64),
+        );
         Json::Obj(m)
     }
 }
@@ -493,6 +513,8 @@ mod tests {
             queued_by_type: vec![4, 0],
             migrated: 2,
             evicted: 1,
+            shed: 4,
+            shed_degraded: 2,
             ..Snapshot::default()
         };
         let b = Snapshot {
@@ -501,6 +523,7 @@ mod tests {
             cache_planes: 3,
             queued_by_type: vec![0, 7],
             migrated: 1,
+            shed: 1,
             ..Snapshot::default()
         };
         let m = Snapshot::merge(&[a, b]);
@@ -511,18 +534,24 @@ mod tests {
         assert_eq!(m.queued_by_type, vec![4, 7]);
         assert_eq!(m.migrated, 3);
         assert_eq!(m.evicted, 1);
+        assert_eq!(m.shed, 5);
+        assert_eq!(m.shed_degraded, 2);
         // the frozen snapshot schema must not grow the new keys...
         let frozen = m.to_json();
         assert!(frozen.get("cache_hits").is_none());
         assert!(frozen.get("queued_by_type").is_none());
         assert!(frozen.get("migrated").is_none());
         assert!(frozen.get("evicted").is_none());
+        assert!(frozen.get("shed").is_none());
+        assert!(frozen.get("shed_degraded").is_none());
         // ...while the metrics rendering is a strict superset of it
         let obs = m.to_json_obs();
         assert_eq!(obs.get("cache_hits").unwrap().as_f64(), Some(15.0));
         assert_eq!(obs.get("cache_epoch_flushes").unwrap().as_f64(), Some(1.0));
         assert_eq!(obs.get("migrated").unwrap().as_f64(), Some(3.0));
         assert_eq!(obs.get("evicted").unwrap().as_f64(), Some(1.0));
+        assert_eq!(obs.get("shed").unwrap().as_f64(), Some(5.0));
+        assert_eq!(obs.get("shed_degraded").unwrap().as_f64(), Some(2.0));
         let q = obs.get("queued_by_type").unwrap().as_arr().unwrap();
         assert_eq!(q.len(), 2);
         assert_eq!(q[1].as_f64(), Some(7.0));

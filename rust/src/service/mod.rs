@@ -65,6 +65,6 @@ pub use journal::Journal;
 pub use metrics::Snapshot;
 pub use protocol::{parse_request, parse_request_rid, Request, SubmitOpts, TypePref};
 pub use recover::{inject_failures, journal_requests};
-pub use session::{serve_mux, serve_session, ServiceCore};
+pub use session::{serve_mux, serve_mux_bounded, serve_session, ServiceCore};
 pub use shard::{Placement, ServiceTask, Shard, ShardLoad, ShardPool, TypeLoad};
 pub use transport::{Connection, ListenAddr, Listener, StaticListener, StdioListener};

@@ -43,6 +43,7 @@
 //! must never flush a pending batch, so its response may overtake
 //! deferred submit responses.
 
+use crate::service::admission::OVERLOADED;
 use crate::service::clock::Clock;
 use crate::service::journal::Journal;
 use crate::service::protocol::{error_response, num, obj, parse_request_rid, s, Request};
@@ -106,6 +107,12 @@ pub trait ServiceCore {
     fn logical_now(&self) -> f64 {
         0.0
     }
+
+    /// Count one front-end overload shed (`--max-pending`): the submit
+    /// was turned away at the multiplexer and never reached admission,
+    /// but the service's shed counters must still see it so the
+    /// `metrics` body reports total load turned away.  No-op by default.
+    fn note_overload_shed(&mut self) {}
 }
 
 /// Journal one accepted request line verbatim — the request trace that
@@ -379,6 +386,31 @@ pub fn serve_mux<C>(
 where
     C: ServiceCore + ?Sized,
 {
+    serve_mux_bounded(core, clock, listener, hello, None)
+}
+
+/// [`serve_mux`] with the pending-response FIFO bounded (`--max-pending`):
+/// a submit arriving while `max_pending` responses are already owed is
+/// shed at the front end with a typed [`OVERLOADED`] reject carrying a
+/// `retry_after` hint — it never reaches the core, so a hot client bounds
+/// the mux's memory instead of ballooning it.  Shed submits still count
+/// in `received` (the `ping` liveness counter) and in the per-session
+/// submit stats, are journaled as `shed` events (NOT as `request` lines:
+/// the recovery trace must only carry requests the core actually
+/// processed), and bump the core's shed counters via
+/// [`ServiceCore::note_overload_shed`].  Non-submit requests are never
+/// shed — `query`/`snapshot` force a flush that drains the FIFO, and
+/// `shutdown` must always get through.  `None` is exactly [`serve_mux`].
+pub fn serve_mux_bounded<C>(
+    core: &mut C,
+    clock: &dyn Clock,
+    listener: Box<dyn Listener>,
+    hello: bool,
+    max_pending: Option<usize>,
+) -> Result<bool, String>
+where
+    C: ServiceCore + ?Sized,
+{
     let (tx, rx) = mpsc::channel::<Event>();
     let acceptor_tx = tx.clone();
     std::thread::spawn(move || {
@@ -489,6 +521,45 @@ where
                     send_direct(&mut sessions, sid, &resp);
                 }
                 Ok(Some((mut req, rid))) => {
+                    // mux backpressure (--max-pending): a submit arriving
+                    // with the response FIFO at the high-water mark sheds
+                    // here, before the core ever sees it.  The reject is
+                    // answered directly (no pending claim), so it cannot
+                    // disturb the positional FIFO matching.
+                    if let (Some(maxp), Request::Submit(task, _)) = (max_pending, &req) {
+                        if pending.len() >= maxp {
+                            received += 1;
+                            *session_submits.entry(sid).or_insert(0) += 1;
+                            let t = clock.now().unwrap_or_else(|| core.logical_now());
+                            // the hint assumes the owed FIFO drains about
+                            // one claim per admission slot
+                            let retry_after = pending.len() as f64;
+                            core.note_overload_shed();
+                            if let Some(j) = core.journal_mut() {
+                                j.record(
+                                    "shed",
+                                    t,
+                                    vec![
+                                        ("id", num(task.id as f64)),
+                                        ("retry_after", num(retry_after)),
+                                        ("sid", num(sid as f64)),
+                                    ],
+                                );
+                            }
+                            let resp = obj(vec![
+                                ("ok", Json::Bool(true)),
+                                ("op", s("submit")),
+                                ("id", num(task.id as f64)),
+                                ("now", num(t)),
+                                ("admitted", Json::Bool(false)),
+                                ("reason", s(OVERLOADED)),
+                                ("retry_after", num(retry_after)),
+                                ("degraded", Json::Bool(false)),
+                            ]);
+                            send_direct(&mut sessions, sid, &attach_rid(resp, rid));
+                            continue;
+                        }
+                    }
                     received += 1;
                     if let Request::Submit(ref mut task, _) = req {
                         task.arrival = clock.stamp(task.arrival);

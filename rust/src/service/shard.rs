@@ -711,6 +711,16 @@ impl ShardPool {
     pub fn steals(&self) -> u64 {
         self.shared.steals.load(Ordering::Relaxed)
     }
+
+    /// Live job-queue depth per shard, read under the pool lock — unlike
+    /// the `queued` counts piggybacked on [`BatchReply`] (which are
+    /// snapshots from the last flush's replies), this sees work enqueued
+    /// since.  The dispatcher's overload gate (`--max-queue-depth`)
+    /// compares its high-water mark against the deepest of these.
+    pub fn queue_depths(&self) -> Vec<usize> {
+        let qs = self.shared.queues.lock().unwrap();
+        qs.iter().map(|q| q.len()).collect()
+    }
 }
 
 impl Drop for ShardPool {

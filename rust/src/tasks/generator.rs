@@ -32,6 +32,15 @@ fn gen_task(id: usize, arrival: f64, u: f64, cfg: &GenConfig, rng: &mut Rng) -> 
     }
 }
 
+/// Generate one storm task (`repro workload storm`): u ~ U(0,1) floored
+/// at the generator's minimum, arrival fixed by the caller.  Exposed so
+/// the million-task load harness can stream tasks one at a time instead
+/// of materializing a workload in memory.
+pub fn storm_task(id: usize, arrival: f64, cfg: &GenConfig, rng: &mut Rng) -> Task {
+    let u = rng.open01().max(U_MIN);
+    gen_task(id, arrival, u, cfg, rng)
+}
+
 /// Offline task set with total utilization `u_target` (normalized on
 /// `cfg.base_pairs`, i.e. Σu_i = u_target * base_pairs).  All arrivals 0.
 pub fn generate_offline(u_target: f64, cfg: &GenConfig, rng: &mut Rng) -> TaskSet {

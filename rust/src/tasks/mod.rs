@@ -5,6 +5,6 @@ pub mod generator;
 pub mod library;
 pub mod task;
 
-pub use generator::{generate_offline, generate_online, OnlineWorkload};
+pub use generator::{generate_offline, generate_online, storm_task, OnlineWorkload};
 pub use library::{App, LIBRARY};
 pub use task::{Task, TaskSet};

@@ -1,0 +1,334 @@
+//! Integration tests for overload control (backpressure + shedding):
+//!
+//! * **off == seed**: with no overload flags — or with bounds too high to
+//!   ever trip — both front-end paths must be response-line-identical to
+//!   the unbounded build (property-tested over random sessions);
+//! * the multiplexer's `--max-pending` bound sheds submits with the
+//!   typed `overloaded` reject + `retry_after` hint, answered directly
+//!   (ahead of deferred responses), never journaled as a request, and
+//!   never entering the core's books;
+//! * the dispatcher's `--max-queue-depth` bound sheds at the door, the
+//!   shed task queries back as `rejected`, and a resubmit honoring the
+//!   `retry_after` hint is admitted;
+//! * non-submit requests (ping, metrics, shutdown) are never shed — the
+//!   control plane must stay reachable under overload.
+
+#![cfg(unix)]
+
+use dvfs_sched::config::SimConfig;
+use dvfs_sched::ext::trace::task_to_json;
+use dvfs_sched::service::{
+    serve_mux, serve_mux_bounded, Connection, RoutePolicy, ShardedService, StaticListener,
+    VirtualClock,
+};
+use dvfs_sched::sim::online::OnlinePolicyKind;
+use dvfs_sched::tasks::LIBRARY;
+use dvfs_sched::util::json::{obj, Json};
+use dvfs_sched::util::proptest::{check, Config};
+use dvfs_sched::util::Rng;
+use dvfs_sched::Task;
+use std::io::{BufRead, BufReader, Cursor, Write};
+use std::os::unix::net::UnixStream;
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+fn small_cfg() -> SimConfig {
+    let mut cfg = SimConfig::default();
+    cfg.cluster.total_pairs = 32;
+    cfg.cluster.pairs_per_server = 2;
+    cfg.theta = 0.9;
+    cfg
+}
+
+fn sharded(cfg: &SimConfig, window: f64) -> ShardedService {
+    ShardedService::new(
+        cfg,
+        OnlinePolicyKind::Edl,
+        true,
+        1,
+        RoutePolicy::LeastLoaded,
+        window,
+        false,
+    )
+    .unwrap()
+}
+
+fn mk_task(id: usize, arrival: f64, u: f64, k: f64) -> Task {
+    let model = LIBRARY[id % LIBRARY.len()].model.scaled(k);
+    Task {
+        id,
+        app: id % LIBRARY.len(),
+        model,
+        arrival,
+        deadline: arrival + model.t_star() / u,
+        u,
+    }
+}
+
+fn submit_line(t: &Task, rid: Option<&str>) -> String {
+    let mut fields = vec![("op", Json::Str("submit".into())), ("task", task_to_json(t))];
+    if let Some(r) = rid {
+        fields.push(("rid", Json::Str(r.into())));
+    }
+    obj(fields).render_compact()
+}
+
+/// A random session mixing feasible / infeasible / invalid submits,
+/// queries, snapshots, and garbage — the same shape the session-identity
+/// property uses, because "backpressure off changes nothing" has to hold
+/// on exactly that traffic.
+fn rand_session(rng: &mut Rng, cfg: &SimConfig) -> String {
+    let mut out = String::new();
+    let n = 10 + rng.index(25);
+    let mut now = 0.0;
+    for id in 0..n {
+        let dice = rng.f64();
+        if dice < 0.08 {
+            out.push_str("not json at all\n");
+            continue;
+        }
+        if dice < 0.16 {
+            out.push_str(&format!("{{\"op\":\"query\",\"id\":{}}}\n", rng.index(n.max(1))));
+            continue;
+        }
+        if dice < 0.22 {
+            out.push_str("{\"op\":\"snapshot\"}\n");
+            continue;
+        }
+        now += rng.uniform(0.0, 3.0);
+        let mut task = mk_task(id, now, rng.open01().max(0.05), rng.int_range(5, 30) as f64);
+        let sub = rng.f64();
+        if sub < 0.15 {
+            task.deadline = now + task.model.t_min(&cfg.interval) * 0.3;
+        } else if sub < 0.25 {
+            task.u = 1.5 + rng.f64();
+        }
+        out.push_str(&submit_line(&task, None));
+        out.push('\n');
+    }
+    if rng.f64() < 0.5 {
+        out.push_str("{\"op\":\"shutdown\"}\n");
+    }
+    out
+}
+
+/// A `Write` half that lands in a shared buffer.
+#[derive(Clone)]
+struct SharedBuf(Arc<Mutex<Vec<u8>>>);
+
+impl Write for SharedBuf {
+    fn write(&mut self, b: &[u8]) -> std::io::Result<usize> {
+        self.0.lock().unwrap().extend_from_slice(b);
+        Ok(b.len())
+    }
+
+    fn flush(&mut self) -> std::io::Result<()> {
+        Ok(())
+    }
+}
+
+/// Run one session through the mux front end and return its output.
+fn mux_output(svc: &mut ShardedService, session: &str, max_pending: Option<usize>) -> String {
+    let buf = SharedBuf(Arc::new(Mutex::new(Vec::new())));
+    let sink = buf.clone();
+    let conn = Connection::new(Cursor::new(session.as_bytes().to_vec()), sink, "test");
+    let listener = Box::new(StaticListener::new(vec![conn]));
+    match max_pending {
+        None => serve_mux(svc, &VirtualClock, listener, false).unwrap(),
+        Some(_) => {
+            serve_mux_bounded(svc, &VirtualClock, listener, false, max_pending).unwrap()
+        }
+    };
+    let out = String::from_utf8(buf.0.lock().unwrap().clone()).unwrap();
+    out
+}
+
+#[test]
+fn prop_backpressure_off_is_response_line_identical() {
+    // The PR's oracle anchor: an UNARMED overload path (no bounds, or
+    // bounds a session can never reach) must leave every response byte
+    // untouched, on both the deferred (windowed) and per-submit paths.
+    check(
+        "backpressure off == seed front end",
+        Config {
+            iters: 6,
+            ..Default::default()
+        },
+        |rng| rng.next_u64(),
+        |&seed| {
+            let cfg = small_cfg();
+            for window in [0.0, 1.0] {
+                let session = rand_session(&mut Rng::new(seed), &cfg);
+
+                // seed behavior: plain serve_mux, no dispatcher bound
+                let mut plain = sharded(&cfg, window);
+                let want = mux_output(&mut plain, &session, None);
+
+                // armed-but-untrippable: both bounds set absurdly high
+                let mut armed = sharded(&cfg, window);
+                armed.set_overload(Some(1_000_000));
+                let got = mux_output(&mut armed, &session, Some(1_000_000));
+                if got != want {
+                    return Err(format!(
+                        "armed-untripped diverged (window {window}):\n--- plain ---\n\
+                         {want}\n--- armed ---\n{got}"
+                    ));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+fn read_line(reader: &mut BufReader<UnixStream>) -> Json {
+    let mut line = String::new();
+    reader.read_line(&mut line).expect("read response line");
+    assert!(!line.is_empty(), "peer closed early");
+    Json::parse(line.trim_end()).expect("response is JSON")
+}
+
+#[test]
+fn mux_max_pending_sheds_directly_and_keeps_the_books_clean() {
+    // Giant admission window: submit responses defer, so the pending
+    // FIFO grows.  With --max-pending 2 the third submit must come back
+    // IMMEDIATELY (ahead of the two deferred responses) as a typed
+    // `overloaded` reject, the control plane must stay reachable, and
+    // the shed task must never reach the core's books.
+    let (server_half, client_half) = UnixStream::pair().unwrap();
+    let conn = Connection::new(
+        BufReader::new(server_half.try_clone().unwrap()),
+        server_half,
+        "pair",
+    );
+    let cfg = small_cfg();
+    let server = std::thread::spawn(move || {
+        let mut svc = sharded(&cfg, 1e9); // everything coalesces
+        let listener = Box::new(StaticListener::new(vec![conn]));
+        let stopped = serve_mux_bounded(&mut svc, &VirtualClock, listener, true, Some(2)).unwrap();
+        (svc, stopped)
+    });
+    client_half
+        .set_read_timeout(Some(Duration::from_secs(30)))
+        .unwrap();
+    let mut reader = BufReader::new(client_half.try_clone().unwrap());
+    let mut writer = client_half;
+    let hello = read_line(&mut reader);
+    assert_eq!(hello.get("op").unwrap().as_str(), Some("hello"));
+
+    for (i, rid) in [(0usize, "r0"), (1, "r1")] {
+        writeln!(writer, "{}", submit_line(&mk_task(i, 0.0, 0.3, 10.0), Some(rid))).unwrap();
+    }
+    // the FIFO now owes 2 responses; this submit sheds at the door
+    writeln!(writer, "{}", submit_line(&mk_task(7, 0.0, 0.3, 10.0), Some("r7"))).unwrap();
+    let shed = read_line(&mut reader);
+    assert_eq!(shed.get("rid").unwrap().as_str(), Some("r7"), "shed answers first");
+    assert_eq!(shed.get("admitted"), Some(&Json::Bool(false)));
+    assert_eq!(shed.get("reason").unwrap().as_str(), Some("overloaded"));
+    assert_eq!(shed.get("retry_after").unwrap().as_f64(), Some(2.0));
+    assert_eq!(shed.get("degraded"), Some(&Json::Bool(false)));
+
+    // ping and metrics are never shed, and the mux shed is on the gauges
+    writeln!(writer, "{{\"op\":\"ping\",\"rid\":\"p\"}}").unwrap();
+    let pong = read_line(&mut reader);
+    assert_eq!(pong.get("op").unwrap().as_str(), Some("ping"));
+    assert_eq!(pong.get("received").unwrap().as_f64(), Some(3.0), "shed still counted");
+    writeln!(writer, "{{\"op\":\"metrics\"}}").unwrap();
+    let m = read_line(&mut reader);
+    assert_eq!(m.get("shed").unwrap().as_f64(), Some(1.0));
+
+    // shutdown releases the two deferred admissions, then the snapshot
+    writeln!(writer, "{{\"op\":\"shutdown\",\"rid\":\"end\"}}").unwrap();
+    for rid in ["r0", "r1"] {
+        let resp = read_line(&mut reader);
+        assert_eq!(resp.get("rid").unwrap().as_str(), Some(rid));
+        assert_eq!(resp.get("admitted"), Some(&Json::Bool(true)));
+    }
+    let fin = read_line(&mut reader);
+    assert_eq!(fin.get("op").unwrap().as_str(), Some("shutdown"));
+    // `submitted` balances as admitted + rejected + shed
+    assert_eq!(fin.get("submitted").unwrap().as_f64(), Some(3.0));
+    assert_eq!(fin.get("admitted").unwrap().as_f64(), Some(2.0));
+    // the frozen snapshot schema did not grow a shed key
+    assert!(fin.get("shed").is_none());
+
+    let (svc, stopped) = server.join().unwrap();
+    assert!(stopped);
+    // the shed submit never reached the core: no record, no admission
+    assert!(svc.record(7).is_none(), "mux shed must not enter the books");
+    assert!(svc.record(0).unwrap().admitted);
+    assert!(svc.record(1).unwrap().admitted);
+}
+
+#[test]
+fn dispatcher_shed_queries_rejected_and_retry_after_is_honored() {
+    // --max-queue-depth through the full mux front end: the backlog
+    // crosses the mark inside one admission slot, the victim sheds with
+    // a retry_after hint, queries back as `rejected`, and a resubmit
+    // that waits out the hint is admitted.
+    let (server_half, client_half) = UnixStream::pair().unwrap();
+    let conn = Connection::new(
+        BufReader::new(server_half.try_clone().unwrap()),
+        server_half,
+        "pair",
+    );
+    let cfg = small_cfg();
+    let server = std::thread::spawn(move || {
+        let mut svc = sharded(&cfg, 1.0);
+        svc.set_overload(Some(2));
+        let listener = Box::new(StaticListener::new(vec![conn]));
+        let stopped = serve_mux(&mut svc, &VirtualClock, listener, true).unwrap();
+        (svc, stopped)
+    });
+    client_half
+        .set_read_timeout(Some(Duration::from_secs(30)))
+        .unwrap();
+    let mut reader = BufReader::new(client_half.try_clone().unwrap());
+    let mut writer = client_half;
+    let hello = read_line(&mut reader);
+    assert_eq!(hello.get("op").unwrap().as_str(), Some("hello"));
+
+    // two submits buffer into slot 0 (depth 2 = the high-water mark)
+    for (i, rid) in [(0usize, "r0"), (1, "r1")] {
+        writeln!(writer, "{}", submit_line(&mk_task(i, 0.2, 0.3, 10.0), Some(rid))).unwrap();
+    }
+    // the third sheds at the door; the buffered batch flushes first so
+    // response lines keep request order
+    writeln!(writer, "{}", submit_line(&mk_task(2, 0.3, 0.3, 10.0), Some("r2"))).unwrap();
+    for rid in ["r0", "r1"] {
+        let resp = read_line(&mut reader);
+        assert_eq!(resp.get("rid").unwrap().as_str(), Some(rid));
+        assert_eq!(resp.get("admitted"), Some(&Json::Bool(true)));
+    }
+    let shed = read_line(&mut reader);
+    assert_eq!(shed.get("rid").unwrap().as_str(), Some("r2"));
+    assert_eq!(shed.get("reason").unwrap().as_str(), Some("overloaded"));
+    let retry_after = shed.get("retry_after").unwrap().as_f64().unwrap();
+    assert!(retry_after >= 1.0, "hint must be at least one slot: {retry_after}");
+
+    // the shed task is on the books as rejected — queryable, not lost
+    writeln!(writer, "{{\"op\":\"query\",\"id\":2,\"rid\":\"q\"}}").unwrap();
+    let q = read_line(&mut reader);
+    assert_eq!(q.get("rid").unwrap().as_str(), Some("q"));
+    assert_eq!(q.get("status").unwrap().as_str(), Some("rejected"));
+
+    // honor the hint: resubmit (fresh id) after retry_after slots
+    let again = mk_task(3, 0.3 + retry_after, 0.3, 10.0);
+    writeln!(writer, "{}", submit_line(&again, Some("r3"))).unwrap();
+    writeln!(writer, "{{\"op\":\"shutdown\"}}").unwrap();
+    let resp = read_line(&mut reader);
+    assert_eq!(resp.get("rid").unwrap().as_str(), Some("r3"));
+    assert_eq!(
+        resp.get("admitted"),
+        Some(&Json::Bool(true)),
+        "resubmit honoring retry_after must be admitted: {resp:?}"
+    );
+    let fin = read_line(&mut reader);
+    assert_eq!(fin.get("op").unwrap().as_str(), Some("shutdown"));
+    assert_eq!(fin.get("submitted").unwrap().as_f64(), Some(4.0));
+    assert_eq!(fin.get("admitted").unwrap().as_f64(), Some(3.0));
+
+    let (svc, stopped) = server.join().unwrap();
+    assert!(stopped);
+    assert!(!svc.record(2).unwrap().admitted, "shed task recorded as rejected");
+    assert!(svc.record(3).unwrap().admitted);
+}

@@ -1,0 +1,118 @@
+#!/usr/bin/env python3
+"""Bench-trajectory gate: fail CI when BENCH_service.json regresses.
+
+Usage:
+    bench_gate.py --baseline BENCH_baseline.json --current rust/BENCH_service.json
+
+Compares the bench-smoke artifact against the committed baseline with
+per-metric tolerances (stdlib only, no deps).  A metric REGRESSING past
+its tolerance fails the job; a metric IMPROVING past its tolerance
+passes but prints a refresh hint, so the baseline ratchets forward
+instead of rotting.
+
+Two metric classes, because CI runners are shared hardware:
+
+* ratio metrics (speedups) are dimensionless and machine-robust — they
+  enforce always;
+* absolute metrics (tasks/sec, us, solves/sec) swing with the runner the
+  job happens to land on, so they get looser tolerances — and while the
+  baseline carries `"_calibrating": true` (i.e. it has not yet been
+  refreshed from a real CI artifact) they only warn.
+
+To refresh: download the BENCH_service artifact from a green main run,
+copy it over BENCH_baseline.json, and drop the `_calibrating` flag.
+"""
+
+import argparse
+import json
+import sys
+
+# (metric, direction, tolerance, ratio?)  direction "higher"/"lower" =
+# which way is better; tolerance = allowed fractional regression.
+METRICS = [
+    ("speedup_4_shards", "higher", 0.20, True),
+    ("cached_solve_speedup", "higher", 0.30, True),
+    ("typed_flush_speedup", "higher", 0.30, True),
+    ("throughput_1_shard", "higher", 0.50, False),
+    ("solves_per_sec_fresh", "higher", 0.50, False),
+    ("solves_per_sec_cached", "higher", 0.50, False),
+    ("typed_flush_tasks_per_sec_uncached", "higher", 0.50, False),
+    ("typed_flush_tasks_per_sec_cached", "higher", 0.50, False),
+    ("submit_latency_p50_us", "lower", 0.75, False),
+    ("submit_latency_p99_us", "lower", 1.00, False),
+    ("submit_latency_p999_us", "lower", 1.50, False),
+]
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description="bench trajectory gate")
+    ap.add_argument("--baseline", required=True)
+    ap.add_argument("--current", required=True)
+    args = ap.parse_args()
+
+    with open(args.baseline, encoding="utf-8") as f:
+        base = json.load(f)
+    with open(args.current, encoding="utf-8") as f:
+        cur = json.load(f)
+
+    calibrating = bool(base.get("_calibrating", False))
+    if calibrating:
+        print("baseline is CALIBRATING: absolute metrics warn only; "
+              "ratio metrics (speedups) enforce")
+
+    failures = []
+    improvements = []
+    print(f"{'metric':<36} {'baseline':>12} {'current':>12} {'delta':>8}  verdict")
+    for name, direction, tol, is_ratio in METRICS:
+        b = base.get(name)
+        c = cur.get(name)
+        if c is None:
+            failures.append(f"{name}: missing from the current artifact")
+            print(f"{name:<36} {b!s:>12} {'MISSING':>12} {'-':>8}  FAIL")
+            continue
+        if b is None:
+            print(f"{name:<36} {'(none)':>12} {c:>12.4g} {'-':>8}  skip (no baseline)")
+            continue
+        if b <= 0:
+            print(f"{name:<36} {b:>12.4g} {c:>12.4g} {'-':>8}  skip (degenerate baseline)")
+            continue
+        delta = c / b - 1.0
+        if direction == "higher":
+            regressed = delta < -tol
+            improved = delta > tol
+        else:
+            regressed = delta > tol
+            improved = delta < -tol
+        verdict = "ok"
+        if regressed:
+            if is_ratio or not calibrating:
+                verdict = "FAIL"
+                failures.append(
+                    f"{name}: {c:.4g} vs baseline {b:.4g} "
+                    f"({delta:+.1%}, tolerance {tol:.0%})"
+                )
+            else:
+                verdict = "warn (calibrating)"
+        elif improved:
+            verdict = "improved"
+            improvements.append(name)
+        print(f"{name:<36} {b:>12.4g} {c:>12.4g} {delta:>+7.1%}  {verdict}")
+
+    if improvements:
+        print(
+            f"\n{len(improvements)} metric(s) improved past tolerance "
+            f"({', '.join(improvements)}): consider refreshing the baseline — "
+            "download the BENCH_service artifact from this run, copy it over "
+            "BENCH_baseline.json, and drop any _calibrating flag."
+        )
+    if failures:
+        print(f"\nbench gate FAILED ({len(failures)} regression(s)):", file=sys.stderr)
+        for msg in failures:
+            print(f"  - {msg}", file=sys.stderr)
+        return 1
+    print("\nbench gate OK")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -73,6 +73,13 @@ SCHEMAS = {
     # stamped by `repro recover`: how many journal request lines were
     # replayed, and from which source journal
     "recover": {"requests": (int, float), "source": (str,)},
+    # backpressure: a submit shed with the typed `overloaded` reject
+    # (mux lines add `sid`, degraded-admission sheds add `degraded`);
+    # sheds are deliberately NOT journaled as `request` lines — the
+    # recovery trace must only carry requests the core processed
+    "shed": {"id": (int, float), "retry_after": (int, float)},
+    # degraded-admission mode engaging / releasing
+    "degrade": {"active": (bool,)},
 }
 
 

@@ -1,0 +1,99 @@
+#!/usr/bin/env bash
+# CI load smoke: storm-trace load harness against a live TCP daemon.
+#
+# `repro workload storm` writes a reduced datacenter-day trace (50k tasks
+# over 200 slots ≈ 250 tasks/slot), then four concurrent TCP clients
+# stream it through `repro serve --listen tcp` twice:
+#
+#   round 1 (headroom): --max-queue-depth far above anything the run can
+#     accumulate — the harness must see ZERO sheds, and its summary
+#     (sustained submits/sec, p50/p99/p999 round-trip, peak queue depth)
+#     becomes the `load` section of BENCH_service.json;
+#   round 2 (overload): a tiny --max-queue-depth under the same burst —
+#     the per-slot backlog crosses the mark, so the run must shed with
+#     the typed `overloaded` reject (and exercises degraded admission);
+#     its summary lands as `load_overload`.
+#
+# Arrivals clamp to the dispatcher clock, so however the four sockets
+# interleave, each virtual slot's tasks pile into the same admission
+# batch — which is exactly the backlog the depth gate measures.  That is
+# what makes the zero-shed / must-shed assertions deterministic.
+
+set -Eeuo pipefail
+cd "$(dirname "$0")/.."
+
+trap 'st=$?; echo "load_smoke: FAILED (exit $st) at line $LINENO: $BASH_COMMAND" >&2' ERR
+
+REPRO=rust/target/release/repro
+if [ ! -x "$REPRO" ]; then
+    cargo build --release --manifest-path rust/Cargo.toml
+fi
+
+TMP="${LOAD_SMOKE_DIR:-/tmp/load}"
+mkdir -p "$TMP"
+SRV=""
+trap '{ [ -n "$SRV" ] && kill "$SRV"; } 2>/dev/null || true' EXIT
+
+TASKS="${LOAD_SMOKE_TASKS:-50000}"
+HORIZON=200
+CLIENTS=4
+
+"$REPRO" workload storm --tasks "$TASKS" --seed 11 --horizon "$HORIZON" \
+    --out "$TMP/storm.jsonl" --no-shutdown
+echo "storm: $(wc -l < "$TMP/storm.jsonl") submit lines"
+
+# seed the artifact the `load` sections merge into (the bench-smoke job
+# uploads its own BENCH_service.json; this one carries the load runs)
+printf '{"bench": "bench_service", "mode": "load"}\n' > "$TMP/BENCH_service.json"
+
+wait_port() {
+    for _ in $(seq 100); do
+        if (exec 3<>"/dev/tcp/127.0.0.1/$1") 2>/dev/null; then
+            exec 3>&- 3<&-
+            return 0
+        fi
+        sleep 0.1
+    done
+    echo "server never bound port $1" >&2
+    return 1
+}
+
+run_round() {  # port, hwm, expect, merge_key
+    local port=$1 hwm=$2 expect=$3 key=$4
+    "$REPRO" serve --listen "tcp:127.0.0.1:$port" --clock virtual \
+        --shards 2 --batch-window 1 --no-steal \
+        --max-queue-depth "$hwm" \
+        2> "$TMP/server_$key.err" > /dev/null &
+    SRV=$!
+    wait_port "$port" || { cat "$TMP/server_$key.err"; return 1; }
+    python3 scripts/socket_clients.py \
+        --connect "tcp:127.0.0.1:$port" --clients "$CLIENTS" \
+        --trace "$TMP/storm.jsonl" --expect-sheds "$expect" \
+        --merge-into "$TMP/BENCH_service.json" --merge-key "$key" \
+        > "$TMP/$key.json"
+    wait "$SRV"
+    SRV=""
+    echo "$key: $(cat "$TMP/$key.json")"
+}
+
+run_round 17071 1000000 zero load
+run_round 17072 100 some load_overload
+
+python3 - "$TMP/BENCH_service.json" <<'EOF'
+import json, sys
+b = json.load(open(sys.argv[1]))
+clean, over = b["load"], b["load_overload"]
+assert clean["shed"] == 0, clean
+assert clean["admitted"] + clean["rejected"] == clean["tasks"], clean
+assert clean["submits_per_sec"] > 0 and clean["rtt_p99_ms"] >= 0, clean
+assert over["shed"] > 0 and over["shed_rate"] > 0, over
+# metrics are polled before the shutdown flush, which can add degraded
+# sheds — so the client-side count bounds the server gauges from above
+assert over["shed"] >= over["server_shed"] + over["server_shed_degraded"], over
+assert over["server_shed"] > 0, over
+assert over["peak_queue_depth"] >= 100, over
+print(f"load smoke OK: {clean['submits_per_sec']:.0f} submits/sec sustained, "
+      f"p99 {clean['rtt_p99_ms']:.1f} ms, p999 {clean['rtt_p999_ms']:.1f} ms; "
+      f"overload round shed {over['shed']} ({100*over['shed_rate']:.1f}%), "
+      f"peak depth {over['peak_queue_depth']}")
+EOF

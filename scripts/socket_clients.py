@@ -1,19 +1,42 @@
 #!/usr/bin/env python3
-"""Drive two concurrent JSONL clients plus a controller against a running
-`repro serve --listen unix:<path>` daemon.
+"""Drive concurrent JSONL clients against a running `repro serve` daemon.
 
-Usage: socket_clients.py SOCKET_PATH CLIENT1.jsonl CLIENT2.jsonl EXPECTED_SUBMITS
+Two modes share this file:
 
-The two client threads stream their request files concurrently and then
-drain their response lines until EOF.  The controller polls the
-out-of-band `ping` op until the service has accepted EXPECTED_SUBMITS
-requests (so every submit is inside the coalesced admission batch), then
-sends `shutdown` and prints the final snapshot line to stdout.
+Legacy smoke mode (positional args, used by socket_smoke.sh):
 
-Exit code is non-zero when any client sees a malformed response or a
-missing response line, so the CI job fails loudly.
+    socket_clients.py SOCKET_PATH CLIENT1.jsonl CLIENT2.jsonl EXPECTED_SUBMITS
+
+  The two client threads stream their request files concurrently and then
+  drain their response lines until EOF.  The controller polls the
+  out-of-band `ping` op until the service has accepted EXPECTED_SUBMITS
+  requests (so every submit is inside the coalesced admission batch), then
+  sends `shutdown` and prints the final snapshot line to stdout.
+
+Load-harness mode (flag args, used by the CI load-smoke job):
+
+    socket_clients.py --connect tcp:127.0.0.1:7071 --clients 4 \
+        --trace storm.jsonl [--rate 20000] [--expect-sheds zero|some] \
+        [--load-out load.json] [--merge-into BENCH_service.json]
+
+  The trace (one submit line per task, e.g. from `repro workload storm`)
+  is split round-robin across N concurrent TCP/unix sessions.  Each
+  client tags its submits with a unique `rid`, streams them with
+  open-loop arrival pacing (`--rate` is the TOTAL target submits/sec
+  across clients; 0 = as fast as the sockets take them), and a reader
+  thread matches `rid`-echoed responses to record round-trip latency and
+  typed `overloaded` sheds.  A controller session polls `ping` until the
+  server has received every submit, snapshots `metrics` (peak queue
+  depth, degraded flag, server-side shed counters), then shuts the
+  server down.  The summary — sustained submits/sec, p50/p99/p999
+  round-trip ms, shed rate, peak queue depth — prints to stdout and can
+  be merged into BENCH_service.json as its `load` section.
+
+Exit code is non-zero on malformed/missing responses or a violated
+`--expect-sheds` assertion, so the CI job fails loudly.
 """
 
+import argparse
 import json
 import socket
 import sys
@@ -21,11 +44,30 @@ import threading
 import time
 
 
-def connect(path: str) -> socket.socket:
-    s = socket.socket(socket.AF_UNIX, socket.SOCK_STREAM)
-    s.settimeout(120)
-    s.connect(path)
+def parse_addr(spec: str):
+    """`unix:/path`, `tcp:host:port`, or a bare unix-socket path."""
+    if spec.startswith("tcp:"):
+        host, _, port = spec[4:].rpartition(":")
+        return ("tcp", host or "127.0.0.1", int(port))
+    if spec.startswith("unix:"):
+        return ("unix", spec[5:], None)
+    return ("unix", spec, None)
+
+
+def connect_addr(addr) -> socket.socket:
+    kind, host, port = addr
+    if kind == "tcp":
+        s = socket.create_connection((host, port), timeout=120)
+        s.settimeout(120)
+    else:
+        s = socket.socket(socket.AF_UNIX, socket.SOCK_STREAM)
+        s.settimeout(120)
+        s.connect(host)
     return s
+
+
+def connect(path: str) -> socket.socket:
+    return connect_addr(parse_addr(path))
 
 
 def read_lines(sock: socket.socket):
@@ -42,6 +84,10 @@ def read_lines(sock: socket.socket):
         if not chunk:
             return
         buf += chunk
+
+
+# ---------------------------------------------------------------------------
+# Legacy smoke mode
 
 
 def run_client(path: str, requests_file: str, errors: list):
@@ -109,5 +155,230 @@ def main() -> int:
     return 0
 
 
+# ---------------------------------------------------------------------------
+# Load-harness mode
+
+
+class ClientStats:
+    """Per-client tallies, filled by the sender/reader thread pair."""
+
+    def __init__(self):
+        self.sent = 0
+        self.admitted = 0
+        self.rejected = 0
+        self.shed = 0
+        self.latencies = []  # seconds, submit send → rid-matched response
+        self.first_send = None
+        self.last_recv = None
+
+
+def run_load_client(addr, lines, rate, stats: ClientStats, errors: list, cid: int):
+    """Stream `lines` (submit JSONL) over one session with open-loop pacing
+    at `rate` submits/sec (0 = unpaced), reading responses concurrently so
+    neither direction's socket buffer can fill up and deadlock."""
+    try:
+        sock = connect_addr(addr)
+        resp_lines = read_lines(sock)
+        hello = json.loads(next(resp_lines))
+        assert hello["op"] == "hello", hello
+
+        send_times = {}
+        sender_done = threading.Event()
+
+        def reader():
+            try:
+                n_resp = 0
+                for line in resp_lines:
+                    resp = json.loads(line)
+                    assert resp.get("ok") is True, resp
+                    if resp.get("op") != "submit":
+                        continue
+                    now = time.monotonic()
+                    stats.last_recv = now
+                    rid = resp.get("rid")
+                    t0 = send_times.pop(rid, None)
+                    if t0 is not None:
+                        stats.latencies.append(now - t0)
+                    if resp.get("admitted"):
+                        stats.admitted += 1
+                    elif resp.get("reason") == "overloaded":
+                        stats.shed += 1
+                    else:
+                        stats.rejected += 1
+                    n_resp += 1
+                    if sender_done.is_set() and n_resp >= stats.sent:
+                        return
+                # EOF: fine once every owed response has been matched
+                assert sender_done.is_set() and n_resp >= stats.sent, (
+                    f"client {cid}: EOF after {n_resp}/{stats.sent} responses"
+                )
+            except Exception as e:  # noqa: BLE001
+                errors.append(f"client {cid} reader: {e!r}")
+
+        rt = threading.Thread(target=reader)
+        rt.start()
+
+        start = time.monotonic()
+        stats.first_send = start
+        for i, line in enumerate(lines):
+            if rate > 0:
+                # open loop: send at the scheduled arrival instant, never
+                # slowed by server feedback (that is what exposes overload)
+                due = start + i / rate
+                delay = due - time.monotonic()
+                if delay > 0:
+                    time.sleep(delay)
+            rid = cid * 10_000_000 + i
+            # splice the rid into the compact submit object (cheaper than
+            # re-encoding a million JSON lines)
+            payload = f'{line[:-1]},"rid":{rid}}}\n'.encode()
+            send_times[rid] = time.monotonic()
+            sock.sendall(payload)
+            stats.sent += 1
+        sender_done.set()
+        rt.join(timeout=300)
+        if rt.is_alive():
+            errors.append(f"client {cid}: reader stuck waiting for responses")
+        sock.close()
+    except Exception as e:  # noqa: BLE001
+        errors.append(f"client {cid}: {e!r}")
+
+
+def percentile(sorted_vals, q):
+    if not sorted_vals:
+        return 0.0
+    idx = min(len(sorted_vals) - 1, int(q * len(sorted_vals)))
+    return sorted_vals[idx]
+
+
+def load_main(argv) -> int:
+    ap = argparse.ArgumentParser(description="multi-client load harness")
+    ap.add_argument("--connect", required=True, help="unix:<path> or tcp:<host>:<port>")
+    ap.add_argument("--clients", type=int, default=4)
+    ap.add_argument("--trace", required=True, help="submit JSONL (workload storm)")
+    ap.add_argument("--rate", type=float, default=0.0,
+                    help="total target submits/sec across clients (0 = unpaced)")
+    ap.add_argument("--expect-sheds", choices=["zero", "some", "any"], default="any",
+                    help="assert the run saw no sheds / at least one shed")
+    ap.add_argument("--load-out", help="write the load summary JSON here")
+    ap.add_argument("--merge-into",
+                    help="merge the summary as a section of this JSON file")
+    ap.add_argument("--merge-key", default="load",
+                    help="section name used with --merge-into (default: load)")
+    args = ap.parse_args(argv)
+
+    addr = parse_addr(args.connect)
+    per_client = [[] for _ in range(args.clients)]
+    with open(args.trace, "r", encoding="utf-8") as f:
+        for i, line in enumerate(f):
+            line = line.strip()
+            if not line or '"submit"' not in line:
+                continue  # skip blanks and any trailing shutdown line
+            per_client[i % args.clients].append(line)
+    total = sum(len(c) for c in per_client)
+    if total == 0:
+        print("trace has no submit lines", file=sys.stderr)
+        return 1
+
+    errors: list = []
+    stats = [ClientStats() for _ in range(args.clients)]
+    rate_per_client = args.rate / args.clients if args.rate > 0 else 0.0
+    threads = [
+        threading.Thread(
+            target=run_load_client,
+            args=(addr, per_client[i], rate_per_client, stats[i], errors, i),
+        )
+        for i in range(args.clients)
+    ]
+    t_start = time.monotonic()
+    for t in threads:
+        t.start()
+
+    # controller: wait until the server has RECEIVED every submit (shed or
+    # admitted), grab the metrics gauges, then shut it down
+    ctrl = connect_addr(addr)
+    ctrl_lines = read_lines(ctrl)
+    hello = json.loads(next(ctrl_lines))
+    assert hello["op"] == "hello", hello
+    deadline = time.time() + 600
+    while True:
+        ctrl.sendall(b'{"op":"ping"}\n')
+        pong = json.loads(next(ctrl_lines))
+        assert pong["op"] == "ping", pong
+        if int(pong["received"]) >= total:
+            break
+        if time.time() > deadline:
+            print(f"gave up: received={pong['received']} < {total}", file=sys.stderr)
+            return 1
+        time.sleep(0.05)
+    ctrl.sendall(b'{"op":"metrics"}\n')
+    metrics = json.loads(next(ctrl_lines))
+    assert metrics["op"] == "metrics", metrics
+    # shutdown BEFORE joining the clients: under a batch window the final
+    # slot's responses are deferred until the shutdown flush releases
+    # them, so the readers only unblock (responses, then EOF) after this
+    ctrl.sendall(b'{"op":"shutdown"}\n')
+    final = json.loads(next(ctrl_lines))
+    assert final["op"] == "shutdown", final
+    for t in threads:
+        t.join(timeout=300)
+    duration = time.monotonic() - t_start
+
+    if errors:
+        for e in errors:
+            print(f"load error: {e}", file=sys.stderr)
+        return 1
+
+    lat = sorted(x for s in stats for x in s.latencies)
+    sent = sum(s.sent for s in stats)
+    shed = sum(s.shed for s in stats)
+    admitted = sum(s.admitted for s in stats)
+    rejected = sum(s.rejected for s in stats)
+    # sustained rate over the full window: first send → last response
+    first = min(s.first_send for s in stats if s.first_send is not None)
+    last = max(s.last_recv for s in stats if s.last_recv is not None)
+    window = max(last - first, 1e-9)
+    summary = {
+        "clients": args.clients,
+        "transport": addr[0],
+        "tasks": sent,
+        "duration_s": round(duration, 3),
+        "submits_per_sec": round(sent / window, 1),
+        "target_rate": args.rate,
+        "rtt_p50_ms": round(percentile(lat, 0.50) * 1e3, 3),
+        "rtt_p99_ms": round(percentile(lat, 0.99) * 1e3, 3),
+        "rtt_p999_ms": round(percentile(lat, 0.999) * 1e3, 3),
+        "admitted": admitted,
+        "rejected": rejected,
+        "shed": shed,
+        "shed_rate": round(shed / sent, 6),
+        "peak_queue_depth": int(metrics.get("peak_queue_depth", 0)),
+        "degraded": bool(metrics.get("degraded", False)),
+        "server_shed": int(metrics.get("shed", 0)),
+        "server_shed_degraded": int(metrics.get("shed_degraded", 0)),
+    }
+    print(json.dumps(summary))
+    if args.load_out:
+        with open(args.load_out, "w", encoding="utf-8") as f:
+            json.dump(summary, f, indent=2)
+            f.write("\n")
+    if args.merge_into:
+        with open(args.merge_into, "r", encoding="utf-8") as f:
+            bench = json.load(f)
+        bench[args.merge_key] = summary
+        with open(args.merge_into, "w", encoding="utf-8") as f:
+            json.dump(bench, f, indent=2)
+            f.write("\n")
+    if args.expect_sheds == "zero" and shed > 0:
+        print(f"expected zero sheds, saw {shed}", file=sys.stderr)
+        return 1
+    if args.expect_sheds == "some" and shed == 0:
+        print("expected at least one typed 'overloaded' shed, saw none", file=sys.stderr)
+        return 1
+    return 0
+
+
 if __name__ == "__main__":
+    if len(sys.argv) > 1 and sys.argv[1].startswith("--"):
+        sys.exit(load_main(sys.argv[1:]))
     sys.exit(main())

@@ -13,8 +13,12 @@
 # produced.  The merged replay uses the same window, so the two runs place
 # the identical EDF batch and must close identical energy books.
 
-set -euo pipefail
+set -Eeuo pipefail
 cd "$(dirname "$0")/.."
+
+# name the failing step in the job log: -E propagates the ERR trap into
+# functions and subshells, $BASH_COMMAND/$LINENO say what broke where
+trap 'st=$?; echo "socket_smoke: FAILED (exit $st) at line $LINENO: $BASH_COMMAND" >&2' ERR
 
 # `sockets` = two-client round only, `crash` = crash/fault rounds only,
 # default = everything (local use)
@@ -28,7 +32,8 @@ fi
 TMP=$(mktemp -d)
 SRV=""
 CRASH=""
-trap '[ -n "$SRV" ] && kill "$SRV" 2>/dev/null; [ -n "$CRASH" ] && kill -9 "$CRASH" 2>/dev/null; rm -rf "$TMP"' EXIT
+# cleanup must never mask the script's exit status (kill/rm are best-effort)
+trap '{ [ -n "$SRV" ] && kill "$SRV"; [ -n "$CRASH" ] && kill -9 "$CRASH"; rm -rf "$TMP"; } 2>/dev/null || true' EXIT
 
 # a small deterministic workload, rendered as submit lines in arrival order
 "$REPRO" workload export --out "$TMP/w.json" --seed 7 --horizon 40 --u-off 0.02 --u-on 0.06
