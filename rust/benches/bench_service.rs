@@ -345,6 +345,7 @@ fn typed_flush_rate(n: usize, cache: bool) -> f64 {
                 _ => dvfs_sched::service::TypePref::Any,
             },
             g: 1 + i % 3,
+            deps: None,
         };
         bb(svc.submit_with(task, opts));
     }
@@ -354,9 +355,90 @@ fn typed_flush_rate(n: usize, cache: bool) -> f64 {
     rate
 }
 
+/// Members/sec streaming scatter-gather DAGs (one root, `width` fan-out
+/// members, one fan-in sink) through the sharded dispatcher: each graph
+/// resolves dependencies, distributes end-to-end slack, and dispatches in
+/// release-order waves.  DAGs are paced off the responses' own clock so
+/// every graph admits into a drained cluster — the number measures the
+/// DAG pipeline, not capacity rejects.  Returns `(members/sec, DAGs
+/// admitted, releases)`.
+fn dag_flush_rate(n_dags: usize, width: usize) -> (f64, f64, f64) {
+    let mut cfg = SimConfig::default();
+    cfg.cluster.total_pairs = 256;
+    cfg.cluster.pairs_per_server = 64;
+    cfg.theta = 0.9;
+    let mut svc = ShardedService::new(
+        &cfg,
+        OnlinePolicyKind::Edl,
+        true,
+        2,
+        RoutePolicy::LeastLoaded,
+        0.0,
+        false,
+    )
+    .expect("cluster splits in two");
+    let mut rng = Rng::new(31);
+    let members = width + 2;
+    let mut clock = 0.0_f64;
+    let t0 = Instant::now();
+    for d in 0..n_dags {
+        let base = d * members;
+        let arrival = clock + 1.0;
+        let models: Vec<(usize, dvfs_sched::TaskModel)> = (0..members)
+            .map(|_| {
+                let app = rng.index(LIBRARY.len());
+                (app, LIBRARY[app].model.scaled(rng.int_range(10, 50) as f64))
+            })
+            .collect();
+        // one shared end-to-end window with room for the 3-level critical
+        // path (t* >= t_min, so 4x the widest t* always fits)
+        let t_star_max = models.iter().map(|&(_, m)| m.t_star()).fold(0.0, f64::max);
+        let deadline = arrival + 4.0 * t_star_max;
+        for (k, &(app, model)) in models.iter().enumerate() {
+            let deps = if k == 0 {
+                Vec::new()
+            } else if k <= width {
+                vec![base]
+            } else {
+                (base + 1..base + 1 + width).collect()
+            };
+            let task = Task {
+                id: base + k,
+                app,
+                model,
+                arrival,
+                deadline,
+                u: (model.t_star() / (deadline - arrival)).min(1.0),
+            };
+            let opts = dvfs_sched::service::SubmitOpts {
+                gpu_type: dvfs_sched::service::TypePref::Any,
+                g: 1,
+                deps: Some(deps),
+            };
+            bb(svc.submit_with(task, opts));
+        }
+        let out = svc.flush_dag();
+        for r in &out {
+            for key in ["now", "finish"] {
+                if let Some(v) = r.get(key).and_then(Json::as_f64) {
+                    clock = clock.max(v);
+                }
+            }
+        }
+        bb(out);
+    }
+    let dt = t0.elapsed();
+    let m = svc.metrics_json();
+    let dags_admitted = m.get("dags_admitted").and_then(Json::as_f64).unwrap_or(0.0);
+    let released = m.get("released").and_then(Json::as_f64).unwrap_or(0.0);
+    bb(svc.shutdown());
+    ((n_dags * members) as f64 / dt.as_secs_f64(), dags_admitted, released)
+}
+
 /// CI smoke: a reduced shard-scaling run (best of 3 rounds) + submit
 /// latency percentiles + cached-vs-fresh solve throughput (gated) +
-/// typed-cluster flush comparison, with an optional JSON artifact.
+/// typed-cluster flush comparison + DAG pipeline throughput, with an
+/// optional JSON artifact.
 fn run_smoke(opts: &SmokeOpts) {
     section("bench-smoke: sharded service scaling (reduced config)");
     let mut cfg = SimConfig::default();
@@ -489,6 +571,15 @@ fn run_smoke(opts: &SmokeOpts) {
          = {typed_speedup:.2}x (target >= 2x)"
     );
 
+    section("bench-smoke: DAG admission + release throughput");
+    // scatter-gather graphs through the full dispatcher DAG pipeline:
+    // buffer -> resolve -> feasibility -> slack distribution -> waves
+    let (dag_rate, dag_admitted, dag_releases) = dag_flush_rate(64, 6);
+    println!(
+        "scatter-gather x 64 (width 6): {dag_rate:>8.0} members/sec  \
+         ({dag_admitted:.0} DAGs admitted, {dag_releases:.0} releases)"
+    );
+
     if let Some(path) = &opts.json {
         let scaling: Vec<Json> = best
             .iter()
@@ -518,6 +609,9 @@ fn run_smoke(opts: &SmokeOpts) {
             ("typed_flush_tasks_per_sec_uncached", num(typed_uncached)),
             ("typed_flush_tasks_per_sec_cached", num(typed_cached)),
             ("typed_flush_speedup", num(typed_speedup)),
+            ("dag_members_per_sec", num(dag_rate)),
+            ("dag_dags_admitted", num(dag_admitted)),
+            ("dag_releases", num(dag_releases)),
         ]);
         std::fs::write(path, doc.render_compact()).expect("writing bench JSON artifact");
         println!("wrote {path}");

@@ -229,6 +229,67 @@ pub fn write_storm_session<W: std::io::Write>(
     Ok(lines)
 }
 
+/// Stream a scatter-gather DAG session (`repro workload scatter-gather`)
+/// to a writer: one root, `width` fan-out members depending on the root,
+/// and one fan-in sink depending on every fan-out member, all submitted
+/// at `arrival` and optionally ending in a `shutdown`.  Every member
+/// shares one end-to-end deadline — `arrival` plus four times the widest
+/// member's nominal `t*` — so the three-level critical path is feasible
+/// whatever models the generator drew, and the slack distributor has
+/// real slack to split.  Returns the number of request lines written.
+pub fn write_scatter_gather_session<W: std::io::Write>(
+    width: usize,
+    arrival: f64,
+    cfg: &crate::config::GenConfig,
+    rng: &mut crate::util::Rng,
+    shutdown: bool,
+    out: &mut W,
+) -> Result<usize, String> {
+    if width == 0 {
+        return Err("scatter-gather needs at least one fan-out task".into());
+    }
+    let n = width + 2;
+    let mut tasks: Vec<Task> = (0..n)
+        .map(|i| crate::tasks::storm_task(i, arrival, cfg, rng))
+        .collect();
+    // t* ≥ t_min, so 4× the widest t* always covers root → fan → sink
+    // with slack left over for the distributor
+    let t_star_max = tasks
+        .iter()
+        .map(|t| t.model.t_star())
+        .fold(0.0f64, f64::max);
+    let deadline = arrival + 4.0 * t_star_max;
+    for t in &mut tasks {
+        t.deadline = deadline;
+        t.u = (t.model.t_star() / (deadline - arrival)).min(1.0);
+    }
+    let sink = n - 1;
+    let mut lines = 0usize;
+    for (i, t) in tasks.iter().enumerate() {
+        let deps: Vec<Json> = if i == 0 {
+            Vec::new() // the root holds on nothing (`deps: []`)
+        } else if i < sink {
+            vec![num(0.0)]
+        } else {
+            (1..sink).map(|d| num(d as f64)).collect()
+        };
+        let line = obj(vec![
+            ("op", Json::Str("submit".into())),
+            ("task", task_to_json(t)),
+            ("deps", Json::Arr(deps)),
+        ])
+        .render_compact();
+        writeln!(out, "{line}").map_err(|e| format!("writing scatter-gather trace: {e}"))?;
+        lines += 1;
+    }
+    if shutdown {
+        writeln!(out, "{{\"op\":\"shutdown\"}}")
+            .map_err(|e| format!("writing scatter-gather trace: {e}"))?;
+        lines += 1;
+    }
+    Ok(lines)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -331,6 +392,63 @@ mod tests {
         write_storm_session(50, 5, &cfg, &mut Rng::new(9), false, &mut a).unwrap();
         write_storm_session(50, 5, &cfg, &mut Rng::new(9), false, &mut b).unwrap();
         assert_eq!(a, b);
+    }
+
+    #[test]
+    fn scatter_gather_session_admits_as_one_dag() {
+        use crate::service::{RoutePolicy, ShardedService};
+        let cfg = GenConfig::default();
+        let mut rng = Rng::new(11);
+        let mut buf = Vec::new();
+        let n = write_scatter_gather_session(4, 1.0, &cfg, &mut rng, true, &mut buf).unwrap();
+        assert_eq!(n, 7, "root + 4 fan-out + sink + shutdown");
+        let text = String::from_utf8(buf).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(*lines.last().unwrap(), "{\"op\":\"shutdown\"}");
+        for (i, line) in lines[..6].iter().enumerate() {
+            let j = Json::parse(line).unwrap();
+            assert_eq!(j.get("op").unwrap().as_str(), Some("submit"));
+            let deps = j.get("deps").unwrap().as_arr().unwrap();
+            let t = task_from_json(j.get("task").unwrap()).unwrap();
+            t.validate().unwrap();
+            assert_eq!(t.id, i);
+            match i {
+                0 => assert!(deps.is_empty(), "the root holds on nothing"),
+                5 => assert_eq!(deps.len(), 4, "the sink gathers every fan-out member"),
+                _ => assert_eq!(deps[0].as_f64(), Some(0.0), "fan-out hangs off the root"),
+            }
+        }
+        assert!(
+            write_scatter_gather_session(0, 1.0, &cfg, &mut Rng::new(1), false, &mut Vec::new())
+                .is_err()
+        );
+        // deterministic given the seed
+        let (mut a, mut b) = (Vec::new(), Vec::new());
+        write_scatter_gather_session(3, 2.0, &cfg, &mut Rng::new(9), false, &mut a).unwrap();
+        write_scatter_gather_session(3, 2.0, &cfg, &mut Rng::new(9), false, &mut b).unwrap();
+        assert_eq!(a, b);
+        // the shared window is wide enough that the whole graph admits
+        let mut scfg = SimConfig::default();
+        scfg.cluster.total_pairs = 16;
+        let mut svc = ShardedService::new(
+            &scfg,
+            OnlinePolicyKind::Edl,
+            true,
+            2,
+            RoutePolicy::LeastLoaded,
+            0.0,
+            true,
+        )
+        .unwrap();
+        let mut out = Vec::new();
+        assert!(svc.serve(text.as_bytes(), &mut out).unwrap());
+        let admitted = String::from_utf8(out)
+            .unwrap()
+            .lines()
+            .map(|l| Json::parse(l).unwrap())
+            .filter(|r| matches!(r.get("admitted"), Some(Json::Bool(true))))
+            .count();
+        assert_eq!(admitted, 6, "every member of the scatter-gather DAG admits");
     }
 
     #[test]

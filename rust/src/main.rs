@@ -82,7 +82,8 @@ fn print_help() {
          replay FILE [--policy ...]  stream a JSONL session from a file\n  \
          recover JOURNAL [...]       replay a journal's request trace, then resume\n  \
          workload export|replay|session  save / replay / sessionize a workload\n  \
-         workload storm --tasks N    stream a load-harness session trace to disk\n\n\
+         workload storm --tasks N    stream a load-harness session trace to disk\n  \
+         workload scatter-gather --width N   emit a fan-out/fan-in DAG session\n\n\
          front-end flags (serve): --listen stdio|unix:<path>|tcp:<addr>\n               \
          --clock virtual|wall --time-scale SECS   (socket listeners serve\n               \
          multiple concurrent sessions; the wall clock stamps arrival =\n               \
@@ -277,13 +278,14 @@ fn cmd_offline(args: &Args) -> Result<(), String> {
 /// `workload export --out FILE` / `workload replay --in FILE [--policy ..]`
 /// / `workload session --in FILE --out FILE [--no-shutdown]`
 /// / `workload storm --tasks N --out FILE [--seed S --horizon H]`
+/// / `workload scatter-gather --width N --out FILE [--arrival T --seed S]`
 fn cmd_workload(args: &Args) -> Result<(), String> {
     let mut cfg = SimConfig::default();
     apply_overrides(args, &mut cfg)?;
     let sub = args
         .positional
         .first()
-        .ok_or("usage: repro workload <export|replay|session|storm> ...")?
+        .ok_or("usage: repro workload <export|replay|session|storm|scatter-gather> ...")?
         .clone();
     match sub.as_str() {
         "export" => {
@@ -369,6 +371,35 @@ fn cmd_workload(args: &Args) -> Result<(), String> {
             println!(
                 "wrote {n} request line(s) ({tasks} storm task(s) over {} slot(s){}) to {out}",
                 cfg.gen.horizon,
+                if shutdown { " + shutdown" } else { "" }
+            );
+            Ok(())
+        }
+        "scatter-gather" => {
+            // fan-out/fan-in DAG trace: one root, `--width` members
+            // depending on it, one sink gathering them all — the smallest
+            // session that exercises dependency holds in both directions
+            let width = args.opt_usize("width")?.unwrap_or(8);
+            let arrival = args.opt_f64("arrival")?.unwrap_or(1.0);
+            let out = args.opt_str("out").unwrap_or("scatter_gather.jsonl".into());
+            let shutdown = !args.flag("no-shutdown");
+            args.finish()?;
+            let file =
+                std::fs::File::create(&out).map_err(|e| format!("creating {out}: {e}"))?;
+            let mut w = std::io::BufWriter::new(file);
+            let mut rng = dvfs_sched::util::Rng::new(cfg.seed);
+            let n = dvfs_sched::ext::trace::write_scatter_gather_session(
+                width,
+                arrival,
+                &cfg.gen,
+                &mut rng,
+                shutdown,
+                &mut w,
+            )?;
+            use std::io::Write;
+            w.flush().map_err(|e| format!("flushing {out}: {e}"))?;
+            println!(
+                "wrote {n} request line(s) (1 root + {width} fan-out + 1 sink{}) to {out}",
                 if shutdown { " + shutdown" } else { "" }
             );
             Ok(())

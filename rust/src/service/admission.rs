@@ -138,6 +138,22 @@ pub struct AdmissionController {
     /// cheapest-feasible execution time, so work that would need the
     /// expensive high-frequency settings sheds before cheap work.
     pub shed_degraded: u64,
+    /// DAG members rejected atomically with their graph (wire reasons
+    /// `unknown-dep` / `cyclic-deps` / `dag-infeasible`, see
+    /// [`crate::service::dag::DagError`]).  One count per member, so
+    /// `submitted = admitted + rejected + shed` keeps holding.
+    pub rejected_dag: u64,
+    /// Whole DAGs admitted (one count per graph; the members book into
+    /// [`Self::admitted`] individually).  Metrics-only: the frozen
+    /// `snapshot` schema never renders it.
+    pub dags_admitted: u64,
+    /// Whole DAGs rejected (one count per graph, whatever the reason —
+    /// stage-one member gates or a graph-level [`Self::rejected_dag`]
+    /// reject).  Metrics-only.
+    pub dags_rejected: u64,
+    /// DAG members released after a dependency hold (journal `release`
+    /// lines).  Metrics-only.
+    pub released: u64,
 }
 
 impl AdmissionController {
@@ -146,9 +162,13 @@ impl AdmissionController {
         AdmissionController::default()
     }
 
-    /// Total rejections (infeasible + invalid + type + gang).
+    /// Total rejections (infeasible + invalid + type + gang + dag).
     pub fn rejected(&self) -> u64 {
-        self.rejected_infeasible + self.rejected_invalid + self.rejected_type + self.rejected_gang
+        self.rejected_infeasible
+            + self.rejected_invalid
+            + self.rejected_type
+            + self.rejected_gang
+            + self.rejected_dag
     }
 
     /// Total backpressure sheds (queue-depth plus degraded-mode).
@@ -430,6 +450,24 @@ mod tests {
         t.deadline = 2.0 * t_cheap;
         assert!(a.check_degraded(&t, 0.0, t_cheap, 2.0).is_none());
         assert_eq!(a.shed_degraded, 1);
+    }
+
+    #[test]
+    fn dag_rejections_land_in_the_rejected_sum() {
+        // graph-level rejects book one count per member under
+        // rejected_dag, which must feed rejected() so the snapshot's
+        // submitted = admitted + rejected + shed invariant holds for
+        // DAG traffic too; the per-graph and release counters stay
+        // metrics-only bookkeeping
+        let mut a = AdmissionController::new();
+        a.rejected_dag += 3;
+        a.dags_rejected += 1;
+        assert_eq!(a.rejected(), 3);
+        a.admitted += 2;
+        a.dags_admitted += 1;
+        a.released += 1;
+        assert_eq!(a.rejected(), 3);
+        assert_eq!(a.shed(), 0);
     }
 
     #[test]

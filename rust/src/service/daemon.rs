@@ -13,6 +13,12 @@
 //! late submission means).  `shutdown` drains gracefully: all queued work
 //! completes, DRS powers every server down, and the final snapshot
 //! reports the closed-books E_run / E_idle / E_overhead decomposition.
+//!
+//! Submits carrying a `deps` field buffer into a pending DAG and admit
+//! atomically at the next flush point (any deps-free submit, `query`,
+//! `snapshot`, failure injection, `shutdown`, or EOF) — see
+//! [`crate::service::dag`] for the planning math and [`Service::handle`]
+//! for the buffering contract.
 
 use crate::cluster::Cluster;
 use crate::config::SimConfig;
@@ -21,6 +27,7 @@ use crate::runtime::Solver;
 use crate::sched::online::{OnlinePolicy, SchedCtx};
 use std::cell::RefCell;
 use crate::service::admission::{AdmissionController, Verdict};
+use crate::service::dag::{self, DagError, DagNode};
 use crate::service::events::EventEngine;
 use crate::service::journal::Journal;
 use crate::service::metrics::Snapshot;
@@ -203,6 +210,10 @@ pub struct Service<'a> {
     /// Placed-but-unfinished tasks by id — the eviction set a
     /// `fail_server` / `fail_pair` request consults.
     inflight: BTreeMap<usize, Inflight>,
+    /// Pending DAG members (submits carrying `deps`), buffered in
+    /// submission order until the next flush point and admitted
+    /// atomically — see [`Self::flush_dag`].
+    dag: Vec<(Task, SubmitOpts)>,
     /// The names a `gpu_type` request field may match (the daemon's
     /// homogeneous pool answers to its configured or implicit type name).
     type_names: Vec<String>,
@@ -243,6 +254,7 @@ impl<'a> Service<'a> {
             dvfs,
             records: RecordStore::new(),
             inflight: BTreeMap::new(),
+            dag: Vec::new(),
             type_names: cfg
                 .cluster
                 .effective_types()
@@ -825,17 +837,395 @@ impl<'a> Service<'a> {
         obj(fields)
     }
 
-    /// Dispatch one decoded request.  Returns (response, stop-serving).
-    pub fn handle(&mut self, req: Request) -> (Json, bool) {
+    /// Render one DAG member's individual (per-member gate) rejection —
+    /// journaled, counted, and recorded exactly like a rejected
+    /// independent submission, so a later `query` answers `rejected`.
+    fn reject_member(&mut self, task: &Task, verdict: &Verdict, t0: f64) -> Json {
+        if let Some(j) = self.journal.as_mut() {
+            j.record(
+                "admit",
+                t0,
+                vec![
+                    ("id", num(task.id as f64)),
+                    ("ok", Json::Bool(false)),
+                    ("reason", s(verdict.reason())),
+                ],
+            );
+        }
+        let mut fields = vec![
+            ("ok", Json::Bool(true)),
+            ("op", s("submit")),
+            ("id", num(task.id as f64)),
+            ("now", num(t0)),
+            ("admitted", Json::Bool(false)),
+            ("reason", s(verdict.reason())),
+        ];
+        match verdict {
+            Verdict::RejectInfeasible { t_min, available } => {
+                fields.push(("t_min", num(*t_min)));
+                fields.push(("available", num(*available)));
+            }
+            Verdict::RejectInvalid(why) => fields.push(("detail", s(why))),
+            Verdict::RejectUnknownType(name) => fields.push(("gpu_type", s(name))),
+            Verdict::RejectGangWidth { g, l } => {
+                fields.push(("g", num(*g as f64)));
+                fields.push(("l", num(*l as f64)));
+            }
+            _ => {}
+        }
+        self.records
+            .remember(task.id, TaskRecord::rejected(t0, task.deadline));
+        obj(fields)
+    }
+
+    /// Admit the pending DAG atomically.  Stage 1 runs the per-member
+    /// gates every submission passes (validity, named type, capacity,
+    /// gang width) — a failing member rejects individually, with the
+    /// usual counters.  Stage 2 resolves dependencies over the
+    /// survivors (ids may name pending members — forward references
+    /// allowed — or admitted placed records, whose finish becomes the
+    /// member's ready floor) and runs the critical-path planner
+    /// ([`dag::plan`]); any graph-level error rejects ALL survivors
+    /// with one typed reason under the `rejected_dag` counter.  On
+    /// success the members are placed through the normal event core in
+    /// release order, each against its slack-distributed effective
+    /// deadline (the record keeps the client's own deadline).  Returns
+    /// one response per buffered member, in submission order.
+    fn flush_dag(&mut self) -> Vec<Json> {
+        if self.dag.is_empty() {
+            return Vec::new();
+        }
+        let members = std::mem::take(&mut self.dag);
+        let n = members.len();
+        let t0 = self.now();
+        let mut out: Vec<Option<Json>> = vec![None; n];
+        let mut survivors: Vec<usize> = Vec::with_capacity(n);
+        for (i, (task, opts)) in members.iter().enumerate() {
+            let verdict = 'gate: {
+                if let Err(why) = self.admission.check_validity(task) {
+                    break 'gate Some(Verdict::RejectInvalid(why));
+                }
+                if let TypePref::Named(ref name) = opts.gpu_type {
+                    if !self.type_names.iter().any(|t| t == name) {
+                        break 'gate Some(self.admission.reject_unknown_type(name));
+                    }
+                }
+                if self.cluster.live_pairs() == 0 {
+                    self.admission.rejected_infeasible += 1;
+                    break 'gate Some(Verdict::RejectInfeasible {
+                        t_min: task.model.t_min(&self.cfg.interval),
+                        available: 0.0,
+                    });
+                }
+                if let Err(v) = self
+                    .admission
+                    .check_gang_width(opts.g, self.cluster.widest_live_server())
+                {
+                    break 'gate Some(v);
+                }
+                None
+            };
+            match verdict {
+                None => survivors.push(i),
+                Some(v) => out[i] = Some(self.reject_member(task, &v, t0)),
+            }
+        }
+
+        let iv = self.cfg.interval;
+        let ids: Vec<usize> = survivors.iter().map(|&i| members[i].0.id).collect();
+        let raw_deps: Vec<Vec<usize>> = survivors
+            .iter()
+            .map(|&i| members[i].1.deps.clone().unwrap_or_default())
+            .collect();
+        let gate_t0 = Instant::now();
+        let planned = match dag::resolve_deps(&ids, &raw_deps, |d| {
+            self.records.get(d).filter(|r| r.admitted).map(|r| r.finish)
+        }) {
+            Ok((internal, ext)) => {
+                let nodes: Vec<DagNode> = survivors
+                    .iter()
+                    .enumerate()
+                    .map(|(k, &i)| {
+                        let task = &members[i].0;
+                        let t_min = task.model.t_min(&iv);
+                        DagNode {
+                            t_min,
+                            t_star: task.model.t_star().max(t_min),
+                            deadline: task.deadline,
+                            ext_ready: ext[k].max(task.arrival),
+                            deps: internal[k].clone(),
+                        }
+                    })
+                    .collect();
+                let cache_enabled = self.cache.borrow().enabled();
+                let energy = |k: usize, tlim: f64| -> f64 {
+                    let (task, opts) = &members[survivors[k]];
+                    let e = if cache_enabled {
+                        self.cache.borrow_mut().solve_opt(&task.model, tlim).e
+                    } else {
+                        self.solver.solve_opt(&task.model, tlim, &iv).e
+                    };
+                    e * opts.g as f64
+                };
+                dag::plan(t0, &nodes, energy)
+            }
+            Err(e) => Err(e),
+        };
+        self.hist_solve.record(gate_t0.elapsed().as_secs_f64() * 1e6);
+
+        match planned {
+            Err(e) => {
+                self.admission.rejected_dag += survivors.len() as u64;
+                self.admission.dags_rejected += 1;
+                if let Some(j) = self.journal.as_mut() {
+                    j.record(
+                        "dag_admit",
+                        t0,
+                        vec![
+                            ("n", num(survivors.len() as f64)),
+                            ("ok", Json::Bool(false)),
+                            ("reason", s(e.reason())),
+                        ],
+                    );
+                }
+                for &i in &survivors {
+                    let task = &members[i].0;
+                    if let Some(j) = self.journal.as_mut() {
+                        j.record(
+                            "admit",
+                            t0,
+                            vec![
+                                ("id", num(task.id as f64)),
+                                ("ok", Json::Bool(false)),
+                                ("reason", s(e.reason())),
+                            ],
+                        );
+                    }
+                    let mut fields = vec![
+                        ("ok", Json::Bool(true)),
+                        ("op", s("submit")),
+                        ("id", num(task.id as f64)),
+                        ("now", num(t0)),
+                        ("admitted", Json::Bool(false)),
+                        ("reason", s(e.reason())),
+                    ];
+                    match &e {
+                        DagError::UnknownDep { member, dep } => {
+                            fields.push(("member", num(*member as f64)));
+                            fields.push(("dep", num(*dep as f64)));
+                        }
+                        DagError::Infeasible { t_min, available } => {
+                            fields.push(("t_min", num(*t_min)));
+                            fields.push(("available", num(*available)));
+                        }
+                        DagError::Cyclic => {}
+                    }
+                    self.records
+                        .remember(task.id, TaskRecord::rejected(t0, task.deadline));
+                    out[i] = Some(obj(fields));
+                }
+            }
+            Ok(plan) => {
+                self.admission.dags_admitted += 1;
+                if let Some(j) = self.journal.as_mut() {
+                    j.record(
+                        "dag_admit",
+                        t0,
+                        vec![
+                            ("n", num(survivors.len() as f64)),
+                            ("ok", Json::Bool(true)),
+                            ("reason", s("admitted")),
+                        ],
+                    );
+                }
+                // place in release order (submission order on ties), so
+                // the engine clock never runs backwards
+                let mut by_release: Vec<usize> = (0..survivors.len()).collect();
+                by_release.sort_by(|&a, &b| {
+                    plan.release[a]
+                        .partial_cmp(&plan.release[b])
+                        .unwrap()
+                        .then(a.cmp(&b))
+                });
+                let ctx = SchedCtx {
+                    solver: self.solver,
+                    iv: self.cfg.interval,
+                    dvfs: self.dvfs,
+                    theta: self.cfg.theta,
+                    cache: &self.cache,
+                };
+                for &k in &by_release {
+                    let i = survivors[k];
+                    let (task, opts) = &members[i];
+                    let id = task.id;
+                    let g = opts.g;
+                    let r = plan.release[k].max(t0);
+                    let n_deps = opts.deps.as_ref().map_or(0, |d| d.len());
+                    self.drained = false;
+                    self.now = self.now.max(r);
+                    self.admission.admitted += 1;
+                    if n_deps > 0 {
+                        self.admission.released += 1;
+                    }
+                    let mut engine_task = task.clone();
+                    engine_task.arrival = r;
+                    engine_task.deadline = plan.deadline[k];
+                    if let Some(j) = self.journal.as_mut() {
+                        j.record(
+                            "admit",
+                            r,
+                            vec![
+                                ("id", num(id as f64)),
+                                ("ok", Json::Bool(true)),
+                                ("reason", s("admitted")),
+                            ],
+                        );
+                        if n_deps > 0 {
+                            j.record(
+                                "release",
+                                r,
+                                vec![("id", num(id as f64)), ("deps", num(n_deps as f64))],
+                            );
+                        }
+                    }
+                    self.cluster.last_assign = None;
+                    self.cluster.clear_assign_log();
+                    if g == 1 {
+                        self.engine.push_arrivals(r, vec![engine_task.clone()]);
+                    } else {
+                        self.engine.push_gang_arrivals(r, vec![(engine_task.clone(), g)]);
+                    }
+                    let flush_t0 = Instant::now();
+                    self.engine
+                        .run_until(r, &mut self.cluster, self.policy.as_mut(), &ctx);
+                    self.hist_flush
+                        .record(flush_t0.elapsed().as_secs_f64() * 1e6);
+                    let (pair, start, finish) = self
+                        .cluster
+                        .last_assign
+                        .expect("policy placed an admitted DAG member");
+                    let pairs = self.cluster.pairs_of_log_entry(0);
+                    let rec = TaskRecord {
+                        admitted: true,
+                        pair: Some(pair),
+                        g,
+                        pairs: pairs.clone(),
+                        start,
+                        finish,
+                        // the client's own deadline, not the planner's
+                        // effective one
+                        deadline: task.deadline,
+                    };
+                    let mut fields = vec![
+                        ("ok", Json::Bool(true)),
+                        ("op", s("submit")),
+                        ("id", num(id as f64)),
+                        ("now", num(r)),
+                        ("admitted", Json::Bool(true)),
+                        ("reason", s("admitted")),
+                        ("pair", num(pair as f64)),
+                        ("start", num(start)),
+                        ("finish", num(finish)),
+                        ("deadline_met", Json::Bool(rec.deadline_met())),
+                    ];
+                    if g > 1 {
+                        fields.push(("g", num(g as f64)));
+                        fields.push((
+                            "pairs",
+                            Json::Arr(pairs.iter().map(|&p| num(p as f64)).collect()),
+                        ));
+                    }
+                    if n_deps > 0 {
+                        fields.push(("released", num(r)));
+                    }
+                    self.records.remember(id, rec);
+                    self.inflight.retain(|_, f| f.finish > r + 1e-9);
+                    self.inflight.insert(
+                        id,
+                        Inflight {
+                            task: engine_task,
+                            g,
+                            pairs: pairs.clone(),
+                            finish,
+                        },
+                    );
+                    if self.journal.is_some() {
+                        let events = self.cluster.drain_obs();
+                        if let Some(j) = self.journal.as_mut() {
+                            let mut jf = vec![
+                                ("id", num(id as f64)),
+                                ("pair", num(pair as f64)),
+                                ("start", num(start)),
+                                ("mu", num(finish)),
+                            ];
+                            if g > 1 {
+                                jf.push(("g", num(g as f64)));
+                                jf.push((
+                                    "pairs",
+                                    Json::Arr(pairs.iter().map(|&p| num(p as f64)).collect()),
+                                ));
+                            }
+                            j.record("place", r, jf);
+                            j.record_cluster_events(None, &events);
+                        }
+                    }
+                    out[i] = Some(obj(fields));
+                }
+            }
+        }
+        self.maybe_emit_metrics();
+        out.into_iter()
+            .map(|o| o.expect("every buffered member answered"))
+            .collect()
+    }
+
+    /// Dispatch one decoded request.  Returns the response lines it
+    /// releases and whether serving should stop.  A submit carrying
+    /// `deps` buffers into the pending DAG and releases nothing; every
+    /// other state-touching request (deps-free submit, `query`,
+    /// `snapshot`, failure injection, `shutdown`) flushes the pending
+    /// DAG first, so the buffered member responses precede its own.
+    /// `ping` and `metrics` never flush (reads must stay side-effect
+    /// free), so their responses may overtake held DAG responses.
+    pub fn handle(&mut self, req: Request) -> (Vec<Json>, bool) {
         match req {
-            Request::Submit(task, opts) => (self.submit_with(task, opts), false),
-            Request::Query { id } => (self.query(id), false),
-            Request::Snapshot => (self.snapshot_json("snapshot"), false),
-            Request::Metrics => (self.metrics_json(), false),
-            Request::Ping => (pong(), false),
-            Request::FailServer { server, t } => (self.fail(Some(server), None, t), false),
-            Request::FailPair { pair, t } => (self.fail(None, Some(pair), t), false),
-            Request::Shutdown => (self.shutdown(), true),
+            Request::Submit(task, opts) => {
+                if opts.deps.is_some() {
+                    self.dag.push((task, opts));
+                    (Vec::new(), false)
+                } else {
+                    let mut out = self.flush_dag();
+                    out.push(self.submit_with(task, opts));
+                    (out, false)
+                }
+            }
+            Request::Query { id } => {
+                let mut out = self.flush_dag();
+                out.push(self.query(id));
+                (out, false)
+            }
+            Request::Snapshot => {
+                let mut out = self.flush_dag();
+                out.push(self.snapshot_json("snapshot"));
+                (out, false)
+            }
+            Request::Metrics => (vec![self.metrics_json()], false),
+            Request::Ping => (vec![pong()], false),
+            Request::FailServer { server, t } => {
+                let mut out = self.flush_dag();
+                out.push(self.fail(Some(server), None, t));
+                (out, false)
+            }
+            Request::FailPair { pair, t } => {
+                let mut out = self.flush_dag();
+                out.push(self.fail(None, Some(pair), t));
+                (out, false)
+            }
+            Request::Shutdown => {
+                let mut out = self.flush_dag();
+                out.push(self.shutdown());
+                (out, true)
+            }
         }
     }
 
@@ -849,16 +1239,17 @@ impl<'a> Service<'a> {
     }
 }
 
-/// The unsharded daemon answers every request immediately, so the front
-/// end's pending queue never holds more than the request in flight.
+/// The unsharded daemon answers every request immediately except DAG
+/// members, which it defers until the graph's flush point — the front
+/// end's pending queue holds exactly the buffered members plus the
+/// request in flight.
 impl ServiceCore for Service<'_> {
     fn serve_request(&mut self, req: Request) -> (Vec<Json>, bool) {
-        let (resp, stop) = self.handle(req);
-        (vec![resp], stop)
+        self.handle(req)
     }
 
     fn flush_pending(&mut self) -> Vec<Json> {
-        Vec::new() // nothing is ever deferred
+        self.flush_dag() // the EOF path still answers buffered members
     }
 
     fn tick(&mut self, _now: f64) -> Vec<Json> {
@@ -1035,6 +1426,7 @@ mod tests {
         let opts = SubmitOpts {
             gpu_type: TypePref::Any,
             g: 3,
+            deps: None,
         };
         let r = svc.submit_with(mk_task(0, 0.0, 0.5, 10.0), opts);
         assert_eq!(r.get("admitted"), Some(&Json::Bool(true)));
@@ -1071,6 +1463,7 @@ mod tests {
         let opts = SubmitOpts {
             gpu_type: TypePref::Any,
             g: 3,
+            deps: None,
         };
         let r = svc.submit_with(mk_task(0, 0.0, 0.5, 10.0), opts);
         assert_eq!(r.get("admitted"), Some(&Json::Bool(false)));
@@ -1079,6 +1472,7 @@ mod tests {
         let named = |name: &str| SubmitOpts {
             gpu_type: TypePref::Named(name.into()),
             g: 1,
+            deps: None,
         };
         let r = svc.submit_with(mk_task(1, 0.0, 0.5, 10.0), named("H100"));
         assert_eq!(r.get("reason").unwrap().as_str(), Some("unknown-gpu-type"));
@@ -1196,6 +1590,130 @@ mod tests {
         let fj = Json::parse(fail_line).unwrap();
         assert_eq!(fj.get("pair").unwrap().as_f64(), Some(pair0 as f64));
         assert_eq!(fj.get("pairs").unwrap().as_arr().unwrap().len(), 1);
+    }
+
+    fn submit_line_deps(t: &Task, deps: &[usize]) -> String {
+        obj(vec![
+            ("op", s("submit")),
+            ("task", task_to_json(t)),
+            ("deps", Json::Arr(deps.iter().map(|&d| num(d as f64)).collect())),
+        ])
+        .render_compact()
+    }
+
+    #[test]
+    fn dag_chain_buffers_then_admits_atomically() {
+        let cfg = small_cfg();
+        let solver = Solver::native();
+        let mut svc = Service::new(&cfg, OnlinePolicyKind::Edl, true, &solver);
+        let mut session = String::new();
+        session.push_str(&submit_line_deps(&mk_task(0, 0.0, 0.2, 10.0), &[]));
+        session.push('\n');
+        session.push_str(&submit_line_deps(&mk_task(1, 0.0, 0.2, 10.0), &[0]));
+        session.push('\n');
+        session.push_str("{\"op\":\"snapshot\"}\n");
+        session.push_str("{\"op\":\"shutdown\"}\n");
+        let mut out = Vec::new();
+        let stopped = svc.serve(session.as_bytes(), &mut out).unwrap();
+        assert!(stopped);
+        let lines: Vec<Json> = String::from_utf8(out)
+            .unwrap()
+            .lines()
+            .map(|l| Json::parse(l).unwrap())
+            .collect();
+        // both member responses are held until the snapshot flushes them
+        assert_eq!(lines.len(), 4);
+        assert_eq!(lines[0].get("admitted"), Some(&Json::Bool(true)));
+        assert!(lines[0].get("released").is_none(), "roots carry no released field");
+        assert_eq!(lines[1].get("admitted"), Some(&Json::Bool(true)));
+        let rel = lines[1].get("released").unwrap().as_f64().unwrap();
+        let root_fin = lines[0].get("finish").unwrap().as_f64().unwrap();
+        let child_start = lines[1].get("start").unwrap().as_f64().unwrap();
+        assert!(rel >= root_fin - 1e-6, "child released before the root finished");
+        assert!(child_start >= root_fin - 1e-6);
+        assert_eq!(lines[1].get("deadline_met"), Some(&Json::Bool(true)));
+        assert_eq!(lines[2].get("admitted").unwrap().as_f64(), Some(2.0));
+        assert_eq!(lines[3].get("violations").unwrap().as_f64(), Some(0.0));
+        let m = svc.metrics_json();
+        assert_eq!(m.get("dags_admitted").unwrap().as_f64(), Some(1.0));
+        assert_eq!(m.get("released").unwrap().as_f64(), Some(1.0));
+        assert_eq!(svc.query(1).get("status").unwrap().as_str(), Some("completed"));
+    }
+
+    #[test]
+    fn cyclic_and_unknown_deps_reject_the_graph_atomically() {
+        let cfg = small_cfg();
+        let solver = Solver::native();
+        let mut svc = Service::new(&cfg, OnlinePolicyKind::Edl, true, &solver);
+        let mut session = String::new();
+        session.push_str(&submit_line_deps(&mk_task(0, 0.0, 0.5, 10.0), &[1]));
+        session.push('\n');
+        session.push_str(&submit_line_deps(&mk_task(1, 0.0, 0.5, 10.0), &[0]));
+        session.push('\n');
+        session.push_str("{\"op\":\"query\",\"id\":0}\n");
+        session.push_str(&submit_line_deps(&mk_task(2, 0.0, 0.5, 10.0), &[99]));
+        session.push('\n');
+        session.push_str("{\"op\":\"shutdown\"}\n");
+        let mut out = Vec::new();
+        svc.serve(session.as_bytes(), &mut out).unwrap();
+        let lines: Vec<Json> = String::from_utf8(out)
+            .unwrap()
+            .lines()
+            .map(|l| Json::parse(l).unwrap())
+            .collect();
+        assert_eq!(lines.len(), 5);
+        for cyclic in &lines[..2] {
+            assert_eq!(cyclic.get("admitted"), Some(&Json::Bool(false)));
+            assert_eq!(cyclic.get("reason").unwrap().as_str(), Some("cyclic-deps"));
+        }
+        assert_eq!(lines[2].get("status").unwrap().as_str(), Some("rejected"));
+        assert_eq!(lines[3].get("reason").unwrap().as_str(), Some("unknown-dep"));
+        assert_eq!(lines[3].get("dep").unwrap().as_f64(), Some(99.0));
+        let m = svc.metrics_json();
+        assert_eq!(m.get("dags_rejected").unwrap().as_f64(), Some(2.0));
+        assert_eq!(m.get("rejected_dag").unwrap().as_f64(), Some(3.0));
+        assert_eq!(m.get("dags_admitted").unwrap().as_f64(), Some(0.0));
+    }
+
+    #[test]
+    fn infeasible_dag_rejects_with_critical_path_bounds() {
+        let cfg = small_cfg();
+        let solver = Solver::native();
+        let mut svc = Service::new(&cfg, OnlinePolicyKind::Edl, true, &solver);
+        // a three-deep chain whose shared end-to-end window fits barely
+        // one member at full speed: the critical-path sum cannot fit
+        let t_min = mk_task(0, 0.0, 0.5, 10.0).model.t_min(&cfg.interval);
+        let mut session = String::new();
+        for id in 0..3usize {
+            // identical models, so the critical-path sum is exactly
+            // 3·t_min against a shared 1.5·t_min window
+            let mut t = mk_task(0, 0.0, 0.5, 10.0);
+            t.id = id;
+            t.deadline = 1.5 * t_min;
+            let deps: Vec<usize> = if id == 0 { vec![] } else { vec![id - 1] };
+            session.push_str(&submit_line_deps(&t, &deps));
+            session.push('\n');
+        }
+        session.push_str("{\"op\":\"shutdown\"}\n");
+        let mut out = Vec::new();
+        svc.serve(session.as_bytes(), &mut out).unwrap();
+        let lines: Vec<Json> = String::from_utf8(out)
+            .unwrap()
+            .lines()
+            .map(|l| Json::parse(l).unwrap())
+            .collect();
+        assert_eq!(lines.len(), 4);
+        for member in &lines[..3] {
+            assert_eq!(member.get("admitted"), Some(&Json::Bool(false)));
+            assert_eq!(
+                member.get("reason").unwrap().as_str(),
+                Some("dag-infeasible")
+            );
+            let need = member.get("t_min").unwrap().as_f64().unwrap();
+            let have = member.get("available").unwrap().as_f64().unwrap();
+            assert!(need > have, "reject must show the shortfall");
+        }
+        assert_eq!(lines[3].get("admitted").unwrap().as_f64(), Some(0.0));
     }
 
     #[test]

@@ -1,0 +1,526 @@
+//! DAG workload support: dependency resolution, whole-graph deadline
+//! feasibility, and energy-aware slack distribution.
+//!
+//! A `submit` carrying a `deps: [task_id, ...]` field marks the task as
+//! a member of the *pending DAG*; the service buffers members and admits
+//! the whole graph atomically at the next flush point (see
+//! [`crate::service::daemon::Service`] and
+//! [`crate::service::dispatch::ShardedService`]).  This module holds the
+//! service-agnostic math both front ends share:
+//!
+//! 1. [`resolve_deps`] splits each member's dependency list into
+//!    *internal* edges (deps on members of the same pending graph —
+//!    forward references allowed) and an *external ready floor* (a dep
+//!    on an already-placed record holds the member until that record's
+//!    finish).  A dep that is neither pending nor placed-and-admitted is
+//!    a typed [`DagError::UnknownDep`] reject.
+//! 2. [`plan`] topologically sorts the graph (deterministically, by
+//!    submission order; cycles are typed [`DagError::Cyclic`] rejects),
+//!    checks whole-graph feasibility against the critical-path sum of
+//!    `t_min` bounds ([`DagError::Infeasible`]), and splits the
+//!    end-to-end deadline slack into per-member release instants and
+//!    effective deadlines, so the DVFS frontier spends slack where the
+//!    energy gradient is steepest — the chain-structured analogue of the
+//!    paper's per-task frequency selection.
+//!
+//! The slack distributor is convex-frontier aware: each member's weight
+//! is its energy drop from `t_min` to `t*` (what slowing down is worth),
+//! and slack is allocated along each path in topological order under the
+//! invariant that every successor's remaining budget stays ≥ its own
+//! `t_min` — a feasible graph always yields a feasible plan.  For simple
+//! chains a second *even-split* candidate (the independent-admission
+//! baseline, clamped to each member's `[t_min, t*]`) is also costed and
+//! the cheaper plan wins; this is what guarantees a linear chain
+//! admitted as a DAG never books more planned energy than the same
+//! tasks admitted independently with evenly split deadlines.
+
+use std::collections::{BTreeMap, BTreeSet};
+
+/// One DAG member's solve bounds and (resolved, internal) edges, as fed
+/// to [`plan`].  Indices in `deps` refer to positions in the member
+/// slice, *not* client task ids — [`resolve_deps`] produces them.
+#[derive(Clone, Debug)]
+pub struct DagNode {
+    /// Minimum execution time at the fastest DVFS setting.
+    pub t_min: f64,
+    /// Energy-cheapest unconstrained execution time (≥ `t_min`).
+    pub t_star: f64,
+    /// The client's absolute deadline for this member.
+    pub deadline: f64,
+    /// Earliest instant this member may start regardless of internal
+    /// edges: the max of its own arrival and the finishes of external
+    /// (already-placed) dependencies.  `f64::NEG_INFINITY` when
+    /// unconstrained — [`plan`] clamps every release to its `t0`.
+    pub ext_ready: f64,
+    /// Internal predecessor edges (member indices, deduplicated).
+    pub deps: Vec<usize>,
+}
+
+/// The admission-time plan for one DAG: a release instant and an
+/// effective (slack-distributed) deadline per member, plus the planned
+/// frontier energy the winning allocation books.
+#[derive(Clone, Debug)]
+pub struct DagPlan {
+    /// Topological order (deterministic: smallest submission index
+    /// first among ready members).
+    pub order: Vec<usize>,
+    /// Absolute release instant per member (indexed like the input).
+    pub release: Vec<f64>,
+    /// Absolute effective deadline per member — what the engine
+    /// schedules against; the client's own deadline is never loosened
+    /// (`deadline[v] ≤ DagNode::deadline` up to float tolerance).
+    pub deadline: Vec<f64>,
+    /// Planned frontier energy of the whole graph (Σ per-member solve
+    /// energy at its allocated window).
+    pub energy: f64,
+}
+
+/// Typed DAG rejection reasons — the whole remaining graph rejects
+/// atomically with one of these (see `docs/PROTOCOL.md`).
+#[derive(Clone, Debug, PartialEq)]
+pub enum DagError {
+    /// A member depends on a task id that is neither a pending member
+    /// nor an admitted placed record.
+    UnknownDep {
+        /// The client id of the member carrying the bad dep.
+        member: usize,
+        /// The offending dependency id.
+        dep: usize,
+    },
+    /// The dependency graph contains a cycle (a self-dep counts).
+    Cyclic,
+    /// No per-member deadline split can fit the graph: some member's
+    /// critical-path window is below its `t_min`.
+    Infeasible {
+        /// Critical-path `t_min` sum through the first failing member,
+        /// measured from the graph's admission instant.
+        t_min: f64,
+        /// That member's tightest deadline window from the admission
+        /// instant (what the critical path would have to fit into).
+        available: f64,
+    },
+}
+
+impl DagError {
+    /// The wire-protocol reject reason string.
+    pub fn reason(&self) -> &'static str {
+        match self {
+            DagError::UnknownDep { .. } => "unknown-dep",
+            DagError::Cyclic => "cyclic-deps",
+            DagError::Infeasible { .. } => "dag-infeasible",
+        }
+    }
+}
+
+/// Resolve the raw `deps` id lists of one pending graph.
+///
+/// `ids[i]` is member `i`'s client task id and `deps[i]` its raw
+/// dependency ids.  `placed_finish(id)` looks up an *external* id: it
+/// returns the finish time of an admitted placed record, or `None` for
+/// unknown / rejected / evicted ids.  Ids name pending members first
+/// (forward references allowed; on duplicate ids the last pending
+/// member wins, matching the record store's overwrite semantics).
+///
+/// Returns per-member internal edges (deduplicated member indices) and
+/// per-member external ready floors (`f64::NEG_INFINITY` when the
+/// member has no external dep).
+pub fn resolve_deps<F>(
+    ids: &[usize],
+    deps: &[Vec<usize>],
+    mut placed_finish: F,
+) -> Result<(Vec<Vec<usize>>, Vec<f64>), DagError>
+where
+    F: FnMut(usize) -> Option<f64>,
+{
+    debug_assert_eq!(ids.len(), deps.len());
+    let index: BTreeMap<usize, usize> = ids.iter().enumerate().map(|(i, &id)| (id, i)).collect();
+    let mut internal = vec![Vec::new(); ids.len()];
+    let mut ext = vec![f64::NEG_INFINITY; ids.len()];
+    for (i, member_deps) in deps.iter().enumerate() {
+        for &d in member_deps {
+            if let Some(&j) = index.get(&d) {
+                if !internal[i].contains(&j) {
+                    internal[i].push(j);
+                }
+            } else if let Some(finish) = placed_finish(d) {
+                ext[i] = ext[i].max(finish);
+            } else {
+                return Err(DagError::UnknownDep {
+                    member: ids[i],
+                    dep: d,
+                });
+            }
+        }
+    }
+    Ok((internal, ext))
+}
+
+/// Kahn toposort over internal edges, deterministic by submission order
+/// (smallest member index first among ready nodes).  `Err(Cyclic)` when
+/// any member never becomes ready (a self-dep included).
+fn toposort(nodes: &[DagNode]) -> Result<Vec<usize>, DagError> {
+    let n = nodes.len();
+    let mut succs = vec![Vec::new(); n];
+    let mut indeg = vec![0usize; n];
+    for (i, v) in nodes.iter().enumerate() {
+        indeg[i] = v.deps.len();
+        for &p in &v.deps {
+            succs[p].push(i);
+        }
+    }
+    let mut ready: BTreeSet<usize> = (0..n).filter(|&i| indeg[i] == 0).collect();
+    let mut order = Vec::with_capacity(n);
+    while let Some(&v) = ready.iter().next() {
+        ready.remove(&v);
+        order.push(v);
+        for &s in &succs[v] {
+            indeg[s] -= 1;
+            if indeg[s] == 0 {
+                ready.insert(s);
+            }
+        }
+    }
+    if order.len() < n {
+        return Err(DagError::Cyclic);
+    }
+    Ok(order)
+}
+
+/// Validate and plan one DAG admitted at instant `t0`.
+///
+/// `energy(v, tlim)` must return member `v`'s planned frontier energy
+/// when granted an execution window of `tlim` (callers wire it to the
+/// cached `SolvePlane` frontier, scaled by the member's gang width);
+/// it is only queried with `tlim ≥ t_min(v)` and must be non-increasing
+/// in `tlim` (the frontier property).
+///
+/// The plan guarantees, for every member `v` (up to the admission
+/// tolerance): `release[v] ≥ max(t0, ext_ready, release of every
+/// predecessor's effective deadline)` and
+/// `release[v] + t_min(v) ≤ deadline[v] ≤ DagNode::deadline`.
+pub fn plan<F>(t0: f64, nodes: &[DagNode], mut energy: F) -> Result<DagPlan, DagError>
+where
+    F: FnMut(usize, f64) -> f64,
+{
+    let n = nodes.len();
+    if n == 0 {
+        return Ok(DagPlan {
+            order: Vec::new(),
+            release: Vec::new(),
+            deadline: Vec::new(),
+            energy: 0.0,
+        });
+    }
+    let order = toposort(nodes)?;
+    let mut succs = vec![Vec::new(); n];
+    for (i, v) in nodes.iter().enumerate() {
+        for &p in &v.deps {
+            succs[p].push(i);
+        }
+    }
+
+    // Backward pass: B(v) = the latest instant member v may *finish*
+    // while every downstream member can still run at full speed.
+    let mut b: Vec<f64> = nodes.iter().map(|v| v.deadline).collect();
+    for &v in order.iter().rev() {
+        for &s in &succs[v] {
+            b[v] = b[v].min(b[s] - nodes[s].t_min);
+        }
+    }
+
+    // Forward pass: Emin(v) = the earliest instant member v may start
+    // with every upstream member at full speed.  Feasible iff the
+    // [Emin, B] window fits t_min, with the admission tolerance idiom
+    // (negated so a NaN window rejects instead of admitting).
+    let mut emin = vec![0.0f64; n];
+    for &v in &order {
+        let mut e = t0.max(nodes[v].ext_ready);
+        for &p in &nodes[v].deps {
+            e = e.max(emin[p] + nodes[p].t_min);
+        }
+        emin[v] = e;
+        let window = b[v] - e;
+        if !(window >= nodes[v].t_min * (1.0 - 1e-4) - 1e-6) {
+            return Err(DagError::Infeasible {
+                t_min: e + nodes[v].t_min - t0,
+                available: b[v] - t0,
+            });
+        }
+    }
+
+    // Convex-frontier weights: what slowing member v from t_min to t*
+    // is worth, and the heaviest downstream path competing for the same
+    // slack (wdown).  Slack beyond t* is worthless — the frontier is
+    // flat past it — so allocations clamp there.
+    let w: Vec<f64> = (0..n)
+        .map(|v| (energy(v, nodes[v].t_min) - energy(v, nodes[v].t_star)).max(0.0))
+        .collect();
+    let mut wdown = vec![0.0f64; n];
+    for &v in order.iter().rev() {
+        for &s in &succs[v] {
+            wdown[v] = wdown[v].max(w[s] + wdown[s]);
+        }
+    }
+
+    // Candidate 1 — proportional forward allocation.  Releasing v at
+    // the max of its predecessors' effective deadlines keeps the
+    // invariant B(s) ≥ B(p) + t_min(s): every member's remaining budget
+    // B(v) - r(v) stays ≥ t_min(v), so the split never breaks the
+    // feasibility the DP just established.
+    let alloc_forward = |energy: &mut F| -> (Vec<f64>, Vec<f64>, f64) {
+        let mut rel = vec![0.0f64; n];
+        let mut alloc = vec![0.0f64; n];
+        let mut total = 0.0;
+        for &v in &order {
+            let mut r = t0.max(nodes[v].ext_ready);
+            for &p in &nodes[v].deps {
+                r = r.max(rel[p] + alloc[p]);
+            }
+            rel[v] = r;
+            let slack = (b[v] - r - nodes[v].t_min).max(0.0);
+            let cap = (nodes[v].t_star - nodes[v].t_min).max(0.0);
+            let denom = w[v] + wdown[v];
+            let give = if denom <= 0.0 {
+                0.0
+            } else {
+                (slack * w[v] / denom).min(cap)
+            };
+            alloc[v] = nodes[v].t_min + give;
+            total += energy(v, alloc[v]);
+        }
+        (rel, alloc, total)
+    };
+    let (mut rel, mut alloc, mut best_e) = alloc_forward(&mut energy);
+
+    // Candidate 2 — even split, for simple chains only: exactly the
+    // windows the same tasks would get when admitted independently with
+    // the end-to-end deadline divided evenly, clamped to [t_min, t*].
+    // When valid it books the independent baseline's planned energy by
+    // construction, so min(candidates) ≤ baseline.
+    let is_chain = n >= 2
+        && nodes[order[0]].deps.is_empty()
+        && order.windows(2).all(|p| nodes[p[1]].deps == [p[0]])
+        && order[..n - 1].iter().all(|&v| succs[v].len() == 1);
+    if is_chain {
+        let start = t0.max(nodes[order[0]].ext_ready);
+        let delta = (b[order[n - 1]] - start) / n as f64;
+        let mut rel2 = vec![0.0f64; n];
+        let mut alloc2 = vec![0.0f64; n];
+        let mut total2 = 0.0;
+        let mut r = start;
+        let mut valid = delta.is_finite() && delta > 0.0;
+        for &v in &order {
+            if r + 1e-9 < t0.max(nodes[v].ext_ready) {
+                valid = false;
+                break;
+            }
+            let a = delta.max(nodes[v].t_min).min(nodes[v].t_star.max(nodes[v].t_min));
+            if !(b[v] - r >= a * (1.0 - 1e-4) - 1e-6) {
+                valid = false;
+                break;
+            }
+            rel2[v] = r;
+            alloc2[v] = a;
+            total2 += energy(v, a);
+            r += a;
+        }
+        if valid && total2 < best_e {
+            rel = rel2;
+            alloc = alloc2;
+            best_e = total2;
+        }
+    }
+
+    let deadline: Vec<f64> = (0..n).map(|v| rel[v] + alloc[v]).collect();
+    Ok(DagPlan {
+        order,
+        release: rel,
+        deadline,
+        energy: best_e,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn node(t_min: f64, t_star: f64, deadline: f64, deps: Vec<usize>) -> DagNode {
+        DagNode {
+            t_min,
+            t_star,
+            deadline,
+            ext_ready: f64::NEG_INFINITY,
+            deps,
+        }
+    }
+
+    /// A convex synthetic frontier: e(t) = c / min(t, t*) — strictly
+    /// decreasing up to t*, flat past it.
+    fn frontier(c: f64, t_star: f64) -> impl Fn(f64) -> f64 {
+        move |t: f64| c / t.min(t_star)
+    }
+
+    #[test]
+    fn resolve_splits_internal_and_external_deps() {
+        let ids = [10, 11, 12];
+        let deps = [vec![], vec![10, 7], vec![11, 10, 10]];
+        let (internal, ext) = resolve_deps(&ids, &deps, |d| (d == 7).then_some(42.0)).unwrap();
+        assert_eq!(internal, vec![vec![], vec![0], vec![1, 0]]);
+        assert_eq!(ext[0], f64::NEG_INFINITY);
+        assert_eq!(ext[1], 42.0);
+        assert_eq!(ext[2], f64::NEG_INFINITY);
+    }
+
+    #[test]
+    fn resolve_rejects_unknown_deps_with_the_offender() {
+        let err = resolve_deps(&[5, 6], &[vec![], vec![5, 99]], |_| None).unwrap_err();
+        assert_eq!(err, DagError::UnknownDep { member: 6, dep: 99 });
+        assert_eq!(err.reason(), "unknown-dep");
+    }
+
+    #[test]
+    fn cycles_and_self_deps_reject_typed() {
+        // 0 -> 1 -> 0
+        let nodes = vec![node(1.0, 2.0, 100.0, vec![1]), node(1.0, 2.0, 100.0, vec![0])];
+        assert_eq!(plan(0.0, &nodes, |_, _| 0.0).unwrap_err(), DagError::Cyclic);
+        let nodes = vec![node(1.0, 2.0, 100.0, vec![0])];
+        let err = plan(0.0, &nodes, |_, _| 0.0).unwrap_err();
+        assert_eq!(err.reason(), "cyclic-deps");
+    }
+
+    #[test]
+    fn toposort_is_deterministic_by_submission_order() {
+        // diamond: 0 -> {1, 2} -> 3; 1 and 2 are both ready after 0 and
+        // must pop in submission order
+        let nodes = vec![
+            node(1.0, 2.0, 100.0, vec![]),
+            node(1.0, 2.0, 100.0, vec![0]),
+            node(1.0, 2.0, 100.0, vec![0]),
+            node(1.0, 2.0, 100.0, vec![1, 2]),
+        ];
+        let p = plan(0.0, &nodes, |_, _| 1.0).unwrap();
+        assert_eq!(p.order, vec![0, 1, 2, 3]);
+        // the join releases only after BOTH branches' effective deadlines
+        assert!(p.release[3] >= p.deadline[1] - 1e-9);
+        assert!(p.release[3] >= p.deadline[2] - 1e-9);
+    }
+
+    #[test]
+    fn infeasible_chain_reports_critical_path_analogues() {
+        // three 10s-minimum tasks into a 25s end-to-end window
+        let nodes = vec![
+            node(10.0, 20.0, 25.0, vec![]),
+            node(10.0, 20.0, 25.0, vec![0]),
+            node(10.0, 20.0, 25.0, vec![1]),
+        ];
+        match plan(0.0, &nodes, |_, _| 1.0).unwrap_err() {
+            DagError::Infeasible { t_min, available } => {
+                // first failure is already at the root: B(0) = 25-20 = 5
+                assert!((t_min - 10.0).abs() < 1e-9);
+                assert!((available - 5.0).abs() < 1e-9);
+            }
+            other => panic!("wanted Infeasible, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn feasible_plans_respect_windows_and_order() {
+        let nodes = vec![
+            node(5.0, 12.0, 100.0, vec![]),
+            node(5.0, 12.0, 100.0, vec![0]),
+            node(5.0, 12.0, 100.0, vec![1]),
+        ];
+        let e0 = frontier(100.0, 12.0);
+        let p = plan(10.0, &nodes, |_, t| e0(t)).unwrap();
+        for v in 0..3 {
+            assert!(p.release[v] >= 10.0 - 1e-9);
+            assert!(p.deadline[v] - p.release[v] >= 5.0 - 1e-9, "window >= t_min");
+            assert!(p.deadline[v] <= nodes[v].deadline + 1e-6);
+            for &d in &nodes[v].deps {
+                assert!(p.release[v] >= p.deadline[d] - 1e-9, "release after pred deadline");
+            }
+        }
+    }
+
+    #[test]
+    fn external_ready_floors_hold_back_releases() {
+        let mut nodes = vec![node(2.0, 4.0, 100.0, vec![]), node(2.0, 4.0, 100.0, vec![0])];
+        nodes[0].ext_ready = 50.0;
+        let p = plan(0.0, &nodes, |_, _| 1.0).unwrap();
+        assert!(p.release[0] >= 50.0 - 1e-9);
+        assert!(p.release[1] >= p.deadline[0] - 1e-9);
+    }
+
+    #[test]
+    fn slack_flows_to_the_steepest_frontier() {
+        // two-node chain, 20s of shared slack (tight enough that the t*
+        // caps don't bind); node 0's frontier drops 100x harder than
+        // node 1's, so node 0 should take nearly all the give
+        let nodes = vec![
+            node(5.0, 30.0, 30.0, vec![]),
+            node(5.0, 30.0, 30.0, vec![0]),
+        ];
+        let heavy = frontier(1000.0, 30.0);
+        let light = frontier(10.0, 30.0);
+        let p = plan(
+            0.0,
+            &nodes,
+            |v, t| if v == 0 { heavy(t) } else { light(t) },
+        )
+        .unwrap();
+        let give0 = p.deadline[0] - p.release[0] - 5.0;
+        let give1 = p.deadline[1] - p.release[1] - 5.0;
+        assert!(give0 > give1, "steep frontier wins the shared slack: {give0} vs {give1}");
+    }
+
+    #[test]
+    fn chain_plan_never_exceeds_the_even_split_baseline() {
+        // the energy-property anchor, on the planner alone: randomized
+        // convex frontiers, linear chains — planned energy must be ≤ the
+        // independent even-split baseline Σ e(clamp(Δ, t_min, t*))
+        let mut seed = 0x9e3779b97f4a7c15u64;
+        let mut rng = move || {
+            seed ^= seed << 13;
+            seed ^= seed >> 7;
+            seed ^= seed << 17;
+            (seed >> 11) as f64 / (1u64 << 53) as f64
+        };
+        for _ in 0..200 {
+            let k = 2 + (rng() * 5.0) as usize;
+            let mut nodes = Vec::new();
+            let mut costs = Vec::new();
+            let mut tmin_sum = 0.0;
+            for i in 0..k {
+                let t_min = 1.0 + rng() * 9.0;
+                let t_star = t_min * (1.0 + rng() * 3.0);
+                tmin_sum += t_min;
+                costs.push((50.0 + rng() * 500.0, t_star));
+                nodes.push(node(t_min, t_star, 0.0, if i == 0 { vec![] } else { vec![i - 1] }));
+            }
+            // end-to-end deadline: even split leaves every member ≥ t_min
+            let max_tmin = nodes.iter().map(|v| v.t_min).fold(0.0, f64::max);
+            let d = (max_tmin * k as f64).max(tmin_sum) * (1.0 + rng());
+            for v in &mut nodes {
+                v.deadline = d;
+            }
+            let e = |v: usize, t: f64| costs[v].0 / t.min(costs[v].1);
+            let p = plan(0.0, &nodes, e).unwrap();
+            let delta = d / k as f64;
+            let baseline: f64 = (0..k)
+                .map(|v| e(v, delta.max(nodes[v].t_min).min(nodes[v].t_star)))
+                .sum();
+            assert!(
+                p.energy <= baseline + 1e-9 * baseline.abs(),
+                "planned {} > baseline {}",
+                p.energy,
+                baseline
+            );
+        }
+    }
+
+    #[test]
+    fn empty_graph_plans_trivially() {
+        let p = plan(5.0, &[], |_, _| 0.0).unwrap();
+        assert!(p.order.is_empty() && p.energy == 0.0);
+    }
+}

@@ -43,6 +43,14 @@
 //!   (see `docs/ARCHITECTURE.md` §Backpressure and shedding).  Off by
 //!   default, and then response-line-identical to a dispatcher without
 //!   the gate.
+//! * **DAG workloads.**  A submit carrying `deps` buffers into a pending
+//!   graph instead of the coalesced batch (the batch flushes first, so
+//!   the two buffers never coexist) and the whole graph admits
+//!   atomically at the next flush point: per-member gates, dependency
+//!   resolution, critical-path feasibility, and energy-aware slack
+//!   distribution ([`crate::service::dag`]).  Members dispatch through
+//!   the normal shard routing in release-order waves — EDF within a
+//!   wave — so successors hold until their predecessors' departure.
 //!
 //! Shards always run the native DVFS solver: the PJRT backend is not
 //! `Send`, and the per-batch solve is exactly the part sharding wants to
@@ -50,11 +58,12 @@
 
 use crate::cluster::{partition_cluster, ClusterEvent};
 use crate::config::{GpuTypeSpec, SimConfig};
-use crate::dvfs::{ScalingInterval, SolveCache, GRID_DEFAULT};
+use crate::dvfs::{solve_opt, ScalingInterval, SolveCache, TaskModel, GRID_DEFAULT};
 use crate::ext::hetero::{select_type_cached, TypeParams};
 use std::cell::RefCell;
 use crate::service::admission::{AdmissionController, Verdict, EVICTED_INFEASIBLE, OVERLOADED};
 use crate::service::daemon::{RecordStore, TaskRecord};
+use crate::service::dag::{self, DagError, DagNode};
 use crate::service::journal::Journal;
 use crate::service::metrics::Snapshot;
 use crate::service::protocol::{num, obj, pong, s, Request, SubmitOpts, TypePref};
@@ -193,6 +202,11 @@ pub struct ShardedService {
     batch: Vec<(Task, SubmitOpts)>,
     /// Slot key of the pending batch (valid while `batch` is non-empty).
     batch_slot: f64,
+    /// The pending DAG: submits carrying `deps`, in submission order,
+    /// held until the graph's flush point ([`Self::flush_dag`]).  Never
+    /// non-empty at the same time as `batch` — each kind of submit
+    /// flushes the other buffer first.
+    dag: Vec<(Task, SubmitOpts)>,
     admission: AdmissionController,
     records: RecordStore,
     iv: ScalingInterval,
@@ -370,6 +384,7 @@ impl ShardedService {
             window,
             batch: Vec::new(),
             batch_slot: 0.0,
+            dag: Vec::new(),
             admission: AdmissionController::new(),
             records: RecordStore::new(),
             iv: cfg.interval,
@@ -524,8 +539,25 @@ impl ShardedService {
     /// first flushes the pending batch (those responses come first, in
     /// their submission order); the new task's own response is deferred
     /// to its batch's flush unless the window is `0`.
+    ///
+    /// A submit carrying `deps` (even `[]`) is a DAG member: it flushes
+    /// the pending batch, buffers into the pending graph, and defers its
+    /// response to the graph's flush point (the next deps-free submit or
+    /// non-submit state-touching request — see [`Self::flush_dag`]).
+    /// Members skip the door gates (they re-run per member at the flush)
+    /// and the overload gate — shedding one member would silently
+    /// corrupt the graph, so the whole graph is judged atomically.
     pub fn submit_with(&mut self, mut task: Task, opts: SubmitOpts) -> Vec<Json> {
-        let mut out = Vec::new();
+        if opts.deps.is_some() {
+            // the two buffers never coexist: flushing the batch first
+            // keeps the released response lines in strict request order
+            let out = self.flush();
+            task.arrival = task.arrival.max(self.now);
+            self.dag.push((task, opts));
+            return out;
+        }
+        // a deps-free submit is the pending graph's flush point
+        let mut out = self.flush_dag();
         // clamp before validating, exactly like the daemon: a NaN arrival
         // clamps to the clock (and is then judged on its other fields)
         let arrival = task.arrival.max(self.now);
@@ -954,6 +986,448 @@ impl ShardedService {
         self.maybe_emit_metrics();
         let out: Vec<Json> = responses.into_iter().flatten().collect();
         debug_assert_eq!(out.len(), n, "every batch member got a response");
+        out
+    }
+
+    /// Render one DAG member's individual (stage-one gate) rejection —
+    /// journaled, counted, and recorded exactly like a rejected
+    /// independent submission, so a later `query` answers `rejected`.
+    fn reject_member(&mut self, task: &Task, verdict: &Verdict, t0: f64) -> Json {
+        if let Some(j) = self.journal.as_mut() {
+            j.record(
+                "admit",
+                t0,
+                vec![
+                    ("id", num(task.id as f64)),
+                    ("ok", Json::Bool(false)),
+                    ("reason", s(verdict.reason())),
+                ],
+            );
+        }
+        let mut fields = vec![
+            ("ok", Json::Bool(true)),
+            ("op", s("submit")),
+            ("id", num(task.id as f64)),
+            ("now", num(self.now)),
+            ("admitted", Json::Bool(false)),
+            ("reason", s(verdict.reason())),
+        ];
+        match verdict {
+            Verdict::RejectInfeasible { t_min, available } => {
+                fields.push(("t_min", num(*t_min)));
+                fields.push(("available", num(*available)));
+            }
+            Verdict::RejectInvalid(why) => fields.push(("detail", s(why))),
+            Verdict::RejectUnknownType(name) => fields.push(("gpu_type", s(name))),
+            Verdict::RejectGangWidth { g, l } => {
+                fields.push(("g", num(*g as f64)));
+                fields.push(("l", num(*l as f64)));
+            }
+            _ => {}
+        }
+        self.records
+            .remember(task.id, TaskRecord::rejected(task.arrival, task.deadline));
+        obj(fields)
+    }
+
+    /// Admit the pending DAG atomically (the sharded counterpart of the
+    /// unsharded daemon's graph flush).  Stage 1 runs the per-member
+    /// gates every submission passes (validity, named type, surviving
+    /// capacity, gang width) and resolves each survivor's GPU type and
+    /// projected execution floor — a failing member rejects
+    /// individually, under the usual counters.  Stage 2 resolves
+    /// dependencies over the survivors (ids may name pending members —
+    /// forward references allowed — or admitted placed records, whose
+    /// finish becomes the member's ready floor) and runs the
+    /// critical-path planner ([`dag::plan`]) on the per-type floors; any
+    /// graph-level error rejects ALL survivors with one typed reason
+    /// under the `rejected_dag` counter.  On success members dispatch
+    /// through the normal shard routing in release-order waves (EDF by
+    /// effective deadline within a wave), each against its
+    /// slack-distributed effective deadline — the record keeps the
+    /// client's own deadline.  Returns one response per buffered member,
+    /// in submission order.
+    pub fn flush_dag(&mut self) -> Vec<Json> {
+        if self.dag.is_empty() {
+            return Vec::new();
+        }
+        let flush_t0 = Instant::now();
+        let mut members = std::mem::take(&mut self.dag);
+        // re-clamp like a coalesced batch: a flush since buffering may
+        // have advanced the clock past a member's arrival
+        for (task, _) in &mut members {
+            task.arrival = task.arrival.max(self.now);
+        }
+        let n = members.len();
+        // the graph plans at its newest arrival, like a coalesced batch
+        let t0 = members.iter().map(|(k, _)| k.arrival).fold(self.now, f64::max);
+        let mut out: Vec<Option<Json>> = vec![None; n];
+        let gang_bound = if self.failed.is_empty() {
+            self.l
+        } else {
+            self.widest_live_server_global()
+        };
+        // stage 1: per-member gates + type/floor resolution.  The three
+        // vectors stay aligned: survivors[k] is the buffer index, with
+        // its resolved type in types[k] and projected floor in floors[k].
+        let mut survivors: Vec<usize> = Vec::with_capacity(n);
+        let mut types: Vec<usize> = Vec::with_capacity(n);
+        let mut floors: Vec<TaskModel> = Vec::with_capacity(n);
+        for (i, (task, opts)) in members.iter().enumerate() {
+            let verdict = 'gate: {
+                if let Err(why) = self.admission.check_validity(task) {
+                    break 'gate Some(Verdict::RejectInvalid(why));
+                }
+                if let TypePref::Named(ref name) = opts.gpu_type {
+                    if !self.fleet.iter().any(|ty| &ty.name == name) {
+                        break 'gate Some(self.admission.reject_unknown_type(name));
+                    }
+                }
+                if !self.failed.is_empty() && self.widest_live_server_global() == 0 {
+                    self.admission.rejected_infeasible += 1;
+                    break 'gate Some(Verdict::RejectInfeasible {
+                        t_min: task.model.t_min(&self.iv),
+                        available: 0.0,
+                    });
+                }
+                if let Err(v) = self.admission.check_gang_width(opts.g, gang_bound) {
+                    break 'gate Some(v);
+                }
+                // resolve the GPU type (named names were validated
+                // above; `any` takes the feasible-minimum-energy
+                // projection over the member's end-to-end window)
+                let type_idx = match opts.gpu_type {
+                    TypePref::Named(ref name) => self
+                        .fleet
+                        .iter()
+                        .position(|ty| &ty.name == name)
+                        .expect("validated above"),
+                    TypePref::Any if self.fleet.len() == 1 => 0,
+                    TypePref::Any => {
+                        let window = task.deadline - t0.max(task.arrival);
+                        select_type_cached(
+                            &task.model,
+                            window,
+                            &self.fleet_params,
+                            &self.type_caches,
+                        )
+                        .type_idx
+                    }
+                };
+                // capacity may have shrunk on the resolved type since
+                // the member was buffered (failures land between
+                // flushes) — mirror the batch flush's rechecks
+                if !self.failed.is_empty() {
+                    if self.type_live_pairs(type_idx) == 0 {
+                        self.admission.rejected_infeasible += 1;
+                        break 'gate Some(Verdict::RejectInfeasible {
+                            t_min: task.model.t_min(&self.iv),
+                            available: 0.0,
+                        });
+                    }
+                    let widest = self.type_widest_live(type_idx);
+                    if opts.g > widest {
+                        self.admission.rejected_gang += 1;
+                        break 'gate Some(Verdict::RejectGangWidth {
+                            g: opts.g,
+                            l: widest,
+                        });
+                    }
+                }
+                let params = &self.fleet_params[type_idx];
+                let floor_model = if params.power_scale == 1.0 && params.speed_scale == 1.0 {
+                    task.model
+                } else {
+                    params.project(&task.model)
+                };
+                survivors.push(i);
+                types.push(type_idx);
+                floors.push(floor_model);
+                None
+            };
+            if let Some(v) = verdict {
+                out[i] = Some(self.reject_member(task, &v, t0));
+            }
+        }
+
+        // stage 2: dependency resolution + the critical-path plan over
+        // the survivors, on the projected (per-type) execution floors
+        let ids: Vec<usize> = survivors.iter().map(|&i| members[i].0.id).collect();
+        let raw_deps: Vec<Vec<usize>> = survivors
+            .iter()
+            .map(|&i| members[i].1.deps.clone().unwrap_or_default())
+            .collect();
+        let gate_t0 = Instant::now();
+        let planned = match dag::resolve_deps(&ids, &raw_deps, |d| {
+            self.records.get(d).filter(|r| r.admitted).map(|r| r.finish)
+        }) {
+            Ok((internal, ext)) => {
+                let nodes: Vec<DagNode> = survivors
+                    .iter()
+                    .enumerate()
+                    .map(|(k, &i)| {
+                        let task = &members[i].0;
+                        let t_min = floors[k].t_min(&self.iv);
+                        DagNode {
+                            t_min,
+                            t_star: floors[k].t_star().max(t_min),
+                            deadline: task.deadline,
+                            ext_ready: ext[k].max(task.arrival),
+                            deps: internal[k].clone(),
+                        }
+                    })
+                    .collect();
+                let energy = |k: usize, tlim: f64| -> f64 {
+                    let g = members[survivors[k]].1.g as f64;
+                    let mut c = self.type_caches[types[k]].borrow_mut();
+                    let e = if c.enabled() {
+                        c.solve_opt(&floors[k], tlim).e
+                    } else {
+                        solve_opt(&floors[k], tlim, &self.iv, GRID_DEFAULT).e
+                    };
+                    e * g
+                };
+                dag::plan(t0, &nodes, energy)
+            }
+            Err(e) => Err(e),
+        };
+        self.hist_solve.record(gate_t0.elapsed().as_secs_f64() * 1e6);
+
+        match planned {
+            Err(e) => {
+                self.admission.rejected_dag += survivors.len() as u64;
+                self.admission.dags_rejected += 1;
+                if let Some(j) = self.journal.as_mut() {
+                    j.record(
+                        "dag_admit",
+                        t0,
+                        vec![
+                            ("n", num(survivors.len() as f64)),
+                            ("ok", Json::Bool(false)),
+                            ("reason", s(e.reason())),
+                        ],
+                    );
+                }
+                for &i in &survivors {
+                    let task = &members[i].0;
+                    if let Some(j) = self.journal.as_mut() {
+                        j.record(
+                            "admit",
+                            t0,
+                            vec![
+                                ("id", num(task.id as f64)),
+                                ("ok", Json::Bool(false)),
+                                ("reason", s(e.reason())),
+                            ],
+                        );
+                    }
+                    let mut fields = vec![
+                        ("ok", Json::Bool(true)),
+                        ("op", s("submit")),
+                        ("id", num(task.id as f64)),
+                        ("now", num(self.now)),
+                        ("admitted", Json::Bool(false)),
+                        ("reason", s(e.reason())),
+                    ];
+                    match &e {
+                        DagError::UnknownDep { member, dep } => {
+                            fields.push(("member", num(*member as f64)));
+                            fields.push(("dep", num(*dep as f64)));
+                        }
+                        DagError::Infeasible { t_min, available } => {
+                            fields.push(("t_min", num(*t_min)));
+                            fields.push(("available", num(*available)));
+                        }
+                        DagError::Cyclic => {}
+                    }
+                    self.records
+                        .remember(task.id, TaskRecord::rejected(task.arrival, task.deadline));
+                    out[i] = Some(obj(fields));
+                }
+            }
+            Ok(plan) => {
+                self.admission.dags_admitted += 1;
+                if let Some(j) = self.journal.as_mut() {
+                    j.record(
+                        "dag_admit",
+                        t0,
+                        vec![
+                            ("n", num(survivors.len() as f64)),
+                            ("ok", Json::Bool(true)),
+                            ("reason", s("admitted")),
+                        ],
+                    );
+                }
+                self.now = self.now.max(t0);
+                self.drained = false;
+                self.inflight_tasks.retain(|_, f| f.finish > t0 + 1e-9);
+                // release-order waves (submission order on ties): every
+                // member whose release clamps to the same instant
+                // dispatches as one EDF batch at that time, so the
+                // shards' event clocks never run backwards
+                let mut by_release: Vec<usize> = (0..survivors.len()).collect();
+                by_release.sort_by(|&a, &b| {
+                    plan.release[a]
+                        .partial_cmp(&plan.release[b])
+                        .unwrap()
+                        .then(a.cmp(&b))
+                });
+                let mut w = 0;
+                while w < by_release.len() {
+                    let r = plan.release[by_release[w]].max(t0);
+                    let mut wave_end = w;
+                    while wave_end < by_release.len()
+                        && plan.release[by_release[wave_end]].max(t0) <= r
+                    {
+                        wave_end += 1;
+                    }
+                    self.now = self.now.max(r);
+                    let mut entries: Vec<(usize, ServiceTask, f64)> = Vec::new();
+                    for &k in &by_release[w..wave_end] {
+                        let i = survivors[k];
+                        let (task, opts) = &members[i];
+                        let n_deps = opts.deps.as_ref().map_or(0, |d| d.len());
+                        self.admission.admitted += 1;
+                        if n_deps > 0 {
+                            self.admission.released += 1;
+                        }
+                        let mut engine_task = task.clone();
+                        engine_task.arrival = r;
+                        engine_task.deadline = plan.deadline[k];
+                        if let Some(j) = self.journal.as_mut() {
+                            j.record(
+                                "admit",
+                                r,
+                                vec![
+                                    ("id", num(task.id as f64)),
+                                    ("ok", Json::Bool(true)),
+                                    ("reason", s("admitted")),
+                                ],
+                            );
+                            if n_deps > 0 {
+                                j.record(
+                                    "release",
+                                    r,
+                                    vec![
+                                        ("id", num(task.id as f64)),
+                                        ("deps", num(n_deps as f64)),
+                                    ],
+                                );
+                            }
+                        }
+                        entries.push((
+                            i,
+                            ServiceTask {
+                                task: engine_task,
+                                type_idx: types[k],
+                                g: opts.g,
+                            },
+                            floors[k].t_min(&self.iv),
+                        ));
+                    }
+                    // EDF by effective deadline within the wave (stable:
+                    // ties keep release/submission order)
+                    entries
+                        .sort_by(|a, b| a.1.task.deadline.partial_cmp(&b.1.task.deadline).unwrap());
+                    let mut placed = self.dispatch(r, &entries);
+                    placed.sort_by_key(|&(i, _)| i);
+                    let entry_at: BTreeMap<usize, usize> =
+                        entries.iter().enumerate().map(|(j, e)| (e.0, j)).collect();
+                    for (i, p) in placed {
+                        let (task, opts) = &members[i];
+                        let n_deps = opts.deps.as_ref().map_or(0, |d| d.len());
+                        let rec = TaskRecord {
+                            admitted: true,
+                            pair: Some(p.pair),
+                            g: p.pairs.len(),
+                            pairs: p.pairs.clone(),
+                            start: p.start,
+                            finish: p.finish,
+                            // the client's own deadline, not the
+                            // planner's effective one
+                            deadline: task.deadline,
+                        };
+                        let mut fields = vec![
+                            ("ok", Json::Bool(true)),
+                            ("op", s("submit")),
+                            ("id", num(p.id as f64)),
+                            ("now", num(r)),
+                            ("admitted", Json::Bool(true)),
+                            ("reason", s("admitted")),
+                            ("pair", num(p.pair as f64)),
+                            ("start", num(p.start)),
+                            ("finish", num(p.finish)),
+                            ("deadline_met", Json::Bool(rec.deadline_met())),
+                            ("shard", num(p.shard as f64)),
+                        ];
+                        if self.typed {
+                            fields.push(("gpu_type", s(&self.fleet[p.type_idx].name)));
+                        }
+                        if p.pairs.len() > 1 {
+                            fields.push(("g", num(p.pairs.len() as f64)));
+                            fields.push((
+                                "pairs",
+                                Json::Arr(p.pairs.iter().map(|&q| num(q as f64)).collect()),
+                            ));
+                        }
+                        if n_deps > 0 {
+                            fields.push(("released", num(r)));
+                        }
+                        if let Some(j) = self.journal.as_mut() {
+                            let mut jf = vec![
+                                ("id", num(p.id as f64)),
+                                ("pair", num(p.pair as f64)),
+                                ("shard", num(p.shard as f64)),
+                                ("start", num(p.start)),
+                                ("mu", num(p.finish)),
+                            ];
+                            if p.pairs.len() > 1 {
+                                jf.push(("g", num(p.pairs.len() as f64)));
+                                jf.push((
+                                    "pairs",
+                                    Json::Arr(p.pairs.iter().map(|&q| num(q as f64)).collect()),
+                                ));
+                            }
+                            j.record("place", r, jf);
+                        }
+                        self.records.remember(p.id, rec);
+                        let (_, st, t_min) = &entries[entry_at[&i]];
+                        self.inflight_tasks.insert(
+                            p.id,
+                            InflightTask {
+                                st: st.clone(),
+                                t_min: *t_min,
+                                pairs: p.pairs.clone(),
+                                finish: p.finish,
+                            },
+                        );
+                        out[i] = Some(obj(fields));
+                    }
+                    self.journal_dispatch_effects(r);
+                    w = wave_end;
+                }
+            }
+        }
+        if let Some(j) = self.journal.as_mut() {
+            j.flush();
+        }
+        self.hist_flush.record(flush_t0.elapsed().as_secs_f64() * 1e6);
+        self.maybe_emit_metrics();
+        let out: Vec<Json> = out
+            .into_iter()
+            .map(|o| o.expect("every buffered member answered"))
+            .collect();
+        debug_assert_eq!(out.len(), n, "every DAG member got a response");
+        out
+    }
+
+    /// Flush both pending buffers — the coalesced batch and the DAG —
+    /// releasing their deferred responses.  At most one is ever
+    /// non-empty (each kind of submit flushes the other first), so the
+    /// combined lines keep strict request order.
+    fn flush_batches(&mut self) -> Vec<Json> {
+        let mut out = self.flush();
+        out.extend(self.flush_dag());
         out
     }
 
@@ -1534,6 +2008,10 @@ impl ShardedService {
         merged.rejected_invalid = self.admission.rejected_invalid;
         merged.rejected_type = self.admission.rejected_type;
         merged.rejected_gang = self.admission.rejected_gang;
+        merged.rejected_dag = self.admission.rejected_dag;
+        merged.dags_admitted = self.admission.dags_admitted;
+        merged.dags_rejected = self.admission.dags_rejected;
+        merged.released = self.admission.released;
         merged.migrated = self.admission.migrated;
         merged.evicted = self.admission.evicted_infeasible;
         merged.shed = self.admission.shed_overloaded;
@@ -1651,12 +2129,12 @@ impl ShardedService {
         }
     }
 
-    /// Graceful drain: flush the pending batch, run every shard to
-    /// completion, and report the merged closed-books decomposition.
-    /// Returns the released flush responses followed by the final
-    /// `shutdown` snapshot (always the last element).
+    /// Graceful drain: flush the pending batch and the pending DAG, run
+    /// every shard to completion, and report the merged closed-books
+    /// decomposition.  Returns the released flush responses followed by
+    /// the final `shutdown` snapshot (always the last element).
     pub fn shutdown(&mut self) -> Vec<Json> {
-        let mut out = self.flush();
+        let mut out = self.flush_batches();
         let snap = self.drain_to_snapshot();
         out.push(render_snapshot(snap, "shutdown", true));
         // the drain advanced the clock; settle any metrics strides it
@@ -1674,26 +2152,27 @@ impl ShardedService {
     /// merged snapshot.  Used by the sharded simulator path
     /// ([`crate::sim::online::run_online_workload_sharded`]).
     pub fn drain_to_snapshot(&mut self) -> Snapshot {
-        let _ = self.flush();
+        let _ = self.flush_batches();
         let snap = self.collect_merged(true);
         self.drained = true;
         snap
     }
 
     /// Dispatch one decoded request.  Returns (responses, stop-serving).
-    /// Non-submit requests flush the pending batch first, so responses
-    /// always come back in request order (`ping` is the one out-of-band
-    /// exception — the front end normally intercepts it).
+    /// Non-submit requests flush the pending batch and the pending DAG
+    /// first, so responses always come back in request order (`ping` is
+    /// the one out-of-band exception — the front end normally intercepts
+    /// it).
     pub fn handle(&mut self, req: Request) -> (Vec<Json>, bool) {
         match req {
             Request::Submit(task, opts) => (self.submit_with(task, opts), false),
             Request::Query { id } => {
-                let mut out = self.flush();
+                let mut out = self.flush_batches();
                 out.push(self.records.query_json(id, self.now));
                 (out, false)
             }
             Request::Snapshot => {
-                let mut out = self.flush();
+                let mut out = self.flush_batches();
                 let snap = self.snapshot_json("snapshot");
                 out.push(snap);
                 (out, false)
@@ -1704,17 +2183,17 @@ impl ShardedService {
                 // end answers `metrics` out of band without flushing, but
                 // a bare `handle` must not let the metrics line overtake
                 // deferred submit responses
-                let mut out = self.flush();
+                let mut out = self.flush_batches();
                 out.push(self.metrics_json());
                 (out, false)
             }
             Request::FailServer { server, t } => {
-                let mut out = self.flush();
+                let mut out = self.flush_batches();
                 out.push(self.fail(Some(server), None, t));
                 (out, false)
             }
             Request::FailPair { pair, t } => {
-                let mut out = self.flush();
+                let mut out = self.flush_batches();
                 out.push(self.fail(None, Some(pair), t));
                 (out, false)
             }
@@ -1725,9 +2204,9 @@ impl ShardedService {
     /// Serve a JSON-lines session until `shutdown` or EOF (the sharded
     /// counterpart of [`crate::service::Service::serve`]), through the
     /// shared front end ([`crate::service::session::serve_session`]) on a
-    /// virtual clock.  On bare EOF the pending batch is flushed so every
-    /// submit got its response; returns whether a shutdown was requested
-    /// (callers drain on EOF).
+    /// virtual clock.  On bare EOF the pending batch and the pending DAG
+    /// are flushed so every submit got its response; returns whether a
+    /// shutdown was requested (callers drain on EOF).
     pub fn serve<R: BufRead, W: Write>(&mut self, reader: R, writer: W) -> Result<bool, String> {
         serve_session(self, &VirtualClock, reader, writer)
     }
@@ -1743,7 +2222,7 @@ impl ServiceCore for ShardedService {
     }
 
     fn flush_pending(&mut self) -> Vec<Json> {
-        self.flush()
+        self.flush_batches()
     }
 
     fn tick(&mut self, now: f64) -> Vec<Json> {
@@ -2466,5 +2945,88 @@ mod tests {
         let mut armed = svc(2, 1.0);
         armed.set_overload(Some(1_000_000));
         assert_eq!(drive(&mut plain), drive(&mut armed));
+    }
+
+    #[test]
+    fn dag_chain_holds_successors_across_shards() {
+        let mut service = svc(2, 1.0);
+        let dep = |d: Vec<usize>| SubmitOpts {
+            deps: Some(d),
+            ..SubmitOpts::default()
+        };
+        // identical models so the chain's critical path is exactly
+        // 2·t_min against each member's 2·t_star window
+        let root = mk_task(0, 0.0, 0.5, 10.0);
+        let mut child = root.clone();
+        child.id = 1;
+        assert!(service.submit_with(root, dep(vec![])).is_empty());
+        assert!(service.submit_with(child, dep(vec![0])).is_empty());
+        // a deps-free submit is the graph's flush point: both member
+        // responses release first, its own defers to the batch window
+        // (u = 0.1 keeps it roomy after its arrival clamps to the clock
+        // the graph's placement advanced)
+        let mut tail = mk_task(0, 0.0, 0.1, 10.0);
+        tail.id = 2;
+        let out = service.submit_with(tail, SubmitOpts::default());
+        assert_eq!(out.len(), 2);
+        assert_eq!(out[0].get("id").unwrap().as_f64(), Some(0.0));
+        assert_eq!(out[0].get("admitted"), Some(&Json::Bool(true)));
+        assert!(out[0].get("released").is_none(), "roots start unheld");
+        let child_resp = &out[1];
+        assert_eq!(child_resp.get("id").unwrap().as_f64(), Some(1.0));
+        assert_eq!(child_resp.get("admitted"), Some(&Json::Bool(true)));
+        let root_finish = out[0].get("finish").unwrap().as_f64().unwrap();
+        let released = child_resp.get("released").unwrap().as_f64().unwrap();
+        assert!(released >= root_finish - 1e-6, "held past the predecessor");
+        let child_start = child_resp.get("start").unwrap().as_f64().unwrap();
+        assert!(child_start >= root_finish - 1e-6, "started after the root");
+        assert_eq!(child_resp.get("deadline_met"), Some(&Json::Bool(true)));
+        let m = service.metrics_json();
+        assert_eq!(m.get("dags_admitted").unwrap().as_f64(), Some(1.0));
+        assert_eq!(m.get("dags_rejected").unwrap().as_f64(), Some(0.0));
+        assert_eq!(m.get("released").unwrap().as_f64(), Some(1.0));
+        let fin = service.shutdown();
+        let snap = fin.last().unwrap();
+        assert_eq!(snap.get("admitted").unwrap().as_f64(), Some(3.0));
+        assert_eq!(snap.get("violations").unwrap().as_f64(), Some(0.0));
+    }
+
+    #[test]
+    fn dag_graph_errors_reject_atomically_sharded() {
+        let mut service = svc(2, 1.0);
+        let dep = |d: Vec<usize>| SubmitOpts {
+            deps: Some(d),
+            ..SubmitOpts::default()
+        };
+        assert!(service
+            .submit_with(mk_task(0, 0.0, 0.5, 10.0), dep(vec![1]))
+            .is_empty());
+        assert!(service
+            .submit_with(mk_task(1, 0.0, 0.5, 10.0), dep(vec![0]))
+            .is_empty());
+        // a query flushes the graph: the cycle rejects both members
+        // atomically, then the query sees the rejected record
+        let (out, stop) = service.handle(Request::Query { id: 0 });
+        assert!(!stop);
+        assert_eq!(out.len(), 3, "two member rejects precede the query");
+        for r in &out[..2] {
+            assert_eq!(r.get("admitted"), Some(&Json::Bool(false)));
+            assert_eq!(r.get("reason").unwrap().as_str(), Some("cyclic-deps"));
+        }
+        assert_eq!(out[2].get("status").unwrap().as_str(), Some("rejected"));
+        // an unknown dependency rejects with the offending edge
+        assert!(service
+            .submit_with(mk_task(2, 0.0, 0.5, 10.0), dep(vec![99]))
+            .is_empty());
+        let fin = service.shutdown();
+        assert_eq!(fin.len(), 2, "the held member then the snapshot");
+        assert_eq!(fin[0].get("reason").unwrap().as_str(), Some("unknown-dep"));
+        assert_eq!(fin[0].get("dep").unwrap().as_f64(), Some(99.0));
+        let snap = fin.last().unwrap();
+        assert_eq!(snap.get("admitted").unwrap().as_f64(), Some(0.0));
+        let m = service.metrics_json();
+        assert_eq!(m.get("dags_admitted").unwrap().as_f64(), Some(0.0));
+        assert_eq!(m.get("dags_rejected").unwrap().as_f64(), Some(2.0));
+        assert_eq!(m.get("rejected_dag").unwrap().as_f64(), Some(3.0));
     }
 }

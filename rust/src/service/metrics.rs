@@ -123,6 +123,17 @@ pub struct Snapshot {
     /// Submits shed by degraded-mode admission (the tightened
     /// cheapest-feasible gate under sustained overload).  Metrics-only.
     pub shed_degraded: u64,
+    /// DAG members rejected atomically with their graph (`unknown-dep` /
+    /// `cyclic-deps` / `dag-infeasible`).  Feeds the frozen schema's
+    /// `submitted` sum but renders on the `metrics` body only, like
+    /// `migrated` — deps-free runs must stay byte-identical.
+    pub rejected_dag: u64,
+    /// Whole DAGs admitted (one per graph).  Metrics-only.
+    pub dags_admitted: u64,
+    /// Whole DAGs rejected (one per graph).  Metrics-only.
+    pub dags_rejected: u64,
+    /// DAG members released after a dependency hold.  Metrics-only.
+    pub released: u64,
 }
 
 impl Snapshot {
@@ -185,6 +196,10 @@ impl Snapshot {
             evicted: adm.evicted_infeasible,
             shed: adm.shed_overloaded,
             shed_degraded: adm.shed_degraded,
+            rejected_dag: adm.rejected_dag,
+            dags_admitted: adm.dags_admitted,
+            dags_rejected: adm.dags_rejected,
+            released: adm.released,
         }
     }
 
@@ -275,6 +290,10 @@ impl Snapshot {
             m.evicted += p.evicted;
             m.shed += p.shed;
             m.shed_degraded += p.shed_degraded;
+            m.rejected_dag += p.rejected_dag;
+            m.dags_admitted += p.dags_admitted;
+            m.dags_rejected += p.dags_rejected;
+            m.released += p.released;
         }
         m.shards = parts.len();
         m
@@ -375,6 +394,19 @@ impl Snapshot {
             "shed_degraded".to_string(),
             Json::Num(self.shed_degraded as f64),
         );
+        m.insert(
+            "rejected_dag".to_string(),
+            Json::Num(self.rejected_dag as f64),
+        );
+        m.insert(
+            "dags_admitted".to_string(),
+            Json::Num(self.dags_admitted as f64),
+        );
+        m.insert(
+            "dags_rejected".to_string(),
+            Json::Num(self.dags_rejected as f64),
+        );
+        m.insert("released".to_string(), Json::Num(self.released as f64));
         Json::Obj(m)
     }
 }
@@ -515,6 +547,10 @@ mod tests {
             evicted: 1,
             shed: 4,
             shed_degraded: 2,
+            rejected_dag: 3,
+            dags_admitted: 2,
+            dags_rejected: 1,
+            released: 5,
             ..Snapshot::default()
         };
         let b = Snapshot {
@@ -524,6 +560,8 @@ mod tests {
             queued_by_type: vec![0, 7],
             migrated: 1,
             shed: 1,
+            dags_admitted: 1,
+            released: 2,
             ..Snapshot::default()
         };
         let m = Snapshot::merge(&[a, b]);
@@ -536,6 +574,10 @@ mod tests {
         assert_eq!(m.evicted, 1);
         assert_eq!(m.shed, 5);
         assert_eq!(m.shed_degraded, 2);
+        assert_eq!(m.rejected_dag, 3);
+        assert_eq!(m.dags_admitted, 3);
+        assert_eq!(m.dags_rejected, 1);
+        assert_eq!(m.released, 7);
         // the frozen snapshot schema must not grow the new keys...
         let frozen = m.to_json();
         assert!(frozen.get("cache_hits").is_none());
@@ -544,6 +586,10 @@ mod tests {
         assert!(frozen.get("evicted").is_none());
         assert!(frozen.get("shed").is_none());
         assert!(frozen.get("shed_degraded").is_none());
+        assert!(frozen.get("rejected_dag").is_none());
+        assert!(frozen.get("dags_admitted").is_none());
+        assert!(frozen.get("dags_rejected").is_none());
+        assert!(frozen.get("released").is_none());
         // ...while the metrics rendering is a strict superset of it
         let obs = m.to_json_obs();
         assert_eq!(obs.get("cache_hits").unwrap().as_f64(), Some(15.0));
@@ -552,6 +598,10 @@ mod tests {
         assert_eq!(obs.get("evicted").unwrap().as_f64(), Some(1.0));
         assert_eq!(obs.get("shed").unwrap().as_f64(), Some(5.0));
         assert_eq!(obs.get("shed_degraded").unwrap().as_f64(), Some(2.0));
+        assert_eq!(obs.get("rejected_dag").unwrap().as_f64(), Some(3.0));
+        assert_eq!(obs.get("dags_admitted").unwrap().as_f64(), Some(3.0));
+        assert_eq!(obs.get("dags_rejected").unwrap().as_f64(), Some(1.0));
+        assert_eq!(obs.get("released").unwrap().as_f64(), Some(7.0));
         let q = obs.get("queued_by_type").unwrap().as_arr().unwrap();
         assert_eq!(q.len(), 2);
         assert_eq!(q[1].as_f64(), Some(7.0));

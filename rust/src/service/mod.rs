@@ -12,6 +12,12 @@
 //!   at the door instead of poisoning the queue.
 //! * [`protocol`] — the JSON-lines wire format (`submit` / `query` /
 //!   `snapshot` / `shutdown`), schema-compatible with workload files.
+//! * [`dag`] — dependency-aware workloads: a `submit` carrying `deps`
+//!   buffers into a pending graph that admits atomically — dependency
+//!   resolution, cycle detection, critical-path feasibility against the
+//!   cached `t_min` bounds, and energy-aware slack distribution of the
+//!   end-to-end deadline into per-member release/deadline windows; both
+//!   front ends hold successors until predecessor departure.
 //! * [`metrics`] — live energy decomposition + admission counters, with
 //!   per-shard fragment merging.
 //! * [`journal`] — the structured JSONL event journal behind `--journal`:
@@ -46,6 +52,7 @@
 pub mod admission;
 pub mod clock;
 pub mod daemon;
+pub mod dag;
 pub mod dispatch;
 pub mod events;
 pub mod journal;
@@ -59,6 +66,7 @@ pub mod transport;
 pub use admission::{AdmissionController, Verdict};
 pub use clock::{Clock, VirtualClock, WallClock};
 pub use daemon::{RecordStore, Service, TaskRecord};
+pub use dag::{DagError, DagNode, DagPlan};
 pub use dispatch::{RoutePolicy, ShardedService};
 pub use events::EventEngine;
 pub use journal::Journal;

@@ -7,6 +7,7 @@
 //!                        "model":{"p0":53.4,"gamma":22.12,"c":100.4,
 //!                                 "d":54.18,"delta":0.182,"t0":8.3}}}
 //! {"op":"submit","task":{...},"gpu_type":"bigGPU","g":4}
+//! {"op":"submit","task":{...},"deps":[1,2]}
 //! {"op":"query","id":1}
 //! {"op":"snapshot"}
 //! {"op":"metrics"}
@@ -20,6 +21,14 @@
 //! resolved to the feasible-minimum-energy type per task — and `g`
 //! (default 1) is the gang width: pairs the task occupies simultaneously
 //! on one server (see `docs/PROTOCOL.md`).
+//!
+//! A `deps` field (a list of task ids, possibly empty) marks the task as
+//! a member of the pending DAG ([`crate::service::dag`]): the service
+//! buffers members and admits the whole graph atomically at the next
+//! flush point, holding each member until its dependencies depart.  An
+//! absent `deps` field is NOT the same as `deps: []` — absent means an
+//! independent task (the original semantics, byte-identical responses),
+//! `[]` means a DAG root.
 //!
 //! Any request may carry a `rid` field (any JSON value): the matching
 //! response echoes it verbatim, which is how multiplexed clients
@@ -60,6 +69,11 @@ pub struct SubmitOpts {
     pub gpu_type: TypePref,
     /// Gang width `g >= 1`.
     pub g: usize,
+    /// DAG membership: `Some(ids)` buffers the task as a member of the
+    /// pending graph, held until the named dependencies depart
+    /// ([`crate::service::dag`]).  `Some(vec![])` is a DAG root;
+    /// `None` (an absent wire field) is an independent task.
+    pub deps: Option<Vec<usize>>,
 }
 
 impl Default for SubmitOpts {
@@ -67,6 +81,7 @@ impl Default for SubmitOpts {
         SubmitOpts {
             gpu_type: TypePref::Any,
             g: 1,
+            deps: None,
         }
     }
 }
@@ -74,7 +89,7 @@ impl Default for SubmitOpts {
 impl SubmitOpts {
     /// Whether these are the plain (paper base-case) semantics.
     pub fn is_default(&self) -> bool {
-        self.g == 1 && self.gpu_type == TypePref::Any
+        self.g == 1 && self.gpu_type == TypePref::Any && self.deps.is_none()
     }
 }
 
@@ -216,7 +231,28 @@ pub fn parse_request_rid(line: &str) -> Result<Option<(Request, Option<Json>)>, 
                     g as usize
                 }
             };
-            Request::Submit(task, SubmitOpts { gpu_type, g })
+            let deps = match j.get("deps") {
+                None => None,
+                Some(Json::Arr(items)) => {
+                    let mut ids = Vec::with_capacity(items.len());
+                    for v in items {
+                        let d = v
+                            .as_f64()
+                            .ok_or("submit: 'deps' entries must be task ids")?;
+                        // same rationale as query ids: a saturating cast
+                        // would silently point -1 or 7.9 at another task
+                        if !(d.fract() == 0.0 && (0.0..=usize::MAX as f64).contains(&d)) {
+                            return Err(format!(
+                                "submit: 'deps' entries must be non-negative integers, got {d}"
+                            ));
+                        }
+                        ids.push(d as usize);
+                    }
+                    Some(ids)
+                }
+                Some(_) => return Err("submit: 'deps' must be an array of task ids".into()),
+            };
+            Request::Submit(task, SubmitOpts { gpu_type, g, deps })
         }
         "query" => {
             let id = j
@@ -346,6 +382,36 @@ mod tests {
         assert!(parse_request(&line("-2")).is_err());
         assert!(parse_request(&line("2.5")).is_err());
         assert!(parse_request(&line("1")).unwrap().is_some());
+    }
+
+    #[test]
+    fn submit_parses_deps_and_rejects_bad_ids() {
+        let t = demo_task();
+        let line = |deps: &str| {
+            format!(
+                "{{\"op\":\"submit\",\"task\":{},\"deps\":{deps}}}",
+                task_to_json(&t).render_compact()
+            )
+        };
+        match parse_request(&line("[1,2,2]")).unwrap().unwrap() {
+            Request::Submit(_, opts) => {
+                assert_eq!(opts.deps, Some(vec![1, 2, 2]));
+                assert!(!opts.is_default(), "deps-carrying submits are not the base case");
+            }
+            other => panic!("wrong request: {other:?}"),
+        }
+        // an empty list is a DAG root, distinct from an absent field
+        match parse_request(&line("[]")).unwrap().unwrap() {
+            Request::Submit(_, opts) => {
+                assert_eq!(opts.deps, Some(vec![]));
+                assert!(!opts.is_default());
+            }
+            other => panic!("wrong request: {other:?}"),
+        }
+        assert!(parse_request(&line("[-1]")).is_err());
+        assert!(parse_request(&line("[1.5]")).is_err());
+        assert!(parse_request(&line("[\"a\"]")).is_err());
+        assert!(parse_request(&line("7")).is_err());
     }
 
     #[test]

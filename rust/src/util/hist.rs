@@ -267,6 +267,58 @@ mod tests {
     }
 
     #[test]
+    fn single_sample_answers_every_quantile() {
+        // one sample: every quantile clamps into [min, max] = the sample
+        let mut h = Hist::new();
+        h.record(3.7);
+        assert_eq!(h.n(), 1);
+        for q in [0.0, 0.5, 0.99, 0.999, 1.0] {
+            assert_eq!(h.quantile(q), 3.7, "q={q}");
+        }
+        assert_eq!(h.mean(), 3.7);
+        assert_eq!(h.min(), 3.7);
+        assert_eq!(h.max(), 3.7);
+    }
+
+    #[test]
+    fn p999_clamps_to_the_observed_max() {
+        // 99 small samples + one far outlier: the p999 rank lands in the
+        // outlier's bucket, whose upper edge overshoots the sample — the
+        // read-back must clamp to the observed max, never past it
+        let mut h = Hist::new();
+        for _ in 0..99 {
+            h.record(1.0);
+        }
+        h.record(777.0);
+        assert_eq!(h.quantile(0.999), 777.0);
+        assert_eq!(h.quantile(1.0), 777.0);
+        // and the p50 stays in the bulk, clamped no lower than min
+        let p50 = h.quantile(0.5);
+        assert!((1.0..=1.2).contains(&p50), "p50 {p50} outside the bulk bucket");
+    }
+
+    #[test]
+    fn merging_disjoint_ranges_keeps_both_tails() {
+        // a spans [1e-4, 1e-2], b spans [1e2, 1e4]: no shared bucket
+        let mut a = Hist::new();
+        let mut b = Hist::new();
+        for i in 1..=100 {
+            a.record(1e-4 * i as f64);
+            b.record(1e2 * i as f64);
+        }
+        let (an, bn) = (a.n(), b.n());
+        a.merge(&b);
+        assert_eq!(a.n(), an + bn);
+        assert_eq!(a.min(), 1e-4);
+        assert_eq!(a.max(), 1e4);
+        // the median sits at the junction: within one bucket width of
+        // a's top sample, far below every b sample
+        assert!(a.quantile(0.5) <= 1e-2 * 1.2, "median crossed the gap");
+        // and the upper tail is entirely b's
+        assert!(a.quantile(0.99) >= 1e2, "upper tail lost b's range");
+    }
+
+    #[test]
     fn empty_histogram_summarizes_to_zeros() {
         let h = Hist::new();
         assert!(h.is_empty());

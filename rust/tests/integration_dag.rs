@@ -1,0 +1,519 @@
+//! Acceptance battery for the DAG workload subsystem.
+//!
+//! The property anchors from the issue:
+//!
+//! * **Byte identity.** Deps-free traffic must flow through the
+//!   DAG-aware service exactly as it did before the subsystem existed;
+//!   a rejected DAG episode spliced into a deps-free stream leaves every
+//!   other response line byte-for-byte unchanged (daemon and sharded).
+//! * **Crash recovery.** A journaled session carrying DAG traffic —
+//!   including a graph still buffered, unflushed, at the kill instant —
+//!   recovers bit-identically: responses and the new journal equal the
+//!   uninterrupted run's.
+//! * **Energy.** A linear chain admitted as one DAG books no more
+//!   running energy than the same tasks admitted independently with the
+//!   end-to-end deadline split evenly (randomized task models,
+//!   theta = 1.0, comparing `e_run`).
+
+use dvfs_sched::config::SimConfig;
+use dvfs_sched::ext::trace::task_to_json;
+use dvfs_sched::runtime::Solver;
+use dvfs_sched::service::{
+    journal_requests, serve_session, Journal, RoutePolicy, Service, ServiceCore, ShardedService,
+    VirtualClock,
+};
+use dvfs_sched::sim::online::OnlinePolicyKind;
+use dvfs_sched::tasks::LIBRARY;
+use dvfs_sched::util::json::{num, obj, Json};
+use dvfs_sched::util::proptest::{check, Config};
+use dvfs_sched::util::Rng;
+use dvfs_sched::Task;
+use std::io::{self, BufRead, Read, Write};
+use std::sync::{Arc, Mutex};
+
+fn small_cfg() -> SimConfig {
+    let mut cfg = SimConfig::default();
+    cfg.cluster.total_pairs = 32;
+    cfg.cluster.pairs_per_server = 2;
+    cfg.theta = 0.9;
+    cfg
+}
+
+fn mk_task(id: usize, arrival: f64, u: f64, k: f64) -> Task {
+    let model = LIBRARY[id % LIBRARY.len()].model.scaled(k);
+    Task {
+        id,
+        app: id % LIBRARY.len(),
+        model,
+        arrival,
+        deadline: arrival + model.t_star() / u,
+        u,
+    }
+}
+
+/// Render one submit request line, optionally carrying a `deps` list
+/// (`Some(vec![])` marks a DAG root; `None` is an independent task).
+fn submit_line(task: &Task, deps: Option<Vec<usize>>) -> String {
+    let mut fields = vec![
+        ("op", Json::Str("submit".into())),
+        ("task", task_to_json(task)),
+    ];
+    if let Some(d) = deps {
+        fields.push((
+            "deps",
+            Json::Arr(d.into_iter().map(|i| num(i as f64)).collect()),
+        ));
+    }
+    obj(fields).render_compact()
+}
+
+fn serve_lines<C: ServiceCore>(svc: &mut C, text: &str) -> Vec<String> {
+    let mut out = Vec::new();
+    serve_session(svc, &VirtualClock, text.as_bytes(), &mut out).unwrap();
+    String::from_utf8(out)
+        .unwrap()
+        .lines()
+        .map(str::to_string)
+        .collect()
+}
+
+#[test]
+fn rejected_dag_episode_leaves_deps_free_responses_byte_identical() {
+    // deps-free base stream with a mid-stream query (a DAG flush point),
+    // ending at EOF so the comparison sees no counter-bearing snapshot
+    let mut rng = Rng::new(17);
+    let mut now = 0.0;
+    let mut base: Vec<String> = Vec::new();
+    for id in 0..12 {
+        now += rng.uniform(0.2, 1.2);
+        let task = mk_task(id, now, rng.uniform(0.1, 0.6), rng.int_range(5, 30) as f64);
+        base.push(submit_line(&task, None));
+        if id == 5 {
+            base.push("{\"op\":\"query\",\"id\":3}".into());
+        }
+    }
+    let k = base
+        .iter()
+        .position(|l| l.contains("\"query\""))
+        .expect("flush-point query present");
+    // the spliced episode: a cyclic two-member graph, flushed by
+    // repeating the very same query — buffer, atomic reject, empty buffer
+    let mut cyc = Vec::new();
+    for (id, dep) in [(900usize, 901usize), (901, 900)] {
+        let mut t = mk_task(id, now, 0.5, 10.0);
+        t.deadline = t.arrival + 1e4; // comfortably past every gate
+        cyc.push(submit_line(&t, Some(vec![dep])));
+    }
+    let mut augmented = base.clone();
+    augmented.splice(k + 1..k + 1, cyc.into_iter().chain([base[k].clone()]));
+
+    let to_text = |ls: &[String]| ls.iter().map(|l| format!("{l}\n")).collect::<String>();
+    let cfg = small_cfg();
+    let solver = Solver::native();
+    let mut runs: Vec<(Vec<String>, Vec<String>)> = Vec::new();
+    {
+        let mut a = Service::new(&cfg, OnlinePolicyKind::Edl, true, &solver);
+        let mut b = Service::new(&cfg, OnlinePolicyKind::Edl, true, &solver);
+        runs.push((
+            serve_lines(&mut a, &to_text(&base)),
+            serve_lines(&mut b, &to_text(&augmented)),
+        ));
+    }
+    {
+        let mk = || {
+            ShardedService::new(
+                &cfg,
+                OnlinePolicyKind::Edl,
+                true,
+                2,
+                RoutePolicy::LeastLoaded,
+                1.0,
+                false,
+            )
+            .unwrap()
+        };
+        let mut a = mk();
+        let mut b = mk();
+        runs.push((
+            serve_lines(&mut a, &to_text(&base)),
+            serve_lines(&mut b, &to_text(&augmented)),
+        ));
+    }
+    for (plain, spliced) in runs {
+        assert_eq!(
+            spliced.len(),
+            plain.len() + 3,
+            "the episode answers exactly its own three lines"
+        );
+        for extra in &spliced[k + 1..k + 3] {
+            assert!(
+                extra.contains("\"cyclic-deps\""),
+                "atomic typed reject: {extra}"
+            );
+        }
+        assert_eq!(
+            spliced[k + 3],
+            plain[k],
+            "the duplicated flush query answers identically"
+        );
+        let mut stripped = spliced.clone();
+        stripped.drain(k + 1..k + 4);
+        assert_eq!(
+            stripped, plain,
+            "deps-free response lines must be byte-identical around a rejected DAG"
+        );
+    }
+}
+
+/// A journal sink readable after the service is dropped (line-granular
+/// flushing keeps every written line visible with no drain).
+#[derive(Clone, Default)]
+struct SharedBuf(Arc<Mutex<Vec<u8>>>);
+
+impl SharedBuf {
+    fn contents(&self) -> String {
+        String::from_utf8(self.0.lock().unwrap().clone()).unwrap()
+    }
+}
+
+impl Write for SharedBuf {
+    fn write(&mut self, buf: &[u8]) -> io::Result<usize> {
+        self.0.lock().unwrap().extend_from_slice(buf);
+        Ok(buf.len())
+    }
+    fn flush(&mut self) -> io::Result<()> {
+        Ok(())
+    }
+}
+
+/// A reader that delivers its bytes and then fails like a severed pipe —
+/// no EOF, so no graceful pending flush: what `kill -9` looks like to
+/// the core, with a DAG possibly still sitting in the buffer.
+struct KilledPipe<'a> {
+    data: &'a [u8],
+    pos: usize,
+}
+
+impl Read for KilledPipe<'_> {
+    fn read(&mut self, buf: &mut [u8]) -> io::Result<usize> {
+        if self.pos >= self.data.len() {
+            return Err(io::Error::new(io::ErrorKind::ConnectionReset, "killed"));
+        }
+        let n = (self.data.len() - self.pos).min(buf.len());
+        buf[..n].copy_from_slice(&self.data[self.pos..self.pos + n]);
+        self.pos += n;
+        Ok(n)
+    }
+}
+
+impl BufRead for KilledPipe<'_> {
+    fn fill_buf(&mut self) -> io::Result<&[u8]> {
+        if self.pos >= self.data.len() {
+            return Err(io::Error::new(io::ErrorKind::ConnectionReset, "killed"));
+        }
+        Ok(&self.data[self.pos..])
+    }
+    fn consume(&mut self, n: usize) {
+        self.pos += n;
+    }
+}
+
+/// A deterministic session exercising every DAG path: deps-free
+/// preamble, an admitted chain, a diamond holding on an external placed
+/// record, a cyclic reject, an unknown-dep reject, an infeasible chain,
+/// more deps-free traffic, and a shutdown.
+fn dag_session_text(seed: u64) -> String {
+    let mut rng = Rng::new(seed);
+    let mut out = String::new();
+    let mut now = 0.0;
+    for id in 0..6 {
+        now += rng.uniform(0.2, 1.5);
+        let task = mk_task(id, now, rng.uniform(0.1, 0.6), rng.int_range(5, 30) as f64);
+        out.push_str(&submit_line(&task, None));
+        out.push('\n');
+    }
+    out.push_str("{\"op\":\"query\",\"id\":2}\n");
+
+    // an admitted 3-chain under one shared end-to-end window
+    now += rng.uniform(0.2, 1.5);
+    let chain: Vec<Task> = (0..3)
+        .map(|i| mk_task(100 + i, now, 0.5, rng.int_range(5, 30) as f64))
+        .collect();
+    let t_star_max = chain.iter().map(|t| t.model.t_star()).fold(0.0, f64::max);
+    let chain_dl = now + 6.0 * t_star_max;
+    for (i, t) in chain.iter().enumerate() {
+        let mut t = t.clone();
+        t.deadline = chain_dl;
+        t.u = (t.model.t_star() / (chain_dl - now)).min(1.0);
+        let deps = if i == 0 { vec![] } else { vec![100 + i - 1] };
+        out.push_str(&submit_line(&t, Some(deps)));
+        out.push('\n');
+    }
+    out.push_str("{\"op\":\"snapshot\"}\n");
+
+    // a diamond whose root additionally holds on the chain's sink —
+    // an external dependency on an already-placed record
+    now += rng.uniform(0.2, 1.5);
+    let dia: Vec<Task> = (0..4)
+        .map(|i| mk_task(200 + i, now, 0.5, rng.int_range(5, 30) as f64))
+        .collect();
+    let dia_t_star = dia.iter().map(|t| t.model.t_star()).fold(0.0, f64::max);
+    let dia_dl = chain_dl + 8.0 * dia_t_star;
+    let dia_deps = [vec![102], vec![200], vec![200], vec![201, 202]];
+    for (t, deps) in dia.iter().zip(dia_deps) {
+        let mut t = t.clone();
+        t.deadline = dia_dl;
+        t.u = (t.model.t_star() / (dia_dl - t.arrival)).min(1.0);
+        out.push_str(&submit_line(&t, Some(deps)));
+        out.push('\n');
+    }
+    out.push_str("{\"op\":\"query\",\"id\":203}\n");
+
+    // typed rejects: a cycle, an unknown dep, an infeasible chain
+    for (id, dep) in [(300usize, 301usize), (301, 300)] {
+        let mut t = mk_task(id, now, 0.5, 10.0);
+        t.deadline = t.arrival + 1e6; // past every gate at any clock
+        out.push_str(&submit_line(&t, Some(vec![dep])));
+        out.push('\n');
+    }
+    out.push_str("{\"op\":\"query\",\"id\":300}\n");
+    let mut orphan = mk_task(310, now, 0.5, 10.0);
+    orphan.deadline = orphan.arrival + 1e6;
+    out.push_str(&submit_line(&orphan, Some(vec![9999])));
+    out.push('\n');
+    out.push_str("{\"op\":\"query\",\"id\":310}\n");
+    // a chain whose members each fit their window alone but whose
+    // critical-path sum cannot: the atomic dag-infeasible reject (the
+    // far-future arrival pins the window whatever the live clock says)
+    let mut inf = mk_task(320, 1e5, 0.9, 10.0);
+    inf.deadline = 1e5 + 1.5 * inf.model.t_min(&SimConfig::default().interval);
+    let mut inf2 = inf.clone();
+    inf2.id = 321;
+    out.push_str(&submit_line(&inf, Some(vec![])));
+    out.push('\n');
+    out.push_str(&submit_line(&inf2, Some(vec![320])));
+    out.push('\n');
+    out.push_str("{\"op\":\"snapshot\"}\n");
+
+    for id in 12..16 {
+        now += rng.uniform(0.2, 1.5);
+        let task = mk_task(id, now, rng.uniform(0.1, 0.6), rng.int_range(5, 30) as f64);
+        out.push_str(&submit_line(&task, None));
+        out.push('\n');
+    }
+    out.push_str("{\"op\":\"ping\"}\n{\"op\":\"shutdown\"}\n");
+    out
+}
+
+/// Run the kill/recover experiment (see `integration_recovery.rs` for
+/// the uninterrupted-oracle construction): serve the whole session; kill
+/// a fresh run after `kill_line` lines keeping only its journal; recover
+/// by chaining the journal's request trace ahead of the remaining lines
+/// as ONE session.  Responses and journal must match the oracle's bytes.
+fn kill_recover_case<C, F>(mut mk: F, session: &str, kill_line: usize)
+where
+    C: ServiceCore,
+    F: FnMut(Journal) -> C,
+{
+    let lines: Vec<&str> = session.lines().collect();
+    assert!(kill_line >= 1 && kill_line < lines.len());
+
+    let full_buf = SharedBuf::default();
+    let mut svc = mk(Journal::to_writer(full_buf.clone()));
+    let mut full_out = Vec::new();
+    serve_session(&mut svc, &VirtualClock, session.as_bytes(), &mut full_out).unwrap();
+    drop(svc);
+
+    let cut: String = lines[..kill_line].iter().map(|l| format!("{l}\n")).collect();
+    let kill_buf = SharedBuf::default();
+    let mut svc = mk(Journal::to_writer(kill_buf.clone()));
+    let mut killed_out = Vec::new();
+    let res = serve_session(
+        &mut svc,
+        &VirtualClock,
+        KilledPipe {
+            data: cut.as_bytes(),
+            pos: 0,
+        },
+        &mut killed_out,
+    );
+    assert!(res.is_err(), "the kill surfaces as a read error, not EOF");
+    drop(svc);
+    assert!(
+        full_out.starts_with(killed_out.as_slice()),
+        "pre-kill responses are a prefix of the oracle stream (kill at {kill_line})"
+    );
+
+    let reqs = journal_requests(&kill_buf.contents()).unwrap();
+    let mut chained = String::new();
+    for r in &reqs {
+        chained.push_str(r);
+        chained.push('\n');
+    }
+    for l in &lines[kill_line..] {
+        chained.push_str(l);
+        chained.push('\n');
+    }
+    let rec_buf = SharedBuf::default();
+    let mut svc = mk(Journal::to_writer(rec_buf.clone()));
+    let mut rec_out = Vec::new();
+    serve_session(&mut svc, &VirtualClock, chained.as_bytes(), &mut rec_out).unwrap();
+
+    assert_eq!(
+        rec_out, full_out,
+        "recovered responses diverge from the uninterrupted run (kill at {kill_line})"
+    );
+    assert_eq!(
+        rec_buf.contents(),
+        full_buf.contents(),
+        "recovered journal diverges from the uninterrupted journal (kill at {kill_line})"
+    );
+}
+
+#[test]
+fn prop_kill_anywhere_recovers_dag_sessions_bit_identically() {
+    // Random kill points over the full DAG session — including kills
+    // that land while a graph is still buffered, unflushed — on both the
+    // daemon and the 2-shard batched dispatcher.
+    check(
+        "DAG kill/recover == uninterrupted",
+        Config {
+            iters: 4,
+            ..Default::default()
+        },
+        |rng| rng.next_u64(),
+        |&seed| {
+            let session = dag_session_text(seed);
+            let n_lines = session.lines().count();
+            let mut kill_rng = Rng::new(seed ^ 0x9E37_79B9_7F4A_7C15);
+            // one random kill plus one aimed mid-chain (members 100/101
+            // submitted, the graph not yet flushed by the snapshot)
+            let mid_chain = session
+                .lines()
+                .position(|l| l.contains("\"id\": 101") || l.contains("\"id\":101"))
+                .expect("chain member line")
+                + 1;
+            let cfg = small_cfg();
+            let solver = Solver::native();
+            for k in [1 + kill_rng.index(n_lines - 1), mid_chain] {
+                kill_recover_case(
+                    |j| {
+                        let mut s = Service::new(&cfg, OnlinePolicyKind::Edl, true, &solver);
+                        s.set_obs(Some(j), None);
+                        s
+                    },
+                    &session,
+                    k,
+                );
+                kill_recover_case(
+                    |j| {
+                        let mut s = ShardedService::new(
+                            &cfg,
+                            OnlinePolicyKind::Edl,
+                            true,
+                            2,
+                            RoutePolicy::LeastLoaded,
+                            1.0,
+                            false,
+                        )
+                        .unwrap();
+                        s.set_obs(Some(j), None);
+                        s
+                    },
+                    &session,
+                    k,
+                );
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_linear_chain_books_no_more_energy_than_even_split() {
+    // The energy anchor, end to end: a k-chain admitted as one DAG with
+    // an end-to-end deadline vs the same tasks admitted independently
+    // with the deadline split evenly.  theta = 1.0 so DRS idle policy is
+    // out of the picture; only running energy is compared.
+    check(
+        "chain DAG e_run <= even-split e_run",
+        Config {
+            iters: 8,
+            ..Default::default()
+        },
+        |rng| rng.next_u64(),
+        |&seed| {
+            let mut rng = Rng::new(seed);
+            let mut cfg = small_cfg();
+            cfg.theta = 1.0;
+            let k = 2 + rng.index(4); // 2..=5 members
+            let arrival = 1.0;
+            let tasks: Vec<Task> = (0..k)
+                .map(|i| mk_task(i, arrival, 0.5, rng.int_range(5, 30) as f64))
+                .collect();
+            let max_tmin = tasks
+                .iter()
+                .map(|t| t.model.t_min(&cfg.interval))
+                .fold(0.0, f64::max);
+            // even split leaves every member a window >= 1.1 x t_min
+            let delta = max_tmin * rng.uniform(1.1, 3.0);
+            let end = arrival + delta * k as f64;
+
+            let mut dag_s = String::new();
+            for (i, t) in tasks.iter().enumerate() {
+                let mut t = t.clone();
+                t.deadline = end;
+                t.u = (t.model.t_star() / (end - arrival)).min(1.0);
+                let deps = if i == 0 { vec![] } else { vec![i - 1] };
+                dag_s.push_str(&submit_line(&t, Some(deps)));
+                dag_s.push('\n');
+            }
+            dag_s.push_str("{\"op\":\"shutdown\"}\n");
+
+            let mut ind_s = String::new();
+            for (i, t) in tasks.iter().enumerate() {
+                let mut t = t.clone();
+                t.arrival = arrival + delta * i as f64;
+                t.deadline = t.arrival + delta;
+                t.u = (t.model.t_star() / delta).min(1.0);
+                ind_s.push_str(&submit_line(&t, None));
+                ind_s.push('\n');
+            }
+            ind_s.push_str("{\"op\":\"shutdown\"}\n");
+
+            let run = |text: &str| -> Result<(f64, f64), String> {
+                let solver = Solver::native();
+                let mut svc = Service::new(&cfg, OnlinePolicyKind::Edl, true, &solver);
+                let mut out = Vec::new();
+                serve_session(&mut svc, &VirtualClock, text.as_bytes(), &mut out)?;
+                let fin = Json::parse(
+                    std::str::from_utf8(&out)
+                        .map_err(|e| e.to_string())?
+                        .lines()
+                        .last()
+                        .ok_or("no shutdown snapshot")?,
+                )?;
+                Ok((
+                    fin.get("e_run").and_then(Json::as_f64).ok_or("no e_run")?,
+                    fin.get("admitted")
+                        .and_then(Json::as_f64)
+                        .ok_or("no admitted")?,
+                ))
+            };
+            let (e_dag, adm_dag) = run(&dag_s)?;
+            let (e_ind, adm_ind) = run(&ind_s)?;
+            if adm_dag != k as f64 || adm_ind != k as f64 {
+                return Err(format!(
+                    "both runs must admit every member: dag {adm_dag}, independent {adm_ind} of {k}"
+                ));
+            }
+            if e_dag > e_ind * (1.0 + 1e-6) + 1e-9 {
+                return Err(format!(
+                    "chain DAG booked more running energy than the even split: \
+                     {e_dag} > {e_ind} (k={k}, delta={delta})"
+                ));
+            }
+            Ok(())
+        },
+    );
+}

@@ -188,6 +188,7 @@ fn prop_gangs_never_split_or_overlap() {
                     SubmitOpts {
                         gpu_type: TypePref::Any,
                         g,
+                        deps: None,
                     },
                 );
             }
@@ -378,6 +379,7 @@ fn typed_chunks_only_land_on_type_owning_pools_even_with_stealing() {
             SubmitOpts {
                 gpu_type: TypePref::Named(name.into()),
                 g: 1 + id % 3,
+                deps: None,
             },
         );
     }

@@ -70,9 +70,11 @@ fn oracle_daemon_output(svc: &mut Service, session: &str) -> (String, bool) {
         match parse_request(line) {
             Ok(None) => continue,
             Ok(Some(req)) => {
-                let (resp, stop) = svc.handle(req);
-                out.push_str(&resp.render_compact());
-                out.push('\n');
+                let (resps, stop) = svc.handle(req);
+                for resp in resps {
+                    out.push_str(&resp.render_compact());
+                    out.push('\n');
+                }
                 if stop {
                     stopped = true;
                     break;

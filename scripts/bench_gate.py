@@ -41,6 +41,7 @@ METRICS = [
     ("submit_latency_p50_us", "lower", 0.75, False),
     ("submit_latency_p99_us", "lower", 1.00, False),
     ("submit_latency_p999_us", "lower", 1.50, False),
+    ("dag_members_per_sec", "higher", 0.50, False),
 ]
 
 
@@ -71,7 +72,13 @@ def main() -> int:
             print(f"{name:<36} {b!s:>12} {'MISSING':>12} {'-':>8}  FAIL")
             continue
         if b is None:
-            print(f"{name:<36} {'(none)':>12} {c:>12.4g} {'-':>8}  skip (no baseline)")
+            # a key the current artifact carries but the baseline lacks is
+            # schema drift, and drift must not silently skip gating
+            failures.append(
+                f"{name}: missing from the baseline — add it to "
+                "BENCH_baseline.json so it stays gated"
+            )
+            print(f"{name:<36} {'MISSING':>12} {c:>12.4g} {'-':>8}  FAIL")
             continue
         if b <= 0:
             print(f"{name:<36} {b:>12.4g} {c:>12.4g} {'-':>8}  skip (degenerate baseline)")
@@ -97,6 +104,24 @@ def main() -> int:
             verdict = "improved"
             improvements.append(name)
         print(f"{name:<36} {b:>12.4g} {c:>12.4g} {delta:>+7.1%}  {verdict}")
+
+    # ungated numeric keys drifting into the artifact fail the same way:
+    # every number the bench records must exist in the baseline, gated or
+    # not, so adding a bench section forces a baseline (and METRICS) look
+    gated = {name for name, _, _, _ in METRICS}
+    for key in sorted(cur):
+        v = cur[key]
+        if (
+            key not in base
+            and key not in gated  # gated metrics already failed above
+            and not key.startswith("_")
+            and isinstance(v, (int, float))
+            and not isinstance(v, bool)
+        ):
+            failures.append(
+                f"{key}: present in the current artifact but missing from "
+                "the baseline — add it to BENCH_baseline.json"
+            )
 
     if improvements:
         print(

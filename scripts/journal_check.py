@@ -22,7 +22,7 @@ Exit status: 0 clean, 1 validation failure, 2 usage/IO error.
 
 Usage:
     python3 scripts/journal_check.py JOURNAL.jsonl [--min-kinds N]
-        [--expect-kind EV ...] [--quiet]
+        [--expect-kind EV ...] [--count-kind EV=N ...] [--quiet]
 """
 
 import argparse
@@ -80,6 +80,12 @@ SCHEMAS = {
     "shed": {"id": (int, float), "retry_after": (int, float)},
     # degraded-admission mode engaging / releasing
     "degrade": {"active": (bool,)},
+    # one pending DAG's atomic admission verdict: member count, whether
+    # the graph admitted, and the typed reason ("admitted" on success)
+    "dag_admit": {"n": (int, float), "ok": (bool,), "reason": (str,)},
+    # a held DAG member released for dispatch once its dependencies
+    # cleared; `deps` counts the edges that were holding it
+    "release": {"id": (int, float), "deps": (int, float)},
 }
 
 
@@ -145,8 +151,23 @@ def main():
         metavar="EV",
         help="require this event kind to appear (repeatable)",
     )
+    ap.add_argument(
+        "--count-kind",
+        action="append",
+        default=[],
+        metavar="EV=N",
+        help="require this event kind to appear exactly N times (repeatable)",
+    )
     ap.add_argument("--quiet", action="store_true", help="only print failures")
     args = ap.parse_args()
+
+    expected_counts = {}
+    for spec in args.count_kind:
+        kind, sep, want = spec.partition("=")
+        if not sep or not kind or not want.isdigit():
+            print(f"error: --count-kind wants EV=N, got '{spec}'", file=sys.stderr)
+            return 2
+        expected_counts[kind] = int(want)
 
     try:
         with open(args.journal, encoding="utf-8") as fh:
@@ -179,6 +200,10 @@ def main():
     for kind in args.expect_kind:
         if kind not in counts:
             errors.append(f"expected event kind '{kind}' never appeared")
+    for kind, want in expected_counts.items():
+        got = counts.get(kind, 0)
+        if got != want:
+            errors.append(f"event kind '{kind}' appeared {got} time(s); want {want}")
 
     if not args.quiet:
         total = sum(counts.values())
