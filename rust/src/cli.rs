@@ -280,6 +280,11 @@ pub struct OverloadOpts {
     /// Bound on the sharded dispatcher's admission backlog (buffered
     /// batch + live shard queues); requires a sharded service.
     pub max_queue_depth: Option<usize>,
+    /// `--request-timeout <slots>`: a pending multiplexed response older
+    /// than this answers with a typed `timeout` error instead of hanging
+    /// its session forever (requires the wall clock — virtual time has
+    /// no "older than"; checked by the caller, which knows the clock).
+    pub request_timeout: Option<f64>,
 }
 
 /// Decode the overload flags shared by `serve` / `replay` / `recover`.
@@ -289,6 +294,7 @@ pub struct OverloadOpts {
 pub fn parse_overload_opts(args: &Args, sharded: bool) -> Result<OverloadOpts, String> {
     let max_pending = args.opt_usize("max-pending")?;
     let max_queue_depth = args.opt_usize("max-queue-depth")?;
+    let request_timeout = args.opt_f64("request-timeout")?;
     if let Some(p) = max_pending {
         if p == 0 {
             return Err("--max-pending must be >= 1".into());
@@ -304,10 +310,36 @@ pub fn parse_overload_opts(args: &Args, sharded: bool) -> Result<OverloadOpts, S
             );
         }
     }
+    if let Some(t) = request_timeout {
+        if !(t.is_finite() && t > 0.0) {
+            return Err(format!("--request-timeout must be positive, got {t}"));
+        }
+    }
     Ok(OverloadOpts {
         max_pending,
         max_queue_depth,
+        request_timeout,
     })
+}
+
+/// Decode `--chaos seed[:panic=p,stall=s,drop=d]` — deterministic
+/// seeded fault injection into the sharded dispatcher (worker panics,
+/// stalls, dropped replies; see `docs/RELIABILITY.md`).  `Ok(None)` when
+/// the flag is absent; the injection points live in the dispatcher's
+/// chunk path, so asking for chaos without `--shards` is an error.
+pub fn parse_chaos_opt(
+    args: &Args,
+    sharded: bool,
+) -> Result<Option<crate::service::ChaosSpec>, String> {
+    match args.opt_str("chaos") {
+        None => Ok(None),
+        Some(spec) => {
+            if !sharded {
+                return Err("--chaos requires the sharded dispatcher (add --shards N)".into());
+            }
+            crate::service::ChaosSpec::parse(&spec).map(Some)
+        }
+    }
 }
 
 /// Parse `--fail-at slot:server[,slot:server...]` into `(slot, server)`
@@ -541,6 +573,33 @@ mod tests {
         assert!(parse_overload_opts(&d, false).is_err());
         let e = Args::parse(&argv("serve --max-queue-depth 0")).unwrap();
         assert!(parse_overload_opts(&e, true).is_err());
+        // a request timeout rides the same option block
+        let f = Args::parse(&argv("serve --request-timeout 5")).unwrap();
+        let o = parse_overload_opts(&f, false).unwrap();
+        assert_eq!(o.request_timeout, Some(5.0));
+        f.finish().unwrap();
+        let g = Args::parse(&argv("serve --request-timeout 0")).unwrap();
+        assert!(parse_overload_opts(&g, false).is_err());
+        let h = Args::parse(&argv("serve --request-timeout -2")).unwrap();
+        assert!(parse_overload_opts(&h, false).is_err());
+    }
+
+    #[test]
+    fn chaos_opt_parses_and_requires_shards() {
+        let a = Args::parse(&argv("serve")).unwrap();
+        assert!(parse_chaos_opt(&a, false).unwrap().is_none());
+        a.finish().unwrap();
+        let b = Args::parse(&argv("serve --shards 2 --chaos 7:panic=0.1,drop=0.05")).unwrap();
+        let spec = parse_chaos_opt(&b, true).unwrap().unwrap();
+        assert_eq!(spec.seed, 7);
+        assert_eq!(spec.panic, 0.1);
+        assert_eq!(spec.drop, 0.05);
+        // injection points live in the sharded dispatcher
+        let c = Args::parse(&argv("serve --chaos 7")).unwrap();
+        assert!(parse_chaos_opt(&c, false).is_err());
+        // malformed specs fail loudly
+        let d = Args::parse(&argv("serve --shards 2 --chaos banana")).unwrap();
+        assert!(parse_chaos_opt(&d, true).is_err());
     }
 
     #[test]

@@ -19,8 +19,9 @@
 //! AOT-compiled XLA artifacts in `artifacts/`.
 
 use dvfs_sched::cli::{
-    apply_overrides, parse_fail_at, parse_front_end_opts, parse_obs_opts, parse_online_policy,
-    parse_overload_opts, parse_shard_opts, Args, FrontEndOpts, ObsOpts, OverloadOpts, ShardOpts,
+    apply_overrides, parse_chaos_opt, parse_fail_at, parse_front_end_opts, parse_obs_opts,
+    parse_online_policy, parse_overload_opts, parse_shard_opts, Args, FrontEndOpts, ObsOpts,
+    OverloadOpts, ShardOpts,
 };
 use dvfs_sched::config::SimConfig;
 use dvfs_sched::experiments::{self, ExpCtx};
@@ -96,12 +97,17 @@ fn print_help() {
          metrics + per-line fsync; the `metrics` request works either\n               \
          way — see docs/OBSERVABILITY.md)\n\n\
          overload flags (serve/replay/recover): --max-pending N --max-queue-depth N\n               \
-         (bound the mux pending-response FIFO / the dispatcher's admission\n               \
-         backlog; excess submits get a typed 'overloaded' reject with a\n               \
-         retry_after hint — see docs/ARCHITECTURE.md §Backpressure)\n\n\
+         --request-timeout SLOTS   (bound the mux pending-response FIFO /\n               \
+         the dispatcher's admission backlog / the age of a pending response\n               \
+         on the wall clock; excess or stalled requests get a typed reject\n               \
+         with a retry_after hint — see docs/RELIABILITY.md)\n\n\
          fault flags (replay/recover): --fail-at slot:server[,...]   (inject\n               \
          fail_server requests at arrival slots; live sessions can send\n               \
          fail_server / fail_pair directly — see docs/PROTOCOL.md)\n\n\
+         chaos flags (serve/replay, sharded): --chaos seed[:panic=p,stall=s,drop=d]\n               \
+         (deterministic seeded fault injection per dispatched chunk; the\n               \
+         supervisor restarts panicked shard workers and answers orphaned\n               \
+         requests with typed retryable errors — see docs/RELIABILITY.md)\n\n\
          scenario flags (serve/replay): --cluster-spec name:servers:power:speed[,...]\n               \
          (heterogeneous GPU types; submits may then carry \"gpu_type\"\n               \
          and a gang width \"g\" — see docs/PROTOCOL.md)\n\n\
@@ -426,19 +432,22 @@ fn cmd_workload(args: &Args) -> Result<(), String> {
 /// `max_pending` bounds the multiplexer's pending-response FIFO
 /// (`--max-pending`); the synchronous single-session paths answer every
 /// request before reading the next, so the bound only arms the
-/// multiplexed listener.
+/// multiplexed listener.  `request_timeout` (wall clock only) ages that
+/// FIFO: claims older than the bound get a typed retryable `timeout`
+/// error instead of stalling the session behind a lost response.
 fn serve_front_end<C, R>(
     core: &mut C,
     fe: &FrontEndOpts,
     replay: Option<R>,
     prefix: Option<String>,
     max_pending: Option<usize>,
+    request_timeout: Option<f64>,
 ) -> Result<bool, String>
 where
     C: dvfs_sched::service::ServiceCore + ?Sized,
     R: std::io::BufRead,
 {
-    use dvfs_sched::service::{serve_mux_bounded, serve_session, ListenAddr};
+    use dvfs_sched::service::{serve_mux_timeout, serve_session, ListenAddr};
     use std::io::{Cursor, Read};
     let clock = fe.clock();
     let stdout = std::io::stdout();
@@ -463,7 +472,14 @@ where
             }
             let listener = fe.listen.bind()?;
             let hello = fe.listen != ListenAddr::Stdio;
-            let res = serve_mux_bounded(core, clock.as_ref(), listener, hello, max_pending);
+            let res = serve_mux_timeout(
+                core,
+                clock.as_ref(),
+                listener,
+                hello,
+                max_pending,
+                request_timeout,
+            );
             if let ListenAddr::Unix(path) = &fe.listen {
                 // the acceptor may still hold the fd; removing the path
                 // is what frees the address for the next daemon
@@ -486,6 +502,7 @@ fn run_service_session<R: std::io::BufRead>(
     fe: &FrontEndOpts,
     obs: &ObsOpts,
     ov: &OverloadOpts,
+    chaos: Option<dvfs_sched::service::ChaosSpec>,
     replay: Option<R>,
     recover_prefix: Option<String>,
     source: &str,
@@ -554,6 +571,15 @@ fn run_service_session<R: std::io::BufRead>(
             )?;
             svc.set_obs(journal, obs.metrics_every);
             svc.set_overload(ov.max_queue_depth);
+            if let Some(sp) = &chaos {
+                eprintln!(
+                    "chaos: seed {} — panic {:.3} / stall {:.3} / drop {:.3} per \
+                     dispatched chunk (supervisor restarts panicked workers; \
+                     orphaned requests get typed retryable errors)",
+                    sp.seed, sp.panic, sp.stall, sp.drop,
+                );
+            }
+            svc.set_chaos(chaos);
             if ov.max_pending.is_some() || ov.max_queue_depth.is_some() {
                 let show = |v: Option<usize>| v.map_or_else(|| "off".to_string(), |n| n.to_string());
                 eprintln!(
@@ -576,7 +602,14 @@ fn run_service_session<R: std::io::BufRead>(
                 if o.steal { "on" } else { "off" },
                 fe.clock_name(),
             );
-            let shutdown = serve_front_end(&mut svc, fe, replay, recover_prefix, ov.max_pending)?;
+            let shutdown = serve_front_end(
+                &mut svc,
+                fe,
+                replay,
+                recover_prefix,
+                ov.max_pending,
+                ov.request_timeout,
+            )?;
             if !shutdown {
                 for line in svc.shutdown() {
                     println!("{}", line.render_compact());
@@ -602,7 +635,14 @@ fn run_service_session<R: std::io::BufRead>(
                      'overloaded' reject with a retry_after hint"
                 );
             }
-            let shutdown = serve_front_end(&mut svc, fe, replay, recover_prefix, ov.max_pending)?;
+            let shutdown = serve_front_end(
+                &mut svc,
+                fe,
+                replay,
+                recover_prefix,
+                ov.max_pending,
+                ov.request_timeout,
+            )?;
             if !shutdown {
                 println!("{}", svc.shutdown().render_compact());
             }
@@ -624,7 +664,15 @@ fn cmd_serve(args: &Args) -> Result<(), String> {
     // typed fleets are auto-upgraded to the sharded service below, so the
     // dispatcher bound is enforceable there too
     let ov = parse_overload_opts(args, opts.is_some() || !cfg.cluster.types.is_empty())?;
+    let chaos = parse_chaos_opt(args, opts.is_some() || !cfg.cluster.types.is_empty())?;
     args.finish()?;
+    if ov.request_timeout.is_some() && !fe.wall {
+        return Err(
+            "--request-timeout ages pending responses against wall time; \
+             it requires --clock wall"
+                .into(),
+        );
+    }
 
     let source = match &fe.listen {
         dvfs_sched::service::ListenAddr::Stdio => "stdio".to_string(),
@@ -639,6 +687,7 @@ fn cmd_serve(args: &Args) -> Result<(), String> {
         &fe,
         &obs,
         &ov,
+        chaos,
         None::<std::io::BufReader<std::fs::File>>,
         None,
         &source,
@@ -672,6 +721,16 @@ fn cmd_replay(args: &Args) -> Result<(), String> {
                 .into(),
         );
     }
+    if ov.request_timeout.is_some() {
+        return Err(
+            "--request-timeout ages the multiplexed listener's pending responses \
+             against wall time; replay is one synchronous session"
+                .into(),
+        );
+    }
+    // seeded chaos IS supported on replay: a recorded trace plus a chaos
+    // seed is a reproducible supervision drill (CI runs exactly that)
+    let chaos = parse_chaos_opt(args, opts.is_some() || !cfg.cluster.types.is_empty())?;
     let fail_at = match args.opt_str("fail-at") {
         Some(s) => Some(parse_fail_at(&s)?),
         None => None,
@@ -689,12 +748,12 @@ fn cmd_replay(args: &Args) -> Result<(), String> {
         }
         let reader = std::io::Cursor::new(injected);
         return run_service_session(
-            &cfg, kind, dvfs, opts, &fe, &obs, &ov, Some(reader), None, &path,
+            &cfg, kind, dvfs, opts, &fe, &obs, &ov, chaos, Some(reader), None, &path,
         );
     }
     let file = std::fs::File::open(&path).map_err(|e| format!("opening {path}: {e}"))?;
     let reader = std::io::BufReader::new(file);
-    run_service_session(&cfg, kind, dvfs, opts, &fe, &obs, &ov, Some(reader), None, &path)
+    run_service_session(&cfg, kind, dvfs, opts, &fe, &obs, &ov, chaos, Some(reader), None, &path)
 }
 
 /// `repro recover <journal>`: rebuild a dead service from the request
@@ -721,6 +780,7 @@ fn cmd_recover(args: &Args) -> Result<(), String> {
     let fe = parse_front_end_opts(args)?;
     let obs = parse_obs_opts(args)?;
     let ov = parse_overload_opts(args, opts.is_some() || !cfg.cluster.types.is_empty())?;
+    let chaos = parse_chaos_opt(args, opts.is_some() || !cfg.cluster.types.is_empty())?;
     let fail_at = match args.opt_str("fail-at") {
         Some(s) => Some(parse_fail_at(&s)?),
         None => None,
@@ -729,6 +789,19 @@ fn cmd_recover(args: &Args) -> Result<(), String> {
     if fe.wall {
         return Err(
             "recover replays the journal on the virtual clock; --clock wall is not supported"
+                .into(),
+        );
+    }
+    if ov.request_timeout.is_some() {
+        return Err(
+            "--request-timeout requires the wall clock; recover replays on the virtual clock"
+                .into(),
+        );
+    }
+    if chaos.is_some() {
+        return Err(
+            "recover rebuilds bit-identical pre-crash state; --chaos would perturb the \
+             replayed prefix (run a chaos drill with `repro replay --chaos` instead)"
                 .into(),
         );
     }
@@ -762,6 +835,7 @@ fn cmd_recover(args: &Args) -> Result<(), String> {
         &fe,
         &obs,
         &ov,
+        None,
         None::<std::io::BufReader<std::fs::File>>,
         Some(prefix),
         &source,

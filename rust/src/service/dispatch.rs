@@ -68,16 +68,19 @@ use crate::service::journal::Journal;
 use crate::service::metrics::Snapshot;
 use crate::service::protocol::{num, obj, pong, s, Request, SubmitOpts, TypePref};
 use crate::service::session::{serve_session, ServiceCore};
-use crate::service::shard::{BatchReply, Placement, ServiceTask, ShardJob, ShardLoad, ShardPool};
+use crate::service::shard::{
+    BatchReply, ChaosFault, ChaosSpec, Placement, RestoreItem, ServiceTask, ShardJob, ShardLoad,
+    ShardPool,
+};
 use crate::service::VirtualClock;
 use crate::sim::online::OnlinePolicyKind;
 use crate::tasks::Task;
 use crate::util::json::Json;
-use crate::util::Hist;
+use crate::util::{Hist, Rng};
 use std::collections::{BTreeMap, BTreeSet, VecDeque};
 use std::io::{BufRead, Write};
 use std::sync::mpsc;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 /// Tasks per dispatched chunk when more than one shard is running (a
 /// single shard takes each batch whole, which preserves whole-batch
@@ -294,6 +297,19 @@ pub struct ShardedService {
     degraded: bool,
     /// Logical time the degraded hold expires (see [`DEGRADE_HOLD`]).
     degrade_until: f64,
+    /// Seeded chaos injection (`--chaos`): the spec plus the
+    /// dispatcher's private fault-point RNG (one draw per dispatched
+    /// chunk).  `None` — the default — keeps every dispatch
+    /// byte-identical to a chaos-free service (property-tested in
+    /// `tests/integration_chaos.rs`).
+    chaos: Option<(ChaosSpec, Rng)>,
+    /// Worker panics survived by a supervised restart (a `metrics`-body
+    /// counter; the frozen snapshot schema is untouched).
+    workers_restarted: u64,
+    /// Submit responses answered with a typed retryable error
+    /// (`shard-restarted` orphans of a panicked worker, `reply-dropped`
+    /// chunks) instead of a placement.
+    responses_errored: u64,
 }
 
 impl ShardedService {
@@ -414,6 +430,9 @@ impl ShardedService {
             recent_sheds: VecDeque::new(),
             degraded: false,
             degrade_until: 0.0,
+            chaos: None,
+            workers_restarted: 0,
+            responses_errored: 0,
         })
     }
 
@@ -425,6 +444,22 @@ impl ShardedService {
     /// service is then response-line-identical to one without this call.
     pub fn set_overload(&mut self, max_queue_depth: Option<usize>) {
         self.max_queue_depth = max_queue_depth;
+    }
+
+    /// Arm deterministic chaos injection (`--chaos seed[:...]`): every
+    /// chunk dispatched through the independent-submit path draws one
+    /// fault point from a seeded RNG, so runs with the same seed,
+    /// workload, and shard layout inject identical fault schedules —
+    /// worker panics (supervised restart), stalls, and dropped replies.
+    /// Migration re-placements and DAG waves are exempt: a lost member
+    /// there would silently corrupt an atomically-decided outcome.
+    /// `None` (the default) disables injection entirely; the service is
+    /// then response-line-identical to one without this call.
+    pub fn set_chaos(&mut self, spec: Option<ChaosSpec>) {
+        self.chaos = spec.map(|sp| {
+            let rng = Rng::new(sp.seed);
+            (sp, rng)
+        });
     }
 
     /// Attach the observability surface (`--journal` /
@@ -888,7 +923,7 @@ impl ShardedService {
             // submission order: responses are indexed (so any order
             // works), but journal place lines must not inherit the
             // reply races' arrival order
-            let mut placed = self.dispatch(t, &admitted);
+            let (mut placed, errored) = self.dispatch(t, &admitted);
             placed.sort_by_key(|&(orig_idx, _)| orig_idx);
             // submission index → admitted-vector position, for the
             // in-flight bookkeeping below (placed ⊆ admitted)
@@ -961,6 +996,27 @@ impl ShardedService {
                     },
                 );
                 responses[orig_idx] = Some(obj(fields));
+            }
+            // chunks lost to an injected fault (a panicked worker's
+            // orphans, a dropped reply): every owed task answers with a
+            // typed retryable error instead of hanging its session FIFO.
+            // The reject is recorded so a later `query` answers honestly;
+            // the tasks stay counted under `admitted` (they passed the
+            // gate) and surface through the `responses_errored` gauge.
+            for (orig_idx, reason) in errored {
+                let (_, st, _) = &admitted[admitted_at[&orig_idx]];
+                let id = st.task.id;
+                self.records
+                    .remember(id, TaskRecord::rejected(t, st.task.deadline));
+                responses[orig_idx] = Some(obj(vec![
+                    ("ok", Json::Bool(true)),
+                    ("op", s("submit")),
+                    ("id", num(id as f64)),
+                    ("now", num(t)),
+                    ("admitted", Json::Bool(false)),
+                    ("reason", s(reason)),
+                    ("retry_after", num(1.0)),
+                ]));
             }
         }
         if self.journal.is_some() {
@@ -1329,7 +1385,13 @@ impl ShardedService {
                     // ties keep release/submission order)
                     entries
                         .sort_by(|a, b| a.1.task.deadline.partial_cmp(&b.1.task.deadline).unwrap());
-                    let mut placed = self.dispatch(r, &entries);
+                    // DAG waves are chaos-exempt (injection targets the
+                    // independent-submit path): losing one member to a
+                    // fault would silently corrupt a graph the admission
+                    // gate already accepted atomically
+                    let chaos = self.chaos.take();
+                    let (mut placed, _) = self.dispatch(r, &entries);
+                    self.chaos = chaos;
                     placed.sort_by_key(|&(i, _)| i);
                     let entry_at: BTreeMap<usize, usize> =
                         entries.iter().enumerate().map(|(j, e)| (e.0, j)).collect();
@@ -1516,11 +1578,18 @@ impl ShardedService {
     /// instead of the last flush's snapshot.  Each entry carries the
     /// `t_min` floor admission already computed, so the routing cost
     /// never re-solves it.
+    ///
+    /// Returns the placements plus the entries whose chunk was lost to
+    /// an injected fault, each tagged with the typed retryable reason
+    /// the caller must answer with (`shard-restarted` for a panicked
+    /// worker's orphans, `reply-dropped` for a NACKed chunk).  The
+    /// second list is always empty with chaos off — reply collection
+    /// then degrades to the pre-supervision blocking loop, byte-for-byte.
     fn dispatch(
         &mut self,
         t: f64,
         admitted: &[(usize, ServiceTask, f64)],
-    ) -> Vec<(usize, Placement)> {
+    ) -> (Vec<(usize, Placement)>, Vec<(usize, &'static str)>) {
         let n_shards = self.pool.n_shards();
         let chunk = if n_shards == 1 {
             admitted.len()
@@ -1540,6 +1609,7 @@ impl ShardedService {
         // deltas
         let mut chunk_meta: Vec<(usize, usize, f64, usize)> = Vec::new();
         let mut out = Vec::with_capacity(admitted.len());
+        let mut errored: Vec<(usize, &'static str)> = Vec::new();
         // stable partition of the EDF batch by resolved type
         let mut by_type: Vec<Vec<&(usize, ServiceTask, f64)>> =
             vec![Vec::new(); self.fleet.len()];
@@ -1561,7 +1631,7 @@ impl ShardedService {
                 // fold in any replies that already landed: their loads
                 // (and queue depths) supersede this flush's estimates
                 while let Ok(reply) = rx.try_recv() {
-                    self.apply_reply(&reply, &chunk_meta, &chunk_map, &mut out);
+                    self.apply_reply(&reply, &chunk_meta, &chunk_map, &mut out, &mut errored);
                 }
                 let tasks: Vec<ServiceTask> = group.iter().map(|e| e.1.clone()).collect();
                 // t_min hoisted from admission (entry .2) — this loop used
@@ -1600,34 +1670,175 @@ impl ShardedService {
                 let tag = chunk_map.len() as u64;
                 chunk_map.push(group.iter().map(|e| e.0).collect());
                 chunk_meta.push((shard, ti, cost, pairs));
+                // one fault point per chunk, drawn from the dispatcher's
+                // seeded stream: same seed + same chunk sequence → the
+                // same fault schedule, which is what makes chaos runs
+                // reproducible.  Chaos off never touches the RNG.
+                let fault = match self.chaos.as_mut() {
+                    Some((spec, rng)) => spec.draw(rng.f64()),
+                    None => ChaosFault::None,
+                };
                 self.pool.send(
                     shard,
                     ShardJob::Batch {
                         tag,
                         t,
                         tasks,
+                        fault,
                         reply: tx.clone(),
                     },
                 );
             }
         }
         drop(tx);
-        while out.len() < admitted.len() {
-            let reply = rx.recv().expect("shard worker alive");
-            self.apply_reply(&reply, &chunk_meta, &chunk_map, &mut out);
+        // supervised reply collection: an overdue reply triggers a sweep
+        // for dead workers instead of blocking forever on a channel a
+        // panicking worker may never feed again.  `Disconnected` is the
+        // panicked-worker race (its job — holding the last live Sender —
+        // drops during the unwind before the trampoline flags death), so
+        // it re-enters the same sweep rather than panicking the
+        // dispatcher.
+        while out.len() + errored.len() < admitted.len() {
+            match rx.recv_timeout(Duration::from_millis(25)) {
+                Ok(reply) => {
+                    self.apply_reply(&reply, &chunk_meta, &chunk_map, &mut out, &mut errored);
+                }
+                Err(_) => {
+                    self.supervise(t, &chunk_meta, &chunk_map, &mut errored);
+                }
+            }
         }
-        out
+        (out, errored)
+    }
+
+    /// A batch reply is overdue: sweep for a dead worker and, if one is
+    /// found, run the supervised restart — journal `worker_panic`,
+    /// restart the thread, queue a [`ShardJob::Restore`] rebuilt from
+    /// the in-flight table (FIFO, so it runs before anything re-homed
+    /// behind it), re-enqueue the dead worker's drained jobs with their
+    /// faults cleared (an injected fault fires once), answer the
+    /// orphaned chunk's tasks with `shard-restarted`, and journal
+    /// `worker_restart` once the rebuild acknowledges.  No dead worker
+    /// means the reply is merely slow (a stalled worker, or a panicking
+    /// one still mid-unwind): yield briefly and let the caller re-poll.
+    fn supervise(
+        &mut self,
+        t: f64,
+        chunk_meta: &[(usize, usize, f64, usize)],
+        chunk_map: &[Vec<usize>],
+        errored: &mut Vec<(usize, &'static str)>,
+    ) {
+        let Some(k) = self.pool.find_dead_worker() else {
+            std::thread::sleep(Duration::from_millis(1));
+            return;
+        };
+        // the holding slot was published before the fault point, so it
+        // already names the chunk the worker died with (if any)
+        let orphan = self.pool.holding(k);
+        if let Some(j) = self.journal.as_mut() {
+            j.record("worker_panic", t, vec![("shard", num(k as f64))]);
+        }
+        let drained = self.pool.restart_worker(k);
+        // rebuild the shard's cluster state from the supervisor's
+        // bookkeeping: every surviving in-flight segment homed on the
+        // shard's pair range, plus the pair failures it had already
+        // absorbed.  The solve caches re-warm lazily as work arrives.
+        let (lo, hi) = self.shard_pairs[k];
+        let items: Vec<RestoreItem> = self
+            .inflight_tasks
+            .iter()
+            .filter(|(_, f)| f.finish > t + 1e-9)
+            .filter(|(_, f)| f.pairs.first().is_some_and(|&p| p >= lo && p < hi))
+            .map(|(&id, f)| {
+                let rec = self.records.get(id);
+                RestoreItem {
+                    model: f.st.task.model,
+                    type_idx: f.st.type_idx,
+                    pairs: f.pairs.clone(),
+                    start: rec.map_or(t, |r| r.start),
+                    finish: f.finish,
+                    deadline: rec.map_or(f.st.task.deadline, |r| r.deadline),
+                }
+            })
+            .collect();
+        let failed_here: Vec<usize> = self.failed.range(lo..hi).copied().collect();
+        let (rtx, rrx) = mpsc::channel();
+        self.pool.send(
+            k,
+            ShardJob::Restore {
+                t,
+                items,
+                failed: failed_here,
+                obs: self.journal.is_some(),
+                reply: rtx,
+            },
+        );
+        // re-home the drained queue behind the Restore (FIFO): batches
+        // run on a rebuilt shard, and their faults reset — the injected
+        // fault already fired on the dead worker
+        for job in drained {
+            match job {
+                ShardJob::Batch {
+                    tag,
+                    t: bt,
+                    tasks,
+                    reply,
+                    ..
+                } => self.pool.send(
+                    k,
+                    ShardJob::Batch {
+                        tag,
+                        t: bt,
+                        tasks,
+                        fault: ChaosFault::None,
+                        reply,
+                    },
+                ),
+                other => self.pool.send(k, other),
+            }
+        }
+        // the orphaned chunk's tasks get a typed retryable error instead
+        // of hanging their sessions; its routing deltas release exactly
+        // as a reply would have released them
+        if let Some(tag) = orphan {
+            let (routed, ti, cost, pairs) = chunk_meta[tag as usize];
+            self.inflight[routed][ti] = (self.inflight[routed][ti] - cost).max(0.0);
+            self.inflight_pairs[routed][ti] =
+                self.inflight_pairs[routed][ti].saturating_sub(pairs);
+            let idxs = &chunk_map[tag as usize];
+            for &orig_idx in idxs {
+                errored.push((orig_idx, "shard-restarted"));
+            }
+            self.responses_errored += idxs.len() as u64;
+        }
+        // block on the rebuild ack: cheap (the Restore is first in the
+        // queue), and it lets the journal line carry the rebuilt count.
+        // The restored worker runs no injected fault, so the reply is
+        // guaranteed.
+        let (_, rebuilt) = rrx.recv().expect("restarted worker alive");
+        if let Some(j) = self.journal.as_mut() {
+            j.record(
+                "worker_restart",
+                t,
+                vec![("shard", num(k as f64)), ("rebuilt", num(rebuilt as f64))],
+            );
+        }
+        self.workers_restarted += 1;
     }
 
     /// Fold one chunk reply into the dispatcher's routing state and
     /// collect its placements: the executing shard's load and queue depth
     /// are refreshed, and the routed shard's in-flight deltas released.
+    /// A `dropped` NACK ([`ChaosFault::Drop`]) collects typed
+    /// `reply-dropped` errors instead — the chunk was never processed,
+    /// so there is no state to fold beyond the released deltas.
     fn apply_reply(
         &mut self,
         reply: &BatchReply,
         chunk_meta: &[(usize, usize, f64, usize)],
         chunk_map: &[Vec<usize>],
         out: &mut Vec<(usize, Placement)>,
+        errored: &mut Vec<(usize, &'static str)>,
     ) {
         // per-shard replies arrive in processing order, so the last one
         // seen per shard is its freshest load
@@ -1639,6 +1850,14 @@ impl ShardedService {
         let (routed, ti, cost, pairs) = chunk_meta[reply.tag as usize];
         self.inflight[routed][ti] = (self.inflight[routed][ti] - cost).max(0.0);
         self.inflight_pairs[routed][ti] = self.inflight_pairs[routed][ti].saturating_sub(pairs);
+        if reply.dropped {
+            let idxs = &chunk_map[reply.tag as usize];
+            for &orig_idx in idxs {
+                errored.push((orig_idx, "reply-dropped"));
+            }
+            self.responses_errored += idxs.len() as u64;
+            return;
+        }
         if self.journal.is_some() {
             // buffered, not journaled here: replies race across shards,
             // so the flush emits these in a deterministic order
@@ -1856,7 +2075,12 @@ impl ShardedService {
                 // EDF order above IS the placement order — a new
                 // placement, not a new admission
                 let entry = (0usize, v.st.clone(), v.t_min);
-                let placed = self.dispatch(t_f, std::slice::from_ref(&entry));
+                // migration re-placement is chaos-exempt: the single
+                // victim must land (`placed[0]` below) — with injection
+                // off the errored list is always empty
+                let chaos = self.chaos.take();
+                let (placed, _) = self.dispatch(t_f, std::slice::from_ref(&entry));
+                self.chaos = chaos;
                 let p = &placed[0].1;
                 if let Some(j) = self.journal.as_mut() {
                     let mut jf = vec![
@@ -2017,6 +2241,8 @@ impl ShardedService {
         merged.shed = self.admission.shed_overloaded;
         merged.shed_degraded = self.admission.shed_degraded;
         merged.steals = self.pool.steals();
+        merged.workers_restarted = self.workers_restarted;
+        merged.responses_errored = self.responses_errored;
         merged.now = merged.now.max(self.now);
         if drain {
             self.now = self.now.max(merged.now);
@@ -3028,5 +3254,88 @@ mod tests {
         assert_eq!(m.get("dags_admitted").unwrap().as_f64(), Some(0.0));
         assert_eq!(m.get("dags_rejected").unwrap().as_f64(), Some(2.0));
         assert_eq!(m.get("rejected_dag").unwrap().as_f64(), Some(3.0));
+    }
+
+    #[test]
+    fn chaos_panic_restarts_the_worker_and_errors_the_orphans() {
+        let mut service = svc(2, 0.0);
+        service.set_chaos(Some(ChaosSpec {
+            seed: 7,
+            panic: 1.0,
+            stall: 0.0,
+            drop: 0.0,
+        }));
+        // the chunk's worker panics before placing: the task answers
+        // with a typed retryable error instead of hanging the flush
+        let out = service.submit(mk_task(0, 0.0, 0.5, 10.0));
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].get("admitted"), Some(&Json::Bool(false)));
+        assert_eq!(
+            out[0].get("reason").unwrap().as_str(),
+            Some("shard-restarted")
+        );
+        assert_eq!(out[0].get("retry_after").unwrap().as_f64(), Some(1.0));
+        // a later query answers honestly
+        let (q, _) = service.handle(Request::Query { id: 0 });
+        assert_eq!(q[0].get("status").unwrap().as_str(), Some("rejected"));
+        // the restarted worker keeps serving once injection stops
+        service.set_chaos(None);
+        let out = service.submit(mk_task(1, 1.0, 0.5, 10.0));
+        assert_eq!(out[0].get("admitted"), Some(&Json::Bool(true)));
+        let m = service.metrics_json();
+        assert_eq!(m.get("workers_restarted").unwrap().as_f64(), Some(1.0));
+        assert_eq!(m.get("responses_errored").unwrap().as_f64(), Some(1.0));
+        let fin = service.shutdown();
+        assert_eq!(fin.last().unwrap().get("drained"), Some(&Json::Bool(true)));
+    }
+
+    #[test]
+    fn chaos_drop_nacks_with_a_retryable_error() {
+        let mut service = svc(2, 0.0);
+        service.set_chaos(Some(ChaosSpec {
+            seed: 11,
+            panic: 0.0,
+            stall: 0.0,
+            drop: 1.0,
+        }));
+        let out = service.submit(mk_task(0, 0.0, 0.5, 10.0));
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].get("admitted"), Some(&Json::Bool(false)));
+        assert_eq!(
+            out[0].get("reason").unwrap().as_str(),
+            Some("reply-dropped")
+        );
+        // a drop is a NACK, not a death: no restart happened, and the
+        // untouched worker places the next (chaos-off) submit
+        service.set_chaos(None);
+        let out = service.submit(mk_task(1, 1.0, 0.5, 10.0));
+        assert_eq!(out[0].get("admitted"), Some(&Json::Bool(true)));
+        let m = service.metrics_json();
+        assert_eq!(m.get("workers_restarted").unwrap().as_f64(), Some(0.0));
+        assert_eq!(m.get("responses_errored").unwrap().as_f64(), Some(1.0));
+        let fin = service.shutdown();
+        assert_eq!(fin.last().unwrap().get("drained"), Some(&Json::Bool(true)));
+    }
+
+    #[test]
+    fn zero_rate_chaos_is_response_identical() {
+        let run = |spec: Option<ChaosSpec>| -> Vec<Json> {
+            let mut service = svc(2, 1.0);
+            service.set_chaos(spec);
+            let mut out = Vec::new();
+            for i in 0..6 {
+                out.extend(service.submit(mk_task(i, 0.2 * i as f64, 0.5, 10.0)));
+            }
+            out.extend(service.shutdown());
+            out
+        };
+        let plain = run(None);
+        let zero = run(Some(ChaosSpec {
+            seed: 42,
+            panic: 0.0,
+            stall: 0.0,
+            drop: 0.0,
+        }));
+        assert_eq!(plain, zero, "zero-rate chaos never changes a response");
     }
 }

@@ -1,7 +1,9 @@
 //! Structured append-only JSONL event journal: one JSON object per line,
 //! recording every admission decision, placement, departure, power
-//! transition, steal, flush, request, session transition, and
-//! failure/migration/eviction the service observes — the durable
+//! transition, steal, flush, request, session transition,
+//! failure/migration/eviction, and supervision event (worker panics and
+//! restarts, mux request timeouts — see `docs/RELIABILITY.md`) the
+//! service observes — the durable
 //! substrate crash recovery (`repro recover`, [`crate::service::recover`])
 //! replays and the ROADMAP's RLS power-model-fitting item builds on, and
 //! the long-open `--log` request trace (request lines are journaled

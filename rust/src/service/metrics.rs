@@ -134,6 +134,14 @@ pub struct Snapshot {
     pub dags_rejected: u64,
     /// DAG members released after a dependency hold.  Metrics-only.
     pub released: u64,
+    /// Shard workers that died (panic) and were supervising-restarted.
+    /// Metrics-only, like `migrated` — chaos-off runs must stay
+    /// byte-identical on the frozen `snapshot` schema.
+    pub workers_restarted: u64,
+    /// Admitted submits answered with a typed retryable error
+    /// (`shard-restarted` orphans, `reply-dropped` NACKs) instead of a
+    /// placement.  Metrics-only, like `workers_restarted`.
+    pub responses_errored: u64,
 }
 
 impl Snapshot {
@@ -294,6 +302,8 @@ impl Snapshot {
             m.dags_admitted += p.dags_admitted;
             m.dags_rejected += p.dags_rejected;
             m.released += p.released;
+            m.workers_restarted += p.workers_restarted;
+            m.responses_errored += p.responses_errored;
         }
         m.shards = parts.len();
         m
@@ -407,6 +417,14 @@ impl Snapshot {
             Json::Num(self.dags_rejected as f64),
         );
         m.insert("released".to_string(), Json::Num(self.released as f64));
+        m.insert(
+            "workers_restarted".to_string(),
+            Json::Num(self.workers_restarted as f64),
+        );
+        m.insert(
+            "responses_errored".to_string(),
+            Json::Num(self.responses_errored as f64),
+        );
         Json::Obj(m)
     }
 }
@@ -551,6 +569,8 @@ mod tests {
             dags_admitted: 2,
             dags_rejected: 1,
             released: 5,
+            workers_restarted: 1,
+            responses_errored: 2,
             ..Snapshot::default()
         };
         let b = Snapshot {
@@ -562,6 +582,7 @@ mod tests {
             shed: 1,
             dags_admitted: 1,
             released: 2,
+            responses_errored: 3,
             ..Snapshot::default()
         };
         let m = Snapshot::merge(&[a, b]);
@@ -578,6 +599,8 @@ mod tests {
         assert_eq!(m.dags_admitted, 3);
         assert_eq!(m.dags_rejected, 1);
         assert_eq!(m.released, 7);
+        assert_eq!(m.workers_restarted, 1);
+        assert_eq!(m.responses_errored, 5);
         // the frozen snapshot schema must not grow the new keys...
         let frozen = m.to_json();
         assert!(frozen.get("cache_hits").is_none());
@@ -590,6 +613,8 @@ mod tests {
         assert!(frozen.get("dags_admitted").is_none());
         assert!(frozen.get("dags_rejected").is_none());
         assert!(frozen.get("released").is_none());
+        assert!(frozen.get("workers_restarted").is_none());
+        assert!(frozen.get("responses_errored").is_none());
         // ...while the metrics rendering is a strict superset of it
         let obs = m.to_json_obs();
         assert_eq!(obs.get("cache_hits").unwrap().as_f64(), Some(15.0));
@@ -602,6 +627,8 @@ mod tests {
         assert_eq!(obs.get("dags_admitted").unwrap().as_f64(), Some(3.0));
         assert_eq!(obs.get("dags_rejected").unwrap().as_f64(), Some(1.0));
         assert_eq!(obs.get("released").unwrap().as_f64(), Some(7.0));
+        assert_eq!(obs.get("workers_restarted").unwrap().as_f64(), Some(1.0));
+        assert_eq!(obs.get("responses_errored").unwrap().as_f64(), Some(5.0));
         let q = obs.get("queued_by_type").unwrap().as_arr().unwrap();
         assert_eq!(q.len(), 2);
         assert_eq!(q[1].as_f64(), Some(7.0));

@@ -38,7 +38,10 @@
 //!   loops, job queues, and batch work stealing.
 //! * [`dispatch`] — the sharded dispatcher ([`dispatch::ShardedService`],
 //!   `repro serve --shards N`): batched EDF admission, pluggable chunk
-//!   routing, merged snapshots.
+//!   routing, merged snapshots, worker supervision (a panicked shard
+//!   worker is restarted and its pool state rebuilt from the shared
+//!   record store; orphaned requests get typed retryable errors), and
+//!   deterministic seeded chaos injection (`--chaos`) for drills.
 //! * [`transport`] — where sessions come from: stdio, unix-socket, and
 //!   TCP listeners, each yielding framed line [`transport::Connection`]s.
 //! * [`clock`] — pluggable time: [`clock::VirtualClock`] replay semantics
@@ -73,6 +76,9 @@ pub use journal::Journal;
 pub use metrics::Snapshot;
 pub use protocol::{parse_request, parse_request_rid, Request, SubmitOpts, TypePref};
 pub use recover::{inject_failures, journal_requests};
-pub use session::{serve_mux, serve_mux_bounded, serve_session, ServiceCore};
-pub use shard::{Placement, ServiceTask, Shard, ShardLoad, ShardPool, TypeLoad};
+pub use session::{serve_mux, serve_mux_bounded, serve_mux_timeout, serve_session, ServiceCore};
+pub use shard::{
+    ChaosFault, ChaosSpec, Placement, RestoreItem, ServiceTask, Shard, ShardLoad, ShardPool,
+    TypeLoad,
+};
 pub use transport::{Connection, ListenAddr, Listener, StaticListener, StdioListener};

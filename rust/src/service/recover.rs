@@ -187,4 +187,72 @@ mod tests {
         // no faults → the trace passes through untouched
         assert_eq!(inject_failures(&lines, &[]), lines);
     }
+
+    #[test]
+    fn duplicate_fault_slots_all_fire_in_server_order() {
+        let lines: Vec<String> = vec![
+            r#"{"op":"submit","task":{"arrival":0}}"#.into(),
+            r#"{"op":"submit","task":{"arrival":5}}"#.into(),
+        ];
+        // the same slot listed twice — different servers — injects both,
+        // tie-broken by server index so repeated runs are byte-stable
+        let out = inject_failures(&lines, &[(3.0, 7), (3.0, 2)]);
+        assert_eq!(out.len(), 4);
+        assert_eq!(out[1], r#"{"op":"fail_server","server":2,"t":3}"#);
+        assert_eq!(out[2], r#"{"op":"fail_server","server":7,"t":3}"#);
+        // an exact duplicate (same slot, same server) is preserved too:
+        // the second failure of an already-dead server is a no-op request
+        // the service answers, not a line the injector may silently drop
+        let dup = inject_failures(&lines, &[(3.0, 7), (3.0, 7)]);
+        assert_eq!(dup[1], dup[2]);
+        assert_eq!(dup[1], r#"{"op":"fail_server","server":7,"t":3}"#);
+    }
+
+    #[test]
+    fn same_server_failed_twice_keeps_both_slots_in_order() {
+        let lines: Vec<String> = vec![
+            r#"{"op":"submit","task":{"arrival":0}}"#.into(),
+            r#"{"op":"submit","task":{"arrival":4}}"#.into(),
+            r#"{"op":"submit","task":{"arrival":8}}"#.into(),
+        ];
+        let out = inject_failures(&lines, &[(6.0, 1), (2.0, 1)]);
+        assert_eq!(out.len(), 5);
+        assert_eq!(out[1], r#"{"op":"fail_server","server":1,"t":2}"#);
+        assert_eq!(out[3], r#"{"op":"fail_server","server":1,"t":6}"#);
+    }
+
+    #[test]
+    fn slots_beyond_the_trace_end_append_even_with_no_submits() {
+        // a trace with no submit at all (so no arrival ever matches) still
+        // receives every fault, appended at the tail in slot order
+        let lines: Vec<String> = vec![r#"{"op":"ping"}"#.into()];
+        let out = inject_failures(&lines, &[(9.0, 0), (4.0, 3)]);
+        assert_eq!(out.len(), 3);
+        assert_eq!(out[0], lines[0]);
+        assert_eq!(out[1], r#"{"op":"fail_server","server":3,"t":4}"#);
+        assert_eq!(out[2], r#"{"op":"fail_server","server":0,"t":9}"#);
+        // and an empty trace degenerates to just the faults
+        let bare = inject_failures(&[], &[(1.0, 0)]);
+        assert_eq!(bare, vec![r#"{"op":"fail_server","server":0,"t":1}"#.to_string()]);
+    }
+
+    #[test]
+    fn torn_tail_on_a_fail_line_drops_only_the_torn_fault() {
+        // the crash lands mid-write of a journaled fail_server request:
+        // the torn tail is discarded, everything before it survives —
+        // including the earlier, fully-written fault
+        let journal = concat!(
+            "{\"ev\":\"request\",\"line\":\"{\\\"op\\\":\\\"submit\\\"}\",\"sid\":1,\"t\":0}\n",
+            "{\"ev\":\"request\",\"line\":\"{\\\"op\\\":\\\"fail_server\\\",\\\"server\\\":2,\\\"t\\\":1}\",\"sid\":1,\"t\":1}\n",
+            "{\"ev\":\"request\",\"line\":\"{\\\"op\\\":\\\"fail_ser"
+        );
+        let reqs = journal_requests(journal).unwrap();
+        assert_eq!(
+            reqs,
+            vec![
+                "{\"op\":\"submit\"}".to_string(),
+                "{\"op\":\"fail_server\",\"server\":2,\"t\":1}".to_string(),
+            ]
+        );
+    }
 }

@@ -327,6 +327,19 @@ struct SessionState {
     open: bool,
 }
 
+/// One owed response in the multiplexer's positional FIFO: the session
+/// that asked, the request's `rid`, the workload time the claim was
+/// queued, and whether `--request-timeout` already answered it with a
+/// typed error.  A timed-out claim stays queued as a tombstone —
+/// positional matching is what keeps responses ordered — and the real
+/// line, if it ever releases, is discarded instead of delivered twice.
+struct PendingClaim {
+    sid: u64,
+    rid: Option<Json>,
+    at: f64,
+    timed_out: bool,
+}
+
 /// Write one response line to a session; a failed write means the client
 /// is gone — drop the session and discard its future lines.
 fn send_direct(sessions: &mut BTreeMap<u64, SessionState>, sid: u64, line: &Json) {
@@ -346,21 +359,66 @@ fn send_direct(sessions: &mut BTreeMap<u64, SessionState>, sid: u64, line: &Json
 /// sessions that have disconnected).
 fn route(
     lines: Vec<Json>,
-    pending: &mut VecDeque<(u64, Option<Json>)>,
+    pending: &mut VecDeque<PendingClaim>,
     sessions: &mut BTreeMap<u64, SessionState>,
 ) {
     if lines.is_empty() {
         return;
     }
     for line in lines {
-        // sid 0 is never allocated: an over-release routes nowhere
-        let (sid, rid) = pending.pop_front().unwrap_or((0, None));
-        send_direct(sessions, sid, &attach_rid(line, rid));
+        match pending.pop_front() {
+            // a timed-out claim was already answered with a typed
+            // `timeout` error — delivering the late line too would break
+            // the one-response-per-request contract
+            Some(c) if c.timed_out => {}
+            Some(c) => send_direct(sessions, c.sid, &attach_rid(line, c.rid)),
+            // sid 0 is never allocated: an over-release routes nowhere
+            None => send_direct(sessions, 0, &line),
+        }
     }
     // a half-closed session exists only to receive its owed responses:
     // once none remain pending, drop it (writer fd and all) so repeated
     // mid-batch disconnects cannot grow the session map unboundedly
-    sessions.retain(|sid, s| s.open || pending.iter().any(|&(p, _)| p == *sid));
+    sessions.retain(|sid, s| s.open || pending.iter().any(|c| c.sid == *sid));
+}
+
+/// Answer every pending claim older than `bound` workload slots with a
+/// typed retryable `{"reason":"timeout"}` error (`--request-timeout`)
+/// and journal a `timeout` event per victim.  The claim is left in the
+/// FIFO as a tombstone (see [`PendingClaim`]) so positional response
+/// matching stays aligned when — if ever — the real line releases.
+fn age_pending<C: ServiceCore + ?Sized>(
+    core: &mut C,
+    now: f64,
+    bound: f64,
+    pending: &mut VecDeque<PendingClaim>,
+    sessions: &mut BTreeMap<u64, SessionState>,
+) {
+    let mut fired = false;
+    for i in 0..pending.len() {
+        if pending[i].timed_out || now - pending[i].at < bound {
+            continue;
+        }
+        pending[i].timed_out = true;
+        let sid = pending[i].sid;
+        let rid = pending[i].rid.clone();
+        let resp = obj(vec![
+            ("ok", Json::Bool(false)),
+            ("error", s("request timed out awaiting a response")),
+            ("reason", s("timeout")),
+            ("retry_after", num(1.0)),
+        ]);
+        send_direct(sessions, sid, &attach_rid(resp, rid));
+        if let Some(j) = core.journal_mut() {
+            j.record("timeout", now, vec![("sid", num(sid as f64))]);
+            fired = true;
+        }
+    }
+    if fired {
+        if let Some(j) = core.journal_mut() {
+            j.flush();
+        }
+    }
 }
 
 /// Serve concurrent JSONL sessions from `listener` until a `shutdown`
@@ -411,6 +469,28 @@ pub fn serve_mux_bounded<C>(
 where
     C: ServiceCore + ?Sized,
 {
+    serve_mux_timeout(core, clock, listener, hello, max_pending, None)
+}
+
+/// [`serve_mux_bounded`] with pending-response aging (`--request-timeout
+/// <slots>`): a pending (session, rid) claim older than the bound is
+/// answered with a typed retryable `{"reason":"timeout"}` error and
+/// journaled as a `timeout` event, so a response line lost to a fault
+/// can never hang its session's FIFO forever.  Aging runs on the wall
+/// clock's poll ticks — a virtual clock never ticks, so the bound only
+/// arms with `--clock wall` (the CLI enforces that pairing).  `None` is
+/// exactly [`serve_mux_bounded`].
+pub fn serve_mux_timeout<C>(
+    core: &mut C,
+    clock: &dyn Clock,
+    listener: Box<dyn Listener>,
+    hello: bool,
+    max_pending: Option<usize>,
+    request_timeout: Option<f64>,
+) -> Result<bool, String>
+where
+    C: ServiceCore + ?Sized,
+{
     let (tx, rx) = mpsc::channel::<Event>();
     let acceptor_tx = tx.clone();
     std::thread::spawn(move || {
@@ -435,7 +515,7 @@ where
     });
 
     let mut sessions: BTreeMap<u64, SessionState> = BTreeMap::new();
-    let mut pending: VecDeque<(u64, Option<Json>)> = VecDeque::new();
+    let mut pending: VecDeque<PendingClaim> = VecDeque::new();
     let mut next_sid: u64 = 1;
     let mut more_clients = true;
     let mut received: u64 = 0;
@@ -462,6 +542,9 @@ where
         match ev {
             None => {
                 if let Some(now) = clock.now() {
+                    if let Some(bound) = request_timeout {
+                        age_pending(core, now, bound, &mut pending, &mut sessions);
+                    }
                     let lines = core.tick(now);
                     route(lines, &mut pending, &mut sessions);
                 }
@@ -570,7 +653,13 @@ where
                     // whose byte streams already diverge from the classic
                     // daemon — the stdio identity oracle stays intact
                     let overlay = hello && matches!(req, Request::Snapshot | Request::Shutdown);
-                    pending.push_back((sid, rid));
+                    let at = clock.now().unwrap_or_else(|| core.logical_now());
+                    pending.push_back(PendingClaim {
+                        sid,
+                        rid,
+                        at,
+                        timed_out: false,
+                    });
                     let recv_t = Instant::now();
                     let (mut lines, stop) = core.serve_request(req);
                     core.note_latency(recv_t.elapsed().as_secs_f64() * 1e6);
@@ -599,7 +688,7 @@ where
                 // half-close when responses are still owed (they deliver
                 // at the next flush); drop outright when nothing is owed,
                 // so a long-running daemon's session map stays bounded
-                if pending.iter().any(|&(s, _)| s == sid) {
+                if pending.iter().any(|c| c.sid == sid) {
                     if let Some(sess) = sessions.get_mut(&sid) {
                         sess.open = false;
                     }
@@ -708,5 +797,65 @@ mod tests {
         assert_eq!(h.get("session").unwrap().as_f64(), Some(4.0));
         assert_eq!(h.get("clock").unwrap().as_str(), Some("wall"));
         assert_eq!(h.get("proto").unwrap().as_str(), Some(PROTO_VERSION));
+    }
+
+    #[derive(Clone, Default)]
+    struct SharedBuf(std::sync::Arc<std::sync::Mutex<Vec<u8>>>);
+
+    impl Write for SharedBuf {
+        fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
+            self.0.lock().unwrap().extend_from_slice(buf);
+            Ok(buf.len())
+        }
+        fn flush(&mut self) -> std::io::Result<()> {
+            Ok(())
+        }
+    }
+
+    #[test]
+    fn aged_claim_times_out_and_tombstones_the_late_line() {
+        let mut cfg = SimConfig::default();
+        cfg.cluster.total_pairs = 8;
+        let solver = Solver::native();
+        let mut svc = Service::new(&cfg, OnlinePolicyKind::Edl, true, &solver);
+        let buf = SharedBuf::default();
+        let text = |b: &SharedBuf| String::from_utf8(b.0.lock().unwrap().clone()).unwrap();
+        let mut sessions: BTreeMap<u64, SessionState> = BTreeMap::new();
+        sessions.insert(
+            1,
+            SessionState {
+                writer: Box::new(buf.clone()),
+                open: true,
+            },
+        );
+        let mut pending: VecDeque<PendingClaim> = VecDeque::new();
+        pending.push_back(PendingClaim {
+            sid: 1,
+            rid: Some(num(9.0)),
+            at: 0.0,
+            timed_out: false,
+        });
+        // too young at t=3 under a 5-slot bound: nothing fires
+        age_pending(&mut svc, 3.0, 5.0, &mut pending, &mut sessions);
+        assert!(text(&buf).is_empty());
+        // old enough at t=6: typed retryable error, rid echoed
+        age_pending(&mut svc, 6.0, 5.0, &mut pending, &mut sessions);
+        let resp = Json::parse(text(&buf).lines().next().unwrap()).unwrap();
+        assert_eq!(resp.get("ok"), Some(&Json::Bool(false)));
+        assert_eq!(resp.get("reason").unwrap().as_str(), Some("timeout"));
+        assert_eq!(resp.get("retry_after").unwrap().as_f64(), Some(1.0));
+        assert_eq!(resp.get("rid"), Some(&num(9.0)));
+        // a later sweep never answers the same claim twice
+        age_pending(&mut svc, 9.0, 5.0, &mut pending, &mut sessions);
+        assert_eq!(text(&buf).lines().count(), 1);
+        // the real line, releasing late, is discarded — one response per
+        // request — and the tombstone leaves the FIFO with it
+        route(
+            vec![obj(vec![("ok", Json::Bool(true))])],
+            &mut pending,
+            &mut sessions,
+        );
+        assert_eq!(text(&buf).lines().count(), 1);
+        assert!(pending.is_empty());
     }
 }

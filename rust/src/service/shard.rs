@@ -34,12 +34,18 @@ use crate::service::admission::AdmissionController;
 use crate::service::events::EventEngine;
 use crate::service::metrics::Snapshot;
 use crate::sim::online::OnlinePolicyKind;
-use crate::tasks::Task;
+use crate::tasks::{Task, TaskModel};
 use std::collections::VecDeque;
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::mpsc::Sender;
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
+
+/// Sentinel for "this worker is not processing any batch chunk" in the
+/// pool's [`PoolShared`] holding slots (chunk tags are dispatch-local
+/// counters and never reach this value).
+const HOLDING_NONE: u64 = u64::MAX;
 
 /// One admitted task as dispatched to a shard: the task, its resolved
 /// GPU type (a *global* type index — `"any"` preferences are resolved by
@@ -64,6 +70,124 @@ impl ServiceTask {
             g: 1,
         }
     }
+}
+
+/// Deterministic seeded chaos configuration (`--chaos
+/// seed[:panic=p,stall=s,drop=d]`): the dispatcher draws one uniform
+/// variate per dispatched chunk from a private [`crate::util::Rng`]
+/// seeded with `seed`, and [`ChaosSpec::draw`] partitions `[0, 1)` into
+/// panic / stall / drop / none bands.  Same seed, same workload, same
+/// faults — every chaos run is reproducible, which is what lets the
+/// integration battery assert byte-determinism across two runs.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ChaosSpec {
+    /// RNG seed for the dispatcher's fault-point stream.
+    pub seed: u64,
+    /// Probability a chunk's worker panics before placing it.
+    pub panic: f64,
+    /// Probability a chunk's worker stalls (bounded sleep) first.
+    pub stall: f64,
+    /// Probability a chunk's reply is dropped (never processed; the
+    /// dispatcher answers its tasks with a typed retryable error).
+    pub drop: f64,
+}
+
+impl ChaosSpec {
+    /// Rate each fault class defaults to when the spec names only a seed.
+    pub const DEFAULT_RATE: f64 = 0.05;
+
+    /// Parse `seed[:panic=p,stall=s,drop=d]` (rates in `[0, 1]`, any
+    /// subset; omitted rates default to [`ChaosSpec::DEFAULT_RATE`]).
+    ///
+    /// # Examples
+    ///
+    /// ```
+    /// use dvfs_sched::service::ChaosSpec;
+    ///
+    /// let c = ChaosSpec::parse("42:panic=0.1,drop=0").unwrap();
+    /// assert_eq!((c.seed, c.panic, c.drop), (42, 0.1, 0.0));
+    /// assert_eq!(c.stall, ChaosSpec::DEFAULT_RATE);
+    /// assert!(ChaosSpec::parse("7:panic=2").is_err());
+    /// ```
+    pub fn parse(spec: &str) -> Result<ChaosSpec, String> {
+        let (seed_s, rates_s) = match spec.split_once(':') {
+            Some((a, b)) => (a, Some(b)),
+            None => (spec, None),
+        };
+        let seed: u64 = seed_s
+            .parse()
+            .map_err(|_| format!("--chaos wants seed[:panic=p,stall=s,drop=d], got '{spec}'"))?;
+        let mut out = ChaosSpec {
+            seed,
+            panic: ChaosSpec::DEFAULT_RATE,
+            stall: ChaosSpec::DEFAULT_RATE,
+            drop: ChaosSpec::DEFAULT_RATE,
+        };
+        if let Some(rates) = rates_s {
+            for part in rates.split(',') {
+                let (key, val) = part
+                    .split_once('=')
+                    .ok_or_else(|| format!("--chaos rate wants key=value, got '{part}'"))?;
+                let v: f64 = val
+                    .parse()
+                    .map_err(|_| format!("--chaos rate '{key}' wants a number, got '{val}'"))?;
+                if !(0.0..=1.0).contains(&v) {
+                    return Err(format!("--chaos rate '{key}' must be in [0, 1], got {v}"));
+                }
+                match key {
+                    "panic" => out.panic = v,
+                    "stall" => out.stall = v,
+                    "drop" => out.drop = v,
+                    other => {
+                        return Err(format!("unknown --chaos rate '{other}' (panic|stall|drop)"))
+                    }
+                }
+            }
+        }
+        if out.panic + out.stall + out.drop > 1.0 + 1e-12 {
+            return Err(format!(
+                "--chaos rates sum to {} (> 1)",
+                out.panic + out.stall + out.drop
+            ));
+        }
+        Ok(out)
+    }
+
+    /// Map one uniform variate `x ∈ [0, 1)` onto a fault class: the
+    /// bands are `[0, panic)`, `[panic, panic+stall)`,
+    /// `[panic+stall, panic+stall+drop)`, and none above.
+    pub fn draw(&self, x: f64) -> ChaosFault {
+        if x < self.panic {
+            ChaosFault::Panic
+        } else if x < self.panic + self.stall {
+            ChaosFault::Stall
+        } else if x < self.panic + self.stall + self.drop {
+            ChaosFault::Drop
+        } else {
+            ChaosFault::None
+        }
+    }
+}
+
+/// A fault the dispatcher injected into one [`ShardJob::Batch`].  A
+/// fault fires exactly once: chunks re-homed after a worker restart are
+/// re-enqueued with their fault reset to [`ChaosFault::None`].
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum ChaosFault {
+    /// No injected fault (the only value chaos-off runs ever see).
+    #[default]
+    None,
+    /// The worker panics *before* touching shard state — the supervised
+    /// restart path (no placements happen, so rebuilding loses nothing
+    /// from this chunk beyond its owed responses).
+    Panic,
+    /// The worker sleeps ~40 ms, then processes the chunk normally —
+    /// pure latency, no state divergence.
+    Stall,
+    /// The worker skips the chunk and NACKs its reply
+    /// ([`BatchReply::dropped`]); the dispatcher answers the chunk's
+    /// tasks with a typed `reply-dropped` retryable error.
+    Drop,
 }
 
 /// One placed task, reported back by a shard in global pair numbering.
@@ -182,6 +306,10 @@ pub struct BatchReply {
     /// placing the chunk, in global numbering.  Empty unless the
     /// dispatcher enabled observation ([`ShardJob::EnableObs`]).
     pub events: Vec<ClusterEvent>,
+    /// The chunk was NOT processed: a [`ChaosFault::Drop`] made the
+    /// worker skip it (placements empty).  The dispatcher answers the
+    /// chunk's tasks with a typed retryable error instead of placements.
+    pub dropped: bool,
 }
 
 /// A job queued for a shard worker.
@@ -197,6 +325,8 @@ pub enum ShardJob {
         t: f64,
         /// The chunk, sorted by deadline (EDF).
         tasks: Vec<ServiceTask>,
+        /// Injected chaos fault, [`ChaosFault::None`] outside chaos mode.
+        fault: ChaosFault,
         /// Where to send the [`BatchReply`].
         reply: Sender<BatchReply>,
     },
@@ -230,8 +360,47 @@ pub enum ShardJob {
     /// (`--journal`).  A control job — never stolen — queued by the
     /// dispatcher before any batch, so every placement is observed.
     EnableObs,
+    /// Rebuild a restarted worker's shard state from the supervisor's
+    /// in-flight table: re-assign every surviving segment, re-apply past
+    /// pair failures, and advance the event clock to `t`.  Queued FIRST
+    /// after a restart (the queue is FIFO), so re-homed batches always
+    /// land on a rebuilt shard.  A control job — never stolen.
+    Restore {
+        /// The dispatcher's logical clock (rebuild "as of now").
+        t: f64,
+        /// Surviving in-flight segments owed to this shard's partition.
+        items: Vec<RestoreItem>,
+        /// Global pair indices that had already failed before the
+        /// restart (re-applied so the fresh shard does not resurrect
+        /// dead capacity).
+        failed: Vec<usize>,
+        /// Re-enable cluster-event observation (`--journal` was on).
+        obs: bool,
+        /// Where to send `(shard, segments rebuilt)`.
+        reply: Sender<(usize, usize)>,
+    },
     /// Exit the worker loop (sent once per shard on pool shutdown).
     Stop,
+}
+
+/// One in-flight segment to rebuild on a restarted shard worker: enough
+/// of the dispatcher's bookkeeping ([`crate::service::daemon::TaskRecord`]
+/// + its in-flight table) to re-assign the task's remaining run on the
+/// same pairs with the same finish time.
+#[derive(Clone, Debug)]
+pub struct RestoreItem {
+    /// The task's reference-GPU model (the pool re-projects it).
+    pub model: TaskModel,
+    /// Global GPU-type index the task runs on.
+    pub type_idx: usize,
+    /// All reserved global pair indices (length = gang width).
+    pub pairs: Vec<usize>,
+    /// Original execution start time.
+    pub start: f64,
+    /// Completion time μ (preserved exactly by the rebuild).
+    pub finish: f64,
+    /// The task's absolute deadline.
+    pub deadline: f64,
 }
 
 /// One GPU-type pool inside a shard: a homogeneous sub-cluster with its
@@ -643,25 +812,161 @@ impl Shard {
         }
         self.snapshot(self.now())
     }
+
+    /// Rebuild this (freshly constructed) shard from the supervisor's
+    /// in-flight table after a worker restart: re-apply past pair
+    /// failures, then re-assign every surviving segment on its original
+    /// pairs — same finish time μ, so downstream departures and deadline
+    /// accounting are preserved — with the runtime power re-derived from
+    /// the pool's solve cache (re-warming it lazily; an infeasible window
+    /// falls back to the model's full-speed power).  Segments already
+    /// finished by `t`, or landing on failed/foreign pairs, are skipped.
+    /// Returns the number of segments rebuilt.
+    ///
+    /// History that lived only in the dead worker (its completed-run
+    /// energy, violations, turn-on counts) is gone — the rebuilt books
+    /// stay internally consistent, not identical to an unfaulted run.
+    pub fn restore(&mut self, t: f64, items: &[RestoreItem], failed: &[usize]) -> usize {
+        if !failed.is_empty() {
+            self.fail_pairs(t, failed);
+        }
+        let mut rebuilt = 0usize;
+        for item in items {
+            let Some(pi) = self.pools.iter().position(|p| p.type_idx == item.type_idx) else {
+                continue;
+            };
+            let pool = &mut self.pools[pi];
+            let remaining = item.finish - t;
+            if remaining <= 1e-12 || item.pairs.is_empty() {
+                continue;
+            }
+            let lo = pool.pair_offset;
+            let hi = lo + pool.cluster.pairs.len();
+            let locals: Vec<usize> = item
+                .pairs
+                .iter()
+                .filter(|&&gp| gp >= lo && gp < hi)
+                .map(|&gp| gp - lo)
+                .collect();
+            if locals.len() != item.pairs.len()
+                || locals.iter().any(|&i| pool.cluster.pair_failed(i))
+            {
+                continue;
+            }
+            let model = if pool.identity {
+                item.model
+            } else {
+                pool.params.project(&item.model)
+            };
+            // the power the original placement ran at: the exact solve
+            // for its window (cache re-warmed here), full speed if the
+            // window was infeasible (a forced placement)
+            let window = (item.finish - item.start).max(1e-12);
+            let setting = pool.cache.borrow_mut().solve_exact(&model, window);
+            let p = if setting.feasible { setting.p } else { model.p_star() };
+            for &i in &locals {
+                let s = pool.cluster.pairs[i].server;
+                if !pool.cluster.server_on[s] {
+                    pool.cluster.turn_on_server(s, t);
+                }
+                pool.cluster.assign(i, t, remaining, p, item.deadline);
+            }
+            rebuilt += 1;
+        }
+        // the fresh engine starts at 0; the shard must resume on the
+        // dispatcher's clock so the next batch's `t` is never "behind"
+        for pool in &mut self.pools {
+            pool.engine.now = pool.engine.now.max(t);
+        }
+        rebuilt
+    }
 }
 
 struct PoolShared {
     /// Per-shard FIFO job queues; one mutex guards all of them (jobs are
     /// coarse — whole chunks — so contention is a non-issue and the single
-    /// lock makes stealing race-free).
+    /// lock makes stealing race-free).  Lock acquisitions recover from
+    /// poison (`unwrap_or_else(into_inner)`): a worker that panics while
+    /// holding the lock must not take its siblings down with it — the
+    /// queue state is coarse enough (whole enqueued jobs) to stay
+    /// consistent across any panic point.
     queues: Mutex<Vec<VecDeque<ShardJob>>>,
     cv: Condvar,
     steals: AtomicU64,
+    /// Per-worker liveness: cleared by the worker's panic trampoline
+    /// ([`spawn_worker`]) as it dies, read by the supervisor
+    /// ([`ShardPool::find_dead_worker`]), reset on restart.
+    alive: Vec<AtomicBool>,
+    /// Per-worker heartbeat, incremented once per job-loop iteration —
+    /// a stalled worker is one whose beat count stops advancing while
+    /// work is owed ([`ShardPool::worker_beats`]).
+    beats: Vec<AtomicU64>,
+    /// The batch-chunk tag each worker is currently processing
+    /// ([`HOLDING_NONE`] when between chunks).  On a worker death this
+    /// names the exact orphaned chunk — regardless of which queue the
+    /// chunk was routed to or stolen from — so the supervisor can answer
+    /// its tasks instead of hanging their sessions.
+    holding: Vec<AtomicU64>,
+}
+
+/// Recover a poisoned pool lock: see [`PoolShared::queues`].
+fn lock_queues(shared: &PoolShared) -> std::sync::MutexGuard<'_, Vec<VecDeque<ShardJob>>> {
+    shared.queues.lock().unwrap_or_else(|e| e.into_inner())
 }
 
 /// A fixed set of shard worker threads with per-shard job queues and
 /// batch work stealing.
 ///
+/// Each worker runs under `catch_unwind` with a liveness flag and a
+/// heartbeat; the dispatcher's supervisor polls
+/// [`ShardPool::find_dead_worker`] and rebuilds a dead shard via
+/// [`ShardPool::restart_worker`] + [`ShardJob::Restore`].
+///
 /// Dropping the pool sends every worker a [`ShardJob::Stop`] (after any
 /// queued work) and joins the threads.
 pub struct ShardPool {
     shared: Arc<PoolShared>,
-    workers: Vec<JoinHandle<()>>,
+    /// `None` only transiently inside [`ShardPool::restart_worker`].
+    workers: Vec<Option<JoinHandle<()>>>,
+    /// Partition views, retained so a dead worker's shard can be
+    /// rebuilt from scratch on restart.
+    views: Vec<ShardView>,
+    kind: OnlinePolicyKind,
+    dvfs: bool,
+    iv: ScalingInterval,
+    theta: f64,
+    /// Effective steal flag (input flag, already masked by `n > 1`).
+    steal: bool,
+    cache: bool,
+}
+
+/// Spawn one shard worker under a panic trampoline: a panicking
+/// `worker_loop` (chaos-injected or genuine) is caught, the worker's
+/// liveness flag cleared, and every sibling + the dispatcher woken —
+/// instead of silently unwinding with the shard's queue abandoned.
+#[allow(clippy::too_many_arguments)]
+fn spawn_worker(
+    shared: &Arc<PoolShared>,
+    view: ShardView,
+    kind: OnlinePolicyKind,
+    dvfs: bool,
+    iv: ScalingInterval,
+    theta: f64,
+    steal: bool,
+    cache: bool,
+) -> JoinHandle<()> {
+    let me = view.index;
+    let shared = Arc::clone(shared);
+    std::thread::spawn(move || {
+        let dead = catch_unwind(AssertUnwindSafe(|| {
+            worker_loop(view, kind, dvfs, iv, theta, steal, cache, &shared);
+        }))
+        .is_err();
+        if dead {
+            shared.alive[me].store(false, Ordering::SeqCst);
+            shared.cv.notify_all();
+        }
+    })
 }
 
 impl ShardPool {
@@ -682,16 +987,37 @@ impl ShardPool {
             queues: Mutex::new((0..n).map(|_| VecDeque::new()).collect()),
             cv: Condvar::new(),
             steals: AtomicU64::new(0),
+            alive: (0..n).map(|_| AtomicBool::new(true)).collect(),
+            beats: (0..n).map(|_| AtomicU64::new(0)).collect(),
+            holding: (0..n).map(|_| AtomicU64::new(HOLDING_NONE)).collect(),
         });
         let steal = steal && n > 1;
-        let mut workers = Vec::with_capacity(n);
-        for view in views {
-            let shared = Arc::clone(&shared);
-            workers.push(std::thread::spawn(move || {
-                worker_loop(view, kind, dvfs, iv, theta, steal, cache, &shared);
-            }));
+        let workers = views
+            .iter()
+            .map(|view| {
+                Some(spawn_worker(
+                    &shared,
+                    view.clone(),
+                    kind,
+                    dvfs,
+                    iv,
+                    theta,
+                    steal,
+                    cache,
+                ))
+            })
+            .collect();
+        ShardPool {
+            shared,
+            workers,
+            views,
+            kind,
+            dvfs,
+            iv,
+            theta,
+            steal,
+            cache,
         }
-        ShardPool { shared, workers }
     }
 
     /// Number of shards.
@@ -701,7 +1027,7 @@ impl ShardPool {
 
     /// Enqueue `job` for shard `shard` and wake the workers.
     pub fn send(&self, shard: usize, job: ShardJob) {
-        let mut qs = self.shared.queues.lock().unwrap();
+        let mut qs = lock_queues(&self.shared);
         qs[shard].push_back(job);
         drop(qs);
         self.shared.cv.notify_all();
@@ -718,21 +1044,76 @@ impl ShardPool {
     /// since.  The dispatcher's overload gate (`--max-queue-depth`)
     /// compares its high-water mark against the deepest of these.
     pub fn queue_depths(&self) -> Vec<usize> {
-        let qs = self.shared.queues.lock().unwrap();
+        let qs = lock_queues(&self.shared);
         qs.iter().map(|q| q.len()).collect()
+    }
+
+    /// The lowest-numbered dead worker, if any (its panic trampoline
+    /// cleared the liveness flag).  The supervisor polls this whenever a
+    /// batch reply is overdue.
+    pub fn find_dead_worker(&self) -> Option<usize> {
+        (0..self.workers.len()).find(|&k| !self.shared.alive[k].load(Ordering::SeqCst))
+    }
+
+    /// Worker `k`'s heartbeat count (bumped once per job-loop
+    /// iteration).  A count that stops advancing while replies are owed
+    /// means the worker is stalled, not merely idle.
+    pub fn worker_beats(&self, k: usize) -> u64 {
+        self.shared.beats[k].load(Ordering::SeqCst)
+    }
+
+    /// The batch-chunk tag worker `k` was processing when it died
+    /// (`None` if it was between chunks) — the exact orphan whose tasks
+    /// the supervisor must answer, however the chunk got to that worker
+    /// (routed or stolen).
+    pub fn holding(&self, k: usize) -> Option<u64> {
+        match self.shared.holding[k].load(Ordering::SeqCst) {
+            HOLDING_NONE => None,
+            tag => Some(tag),
+        }
+    }
+
+    /// Restart dead worker `k`: join the unwound thread, drain its
+    /// queued jobs (returned to the caller for re-homing), reset its
+    /// liveness/holding slots, and spawn a fresh worker on a fresh
+    /// [`Shard`].  The caller is expected to send [`ShardJob::Restore`]
+    /// before re-enqueueing anything else.
+    pub fn restart_worker(&mut self, k: usize) -> Vec<ShardJob> {
+        if let Some(handle) = self.workers[k].take() {
+            // the unwound thread is (nearly) done; join returns its
+            // panic payload as Err, which is exactly what we expect
+            let _ = handle.join();
+        }
+        let drained: Vec<ShardJob> = {
+            let mut qs = lock_queues(&self.shared);
+            qs[k].drain(..).collect()
+        };
+        self.shared.holding[k].store(HOLDING_NONE, Ordering::SeqCst);
+        self.shared.alive[k].store(true, Ordering::SeqCst);
+        self.workers[k] = Some(spawn_worker(
+            &self.shared,
+            self.views[k].clone(),
+            self.kind,
+            self.dvfs,
+            self.iv,
+            self.theta,
+            self.steal,
+            self.cache,
+        ));
+        drained
     }
 }
 
 impl Drop for ShardPool {
     fn drop(&mut self) {
         {
-            let mut qs = self.shared.queues.lock().unwrap();
+            let mut qs = lock_queues(&self.shared);
             for q in qs.iter_mut() {
                 q.push_back(ShardJob::Stop);
             }
         }
         self.shared.cv.notify_all();
-        for w in self.workers.drain(..) {
+        for w in self.workers.drain(..).flatten() {
             let _ = w.join();
         }
     }
@@ -779,7 +1160,7 @@ fn next_job(
     headroom: &[usize],
     alive: &[bool],
 ) -> ShardJob {
-    let mut qs = shared.queues.lock().unwrap();
+    let mut qs = lock_queues(shared);
     loop {
         if let Some(job) = qs[me].pop_front() {
             return job;
@@ -812,7 +1193,7 @@ fn next_job(
                 }
             }
         }
-        qs = shared.cv.wait(qs).unwrap();
+        qs = shared.cv.wait(qs).unwrap_or_else(|e| e.into_inner());
     }
 }
 
@@ -831,6 +1212,9 @@ fn worker_loop(
     let owned_types: Vec<usize> = view.types.iter().map(|&(ti, _)| ti).collect();
     let mut shard = Shard::new(view, kind, dvfs, iv, theta, cache);
     loop {
+        // heartbeat: one tick per job-loop iteration, so a supervisor can
+        // tell "stalled mid-job" from "parked waiting for work"
+        shared.beats[me].fetch_add(1, Ordering::SeqCst);
         // per-type single-server gang headroom, taken OUTSIDE the queue
         // lock: only this worker mutates `shard`, so the values stay
         // exact however long next_job blocks
@@ -849,27 +1233,75 @@ fn worker_loop(
                 tag,
                 t,
                 tasks,
+                fault,
                 reply,
             } => {
-                let placements = shard.place_batch(t, tasks);
-                let load = shard.load();
-                let events = shard.drain_obs();
-                // piggyback the live queue depth so the dispatcher's
-                // routing sees this worker's remaining in-flight work
-                let queued = shared.queues.lock().unwrap()[me].len();
+                // publish the chunk we're working on BEFORE any fault can
+                // fire: if this worker dies here, the supervisor reads the
+                // tag back and answers the chunk's owed responses
+                shared.holding[me].store(tag, Ordering::SeqCst);
+                match fault {
+                    ChaosFault::Panic => {
+                        // before place_batch: the shard state is untouched,
+                        // so the restart rebuild loses only this chunk
+                        panic!("chaos: injected worker panic (shard {me}, chunk {tag})");
+                    }
+                    ChaosFault::Stall => {
+                        // bounded stall, then process normally: pure
+                        // latency, no scheduling divergence
+                        std::thread::sleep(std::time::Duration::from_millis(40));
+                    }
+                    ChaosFault::Drop | ChaosFault::None => {}
+                }
+                let reply_body = if fault == ChaosFault::Drop {
+                    // NACK without touching shard state: the dispatcher
+                    // answers these tasks with a typed retryable error
+                    BatchReply {
+                        tag,
+                        shard: shard.id(),
+                        placements: Vec::new(),
+                        load: shard.load(),
+                        queued: lock_queues(shared)[me].len(),
+                        events: Vec::new(),
+                        dropped: true,
+                    }
+                } else {
+                    let placements = shard.place_batch(t, tasks);
+                    let load = shard.load();
+                    let events = shard.drain_obs();
+                    // piggyback the live queue depth so the dispatcher's
+                    // routing sees this worker's remaining in-flight work
+                    let queued = lock_queues(shared)[me].len();
+                    BatchReply {
+                        tag,
+                        shard: shard.id(),
+                        placements,
+                        load,
+                        queued,
+                        events,
+                        dropped: false,
+                    }
+                };
                 // a dropped receiver means the dispatcher gave up on the
                 // flush (it is propagating a panic); nothing to do here
-                let _ = reply.send(BatchReply {
-                    tag,
-                    shard: shard.id(),
-                    placements,
-                    load,
-                    queued,
-                    events,
-                });
+                let _ = reply.send(reply_body);
+                shared.holding[me].store(HOLDING_NONE, Ordering::SeqCst);
             }
             ShardJob::Snapshot { now, reply } => {
                 let _ = reply.send((shard.id(), shard.snapshot(now)));
+            }
+            ShardJob::Restore {
+                t,
+                items,
+                failed,
+                obs,
+                reply,
+            } => {
+                if obs {
+                    shard.enable_obs();
+                }
+                let rebuilt = shard.restore(t, &items, &failed);
+                let _ = reply.send((shard.id(), rebuilt));
             }
             ShardJob::Fail { t, pairs, reply } => {
                 let newly = shard.fail_pairs(t, &pairs);
@@ -1041,6 +1473,7 @@ mod tests {
                 tag: 0,
                 t: 0.0,
                 tasks: vec![ServiceTask::plain(mk_task(0, 0.0, 0.5, 10.0))],
+                fault: ChaosFault::None,
                 reply: tx.clone(),
             },
         );
@@ -1050,6 +1483,7 @@ mod tests {
                 tag: 1,
                 t: 0.0,
                 tasks: vec![ServiceTask::plain(mk_task(1, 0.0, 0.5, 10.0))],
+                fault: ChaosFault::None,
                 reply: tx,
             },
         );
@@ -1196,6 +1630,7 @@ mod tests {
                 tag: 999,
                 t: 0.0,
                 tasks: long,
+                fault: ChaosFault::None,
                 reply: tx.clone(),
             },
         );
@@ -1212,6 +1647,7 @@ mod tests {
                     tag: i as u64,
                     t: 0.0,
                     tasks: vec![st],
+                    fault: ChaosFault::None,
                     reply: tx.clone(),
                 },
             );
@@ -1257,6 +1693,7 @@ mod tests {
                         tag: i as u64,
                         t: round as f64,
                         tasks: vec![ServiceTask::plain(mk_task(i, round as f64, 0.2, 30.0))],
+                        fault: ChaosFault::None,
                         reply: tx.clone(),
                     },
                 );
@@ -1278,5 +1715,196 @@ mod tests {
             pool.steals()
         );
         assert_eq!(pool.steals() as usize, stolen_total);
+    }
+
+    #[test]
+    fn chaos_spec_parses_seed_and_rates() {
+        let bare = ChaosSpec::parse("7").unwrap();
+        assert_eq!(bare.seed, 7);
+        assert_eq!(bare.panic, ChaosSpec::DEFAULT_RATE);
+        assert_eq!(bare.stall, ChaosSpec::DEFAULT_RATE);
+        assert_eq!(bare.drop, ChaosSpec::DEFAULT_RATE);
+        let full = ChaosSpec::parse("42:panic=0.25,stall=0,drop=0.5").unwrap();
+        assert_eq!(full.seed, 42);
+        assert_eq!((full.panic, full.stall, full.drop), (0.25, 0.0, 0.5));
+        // malformed specs are rejected with a typed error
+        assert!(ChaosSpec::parse("").is_err());
+        assert!(ChaosSpec::parse("x:panic=0.1").is_err());
+        assert!(ChaosSpec::parse("1:panic").is_err());
+        assert!(ChaosSpec::parse("1:panic=1.5").is_err());
+        assert!(ChaosSpec::parse("1:boom=0.1").is_err());
+        assert!(ChaosSpec::parse("1:panic=0.5,stall=0.4,drop=0.4").is_err(), "rates sum > 1");
+    }
+
+    #[test]
+    fn chaos_draw_partitions_the_unit_interval() {
+        let c = ChaosSpec::parse("1:panic=0.2,stall=0.3,drop=0.1").unwrap();
+        assert_eq!(c.draw(0.0), ChaosFault::Panic);
+        assert_eq!(c.draw(0.19), ChaosFault::Panic);
+        assert_eq!(c.draw(0.2), ChaosFault::Stall);
+        assert_eq!(c.draw(0.49), ChaosFault::Stall);
+        assert_eq!(c.draw(0.5), ChaosFault::Drop);
+        assert_eq!(c.draw(0.59), ChaosFault::Drop);
+        assert_eq!(c.draw(0.6), ChaosFault::None);
+        assert_eq!(c.draw(0.999), ChaosFault::None);
+        // all-zero rates never fault, whatever the draw
+        let off = ChaosSpec::parse("1:panic=0,stall=0,drop=0").unwrap();
+        assert_eq!(off.draw(0.0), ChaosFault::None);
+    }
+
+    #[test]
+    fn panicked_worker_is_detected_restarted_and_keeps_serving() {
+        let mut pool = ShardPool::new(
+            views(16, 2, 2),
+            OnlinePolicyKind::Edl,
+            true,
+            ScalingInterval::wide(),
+            1.0,
+            false,
+            true,
+        );
+        let (tx, rx) = mpsc::channel();
+        pool.send(
+            0,
+            ShardJob::Batch {
+                tag: 5,
+                t: 0.0,
+                tasks: vec![ServiceTask::plain(mk_task(0, 0.0, 0.5, 10.0))],
+                fault: ChaosFault::Panic,
+                reply: tx.clone(),
+            },
+        );
+        // the panic trampoline clears the liveness flag; poll for it
+        let mut dead = None;
+        for _ in 0..500 {
+            dead = pool.find_dead_worker();
+            if dead.is_some() {
+                break;
+            }
+            std::thread::sleep(std::time::Duration::from_millis(2));
+        }
+        assert_eq!(dead, Some(0), "worker 0 must be reported dead");
+        assert_eq!(pool.holding(0), Some(5), "the orphaned chunk's tag survives the panic");
+        let drained = pool.restart_worker(0);
+        assert!(drained.is_empty(), "nothing else was queued");
+        assert!(pool.find_dead_worker().is_none(), "restart resets liveness");
+        assert_eq!(pool.holding(0), None);
+        // the restarted worker serves the same partition again
+        pool.send(
+            0,
+            ShardJob::Batch {
+                tag: 6,
+                t: 0.0,
+                tasks: vec![ServiceTask::plain(mk_task(1, 0.0, 0.5, 10.0))],
+                fault: ChaosFault::None,
+                reply: tx,
+            },
+        );
+        let reply = rx.recv().unwrap();
+        assert_eq!(reply.tag, 6);
+        assert_eq!(reply.shard, 0);
+        assert!(!reply.dropped);
+        assert!(reply.placements[0].pair < 8, "shard 0 owns global pairs 0..8");
+    }
+
+    #[test]
+    fn dropped_chunk_nacks_without_touching_state() {
+        let pool = ShardPool::new(
+            views(8, 2, 1),
+            OnlinePolicyKind::Edl,
+            true,
+            ScalingInterval::wide(),
+            1.0,
+            false,
+            true,
+        );
+        let (tx, rx) = mpsc::channel();
+        pool.send(
+            0,
+            ShardJob::Batch {
+                tag: 1,
+                t: 0.0,
+                tasks: vec![ServiceTask::plain(mk_task(0, 0.0, 0.5, 10.0))],
+                fault: ChaosFault::Drop,
+                reply: tx.clone(),
+            },
+        );
+        let nack = rx.recv().unwrap();
+        assert!(nack.dropped);
+        assert!(nack.placements.is_empty());
+        assert_eq!(nack.load.backlog, 0.0, "a dropped chunk places nothing");
+        let (stx, srx) = mpsc::channel();
+        pool.send(0, ShardJob::Drain { reply: stx });
+        let snap = srx.recv().unwrap().1;
+        assert_eq!(snap.pairs_used, 0);
+        assert_eq!(snap.e_run, 0.0);
+        drop(tx);
+    }
+
+    #[test]
+    fn restore_rebuilds_surviving_segments_with_the_same_finish() {
+        let vs = views(8, 2, 1);
+        // the original shard places a task; capture its placement
+        let mut original = Shard::new(
+            vs[0].clone(),
+            OnlinePolicyKind::Edl,
+            true,
+            ScalingInterval::wide(),
+            1.0,
+            true,
+        );
+        let task = mk_task(0, 0.0, 0.5, 10.0);
+        let model = task.model;
+        let deadline = task.deadline;
+        let placed = original.place_batch(0.0, vec![ServiceTask::plain(task)]);
+        let p0 = &placed[0];
+        assert!(p0.finish > 1.0, "long enough to survive to the restore point");
+        // a fresh shard (the restarted worker's state) rebuilds from the
+        // supervisor's view of that in-flight segment at t = 1
+        let mut rebuilt = Shard::new(
+            vs[0].clone(),
+            OnlinePolicyKind::Edl,
+            true,
+            ScalingInterval::wide(),
+            1.0,
+            true,
+        );
+        let item = RestoreItem {
+            model,
+            type_idx: 0,
+            pairs: p0.pairs.clone(),
+            start: p0.start,
+            finish: p0.finish,
+            deadline,
+        };
+        let n = rebuilt.restore(1.0, &[item.clone()], &[]);
+        assert_eq!(n, 1);
+        assert!(rebuilt.load().backlog > 0.0, "the segment is busy again");
+        let snap = rebuilt.drain();
+        assert_eq!(snap.violations, 0, "same finish, same deadline verdict");
+        assert_eq!(snap.pairs_used, 1);
+        assert_eq!(snap.servers_on, 0, "drain still powers the partition down");
+        assert!(snap.e_run > 0.0);
+        // a segment already finished by t is skipped...
+        let mut late = Shard::new(
+            vs[0].clone(),
+            OnlinePolicyKind::Edl,
+            true,
+            ScalingInterval::wide(),
+            1.0,
+            true,
+        );
+        assert_eq!(late.restore(p0.finish + 1.0, &[item.clone()], &[]), 0);
+        // ...and one on a failed pair is skipped too (failures re-applied
+        // before the rebuild)
+        let mut failed = Shard::new(
+            vs[0].clone(),
+            OnlinePolicyKind::Edl,
+            true,
+            ScalingInterval::wide(),
+            1.0,
+            true,
+        );
+        assert_eq!(failed.restore(1.0, &[item], &[p0.pair]), 0);
     }
 }

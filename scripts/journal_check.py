@@ -86,6 +86,15 @@ SCHEMAS = {
     # a held DAG member released for dispatch once its dependencies
     # cleared; `deps` counts the edges that were holding it
     "release": {"id": (int, float), "deps": (int, float)},
+    # supervision: a shard worker died mid-dispatch (panic caught by the
+    # worker trampoline) ...
+    "worker_panic": {"shard": (int, float)},
+    # ... and was restarted, its pool rebuilt from the shared record
+    # store; `rebuilt` counts the in-flight tasks re-placed
+    "worker_restart": {"shard": (int, float), "rebuilt": (int, float)},
+    # a mux pending response aged past --request-timeout and was answered
+    # with the typed retryable `timeout` error
+    "timeout": {"sid": (int, float)},
 }
 
 
